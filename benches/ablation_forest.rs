@@ -1,0 +1,134 @@
+//! Ablations over the design choices DESIGN.md calls out (+ the paper's
+//! §7 future-work directions):
+//!   - number of trees (paper fixes 20)
+//!   - mtry (paper fixes 4)
+//!   - training fraction (paper fixes 10%)
+//!   - alternative learner: k-NN regressor (the "other ML model" probe)
+//!   - measurement noise on/off (synthetic-label quality)
+
+use lmtuner::gpu::spec::DeviceSpec;
+use lmtuner::ml::forest::{Forest, ForestConfig};
+use lmtuner::ml::metrics;
+use lmtuner::sim::exec::{MeasureConfig, SpeedupRecord};
+use lmtuner::synth::{dataset, generator, sweep::LaunchSweep};
+use lmtuner::util::bench::black_box;
+use lmtuner::util::prng::Rng;
+
+fn build(noise: bool) -> Vec<SpeedupRecord> {
+    let dev = DeviceSpec::m2090();
+    let mut rng = Rng::new(0xAB1A7E);
+    let templates = generator::generate_n(&mut rng, 15);
+    let sweep = LaunchSweep::new(2048, 2048);
+    let cfg = dataset::BuildConfig {
+        configs_per_kernel: 16,
+        measure: if noise {
+            MeasureConfig::default()
+        } else {
+            MeasureConfig::deterministic()
+        },
+        ..Default::default()
+    };
+    dataset::build(&templates, &sweep, &dev, &cfg)
+}
+
+fn eval(records: &[SpeedupRecord], frac: f64, cfg: &ForestConfig) -> (f64, f64, f64) {
+    let (train, test) = dataset::split(records, frac, 7);
+    let t0 = std::time::Instant::now();
+    let f = Forest::fit_records(&train, cfg);
+    let dt = t0.elapsed().as_secs_f64();
+    let acc = metrics::evaluate_model(&test, |x| f.decide(x));
+    (acc.count_based, acc.penalty_weighted, dt)
+}
+
+/// k-NN regressor over normalized features: the simplest credible
+/// "other machine learning model" (paper §7).
+fn knn_eval(records: &[SpeedupRecord], frac: f64, k: usize) -> (f64, f64) {
+    let (train, test) = dataset::split(records, frac, 7);
+    let nf = train[0].features.len();
+    // z-normalize on train stats
+    let mut mean = vec![0.0; nf];
+    let mut var = vec![0.0; nf];
+    for r in &train {
+        for (i, &x) in r.features.iter().enumerate() {
+            mean[i] += x;
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= train.len() as f64;
+    }
+    for r in &train {
+        for (i, &x) in r.features.iter().enumerate() {
+            var[i] += (x - mean[i]) * (x - mean[i]);
+        }
+    }
+    for v in var.iter_mut() {
+        *v = (*v / train.len() as f64).sqrt().max(1e-9);
+    }
+    let norm = |f: &[f64]| -> Vec<f64> {
+        f.iter().enumerate().map(|(i, &x)| (x - mean[i]) / var[i]).collect()
+    };
+    let train_n: Vec<(Vec<f64>, f64)> =
+        train.iter().map(|r| (norm(&r.features), r.target())).collect();
+    // subsample test for tractability on 1 core
+    let test: Vec<_> = test.iter().step_by(10).cloned().collect();
+    let decisions: Vec<bool> = test
+        .iter()
+        .map(|r| {
+            let q = norm(&r.features);
+            let mut d: Vec<(f64, f64)> = train_n
+                .iter()
+                .map(|(x, y)| {
+                    let dist: f64 =
+                        x.iter().zip(&q).map(|(a, b)| (a - b) * (a - b)).sum();
+                    (dist, *y)
+                })
+                .collect();
+            d.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+            let pred: f64 = d[..k].iter().map(|(_, y)| y).sum::<f64>() / k as f64;
+            pred > 0.0
+        })
+        .collect();
+    let acc = metrics::evaluate(&test, &decisions);
+    (acc.count_based, acc.penalty_weighted)
+}
+
+fn main() {
+    println!("building ablation dataset ...");
+    let records = build(true);
+    println!("{} instances\n", records.len());
+
+    println!("--- trees (paper: 20) ---");
+    for trees in [1, 5, 10, 20, 40] {
+        let cfg = ForestConfig { num_trees: trees, ..Default::default() };
+        let (c, p, dt) = eval(&records, 0.1, &cfg);
+        println!("trees={trees:<3} count={:.3} penalty={:.3} fit={dt:.2}s", c, p);
+    }
+
+    println!("\n--- mtry (paper: 4) ---");
+    for mtry in [1, 2, 4, 8, 18] {
+        let mut cfg = ForestConfig::default();
+        cfg.tree.mtry = mtry;
+        let (c, p, dt) = eval(&records, 0.1, &cfg);
+        println!("mtry={mtry:<3} count={:.3} penalty={:.3} fit={dt:.2}s", c, p);
+    }
+
+    println!("\n--- training fraction (paper: 0.10) ---");
+    for frac in [0.01, 0.05, 0.10, 0.30] {
+        let (c, p, dt) = eval(&records, frac, &ForestConfig::default());
+        println!("frac={frac:<5} count={:.3} penalty={:.3} fit={dt:.2}s", c, p);
+    }
+
+    println!("\n--- alternative learner: k-NN (paper §7 future work) ---");
+    for k in [1, 5, 15] {
+        let (c, p) = knn_eval(&records, 0.1, k);
+        println!("knn k={k:<3} count={:.3} penalty={:.3}", c, p);
+    }
+
+    println!("\n--- measurement noise ---");
+    let clean = build(false);
+    let (c, p, _) = eval(&clean, 0.1, &ForestConfig::default());
+    println!("noise=off count={c:.3} penalty={p:.3}");
+    let (c, p, _) = eval(&records, 0.1, &ForestConfig::default());
+    println!("noise=2%  count={c:.3} penalty={p:.3}");
+    black_box(());
+}

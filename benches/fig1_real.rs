@@ -1,0 +1,31 @@
+//! Bench: regenerate Figures 1b-1i — the eight real-benchmark speedup
+//! histograms — timing the per-benchmark simulation sweeps.
+
+use lmtuner::gpu::spec::DeviceSpec;
+use lmtuner::report::hist;
+use lmtuner::sim::exec::{measure, MeasureConfig};
+use lmtuner::util::bench::{black_box, report_throughput, Bencher};
+use lmtuner::workloads;
+
+fn main() {
+    let dev = DeviceSpec::m2090();
+    let cfg = MeasureConfig::default();
+    let b = Bencher::default();
+    for (i, bench) in workloads::all().into_iter().enumerate() {
+        let instances = (bench.instances)(&dev);
+        let mut records = Vec::new();
+        let r = b.run(&format!("fig1{}: {}", (b'b' + i as u8) as char, bench.name), || {
+            records = instances.iter().map(|d| measure(d, &dev, &cfg)).collect();
+            black_box(records.len());
+        });
+        report_throughput(&r, records.len() as f64, "instances");
+        println!(
+            "{}",
+            hist::render(
+                &format!("Figure 1{}: {}", (b'b' + i as u8) as char, bench.name),
+                &records,
+                40
+            )
+        );
+    }
+}

@@ -1,0 +1,92 @@
+//! Perf bench (L3/L2/L1 hot path): forest inference throughput/latency.
+//!
+//! Compares:
+//!   native   — rust recursive-tree traversal (training-time path)
+//!   encoded  — rust flat-array traversal (the tensor encoding)
+//!   pjrt:bN  — the AOT Pallas/XLA executable at each batch variant
+//!
+//! This is the §Perf driver for EXPERIMENTS.md.
+
+use lmtuner::gpu::spec::DeviceSpec;
+use lmtuner::kernelmodel::features::{self, NUM_FEATURES};
+use lmtuner::ml::export;
+use lmtuner::ml::forest::{Forest, ForestConfig};
+use lmtuner::runtime::forest_exec::ForestExecutor;
+use lmtuner::runtime::pjrt::Engine;
+use lmtuner::util::bench::{black_box, report_throughput, Bencher};
+use lmtuner::util::prng::Rng;
+use lmtuner::workloads;
+
+fn main() -> anyhow::Result<()> {
+    let dev = DeviceSpec::m2090();
+
+    // Realistic model: train on a quick synthetic set.
+    let mut rng = Rng::new(0x1FE2);
+    let templates = lmtuner::synth::generator::generate_n(&mut rng, 8);
+    let sweep = lmtuner::synth::sweep::LaunchSweep::new(2048, 2048);
+    let recs = lmtuner::synth::dataset::build(
+        &templates,
+        &sweep,
+        &dev,
+        &lmtuner::synth::dataset::BuildConfig { configs_per_kernel: 8, ..Default::default() },
+    );
+    let refs: Vec<_> = recs.iter().collect();
+    let forest = Forest::fit_records(&refs, &ForestConfig::default());
+
+    // Realistic queries: the full real-benchmark feature stream.
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    for b in workloads::all() {
+        for d in (b.instances)(&dev) {
+            rows.push(features::extract(&d).to_vec());
+        }
+    }
+    let n = rows.len();
+    println!("{n} query rows, forest: {}", forest.config_summary);
+
+    let bench = Bencher::default();
+
+    // L3 native recursive.
+    let r = bench.run("native: recursive trees", || {
+        for row in &rows {
+            black_box(forest.predict(row));
+        }
+    });
+    report_throughput(&r, n as f64, "pred");
+
+    // L3 flat encoded.
+    let contract = export::ExportContract::default();
+    let enc = export::encode(&forest, contract);
+    let r = bench.run("encoded: flat arrays", || {
+        for row in &rows {
+            black_box(enc.predict(row));
+        }
+    });
+    report_throughput(&r, n as f64, "pred");
+
+    // L1/L2 via PJRT, per batch variant.
+    let dir = std::path::Path::new("artifacts");
+    if !dir.join("manifest.json").exists() {
+        println!("(skipping pjrt variants: run `make artifacts`)");
+        return Ok(());
+    }
+    let engine = Engine::new(dir)?;
+    let enc2 = export::encode(
+        &forest,
+        export::ExportContract {
+            num_trees: engine.manifest.num_trees,
+            max_nodes: engine.manifest.max_nodes,
+            max_depth: engine.manifest.max_depth,
+            num_features: NUM_FEATURES,
+        },
+    );
+    let exec = ForestExecutor::new(&engine, &enc2)?;
+    for &bsz in engine.manifest.forest_batch_sizes.clone().iter() {
+        let chunk: Vec<Vec<f64>> =
+            rows.iter().cycle().take(bsz).cloned().collect();
+        let r = bench.run(&format!("pjrt: batch {bsz}"), || {
+            black_box(exec.predict(&chunk).unwrap());
+        });
+        report_throughput(&r, bsz as f64, "pred");
+    }
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Perf bench (L3 substrate): simulator + feature-extraction throughput —
+//! the dominant cost of dataset generation at paper scale (5.6M
+//! instances), and forest-training throughput.
+
+use lmtuner::gpu::spec::DeviceSpec;
+use lmtuner::ml::forest::{Forest, ForestConfig};
+use lmtuner::sim::exec::{measure, MeasureConfig};
+use lmtuner::sim::timing::{simulate, Variant};
+use lmtuner::synth::{dataset, generator, sweep::LaunchSweep};
+use lmtuner::util::bench::{black_box, report_throughput, Bencher};
+use lmtuner::util::prng::Rng;
+
+fn main() {
+    let dev = DeviceSpec::m2090();
+    let mut rng = Rng::new(0x51AB);
+    let templates = generator::generate_n(&mut rng, 4);
+    let sweep = LaunchSweep::new(2048, 2048);
+    let launch = sweep.all()[sweep.len() / 2];
+    let descriptors: Vec<_> =
+        templates.iter().map(|t| t.descriptor(&launch, &dev)).collect();
+    let bench = Bencher::default();
+
+    // Raw timing-model evaluations.
+    let r = bench.run("simulate: baseline+optimized pair", || {
+        for d in &descriptors {
+            black_box(simulate(d, &dev, Variant::Baseline));
+            black_box(simulate(d, &dev, Variant::Optimized));
+        }
+    });
+    report_throughput(&r, descriptors.len() as f64, "pairs");
+
+    // Full measure (pair + noise + features).
+    let mcfg = MeasureConfig::default();
+    let r = bench.run("measure: record incl. features", || {
+        for d in &descriptors {
+            black_box(measure(d, &dev, &mcfg));
+        }
+    });
+    report_throughput(&r, descriptors.len() as f64, "records");
+
+    // End-to-end dataset build (generation + sweep sampling + measure).
+    let cfg = dataset::BuildConfig { configs_per_kernel: 16, ..Default::default() };
+    let mut n = 0;
+    let r = bench.run("dataset: build (4 tuples x 16 cfgs)", || {
+        let recs = dataset::build(&templates, &sweep, &dev, &cfg);
+        n = recs.len();
+        black_box(recs);
+    });
+    report_throughput(&r, n as f64, "instances");
+
+    // Forest training throughput.
+    let recs = dataset::build(&templates, &sweep, &dev, &cfg);
+    let refs: Vec<_> = recs.iter().collect();
+    let fcfg = ForestConfig::default();
+    let r = Bencher::coarse().run("train: 20-tree forest", || {
+        black_box(Forest::fit_records(&refs, &fcfg));
+    });
+    report_throughput(&r, refs.len() as f64, "samples");
+}

@@ -1,0 +1,18 @@
+//! Bench: regenerate Table 2 — the compile-time parameter distributions —
+//! and time the sampler.
+
+use lmtuner::report::tables;
+use lmtuner::synth::sampler;
+use lmtuner::util::bench::{black_box, report_throughput, Bencher};
+use lmtuner::util::prng::Rng;
+
+fn main() {
+    let b = Bencher::default();
+    let n = 100_000;
+    let r = b.run("table2: sample context tuples", || {
+        let mut rng = Rng::new(0x7AB1E2);
+        black_box(sampler::sample_tuples(&mut rng, n));
+    });
+    report_throughput(&r, n as f64, "tuples");
+    println!("\n{}", tables::table2(0x7AB1E2, n));
+}

@@ -1,0 +1,21 @@
+//! Bench: regenerate Table 3 — the eight real benchmarks and their
+//! kernel-instance counts — and time instance construction.
+
+use lmtuner::gpu::spec::DeviceSpec;
+use lmtuner::report::tables;
+use lmtuner::util::bench::{black_box, report_throughput, Bencher};
+use lmtuner::workloads;
+
+fn main() {
+    let dev = DeviceSpec::m2090();
+    let b = Bencher::default();
+    let mut total = 0usize;
+    let r = b.run("table3: build all real-benchmark instances", || {
+        total = 0;
+        for bench in workloads::all() {
+            total += black_box((bench.instances)(&dev).len());
+        }
+    });
+    report_throughput(&r, total as f64, "instances");
+    println!("\n{}", tables::table3(&dev));
+}

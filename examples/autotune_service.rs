@@ -1,0 +1,156 @@
+//! End-to-end serving driver — the repository's full-stack validation.
+//!
+//! Exercises every layer together: trains the forest (L3), exports it to
+//! the tensor contract, loads the AOT-compiled L2/L1 artifact (jax graph
+//! wrapping the Pallas forest kernel) through PJRT, starts the batched
+//! prediction service, and replays the complete real-benchmark instance
+//! stream (all 1706 Table-3 instances, repeated) as concurrent requests.
+//!
+//! Reports decision accuracy against the oracle plus latency/throughput
+//! percentiles. Recorded in EXPERIMENTS.md §End-to-end.
+//!
+//! Run: make artifacts && cargo run --release --offline --example autotune_service
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use lmtuner::coordinator::service::{Service, ServiceConfig};
+use lmtuner::coordinator::train::{self, TrainConfig};
+use lmtuner::gpu::spec::DeviceSpec;
+use lmtuner::ml::metrics;
+use lmtuner::runtime::pjrt::Engine;
+use lmtuner::sim::exec::{measure, MeasureConfig, SpeedupRecord};
+use lmtuner::util::stats::percentile;
+use lmtuner::workloads;
+
+const REPEATS: usize = 8;
+
+fn main() -> anyhow::Result<()> {
+    let dev = DeviceSpec::m2090();
+
+    // --- Phase 1: train (L3 native) --------------------------------
+    let cfg = TrainConfig { scale: 0.2, configs_per_kernel: 24, ..Default::default() };
+    println!("[1/4] training forest (scale {}) ...", cfg.scale);
+    let out = train::run(&dev, &cfg);
+    println!(
+        "      {} instances, synth accuracy: count {:.1}% / penalty {:.1}%",
+        out.records.len(),
+        100.0 * out.synth_accuracy.count_based,
+        100.0 * out.synth_accuracy.penalty_weighted
+    );
+
+    // --- Load PJRT engine + artifacts ------------------------------
+    println!("[2/4] loading AOT artifacts via PJRT ...");
+    let engine = Arc::new(Engine::new(std::path::Path::new("artifacts"))?);
+    let n = engine.warmup()?;
+    println!("      compiled {n} artifacts on {}", engine.platform());
+    let encoded = train::encode_for_serving(&out.forest, &engine.manifest);
+    println!(
+        "      forest encoded: {} truncated splits (budget {} nodes x {} trees)",
+        encoded.truncated, engine.manifest.max_nodes, engine.manifest.num_trees
+    );
+
+    // --- Start the service ------------------------------------------
+    println!("[3/4] starting batched prediction service ...");
+    let svc = Service::start(
+        engine,
+        encoded,
+        ServiceConfig {
+            max_batch: 1024,
+            max_wait: std::time::Duration::from_micros(200),
+            ..Default::default()
+        },
+    )?;
+    let handle = svc.handle();
+
+    // --- Replay the real-benchmark stream ---------------------------
+    let mut oracle: Vec<SpeedupRecord> = Vec::new();
+    let mcfg = MeasureConfig::default();
+    for b in workloads::all() {
+        for d in (b.instances)(&dev) {
+            oracle.push(measure(&d, &dev, &mcfg));
+        }
+    }
+    let total = oracle.len() * REPEATS;
+    println!("[4/4] replaying {total} requests ({} unique instances x {REPEATS}) ...", oracle.len());
+
+    let t0 = Instant::now();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let mut clients = Vec::new();
+    let handle2 = handle.clone();
+    let oracle2: Arc<Vec<SpeedupRecord>> = Arc::new(oracle);
+    for c in 0..4 {
+        let h = handle2.clone();
+        let tx = tx.clone();
+        let orc = oracle2.clone();
+        clients.push(std::thread::spawn(move || {
+            let per = REPEATS / 4;
+            for rep in 0..per {
+                for (i, r) in orc.iter().enumerate() {
+                    let id = ((c * per + rep) * orc.len() + i) as u64;
+                    while h.submit(id, r.features, tx.clone()).is_err() {
+                        std::thread::yield_now(); // backpressure
+                    }
+                }
+            }
+        }));
+    }
+    drop(tx);
+
+    let mut lat_us = Vec::with_capacity(total);
+    let mut decisions: Vec<(u64, bool)> = Vec::with_capacity(total);
+    let mut batch_sizes = Vec::new();
+    for _ in 0..total {
+        let resp = rx.recv()?;
+        lat_us.push(resp.latency.as_secs_f64() * 1e6);
+        decisions.push((resp.id, resp.use_local_memory));
+        batch_sizes.push(resp.batch_size as f64);
+    }
+    let elapsed = t0.elapsed();
+    for c in clients {
+        c.join().unwrap();
+    }
+    drop(handle);
+    drop(handle2);
+    let stats = svc.shutdown();
+
+    // --- Grade decisions against the oracle -------------------------
+    let orc = &*oracle2;
+    let graded: Vec<bool> = decisions
+        .iter()
+        .map(|(id, d)| {
+            let r = &orc[*id as usize % orc.len()];
+            *d == r.beneficial()
+        })
+        .collect();
+    let refs: Vec<&SpeedupRecord> = decisions
+        .iter()
+        .map(|(id, _)| &orc[*id as usize % orc.len()])
+        .collect();
+    let dec_only: Vec<bool> = decisions.iter().map(|(_, d)| *d).collect();
+    let acc = metrics::evaluate(&refs, &dec_only);
+
+    println!("\n=== end-to-end results ===");
+    println!(
+        "throughput : {:.0} decisions/s ({} served, {} batches, mean batch {:.0})",
+        stats.served as f64 / elapsed.as_secs_f64(),
+        stats.served,
+        stats.batches,
+        batch_sizes.iter().sum::<f64>() / batch_sizes.len().max(1) as f64
+    );
+    println!(
+        "latency    : p50 {:.0}us  p95 {:.0}us  p99 {:.0}us  max {:.0}us",
+        percentile(&lat_us, 50.0),
+        percentile(&lat_us, 95.0),
+        percentile(&lat_us, 99.0),
+        percentile(&lat_us, 100.0)
+    );
+    println!(
+        "accuracy   : count {:.1}%  penalty-weighted {:.1}%  ({} correct / {})",
+        100.0 * acc.count_based,
+        100.0 * acc.penalty_weighted,
+        graded.iter().filter(|&&g| g).count(),
+        graded.len()
+    );
+    Ok(())
+}

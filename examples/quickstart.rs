@@ -1,0 +1,68 @@
+//! Quickstart: the whole framework in ~60 lines.
+//!
+//! 1. Generate a small synthetic kernel population (paper §4.1).
+//! 2. "Measure" each instance with and without the local-memory
+//!    optimization on the simulated M2090.
+//! 3. Train the Random Forest on 10% (paper §5.1).
+//! 4. Evaluate both accuracy metrics on the held-out 90%.
+//! 5. Ask the model about one concrete kernel.
+//!
+//! Run: cargo run --release --offline --example quickstart
+
+use lmtuner::coordinator::train::{self, TrainConfig};
+use lmtuner::gpu::spec::DeviceSpec;
+use lmtuner::kernelmodel::access::HomePattern;
+use lmtuner::kernelmodel::features;
+use lmtuner::kernelmodel::launch::{GridGeom, Launch, WgGeom};
+use lmtuner::kernelmodel::template::Template;
+use lmtuner::report::figures;
+
+fn main() {
+    let dev = DeviceSpec::m2090();
+
+    // Phase 1: a scaled-down pipeline (5 context tuples -> ~560 kernels).
+    let cfg = TrainConfig {
+        scale: 0.05,
+        configs_per_kernel: 12,
+        ..TrainConfig::default()
+    };
+    println!("running phase-1 pipeline (scale {}) ...", cfg.scale);
+    let out = train::run(&dev, &cfg);
+    println!(
+        "  {} kernel instances simulated in {:.1}s, trained on {} in {:.1}s\n",
+        out.records.len(),
+        out.gen_seconds,
+        out.train_size,
+        out.fit_seconds
+    );
+    println!("{}", figures::fig6(&out.synth_accuracy, &out.per_benchmark));
+
+    // Phase 2: query the model about a fresh kernel — a row-wise
+    // reduction whose warp accesses are fully scattered (the paper's §2
+    // motivating case). The oracle says "stage it"; the model should too.
+    let t = Template {
+        home: HomePattern::NoReuseRow,
+        n: 1,
+        m: 8,
+        ..Template::base()
+    };
+    let launch = Launch::new(
+        WgGeom { w: 32, h: 2 },
+        GridGeom { w: 1024, h: 1024 },
+    );
+    let d = t.descriptor(&launch, &dev);
+    let feats = features::extract(&d);
+    let score = out.forest.predict(&feats);
+    let oracle = lmtuner::sim::exec::measure(
+        &d,
+        &dev,
+        &lmtuner::sim::exec::MeasureConfig::deterministic(),
+    );
+    println!(
+        "query: {}\n  model:  log2(speedup) = {score:+.2} -> {}\n  oracle: speedup = {:.2}x -> {}",
+        d.name,
+        if score > 0.0 { "USE local memory" } else { "do NOT use" },
+        oracle.speedup,
+        if oracle.beneficial() { "USE local memory" } else { "do NOT use" },
+    );
+}

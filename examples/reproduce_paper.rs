@@ -1,0 +1,57 @@
+//! Reproduce every table and figure of the paper in one run.
+//!
+//! Scaled by LMTUNER_SCALE (default 0.2 = 20 context tuples; 1.0 = the
+//! paper's 100 tuples). Output is the per-figure index that DESIGN.md §5
+//! and EXPERIMENTS.md reference.
+//!
+//! Run: cargo run --release --offline --example reproduce_paper
+
+use lmtuner::coordinator::train::{self, TrainConfig};
+use lmtuner::gpu::spec::DeviceSpec;
+use lmtuner::report::{figures, tables};
+
+fn main() {
+    let scale: f64 = std::env::var("LMTUNER_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.2);
+    let dev = DeviceSpec::m2090();
+    let cfg = TrainConfig { scale, configs_per_kernel: 32, ..Default::default() };
+
+    println!("{}", tables::table1());
+    println!("{}", tables::table2(cfg.seed, 100_000));
+    println!("{}", tables::table3(&dev));
+
+    eprintln!("building dataset + training (scale {scale}) ...");
+    let out = train::run(&dev, &cfg);
+    let real = figures::real_benchmark_records(&dev, &cfg.measure);
+
+    println!("{}", figures::fig1(&out.records, &real));
+    println!("{}", figures::fig6(&out.synth_accuracy, &out.per_benchmark));
+
+    println!("=== paper-vs-measured summary ===");
+    println!(
+        "synthetic count-based accuracy   : paper ~86%   ours {:.1}%",
+        100.0 * out.synth_accuracy.count_based
+    );
+    println!(
+        "synthetic penalty-weighted       : paper ~95%   ours {:.1}%",
+        100.0 * out.synth_accuracy.penalty_weighted
+    );
+    let avg = out
+        .per_benchmark
+        .iter()
+        .map(|(_, a)| a.penalty_weighted)
+        .sum::<f64>()
+        / out.per_benchmark.len() as f64;
+    println!("real penalty-weighted (average)  : paper ~95%   ours {:.1}%", 100.0 * avg);
+    let min_speedup = out
+        .records
+        .iter()
+        .map(|r| r.speedup)
+        .fold(f64::INFINITY, f64::min);
+    let max_speedup = out.records.iter().map(|r| r.speedup).fold(0.0, f64::max);
+    println!(
+        "synthetic speedup range          : paper 0.03x-49.6x   ours {min_speedup:.2}x-{max_speedup:.1}x"
+    );
+}

@@ -1,0 +1,118 @@
+"""AOT compile path: lower the L2 graphs to HLO *text* artifacts.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate links) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+
+Artifacts produced (shapes baked per variant):
+  forest_b{B}.hlo.txt         for B in FOREST_BATCH_SIZES
+  stencil_{pattern}_r{R}.hlo.txt  for the three Fig.-5 patterns
+  manifest.json               shape/contract description for the rust side
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .config import (FOREST_BATCH_SIZES, MAX_DEPTH, MAX_NODES, NUM_FEATURES,
+                     NUM_TREES, STENCIL_EPILOGUE, STENCIL_IMG,
+                     STENCIL_PATTERNS, STENCIL_RADIUS, STENCIL_TILE,
+                     stencil_offsets)
+from .model import forest_model, make_stencil_model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_forest(batch: int) -> str:
+    f32 = jnp.float32
+    i32 = jnp.int32
+    spec = jax.ShapeDtypeStruct
+    lowered = jax.jit(forest_model).lower(
+        spec((batch, NUM_FEATURES), f32),
+        spec((NUM_TREES, MAX_NODES), i32),
+        spec((NUM_TREES, MAX_NODES), f32),
+        spec((NUM_TREES, MAX_NODES), i32),
+        spec((NUM_TREES, MAX_NODES), i32),
+        spec((NUM_TREES, MAX_NODES), f32),
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_stencil(pattern: str) -> str:
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct
+    r = STENCIL_RADIUS
+    k = len(stencil_offsets(pattern, r))
+    model = make_stencil_model(pattern, r, STENCIL_TILE, STENCIL_EPILOGUE)
+    lowered = jax.jit(model).lower(
+        spec((STENCIL_IMG + 2 * r, STENCIL_IMG + 2 * r), f32),
+        spec((k,), f32),
+    )
+    return to_hlo_text(lowered)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--forest-only", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "num_trees": NUM_TREES,
+        "max_nodes": MAX_NODES,
+        "num_features": NUM_FEATURES,
+        "max_depth": MAX_DEPTH,
+        "forest_batch_sizes": list(FOREST_BATCH_SIZES),
+        "stencil": {
+            "img": STENCIL_IMG,
+            "tile": STENCIL_TILE,
+            "radius": STENCIL_RADIUS,
+            "epilogue": STENCIL_EPILOGUE,
+            "patterns": {
+                p: len(stencil_offsets(p, STENCIL_RADIUS))
+                for p in STENCIL_PATTERNS
+            },
+        },
+        "artifacts": [],
+    }
+
+    for b in FOREST_BATCH_SIZES:
+        name = f"forest_b{b}.hlo.txt"
+        path = os.path.join(args.out_dir, name)
+        text = lower_forest(b)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"].append(name)
+        print(f"wrote {name} ({len(text)} chars)")
+
+    if not args.forest_only:
+        for p in STENCIL_PATTERNS:
+            name = f"stencil_{p}_r{STENCIL_RADIUS}.hlo.txt"
+            path = os.path.join(args.out_dir, name)
+            text = lower_stencil(p)
+            with open(path, "w") as f:
+                f.write(text)
+            manifest["artifacts"].append(name)
+            print(f"wrote {name} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote manifest.json ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Shared compile-time constants for the L1/L2 <-> L3 contract.
+
+These sizes are baked into the AOT artifacts; the rust side
+(rust/src/runtime/forest_exec.rs, rust/src/ml/export.rs) must agree.
+Keep in sync with `rust/src/runtime/contract.rs`.
+"""
+
+# ---- Random-forest tensor encoding ------------------------------------
+NUM_TREES = 20          # paper: Weka RF with 20 trees
+MAX_NODES = 8192        # per-tree node-table padding (leaves self-loop)
+NUM_FEATURES = 18       # paper section 4.2: 18 model inputs
+MAX_DEPTH = 32          # traversal iterations; >= exported tree depth
+# Batch-size variants compiled AOT; the rust router pads to the smallest fit.
+FOREST_BATCH_SIZES = (64, 256, 1024, 4096)
+
+# ---- Synthetic-template stencil executor -------------------------------
+STENCIL_PATTERNS = ("rect", "diamond", "star")   # paper figure 5
+STENCIL_IMG = 256        # H == W of the target array for the executor
+STENCIL_TILE = 32        # output tile (the "workgroup" analog)
+STENCIL_RADIUS = 1       # radius baked into the default artifacts
+STENCIL_EPILOGUE = 4     # epilogue FMA chain length
+
+
+def stencil_offsets(pattern: str, radius: int):
+    """Tap offsets (dy, dx) for the paper's three stencil shapes (Fig. 5).
+
+    rect    : full (2r+1)^2 square
+    diamond : |dy| + |dx| <= r
+    star    : taps on the two axes only
+    Mirrors rust/src/kernelmodel/stencil.rs exactly.
+    """
+    if radius == 0:
+        return [(0, 0)]
+    offs = []
+    r = radius
+    for dy in range(-r, r + 1):
+        for dx in range(-r, r + 1):
+            if pattern == "rect":
+                offs.append((dy, dx))
+            elif pattern == "diamond":
+                if abs(dy) + abs(dx) <= r:
+                    offs.append((dy, dx))
+            elif pattern == "star":
+                if dy == 0 or dx == 0:
+                    offs.append((dy, dx))
+            else:
+                raise ValueError(f"unknown stencil pattern {pattern!r}")
+    return offs

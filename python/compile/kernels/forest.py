@@ -1,0 +1,94 @@
+"""L1 Pallas kernel: batched random-forest regression inference.
+
+The serving hot path of the auto-tuner (paper Fig. 2, right side): given a
+batch of 18-dim feature vectors and the tensor-encoded forest, walk every
+tree and average the reached leaf values.
+
+Tensor encoding (produced by rust/src/ml/export.rs):
+  feat_idx [T, N] i32, thresh [T, N] f32, left/right [T, N] i32,
+  leaf [T, N] f32.  Leaves self-loop (left == right == self), so running
+  the traversal for a fixed DEPTH >= max tree depth is exact.
+
+Kernel layout: grid = (batch_tiles, trees). Each grid step loads one tree's
+node tables (a [1, N] block per table — the VMEM-resident "local memory" of
+this kernel) plus one [BT, F] feature tile, performs DEPTH gather steps, and
+accumulates leaf values into the output tile. Tree 0 initializes the
+accumulator; the final tree divides by T.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO that both pytest and the
+rust runtime can run. On a real TPU the same BlockSpec schedule stages each
+tree's tables HBM->VMEM exactly once per batch tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..config import MAX_DEPTH, NUM_TREES
+
+
+def _forest_kernel(f_ref, fi_ref, th_ref, lt_ref, rt_ref, lf_ref, o_ref,
+                   *, depth, num_trees):
+    t = pl.program_id(1)
+
+    feats = f_ref[...]                 # [BT, F]
+    fidx = fi_ref[0, :]                # [N]
+    thr = th_ref[0, :]
+    lft = lt_ref[0, :]
+    rgt = rt_ref[0, :]
+    leaf = lf_ref[0, :]
+
+    bt = feats.shape[0]
+    rows = jax.lax.iota(jnp.int32, bt)
+
+    def step(_, nodes):
+        fi = jnp.take(fidx, nodes)
+        th = jnp.take(thr, nodes)
+        fv = feats[rows, fi]
+        return jnp.where(fv <= th, jnp.take(lft, nodes), jnp.take(rgt, nodes))
+
+    nodes0 = jnp.zeros((bt,), jnp.int32)
+    nodes = jax.lax.fori_loop(0, depth, step, nodes0)
+    vals = jnp.take(leaf, nodes)
+
+    @pl.when(t == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += vals
+
+    @pl.when(t == num_trees - 1)
+    def _finish():
+        o_ref[...] = o_ref[...] / jnp.float32(num_trees)
+
+
+def forest_predict(features, feat_idx, thresh, left, right, leaf,
+                   *, batch_tile=64, depth=MAX_DEPTH):
+    """Batched forest inference. features [B, F] -> predictions [B].
+
+    B must be a multiple of batch_tile (the rust router pads).
+    """
+    b, f = features.shape
+    t, n = feat_idx.shape
+    assert b % batch_tile == 0, (b, batch_tile)
+
+    grid = (b // batch_tile, t)
+    kernel = functools.partial(_forest_kernel, depth=depth, num_trees=t)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((batch_tile, f), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+            pl.BlockSpec((1, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((batch_tile,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.float32),
+        interpret=True,
+    )(features, feat_idx, thresh, left, right, leaf)

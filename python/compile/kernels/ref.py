@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness ground truth).
+
+Everything here is deliberately written in the most direct jnp style —
+no tiling, no pallas — so pytest can assert_allclose the optimized
+kernels against an independent formulation.
+"""
+
+import jax.numpy as jnp
+
+from ..config import stencil_offsets
+
+
+def forest_predict_ref(features, feat_idx, thresh, left, right, leaf, depth):
+    """Reference batched random-forest regression inference.
+
+    features : [B, F] f32
+    feat_idx : [T, N] i32   feature tested at each node (leaves: 0)
+    thresh   : [T, N] f32   split threshold (go left iff x[f] <= t)
+    left     : [T, N] i32   left-child node id (leaves: self)
+    right    : [T, N] i32   right-child node id (leaves: self)
+    leaf     : [T, N] f32   prediction payload (internal nodes: 0)
+    depth    : int          traversal iterations (>= max tree depth;
+                            leaves self-loop so extra iterations are no-ops)
+
+    Returns [B] f32 — mean over trees of the reached leaf value.
+    """
+    b = features.shape[0]
+    t = feat_idx.shape[0]
+    rows = jnp.arange(b)
+    total = jnp.zeros((b,), jnp.float32)
+    for ti in range(t):
+        nodes = jnp.zeros((b,), jnp.int32)
+        for _ in range(depth):
+            fi = jnp.take(feat_idx[ti], nodes)
+            th = jnp.take(thresh[ti], nodes)
+            fv = features[rows, fi]
+            go_left = fv <= th
+            nodes = jnp.where(go_left,
+                              jnp.take(left[ti], nodes),
+                              jnp.take(right[ti], nodes))
+        total = total + jnp.take(leaf[ti], nodes)
+    return total / jnp.float32(t)
+
+
+def stencil_ref(inp, pattern, radius, weights, epilogue):
+    """Reference synthetic-template work-unit compute (Fig. 3 of the paper).
+
+    Each output element is the weighted sum of target-array taps around its
+    home coordinate (the selected stencil pattern, Fig. 5), followed by an
+    epilogue FMA chain. The input is assumed pre-padded by `radius` on each
+    side: inp is [H + 2r, W + 2r], output is [H, W].
+    """
+    offs = stencil_offsets(pattern, radius)
+    assert len(weights) == len(offs)
+    h = inp.shape[0] - 2 * radius
+    w = inp.shape[1] - 2 * radius
+    acc = jnp.zeros((h, w), jnp.float32)
+    for wk, (dy, dx) in zip(weights, offs):
+        acc = acc + jnp.float32(wk) * inp[radius + dy: radius + dy + h,
+                                          radius + dx: radius + dx + w]
+    for _ in range(epilogue):
+        acc = acc * jnp.float32(1.0009765625) + jnp.float32(0.03125)
+    return acc

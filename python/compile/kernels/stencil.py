@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: the synthetic-template work-unit compute (paper Fig. 3).
+
+This is the *optimized* variant of the paper's kernel template: the region
+of the target array `in` that a workgroup's work-units touch — the grey
+region of Fig. 4 extended by the stencil apron (Fig. 5) — is staged into
+on-chip memory once, and all taps read from the staged tile.
+
+Hardware adaptation (GPU shared memory -> TPU VMEM): the paper's
+workgroup-cooperative coalesced copy becomes an explicit `pl.load` of the
+apron-extended tile from the unblocked input ref — Pallas stages it
+HBM->VMEM; the (2r+1)^2 taps then hit VMEM only, the exact analog of the
+shared-memory reads in the paper's optimized OpenCL kernel. The epilogue FMA
+chain models the template's contextual computation (NUM_COMP_EP).
+
+interpret=True: see kernels/forest.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..config import stencil_offsets
+
+
+def _stencil_kernel(in_ref, w_ref, o_ref, *, offsets, radius, tile, epilogue):
+    iy = pl.program_id(0)
+    ix = pl.program_id(1)
+    r = radius
+
+    # The cooperative load (paper Fig. 3 line 18-19): one apron-extended
+    # tile of the padded input staged into on-chip memory.
+    y0 = iy * tile
+    x0 = ix * tile
+    staged = in_ref[pl.dslice(y0, tile + 2 * r),
+                    pl.dslice(x0, tile + 2 * r)]
+    weights = w_ref[...]
+
+    acc = jnp.zeros((tile, tile), jnp.float32)
+    for k, (dy, dx) in enumerate(offsets):
+        tap = jax.lax.dynamic_slice(staged, (r + dy, r + dx), (tile, tile))
+        acc = acc + weights[k] * tap
+
+    # Epilogue context (template lines 32-33): a short FMA chain.
+    for _ in range(epilogue):
+        acc = acc * jnp.float32(1.0009765625) + jnp.float32(0.03125)
+
+    o_ref[...] = acc
+
+
+def stencil_apply(inp, weights, *, pattern, radius, tile, epilogue):
+    """Run the template work-unit compute over a padded input.
+
+    inp     : [H + 2r, W + 2r] f32 (pre-padded target array; the paper pads
+              `in` to avoid out-of-bounds accesses)
+    weights : [K] f32, one per stencil tap (K = len(stencil_offsets))
+    Returns [H, W] f32.
+    """
+    offsets = stencil_offsets(pattern, radius)
+    hp, wp = inp.shape
+    h, w = hp - 2 * radius, wp - 2 * radius
+    assert h % tile == 0 and w % tile == 0, (h, w, tile)
+    assert weights.shape == (len(offsets),)
+
+    kernel = functools.partial(_stencil_kernel, offsets=offsets,
+                               radius=radius, tile=tile, epilogue=epilogue)
+    grid = (h // tile, w // tile)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),     # unblocked: kernel stages
+            pl.BlockSpec((len(offsets),), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tile, tile), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((h, w), jnp.float32),
+        interpret=True,
+    )(inp, weights)

@@ -1,0 +1,49 @@
+"""L2: the jax compute graphs that the rust coordinator executes via PJRT.
+
+Two graphs, both calling the L1 Pallas kernels:
+
+  * ``forest_model`` — the serving hot path: batched RF inference over the
+    tensor-encoded forest (kernels/forest.py).
+  * ``stencil_model`` — the synthetic-template executor: runs the paper's
+    work-unit compute over a target array (kernels/stencil.py), used by the
+    stencil_pipeline example to demonstrate that template instances are
+    real computations, not just simulator descriptors.
+
+Both are pure functions of their inputs so AOT lowering needs no closure
+state; all shapes are static per artifact variant (see aot.py).
+"""
+
+import jax.numpy as jnp
+
+from .config import MAX_DEPTH
+from .kernels.forest import forest_predict
+from .kernels.stencil import stencil_apply
+
+
+def forest_model(features, feat_idx, thresh, left, right, leaf):
+    """features [B,18] + forest tensors -> (predictions [B],).
+
+    The prediction is the forest-mean regression output; the rust side
+    interprets it as log2(speedup): > 0 means "apply the optimization".
+    """
+    # Perf (EXPERIMENTS.md §Perf L1): one full-batch tile instead of
+    # 64-row tiles — fewer pipeline steps, wider vector ops; 13x faster
+    # under interpret mode and a single HBM->VMEM stage per tree on TPU
+    # (B=4096 x 18 f32 = 288 KB tile + 5 x 32 KB node tables << VMEM).
+    preds = forest_predict(features, feat_idx, thresh, left, right, leaf,
+                           batch_tile=features.shape[0],
+                           depth=MAX_DEPTH)
+    return (preds,)
+
+
+def make_stencil_model(pattern, radius, tile, epilogue):
+    """Build the stencil executor for one (pattern, radius) artifact."""
+
+    def stencil_model(inp, weights):
+        out = stencil_apply(inp, weights, pattern=pattern, radius=radius,
+                            tile=tile, epilogue=epilogue)
+        # Checksum lets the rust side sanity-check numerics cheaply without
+        # pulling the whole output back for large arrays.
+        return (out, jnp.sum(out, dtype=jnp.float32))
+
+    return stencil_model

@@ -1,0 +1,51 @@
+"""Test helpers: random valid forest tensors + stencil inputs."""
+
+import numpy as np
+import pytest
+
+
+def make_random_forest(rng, num_trees, max_nodes, num_features,
+                       max_depth=8, p_leaf=0.3):
+    """Build random *valid* tensor-encoded trees.
+
+    Validity contract (mirrors rust/src/ml/export.rs):
+      - node 0 is the root
+      - children have larger indices than parents (no cycles)
+      - leaves self-loop (left == right == self) and carry the payload
+      - all nodes beyond the used range are self-looping leaves
+    """
+    t = num_trees
+    n = max_nodes
+    feat_idx = np.zeros((t, n), np.int32)
+    thresh = np.zeros((t, n), np.float32)
+    left = np.tile(np.arange(n, dtype=np.int32), (t, 1))
+    right = left.copy()
+    leaf = np.zeros((t, n), np.float32)
+
+    for ti in range(t):
+        # grow a random binary tree breadth-first
+        next_free = [1]
+        depth_of = {0: 0}
+        frontier = [0]
+        while frontier:
+            node = frontier.pop()
+            d = depth_of[node]
+            is_leaf = (d >= max_depth or next_free[0] + 2 > n
+                       or rng.random() < p_leaf)
+            if is_leaf:
+                leaf[ti, node] = rng.standard_normal()
+            else:
+                l, r = next_free[0], next_free[0] + 1
+                next_free[0] += 2
+                feat_idx[ti, node] = rng.integers(0, num_features)
+                thresh[ti, node] = rng.standard_normal()
+                left[ti, node] = l
+                right[ti, node] = r
+                depth_of[l] = depth_of[r] = d + 1
+                frontier += [l, r]
+    return feat_idx, thresh, left, right, leaf
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0xC0FFEE)

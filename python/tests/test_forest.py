@@ -1,0 +1,99 @@
+"""Pallas forest kernel vs pure-jnp oracle, plus oracle self-checks."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.config import MAX_DEPTH, NUM_FEATURES
+from compile.kernels.forest import forest_predict
+from compile.kernels.ref import forest_predict_ref
+from tests.conftest import make_random_forest
+
+
+def _run_both(rng, batch, trees, nodes, depth_grow, batch_tile):
+    fi, th, lt, rt, lf = make_random_forest(
+        rng, trees, nodes, NUM_FEATURES, max_depth=depth_grow)
+    feats = rng.standard_normal((batch, NUM_FEATURES)).astype(np.float32)
+    got = forest_predict(feats, fi, th, lt, rt, lf,
+                         batch_tile=batch_tile, depth=MAX_DEPTH)
+    want = forest_predict_ref(feats, fi, th, lt, rt, lf, MAX_DEPTH)
+    return np.asarray(got), np.asarray(want)
+
+
+def test_forest_matches_ref_small(rng):
+    got, want = _run_both(rng, batch=64, trees=4, nodes=64,
+                          depth_grow=5, batch_tile=32)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_forest_matches_ref_full_contract(rng):
+    # full contract sizes (T=20 is what the artifacts bake)
+    got, want = _run_both(rng, batch=128, trees=20, nodes=256,
+                          depth_grow=7, batch_tile=64)
+    np.testing.assert_allclose(got, want, rtol=1e-6, atol=1e-6)
+
+
+def test_single_node_trees_predict_their_leaf(rng):
+    # Trees that are a single leaf: prediction == mean of the leaf values.
+    fi, th, lt, rt, lf = make_random_forest(rng, 5, 8, NUM_FEATURES,
+                                            max_depth=0)
+    feats = rng.standard_normal((64, NUM_FEATURES)).astype(np.float32)
+    got = np.asarray(forest_predict(feats, fi, th, lt, rt, lf,
+                                    batch_tile=64, depth=MAX_DEPTH))
+    want = np.full(64, lf[:, 0].mean(), np.float32)
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+def test_stump_decision_boundary(rng):
+    # One tree, one split on feature 3 at 0.0: left leaf -1, right leaf +1.
+    n = 8
+    fi = np.zeros((1, n), np.int32)
+    th = np.zeros((1, n), np.float32)
+    lt = np.tile(np.arange(n, dtype=np.int32), (1, 1))
+    rt = lt.copy()
+    lf = np.zeros((1, n), np.float32)
+    fi[0, 0] = 3
+    lt[0, 0], rt[0, 0] = 1, 2
+    lf[0, 1], lf[0, 2] = -1.0, 1.0
+    feats = np.zeros((64, NUM_FEATURES), np.float32)
+    feats[:, 3] = np.linspace(-2, 2, 64)
+    got = np.asarray(forest_predict(feats, fi, th, lt, rt, lf,
+                                    batch_tile=64, depth=MAX_DEPTH))
+    want = np.where(feats[:, 3] <= 0.0, -1.0, 1.0).astype(np.float32)
+    np.testing.assert_allclose(got, want)
+
+
+def test_extra_depth_is_noop(rng):
+    # Leaves self-loop: traversing deeper than the tree changes nothing.
+    fi, th, lt, rt, lf = make_random_forest(rng, 3, 64, NUM_FEATURES,
+                                            max_depth=4)
+    feats = rng.standard_normal((32, NUM_FEATURES)).astype(np.float32)
+    a = np.asarray(forest_predict_ref(feats, fi, th, lt, rt, lf, 6))
+    b = np.asarray(forest_predict_ref(feats, fi, th, lt, rt, lf, 30))
+    np.testing.assert_allclose(a, b)
+
+
+@settings(max_examples=15, deadline=None)
+@given(batch_tiles=st.integers(1, 4),
+       trees=st.integers(1, 8),
+       nodes=st.sampled_from([16, 64, 128]),
+       depth_grow=st.integers(0, 6),
+       seed=st.integers(0, 2**31 - 1))
+def test_forest_matches_ref_property(batch_tiles, trees, nodes,
+                                     depth_grow, seed):
+    rng = np.random.default_rng(seed)
+    got, want = _run_both(rng, batch=32 * batch_tiles, trees=trees,
+                          nodes=nodes, depth_grow=depth_grow, batch_tile=32)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_batch_tile_invariance(rng):
+    # Same inputs, different tilings -> identical outputs.
+    fi, th, lt, rt, lf = make_random_forest(rng, 6, 128, NUM_FEATURES,
+                                            max_depth=6)
+    feats = rng.standard_normal((128, NUM_FEATURES)).astype(np.float32)
+    a = np.asarray(forest_predict(feats, fi, th, lt, rt, lf,
+                                  batch_tile=32, depth=MAX_DEPTH))
+    b = np.asarray(forest_predict(feats, fi, th, lt, rt, lf,
+                                  batch_tile=128, depth=MAX_DEPTH))
+    np.testing.assert_allclose(a, b, rtol=1e-6, atol=1e-6)

@@ -1,0 +1,102 @@
+"""Pallas stencil kernel vs pure-jnp oracle + template-semantics checks."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.config import stencil_offsets
+from compile.kernels.ref import stencil_ref
+from compile.kernels.stencil import stencil_apply
+
+
+def _pad(img, r):
+    return np.pad(img, r, mode="constant") if r else img
+
+
+def _run_both(rng, h, w, pattern, radius, tile, epilogue):
+    offs = stencil_offsets(pattern, radius)
+    img = rng.standard_normal((h, w)).astype(np.float32)
+    weights = rng.standard_normal(len(offs)).astype(np.float32)
+    padded = _pad(img, radius)
+    got = stencil_apply(padded, weights, pattern=pattern, radius=radius,
+                        tile=tile, epilogue=epilogue)
+    want = stencil_ref(padded, pattern, radius, weights, epilogue)
+    return np.asarray(got), np.asarray(want)
+
+
+@pytest.mark.parametrize("pattern", ["rect", "diamond", "star"])
+def test_stencil_matches_ref(pattern, rng):
+    got, want = _run_both(rng, 64, 64, pattern, radius=1, tile=16,
+                          epilogue=4)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("radius", [0, 1, 2])
+def test_stencil_radii(radius, rng):
+    got, want = _run_both(rng, 32, 32, "rect", radius=radius, tile=16,
+                          epilogue=0)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_identity_stencil(rng):
+    # radius 0 single tap with weight 1 and no epilogue == identity.
+    img = rng.standard_normal((32, 32)).astype(np.float32)
+    got = np.asarray(stencil_apply(img, np.ones(1, np.float32),
+                                   pattern="rect", radius=0, tile=16,
+                                   epilogue=0))
+    np.testing.assert_allclose(got, img)
+
+
+def test_offsets_counts():
+    # Fig. 5 tap counts: rect (2r+1)^2, diamond 2r^2+2r+1, star 4r+1.
+    for r in range(0, 4):
+        assert len(stencil_offsets("rect", r)) == (2 * r + 1) ** 2
+        assert len(stencil_offsets("diamond", r)) == 2 * r * r + 2 * r + 1
+        assert len(stencil_offsets("star", r)) == (4 * r + 1 if r else 1)
+
+
+def test_star_subset_of_diamond_subset_of_rect():
+    for r in (1, 2, 3):
+        rect = set(stencil_offsets("rect", r))
+        dia = set(stencil_offsets("diamond", r))
+        star = set(stencil_offsets("star", r))
+        assert star <= dia <= rect
+        assert (0, 0) in star
+
+
+def test_constant_input_rect(rng):
+    # Constant input: every output equals sum(w) * c through the epilogue.
+    c = 2.5
+    r, tile, ep = 1, 16, 3
+    offs = stencil_offsets("rect", r)
+    w = rng.standard_normal(len(offs)).astype(np.float32)
+    img = np.full((32 + 2 * r, 32 + 2 * r), c, np.float32)
+    got = np.asarray(stencil_apply(img, w, pattern="rect", radius=r,
+                                   tile=tile, epilogue=ep))
+    val = np.float32(w.sum() * c)
+    for _ in range(ep):
+        val = val * np.float32(1.0009765625) + np.float32(0.03125)
+    np.testing.assert_allclose(got, np.full((32, 32), val), rtol=2e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(pattern=st.sampled_from(["rect", "diamond", "star"]),
+       radius=st.integers(0, 2),
+       tiles=st.integers(1, 3),
+       epilogue=st.integers(0, 6),
+       seed=st.integers(0, 2**31 - 1))
+def test_stencil_matches_ref_property(pattern, radius, tiles, epilogue,
+                                      seed):
+    rng = np.random.default_rng(seed)
+    hw = 16 * tiles
+    got, want = _run_both(rng, hw, hw, pattern, radius, tile=16,
+                          epilogue=epilogue)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_tile_invariance(rng):
+    got16, _ = _run_both(np.random.default_rng(7), 64, 64, "diamond", 1,
+                         tile=16, epilogue=2)
+    got32, _ = _run_both(np.random.default_rng(7), 64, 64, "diamond", 1,
+                         tile=32, epilogue=2)
+    np.testing.assert_allclose(got16, got32, rtol=1e-6, atol=1e-6)

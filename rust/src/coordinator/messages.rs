@@ -1,0 +1,32 @@
+//! Request/response types of the prediction service.
+
+use std::time::Instant;
+
+use crate::kernelmodel::features::NUM_FEATURES;
+
+/// One auto-tuning query: "should this kernel instance use local memory?"
+#[derive(Clone, Debug)]
+pub struct PredictRequest {
+    pub id: u64,
+    pub features: [f64; NUM_FEATURES],
+}
+
+#[derive(Clone, Debug)]
+pub struct PredictResponse {
+    pub id: u64,
+    /// Predicted log2(speedup).
+    pub score: f64,
+    /// The tuning decision: apply the optimization?
+    pub use_local_memory: bool,
+    /// Size of the batch this request was served in.
+    pub batch_size: usize,
+    /// Queue + inference latency.
+    pub latency: std::time::Duration,
+}
+
+/// Internal queue entry.
+pub(crate) struct Pending {
+    pub req: PredictRequest,
+    pub enqueued: Instant,
+    pub reply: std::sync::mpsc::Sender<PredictResponse>,
+}

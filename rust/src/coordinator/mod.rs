@@ -1,0 +1,5 @@
+//! The coordinator: phase-1 training pipeline and the phase-2 batched
+//! prediction service (paper Fig. 2, both halves).
+pub mod messages;
+pub mod service;
+pub mod train;

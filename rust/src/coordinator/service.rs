@@ -1,0 +1,278 @@
+//! The prediction service: phase 2 of the paper's framework (Fig. 2,
+//! right side) as a serving system.
+//!
+//! Clients submit feature vectors; a dynamic batcher drains the queue,
+//! pads to the nearest compiled batch-size variant, and runs the batch
+//! through the PJRT forest executable. Bounded queue gives backpressure;
+//! batching policy = "wait up to `max_wait` for `max_batch` requests,
+//! ship what you have" (the classic serving tradeoff).
+
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::kernelmodel::features::NUM_FEATURES;
+use crate::ml::export::EncodedForest;
+use crate::runtime::forest_exec::ForestExecutor;
+use crate::runtime::pjrt::Engine;
+
+use super::messages::{Pending, PredictRequest, PredictResponse};
+
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// Maximum rows per PJRT batch (clamped to the largest artifact).
+    pub max_batch: usize,
+    /// How long the batcher waits to fill a batch.
+    pub max_wait: Duration,
+    /// Bounded-queue depth (backpressure beyond this).
+    pub queue_depth: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            max_batch: 4096,
+            max_wait: Duration::from_micros(200),
+            queue_depth: 16 * 1024,
+        }
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Clone, Debug, Default)]
+pub struct ServiceStats {
+    pub served: u64,
+    pub batches: u64,
+    pub rejected: u64,
+}
+
+/// Handle used by clients; cheap to clone.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: SyncSender<Pending>,
+}
+
+impl ServiceHandle {
+    /// Submit one request and wait for its response (blocking).
+    pub fn predict(&self, features: [f64; NUM_FEATURES]) -> Result<PredictResponse> {
+        let (reply_tx, reply_rx) = std::sync::mpsc::channel();
+        let req = PredictRequest { id: 0, features };
+        self.tx
+            .try_send(Pending { req, enqueued: Instant::now(), reply: reply_tx })
+            .map_err(|e| match e {
+                TrySendError::Full(_) => anyhow::anyhow!("queue full (backpressure)"),
+                TrySendError::Disconnected(_) => anyhow::anyhow!("service stopped"),
+            })?;
+        Ok(reply_rx.recv()?)
+    }
+
+    /// Fire a request with an async reply channel (for load generators).
+    pub fn submit(
+        &self,
+        id: u64,
+        features: [f64; NUM_FEATURES],
+        reply: std::sync::mpsc::Sender<PredictResponse>,
+    ) -> Result<()> {
+        self.tx
+            .try_send(Pending {
+                req: PredictRequest { id, features },
+                enqueued: Instant::now(),
+                reply,
+            })
+            .map_err(|e| match e {
+                TrySendError::Full(_) => anyhow::anyhow!("queue full (backpressure)"),
+                TrySendError::Disconnected(_) => anyhow::anyhow!("service stopped"),
+            })
+    }
+}
+
+/// The running service; dropping it stops the worker.
+pub struct Service {
+    handle: ServiceHandle,
+    worker: Option<JoinHandle<ServiceStats>>,
+}
+
+impl Service {
+    /// Start the batcher/worker thread. The engine and forest are owned
+    /// by the worker for its lifetime.
+    pub fn start(
+        engine: Arc<Engine>,
+        forest: EncodedForest,
+        cfg: ServiceConfig,
+    ) -> Result<Service> {
+        let (tx, rx) = sync_channel::<Pending>(cfg.queue_depth);
+        let worker = std::thread::Builder::new()
+            .name("lmtuner-batcher".into())
+            .spawn(move || worker_loop(engine, forest, cfg, rx))?;
+        Ok(Service { handle: ServiceHandle { tx }, worker: Some(worker) })
+    }
+
+    pub fn handle(&self) -> ServiceHandle {
+        self.handle.clone()
+    }
+
+    /// Stop and collect stats.
+    pub fn shutdown(mut self) -> ServiceStats {
+        let ServiceHandle { tx } = self.handle.clone();
+        drop(tx);
+        // Drop our handle so the channel closes once all clients are done.
+        self.handle = ServiceHandle { tx: sync_channel(1).0 };
+        self.worker
+            .take()
+            .map(|w| w.join().unwrap_or_default())
+            .unwrap_or_default()
+    }
+}
+
+fn worker_loop(
+    engine: Arc<Engine>,
+    forest: EncodedForest,
+    cfg: ServiceConfig,
+    rx: Receiver<Pending>,
+) -> ServiceStats {
+    let exec = match ForestExecutor::new(&engine, &forest) {
+        Ok(e) => e,
+        Err(err) => {
+            eprintln!("forest executor init failed: {err:#}");
+            return ServiceStats::default();
+        }
+    };
+    let max_batch = cfg.max_batch.min(exec.max_batch());
+    let mut stats = ServiceStats::default();
+    let mut batch: Vec<Pending> = Vec::with_capacity(max_batch);
+    loop {
+        batch.clear();
+        // Block for the first request.
+        match rx.recv() {
+            Ok(p) => batch.push(p),
+            Err(_) => break, // all senders gone
+        }
+        // Drain up to max_batch or until max_wait expires.
+        let deadline = Instant::now() + cfg.max_wait;
+        while batch.len() < max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(p) => batch.push(p),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let rows: Vec<Vec<f64>> =
+            batch.iter().map(|p| p.req.features.to_vec()).collect();
+        match exec.predict(&rows) {
+            Ok(preds) => {
+                let bsize = batch.len();
+                for (p, score) in batch.drain(..).zip(preds) {
+                    let resp = PredictResponse {
+                        id: p.req.id,
+                        score,
+                        use_local_memory: score > 0.0,
+                        batch_size: bsize,
+                        latency: p.enqueued.elapsed(),
+                    };
+                    let _ = p.reply.send(resp);
+                    stats.served += 1;
+                }
+                stats.batches += 1;
+            }
+            Err(err) => {
+                eprintln!("batch inference failed: {err:#}");
+                stats.rejected += batch.len() as u64;
+                batch.clear();
+            }
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::export::{encode, ExportContract};
+    use crate::ml::forest::{Forest, ForestConfig};
+    use crate::util::prng::Rng;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn toy_encoded(engine: &Engine) -> EncodedForest {
+        let nf = NUM_FEATURES;
+        let mut rng = Rng::new(7);
+        let x: Vec<Vec<f64>> = (0..nf)
+            .map(|_| (0..300).map(|_| rng.range_f64(-1.0, 1.0)).collect())
+            .collect();
+        let y: Vec<f64> =
+            (0..300).map(|i| if x[0][i] > 0.0 { 1.0 } else { -1.0 }).collect();
+        let f = Forest::fit(
+            &x,
+            &y,
+            &ForestConfig { num_trees: 20, threads: 1, ..Default::default() },
+        );
+        encode(
+            &f,
+            ExportContract {
+                num_trees: engine.manifest.num_trees,
+                max_nodes: engine.manifest.max_nodes,
+                max_depth: engine.manifest.max_depth,
+                num_features: nf,
+            },
+        )
+    }
+
+    #[test]
+    fn service_roundtrip_and_batching() {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let engine = Arc::new(Engine::new(&artifacts_dir()).unwrap());
+        let enc = toy_encoded(&engine);
+        let svc = Service::start(
+            engine,
+            enc.clone(),
+            ServiceConfig {
+                max_batch: 64,
+                max_wait: Duration::from_millis(2),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let h = svc.handle();
+
+        // Concurrent clients.
+        let mut threads = Vec::new();
+        for t in 0..4 {
+            let h = h.clone();
+            let enc = enc.clone();
+            threads.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(100 + t);
+                for _ in 0..50 {
+                    let mut feats = [0.0; NUM_FEATURES];
+                    for f in feats.iter_mut() {
+                        *f = rng.range_f64(-1.0, 1.0);
+                    }
+                    let resp = h.predict(feats).unwrap();
+                    let want = enc.predict(&feats);
+                    assert!((resp.score - want).abs() < 1e-4);
+                    assert_eq!(resp.use_local_memory, want > 0.0);
+                    assert!(resp.batch_size >= 1);
+                }
+            }));
+        }
+        for t in threads {
+            t.join().unwrap();
+        }
+        drop(h);
+        let stats = svc.shutdown();
+        assert_eq!(stats.served, 200);
+        assert!(stats.batches <= 200);
+    }
+}

@@ -1,0 +1,175 @@
+//! Phase 1 of the paper's framework (Fig. 2, left side) as a pipeline:
+//! generate synthetic kernels -> sweep launches -> measure on the
+//! simulated testbed -> train the Random Forest -> evaluate both metrics
+//! -> persist model + dataset.
+
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::gpu::spec::DeviceSpec;
+use crate::ml::forest::{Forest, ForestConfig};
+use crate::ml::metrics::{self, Accuracy};
+use crate::ml::{export, io};
+use crate::sim::exec::{MeasureConfig, SpeedupRecord};
+use crate::synth::{dataset, generator, sweep::LaunchSweep};
+use crate::util::prng::Rng;
+use crate::workloads;
+
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    /// Fraction of the paper's 100 context tuples (1.0 = paper scale).
+    pub scale: f64,
+    /// Launch configurations sampled per synthetic kernel.
+    pub configs_per_kernel: usize,
+    /// Fraction of instances used for training (paper: 0.10).
+    pub train_fraction: f64,
+    pub forest: ForestConfig,
+    pub measure: MeasureConfig,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            scale: 0.2,
+            configs_per_kernel: 24,
+            train_fraction: 0.10,
+            forest: ForestConfig::default(),
+            measure: MeasureConfig::default(),
+            seed: 0x5EED,
+        }
+    }
+}
+
+pub struct TrainOutcome {
+    pub forest: Forest,
+    pub records: Vec<SpeedupRecord>,
+    pub synth_accuracy: Accuracy,
+    pub per_benchmark: Vec<(String, Accuracy)>,
+    pub train_size: usize,
+    pub gen_seconds: f64,
+    pub fit_seconds: f64,
+}
+
+/// Run the full phase-1 pipeline.
+pub fn run(dev: &DeviceSpec, cfg: &TrainConfig) -> TrainOutcome {
+    let t0 = Instant::now();
+    let mut rng = Rng::new(cfg.seed);
+    let templates = generator::generate(&mut rng, cfg.scale);
+    let sweep = LaunchSweep::new(2048, 2048);
+    let build = dataset::BuildConfig {
+        configs_per_kernel: cfg.configs_per_kernel,
+        measure: cfg.measure,
+        seed: cfg.seed ^ 0xDA7A,
+        ..dataset::BuildConfig::default()
+    };
+    let records = dataset::build(&templates, &sweep, dev, &build);
+    let gen_seconds = t0.elapsed().as_secs_f64();
+
+    let (train, test) = dataset::split(&records, cfg.train_fraction, cfg.seed);
+    let train_size = train.len();
+    let t1 = Instant::now();
+    let forest = Forest::fit_records(&train, &cfg.forest);
+    let fit_seconds = t1.elapsed().as_secs_f64();
+
+    let synth_accuracy = metrics::evaluate_model(&test, |x| forest.decide(x));
+    drop(train);
+    drop(test);
+    let per_benchmark = evaluate_real(dev, &forest, &cfg.measure);
+
+    TrainOutcome {
+        forest,
+        records,
+        synth_accuracy,
+        per_benchmark,
+        train_size,
+        gen_seconds,
+        fit_seconds,
+    }
+}
+
+/// Evaluate a model on all eight real benchmarks (paper Fig. 6 right).
+pub fn evaluate_real(
+    dev: &DeviceSpec,
+    forest: &Forest,
+    measure: &MeasureConfig,
+) -> Vec<(String, Accuracy)> {
+    workloads::all()
+        .into_iter()
+        .map(|b| {
+            let recs: Vec<SpeedupRecord> = (b.instances)(dev)
+                .iter()
+                .map(|d| crate::sim::exec::measure(d, dev, measure))
+                .collect();
+            let refs: Vec<&SpeedupRecord> = recs.iter().collect();
+            let acc = metrics::evaluate_model(&refs, |x| forest.decide(x));
+            (b.name.to_string(), acc)
+        })
+        .collect()
+}
+
+/// Persist everything the serving side needs.
+pub fn save_outcome(out: &TrainOutcome, model_path: &Path, data_path: Option<&Path>) -> Result<()> {
+    io::save(&out.forest, model_path)?;
+    if let Some(p) = data_path {
+        dataset::save(&out.records, p)?;
+    }
+    Ok(())
+}
+
+/// Encode the trained forest under the artifact contract.
+pub fn encode_for_serving(
+    forest: &Forest,
+    manifest: &crate::runtime::pjrt::Manifest,
+) -> export::EncodedForest {
+    export::encode(
+        forest,
+        export::ExportContract {
+            num_trees: manifest.num_trees,
+            max_nodes: manifest.max_nodes,
+            max_depth: manifest.max_depth,
+            num_features: manifest.num_features,
+        },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_pipeline_end_to_end() {
+        let dev = DeviceSpec::m2090();
+        let cfg = TrainConfig {
+            scale: 0.03, // 3 tuples
+            configs_per_kernel: 6,
+            ..Default::default()
+        };
+        let out = run(&dev, &cfg);
+        assert!(out.records.len() > 1000, "{}", out.records.len());
+        assert!(out.synth_accuracy.count_based > 0.6,
+            "count {}", out.synth_accuracy.count_based);
+        assert!(out.synth_accuracy.penalty_weighted > 0.8);
+        assert_eq!(out.per_benchmark.len(), 8);
+    }
+
+    #[test]
+    fn saved_model_reloads() {
+        let dev = DeviceSpec::m2090();
+        let cfg = TrainConfig {
+            scale: 0.02,
+            configs_per_kernel: 4,
+            ..Default::default()
+        };
+        let out = run(&dev, &cfg);
+        let dir = std::env::temp_dir();
+        let mp = dir.join(format!("lmtuner-model-{}.txt", std::process::id()));
+        save_outcome(&out, &mp, None).unwrap();
+        let back = crate::ml::io::load(&mp).unwrap();
+        let probe = out.records[0].features;
+        assert!((back.predict(&probe) - out.forest.predict(&probe)).abs() < 1e-12);
+        std::fs::remove_file(&mp).ok();
+    }
+}

@@ -1,0 +1,3 @@
+//! Device model of the paper's testbed (Tesla M2090, Fermi CC 2.0).
+pub mod occupancy;
+pub mod spec;

@@ -1,0 +1,193 @@
+//! Occupancy calculator: resident blocks/warps per SM given per-block
+//! resource usage — the CUDA occupancy-calculator logic for CC 2.0.
+//!
+//! The local-memory optimization consumes extra shared memory and
+//! registers; the resulting *drop in parallelism* (paper §3, factor 3) is
+//! exactly what this module quantifies.
+
+use super::spec::DeviceSpec;
+
+/// Per-block resource usage of a kernel variant.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BlockUsage {
+    pub threads_per_block: u32,
+    pub regs_per_thread: u32,
+    pub shared_bytes_per_block: u32,
+}
+
+/// Resident-resource outcome for one SM.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Occupancy {
+    /// Concurrently resident blocks on one SM (0 = kernel cannot launch).
+    pub blocks_per_sm: u32,
+    /// Resident warps on one SM.
+    pub warps_per_sm: u32,
+    /// warps / max_warps, in [0, 1].
+    pub fraction: f64,
+    /// Which resource capped residency.
+    pub limiter: Limiter,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Limiter {
+    Threads,
+    Blocks,
+    Registers,
+    SharedMem,
+    /// Kernel cannot run at all (a single block exceeds some resource).
+    Infeasible,
+}
+
+pub fn occupancy(dev: &DeviceSpec, u: &BlockUsage) -> Occupancy {
+    let infeasible = Occupancy {
+        blocks_per_sm: 0,
+        warps_per_sm: 0,
+        fraction: 0.0,
+        limiter: Limiter::Infeasible,
+    };
+    if u.threads_per_block == 0
+        || u.threads_per_block > dev.max_threads_per_block
+        || u.regs_per_thread > dev.max_regs_per_thread
+        || u.shared_bytes_per_block > dev.shared_mem_per_sm
+    {
+        return infeasible;
+    }
+
+    let warps_per_block = dev.warps_for_threads(u.threads_per_block);
+
+    // Register allocation is per warp with `reg_alloc_unit` granularity.
+    let regs_per_warp = (u.regs_per_thread.max(1) * dev.warp_size)
+        .div_ceil(dev.reg_alloc_unit)
+        * dev.reg_alloc_unit;
+    let regs_per_block = regs_per_warp * warps_per_block;
+
+    // Shared memory allocated with `shared_alloc_unit` granularity.
+    let smem_per_block = if u.shared_bytes_per_block == 0 {
+        0
+    } else {
+        u.shared_bytes_per_block.div_ceil(dev.shared_alloc_unit)
+            * dev.shared_alloc_unit
+    };
+
+    let lim_threads = dev.max_threads_per_sm / u.threads_per_block;
+    let lim_blocks = dev.max_blocks_per_sm;
+    let lim_warps = dev.max_warps_per_sm / warps_per_block;
+    let lim_regs = if regs_per_block == 0 {
+        u32::MAX
+    } else {
+        dev.regs_per_sm / regs_per_block
+    };
+    let lim_smem = if smem_per_block == 0 {
+        u32::MAX
+    } else {
+        dev.shared_mem_per_sm / smem_per_block
+    };
+
+    let blocks = lim_threads
+        .min(lim_blocks)
+        .min(lim_warps)
+        .min(lim_regs)
+        .min(lim_smem);
+    if blocks == 0 {
+        return infeasible;
+    }
+
+    // Attribute the binding constraint (ties: report the scarcest).
+    let limiter = if blocks == lim_regs && lim_regs <= lim_smem {
+        Limiter::Registers
+    } else if blocks == lim_smem {
+        Limiter::SharedMem
+    } else if blocks == lim_threads.min(lim_warps) {
+        Limiter::Threads
+    } else {
+        Limiter::Blocks
+    };
+
+    let warps = blocks * warps_per_block;
+    Occupancy {
+        blocks_per_sm: blocks,
+        warps_per_sm: warps,
+        fraction: warps as f64 / dev.max_warps_per_sm as f64,
+        limiter,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dev() -> DeviceSpec {
+        DeviceSpec::m2090()
+    }
+
+    fn usage(t: u32, r: u32, s: u32) -> BlockUsage {
+        BlockUsage {
+            threads_per_block: t,
+            regs_per_thread: r,
+            shared_bytes_per_block: s,
+        }
+    }
+
+    #[test]
+    fn light_kernel_is_thread_limited_full_occupancy() {
+        let o = occupancy(&dev(), &usage(256, 16, 0));
+        assert_eq!(o.blocks_per_sm, 6); // 1536 / 256
+        assert_eq!(o.warps_per_sm, 48);
+        assert!((o.fraction - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn max_blocks_cap_applies() {
+        let o = occupancy(&dev(), &usage(64, 10, 0));
+        assert_eq!(o.blocks_per_sm, 8); // block-count cap, not 1536/64 = 24
+        assert_eq!(o.limiter, Limiter::Blocks);
+        assert_eq!(o.warps_per_sm, 16);
+    }
+
+    #[test]
+    fn register_pressure_limits() {
+        // 63 regs/thread, 512 threads: regs/warp = ceil(63*32/64)*64 = 2048;
+        // per block = 16 warps * 2048 = 32768 => exactly 1 block/SM.
+        let o = occupancy(&dev(), &usage(512, 63, 0));
+        assert_eq!(o.blocks_per_sm, 1);
+        assert_eq!(o.limiter, Limiter::Registers);
+    }
+
+    #[test]
+    fn shared_memory_limits() {
+        // 20 KB/block => 2 blocks fit in 48 KB.
+        let o = occupancy(&dev(), &usage(128, 16, 20 * 1024));
+        assert_eq!(o.blocks_per_sm, 2);
+        assert_eq!(o.limiter, Limiter::SharedMem);
+    }
+
+    #[test]
+    fn oversized_block_is_infeasible() {
+        assert_eq!(occupancy(&dev(), &usage(2048, 16, 0)).limiter, Limiter::Infeasible);
+        assert_eq!(
+            occupancy(&dev(), &usage(256, 16, 64 * 1024)).limiter,
+            Limiter::Infeasible
+        );
+        assert_eq!(occupancy(&dev(), &usage(256, 100, 0)).limiter, Limiter::Infeasible);
+    }
+
+    #[test]
+    fn more_smem_never_increases_occupancy() {
+        let d = dev();
+        let mut last = u32::MAX;
+        for kb in [0u32, 4, 8, 16, 24, 32, 48] {
+            let o = occupancy(&d, &usage(256, 20, kb * 1024));
+            assert!(o.blocks_per_sm <= last);
+            last = o.blocks_per_sm;
+        }
+    }
+
+    #[test]
+    fn warp_granularity_of_registers() {
+        // 33 threads = 2 warps even though only just past one warp.
+        let o = occupancy(&dev(), &usage(33, 20, 0));
+        // 2 warps/block, warp cap 48/2 = 24, block cap 8 binds.
+        assert_eq!(o.blocks_per_sm, 8);
+        assert_eq!(o.warps_per_sm, 16);
+    }
+}

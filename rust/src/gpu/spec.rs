@@ -1,0 +1,135 @@
+//! GPU device model.
+//!
+//! The paper measures on an NVIDIA Tesla M2090 (Fermi GF110, compute
+//! capability 2.0). We model that card; the spec is data, so other devices
+//! can be described for ablations (`DeviceSpec::gtx480()` etc.).
+
+/// Static hardware description of a Fermi-class GPU.
+#[derive(Clone, Debug)]
+pub struct DeviceSpec {
+    pub name: &'static str,
+    /// Streaming multiprocessors.
+    pub num_sms: u32,
+    /// Threads per warp.
+    pub warp_size: u32,
+    /// Core clock in Hz (shader clock for issue-rate purposes).
+    pub clock_hz: f64,
+    /// Max resident threads per SM.
+    pub max_threads_per_sm: u32,
+    /// Max resident blocks (workgroups) per SM.
+    pub max_blocks_per_sm: u32,
+    /// Max resident warps per SM.
+    pub max_warps_per_sm: u32,
+    /// 32-bit registers per SM.
+    pub regs_per_sm: u32,
+    /// Max registers addressable per thread (CC 2.0: 63).
+    pub max_regs_per_thread: u32,
+    /// Register allocation granularity (per-warp, CC 2.0: 64 registers).
+    pub reg_alloc_unit: u32,
+    /// Shared ("local" in OpenCL terms) memory per SM, bytes.
+    pub shared_mem_per_sm: u32,
+    /// Shared-memory allocation granularity, bytes.
+    pub shared_alloc_unit: u32,
+    /// Max threads per block.
+    pub max_threads_per_block: u32,
+    /// DRAM transaction size in bytes (128 B on Fermi).
+    pub transaction_bytes: u32,
+    /// Aggregate DRAM bandwidth, bytes/s.
+    pub mem_bandwidth: f64,
+    /// Average DRAM access latency, cycles.
+    pub mem_latency: f64,
+    /// Shared-memory access latency, cycles (mostly pipelined/hidden).
+    pub smem_latency: f64,
+    /// Issue cost of a barrier, cycles (fixed part).
+    pub barrier_base_cost: f64,
+    /// L1 cache per SM, bytes (Fermi: 16 KB with 48 KB shared config).
+    pub l1_bytes: u32,
+    /// L2 slice per SM, bytes (768 KB total / 16 SMs on GF110).
+    pub l2_bytes_per_sm: u32,
+    /// Latency of an L1/L2 hit, cycles.
+    pub cache_hit_latency: f64,
+}
+
+impl DeviceSpec {
+    /// NVIDIA Tesla M2090 — the paper's testbed (Table/Section 5).
+    pub fn m2090() -> Self {
+        DeviceSpec {
+            name: "Tesla M2090",
+            num_sms: 16,
+            warp_size: 32,
+            clock_hz: 1.3e9,
+            max_threads_per_sm: 1536,
+            max_blocks_per_sm: 8,
+            max_warps_per_sm: 48,
+            regs_per_sm: 32768,
+            max_regs_per_thread: 63,
+            reg_alloc_unit: 64,
+            shared_mem_per_sm: 48 * 1024,
+            shared_alloc_unit: 128,
+            max_threads_per_block: 1024,
+            transaction_bytes: 128,
+            mem_bandwidth: 177.0e9,
+            mem_latency: 600.0,
+            smem_latency: 24.0,
+            barrier_base_cost: 32.0,
+            l1_bytes: 16 * 1024,
+            l2_bytes_per_sm: 48 * 1024,
+            cache_hit_latency: 80.0,
+        }
+    }
+
+    /// GeForce GTX 480 — a second Fermi part for device ablations.
+    pub fn gtx480() -> Self {
+        DeviceSpec {
+            name: "GeForce GTX 480",
+            num_sms: 15,
+            mem_bandwidth: 177.4e9,
+            clock_hz: 1.4e9,
+            ..Self::m2090()
+        }
+    }
+
+    /// DRAM transaction departure delay per SM, in core cycles: how many
+    /// cycles of exclusive bandwidth one 128 B transaction costs one SM's
+    /// fair share of the memory system.
+    pub fn tx_departure_cycles(&self) -> f64 {
+        let bw_per_sm_per_cycle =
+            self.mem_bandwidth / self.num_sms as f64 / self.clock_hz;
+        self.transaction_bytes as f64 / bw_per_sm_per_cycle
+    }
+
+    /// Warps needed to hold `threads` threads.
+    pub fn warps_for_threads(&self, threads: u32) -> u32 {
+        threads.div_ceil(self.warp_size)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn m2090_basics() {
+        let d = DeviceSpec::m2090();
+        assert_eq!(d.num_sms, 16);
+        assert_eq!(d.max_warps_per_sm * d.warp_size, d.max_threads_per_sm);
+    }
+
+    #[test]
+    fn departure_delay_is_plausible() {
+        // 177 GB/s over 16 SMs at 1.3 GHz => ~8.5 B/cycle/SM => ~15 cycles
+        // per 128 B transaction.
+        let d = DeviceSpec::m2090();
+        let delta = d.tx_departure_cycles();
+        assert!((10.0..25.0).contains(&delta), "delta {delta}");
+    }
+
+    #[test]
+    fn warps_for_threads_rounds_up() {
+        let d = DeviceSpec::m2090();
+        assert_eq!(d.warps_for_threads(1), 1);
+        assert_eq!(d.warps_for_threads(32), 1);
+        assert_eq!(d.warps_for_threads(33), 2);
+        assert_eq!(d.warps_for_threads(1024), 32);
+    }
+}

@@ -1,0 +1,222 @@
+//! Home-access patterns of the synthetic kernel template (paper Fig. 4).
+//!
+//! The home coordinate of the target-array accesses is a linear function
+//! (fo, fi) of the work-unit coordinate (wu_x, wu_y) and the loop
+//! iterators (i, j). The paper designs 7 function tuples spanning the
+//! interesting corners of {data reuse} x {memory coalescing}. The figure
+//! itself is not machine-readable, so we fix 7 concrete tuples that honor
+//! every constraint the text states (N large for xy-reuse and
+//! */-reuse-row; M large for xy-reuse and */-reuse-col; labels WI(x,*) of
+//! shared arrows) and span reuse in {1, wg_w, wg_h, wg_size} and warp
+//! transactions in {1 (broadcast), 1 (coalesced), 32/wg_w, wg_w, 32}:
+//!
+//! | pattern      | home (row, col)        | reuse by | baseline warp tx |
+//! |--------------|------------------------|----------|------------------|
+//! | xy_reuse     | (i, j)                 | whole wg | broadcast: 1     |
+//! | x_reuse_row  | (wu_y, i*M + j)        | wi_x     | distinct rows    |
+//! | x_reuse_col  | (j, wu_y)              | wi_x     | adjacent cols: 1 |
+//! | y_reuse_row  | (wu_x, i*M + j)        | wi_y     | wg_w rows        |
+//! | y_reuse_col  | (j, wu_x)              | wi_y     | adjacent cols: 1 |
+//! | no_reuse_row | (wu_lin, i*M + j)      | nobody   | 32 rows          |
+//! | no_reuse_swap| (wu_x + i, wu_y + j)   | nobody   | wg_w rows        |
+//!
+//! `wu_lin` is the linearized work-unit id (one row of the target array
+//! per work unit). `no_reuse_swap` is the transposed-tile pattern (each
+//! work unit touches the (wu_x, wu_y) cell): zero reuse, fully scattered,
+//! but a *small* stageable region — the matrix-transpose shape.
+
+use super::launch::Launch;
+use std::fmt;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum HomePattern {
+    XyReuse,
+    XReuseRow,
+    XReuseCol,
+    YReuseRow,
+    YReuseCol,
+    NoReuseRow,
+    NoReuseSwap,
+}
+
+pub use HomePattern::*;
+
+impl HomePattern {
+    pub const ALL: [HomePattern; 7] = [
+        XyReuse, XReuseRow, XReuseCol, YReuseRow, YReuseCol, NoReuseRow,
+        NoReuseSwap,
+    ];
+
+    /// Trip-count value set for loop i (paper §5: 8..64 for xy-reuse and
+    /// x/y-reuse-row, else 1..8).
+    pub fn n_values(&self) -> [u32; 4] {
+        match self {
+            XyReuse | XReuseRow | YReuseRow => [8, 16, 32, 64],
+            _ => [1, 2, 4, 8],
+        }
+    }
+
+    /// Trip-count value set for loop j (8..64 for xy-reuse and
+    /// x/y-reuse-col, else 1..8).
+    pub fn m_values(&self) -> [u32; 4] {
+        match self {
+            XyReuse | XReuseCol | YReuseCol => [8, 16, 32, 64],
+            _ => [1, 2, 4, 8],
+        }
+    }
+
+    /// Average DRAM transactions induced by one warp for one target-array
+    /// access in the *unoptimized* kernel (paper feature #3; 1 = fully
+    /// coalesced / broadcast, 32 = fully scattered rows).
+    pub fn tx_per_access(&self, launch: &Launch, warp_size: u32) -> f64 {
+        let (dx, dy) = launch.warp_lanes(warp_size);
+        match self {
+            // All lanes hit the same element.
+            XyReuse => 1.0,
+            // Homes differ only through wu_y: `dy` distinct rows, one
+            // element each -> one transaction per distinct row.
+            XReuseRow => dy as f64,
+            // Homes differ only through wu_y but along columns: `dy`
+            // *adjacent* columns in one row -> single segment.
+            XReuseCol => 1.0,
+            // Homes differ through wu_x: `dx` distinct rows.
+            YReuseRow => dx as f64,
+            // `dx` adjacent columns in one row.
+            YReuseCol => 1.0,
+            // Every lane owns its own row.
+            NoReuseRow => warp_size.min(launch.wg.size()) as f64,
+            // Transposed tile: lanes along wi_x land in distinct rows.
+            NoReuseSwap => dx as f64,
+        }
+    }
+
+    /// Workitems of a workgroup that share each home access
+    /// (inter-thread sharing component of paper feature #1).
+    pub fn sharers(&self, launch: &Launch) -> f64 {
+        let wg = launch.wg;
+        match self {
+            XyReuse => wg.size() as f64,
+            XReuseRow | XReuseCol => wg.w as f64,
+            YReuseRow | YReuseCol => wg.h as f64,
+            NoReuseRow | NoReuseSwap => 1.0,
+        }
+    }
+
+    /// Footprint (rows, cols) of all home coordinates one workgroup
+    /// touches during one work-unit round, *before* the stencil apron —
+    /// the grey region of Fig. 4.
+    pub fn region(&self, launch: &Launch, n: u32, m: u32) -> (u64, u64) {
+        let wg = launch.wg;
+        let nm = n as u64 * m as u64;
+        match self {
+            XyReuse => (n as u64, m as u64),
+            XReuseRow => (wg.h as u64, nm),
+            XReuseCol => (m as u64, wg.h as u64),
+            YReuseRow => (wg.w as u64, nm),
+            YReuseCol => (m as u64, wg.w as u64),
+            NoReuseRow => (wg.size() as u64, nm),
+            NoReuseSwap => (
+                (wg.w + n - 1) as u64,
+                (wg.h + m - 1) as u64,
+            ),
+        }
+    }
+
+    /// Does the optimized copy of this pattern's region fix non-coalesced
+    /// accesses (the paper's §2 second benefit)?
+    pub fn fixes_coalescing(&self, launch: &Launch, warp_size: u32) -> bool {
+        self.tx_per_access(launch, warp_size) > 1.0
+    }
+
+    pub fn parse(s: &str) -> Option<HomePattern> {
+        Self::ALL.iter().copied().find(|p| p.to_string() == s)
+    }
+}
+
+impl fmt::Display for HomePattern {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            XyReuse => "xy_reuse",
+            XReuseRow => "x_reuse_row",
+            XReuseCol => "x_reuse_col",
+            YReuseRow => "y_reuse_row",
+            YReuseCol => "y_reuse_col",
+            NoReuseRow => "no_reuse_row",
+            NoReuseSwap => "no_reuse_swap",
+        };
+        write!(f, "{s}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernelmodel::launch::{GridGeom, WgGeom};
+
+    fn launch(w: u32, h: u32) -> Launch {
+        Launch::new(WgGeom { w, h }, GridGeom { w: 2048, h: 2048 })
+    }
+
+    #[test]
+    fn n_m_value_sets_match_paper_rules() {
+        // N large exactly for xy-reuse and x/y-reuse-row.
+        for p in HomePattern::ALL {
+            let n_large = p.n_values() == [8, 16, 32, 64];
+            let expect = matches!(p, XyReuse | XReuseRow | YReuseRow);
+            assert_eq!(n_large, expect, "{p}");
+            let m_large = p.m_values() == [8, 16, 32, 64];
+            let expect_m = matches!(p, XyReuse | XReuseCol | YReuseCol);
+            assert_eq!(m_large, expect_m, "{p}");
+        }
+    }
+
+    #[test]
+    fn transactions_span_coalescing_spectrum() {
+        let l = launch(32, 8);
+        assert_eq!(XyReuse.tx_per_access(&l, 32), 1.0);
+        assert_eq!(XReuseRow.tx_per_access(&l, 32), 1.0); // 32-wide rows
+        assert_eq!(YReuseRow.tx_per_access(&l, 32), 32.0);
+        assert_eq!(NoReuseRow.tx_per_access(&l, 32), 32.0);
+        assert_eq!(NoReuseSwap.tx_per_access(&l, 32), 32.0);
+
+        let narrow = launch(8, 32);
+        assert_eq!(XReuseRow.tx_per_access(&narrow, 32), 4.0); // 4 rows/warp
+        assert_eq!(YReuseRow.tx_per_access(&narrow, 32), 8.0);
+    }
+
+    #[test]
+    fn sharers_match_reuse_dimension() {
+        let l = launch(16, 8);
+        assert_eq!(XyReuse.sharers(&l), 128.0);
+        assert_eq!(XReuseRow.sharers(&l), 16.0);
+        assert_eq!(YReuseCol.sharers(&l), 8.0);
+        assert_eq!(NoReuseRow.sharers(&l), 1.0);
+    }
+
+    #[test]
+    fn regions_scale_with_wg_and_trip_counts() {
+        let l = launch(16, 8);
+        assert_eq!(XyReuse.region(&l, 32, 64), (32, 64));
+        assert_eq!(XReuseRow.region(&l, 16, 4), (8, 64));
+        assert_eq!(YReuseCol.region(&l, 2, 32), (32, 16));
+        assert_eq!(NoReuseRow.region(&l, 8, 8), (128, 64));
+        assert_eq!(NoReuseSwap.region(&l, 1, 1), (16, 8));
+        assert_eq!(NoReuseSwap.region(&l, 4, 8), (19, 15));
+    }
+
+    #[test]
+    fn only_scattered_patterns_need_coalescing_fix() {
+        let l = launch(32, 8);
+        assert!(!XyReuse.fixes_coalescing(&l, 32));
+        assert!(YReuseRow.fixes_coalescing(&l, 32));
+        assert!(NoReuseRow.fixes_coalescing(&l, 32));
+        assert!(NoReuseSwap.fixes_coalescing(&l, 32));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in HomePattern::ALL {
+            assert_eq!(HomePattern::parse(&p.to_string()), Some(p));
+        }
+    }
+}

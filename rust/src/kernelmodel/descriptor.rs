@@ -1,0 +1,171 @@
+//! The unified kernel descriptor: everything the simulator and the
+//! feature extractor need to know about one kernel instance.
+//!
+//! Synthetic template instances (kernelmodel::template) and the eight
+//! real-world workloads (crate::workloads) both lower to this type, which
+//! is what makes train-on-synthetic / predict-on-real possible.
+
+use super::launch::Launch;
+use crate::gpu::spec::DeviceSpec;
+
+#[derive(Clone, Debug)]
+pub struct KernelDescriptor {
+    pub name: String,
+    /// Target-array accesses per inner-loop iteration (stencil taps).
+    pub taps: u32,
+    /// Inner-loop trip count N*M per work-unit round.
+    pub inner_iters: u64,
+    /// FMA-equivalent computation ops, inner loop body / epilogue.
+    pub comp_ilb: u32,
+    pub comp_ep: u32,
+    /// Contextual (non-target) accesses: coalesced / non-coalesced,
+    /// inner loop body / epilogue.
+    pub coal_ilb: u32,
+    pub coal_ep: u32,
+    pub uncoal_ilb: u32,
+    pub uncoal_ep: u32,
+    /// Average DRAM transactions per warp for one target access in the
+    /// unoptimized kernel (1 = coalesced or broadcast).
+    pub tx_per_target_access: f64,
+    /// Transactions per warp for one non-coalesced contextual access.
+    pub uncoal_ctx_tx: f64,
+    /// Staged-region geometry including the stencil apron.
+    pub region_rows: u64,
+    pub region_cols: u64,
+    /// Paper feature #1 — average accesses per distinct staged element.
+    pub reuse: f64,
+    /// (min_row, max_row, min_col, max_col) tap offsets.
+    pub offset_bounds: (i32, i32, i32, i32),
+    /// Registers per thread, unoptimized kernel.
+    pub base_regs: u32,
+    /// Additional registers the optimization costs.
+    pub opt_extra_regs: u32,
+    pub launch: Launch,
+    /// Work-unit rounds each workitem executes.
+    pub wus_per_wi: u64,
+    /// Bytes per target-array element (4 = f32).
+    pub elem_bytes: u32,
+}
+
+impl KernelDescriptor {
+    /// Local memory the optimization uses per workgroup (paper feature #2).
+    pub fn region_bytes(&self) -> u64 {
+        self.region_rows * self.region_cols * self.elem_bytes as u64
+    }
+
+    /// Can the staged region fit in the device's local memory at all?
+    pub fn lmem_feasible(&self, dev: &DeviceSpec) -> bool {
+        self.region_bytes() <= dev.shared_mem_per_sm as u64
+    }
+
+    /// DRAM transactions needed to cooperatively copy the staged region,
+    /// fully coalesced (paper §2: row segments of one transaction width,
+    /// cyclically distributed over warps).
+    pub fn copy_transactions(&self, dev: &DeviceSpec) -> f64 {
+        let seg = dev.transaction_bytes as u64 / self.elem_bytes as u64;
+        // Each region row is copied as ceil(cols / seg) aligned segments.
+        (self.region_rows * self.region_cols.div_ceil(seg)) as f64
+    }
+
+    /// Warps per workgroup.
+    pub fn warps_per_wg(&self, dev: &DeviceSpec) -> u32 {
+        dev.warps_for_threads(self.launch.wg.size())
+    }
+
+    /// Total contextual transactions per warp per work-unit round.
+    pub fn ctx_tx_per_round(&self) -> f64 {
+        let il = self.inner_iters as f64;
+        (self.coal_ilb as f64 * il + self.coal_ep as f64)
+            + (self.uncoal_ilb as f64 * il + self.uncoal_ep as f64)
+                * self.uncoal_ctx_tx
+    }
+
+    /// Contextual memory instructions per warp per round.
+    pub fn ctx_insts_per_round(&self) -> f64 {
+        let il = self.inner_iters as f64;
+        (self.coal_ilb + self.uncoal_ilb) as f64 * il
+            + (self.coal_ep + self.uncoal_ep) as f64
+    }
+
+    /// Computation warp-instructions per round.
+    pub fn comp_insts_per_round(&self) -> f64 {
+        self.comp_ilb as f64 * self.inner_iters as f64 + self.comp_ep as f64
+    }
+
+    /// Target-array accesses per workitem per round.
+    pub fn target_insts_per_round(&self) -> f64 {
+        self.taps as f64 * self.inner_iters as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernelmodel::launch::{GridGeom, WgGeom};
+
+    pub fn dummy() -> KernelDescriptor {
+        KernelDescriptor {
+            name: "dummy".into(),
+            taps: 9,
+            inner_iters: 64,
+            comp_ilb: 10,
+            comp_ep: 5,
+            coal_ilb: 1,
+            coal_ep: 2,
+            uncoal_ilb: 1,
+            uncoal_ep: 0,
+            tx_per_target_access: 4.0,
+            uncoal_ctx_tx: 32.0,
+            region_rows: 18,
+            region_cols: 34,
+            reuse: 20.0,
+            offset_bounds: (-1, 1, -1, 1),
+            base_regs: 30,
+            opt_extra_regs: 4,
+            launch: Launch::new(
+                WgGeom { w: 16, h: 8 },
+                GridGeom { w: 512, h: 512 },
+            ),
+            wus_per_wi: 16,
+            elem_bytes: 4,
+        }
+    }
+
+    #[test]
+    fn region_bytes_and_feasibility() {
+        let dev = DeviceSpec::m2090();
+        let mut d = dummy();
+        assert_eq!(d.region_bytes(), 18 * 34 * 4);
+        assert!(d.lmem_feasible(&dev));
+        d.region_rows = 1024;
+        d.region_cols = 1024;
+        assert!(!d.lmem_feasible(&dev)); // 4 MB >> 48 KB
+    }
+
+    #[test]
+    fn copy_transactions_row_segments() {
+        let dev = DeviceSpec::m2090();
+        let d = dummy();
+        // 34 cols of f32 -> ceil(34/32) = 2 segments per row, 18 rows.
+        assert_eq!(d.copy_transactions(&dev), 36.0);
+    }
+
+    #[test]
+    fn per_round_instruction_counts() {
+        let d = dummy();
+        assert_eq!(d.comp_insts_per_round(), 10.0 * 64.0 + 5.0);
+        assert_eq!(d.target_insts_per_round(), 9.0 * 64.0);
+        assert_eq!(d.ctx_insts_per_round(), 2.0 * 64.0 + 2.0);
+        // coal: 1*64 + 2; uncoal: (1*64 + 0) * 32
+        assert_eq!(d.ctx_tx_per_round(), 66.0 + 64.0 * 32.0);
+    }
+
+    #[test]
+    fn warps_per_wg_rounds_up() {
+        let dev = DeviceSpec::m2090();
+        let mut d = dummy();
+        assert_eq!(d.warps_per_wg(&dev), 4); // 128 threads
+        d.launch.wg = WgGeom { w: 5, h: 7 }; // 35 threads
+        assert_eq!(d.warps_per_wg(&dev), 2);
+    }
+}

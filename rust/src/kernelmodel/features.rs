@@ -1,0 +1,132 @@
+//! The 18 model features (paper §4.2).
+//!
+//! The order here is THE canonical feature order across the system: the
+//! rust trainer, the CSV datasets, the tensor export, and the L1 Pallas
+//! inference kernel all index features by these positions. NUM_FEATURES
+//! must equal `python/compile/config.py::NUM_FEATURES`.
+//!
+//! Deviation from the paper's exact list (documented in DESIGN.md): the
+//! paper spends 4 slots on min/max tap offsets per dimension and 1 on
+//! workgroup size. Our stencils (like the paper's, Fig. 5) are symmetric,
+//! so min/max carry the same information as the *span*; we fold them into
+//! 2 span features and spend the freed slots on the workgroup geometry
+//! (wg_w, wg_h) and the staged-region row count. Those are required for
+//! the features to be sufficient statistics of the benefit: the
+//! cooperative copy of an R-row region costs >= R transactions (paper §2
+//! copies row segments), so two kernels with identical region *bytes* but
+//! different region *shape* have different staging costs. Total stays 18.
+
+use super::descriptor::KernelDescriptor;
+
+pub const NUM_FEATURES: usize = 18;
+
+/// Canonical feature names (also the dataset CSV header).
+pub const FEATURE_NAMES: [&str; NUM_FEATURES] = [
+    "reuse",          // 1. degree of data reuse of the staged region
+    "lmem_bytes",     // 2. local memory used per workgroup
+    "noncoal",        // 3. degree of non-coalescing (tx per warp access)
+    "num_accesses",   // 4. accesses to the target array (taps)
+    "off_row_span",   // 5a. tap offset span, row dim (max - min)
+    "off_col_span",   // 5b. tap offset span, col dim
+    "region_rows",    // 5c. staged-region rows (copy-cost shape)
+    "comp_ilb",       // 6a. computation in inner loop body
+    "comp_ep",        // 6b. computation in epilogue
+    "coal_ilb",       // 7a. coalesced ctx accesses, inner loop body
+    "uncoal_ilb",     // 7b. non-coalesced ctx accesses, inner loop body
+    "coal_ep",        // 7c. coalesced ctx accesses, epilogue
+    "uncoal_ep",      // 7d. non-coalesced ctx accesses, epilogue
+    "regs",           // 8. registers per thread (unoptimized)
+    "grid_size",      // 9a. total workitems
+    "wg_w",           // 9b. workgroup width
+    "wg_h",           // 9c. workgroup height
+    "wus_per_wi",     // 10. work units per workitem
+];
+
+/// Extract the 18-feature vector from a kernel descriptor.
+pub fn extract(d: &KernelDescriptor) -> [f64; NUM_FEATURES] {
+    let (r0, r1, c0, c1) = d.offset_bounds;
+    [
+        d.reuse,
+        d.region_bytes() as f64,
+        d.tx_per_target_access,
+        d.taps as f64,
+        (r1 - r0) as f64,
+        (c1 - c0) as f64,
+        d.region_rows as f64,
+        d.comp_ilb as f64,
+        d.comp_ep as f64,
+        d.coal_ilb as f64,
+        d.uncoal_ilb as f64,
+        d.coal_ep as f64,
+        d.uncoal_ep as f64,
+        d.base_regs as f64,
+        d.launch.total_threads() as f64,
+        d.launch.wg.w as f64,
+        d.launch.wg.h as f64,
+        d.wus_per_wi as f64,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::spec::DeviceSpec;
+    use crate::kernelmodel::launch::{GridGeom, Launch, WgGeom};
+    use crate::kernelmodel::template::Template;
+
+    #[test]
+    fn names_and_width_agree() {
+        assert_eq!(FEATURE_NAMES.len(), NUM_FEATURES);
+        let mut sorted: Vec<&str> = FEATURE_NAMES.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), NUM_FEATURES, "duplicate feature name");
+    }
+
+    #[test]
+    fn extraction_positions() {
+        let dev = DeviceSpec::m2090();
+        let launch = Launch::new(
+            WgGeom { w: 16, h: 8 },
+            GridGeom { w: 512, h: 256 },
+        );
+        let t = Template::base();
+        let d = t.descriptor(&launch, &dev);
+        let f = extract(&d);
+        assert_eq!(f[1], d.region_bytes() as f64);
+        assert_eq!(f[3], 9.0);
+        assert_eq!(f[4], 2.0); // span of -1..1
+        assert_eq!(f[6], d.region_rows as f64);
+        assert_eq!(f[14], 512.0 * 256.0);
+        assert_eq!(f[15], 16.0);
+        assert_eq!(f[16], 8.0);
+        assert_eq!(f[17], d.wus_per_wi as f64);
+        assert!(f.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn shape_disambiguates_equal_bytes() {
+        // The motivating case for the region_rows feature: same bytes,
+        // different copy cost.
+        let dev = DeviceSpec::m2090();
+        let launch = Launch::new(
+            WgGeom { w: 32, h: 32 },
+            GridGeom { w: 512, h: 512 },
+        );
+        use crate::kernelmodel::access::HomePattern;
+        let row = Template {
+            home: HomePattern::NoReuseRow,
+            n: 1,
+            m: 1,
+            radius: 0,
+            ..Template::base()
+        };
+        let swap = Template { home: HomePattern::NoReuseSwap, ..row.clone() };
+        let dr = row.descriptor(&launch, &dev);
+        let ds = swap.descriptor(&launch, &dev);
+        assert_eq!(dr.region_bytes(), ds.region_bytes());
+        let fr = extract(&dr);
+        let fs = extract(&ds);
+        assert_ne!(fr[6], fs[6], "region_rows must differ");
+    }
+}

@@ -1,0 +1,203 @@
+//! Launch configuration: 2D workgroup and grid geometry (paper §5).
+//!
+//! The paper sweeps all power-of-two 2D grid geometries with total size
+//! >= 512 and all power-of-two 2D workgroup geometries with total size
+//! <= 1024. Work units are distributed blocked across workgroups and
+//! cyclic across workitems (paper §4.1).
+
+/// Workgroup (thread-block) geometry, in workitems.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct WgGeom {
+    pub w: u32,
+    pub h: u32,
+}
+
+impl WgGeom {
+    pub fn size(&self) -> u32 {
+        self.w * self.h
+    }
+}
+
+/// Grid geometry, in *workitems* (total threads), factored 2D.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct GridGeom {
+    pub w: u32,
+    pub h: u32,
+}
+
+impl GridGeom {
+    pub fn size(&self) -> u64 {
+        self.w as u64 * self.h as u64
+    }
+}
+
+/// A complete launch configuration.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Launch {
+    pub wg: WgGeom,
+    pub grid: GridGeom,
+}
+
+impl Launch {
+    pub fn new(wg: WgGeom, grid: GridGeom) -> Launch {
+        Launch { wg, grid }
+    }
+
+    /// Total workitems.
+    pub fn total_threads(&self) -> u64 {
+        self.grid.size()
+    }
+
+    /// Workgroups in each dimension (grid is in workitems).
+    pub fn groups_x(&self) -> u32 {
+        self.grid.w / self.wg.w
+    }
+
+    pub fn groups_y(&self) -> u32 {
+        self.grid.h / self.wg.h
+    }
+
+    pub fn total_groups(&self) -> u64 {
+        self.groups_x() as u64 * self.groups_y() as u64
+    }
+
+    /// Is this launch shape-valid (wg divides grid, nonzero)?
+    pub fn valid(&self) -> bool {
+        self.wg.w > 0
+            && self.wg.h > 0
+            && self.grid.w >= self.wg.w
+            && self.grid.h >= self.wg.h
+            && self.grid.w % self.wg.w == 0
+            && self.grid.h % self.wg.h == 0
+    }
+
+    /// Work units per workitem for an `out_w x out_h` output (paper
+    /// NUM_WUS_X/Y): cyclic distribution, assumes grid divides output.
+    pub fn wus_per_wi(&self, out_w: u32, out_h: u32) -> (u32, u32) {
+        let x = (out_w / self.grid.w).max(1);
+        let y = (out_h / self.grid.h).max(1);
+        (x, y)
+    }
+
+    /// Distinct `wi_x` lanes covered by one 32-thread warp (row-major
+    /// linearization, x fastest) and distinct `wi_y` rows.
+    pub fn warp_lanes(&self, warp_size: u32) -> (u32, u32) {
+        let distinct_x = self.wg.w.min(warp_size);
+        let distinct_y = warp_size.div_ceil(self.wg.w).min(self.wg.h);
+        (distinct_x, distinct_y)
+    }
+}
+
+/// Enumerate power-of-two values in [lo, hi].
+pub fn pow2s(lo: u32, hi: u32) -> Vec<u32> {
+    let mut v = Vec::new();
+    let mut x = lo.max(1).next_power_of_two();
+    while x <= hi {
+        v.push(x);
+        x *= 2;
+    }
+    v
+}
+
+/// All workgroup geometries with power-of-two dims and total size
+/// within [1, max_threads] (paper: <= 1024).
+pub fn enumerate_wgs(max_threads: u32) -> Vec<WgGeom> {
+    let mut out = Vec::new();
+    for w in pow2s(1, max_threads) {
+        for h in pow2s(1, max_threads / w) {
+            out.push(WgGeom { w, h });
+        }
+    }
+    out
+}
+
+/// All grid geometries (in workitems) with power-of-two dims, total size
+/// >= min_total (paper: 512), covering at most (out_w, out_h) and
+/// divisible by the workgroup.
+pub fn enumerate_grids(
+    wg: WgGeom,
+    out_w: u32,
+    out_h: u32,
+    min_total: u64,
+) -> Vec<GridGeom> {
+    let mut out = Vec::new();
+    for w in pow2s(wg.w, out_w) {
+        for h in pow2s(wg.h, out_h) {
+            let g = GridGeom { w, h };
+            if g.size() >= min_total
+                && w % wg.w == 0
+                && h % wg.h == 0
+                && out_w % w == 0
+                && out_h % h == 0
+            {
+                out.push(g);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_enumeration() {
+        assert_eq!(pow2s(1, 8), vec![1, 2, 4, 8]);
+        assert_eq!(pow2s(3, 16), vec![4, 8, 16]);
+        assert!(pow2s(32, 16).is_empty());
+    }
+
+    #[test]
+    fn wg_enumeration_respects_cap() {
+        let wgs = enumerate_wgs(1024);
+        assert!(wgs.iter().all(|g| g.size() <= 1024));
+        assert!(wgs.contains(&WgGeom { w: 32, h: 32 }));
+        assert!(wgs.contains(&WgGeom { w: 1024, h: 1 }));
+        // 11 choices for w (1..1024), sum over w of |pow2s(1,1024/w)| = 66
+        assert_eq!(wgs.len(), 66);
+    }
+
+    #[test]
+    fn grid_enumeration_covers_constraints() {
+        let wg = WgGeom { w: 32, h: 8 };
+        let grids = enumerate_grids(wg, 2048, 2048, 512);
+        assert!(!grids.is_empty());
+        for g in &grids {
+            assert!(g.size() >= 512);
+            assert_eq!(g.w % wg.w, 0);
+            assert_eq!(g.h % wg.h, 0);
+            assert_eq!(2048 % g.w, 0);
+            assert_eq!(2048 % g.h, 0);
+        }
+    }
+
+    #[test]
+    fn launch_derived_quantities() {
+        let l = Launch::new(WgGeom { w: 32, h: 8 }, GridGeom { w: 256, h: 64 });
+        assert!(l.valid());
+        assert_eq!(l.groups_x(), 8);
+        assert_eq!(l.groups_y(), 8);
+        assert_eq!(l.total_groups(), 64);
+        assert_eq!(l.wus_per_wi(2048, 2048), (8, 32));
+    }
+
+    #[test]
+    fn warp_lane_decomposition() {
+        let mk = |w, h| Launch::new(WgGeom { w, h }, GridGeom { w: 1024, h: 1024 });
+        assert_eq!(mk(32, 8).warp_lanes(32), (32, 1));
+        assert_eq!(mk(16, 16).warp_lanes(32), (16, 2));
+        assert_eq!(mk(8, 8).warp_lanes(32), (8, 4));
+        assert_eq!(mk(64, 4).warp_lanes(32), (32, 1));
+        assert_eq!(mk(1, 64).warp_lanes(32), (1, 32));
+        assert_eq!(mk(4, 2).warp_lanes(32), (4, 2)); // wg smaller than warp
+    }
+
+    #[test]
+    fn invalid_launches_detected() {
+        assert!(!Launch::new(WgGeom { w: 32, h: 8 }, GridGeom { w: 100, h: 64 })
+            .valid());
+        assert!(!Launch::new(WgGeom { w: 64, h: 1 }, GridGeom { w: 32, h: 32 })
+            .valid());
+    }
+}

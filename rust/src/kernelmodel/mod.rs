@@ -1,0 +1,9 @@
+//! Kernel structure model: the synthetic template (Fig. 3/Table 1), home
+//! access patterns (Fig. 4), stencils (Fig. 5), launch geometry, the
+//! unified kernel descriptor and the 18 model features (§4.2).
+pub mod access;
+pub mod descriptor;
+pub mod features;
+pub mod launch;
+pub mod stencil;
+pub mod template;

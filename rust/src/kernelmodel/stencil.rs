@@ -1,0 +1,146 @@
+//! Stencil patterns of target-array accesses (paper Fig. 5).
+//!
+//! Accesses in the template's inner loop body are centered on a *home
+//! coordinate* with constant offsets (CO_t, CI_t); the paper uses three
+//! common shapes. Mirrors `python/compile/config.py::stencil_offsets`.
+
+use std::fmt;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum StencilPattern {
+    Rectangular,
+    Diamond,
+    Star,
+}
+
+impl StencilPattern {
+    pub const ALL: [StencilPattern; 3] =
+        [StencilPattern::Rectangular, StencilPattern::Diamond, StencilPattern::Star];
+
+    /// Tap offsets (row, col) relative to the home coordinate.
+    pub fn offsets(&self, radius: u32) -> Vec<(i32, i32)> {
+        let r = radius as i32;
+        if r == 0 {
+            return vec![(0, 0)];
+        }
+        let mut out = Vec::new();
+        for dy in -r..=r {
+            for dx in -r..=r {
+                let keep = match self {
+                    StencilPattern::Rectangular => true,
+                    StencilPattern::Diamond => dy.abs() + dx.abs() <= r,
+                    StencilPattern::Star => dy == 0 || dx == 0,
+                };
+                if keep {
+                    out.push((dy, dx));
+                }
+            }
+        }
+        out
+    }
+
+    /// Number of taps (accesses to the target array per inner iteration,
+    /// paper feature #4).
+    pub fn taps(&self, radius: u32) -> u32 {
+        let r = radius;
+        match self {
+            StencilPattern::Rectangular => (2 * r + 1) * (2 * r + 1),
+            StencilPattern::Diamond => 2 * r * r + 2 * r + 1,
+            StencilPattern::Star => {
+                if r == 0 {
+                    1
+                } else {
+                    4 * r + 1
+                }
+            }
+        }
+    }
+
+    /// (min_row, max_row, min_col, max_col) offset bounds (features #5).
+    pub fn offset_bounds(&self, radius: u32) -> (i32, i32, i32, i32) {
+        let r = radius as i32;
+        (-r, r, -r, r)
+    }
+
+    pub fn parse(s: &str) -> Option<StencilPattern> {
+        match s {
+            "rect" | "rectangular" => Some(StencilPattern::Rectangular),
+            "diamond" => Some(StencilPattern::Diamond),
+            "star" => Some(StencilPattern::Star),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for StencilPattern {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            StencilPattern::Rectangular => "rect",
+            StencilPattern::Diamond => "diamond",
+            StencilPattern::Star => "star",
+        };
+        write!(f, "{s}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tap_counts_match_formulas() {
+        for r in 0..=3 {
+            for p in StencilPattern::ALL {
+                assert_eq!(
+                    p.offsets(r).len() as u32,
+                    p.taps(r),
+                    "pattern {p} radius {r}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn radius_zero_is_single_home_tap() {
+        for p in StencilPattern::ALL {
+            assert_eq!(p.offsets(0), vec![(0, 0)]);
+        }
+    }
+
+    #[test]
+    fn star_subset_diamond_subset_rect() {
+        use std::collections::HashSet;
+        for r in 1..=3 {
+            let rect: HashSet<_> =
+                StencilPattern::Rectangular.offsets(r).into_iter().collect();
+            let dia: HashSet<_> =
+                StencilPattern::Diamond.offsets(r).into_iter().collect();
+            let star: HashSet<_> =
+                StencilPattern::Star.offsets(r).into_iter().collect();
+            assert!(star.is_subset(&dia));
+            assert!(dia.is_subset(&rect));
+            assert!(star.contains(&(0, 0)));
+        }
+    }
+
+    #[test]
+    fn bounds_cover_all_offsets() {
+        for r in 0..=3 {
+            for p in StencilPattern::ALL {
+                let (r0, r1, c0, c1) = p.offset_bounds(r);
+                for (dy, dx) in p.offsets(r) {
+                    assert!(r0 <= dy && dy <= r1);
+                    assert!(c0 <= dx && dx <= c1);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for p in StencilPattern::ALL {
+            assert_eq!(StencilPattern::parse(&p.to_string()), Some(p));
+        }
+        assert_eq!(StencilPattern::parse("hexagon"), None);
+    }
+}

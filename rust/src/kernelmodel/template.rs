@@ -1,0 +1,195 @@
+//! The synthetic kernel template (paper Fig. 3 + Table 1).
+//!
+//! A template instance fixes the 13 compile-time/run-time parameters; a
+//! `Launch` turns it into a *kernel instance*. Both lower to the unified
+//! `KernelDescriptor` the simulator and feature extractor consume.
+
+use super::access::HomePattern;
+use super::descriptor::KernelDescriptor;
+use super::launch::Launch;
+use super::stencil::StencilPattern;
+use crate::gpu::spec::DeviceSpec;
+
+/// Table 1: the 13 parameters of the synthetic kernel template.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Template {
+    /// IN_H, IN_W — target array geometry (paper fixes 2048 x 2048).
+    pub in_h: u32,
+    pub in_w: u32,
+    /// HOME_ACCESS_PATTERN — one of the seven of Fig. 4.
+    pub home: HomePattern,
+    /// N, M — trip counts of loops i and j.
+    pub n: u32,
+    pub m: u32,
+    /// STENCIL_PATTERN, STENCIL_RADIUS — Fig. 5.
+    pub stencil: StencilPattern,
+    pub radius: u32,
+    /// NUM_COMP_ILB / NUM_COMP_EP — fused-multiply-adds in the inner loop
+    /// body and the epilogue.
+    pub comp_ilb: u32,
+    pub comp_ep: u32,
+    /// NUM_COAL_ACCESSES_ILB / EP — coalesced contextual accesses (in2).
+    pub coal_ilb: u32,
+    pub coal_ep: u32,
+    /// NUM_UNCOAL_ACCESSES_ILB / EP — non-coalesced contextual accesses.
+    pub uncoal_ilb: u32,
+    pub uncoal_ep: u32,
+}
+
+impl Template {
+    /// A neutral default used as a base by tests and samplers.
+    pub fn base() -> Template {
+        Template {
+            in_h: 2048,
+            in_w: 2048,
+            home: HomePattern::XyReuse,
+            n: 16,
+            m: 16,
+            stencil: StencilPattern::Rectangular,
+            radius: 1,
+            comp_ilb: 10,
+            comp_ep: 10,
+            coal_ilb: 1,
+            coal_ep: 1,
+            uncoal_ilb: 0,
+            uncoal_ep: 0,
+        }
+    }
+
+    /// Stencil taps = accesses to the target array per inner iteration
+    /// (paper feature #4).
+    pub fn taps(&self) -> u32 {
+        self.stencil.taps(self.radius)
+    }
+
+    /// Estimated registers per thread of the *unoptimized* kernel (paper
+    /// feature #8). A deterministic proxy for what the OpenCL compiler
+    /// would allocate: base bookkeeping + address arithmetic per tap +
+    /// live temporaries for the FMA chains and contextual accesses.
+    pub fn base_regs(&self, dev: &DeviceSpec) -> u32 {
+        let r = 12
+            + 2 * self.taps().min(10)
+            + self.comp_ilb.div_ceil(6)
+            + self.comp_ep.div_ceil(10)
+            + 2 * (self.coal_ilb + self.uncoal_ilb)
+            + (self.coal_ep + self.uncoal_ep);
+        r.min(dev.max_regs_per_thread)
+    }
+
+    /// Extra registers the local-memory transform needs (staging indices,
+    /// cooperative-copy loop, barrier bookkeeping).
+    pub fn opt_extra_regs(&self, launch: &Launch, dev: &DeviceSpec) -> u32 {
+        let extra = if self.home.fixes_coalescing(launch, dev.warp_size) {
+            6
+        } else {
+            4
+        };
+        (self.base_regs(dev) + extra).min(dev.max_regs_per_thread)
+            - self.base_regs(dev)
+    }
+
+    /// Lower the template under a launch configuration to the unified
+    /// kernel descriptor.
+    pub fn descriptor(&self, launch: &Launch, dev: &DeviceSpec) -> KernelDescriptor {
+        assert!(launch.valid(), "invalid launch {launch:?}");
+        let taps = self.taps();
+        let inner_iters = self.n as u64 * self.m as u64;
+        let (rows0, cols0) = self.home.region(launch, self.n, self.m);
+        let r = self.radius as u64;
+        let (region_rows, region_cols) = (rows0 + 2 * r, cols0 + 2 * r);
+        let region_elems = region_rows * region_cols;
+
+        // Paper feature #1 — degree of data reuse: average number of
+        // accesses per distinct element of the staged region (combines
+        // inter-thread sharing with stencil-overlap reuse).
+        let total_accesses =
+            launch.wg.size() as f64 * taps as f64 * inner_iters as f64;
+        let reuse = total_accesses / region_elems as f64;
+
+        let (wx, wy) = launch.wus_per_wi(self.in_w, self.in_h);
+
+        KernelDescriptor {
+            name: format!(
+                "synth_{}_{}r{}_n{}m{}",
+                self.home, self.stencil, self.radius, self.n, self.m
+            ),
+            taps,
+            inner_iters,
+            comp_ilb: self.comp_ilb,
+            comp_ep: self.comp_ep,
+            coal_ilb: self.coal_ilb,
+            coal_ep: self.coal_ep,
+            uncoal_ilb: self.uncoal_ilb,
+            uncoal_ep: self.uncoal_ep,
+            tx_per_target_access: self.home.tx_per_access(launch, dev.warp_size),
+            uncoal_ctx_tx: dev.warp_size.min(launch.wg.size()) as f64,
+            region_rows,
+            region_cols,
+            reuse,
+            offset_bounds: self.stencil.offset_bounds(self.radius),
+            base_regs: self.base_regs(dev),
+            opt_extra_regs: self.opt_extra_regs(launch, dev),
+            launch: *launch,
+            wus_per_wi: wx as u64 * wy as u64,
+            elem_bytes: 4,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernelmodel::launch::{GridGeom, WgGeom};
+
+    fn launch() -> Launch {
+        Launch::new(WgGeom { w: 16, h: 8 }, GridGeom { w: 512, h: 256 })
+    }
+
+    #[test]
+    fn descriptor_basic_quantities() {
+        let t = Template::base();
+        let dev = DeviceSpec::m2090();
+        let d = t.descriptor(&launch(), &dev);
+        assert_eq!(d.taps, 9); // rect radius 1
+        assert_eq!(d.inner_iters, 256);
+        // xy_reuse region: (16 + 2) x (16 + 2)
+        assert_eq!((d.region_rows, d.region_cols), (18, 18));
+        // reuse = 128 wi * 9 taps * 256 iters / 324 elems
+        let expect = 128.0 * 9.0 * 256.0 / 324.0;
+        assert!((d.reuse - expect).abs() < 1e-9);
+        assert_eq!(d.wus_per_wi, 4 * 8);
+    }
+
+    #[test]
+    fn regs_monotone_in_context() {
+        let dev = DeviceSpec::m2090();
+        let mut t = Template::base();
+        let r0 = t.base_regs(&dev);
+        t.comp_ilb += 24;
+        t.coal_ilb += 3;
+        let r1 = t.base_regs(&dev);
+        assert!(r1 > r0);
+        t.comp_ilb = 10_000; // silly — must cap
+        assert_eq!(t.base_regs(&dev), dev.max_regs_per_thread);
+    }
+
+    #[test]
+    fn opt_extra_regs_capped_at_device_max() {
+        let dev = DeviceSpec::m2090();
+        let mut t = Template::base();
+        t.comp_ilb = 400; // drives base to the 63 cap
+        let l = launch();
+        assert_eq!(t.opt_extra_regs(&l, &dev), 0);
+    }
+
+    #[test]
+    fn radius_zero_star_single_tap() {
+        let mut t = Template::base();
+        t.stencil = StencilPattern::Star;
+        t.radius = 0;
+        assert_eq!(t.taps(), 1);
+        let dev = DeviceSpec::m2090();
+        let d = t.descriptor(&launch(), &dev);
+        assert_eq!(d.offset_bounds, (0, 0, 0, 0));
+    }
+}

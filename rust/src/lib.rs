@@ -1,0 +1,16 @@
+//! lmtuner: ML-based auto-tuning of the local-memory optimization on
+//! GPGPUs — a reproduction of Han & Abdelrahman (2014).
+//!
+//! See DESIGN.md for the module inventory and the experiment index.
+pub mod coordinator;
+pub mod gpu;
+pub mod kernelmodel;
+pub mod ml;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod synth;
+pub mod util;
+pub mod workloads;
+
+pub fn version() -> &'static str { env!("CARGO_PKG_VERSION") }

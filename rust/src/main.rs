@@ -1,0 +1,353 @@
+//! lmtuner CLI — the L3 coordinator entrypoint.
+//!
+//! Subcommands:
+//!   generate   build the synthetic kernel-instance dataset (CSV)
+//!   train      phase-1 pipeline: generate + simulate + fit + evaluate
+//!   eval       evaluate a saved model on a dataset / the real benchmarks
+//!   predict    one-off decision for a feature vector
+//!   serve      start the batched PJRT prediction service (demo load)
+//!   reproduce  regenerate paper figures/tables: fig1, fig6, table1-3
+//!   info       device + artifact status
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use lmtuner::coordinator::service::{Service, ServiceConfig};
+use lmtuner::coordinator::train::{self, TrainConfig};
+use lmtuner::gpu::spec::DeviceSpec;
+use lmtuner::kernelmodel::features::{FEATURE_NAMES, NUM_FEATURES};
+use lmtuner::ml::{io as model_io, metrics};
+use lmtuner::report::{figures, tables};
+use lmtuner::runtime::pjrt::Engine;
+use lmtuner::sim::exec::MeasureConfig;
+use lmtuner::synth::dataset;
+use lmtuner::util::cli::Args;
+use lmtuner::util::prng::Rng;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> &'static str {
+    "lmtuner <generate|train|eval|predict|serve|reproduce|info> [options]\n\
+     \n\
+     generate  --out data/synth.csv [--scale 0.2] [--configs 24] [--seed N]\n\
+     train     --model models/rf.txt [--data data/synth.csv] [--scale 0.2]\n\
+               [--configs 24] [--trees 20] [--mtry 4] [--train-frac 0.1]\n\
+     eval      --model models/rf.txt [--data data/synth.csv] [--real]\n\
+     predict   --model models/rf.txt --features f1,...,f18 [--artifacts DIR]\n\
+     serve     --model models/rf.txt [--artifacts artifacts] [--requests N]\n\
+               [--batch 4096] [--wait-us 200]\n\
+     reproduce --figure fig1|fig6|table1|table2|table3|all [--scale 0.2]\n\
+     info      [--artifacts artifacts]"
+}
+
+fn run() -> Result<()> {
+    let mut args = Args::parse_env().map_err(|e| anyhow::anyhow!(e))?;
+    let dev = DeviceSpec::m2090();
+    let cmd = args.subcommand().map(str::to_string);
+    match cmd.as_deref() {
+        Some("generate") => cmd_generate(&mut args, &dev),
+        Some("train") => cmd_train(&mut args, &dev),
+        Some("eval") => cmd_eval(&mut args, &dev),
+        Some("predict") => cmd_predict(&mut args),
+        Some("serve") => cmd_serve(&mut args),
+        Some("reproduce") => cmd_reproduce(&mut args, &dev),
+        Some("info") => cmd_info(&mut args, &dev),
+        _ => {
+            println!("{}", usage());
+            Ok(())
+        }
+    }
+}
+
+fn train_config(args: &mut Args) -> Result<TrainConfig> {
+    let mut cfg = TrainConfig {
+        scale: args.get_or("scale", 0.2).map_err(anyhow::Error::msg)?,
+        configs_per_kernel: args.get_or("configs", 24).map_err(anyhow::Error::msg)?,
+        train_fraction: args.get_or("train-frac", 0.10).map_err(anyhow::Error::msg)?,
+        seed: args.get_or("seed", 0x5EEDu64).map_err(anyhow::Error::msg)?,
+        ..TrainConfig::default()
+    };
+    cfg.forest.num_trees = args.get_or("trees", 20).map_err(anyhow::Error::msg)?;
+    cfg.forest.tree.mtry = args.get_or("mtry", 4).map_err(anyhow::Error::msg)?;
+    if args.flag("no-noise") {
+        cfg.measure = MeasureConfig::deterministic();
+    }
+    Ok(cfg)
+}
+
+fn cmd_generate(args: &mut Args, dev: &DeviceSpec) -> Result<()> {
+    let out = PathBuf::from(args.str_or("out", "data/synth.csv"));
+    let cfg = train_config(args)?;
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let mut rng = Rng::new(cfg.seed);
+    let templates = lmtuner::synth::generator::generate(&mut rng, cfg.scale);
+    let sweep = lmtuner::synth::sweep::LaunchSweep::new(2048, 2048);
+    let build = dataset::BuildConfig {
+        configs_per_kernel: cfg.configs_per_kernel,
+        measure: cfg.measure,
+        seed: cfg.seed ^ 0xDA7A,
+        ..dataset::BuildConfig::default()
+    };
+    let records = dataset::build(&templates, &sweep, dev, &build);
+    if let Some(dir) = out.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    dataset::save(&records, &out)?;
+    let (n, ben, geo, max) = dataset::summarize(&records);
+    println!(
+        "wrote {} instances to {} (beneficial {:.1}%, geomean {:.2}x, max {:.1}x)",
+        n,
+        out.display(),
+        100.0 * ben,
+        geo,
+        max
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &mut Args, dev: &DeviceSpec) -> Result<()> {
+    let model_path = PathBuf::from(args.str_or("model", "models/rf.txt"));
+    let data_path = args.opt_str("data").map(PathBuf::from);
+    let cfg = train_config(args)?;
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    println!(
+        "training: scale={} configs/kernel={} trees={} mtry={} train-frac={}",
+        cfg.scale,
+        cfg.configs_per_kernel,
+        cfg.forest.num_trees,
+        cfg.forest.tree.mtry,
+        cfg.train_fraction
+    );
+    let out = train::run(dev, &cfg);
+    println!(
+        "dataset: {} instances in {:.1}s; trained on {} in {:.1}s (max depth {}, max nodes {})",
+        out.records.len(),
+        out.gen_seconds,
+        out.train_size,
+        out.fit_seconds,
+        out.forest.max_depth(),
+        out.forest.max_nodes(),
+    );
+    println!("{}", figures::fig6(&out.synth_accuracy, &out.per_benchmark));
+    if let Some(dir) = model_path.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    train::save_outcome(&out, &model_path, data_path.as_deref())?;
+    println!("model saved to {}", model_path.display());
+    if let Some(p) = data_path {
+        println!("dataset saved to {}", p.display());
+    }
+    Ok(())
+}
+
+fn cmd_eval(args: &mut Args, dev: &DeviceSpec) -> Result<()> {
+    let model_path = PathBuf::from(args.str_or("model", "models/rf.txt"));
+    let data = args.opt_str("data").map(PathBuf::from);
+    let real = args.flag("real");
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let forest = model_io::load(&model_path)?;
+    if let Some(p) = data {
+        let records = dataset::load(&p)?;
+        let refs: Vec<_> = records.iter().collect();
+        let acc = metrics::evaluate_model(&refs, |x| forest.decide(x));
+        println!(
+            "{}: count {:.1}%  penalty-weighted {:.1}%  (min {:.2}, n {})",
+            p.display(),
+            100.0 * acc.count_based,
+            100.0 * acc.penalty_weighted,
+            acc.min_score,
+            acc.n
+        );
+    }
+    if real {
+        let per = train::evaluate_real(dev, &forest, &MeasureConfig::default());
+        for (name, a) in &per {
+            println!(
+                "{name:<14} count {:>5.1}%  penalty-weighted {:>5.1}%  (min {:.2}, n {})",
+                100.0 * a.count_based,
+                100.0 * a.penalty_weighted,
+                a.min_score,
+                a.n
+            );
+        }
+    }
+    Ok(())
+}
+
+fn parse_features(s: &str) -> Result<[f64; NUM_FEATURES]> {
+    let vals: Result<Vec<f64>, _> =
+        s.split(',').map(|x| x.trim().parse::<f64>()).collect();
+    let vals = vals.context("parse --features")?;
+    if vals.len() != NUM_FEATURES {
+        bail!(
+            "--features needs {} comma-separated values ({})",
+            NUM_FEATURES,
+            FEATURE_NAMES.join(",")
+        );
+    }
+    let mut out = [0.0; NUM_FEATURES];
+    out.copy_from_slice(&vals);
+    Ok(out)
+}
+
+fn cmd_predict(args: &mut Args) -> Result<()> {
+    let model_path = PathBuf::from(args.str_or("model", "models/rf.txt"));
+    let feats_str = args
+        .opt_str("features")
+        .context("--features f1,...,f18 required")?;
+    let artifacts = args.opt_str("artifacts");
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let forest = model_io::load(&model_path)?;
+    let feats = parse_features(&feats_str)?;
+    let (score, path) = if let Some(dir) = artifacts {
+        // Serve through the PJRT artifact (the production path).
+        let engine = Engine::new(Path::new(&dir))?;
+        let enc = train::encode_for_serving(&forest, &engine.manifest);
+        let exec = lmtuner::runtime::forest_exec::ForestExecutor::new(&engine, &enc)?;
+        (exec.predict(&[feats.to_vec()])?[0], "pjrt")
+    } else {
+        (forest.predict(&feats), "native")
+    };
+    println!(
+        "predicted log2(speedup) = {score:+.3} ({:.2}x) via {path} -> {}",
+        2f64.powf(score),
+        if score > 0.0 { "USE local memory" } else { "do NOT use local memory" }
+    );
+    Ok(())
+}
+
+fn cmd_serve(args: &mut Args) -> Result<()> {
+    let model_path = PathBuf::from(args.str_or("model", "models/rf.txt"));
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let requests: usize = args.get_or("requests", 10_000).map_err(anyhow::Error::msg)?;
+    let batch: usize = args.get_or("batch", 4096).map_err(anyhow::Error::msg)?;
+    let wait_us: u64 = args.get_or("wait-us", 200).map_err(anyhow::Error::msg)?;
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let forest = model_io::load(&model_path)?;
+    let engine = Arc::new(Engine::new(&artifacts)?);
+    println!("engine: platform={}", engine.platform());
+    engine.warmup()?;
+    let enc = train::encode_for_serving(&forest, &engine.manifest);
+    let svc = Service::start(
+        engine,
+        enc,
+        ServiceConfig {
+            max_batch: batch,
+            max_wait: std::time::Duration::from_micros(wait_us),
+            ..Default::default()
+        },
+    )?;
+    let h = svc.handle();
+
+    // Demo load: replay the real-benchmark instance stream.
+    let dev = DeviceSpec::m2090();
+    let mut stream: Vec<[f64; NUM_FEATURES]> = Vec::new();
+    for b in lmtuner::workloads::all() {
+        for d in (b.instances)(&dev) {
+            stream.push(lmtuner::kernelmodel::features::extract(&d));
+        }
+    }
+    let t0 = std::time::Instant::now();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let mut sent = 0usize;
+    for i in 0..requests {
+        let f = stream[i % stream.len()];
+        if h.submit(i as u64, f, tx.clone()).is_ok() {
+            sent += 1;
+        }
+    }
+    drop(tx);
+    let mut lat_us: Vec<f64> = Vec::with_capacity(sent);
+    let mut yes = 0usize;
+    for _ in 0..sent {
+        let resp = rx.recv()?;
+        lat_us.push(resp.latency.as_secs_f64() * 1e6);
+        yes += resp.use_local_memory as usize;
+    }
+    let elapsed = t0.elapsed();
+    drop(h);
+    let stats = svc.shutdown();
+    println!(
+        "served {}/{} requests in {:.2}s  ({:.0} req/s, {} batches)",
+        stats.served,
+        requests,
+        elapsed.as_secs_f64(),
+        stats.served as f64 / elapsed.as_secs_f64(),
+        stats.batches
+    );
+    println!(
+        "latency p50 {:.0}us  p95 {:.0}us  p99 {:.0}us  | decisions: {:.1}% use-lmem",
+        lmtuner::util::stats::percentile(&lat_us, 50.0),
+        lmtuner::util::stats::percentile(&lat_us, 95.0),
+        lmtuner::util::stats::percentile(&lat_us, 99.0),
+        100.0 * yes as f64 / sent.max(1) as f64
+    );
+    Ok(())
+}
+
+fn cmd_reproduce(args: &mut Args, dev: &DeviceSpec) -> Result<()> {
+    let figure = args.str_or("figure", "all");
+    let cfg = train_config(args)?;
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    match figure.as_str() {
+        "table1" => println!("{}", tables::table1()),
+        "table2" => println!("{}", tables::table2(cfg.seed, 100_000)),
+        "table3" => println!("{}", tables::table3(dev)),
+        "fig1" | "fig6" | "all" => {
+            let out = train::run(dev, &cfg);
+            if figure != "fig6" {
+                let real = figures::real_benchmark_records(dev, &cfg.measure);
+                println!("{}", figures::fig1(&out.records, &real));
+            }
+            if figure != "fig1" {
+                println!("{}", figures::fig6(&out.synth_accuracy, &out.per_benchmark));
+            }
+            if figure == "all" {
+                println!("{}", tables::table1());
+                println!("{}", tables::table2(cfg.seed, 100_000));
+                println!("{}", tables::table3(dev));
+            }
+        }
+        other => bail!("unknown --figure {other}"),
+    }
+    Ok(())
+}
+
+fn cmd_info(args: &mut Args, dev: &DeviceSpec) -> Result<()> {
+    let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    args.finish().map_err(anyhow::Error::msg)?;
+    println!("lmtuner {}", lmtuner::version());
+    println!(
+        "device model: {} ({} SMs, {} KB lmem/SM, {:.0} GB/s)",
+        dev.name,
+        dev.num_sms,
+        dev.shared_mem_per_sm / 1024,
+        dev.mem_bandwidth / 1e9
+    );
+    println!("features ({}): {}", NUM_FEATURES, FEATURE_NAMES.join(", "));
+    match Engine::new(&artifacts) {
+        Ok(engine) => {
+            println!(
+                "artifacts: {} loaded from {} (platform {})",
+                engine.manifest.artifacts.len(),
+                artifacts.display(),
+                engine.platform()
+            );
+        }
+        Err(e) => println!("artifacts: unavailable ({e}) — run `make artifacts`"),
+    }
+    Ok(())
+}

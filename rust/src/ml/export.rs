@@ -1,0 +1,285 @@
+//! Tensor encoding of a trained forest for the L1/L2 inference path.
+//!
+//! The Pallas kernel (python/compile/kernels/forest.py) traverses padded
+//! per-tree node tables: feat_idx/thresh/left/right/leaf, each [T, N],
+//! with leaves self-looping so a fixed-depth traversal is exact. This
+//! module flattens `ml::forest::Forest` into that contract, truncating
+//! over-budget subtrees to leaves that predict the subtree's training
+//! mean (stored on every split node at fit time).
+
+use super::forest::Forest;
+use super::tree::{Node, Tree};
+
+/// Sizing contract shared with the AOT artifacts. Must match
+/// `python/compile/config.py` (checked at runtime against manifest.json).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ExportContract {
+    pub num_trees: usize,
+    pub max_nodes: usize,
+    pub max_depth: usize,
+    pub num_features: usize,
+}
+
+impl Default for ExportContract {
+    fn default() -> Self {
+        ExportContract {
+            num_trees: 20,
+            max_nodes: 8192,
+            max_depth: 32,
+            num_features: crate::kernelmodel::features::NUM_FEATURES,
+        }
+    }
+}
+
+/// Flattened forest, ready to feed PJRT as literals.
+#[derive(Clone, Debug)]
+pub struct EncodedForest {
+    pub contract: ExportContract,
+    /// [T * N], row-major by tree.
+    pub feat_idx: Vec<i32>,
+    pub thresh: Vec<f32>,
+    pub left: Vec<i32>,
+    pub right: Vec<i32>,
+    pub leaf: Vec<f32>,
+    /// How many split nodes were truncated to leaves during export.
+    pub truncated: usize,
+}
+
+impl EncodedForest {
+    /// Pure-rust reference of the encoded traversal — must agree with the
+    /// Pallas kernel and (modulo truncation) with `Forest::predict`.
+    pub fn predict(&self, features: &[f64]) -> f64 {
+        let n = self.contract.max_nodes;
+        let mut total = 0.0;
+        for t in 0..self.contract.num_trees {
+            let base = t * n;
+            let mut node = 0usize;
+            for _ in 0..self.contract.max_depth {
+                let fi = self.feat_idx[base + node] as usize;
+                let go_left =
+                    (features[fi] as f32) <= self.thresh[base + node];
+                node = if go_left {
+                    self.left[base + node] as usize
+                } else {
+                    self.right[base + node] as usize
+                };
+            }
+            total += self.leaf[base + node] as f64;
+        }
+        total / self.contract.num_trees as f64
+    }
+
+    pub fn decide(&self, features: &[f64]) -> bool {
+        self.predict(features) > 0.0
+    }
+
+    /// Validity: children in range, leaves self-loop, reachable depth
+    /// bounded by the contract.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.contract.max_nodes;
+        for t in 0..self.contract.num_trees {
+            let base = t * n;
+            for i in 0..n {
+                let (l, r) = (self.left[base + i], self.right[base + i]);
+                if l < 0 || r < 0 || l as usize >= n || r as usize >= n {
+                    return Err(format!("tree {t} node {i}: child out of range"));
+                }
+            }
+            // walk from root: depth of every reachable leaf <= max_depth
+            let mut stack = vec![(0usize, 0usize)];
+            while let Some((i, d)) = stack.pop() {
+                let (l, r) =
+                    (self.left[base + i] as usize, self.right[base + i] as usize);
+                if l == i && r == i {
+                    continue; // leaf
+                }
+                if d >= self.contract.max_depth {
+                    return Err(format!("tree {t}: split deeper than contract"));
+                }
+                stack.push((l, d + 1));
+                stack.push((r, d + 1));
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Encode a forest under the contract. Panics if the forest has more
+/// trees than the contract (pad smaller forests with zero-leaf trees).
+pub fn encode(forest: &Forest, contract: ExportContract) -> EncodedForest {
+    assert!(
+        forest.trees.len() <= contract.num_trees,
+        "forest has {} trees, contract allows {}",
+        forest.trees.len(),
+        contract.num_trees
+    );
+    let n = contract.max_nodes;
+    let t = contract.num_trees;
+    let mut enc = EncodedForest {
+        contract,
+        feat_idx: vec![0; t * n],
+        thresh: vec![0.0; t * n],
+        left: Vec::with_capacity(t * n),
+        right: Vec::with_capacity(t * n),
+        leaf: vec![0.0; t * n],
+        truncated: 0,
+    };
+    // Default: every node is a self-looping zero leaf.
+    for _ in 0..t {
+        for i in 0..n {
+            enc.left.push(i as i32);
+            enc.right.push(i as i32);
+        }
+    }
+    // NOTE: when forest.trees.len() < t, the padded zero-leaf trees would
+    // bias the mean; scale real leaves so the sum/t matches the true mean.
+    let scale = t as f64 / forest.trees.len() as f64;
+    for (ti, tree) in forest.trees.iter().enumerate() {
+        let truncated = encode_tree(tree, ti, scale as f32, &mut enc);
+        enc.truncated += truncated;
+    }
+    enc
+}
+
+/// DFS-encode one tree into slot `ti`; returns #truncated splits.
+fn encode_tree(tree: &Tree, ti: usize, scale: f32, enc: &mut EncodedForest) -> usize {
+    let n = enc.contract.max_nodes;
+    let base = ti * n;
+    let mut next_free = 1usize; // slot 0 = root
+    let mut truncated = 0usize;
+    // stack of (source node, dest slot, depth)
+    let mut stack = vec![(0usize, 0usize, 0usize)];
+    while let Some((src, dst, depth)) = stack.pop() {
+        match &tree.nodes[src] {
+            Node::Leaf { value } => {
+                enc.leaf[base + dst] = *value as f32 * scale;
+                enc.left[base + dst] = dst as i32;
+                enc.right[base + dst] = dst as i32;
+            }
+            Node::Split { feature, threshold, left, right, mean } => {
+                let out_of_budget = next_free + 2 > n;
+                let out_of_depth = depth + 1 > enc.contract.max_depth;
+                if out_of_budget || out_of_depth {
+                    // Truncate: leaf predicting the subtree's training mean.
+                    truncated += 1;
+                    enc.leaf[base + dst] = *mean as f32 * scale;
+                    enc.left[base + dst] = dst as i32;
+                    enc.right[base + dst] = dst as i32;
+                } else {
+                    let l = next_free;
+                    let r = next_free + 1;
+                    next_free += 2;
+                    enc.feat_idx[base + dst] = *feature as i32;
+                    enc.thresh[base + dst] = *threshold as f32;
+                    enc.left[base + dst] = l as i32;
+                    enc.right[base + dst] = r as i32;
+                    stack.push((*left, l, depth + 1));
+                    stack.push((*right, r, depth + 1));
+                }
+            }
+        }
+    }
+    truncated
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::forest::ForestConfig;
+    use crate::util::prng::Rng;
+
+    fn toy_forest(trees: usize) -> (Forest, Vec<Vec<f64>>) {
+        let mut rng = Rng::new(31);
+        let rows: Vec<Vec<f64>> = (0..400)
+            .map(|_| {
+                (0..crate::kernelmodel::features::NUM_FEATURES)
+                    .map(|_| rng.range_f64(-1.0, 1.0))
+                    .collect()
+            })
+            .collect();
+        let y: Vec<f64> = rows
+            .iter()
+            .map(|r| if r[0] + r[3] > 0.0 { 1.0 } else { -1.0 })
+            .collect();
+        let x: Vec<Vec<f64>> = (0..rows[0].len())
+            .map(|f| rows.iter().map(|r| r[f]).collect())
+            .collect();
+        let cfg = ForestConfig { num_trees: trees, threads: 2, ..Default::default() };
+        (Forest::fit(&x, &y, &cfg), rows)
+    }
+
+    #[test]
+    fn encoded_matches_native_when_untruncated() {
+        let (f, rows) = toy_forest(5);
+        let contract = ExportContract {
+            num_trees: 5,
+            max_nodes: 8192,
+            max_depth: 64,
+            ..Default::default()
+        };
+        let enc = encode(&f, contract);
+        assert_eq!(enc.truncated, 0);
+        enc.validate().unwrap();
+        for r in rows.iter().take(50) {
+            let a = f.predict(r);
+            let b = enc.predict(r);
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn truncation_degrades_gracefully() {
+        let (f, rows) = toy_forest(5);
+        let contract = ExportContract {
+            num_trees: 5,
+            max_nodes: 16, // force truncation
+            max_depth: 3,
+            ..Default::default()
+        };
+        let enc = encode(&f, contract);
+        assert!(enc.truncated > 0);
+        enc.validate().unwrap();
+        // Decisions still mostly agree away from the boundary.
+        let mut agree = 0;
+        let mut total = 0;
+        for r in rows.iter().take(200) {
+            if f.predict(r).abs() < 0.4 {
+                continue;
+            }
+            total += 1;
+            if enc.decide(r) == f.decide(r) {
+                agree += 1;
+            }
+        }
+        assert!(
+            agree as f64 / total.max(1) as f64 > 0.8,
+            "{agree}/{total}"
+        );
+    }
+
+    #[test]
+    fn padded_trees_scale_correction() {
+        let (f, rows) = toy_forest(5);
+        let contract = ExportContract {
+            num_trees: 20, // 15 padded zero trees
+            max_nodes: 8192,
+            max_depth: 64,
+            ..Default::default()
+        };
+        let enc = encode(&f, contract);
+        enc.validate().unwrap();
+        for r in rows.iter().take(50) {
+            let a = f.predict(r);
+            let b = enc.predict(r);
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "contract allows")]
+    fn too_many_trees_panics() {
+        let (f, _) = toy_forest(5);
+        let contract = ExportContract { num_trees: 3, ..Default::default() };
+        encode(&f, contract);
+    }
+}

@@ -1,0 +1,185 @@
+//! Random Forest regression (paper §5.1: Weka RF, 20 trees, 4 attributes
+//! per node, unlimited depth), built from scratch on `ml::tree`.
+//!
+//! The forest regresses log2(kernel speedup); `decide()` thresholds the
+//! prediction at 0 (speedup 1.0) to produce the optimize/don't decision.
+
+use crate::kernelmodel::features::NUM_FEATURES;
+use crate::sim::exec::SpeedupRecord;
+use crate::util::pool::parallel_map;
+use crate::util::prng::Rng;
+
+use super::tree::{Tree, TreeConfig};
+
+#[derive(Clone, Copy, Debug)]
+pub struct ForestConfig {
+    /// Number of trees (paper: 20).
+    pub num_trees: usize,
+    pub tree: TreeConfig,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl Default for ForestConfig {
+    fn default() -> Self {
+        ForestConfig {
+            num_trees: 20,
+            tree: TreeConfig::default(),
+            seed: 0xF0_4E57,
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Forest {
+    pub trees: Vec<Tree>,
+    pub config_summary: String,
+}
+
+impl Forest {
+    /// Fit on dataset records: features -> log2(speedup).
+    pub fn fit_records(records: &[&SpeedupRecord], cfg: &ForestConfig) -> Forest {
+        let x: Vec<Vec<f64>> = (0..NUM_FEATURES)
+            .map(|f| records.iter().map(|r| r.features[f]).collect())
+            .collect();
+        let y: Vec<f64> = records.iter().map(|r| r.target()).collect();
+        Self::fit(&x, &y, cfg)
+    }
+
+    /// Fit on column-major features and targets.
+    pub fn fit(x: &[Vec<f64>], y: &[f64], cfg: &ForestConfig) -> Forest {
+        assert!(!y.is_empty(), "empty training set");
+        let n = y.len();
+        let mut root = Rng::new(cfg.seed);
+        let seeds: Vec<u64> = (0..cfg.num_trees).map(|_| root.next_u64()).collect();
+        let trees = parallel_map(&seeds, cfg.threads, |&seed| {
+            let mut rng = Rng::new(seed);
+            // Bootstrap sample (with replacement), classic bagging.
+            let mut idx: Vec<usize> =
+                (0..n).map(|_| rng.below(n as u64) as usize).collect();
+            Tree::fit(x, y, &mut idx, cfg.tree, &mut rng)
+        });
+        Forest {
+            trees,
+            config_summary: format!(
+                "trees={} mtry={} min_leaf={} max_depth={}",
+                cfg.num_trees,
+                cfg.tree.mtry,
+                cfg.tree.min_samples_leaf,
+                cfg.tree.max_depth
+            ),
+        }
+    }
+
+    /// Predicted log2(speedup).
+    pub fn predict(&self, features: &[f64]) -> f64 {
+        let s: f64 = self.trees.iter().map(|t| t.predict(features)).sum();
+        s / self.trees.len() as f64
+    }
+
+    /// The auto-tuning decision: apply the optimization?
+    pub fn decide(&self, features: &[f64]) -> bool {
+        self.predict(features) > 0.0
+    }
+
+    pub fn predict_batch(&self, rows: &[&[f64]]) -> Vec<f64> {
+        rows.iter().map(|r| self.predict(r)).collect()
+    }
+
+    pub fn max_depth(&self) -> usize {
+        self.trees.iter().map(|t| t.depth()).max().unwrap_or(0)
+    }
+
+    pub fn max_nodes(&self) -> usize {
+        self.trees.iter().map(|t| t.nodes.len()).max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_problem(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+        // y = sign-ish function of two features with interaction.
+        let mut rng = Rng::new(seed);
+        let rows: Vec<(f64, f64, f64)> = (0..n)
+            .map(|_| {
+                let a = rng.range_f64(-2.0, 2.0);
+                let b = rng.range_f64(-2.0, 2.0);
+                let y = if a * b > 0.0 { 1.5 } else { -1.5 };
+                (a, b, y + 0.05 * rng.normal())
+            })
+            .collect();
+        let x = vec![
+            rows.iter().map(|r| r.0).collect(),
+            rows.iter().map(|r| r.1).collect(),
+        ];
+        let y = rows.iter().map(|r| r.2).collect();
+        (x, y)
+    }
+
+    #[test]
+    fn learns_xor_like_interaction() {
+        let (x, y) = toy_problem(2000, 42);
+        let cfg = ForestConfig {
+            num_trees: 10,
+            threads: 2,
+            ..ForestConfig::default()
+        };
+        let f = Forest::fit(&x, &y, &cfg);
+        let mut correct = 0;
+        let mut rng = Rng::new(99);
+        let trials = 500;
+        for _ in 0..trials {
+            let a = rng.range_f64(-2.0, 2.0);
+            let b = rng.range_f64(-2.0, 2.0);
+            if a.abs() < 0.2 || b.abs() < 0.2 {
+                correct += 1; // too close to the boundary to grade
+                continue;
+            }
+            let want = a * b > 0.0;
+            if f.decide(&[a, b]) == want {
+                correct += 1;
+            }
+        }
+        assert!(
+            correct as f64 / trials as f64 > 0.9,
+            "accuracy {}",
+            correct as f64 / trials as f64
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (x, y) = toy_problem(300, 7);
+        let cfg = ForestConfig { num_trees: 5, threads: 3, ..Default::default() };
+        let a = Forest::fit(&x, &y, &cfg);
+        let b = Forest::fit(&x, &y, &cfg);
+        for p in [[0.3, -0.7], [1.0, 1.0], [-1.5, 0.2]] {
+            assert_eq!(a.predict(&p), b.predict(&p));
+        }
+    }
+
+    #[test]
+    fn forest_averages_trees() {
+        let (x, y) = toy_problem(300, 8);
+        let cfg = ForestConfig { num_trees: 4, threads: 1, ..Default::default() };
+        let f = Forest::fit(&x, &y, &cfg);
+        let p = [0.5, 0.5];
+        let manual: f64 =
+            f.trees.iter().map(|t| t.predict(&p)).sum::<f64>() / 4.0;
+        assert!((f.predict(&p) - manual).abs() < 1e-12);
+    }
+
+    #[test]
+    fn single_tree_forest_works() {
+        let (x, y) = toy_problem(100, 9);
+        let cfg = ForestConfig { num_trees: 1, threads: 1, ..Default::default() };
+        let f = Forest::fit(&x, &y, &cfg);
+        assert_eq!(f.trees.len(), 1);
+        assert!(f.predict(&[1.0, 1.0]).is_finite());
+    }
+}

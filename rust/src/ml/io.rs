@@ -1,0 +1,160 @@
+//! Forest persistence: a compact line-oriented text format (serde is not
+//! available). One header line, then one line per node per tree.
+//!
+//! Format v1:
+//!   lmtuner-forest v1 trees=<T>
+//!   tree <i> nodes=<n>
+//!   S <feature> <threshold> <left> <right> <mean>
+//!   L <value>
+//!   ...
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::forest::Forest;
+use super::tree::{Node, Tree};
+
+pub fn save(forest: &Forest, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "lmtuner-forest v1 trees={}", forest.trees.len())?;
+    writeln!(w, "# {}", forest.config_summary)?;
+    for (i, t) in forest.trees.iter().enumerate() {
+        writeln!(w, "tree {i} nodes={}", t.nodes.len())?;
+        for n in &t.nodes {
+            match n {
+                Node::Split { feature, threshold, left, right, mean } => {
+                    writeln!(w, "S {feature} {threshold:e} {left} {right} {mean:e}")?;
+                }
+                Node::Leaf { value } => writeln!(w, "L {value:e}")?,
+            }
+        }
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<Forest> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut lines = std::io::BufReader::new(f).lines();
+    let header = lines.next().context("empty forest file")??;
+    let trees_expected: usize = header
+        .strip_prefix("lmtuner-forest v1 trees=")
+        .with_context(|| format!("bad header {header:?}"))?
+        .parse()?;
+    let mut trees: Vec<Tree> = Vec::with_capacity(trees_expected);
+    let mut current: Option<(usize, Vec<Node>)> = None;
+    for line in lines {
+        let line = line?;
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix("tree ") {
+            if let Some((_, nodes)) = current.take() {
+                trees.push(Tree { nodes });
+            }
+            let nodes_part = rest
+                .split_once(" nodes=")
+                .with_context(|| format!("bad tree line {line:?}"))?;
+            let n: usize = nodes_part.1.parse()?;
+            current = Some((n, Vec::with_capacity(n)));
+        } else if let Some((_, ref mut nodes)) = current {
+            let mut it = line.split_whitespace();
+            match it.next() {
+                Some("S") => {
+                    let feature: usize = it.next().context("S feature")?.parse()?;
+                    let threshold: f64 = it.next().context("S thr")?.parse()?;
+                    let left: usize = it.next().context("S left")?.parse()?;
+                    let right: usize = it.next().context("S right")?.parse()?;
+                    let mean: f64 = it.next().context("S mean")?.parse()?;
+                    nodes.push(Node::Split { feature, threshold, left, right, mean });
+                }
+                Some("L") => {
+                    let value: f64 = it.next().context("L value")?.parse()?;
+                    nodes.push(Node::Leaf { value });
+                }
+                other => bail!("bad node line {other:?}"),
+            }
+        } else {
+            bail!("node line before any tree header: {line:?}");
+        }
+    }
+    if let Some((_, nodes)) = current.take() {
+        trees.push(Tree { nodes });
+    }
+    if trees.len() != trees_expected {
+        bail!("expected {trees_expected} trees, found {}", trees.len());
+    }
+    for (i, t) in trees.iter().enumerate() {
+        t.validate().map_err(|e| anyhow::anyhow!("tree {i}: {e}"))?;
+    }
+    Ok(Forest { trees, config_summary: format!("loaded from {}", path.display()) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::forest::ForestConfig;
+    use crate::util::prng::Rng;
+
+    fn toy_forest() -> Forest {
+        let mut rng = Rng::new(3);
+        let x: Vec<Vec<f64>> = (0..3)
+            .map(|_| (0..200).map(|_| rng.range_f64(-1.0, 1.0)).collect())
+            .collect();
+        let y: Vec<f64> =
+            (0..200).map(|i| x[0][i] * 2.0 + x[2][i]).collect();
+        Forest::fit(&x, &y, &ForestConfig { num_trees: 4, threads: 1, ..Default::default() })
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("lmtuner-forest-{name}-{}", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_preserves_predictions() {
+        let f = toy_forest();
+        let path = tmp("rt");
+        save(&f, &path).unwrap();
+        let g = load(&path).unwrap();
+        assert_eq!(f.trees.len(), g.trees.len());
+        let mut rng = Rng::new(9);
+        for _ in 0..50 {
+            let p = [
+                rng.range_f64(-1.0, 1.0),
+                rng.range_f64(-1.0, 1.0),
+                rng.range_f64(-1.0, 1.0),
+            ];
+            assert!((f.predict(&p) - g.predict(&p)).abs() < 1e-12);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_garbage() {
+        let path = tmp("bad");
+        std::fs::write(&path, "not a forest\n").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::write(&path, "lmtuner-forest v1 trees=2\ntree 0 nodes=1\nL 0.5\n")
+            .unwrap();
+        assert!(load(&path).is_err(), "tree count mismatch accepted");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_validates_structure() {
+        let path = tmp("cycle");
+        // split pointing at itself -> invalid
+        std::fs::write(
+            &path,
+            "lmtuner-forest v1 trees=1\ntree 0 nodes=1\nS 0 0.0 0 0 0.0\n",
+        )
+        .unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,137 @@
+//! The paper's two accuracy metrics (§5.1).
+//!
+//! * **Count-based accuracy**: fraction of instances where the model's
+//!   use/don't-use decision matches the oracle decision.
+//! * **Penalty-weighted accuracy**: a mis-prediction scores the
+//!   performance ratio achieved/optimal (in (0,1)) instead of 0 — the
+//!   percentage of oracle performance the model's decisions deliver.
+//!   Reported with min/max per-instance scores (the Fig. 6 error bars).
+
+use crate::sim::exec::SpeedupRecord;
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Accuracy {
+    pub count_based: f64,
+    pub penalty_weighted: f64,
+    /// Worst per-instance penalty-weighted score.
+    pub min_score: f64,
+    /// Best per-instance penalty-weighted score.
+    pub max_score: f64,
+    pub n: usize,
+}
+
+/// Per-instance penalty-weighted score of deciding `use_lmem` when the
+/// true speedup is `speedup` (= t_base / t_opt):
+///   correct        -> 1
+///   said yes, lost -> t_best / t_chosen = speedup (< 1)
+///   said no, lost  -> 1 / speedup       (< 1)
+pub fn instance_score(speedup: f64, use_lmem: bool) -> f64 {
+    let oracle = speedup > 1.0;
+    if use_lmem == oracle {
+        1.0
+    } else if use_lmem {
+        speedup.min(1.0)
+    } else {
+        (1.0 / speedup).min(1.0)
+    }
+}
+
+/// Evaluate decisions against oracle records.
+pub fn evaluate(records: &[&SpeedupRecord], decisions: &[bool]) -> Accuracy {
+    assert_eq!(records.len(), decisions.len());
+    if records.is_empty() {
+        return Accuracy::default();
+    }
+    let mut correct = 0usize;
+    let mut sum = 0.0;
+    let mut min = f64::INFINITY;
+    let mut max = f64::NEG_INFINITY;
+    for (r, &d) in records.iter().zip(decisions) {
+        if d == r.beneficial() {
+            correct += 1;
+        }
+        let s = instance_score(r.speedup, d);
+        sum += s;
+        min = min.min(s);
+        max = max.max(s);
+    }
+    Accuracy {
+        count_based: correct as f64 / records.len() as f64,
+        penalty_weighted: sum / records.len() as f64,
+        min_score: min,
+        max_score: max,
+        n: records.len(),
+    }
+}
+
+/// Evaluate a prediction function (e.g. the forest) on records.
+pub fn evaluate_model<F: FnMut(&[f64]) -> bool>(
+    records: &[&SpeedupRecord],
+    mut decide: F,
+) -> Accuracy {
+    let decisions: Vec<bool> =
+        records.iter().map(|r| decide(&r.features)).collect();
+    evaluate(records, &decisions)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernelmodel::features::NUM_FEATURES;
+
+    fn rec(speedup: f64) -> SpeedupRecord {
+        SpeedupRecord {
+            name: "t".into(),
+            features: [0.0; NUM_FEATURES],
+            speedup,
+            baseline_time: 1.0,
+            optimized_time: 1.0 / speedup,
+        }
+    }
+
+    #[test]
+    fn perfect_decisions_score_one() {
+        let rs = [rec(2.0), rec(0.5), rec(10.0)];
+        let refs: Vec<&SpeedupRecord> = rs.iter().collect();
+        let a = evaluate(&refs, &[true, false, true]);
+        assert_eq!(a.count_based, 1.0);
+        assert_eq!(a.penalty_weighted, 1.0);
+        assert_eq!(a.min_score, 1.0);
+    }
+
+    #[test]
+    fn wrong_yes_scores_speedup() {
+        // speedup 0.5, said yes: we run at half the oracle's speed.
+        assert_eq!(instance_score(0.5, true), 0.5);
+        // speedup 4, said no: we forgo 4x.
+        assert_eq!(instance_score(4.0, false), 0.25);
+    }
+
+    #[test]
+    fn penalty_weighted_exceeds_count_based() {
+        // All decisions wrong but mildly: count = 0, penalty > 0.
+        let rs = [rec(1.25), rec(0.8)];
+        let refs: Vec<&SpeedupRecord> = rs.iter().collect();
+        let a = evaluate(&refs, &[false, true]);
+        assert_eq!(a.count_based, 0.0);
+        assert!(a.penalty_weighted > 0.75);
+        assert!(a.penalty_weighted < 1.0);
+    }
+
+    #[test]
+    fn min_max_track_extremes() {
+        let rs = [rec(10.0), rec(2.0), rec(0.9)];
+        let refs: Vec<&SpeedupRecord> = rs.iter().collect();
+        // miss the 10x, hit the others
+        let a = evaluate(&refs, &[false, true, false]);
+        assert!((a.min_score - 0.1).abs() < 1e-12);
+        assert_eq!(a.max_score, 1.0);
+    }
+
+    #[test]
+    fn empty_input_is_zeroed() {
+        let a = evaluate(&[], &[]);
+        assert_eq!(a.n, 0);
+        assert_eq!(a.count_based, 0.0);
+    }
+}

@@ -1,0 +1,9 @@
+//! Machine-learning substrate built from scratch: CART regression trees,
+//! Random Forest (paper §5.1: 20 trees, 4 attributes/node), the paper's
+//! two accuracy metrics, tensor export for the PJRT inference path, and
+//! model persistence.
+pub mod export;
+pub mod forest;
+pub mod io;
+pub mod metrics;
+pub mod tree;

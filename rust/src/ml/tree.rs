@@ -1,0 +1,350 @@
+//! CART regression tree (the Random-Forest base learner).
+//!
+//! Variance-reduction splits over a random feature subset per node
+//! (`mtry`), grown to purity subject to `min_samples_leaf` — matching
+//! Weka's RandomTree as used by the paper (20 trees, 4 attributes/node,
+//! unlimited depth).
+
+use crate::util::prng::Rng;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Node {
+    Split {
+        feature: usize,
+        /// Go left iff x[feature] <= threshold.
+        threshold: f64,
+        left: usize,
+        right: usize,
+        /// Mean target of the training samples reaching this node (used
+        /// when depth-truncating for tensor export).
+        mean: f64,
+    },
+    Leaf {
+        value: f64,
+    },
+}
+
+#[derive(Clone, Debug)]
+pub struct Tree {
+    /// Node 0 is the root.
+    pub nodes: Vec<Node>,
+}
+
+#[derive(Clone, Copy, Debug)]
+pub struct TreeConfig {
+    /// Features considered per split (paper: 4).
+    pub mtry: usize,
+    /// Minimum samples in a leaf.
+    pub min_samples_leaf: usize,
+    /// Hard depth cap (large = effectively unlimited).
+    pub max_depth: usize,
+}
+
+impl Default for TreeConfig {
+    fn default() -> Self {
+        TreeConfig { mtry: 4, min_samples_leaf: 1, max_depth: 64 }
+    }
+}
+
+struct Builder<'a> {
+    x: &'a [Vec<f64>], // column-major: x[feature][sample]
+    y: &'a [f64],
+    cfg: TreeConfig,
+    nodes: Vec<Node>,
+}
+
+impl Tree {
+    /// Fit on (x columns, y) using the provided sample indices (the
+    /// bootstrap sample). `x` is column-major: x[f][i] is feature f of
+    /// sample i.
+    pub fn fit(
+        x: &[Vec<f64>],
+        y: &[f64],
+        indices: &mut [usize],
+        cfg: TreeConfig,
+        rng: &mut Rng,
+    ) -> Tree {
+        assert!(!x.is_empty() && !indices.is_empty());
+        let mut b = Builder { x, y, cfg, nodes: Vec::new() };
+        b.nodes.push(Node::Leaf { value: 0.0 }); // placeholder root
+        b.grow(0, indices, 0, rng);
+        Tree { nodes: b.nodes }
+    }
+
+    pub fn predict(&self, features: &[f64]) -> f64 {
+        let mut i = 0;
+        loop {
+            match &self.nodes[i] {
+                Node::Leaf { value } => return *value,
+                Node::Split { feature, threshold, left, right, .. } => {
+                    i = if features[*feature] <= *threshold { *left } else { *right };
+                }
+            }
+        }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth_from(0)
+    }
+
+    fn depth_from(&self, i: usize) -> usize {
+        match &self.nodes[i] {
+            Node::Leaf { .. } => 0,
+            Node::Split { left, right, .. } => {
+                1 + self.depth_from(*left).max(self.depth_from(*right))
+            }
+        }
+    }
+
+    pub fn num_leaves(&self) -> usize {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n, Node::Leaf { .. }))
+            .count()
+    }
+
+    /// Structural validity: children in range, exactly one root, no node
+    /// reachable twice (tree, not DAG). Used by property tests.
+    pub fn validate(&self) -> Result<(), String> {
+        let n = self.nodes.len();
+        let mut seen = vec![false; n];
+        let mut stack = vec![0usize];
+        while let Some(i) = stack.pop() {
+            if i >= n {
+                return Err(format!("child {i} out of range {n}"));
+            }
+            if seen[i] {
+                return Err(format!("node {i} reachable twice"));
+            }
+            seen[i] = true;
+            if let Node::Split { left, right, .. } = &self.nodes[i] {
+                stack.push(*left);
+                stack.push(*right);
+            }
+        }
+        if seen.iter().any(|s| !s) {
+            return Err("unreachable nodes".into());
+        }
+        Ok(())
+    }
+}
+
+impl<'a> Builder<'a> {
+    fn grow(&mut self, node: usize, idx: &mut [usize], depth: usize, rng: &mut Rng) {
+        let mean = idx.iter().map(|&i| self.y[i]).sum::<f64>() / idx.len() as f64;
+
+        if idx.len() < 2 * self.cfg.min_samples_leaf || depth >= self.cfg.max_depth {
+            self.nodes[node] = Node::Leaf { value: mean };
+            return;
+        }
+
+        match self.best_split(idx, rng) {
+            None => self.nodes[node] = Node::Leaf { value: mean },
+            Some((feature, threshold)) => {
+                // Partition in place.
+                let mid = partition(idx, |i| self.x[feature][i] <= threshold);
+                if mid == 0 || mid == idx.len() {
+                    self.nodes[node] = Node::Leaf { value: mean };
+                    return;
+                }
+                let left = self.nodes.len();
+                self.nodes.push(Node::Leaf { value: 0.0 });
+                let right = self.nodes.len();
+                self.nodes.push(Node::Leaf { value: 0.0 });
+                self.nodes[node] = Node::Split { feature, threshold, left, right, mean };
+                let (l, r) = idx.split_at_mut(mid);
+                self.grow(left, l, depth + 1, rng);
+                self.grow(right, r, depth + 1, rng);
+            }
+        }
+    }
+
+    /// Best (feature, threshold) by SSE reduction over an `mtry`-subset.
+    fn best_split(&self, idx: &[usize], rng: &mut Rng) -> Option<(usize, f64)> {
+        let nf = self.x.len();
+        let mtry = self.cfg.mtry.min(nf);
+        let mut feats = rng.sample_indices(nf, mtry);
+        // Deterministic tie-break order.
+        feats.sort_unstable();
+
+        let n = idx.len() as f64;
+        let sum: f64 = idx.iter().map(|&i| self.y[i]).sum();
+        let parent_score = sum * sum / n; // constant term dropped
+
+        let mut best: Option<(f64, usize, f64)> = None;
+        let mut order: Vec<usize> = idx.to_vec();
+        for &f in &feats {
+            let col = &self.x[f];
+            order.sort_unstable_by(|&a, &b| {
+                col[a].partial_cmp(&col[b]).unwrap()
+            });
+            let mut lsum = 0.0;
+            let mut lcnt = 0.0;
+            for w in 0..order.len() - 1 {
+                let i = order[w];
+                lsum += self.y[i];
+                lcnt += 1.0;
+                let (a, b) = (col[i], col[order[w + 1]]);
+                if a == b {
+                    continue; // not a valid cut point
+                }
+                let lc = lcnt as usize;
+                let rc = order.len() - lc;
+                if lc < self.cfg.min_samples_leaf || rc < self.cfg.min_samples_leaf {
+                    continue;
+                }
+                let rsum = sum - lsum;
+                let score = lsum * lsum / lcnt + rsum * rsum / (n - lcnt);
+                let gain = score - parent_score;
+                if gain > 1e-12
+                    && best.map(|(g, _, _)| gain > g).unwrap_or(true)
+                {
+                    best = Some((gain, f, 0.5 * (a + b)));
+                }
+            }
+        }
+        best.map(|(_, f, t)| (f, t))
+    }
+}
+
+/// Stable-ish in-place partition; returns the split point.
+fn partition<F: Fn(usize) -> bool>(idx: &mut [usize], pred: F) -> usize {
+    let mut mid = 0;
+    for i in 0..idx.len() {
+        if pred(idx[i]) {
+            idx.swap(mid, i);
+            mid += 1;
+        }
+    }
+    mid
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Column-major x from row-major rows.
+    fn columns(rows: &[Vec<f64>]) -> Vec<Vec<f64>> {
+        let nf = rows[0].len();
+        (0..nf)
+            .map(|f| rows.iter().map(|r| r[f]).collect())
+            .collect()
+    }
+
+    fn fit_all(rows: &[Vec<f64>], y: &[f64], cfg: TreeConfig) -> Tree {
+        let x = columns(rows);
+        let mut idx: Vec<usize> = (0..y.len()).collect();
+        let mut rng = Rng::new(77);
+        Tree::fit(&x, y, &mut idx, cfg, &mut rng)
+    }
+
+    #[test]
+    fn fits_a_step_function_exactly() {
+        let rows: Vec<Vec<f64>> =
+            (0..100).map(|i| vec![i as f64, 0.0]).collect();
+        let y: Vec<f64> =
+            (0..100).map(|i| if i < 50 { -1.0 } else { 1.0 }).collect();
+        let cfg = TreeConfig { mtry: 2, min_samples_leaf: 1, max_depth: 16 };
+        let t = fit_all(&rows, &y, cfg);
+        for i in 0..100 {
+            let want = if i < 50 { -1.0 } else { 1.0 };
+            assert_eq!(t.predict(&[i as f64, 0.0]), want, "i={i}");
+        }
+        assert!(t.depth() >= 1);
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn constant_target_is_single_leaf() {
+        let rows: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64]).collect();
+        let y = vec![3.25; 20];
+        let t = fit_all(&rows, &y, TreeConfig::default());
+        assert_eq!(t.nodes.len(), 1);
+        assert_eq!(t.predict(&[5.0]), 3.25);
+    }
+
+    #[test]
+    fn min_samples_leaf_respected() {
+        let rows: Vec<Vec<f64>> = (0..64).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..64).map(|i| (i % 7) as f64).collect();
+        let cfg = TreeConfig { mtry: 1, min_samples_leaf: 8, max_depth: 64 };
+        let t = fit_all(&rows, &y, cfg);
+        // Count samples per leaf by running all points through.
+        let mut counts = std::collections::HashMap::new();
+        for i in 0..64 {
+            let mut node = 0usize;
+            loop {
+                match &t.nodes[node] {
+                    Node::Leaf { .. } => break,
+                    Node::Split { feature, threshold, left, right, .. } => {
+                        node = if rows[i][*feature] <= *threshold {
+                            *left
+                        } else {
+                            *right
+                        };
+                    }
+                }
+            }
+            *counts.entry(node).or_insert(0usize) += 1;
+        }
+        for (_, c) in counts {
+            assert!(c >= 8, "leaf with {c} samples");
+        }
+    }
+
+    #[test]
+    fn depth_cap_enforced() {
+        let rows: Vec<Vec<f64>> = (0..256).map(|i| vec![i as f64]).collect();
+        let y: Vec<f64> = (0..256).map(|i| i as f64).collect();
+        let cfg = TreeConfig { mtry: 1, min_samples_leaf: 1, max_depth: 3 };
+        let t = fit_all(&rows, &y, cfg);
+        assert!(t.depth() <= 3);
+    }
+
+    #[test]
+    fn prediction_reduces_sse_vs_mean() {
+        let mut rng = Rng::new(5);
+        let rows: Vec<Vec<f64>> = (0..500)
+            .map(|_| vec![rng.next_f64(), rng.next_f64(), rng.next_f64()])
+            .collect();
+        let y: Vec<f64> = rows
+            .iter()
+            .map(|r| 3.0 * r[0] - 2.0 * r[1] + 0.1 * rng.normal())
+            .collect();
+        let cfg = TreeConfig { mtry: 3, min_samples_leaf: 4, max_depth: 64 };
+        let t = fit_all(&rows, &y, cfg);
+        let mean = y.iter().sum::<f64>() / y.len() as f64;
+        let sse_mean: f64 = y.iter().map(|v| (v - mean) * (v - mean)).sum();
+        let sse_tree: f64 = rows
+            .iter()
+            .zip(&y)
+            .map(|(r, v)| {
+                let p = t.predict(r);
+                (v - p) * (v - p)
+            })
+            .sum();
+        assert!(sse_tree < 0.2 * sse_mean, "{sse_tree} vs {sse_mean}");
+        t.validate().unwrap();
+    }
+
+    #[test]
+    fn structure_is_valid_on_random_data() {
+        crate::util::prop::check("tree-valid", 20, |rng| {
+            let n = 20 + rng.range(0, 200);
+            let rows: Vec<Vec<f64>> = (0..n)
+                .map(|_| vec![rng.next_f64(), rng.next_f64()])
+                .collect();
+            let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let x = columns(&rows);
+            let mut idx: Vec<usize> = (0..n).collect();
+            let cfg = TreeConfig { mtry: 2, min_samples_leaf: 2, max_depth: 32 };
+            let t = Tree::fit(&x, &y, &mut idx, cfg, rng);
+            t.validate()?;
+            // predictions must be finite
+            for r in rows.iter().take(10) {
+                crate::prop_assert!(t.predict(r).is_finite(), "nan pred");
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,83 @@
+//! ASCII rendering of speedup histograms (paper Fig. 1).
+
+use crate::sim::exec::SpeedupRecord;
+use crate::util::stats::Histogram;
+
+/// Build the log2-speedup histogram the Fig.-1 panels use.
+pub fn speedup_histogram(records: &[SpeedupRecord]) -> Histogram {
+    let mut h = Histogram::new(-7.0, 7.0, 28); // 0.008x .. 128x, half-octave bins
+    for r in records {
+        h.add(r.speedup.log2());
+    }
+    h
+}
+
+/// Render a histogram with a title line, one row per non-empty bin.
+pub fn render(title: &str, records: &[SpeedupRecord], width: usize) -> String {
+    let h = speedup_histogram(records);
+    let beneficial =
+        records.iter().filter(|r| r.beneficial()).count() as f64
+            / records.len().max(1) as f64;
+    let max_bin = h.bins.iter().copied().max().unwrap_or(1).max(1);
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{title}  (n={}, beneficial={:.0}%)\n",
+        records.len(),
+        100.0 * beneficial
+    ));
+    for (i, &c) in h.bins.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        let (lo, hi) = h.bin_edges(i);
+        let bar = "#".repeat(((c as usize * width) / max_bin as usize).max(1));
+        out.push_str(&format!(
+            "  {:>6.2}x..{:<6.2}x {:>7} {bar}\n",
+            2f64.powf(lo),
+            2f64.powf(hi),
+            c
+        ));
+    }
+    if h.underflow + h.overflow > 0 {
+        out.push_str(&format!(
+            "  (underflow {} / overflow {})\n",
+            h.underflow, h.overflow
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernelmodel::features::NUM_FEATURES;
+
+    fn rec(speedup: f64) -> SpeedupRecord {
+        SpeedupRecord {
+            name: "r".into(),
+            features: [0.0; NUM_FEATURES],
+            speedup,
+            baseline_time: 1.0,
+            optimized_time: 1.0 / speedup,
+        }
+    }
+
+    #[test]
+    fn histogram_covers_paper_range() {
+        // The paper reports 0.03x .. 49.6x; both must land inside bins.
+        let recs = vec![rec(0.03), rec(49.6), rec(1.0), rec(2.0)];
+        let h = speedup_histogram(&recs);
+        assert_eq!(h.underflow, 0);
+        assert_eq!(h.overflow, 0);
+        assert_eq!(h.count, 4);
+    }
+
+    #[test]
+    fn render_shows_counts_and_fraction() {
+        let recs = vec![rec(0.5), rec(2.0), rec(4.0)];
+        let s = render("test", &recs, 20);
+        assert!(s.contains("n=3"));
+        assert!(s.contains("beneficial=67%"));
+        assert!(s.contains('#'));
+    }
+}

@@ -1,0 +1,6 @@
+//! Rendering of the paper's figures and tables as terminal output: the
+//! Fig. 1 speedup histograms, the Fig. 6 accuracy chart, Tables 1-3.
+
+pub mod figures;
+pub mod hist;
+pub mod tables;

@@ -1,0 +1,204 @@
+//! Batched forest inference through PJRT: the serving hot path.
+//!
+//! Holds the tensor-encoded forest as pre-built XLA literals (built once;
+//! ~6 MB reused across calls) and routes each batch to the smallest
+//! compiled batch-size variant that fits, padding with zeros.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::ml::export::EncodedForest;
+
+use super::pjrt::Engine;
+
+pub struct ForestExecutor<'e> {
+    engine: &'e Engine,
+    feats_dim: usize,
+    batch_sizes: Vec<usize>,
+    // Pre-built forest literals, reused every call.
+    fi: xla::Literal,
+    th: xla::Literal,
+    lt: xla::Literal,
+    rt: xla::Literal,
+    lf: xla::Literal,
+}
+
+impl<'e> ForestExecutor<'e> {
+    pub fn new(engine: &'e Engine, forest: &EncodedForest) -> Result<Self> {
+        let m = &engine.manifest;
+        ensure!(
+            forest.contract.num_trees == m.num_trees
+                && forest.contract.max_nodes == m.max_nodes
+                && forest.contract.num_features == m.num_features
+                && forest.contract.max_depth <= m.max_depth,
+            "forest contract {:?} does not match artifact manifest \
+             (trees={}, nodes={}, features={}, depth={})",
+            forest.contract,
+            m.num_trees,
+            m.max_nodes,
+            m.num_features,
+            m.max_depth
+        );
+        let t = m.num_trees as i64;
+        let n = m.max_nodes as i64;
+        let shape = [t, n];
+        let mut sizes = m.forest_batch_sizes.clone();
+        sizes.sort_unstable();
+        Ok(ForestExecutor {
+            engine,
+            feats_dim: m.num_features,
+            batch_sizes: sizes,
+            fi: xla::Literal::vec1(&forest.feat_idx).reshape(&shape)?,
+            th: xla::Literal::vec1(&forest.thresh).reshape(&shape)?,
+            lt: xla::Literal::vec1(&forest.left).reshape(&shape)?,
+            rt: xla::Literal::vec1(&forest.right).reshape(&shape)?,
+            lf: xla::Literal::vec1(&forest.leaf).reshape(&shape)?,
+        })
+    }
+
+    /// Largest compiled batch variant.
+    pub fn max_batch(&self) -> usize {
+        *self.batch_sizes.last().unwrap()
+    }
+
+    /// Pick the smallest variant that holds `n` rows.
+    pub fn route(&self, n: usize) -> usize {
+        for &b in &self.batch_sizes {
+            if n <= b {
+                return b;
+            }
+        }
+        self.max_batch()
+    }
+
+    /// Predict log2(speedup) for a batch of feature vectors. Batches
+    /// larger than the biggest variant are chunked.
+    pub fn predict(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+        let mut out = Vec::with_capacity(rows.len());
+        let maxb = self.max_batch();
+        for chunk in rows.chunks(maxb) {
+            out.extend(self.predict_chunk(chunk)?);
+        }
+        Ok(out)
+    }
+
+    fn predict_chunk(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+        let b = self.route(rows.len());
+        let mut flat = vec![0f32; b * self.feats_dim];
+        for (i, r) in rows.iter().enumerate() {
+            ensure!(
+                r.len() == self.feats_dim,
+                "feature vector has {} dims, expected {}",
+                r.len(),
+                self.feats_dim
+            );
+            for (j, &x) in r.iter().enumerate() {
+                flat[i * self.feats_dim + j] = x as f32;
+            }
+        }
+        let feats = xla::Literal::vec1(&flat)
+            .reshape(&[b as i64, self.feats_dim as i64])
+            .context("reshape features")?;
+        let outs = self.engine.execute(
+            &format!("forest_b{b}.hlo.txt"),
+            &[
+                feats,
+                self.fi.clone(),
+                self.th.clone(),
+                self.lt.clone(),
+                self.rt.clone(),
+                self.lf.clone(),
+            ],
+        )?;
+        let preds = outs[0].to_vec::<f32>()?;
+        Ok(preds[..rows.len()].iter().map(|&x| x as f64).collect())
+    }
+
+    /// The auto-tuning decisions for a batch.
+    pub fn decide(&self, rows: &[Vec<f64>]) -> Result<Vec<bool>> {
+        Ok(self.predict(rows)?.into_iter().map(|p| p > 0.0).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ml::export::{encode, ExportContract};
+    use crate::ml::forest::{Forest, ForestConfig};
+    use crate::util::prng::Rng;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn pjrt_matches_native_encoded_predictions() {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let engine = Engine::new(&artifacts_dir()).unwrap();
+        // Train a small real forest on random data.
+        let nf = crate::kernelmodel::features::NUM_FEATURES;
+        let mut rng = Rng::new(44);
+        let x: Vec<Vec<f64>> = (0..nf)
+            .map(|_| (0..500).map(|_| rng.range_f64(-2.0, 2.0)).collect())
+            .collect();
+        let y: Vec<f64> = (0..500)
+            .map(|i| if x[0][i] * x[5][i] > 0.0 { 1.0 } else { -1.0 })
+            .collect();
+        let forest = Forest::fit(
+            &x,
+            &y,
+            &ForestConfig { num_trees: 20, threads: 1, ..Default::default() },
+        );
+        let contract = ExportContract {
+            num_trees: engine.manifest.num_trees,
+            max_nodes: engine.manifest.max_nodes,
+            max_depth: engine.manifest.max_depth,
+            num_features: nf,
+        };
+        let enc = encode(&forest, contract);
+        let exec = ForestExecutor::new(&engine, &enc).unwrap();
+
+        let rows: Vec<Vec<f64>> = (0..100)
+            .map(|_| (0..nf).map(|_| rng.range_f64(-2.0, 2.0)).collect())
+            .collect();
+        let got = exec.predict(&rows).unwrap();
+        for (r, g) in rows.iter().zip(&got) {
+            let want = enc.predict(r);
+            assert!((g - want).abs() < 1e-4, "{g} vs {want}");
+        }
+    }
+
+    #[test]
+    fn routing_picks_smallest_fit() {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let engine = Engine::new(&artifacts_dir()).unwrap();
+        let contract = ExportContract {
+            num_trees: engine.manifest.num_trees,
+            max_nodes: engine.manifest.max_nodes,
+            max_depth: engine.manifest.max_depth,
+            num_features: engine.manifest.num_features,
+        };
+        // single-leaf forest
+        let forest = Forest {
+            trees: vec![
+                crate::ml::tree::Tree {
+                    nodes: vec![crate::ml::tree::Node::Leaf { value: 0.0 }]
+                };
+                contract.num_trees
+            ],
+            config_summary: String::new(),
+        };
+        let enc = encode(&forest, contract);
+        let exec = ForestExecutor::new(&engine, &enc).unwrap();
+        assert_eq!(exec.route(1), 64);
+        assert_eq!(exec.route(64), 64);
+        assert_eq!(exec.route(65), 256);
+        assert_eq!(exec.route(5000), exec.max_batch());
+    }
+}

@@ -1,0 +1,5 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts (L2 jax graphs wrapping
+//! the L1 Pallas kernels) and executes them from the rust hot path.
+pub mod forest_exec;
+pub mod pjrt;
+pub mod stencil_exec;

@@ -1,0 +1,232 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! This is the only place the crate touches the `xla` FFI. The compile
+//! path (python/compile/aot.py) writes HLO *text* — the interchange
+//! format that survives the jax>=0.5 / xla_extension 0.5.1 proto-id
+//! mismatch — plus manifest.json describing shapes. Python never runs on
+//! the request path: everything here is rust calling the PJRT C API.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Shape contract parsed from artifacts/manifest.json. Must agree with
+/// `ml::export::ExportContract` before a forest can be served.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub num_trees: usize,
+    pub max_nodes: usize,
+    pub num_features: usize,
+    pub max_depth: usize,
+    pub forest_batch_sizes: Vec<usize>,
+    pub artifacts: Vec<String>,
+    pub stencil_img: usize,
+    pub stencil_radius: usize,
+    pub stencil_patterns: BTreeMap<String, usize>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!(e))?;
+        let get = |k: &str| -> Result<usize> {
+            j.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("manifest missing {k}"))
+        };
+        let stencil = j.get("stencil").context("manifest missing stencil")?;
+        let patterns = match stencil.get("patterns") {
+            Some(Json::Obj(m)) => m
+                .iter()
+                .filter_map(|(k, v)| v.as_usize().map(|n| (k.clone(), n)))
+                .collect(),
+            _ => BTreeMap::new(),
+        };
+        Ok(Manifest {
+            num_trees: get("num_trees")?,
+            max_nodes: get("max_nodes")?,
+            num_features: get("num_features")?,
+            max_depth: get("max_depth")?,
+            forest_batch_sizes: j
+                .get("forest_batch_sizes")
+                .and_then(Json::as_arr)
+                .context("manifest missing forest_batch_sizes")?
+                .iter()
+                .filter_map(Json::as_usize)
+                .collect(),
+            artifacts: j
+                .get("artifacts")
+                .and_then(Json::as_arr)
+                .context("manifest missing artifacts")?
+                .iter()
+                .filter_map(|a| a.as_str().map(String::from))
+                .collect(),
+            stencil_img: stencil.get("img").and_then(Json::as_usize).unwrap_or(0),
+            stencil_radius: stencil
+                .get("radius")
+                .and_then(Json::as_usize)
+                .unwrap_or(0),
+            stencil_patterns: patterns,
+        })
+    }
+}
+
+/// A compiled executable + its human name.
+struct LoadedExe {
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// PJRT engine: one CPU client, a cache of compiled executables keyed by
+/// artifact file name.
+pub struct Engine {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: Mutex<BTreeMap<String, std::sync::Arc<LoadedExe>>>,
+}
+
+// The xla handles are opaque C++ objects behind pointers; the PJRT CPU
+// client serializes execution internally. We gate compile/execute through
+// &self with internal locking where needed.
+unsafe impl Send for Engine {}
+unsafe impl Sync for Engine {}
+
+impl Engine {
+    /// Create a CPU PJRT client and load the artifact manifest.
+    pub fn new(artifact_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            dir: artifact_dir.to_path_buf(),
+            manifest,
+            cache: Mutex::new(BTreeMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by file name.
+    fn load(&self, name: &str) -> Result<std::sync::Arc<LoadedExe>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.dir.join(name);
+        if !path.exists() {
+            bail!("artifact {} not found (run `make artifacts`)", path.display());
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parse HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compile {}", path.display()))?;
+        let arc = std::sync::Arc::new(LoadedExe { exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), arc.clone());
+        Ok(arc)
+    }
+
+    /// Eagerly compile every artifact (warm start for serving).
+    pub fn warmup(&self) -> Result<usize> {
+        let names = self.manifest.artifacts.clone();
+        for n in &names {
+            self.load(n)?;
+        }
+        Ok(names.len())
+    }
+
+    /// Execute an artifact with literal inputs; returns the tuple fields
+    /// of the (return_tuple=True) result.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.load(name)?;
+        let result = exe
+            .exe
+            .execute::<xla::Literal>(inputs)
+            .with_context(|| format!("execute {name}"))?[0][0]
+            .to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        Ok(tuple)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        d
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn manifest_parses() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert_eq!(m.num_features, crate::kernelmodel::features::NUM_FEATURES);
+        assert!(!m.forest_batch_sizes.is_empty());
+        assert!(!m.artifacts.is_empty());
+    }
+
+    #[test]
+    fn engine_compiles_and_runs_forest_artifact() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let eng = Engine::new(&artifacts_dir()).unwrap();
+        let m = &eng.manifest;
+        let b = m.forest_batch_sizes[0];
+        let t = m.num_trees;
+        let n = m.max_nodes;
+        // Trivial forest: every tree is a single self-looping leaf 0.5.
+        let feats = xla::Literal::vec1(&vec![0f32; b * m.num_features])
+            .reshape(&[b as i64, m.num_features as i64])
+            .unwrap();
+        let fi = xla::Literal::vec1(&vec![0i32; t * n])
+            .reshape(&[t as i64, n as i64])
+            .unwrap();
+        let th = xla::Literal::vec1(&vec![0f32; t * n])
+            .reshape(&[t as i64, n as i64])
+            .unwrap();
+        let self_loop: Vec<i32> =
+            (0..t).flat_map(|_| (0..n as i32).collect::<Vec<_>>()).collect();
+        let lt = xla::Literal::vec1(&self_loop)
+            .reshape(&[t as i64, n as i64])
+            .unwrap();
+        let rt = xla::Literal::vec1(&self_loop)
+            .reshape(&[t as i64, n as i64])
+            .unwrap();
+        let lf = xla::Literal::vec1(&vec![0.5f32; t * n])
+            .reshape(&[t as i64, n as i64])
+            .unwrap();
+        let out = eng
+            .execute(&format!("forest_b{b}.hlo.txt"), &[feats, fi, th, lt, rt, lf])
+            .unwrap();
+        let preds = out[0].to_vec::<f32>().unwrap();
+        assert_eq!(preds.len(), b);
+        for p in preds {
+            assert!((p - 0.5).abs() < 1e-6, "{p}");
+        }
+    }
+}

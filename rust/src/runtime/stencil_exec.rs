@@ -1,0 +1,129 @@
+//! Execute the synthetic-template stencil compute (L1 Pallas kernel,
+//! AOT-lowered) through PJRT — proving template instances are real
+//! computations, and giving the examples a functional cross-language
+//! numerics check against a rust-native reference.
+
+use anyhow::{ensure, Context, Result};
+
+use crate::kernelmodel::stencil::StencilPattern;
+
+use super::pjrt::Engine;
+
+pub struct StencilExecutor<'e> {
+    engine: &'e Engine,
+    pub img: usize,
+    pub radius: usize,
+}
+
+#[derive(Debug)]
+pub struct StencilRun {
+    pub output: Vec<f32>,
+    pub checksum: f32,
+}
+
+impl<'e> StencilExecutor<'e> {
+    pub fn new(engine: &'e Engine) -> Result<Self> {
+        let m = &engine.manifest;
+        ensure!(m.stencil_img > 0, "manifest has no stencil artifacts");
+        Ok(StencilExecutor {
+            engine,
+            img: m.stencil_img,
+            radius: m.stencil_radius,
+        })
+    }
+
+    pub fn taps(&self, pattern: StencilPattern) -> usize {
+        pattern.taps(self.radius as u32) as usize
+    }
+
+    /// Run one pattern over a pre-padded input of (img + 2r)^2 f32s.
+    pub fn run(
+        &self,
+        pattern: StencilPattern,
+        padded: &[f32],
+        weights: &[f32],
+    ) -> Result<StencilRun> {
+        let side = self.img + 2 * self.radius;
+        ensure!(padded.len() == side * side, "bad input size");
+        ensure!(weights.len() == self.taps(pattern), "bad weights size");
+        let inp = xla::Literal::vec1(padded)
+            .reshape(&[side as i64, side as i64])
+            .context("reshape input")?;
+        let w = xla::Literal::vec1(weights);
+        let name = format!("stencil_{pattern}_r{}.hlo.txt", self.radius);
+        let outs = self.engine.execute(&name, &[inp, w])?;
+        Ok(StencilRun {
+            output: outs[0].to_vec::<f32>()?,
+            checksum: outs[1].to_vec::<f32>()?[0],
+        })
+    }
+
+    /// Pure-rust oracle of the same computation (mirrors kernels/ref.py).
+    pub fn reference(
+        &self,
+        pattern: StencilPattern,
+        padded: &[f32],
+        weights: &[f32],
+    ) -> Vec<f32> {
+        let r = self.radius;
+        let side = self.img + 2 * r;
+        let offs = pattern.offsets(r as u32);
+        let mut out = vec![0f32; self.img * self.img];
+        for y in 0..self.img {
+            for x in 0..self.img {
+                let mut acc = 0f32;
+                for (k, (dy, dx)) in offs.iter().enumerate() {
+                    let yy = (y + r) as i64 + *dy as i64;
+                    let xx = (x + r) as i64 + *dx as i64;
+                    acc += weights[k] * padded[yy as usize * side + xx as usize];
+                }
+                for _ in 0..4 {
+                    // epilogue chain; constants match kernels/stencil.py
+                    acc = acc * 1.000_976_562_5 + 0.031_25;
+                }
+                out[y * self.img + x] = acc;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn stencil_artifact_matches_rust_reference() {
+        if !artifacts_dir().join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let engine = Engine::new(&artifacts_dir()).unwrap();
+        let exec = StencilExecutor::new(&engine).unwrap();
+        let side = exec.img + 2 * exec.radius;
+        let mut rng = Rng::new(123);
+        let padded: Vec<f32> =
+            (0..side * side).map(|_| rng.next_f32() - 0.5).collect();
+        for pattern in StencilPattern::ALL {
+            let weights: Vec<f32> = (0..exec.taps(pattern))
+                .map(|_| rng.next_f32() - 0.5)
+                .collect();
+            let run = exec.run(pattern, &padded, &weights).unwrap();
+            let want = exec.reference(pattern, &padded, &weights);
+            assert_eq!(run.output.len(), want.len());
+            let mut max_err = 0f32;
+            for (a, b) in run.output.iter().zip(&want) {
+                max_err = max_err.max((a - b).abs());
+            }
+            assert!(max_err < 1e-3, "{pattern}: max err {max_err}");
+            let sum: f32 = run.output.iter().sum();
+            assert!((sum - run.checksum).abs() < run.checksum.abs() * 1e-3 + 1.0);
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Run one kernel instance with and without the optimization and record
+//! the paper's ground-truth quantities: kernel speedup + oracle decision.
+
+use crate::gpu::spec::DeviceSpec;
+use crate::kernelmodel::descriptor::KernelDescriptor;
+use crate::kernelmodel::features::{extract, NUM_FEATURES};
+use crate::util::prng::Rng;
+
+use super::timing::{simulate, SimResult, Variant};
+
+/// Speedups are clamped to this range, mirroring the paper's observed
+/// 0.03x .. 49.6x spread (infeasible optimized variants clamp low).
+pub const SPEEDUP_MIN: f64 = 0.01;
+pub const SPEEDUP_MAX: f64 = 100.0;
+
+/// One measured kernel instance: the dataset row.
+#[derive(Clone, Debug)]
+pub struct SpeedupRecord {
+    pub name: String,
+    pub features: [f64; NUM_FEATURES],
+    /// t_baseline / t_optimized, clamped.
+    pub speedup: f64,
+    pub baseline_time: f64,
+    pub optimized_time: f64,
+}
+
+impl SpeedupRecord {
+    /// Oracle decision (paper §5.1): apply the optimization iff it wins.
+    pub fn beneficial(&self) -> bool {
+        self.speedup > 1.0
+    }
+
+    /// Regression target used for training: log2(speedup), so the
+    /// decision boundary is 0 and slowdowns/speedups are symmetric.
+    pub fn target(&self) -> f64 {
+        self.speedup.log2()
+    }
+}
+
+/// Measurement configuration for the simulated testbed.
+#[derive(Clone, Copy, Debug)]
+pub struct MeasureConfig {
+    /// Multiplicative lognormal measurement jitter (std of ln-ratio).
+    /// The paper's timings carry run-to-run noise; 0.0 = deterministic.
+    pub noise_sigma: f64,
+    pub seed: u64,
+}
+
+impl Default for MeasureConfig {
+    fn default() -> Self {
+        // ~2% run-to-run jitter, typical of wall-clock GPU kernel timing.
+        MeasureConfig { noise_sigma: 0.02, seed: 0x7E57BED }
+    }
+}
+
+impl MeasureConfig {
+    pub fn deterministic() -> Self {
+        MeasureConfig { noise_sigma: 0.0, seed: 0 }
+    }
+}
+
+/// "Measure" one kernel instance on the simulated device.
+pub fn measure(
+    d: &KernelDescriptor,
+    dev: &DeviceSpec,
+    cfg: &MeasureConfig,
+) -> SpeedupRecord {
+    let base = simulate(d, dev, Variant::Baseline);
+    let opt = simulate(d, dev, Variant::Optimized);
+    measure_from(d, &base, &opt, cfg)
+}
+
+/// Build the record from precomputed simulations (used by tests/ablation).
+pub fn measure_from(
+    d: &KernelDescriptor,
+    base: &SimResult,
+    opt: &SimResult,
+    cfg: &MeasureConfig,
+) -> SpeedupRecord {
+    let mut t_base = base.time_s;
+    let mut t_opt = opt.time_s;
+    if cfg.noise_sigma > 0.0 {
+        // Deterministic per-instance jitter: seed from the feature hash so
+        // the same instance always "measures" the same.
+        let mut h = 0xcbf29ce484222325u64;
+        for b in d.name.bytes() {
+            h = (h ^ b as u64).wrapping_mul(0x100000001b3);
+        }
+        let mut rng = Rng::new(cfg.seed ^ h);
+        t_base *= (cfg.noise_sigma * rng.normal()).exp();
+        t_opt *= (cfg.noise_sigma * rng.normal()).exp();
+    }
+    let speedup = if !t_opt.is_finite() {
+        SPEEDUP_MIN
+    } else {
+        (t_base / t_opt).clamp(SPEEDUP_MIN, SPEEDUP_MAX)
+    };
+    SpeedupRecord {
+        name: d.name.clone(),
+        features: extract(d),
+        speedup,
+        baseline_time: t_base,
+        optimized_time: t_opt,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernelmodel::access::HomePattern;
+    use crate::kernelmodel::launch::{GridGeom, Launch, WgGeom};
+    use crate::kernelmodel::template::Template;
+
+    fn record(home: HomePattern, wg: (u32, u32), n: u32, m: u32) -> SpeedupRecord {
+        let dev = DeviceSpec::m2090();
+        let launch = Launch::new(
+            WgGeom { w: wg.0, h: wg.1 },
+            GridGeom { w: 1024, h: 1024 },
+        );
+        let t = Template { home, n, m, ..Template::base() };
+        let d = t.descriptor(&launch, &dev);
+        measure(&d, &dev, &MeasureConfig::deterministic())
+    }
+
+    #[test]
+    fn scattered_pattern_is_beneficial() {
+        let r = record(HomePattern::NoReuseRow, (32, 2), 1, 8);
+        assert!(r.beneficial(), "speedup {}", r.speedup);
+        assert!(r.target() > 0.0);
+    }
+
+    #[test]
+    fn infeasible_region_clamps_to_min() {
+        // 512-thread workgroup, each owning a row: region >> 48 KB.
+        let r = record(HomePattern::NoReuseRow, (32, 16), 8, 8);
+        assert_eq!(r.speedup, SPEEDUP_MIN);
+        assert!(!r.beneficial());
+    }
+
+    #[test]
+    fn speedup_within_clamp_range() {
+        for home in HomePattern::ALL {
+            let n = home.n_values()[1];
+            let m = home.m_values()[1];
+            let r = record(home, (16, 8), n, m);
+            assert!((SPEEDUP_MIN..=SPEEDUP_MAX).contains(&r.speedup), "{home}");
+        }
+    }
+
+    #[test]
+    fn noise_is_deterministic_per_instance() {
+        let dev = DeviceSpec::m2090();
+        let launch = Launch::new(
+            WgGeom { w: 16, h: 8 },
+            GridGeom { w: 1024, h: 1024 },
+        );
+        let d = Template::base().descriptor(&launch, &dev);
+        let cfg = MeasureConfig::default();
+        let a = measure(&d, &dev, &cfg);
+        let b = measure(&d, &dev, &cfg);
+        assert_eq!(a.speedup, b.speedup);
+        // and differs from the noiseless measurement (with high prob.)
+        let c = measure(&d, &dev, &MeasureConfig::deterministic());
+        assert_ne!(a.speedup, c.speedup);
+    }
+
+    #[test]
+    fn target_is_log2() {
+        let r = record(HomePattern::NoReuseRow, (32, 2), 1, 8);
+        assert!((r.target() - r.speedup.log2()).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,3 @@
+//! The simulated testbed: analytic timing model + instance measurement.
+pub mod exec;
+pub mod timing;

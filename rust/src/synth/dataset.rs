@@ -1,0 +1,222 @@
+//! Kernel-instance dataset: build (template x launch) instances, measure
+//! them on the simulated testbed, persist/reload as CSV.
+//!
+//! Instances whose *baseline* cannot launch (register file overflow with
+//! huge workgroups) are skipped — the paper's sweep likewise only contains
+//! configurations the original kernel can run.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::gpu::spec::DeviceSpec;
+use crate::kernelmodel::features::{FEATURE_NAMES, NUM_FEATURES};
+use crate::kernelmodel::template::Template;
+use crate::sim::exec::{measure, MeasureConfig, SpeedupRecord};
+use crate::sim::timing::{simulate, Variant};
+use crate::util::pool::parallel_map;
+use crate::util::prng::Rng;
+use crate::util::{csv, stats};
+
+use super::sweep::LaunchSweep;
+
+/// Dataset build options.
+#[derive(Clone, Debug)]
+pub struct BuildConfig {
+    /// Launch configurations sampled per kernel template.
+    pub configs_per_kernel: usize,
+    pub measure: MeasureConfig,
+    pub seed: u64,
+    pub threads: usize,
+}
+
+impl Default for BuildConfig {
+    fn default() -> Self {
+        BuildConfig {
+            configs_per_kernel: 48,
+            measure: MeasureConfig::default(),
+            seed: 0xDA7A5E7,
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+        }
+    }
+}
+
+/// Build speedup records for every (template, sampled launch) instance.
+pub fn build(
+    templates: &[Template],
+    sweep: &LaunchSweep,
+    dev: &DeviceSpec,
+    cfg: &BuildConfig,
+) -> Vec<SpeedupRecord> {
+    // Pre-draw per-template launch samples (deterministic from seed).
+    let mut rng = Rng::new(cfg.seed);
+    let jobs: Vec<(usize, Vec<crate::kernelmodel::launch::Launch>)> = templates
+        .iter()
+        .enumerate()
+        .map(|(i, _)| {
+            let mut trng = rng.fork(i as u64);
+            (i, sweep.sampled_balanced(&mut trng, cfg.configs_per_kernel))
+        })
+        .collect();
+
+    let nested = parallel_map(&jobs, cfg.threads, |(i, launches)| {
+        let t = &templates[*i];
+        let mut recs = Vec::with_capacity(launches.len());
+        for launch in launches {
+            let d = t.descriptor(launch, dev);
+            // Skip instances whose baseline can't even launch.
+            if !simulate(&d, dev, Variant::Baseline).feasible() {
+                continue;
+            }
+            recs.push(measure(&d, dev, &cfg.measure));
+        }
+        recs
+    });
+    nested.into_iter().flatten().collect()
+}
+
+/// CSV header: the 18 features + the measured speedup.
+pub fn csv_header() -> Vec<&'static str> {
+    let mut h: Vec<&'static str> = FEATURE_NAMES.to_vec();
+    h.push("speedup");
+    h
+}
+
+pub fn save(records: &[SpeedupRecord], path: &Path) -> Result<()> {
+    let rows: Vec<Vec<f64>> = records
+        .iter()
+        .map(|r| {
+            let mut row = r.features.to_vec();
+            row.push(r.speedup);
+            row
+        })
+        .collect();
+    csv::write_table(path, &csv_header(), &rows)
+}
+
+pub fn load(path: &Path) -> Result<Vec<SpeedupRecord>> {
+    let (header, rows) = csv::read_table(path)?;
+    anyhow::ensure!(
+        header.len() == NUM_FEATURES + 1,
+        "expected {} columns, got {}",
+        NUM_FEATURES + 1,
+        header.len()
+    );
+    Ok(rows
+        .into_iter()
+        .enumerate()
+        .map(|(i, row)| {
+            let mut features = [0.0; NUM_FEATURES];
+            features.copy_from_slice(&row[..NUM_FEATURES]);
+            let speedup = row[NUM_FEATURES];
+            SpeedupRecord {
+                name: format!("row{i}"),
+                features,
+                speedup,
+                baseline_time: f64::NAN,
+                optimized_time: f64::NAN,
+            }
+        })
+        .collect())
+}
+
+/// Split records into train/test by random permutation (paper: train on
+/// a random 10%, evaluate on the rest).
+pub fn split<'a>(
+    records: &'a [SpeedupRecord],
+    train_fraction: f64,
+    seed: u64,
+) -> (Vec<&'a SpeedupRecord>, Vec<&'a SpeedupRecord>) {
+    let mut idx: Vec<usize> = (0..records.len()).collect();
+    let mut rng = Rng::new(seed);
+    rng.shuffle(&mut idx);
+    let n_train = ((records.len() as f64 * train_fraction).round() as usize)
+        .clamp(1, records.len().saturating_sub(1).max(1));
+    let train = idx[..n_train].iter().map(|&i| &records[i]).collect();
+    let test = idx[n_train..].iter().map(|&i| &records[i]).collect();
+    (train, test)
+}
+
+/// Summary used by reports: count, beneficial fraction, speedup range.
+pub fn summarize(records: &[SpeedupRecord]) -> (usize, f64, f64, f64) {
+    let n = records.len();
+    let beneficial =
+        records.iter().filter(|r| r.beneficial()).count() as f64 / n.max(1) as f64;
+    let speedups: Vec<f64> = records.iter().map(|r| r.speedup).collect();
+    let geo = stats::geomean(&speedups);
+    let max = speedups.iter().cloned().fold(0.0, f64::max);
+    (n, beneficial, geo, max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::synth::generator;
+
+    fn small_dataset() -> Vec<SpeedupRecord> {
+        let mut rng = Rng::new(1234);
+        let templates = generator::generate_n(&mut rng, 2); // 2*7*16 kernels
+        let sweep = LaunchSweep::new(2048, 2048);
+        let dev = DeviceSpec::m2090();
+        let cfg = BuildConfig {
+            configs_per_kernel: 4,
+            threads: 2,
+            ..BuildConfig::default()
+        };
+        build(&templates, &sweep, &dev, &cfg)
+    }
+
+    #[test]
+    fn build_produces_instances() {
+        let recs = small_dataset();
+        assert!(recs.len() > 500, "{} records", recs.len());
+        for r in &recs {
+            assert!(r.features.iter().all(|x| x.is_finite()));
+            assert!(r.speedup > 0.0);
+        }
+    }
+
+    #[test]
+    fn dataset_contains_both_classes() {
+        let recs = small_dataset();
+        let pos = recs.iter().filter(|r| r.beneficial()).count();
+        assert!(pos > 0, "no beneficial instances");
+        assert!(pos < recs.len(), "every instance beneficial");
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let recs = small_dataset();
+        let path = std::env::temp_dir()
+            .join(format!("lmtuner-ds-{}.csv", std::process::id()));
+        save(&recs, &path).unwrap();
+        let back = load(&path).unwrap();
+        assert_eq!(back.len(), recs.len());
+        for (a, b) in recs.iter().zip(&back) {
+            assert_eq!(a.features, b.features);
+            assert!((a.speedup - b.speedup).abs() < 1e-9);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn split_fractions() {
+        let recs = small_dataset();
+        let (train, test) = split(&recs, 0.1, 99);
+        assert_eq!(train.len() + test.len(), recs.len());
+        let frac = train.len() as f64 / recs.len() as f64;
+        assert!((frac - 0.1).abs() < 0.02, "train fraction {frac}");
+    }
+
+    #[test]
+    fn build_is_deterministic() {
+        let a = small_dataset();
+        let b = small_dataset();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.speedup, y.speedup);
+        }
+    }
+}

@@ -1,0 +1,107 @@
+//! Synthetic-kernel enumeration (paper §5).
+//!
+//! Step 1: sample context tuples (Table 2). Step 2: for each tuple,
+//! enumerate all 7 home access patterns and the 4x4 N/M value sets that
+//! pattern prescribes. At the paper's 100 tuples this yields 100 x 7 x 16
+//! = 11200 templates (the paper reports 9600; its counting excludes some
+//! N/M combinations it "perceives as common" — we document the delta in
+//! EXPERIMENTS.md and keep the full cross product, scaled by `scale`).
+
+use crate::kernelmodel::access::HomePattern;
+use crate::kernelmodel::template::Template;
+use crate::util::prng::Rng;
+
+use super::sampler::{sample_tuples, ContextTuple};
+
+/// Target-array geometry the paper fixes for all synthetic kernels.
+pub const IN_H: u32 = 2048;
+pub const IN_W: u32 = 2048;
+
+/// Paper-scale tuple count.
+pub const PAPER_TUPLES: usize = 100;
+
+pub fn template_from(tuple: &ContextTuple, home: HomePattern, n: u32, m: u32) -> Template {
+    Template {
+        in_h: IN_H,
+        in_w: IN_W,
+        home,
+        n,
+        m,
+        stencil: tuple.stencil,
+        radius: tuple.radius,
+        comp_ilb: tuple.comp_ilb,
+        comp_ep: tuple.comp_ep,
+        coal_ilb: tuple.coal_ilb,
+        coal_ep: tuple.coal_ep,
+        uncoal_ilb: tuple.uncoal_ilb,
+        uncoal_ep: tuple.uncoal_ep,
+    }
+}
+
+/// Generate the synthetic kernel population. `scale` in (0, 1] scales the
+/// number of context tuples (1.0 = the paper's 100).
+pub fn generate(rng: &mut Rng, scale: f64) -> Vec<Template> {
+    let tuples = ((PAPER_TUPLES as f64 * scale).round() as usize).max(1);
+    generate_n(rng, tuples)
+}
+
+pub fn generate_n(rng: &mut Rng, num_tuples: usize) -> Vec<Template> {
+    let tuples = sample_tuples(rng, num_tuples);
+    let mut out = Vec::with_capacity(num_tuples * 7 * 16);
+    for tuple in &tuples {
+        for home in HomePattern::ALL {
+            for &n in &home.n_values() {
+                for &m in &home.m_values() {
+                    out.push(template_from(tuple, home, n, m));
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_scale_counts() {
+        let mut rng = Rng::new(42);
+        let ts = generate(&mut rng, 1.0);
+        assert_eq!(ts.len(), 100 * 7 * 16);
+    }
+
+    #[test]
+    fn scaled_generation() {
+        let mut rng = Rng::new(42);
+        assert_eq!(generate(&mut rng, 0.1).len(), 10 * 7 * 16);
+        let mut rng2 = Rng::new(42);
+        assert_eq!(generate(&mut rng2, 0.001).len(), 7 * 16); // >= 1 tuple
+    }
+
+    #[test]
+    fn n_m_respect_pattern_value_sets() {
+        let mut rng = Rng::new(7);
+        for t in generate(&mut rng, 0.05) {
+            assert!(t.home.n_values().contains(&t.n), "{t:?}");
+            assert!(t.home.m_values().contains(&t.m), "{t:?}");
+            assert_eq!((t.in_h, t.in_w), (2048, 2048));
+        }
+    }
+
+    #[test]
+    fn all_patterns_covered() {
+        let mut rng = Rng::new(9);
+        let ts = generate(&mut rng, 0.02);
+        for home in HomePattern::ALL {
+            assert!(ts.iter().any(|t| t.home == home), "{home} missing");
+        }
+    }
+
+    #[test]
+    fn deterministic_from_seed() {
+        let a = generate(&mut Rng::new(5), 0.03);
+        let b = generate(&mut Rng::new(5), 0.03);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,6 @@
+//! Synthetic benchmark generation (paper §4.1/§5): Table 2 sampling,
+//! template enumeration, launch sweep, dataset building.
+pub mod dataset;
+pub mod generator;
+pub mod sampler;
+pub mod sweep;

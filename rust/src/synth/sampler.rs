@@ -1,0 +1,136 @@
+//! Compile-time parameter sampling for synthetic kernels (paper Table 2).
+//!
+//! The paper samples 100 tuples of all compile-time parameters except
+//! HOME_ACCESS_PATTERN, with skewed value distributions (the reported
+//! averages sit well off the range midpoints). We reproduce each range
+//! and mean with a power-law transform of a uniform draw.
+
+use crate::kernelmodel::stencil::StencilPattern;
+use crate::util::prng::Rng;
+
+/// Table 2 rows: range + target mean for each context parameter.
+#[derive(Clone, Copy, Debug)]
+pub struct ParamDist {
+    pub lo: u32,
+    pub hi: u32,
+    pub mean: f64,
+}
+
+impl ParamDist {
+    /// Draw an integer in [lo, hi] whose expectation is ~mean:
+    /// x = lo + (hi - lo) * u^k with k = (hi - mean) / (mean - lo).
+    pub fn sample(&self, rng: &mut Rng) -> u32 {
+        if self.lo == self.hi {
+            return self.lo;
+        }
+        let lo = self.lo as f64;
+        let hi = self.hi as f64;
+        let mean = self.mean.clamp(lo + 1e-9, hi - 1e-9);
+        let k = (hi - mean) / (mean - lo);
+        let x = lo + (hi - lo) * rng.next_f64().powf(k);
+        (x.round() as u32).clamp(self.lo, self.hi)
+    }
+}
+
+/// Table 2 of the paper.
+pub mod table2 {
+    use super::ParamDist;
+    pub const STENCIL_RADIUS: ParamDist = ParamDist { lo: 0, hi: 2, mean: 1.0 };
+    pub const NUM_COMP_ILB: ParamDist = ParamDist { lo: 5, hi: 44, mean: 19.0 };
+    pub const NUM_COMP_EP: ParamDist = ParamDist { lo: 1, hi: 48, mean: 23.0 };
+    pub const NUM_COAL_ILB: ParamDist = ParamDist { lo: 0, hi: 13, mean: 3.0 };
+    pub const NUM_COAL_EP: ParamDist = ParamDist { lo: 0, hi: 13, mean: 5.0 };
+    pub const NUM_UNCOAL_ILB: ParamDist = ParamDist { lo: 0, hi: 4, mean: 0.8 };
+    pub const NUM_UNCOAL_EP: ParamDist = ParamDist { lo: 0, hi: 4, mean: 0.8 };
+}
+
+/// One sampled compile-time tuple (everything in Table 2; the home access
+/// pattern and N/M are enumerated separately per paper §5).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ContextTuple {
+    pub stencil: StencilPattern,
+    pub radius: u32,
+    pub comp_ilb: u32,
+    pub comp_ep: u32,
+    pub coal_ilb: u32,
+    pub coal_ep: u32,
+    pub uncoal_ilb: u32,
+    pub uncoal_ep: u32,
+}
+
+pub fn sample_tuple(rng: &mut Rng) -> ContextTuple {
+    ContextTuple {
+        stencil: *rng.pick(&StencilPattern::ALL),
+        radius: table2::STENCIL_RADIUS.sample(rng),
+        comp_ilb: table2::NUM_COMP_ILB.sample(rng),
+        comp_ep: table2::NUM_COMP_EP.sample(rng),
+        coal_ilb: table2::NUM_COAL_ILB.sample(rng),
+        coal_ep: table2::NUM_COAL_EP.sample(rng),
+        uncoal_ilb: table2::NUM_UNCOAL_ILB.sample(rng),
+        uncoal_ep: table2::NUM_UNCOAL_EP.sample(rng),
+    }
+}
+
+pub fn sample_tuples(rng: &mut Rng, count: usize) -> Vec<ContextTuple> {
+    (0..count).map(|_| sample_tuple(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn empirical_mean(dist: &ParamDist, n: usize) -> f64 {
+        let mut rng = Rng::new(0xABCD);
+        (0..n).map(|_| dist.sample(&mut rng) as f64).sum::<f64>() / n as f64
+    }
+
+    #[test]
+    fn samples_stay_in_range() {
+        let mut rng = Rng::new(1);
+        for _ in 0..10_000 {
+            let t = sample_tuple(&mut rng);
+            assert!(t.radius <= 2);
+            assert!((5..=44).contains(&t.comp_ilb));
+            assert!((1..=48).contains(&t.comp_ep));
+            assert!(t.coal_ilb <= 13 && t.coal_ep <= 13);
+            assert!(t.uncoal_ilb <= 4 && t.uncoal_ep <= 4);
+        }
+    }
+
+    #[test]
+    fn means_match_table2() {
+        // Tolerate ~10% relative error from rounding + sampling.
+        let cases = [
+            (table2::NUM_COMP_ILB, 19.0),
+            (table2::NUM_COMP_EP, 23.0),
+            (table2::NUM_COAL_ILB, 3.0),
+            (table2::NUM_COAL_EP, 5.0),
+            (table2::NUM_UNCOAL_ILB, 0.8),
+            (table2::NUM_UNCOAL_EP, 0.8),
+        ];
+        for (dist, want) in cases {
+            let got = empirical_mean(&dist, 50_000);
+            assert!(
+                (got - want).abs() / want < 0.12,
+                "mean {got} vs table {want} ({dist:?})"
+            );
+        }
+    }
+
+    #[test]
+    fn all_stencils_appear() {
+        let mut rng = Rng::new(3);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..100 {
+            seen.insert(sample_tuple(&mut rng).stencil);
+        }
+        assert_eq!(seen.len(), 3);
+    }
+
+    #[test]
+    fn degenerate_dist_is_constant() {
+        let d = ParamDist { lo: 7, hi: 7, mean: 7.0 };
+        let mut rng = Rng::new(4);
+        assert_eq!(d.sample(&mut rng), 7);
+    }
+}

@@ -1,0 +1,163 @@
+//! Launch-configuration sweep (paper §5): all power-of-two 2D workgroup
+//! geometries with <= 1024 workitems crossed with all power-of-two 2D
+//! grids with >= 512 total workitems that tile the 2048x2048 output.
+//!
+//! The full cross product is large; `LaunchSweep::sampled` draws a
+//! per-kernel random subset so dataset size can be scaled (the paper's
+//! 5.6M instances / 9600 kernels ~ 583 configs per kernel).
+
+use crate::kernelmodel::launch::{enumerate_grids, enumerate_wgs, Launch};
+use crate::util::prng::Rng;
+
+pub const MIN_GRID_TOTAL: u64 = 512;
+pub const MAX_WG_THREADS: u32 = 1024;
+
+/// Enumerate every valid launch for an out_w x out_h output.
+pub fn full_sweep(out_w: u32, out_h: u32) -> Vec<Launch> {
+    let mut out = Vec::new();
+    for wg in enumerate_wgs(MAX_WG_THREADS) {
+        for grid in enumerate_grids(wg, out_w, out_h, MIN_GRID_TOTAL) {
+            out.push(Launch::new(wg, grid));
+        }
+    }
+    out
+}
+
+/// A reusable sweep with per-kernel sampling.
+pub struct LaunchSweep {
+    all: Vec<Launch>,
+}
+
+impl LaunchSweep {
+    pub fn new(out_w: u32, out_h: u32) -> Self {
+        LaunchSweep { all: full_sweep(out_w, out_h) }
+    }
+
+    pub fn len(&self) -> usize {
+        self.all.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.all.is_empty()
+    }
+
+    pub fn all(&self) -> &[Launch] {
+        &self.all
+    }
+
+    /// Draw `k` distinct launches (all of them if k >= len).
+    pub fn sampled(&self, rng: &mut Rng, k: usize) -> Vec<Launch> {
+        if k >= self.all.len() {
+            return self.all.clone();
+        }
+        rng.sample_indices(self.all.len(), k)
+            .into_iter()
+            .map(|i| self.all[i])
+            .collect()
+    }
+
+    /// Workgroup-balanced sample: `k` launches spread across distinct
+    /// workgroup shapes first (so small samples still span the
+    /// occupancy-relevant axis).
+    pub fn sampled_balanced(&self, rng: &mut Rng, k: usize) -> Vec<Launch> {
+        if k >= self.all.len() {
+            return self.all.clone();
+        }
+        let mut by_wg: std::collections::BTreeMap<(u32, u32), Vec<Launch>> =
+            std::collections::BTreeMap::new();
+        for l in &self.all {
+            by_wg.entry((l.wg.w, l.wg.h)).or_default().push(*l);
+        }
+        let mut buckets: Vec<Vec<Launch>> = by_wg.into_values().collect();
+        for b in buckets.iter_mut() {
+            rng.shuffle(b);
+        }
+        let mut out = Vec::with_capacity(k);
+        let mut round = 0;
+        while out.len() < k {
+            let mut advanced = false;
+            for b in buckets.iter() {
+                if out.len() >= k {
+                    break;
+                }
+                if let Some(l) = b.get(round) {
+                    out.push(*l);
+                    advanced = true;
+                }
+            }
+            if !advanced {
+                break;
+            }
+            round += 1;
+        }
+        out
+    }
+}
+
+/// Check the paper's constraints hold for a launch (used by tests and
+/// property checks).
+pub fn satisfies_paper_constraints(l: &Launch, out_w: u32, out_h: u32) -> bool {
+    let p2 = |x: u32| x.is_power_of_two();
+    l.valid()
+        && p2(l.wg.w)
+        && p2(l.wg.h)
+        && p2(l.grid.w)
+        && p2(l.grid.h)
+        && l.wg.size() <= MAX_WG_THREADS
+        && l.grid.size() >= MIN_GRID_TOTAL
+        && out_w % l.grid.w == 0
+        && out_h % l.grid.h == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_sweep_respects_constraints() {
+        let sweep = full_sweep(2048, 2048);
+        assert!(sweep.len() > 500, "sweep size {}", sweep.len());
+        for l in &sweep {
+            assert!(satisfies_paper_constraints(l, 2048, 2048), "{l:?}");
+        }
+    }
+
+    #[test]
+    fn no_duplicate_launches() {
+        let sweep = full_sweep(2048, 2048);
+        let mut set = std::collections::HashSet::new();
+        for l in &sweep {
+            assert!(set.insert((l.wg.w, l.wg.h, l.grid.w, l.grid.h)));
+        }
+    }
+
+    #[test]
+    fn sampled_returns_distinct_subset() {
+        let sweep = LaunchSweep::new(2048, 2048);
+        let mut rng = Rng::new(11);
+        let s = sweep.sampled(&mut rng, 50);
+        assert_eq!(s.len(), 50);
+        let mut set = std::collections::HashSet::new();
+        for l in &s {
+            assert!(set.insert((l.wg.w, l.wg.h, l.grid.w, l.grid.h)));
+        }
+    }
+
+    #[test]
+    fn sampled_all_when_k_large() {
+        let sweep = LaunchSweep::new(2048, 2048);
+        let mut rng = Rng::new(12);
+        assert_eq!(sweep.sampled(&mut rng, usize::MAX).len(), sweep.len());
+    }
+
+    #[test]
+    fn balanced_sample_spans_wg_shapes() {
+        let sweep = LaunchSweep::new(2048, 2048);
+        let mut rng = Rng::new(13);
+        let s = sweep.sampled_balanced(&mut rng, 66);
+        let wgs: std::collections::HashSet<(u32, u32)> =
+            s.iter().map(|l| (l.wg.w, l.wg.h)).collect();
+        // at least half the distinct workgroup shapes show up
+        assert!(wgs.len() >= 30, "only {} wg shapes", wgs.len());
+    }
+}

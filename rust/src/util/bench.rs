@@ -1,0 +1,157 @@
+//! Micro-benchmark harness substrate (criterion is not available).
+//!
+//! `cargo bench` targets use `harness = false` and call into this module:
+//! warmup, then timed iterations until both a minimum iteration count and a
+//! minimum wall time are reached; reports mean/p50/p95 per iteration.
+
+use std::time::{Duration, Instant};
+
+use super::stats::percentile;
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    pub total: Duration,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.mean.as_secs_f64()
+    }
+}
+
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub min_time: Duration,
+    pub max_iters: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 2,
+            min_iters: 10,
+            min_time: Duration::from_millis(300),
+            max_iters: 10_000,
+        }
+    }
+}
+
+impl Bencher {
+    /// Quick profile for expensive end-to-end benches.
+    pub fn coarse() -> Self {
+        Self {
+            warmup_iters: 1,
+            min_iters: 3,
+            min_time: Duration::from_millis(100),
+            max_iters: 50,
+        }
+    }
+
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples: Vec<f64> = Vec::new();
+        let started = Instant::now();
+        loop {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+            let done_iters = samples.len() >= self.min_iters;
+            let done_time = started.elapsed() >= self.min_time;
+            if (done_iters && done_time) || samples.len() >= self.max_iters {
+                break;
+            }
+        }
+        let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+        BenchResult {
+            name: name.to_string(),
+            iters: samples.len(),
+            mean: Duration::from_secs_f64(mean),
+            p50: Duration::from_secs_f64(percentile(&samples, 50.0)),
+            p95: Duration::from_secs_f64(percentile(&samples, 95.0)),
+            min: Duration::from_secs_f64(
+                samples.iter().cloned().fold(f64::INFINITY, f64::min),
+            ),
+            total: started.elapsed(),
+        }
+    }
+}
+
+/// Standard one-line report used by all bench binaries.
+pub fn report(r: &BenchResult) {
+    println!(
+        "{:<44} {:>6} iters  mean {:>12?}  p50 {:>12?}  p95 {:>12?}",
+        r.name, r.iters, r.mean, r.p50, r.p95
+    );
+}
+
+pub fn report_throughput(r: &BenchResult, items: f64, unit: &str) {
+    println!(
+        "{:<44} {:>6} iters  mean {:>12?}  {:>12.0} {unit}/s",
+        r.name,
+        r.iters,
+        r.mean,
+        r.throughput(items)
+    );
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_minimum_iters() {
+        let b = Bencher {
+            warmup_iters: 0,
+            min_iters: 5,
+            min_time: Duration::from_millis(0),
+            max_iters: 100,
+        };
+        let mut count = 0usize;
+        let r = b.run("noop", || count += 1);
+        assert!(r.iters >= 5);
+        assert_eq!(count, r.iters);
+    }
+
+    #[test]
+    fn bench_respects_max_iters() {
+        let b = Bencher {
+            warmup_iters: 0,
+            min_iters: 1,
+            min_time: Duration::from_secs(30),
+            max_iters: 7,
+        };
+        let r = b.run("noop", || {});
+        assert_eq!(r.iters, 7);
+    }
+
+    #[test]
+    fn throughput_sane() {
+        let b = Bencher {
+            warmup_iters: 0,
+            min_iters: 3,
+            min_time: Duration::from_millis(0),
+            max_iters: 10,
+        };
+        let r = b.run("sleepless", || {
+            black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.throughput(1000.0) > 0.0);
+        assert!(r.p95 >= r.p50);
+        assert!(r.mean >= r.min);
+    }
+}

@@ -1,0 +1,169 @@
+//! CLI argument-parsing substrate (clap is not available).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Typed getters with defaults; `finish()` rejects unknown flags so typos
+//! fail loudly instead of silently using defaults.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: BTreeSet<String>,
+    positional: Vec<String>,
+    consumed: BTreeSet<String>,
+}
+
+impl Args {
+    pub fn parse_from<I: IntoIterator<Item = String>>(it: I) -> Result<Args, String> {
+        let mut a = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminates option parsing
+                    a.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else {
+                    // value-taking iff the next token is not another option
+                    match it.peek() {
+                        Some(next) if !next.starts_with("--") => {
+                            let v = it.next().unwrap();
+                            a.opts.insert(body.to_string(), v);
+                        }
+                        _ => {
+                            a.flags.insert(body.to_string());
+                        }
+                    }
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        Ok(a)
+    }
+
+    pub fn parse_env() -> Result<Args, String> {
+        Args::parse_from(std::env::args().skip(1))
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    /// First positional argument — typically the subcommand.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    pub fn flag(&mut self, name: &str) -> bool {
+        self.consumed.insert(name.to_string());
+        self.flags.contains(name)
+    }
+
+    pub fn opt_str(&mut self, name: &str) -> Option<String> {
+        self.consumed.insert(name.to_string());
+        self.opts.get(name).cloned()
+    }
+
+    pub fn str_or(&mut self, name: &str, default: &str) -> String {
+        self.opt_str(name).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn get<T: std::str::FromStr>(&mut self, name: &str) -> Result<Option<T>, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.opt_str(name) {
+            None => Ok(None),
+            Some(s) => s
+                .parse::<T>()
+                .map(Some)
+                .map_err(|e| format!("--{name}={s}: {e}")),
+        }
+    }
+
+    pub fn get_or<T: std::str::FromStr>(&mut self, name: &str, default: T) -> Result<T, String>
+    where
+        T::Err: std::fmt::Display,
+    {
+        Ok(self.get(name)?.unwrap_or(default))
+    }
+
+    /// Error on any provided option/flag never consumed by the command.
+    pub fn finish(&self) -> Result<(), String> {
+        let unknown: Vec<&String> = self
+            .opts
+            .keys()
+            .chain(self.flags.iter())
+            .filter(|k| !self.consumed.contains(k.as_str()))
+            .collect();
+        if unknown.is_empty() {
+            Ok(())
+        } else {
+            Err(format!(
+                "unknown option(s): {}",
+                unknown
+                    .iter()
+                    .map(|k| format!("--{k}"))
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(v: &[&str]) -> Args {
+        Args::parse_from(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_key_value_styles() {
+        let mut a = args(&["train", "--trees", "20", "--mtry=4", "--verbose"]);
+        assert_eq!(a.subcommand(), Some("train"));
+        assert_eq!(a.get_or("trees", 0usize).unwrap(), 20);
+        assert_eq!(a.get_or("mtry", 0usize).unwrap(), 4);
+        assert!(a.flag("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let mut a = args(&["x"]);
+        assert_eq!(a.get_or("scale", 0.5f64).unwrap(), 0.5);
+        assert_eq!(a.str_or("out", "data/x.csv"), "data/x.csv");
+        assert!(!a.flag("full"));
+    }
+
+    #[test]
+    fn bad_value_is_error() {
+        let mut a = args(&["--trees", "twenty"]);
+        assert!(a.get::<usize>("trees").is_err());
+    }
+
+    #[test]
+    fn unknown_options_rejected() {
+        let mut a = args(&["--trees", "20", "--oops", "1"]);
+        let _ = a.get::<usize>("trees").unwrap();
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = args(&["run", "--", "--not-a-flag"]);
+        assert_eq!(a.positional(), &["run", "--not-a-flag"]);
+    }
+
+    #[test]
+    fn negative_numbers_as_values() {
+        let mut a = args(&["--lo=-5.5"]);
+        assert_eq!(a.get_or("lo", 0.0f64).unwrap(), -5.5);
+    }
+}

@@ -1,0 +1,120 @@
+//! Tiny CSV substrate for dataset persistence (header + f64 columns).
+//!
+//! The instance datasets (features + measured speedup) are written once by
+//! `lmtuner generate` and re-read by `train`/`eval`; files can reach a few
+//! hundred MB at full scale, so reading is buffered and allocation-light.
+
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+/// Write a numeric table with a header row.
+pub fn write_table(path: &Path, header: &[&str], rows: &[Vec<f64>]) -> Result<()> {
+    let f = std::fs::File::create(path)
+        .with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "{}", header.join(","))?;
+    let mut line = String::with_capacity(header.len() * 12);
+    for row in rows {
+        if row.len() != header.len() {
+            bail!("row width {} != header width {}", row.len(), header.len());
+        }
+        line.clear();
+        for (i, x) in row.iter().enumerate() {
+            if i > 0 {
+                line.push(',');
+            }
+            if x.fract() == 0.0 && x.abs() < 1e15 {
+                line.push_str(&format!("{}", *x as i64));
+            } else {
+                line.push_str(&format!("{x}"));
+            }
+        }
+        writeln!(w, "{line}")?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read a numeric table; returns (header, rows).
+pub fn read_table(path: &Path) -> Result<(Vec<String>, Vec<Vec<f64>>)> {
+    let f = std::fs::File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut lines = std::io::BufReader::new(f).lines();
+    let header_line = match lines.next() {
+        Some(l) => l?,
+        None => bail!("{}: empty file", path.display()),
+    };
+    let header: Vec<String> =
+        header_line.split(',').map(|s| s.trim().to_string()).collect();
+    let mut rows = Vec::new();
+    for (lineno, line) in lines.enumerate() {
+        let line = line?;
+        if line.trim().is_empty() {
+            continue;
+        }
+        let row: Result<Vec<f64>, _> =
+            line.split(',').map(|s| s.trim().parse::<f64>()).collect();
+        let row = row.with_context(|| {
+            format!("{}:{}: bad number", path.display(), lineno + 2)
+        })?;
+        if row.len() != header.len() {
+            bail!(
+                "{}:{}: width {} != header {}",
+                path.display(),
+                lineno + 2,
+                row.len(),
+                header.len()
+            );
+        }
+        rows.push(row);
+    }
+    Ok((header, rows))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("lmtuner-csv-{name}-{}", std::process::id()));
+        p
+    }
+
+    #[test]
+    fn roundtrip() {
+        let path = tmp("rt");
+        let header = ["a", "b", "c"];
+        let rows = vec![vec![1.0, -2.5, 3.0], vec![4.0, 5.0, 6.25]];
+        write_table(&path, &header, &rows).unwrap();
+        let (h, r) = read_table(&path).unwrap();
+        assert_eq!(h, header);
+        assert_eq!(r, rows);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_ragged_rows() {
+        let path = tmp("ragged");
+        std::fs::write(&path, "a,b\n1,2\n3\n").unwrap();
+        assert!(read_table(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_numbers() {
+        let path = tmp("nan");
+        std::fs::write(&path, "a\nxyz\n").unwrap();
+        assert!(read_table(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn write_rejects_width_mismatch() {
+        let path = tmp("width");
+        assert!(write_table(&path, &["a", "b"], &[vec![1.0]]).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

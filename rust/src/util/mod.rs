@@ -1,0 +1,12 @@
+//! Substrate utilities built in-tree (no external crates beyond `xla` +
+//! `anyhow` exist in this environment): PRNG, statistics, JSON, thread
+//! pool, CLI parsing, bench harness, property testing, CSV I/O.
+
+pub mod bench;
+pub mod cli;
+pub mod csv;
+pub mod json;
+pub mod pool;
+pub mod prng;
+pub mod prop;
+pub mod stats;

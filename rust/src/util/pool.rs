@@ -1,0 +1,194 @@
+//! Thread-pool substrate (rayon/tokio are not available).
+//!
+//! A fixed-size worker pool with a shared injector queue, plus a
+//! `parallel_map` helper used by the sweep simulator and forest trainer.
+//! On the 1-core CI box this degrades gracefully to near-sequential
+//! execution; the abstractions still structure the coordinator.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Shared {
+    queue: Mutex<VecDeque<Job>>,
+    available: Condvar,
+    shutdown: Mutex<bool>,
+    in_flight: AtomicUsize,
+    idle: Condvar,
+}
+
+/// Fixed-size thread pool with `spawn` + `wait_idle` semantics.
+pub struct ThreadPool {
+    shared: Arc<Shared>,
+    workers: Vec<JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    pub fn new(threads: usize) -> Self {
+        let threads = threads.max(1);
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(VecDeque::new()),
+            available: Condvar::new(),
+            shutdown: Mutex::new(false),
+            in_flight: AtomicUsize::new(0),
+            idle: Condvar::new(),
+        });
+        let workers = (0..threads)
+            .map(|i| {
+                let sh = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("lmtuner-worker-{i}"))
+                    .spawn(move || worker_loop(sh))
+                    .expect("spawn worker")
+            })
+            .collect();
+        Self { shared, workers }
+    }
+
+    /// Pool sized to the machine (but at least 1).
+    pub fn for_host() -> Self {
+        let n = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Self::new(n)
+    }
+
+    pub fn threads(&self) -> usize {
+        self.workers.len()
+    }
+
+    pub fn spawn<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.shared.in_flight.fetch_add(1, Ordering::SeqCst);
+        let mut q = self.shared.queue.lock().unwrap();
+        q.push_back(Box::new(f));
+        drop(q);
+        self.shared.available.notify_one();
+    }
+
+    /// Block until every spawned job has finished.
+    pub fn wait_idle(&self) {
+        let mut guard = self.shared.queue.lock().unwrap();
+        while self.shared.in_flight.load(Ordering::SeqCst) != 0 {
+            guard = self.shared.idle.wait(guard).unwrap();
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        *self.shared.shutdown.lock().unwrap() = true;
+        self.shared.available.notify_all();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop(sh: Arc<Shared>) {
+    loop {
+        let job = {
+            let mut q = sh.queue.lock().unwrap();
+            loop {
+                if let Some(j) = q.pop_front() {
+                    break j;
+                }
+                if *sh.shutdown.lock().unwrap() {
+                    return;
+                }
+                q = sh.available.wait(q).unwrap();
+            }
+        };
+        job();
+        if sh.in_flight.fetch_sub(1, Ordering::SeqCst) == 1 {
+            sh.idle.notify_all();
+        }
+    }
+}
+
+/// Chunked parallel map: applies `f` to every element of `items`, preserving
+/// order. Spawns scoped threads so `f` may borrow from the environment.
+pub fn parallel_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+{
+    let threads = threads.max(1).min(items.len().max(1));
+    if threads <= 1 || items.len() < 2 {
+        return items.iter().map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<R>>> =
+        (0..items.len()).map(|_| Mutex::new(None)).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(&items[i]);
+                *results[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    results
+        .into_iter()
+        .map(|m| m.into_inner().unwrap().expect("worker produced result"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn pool_runs_all_jobs() {
+        let pool = ThreadPool::new(4);
+        let counter = Arc::new(AtomicU64::new(0));
+        for _ in 0..100 {
+            let c = Arc::clone(&counter);
+            pool.spawn(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.wait_idle();
+        assert_eq!(counter.load(Ordering::SeqCst), 100);
+    }
+
+    #[test]
+    fn wait_idle_on_empty_pool_returns() {
+        let pool = ThreadPool::new(2);
+        pool.wait_idle();
+    }
+
+    #[test]
+    fn parallel_map_preserves_order() {
+        let items: Vec<u64> = (0..1000).collect();
+        let out = parallel_map(&items, 8, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn parallel_map_single_thread() {
+        let items = vec![1, 2, 3];
+        assert_eq!(parallel_map(&items, 1, |&x| x + 1), vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn parallel_map_empty() {
+        let items: Vec<u32> = vec![];
+        assert!(parallel_map(&items, 4, |&x| x).is_empty());
+    }
+
+    #[test]
+    fn pool_drop_joins_cleanly() {
+        let pool = ThreadPool::new(3);
+        pool.spawn(|| std::thread::sleep(std::time::Duration::from_millis(5)));
+        drop(pool); // must not hang or panic
+    }
+}

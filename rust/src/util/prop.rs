@@ -1,0 +1,104 @@
+//! Property-testing substrate (proptest is not available).
+//!
+//! `check` runs a predicate over many seeded random cases and reports the
+//! first failing seed; `forall_shrink` additionally shrinks a failing u64
+//! parameter toward zero. Tests across the crate use this for invariant
+//! checks (routing, batching, simulator monotonicity, tree validity).
+
+use super::prng::Rng;
+
+pub const DEFAULT_CASES: usize = 256;
+
+/// Run `f` on `cases` independently-seeded RNGs; panic with the seed on
+/// the first failure so the case can be replayed deterministically.
+pub fn check<F: Fn(&mut Rng) -> Result<(), String>>(name: &str, cases: usize, f: F) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000u64 + case as u64;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng) {
+            panic!("property `{name}` failed (replay seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Check a predicate over a u64 drawn from [0, bound); on failure, shrink
+/// the input toward 0 by halving and report the smallest failing value.
+pub fn forall_shrink<F: Fn(u64) -> Result<(), String>>(
+    name: &str,
+    bound: u64,
+    cases: usize,
+    f: F,
+) {
+    let mut rng = Rng::new(0xF0CA_CC1A);
+    for _ in 0..cases {
+        let x0 = rng.below(bound.max(1));
+        if let Err(first) = f(x0) {
+            // shrink
+            let mut lo_fail = x0;
+            let mut msg = first;
+            let mut cur = x0;
+            while cur > 0 {
+                let cand = cur / 2;
+                match f(cand) {
+                    Err(m) => {
+                        lo_fail = cand;
+                        msg = m;
+                        cur = cand;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property `{name}` failed at {x0}, shrunk to {lo_fail}: {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper returning Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 64, |rng| {
+            let a = rng.below(1000) as i64;
+            let b = rng.below(1000) as i64;
+            prop_assert!(a + b == b + a, "{a} {b}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "replay seed")]
+    fn failing_property_reports_seed() {
+        check("always-false", 4, |_| Err("nope".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "shrunk to 0")]
+    fn shrink_reaches_minimum() {
+        forall_shrink("never", 1 << 20, 8, |_| Err("always fails".into()));
+    }
+
+    #[test]
+    fn shrink_passes_when_ok() {
+        forall_shrink("le-bound", 100, 32, |x| {
+            if x < 100 {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+}

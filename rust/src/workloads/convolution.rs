@@ -1,0 +1,123 @@
+//! NVIDIA SDK 2D separable convolution (Table 3: 10 LOC, 600 instances).
+//!
+//! Two passes: a row convolution (taps along x) and a column convolution
+//! (taps along y). Both are warp-coalesced; the optimization's value is
+//! the (2r+1)-way stencil-overlap reuse inside the workgroup's apron-
+//! extended tile, against the staging + barrier + occupancy cost.
+//!
+//! 600 instances = 2 passes x 5 radii x 5 workgroups x 4 sizes x 3 rows
+//! per thread.
+
+use crate::gpu::spec::DeviceSpec;
+use crate::kernelmodel::descriptor::KernelDescriptor;
+
+use super::{launch_over, DescriptorBuilder};
+
+const RADII: [u32; 5] = [1, 2, 3, 4, 6];
+const WGS: [(u32, u32); 5] = [(16, 4), (16, 16), (32, 4), (32, 8), (64, 4)];
+const SIZES: [u32; 4] = [256, 512, 1024, 2048];
+const ROWS_PER_THREAD: [u32; 3] = [1, 2, 4];
+
+pub fn instances(dev: &DeviceSpec) -> Vec<KernelDescriptor> {
+    let mut out = Vec::with_capacity(600);
+    for pass in ["row", "col"] {
+        for &r in &RADII {
+            for &wg in &WGS {
+                for &size in &SIZES {
+                    for &rpt in &ROWS_PER_THREAD {
+                    let launch = launch_over(wg, (size, size / rpt));
+                    let taps = 2 * r + 1;
+                    // Apron extends along the pass direction only.
+                    let (rows, cols, bounds) = if pass == "row" {
+                        (
+                            wg.1 as u64,
+                            (wg.0 + 2 * r) as u64,
+                            (0, 0, -(r as i32), r as i32),
+                        )
+                    } else {
+                        (
+                            (wg.1 + 2 * r) as u64,
+                            wg.0 as u64,
+                            (-(r as i32), r as i32, 0, 0),
+                        )
+                    };
+                    let reuse = (launch.wg.size() * taps) as f64
+                        / (rows * cols) as f64;
+                    out.push(
+                        DescriptorBuilder {
+                            name: format!(
+                                "convolution_{pass}_r{r}_wg{}x{}_{size}_rpt{rpt}",
+                                wg.0, wg.1
+                            ),
+                            taps,
+                            inner_iters: 1,
+                            comp_ilb: taps, // one MAC per tap
+                            comp_ep: 1,
+                            coal_ilb: 0,
+                            coal_ep: 1, // output write
+                            uncoal_ilb: 0,
+                            uncoal_ep: 0,
+                            tx_per_target_access: if pass == "row" {
+                                1.0
+                            } else {
+                                // column pass: taps hit different rows but
+                                // each warp row is still one segment
+                                1.0
+                            },
+                            region_rows: rows,
+                            region_cols: cols,
+                            reuse,
+                            offset_bounds: bounds,
+                            base_regs: 14 + (taps / 4).min(20),
+                            opt_extra_regs: 4,
+                            launch,
+                            wus_per_wi: rpt as u64,
+                        }
+                        .build(dev),
+                    );
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_is_600() {
+        assert_eq!(instances(&DeviceSpec::m2090()).len(), 600);
+    }
+
+    #[test]
+    fn reuse_grows_with_radius() {
+        let dev = DeviceSpec::m2090();
+        let all = instances(&dev);
+        let avg = |r: u32| {
+            let v: Vec<f64> = all
+                .iter()
+                .filter(|d| d.name.contains(&format!("_r{r}_")))
+                .map(|d| d.reuse)
+                .collect();
+            v.iter().sum::<f64>() / v.len() as f64
+        };
+        assert!(avg(6) > avg(1), "{} !> {}", avg(6), avg(1));
+    }
+
+    #[test]
+    fn both_passes_present_with_correct_apron() {
+        for d in instances(&DeviceSpec::m2090()) {
+            let (r0, r1, c0, c1) = d.offset_bounds;
+            if d.name.contains("_row_") {
+                assert_eq!((r0, r1), (0, 0));
+                assert!(c1 > 0 && c0 < 0);
+            } else {
+                assert_eq!((c0, c1), (0, 0));
+                assert!(r1 > 0 && r0 < 0);
+            }
+        }
+    }
+}

@@ -1,0 +1,96 @@
+//! NVIDIA SDK matrix multiply, C = A x B (Table 3: 9 LOC, 330 instances).
+//!
+//! Work unit = one C element; each k-tile round the workgroup stages a
+//! TILE_K x WG_W block of B (the target array). B accesses are warp-
+//! coalesced already — the optimization's value is pure inter-thread
+//! reuse (each staged element serves the workgroup's WG_H rows), traded
+//! against staging cost and occupancy.
+//!
+//! 330 instances = 2 sizes x 3 k-tiles x 11 workgroups x 5 unrolls.
+
+use crate::gpu::spec::DeviceSpec;
+use crate::kernelmodel::descriptor::KernelDescriptor;
+
+use super::{launch_over, DescriptorBuilder};
+
+const SIZES: [u32; 2] = [512, 1024];
+const TILE_K: [u32; 3] = [4, 8, 16];
+const WGS: [(u32, u32); 11] = [
+    (16, 4), (16, 8), (16, 16), (32, 2), (32, 4), (32, 8), (32, 16),
+    (8, 8), (8, 16), (64, 2), (64, 4),
+];
+const UNROLL: [u32; 5] = [1, 2, 3, 4, 5];
+
+pub fn instances(dev: &DeviceSpec) -> Vec<KernelDescriptor> {
+    let mut out = Vec::with_capacity(330);
+    for &size in &SIZES {
+        for &tk in &TILE_K {
+            for &wg in &WGS {
+                for &u in &UNROLL {
+                    let launch = launch_over(wg, (size, size));
+                    let region = (tk as u64, wg.0 as u64);
+                    let reuse = (launch.wg.size() as u64 * tk as u64) as f64
+                        / (region.0 * region.1) as f64; // = wg_h
+                    out.push(
+                        DescriptorBuilder {
+                            name: format!(
+                                "matrixMul_{size}_k{tk}_wg{}x{}_u{u}",
+                                wg.0, wg.1
+                            ),
+                            taps: 1,
+                            inner_iters: tk as u64,
+                            comp_ilb: 2 * u, // unrolled FMA chain
+                            comp_ep: 2,
+                            coal_ilb: 1, // the A[row, k] broadcast read
+                            coal_ep: 1,  // C write
+                            uncoal_ilb: 0,
+                            uncoal_ep: 0,
+                            tx_per_target_access: 1.0, // B is coalesced
+                            region_rows: region.0,
+                            region_cols: region.1,
+                            reuse,
+                            offset_bounds: (0, 0, 0, 0),
+                            base_regs: 18 + 2 * u,
+                            opt_extra_regs: 4,
+                            launch,
+                            wus_per_wi: (size / tk).max(1) as u64, // k rounds
+                        }
+                        .build(dev),
+                    );
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::exec::{measure, MeasureConfig};
+
+    #[test]
+    fn count_is_330() {
+        assert_eq!(instances(&DeviceSpec::m2090()).len(), 330);
+    }
+
+    #[test]
+    fn reuse_equals_wg_height() {
+        for d in instances(&DeviceSpec::m2090()) {
+            assert!((d.reuse - d.launch.wg.h as f64).abs() < 1e-9, "{}", d.name);
+        }
+    }
+
+    #[test]
+    fn outcome_depends_on_configuration() {
+        // matrixMul must be mixed: tall workgroups reuse enough to win,
+        // flat ones don't.
+        let dev = DeviceSpec::m2090();
+        let cfg = MeasureConfig::deterministic();
+        let recs: Vec<_> =
+            instances(&dev).iter().map(|d| measure(d, &dev, &cfg)).collect();
+        let wins = recs.iter().filter(|r| r.beneficial()).count();
+        assert!(wins > 0, "never beneficial");
+        assert!(wins < recs.len(), "always beneficial");
+    }
+}

@@ -1,0 +1,244 @@
+//! The eight real-world benchmarks of paper Table 3.
+//!
+//! Each module describes one kernel's target-array access structure the
+//! way the paper extracts features from real applications: *manually*,
+//! by mapping the kernel's work-unit structure onto the template model.
+//! Every benchmark produces exactly the kernel-instance count of Table 3
+//! (varying launch configuration, tiling factors and problem sizes), and
+//! the instances are *not* template instances — each uses its own access
+//! geometry, so the distribution shift vs. the synthetic population
+//! (paper Fig. 1b-1i vs 1a) is real.
+
+pub mod convolution;
+pub mod matrixmul;
+pub mod mri_gridding;
+pub mod mvt;
+pub mod sad;
+pub mod sgemm;
+pub mod tpacf;
+pub mod transpose;
+
+use crate::gpu::spec::DeviceSpec;
+use crate::kernelmodel::descriptor::KernelDescriptor;
+use crate::kernelmodel::launch::{GridGeom, Launch, WgGeom};
+
+/// Static description of one benchmark (Table 3 row).
+pub struct Benchmark {
+    pub name: &'static str,
+    pub suite: &'static str,
+    pub description: &'static str,
+    /// Lines of (kernel) code reported by the paper.
+    pub loc: u32,
+    /// Kernel instances the paper evaluates.
+    pub paper_instances: usize,
+    pub instances: fn(&DeviceSpec) -> Vec<KernelDescriptor>,
+}
+
+/// Table 3, in paper order.
+pub fn all() -> Vec<Benchmark> {
+    vec![
+        Benchmark {
+            name: "transpose",
+            suite: "NVIDIA SDK",
+            description: "Matrix transpose",
+            loc: 6,
+            paper_instances: 21,
+            instances: transpose::instances,
+        },
+        Benchmark {
+            name: "matrixMul",
+            suite: "NVIDIA SDK",
+            description: "Matrix multiply (C = A x B)",
+            loc: 9,
+            paper_instances: 330,
+            instances: matrixmul::instances,
+        },
+        Benchmark {
+            name: "convolution",
+            suite: "NVIDIA SDK",
+            description: "2D separable convolution",
+            loc: 10,
+            paper_instances: 600,
+            instances: convolution::instances,
+        },
+        Benchmark {
+            name: "MVT",
+            suite: "Polybench",
+            description: "Matrix vector multiply",
+            loc: 9,
+            paper_instances: 120,
+            instances: mvt::instances,
+        },
+        Benchmark {
+            name: "SGEMM",
+            suite: "Polybench",
+            description: "C = alpha*A*B + beta*C",
+            loc: 10,
+            paper_instances: 48,
+            instances: sgemm::instances,
+        },
+        Benchmark {
+            name: "SAD",
+            suite: "Parboil",
+            description: "Sum-of-absolute-differences between image blocks",
+            loc: 94,
+            paper_instances: 517,
+            instances: sad::instances,
+        },
+        Benchmark {
+            name: "TPACF",
+            suite: "Parboil",
+            description: "Angular correlation function of astronomical bodies",
+            loc: 129,
+            paper_instances: 35,
+            instances: tpacf::instances,
+        },
+        Benchmark {
+            name: "MRI-GRIDDING",
+            suite: "Parboil",
+            description: "Regular-grid MR reconstruction by weighted interpolation",
+            loc: 126,
+            paper_instances: 35,
+            instances: mri_gridding::instances,
+        },
+    ]
+}
+
+/// Shared builder so each benchmark only states what differs.
+#[allow(clippy::too_many_arguments)]
+pub struct DescriptorBuilder {
+    pub name: String,
+    pub taps: u32,
+    pub inner_iters: u64,
+    pub comp_ilb: u32,
+    pub comp_ep: u32,
+    pub coal_ilb: u32,
+    pub coal_ep: u32,
+    pub uncoal_ilb: u32,
+    pub uncoal_ep: u32,
+    pub tx_per_target_access: f64,
+    pub region_rows: u64,
+    pub region_cols: u64,
+    pub reuse: f64,
+    pub offset_bounds: (i32, i32, i32, i32),
+    pub base_regs: u32,
+    pub opt_extra_regs: u32,
+    pub launch: Launch,
+    pub wus_per_wi: u64,
+}
+
+impl DescriptorBuilder {
+    pub fn build(self, dev: &DeviceSpec) -> KernelDescriptor {
+        KernelDescriptor {
+            name: self.name,
+            taps: self.taps,
+            inner_iters: self.inner_iters,
+            comp_ilb: self.comp_ilb,
+            comp_ep: self.comp_ep,
+            coal_ilb: self.coal_ilb,
+            coal_ep: self.coal_ep,
+            uncoal_ilb: self.uncoal_ilb,
+            uncoal_ep: self.uncoal_ep,
+            tx_per_target_access: self.tx_per_target_access,
+            uncoal_ctx_tx: dev.warp_size.min(self.launch.wg.size()) as f64,
+            region_rows: self.region_rows,
+            region_cols: self.region_cols,
+            reuse: self.reuse,
+            offset_bounds: self.offset_bounds,
+            base_regs: self.base_regs.min(dev.max_regs_per_thread),
+            opt_extra_regs: self
+                .opt_extra_regs
+                .min(dev.max_regs_per_thread - self.base_regs.min(dev.max_regs_per_thread)),
+            launch: self.launch,
+            wus_per_wi: self.wus_per_wi,
+            elem_bytes: 4,
+        }
+    }
+}
+
+/// Launch over an out_w x out_h iteration space with the given workgroup;
+/// grid covers the space directly (one workitem per output element unless
+/// the caller divides).
+pub fn launch_over(wg: (u32, u32), out: (u32, u32)) -> Launch {
+    Launch::new(
+        WgGeom { w: wg.0, h: wg.1 },
+        GridGeom { w: out.0.max(wg.0), h: out.1.max(wg.1) },
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::exec::{measure, MeasureConfig};
+    use crate::sim::timing::{simulate, Variant};
+
+    #[test]
+    fn instance_counts_match_table3() {
+        let dev = DeviceSpec::m2090();
+        for b in all() {
+            let got = (b.instances)(&dev).len();
+            assert_eq!(got, b.paper_instances, "{}", b.name);
+        }
+    }
+
+    #[test]
+    fn all_baselines_are_feasible() {
+        let dev = DeviceSpec::m2090();
+        for b in all() {
+            for d in (b.instances)(&dev) {
+                assert!(
+                    simulate(&d, &dev, Variant::Baseline).feasible(),
+                    "{}: {} baseline infeasible",
+                    b.name,
+                    d.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn features_are_finite_and_speedups_sane() {
+        let dev = DeviceSpec::m2090();
+        let cfg = MeasureConfig::deterministic();
+        for b in all() {
+            for d in (b.instances)(&dev) {
+                let r = measure(&d, &dev, &cfg);
+                assert!(r.features.iter().all(|x| x.is_finite()), "{}", d.name);
+                assert!(r.speedup > 0.0 && r.speedup.is_finite());
+            }
+        }
+    }
+
+    #[test]
+    fn benchmarks_have_distinct_speedup_profiles() {
+        // The eight Fig.-1 histograms must not all look alike: at least
+        // one benchmark should be mostly-beneficial and one mostly-not.
+        let dev = DeviceSpec::m2090();
+        let cfg = MeasureConfig::deterministic();
+        let mut fracs = Vec::new();
+        for b in all() {
+            let recs: Vec<_> = (b.instances)(&dev)
+                .iter()
+                .map(|d| measure(d, &dev, &cfg))
+                .collect();
+            let frac = recs.iter().filter(|r| r.beneficial()).count() as f64
+                / recs.len() as f64;
+            fracs.push((b.name, frac));
+        }
+        let max = fracs.iter().map(|f| f.1).fold(0.0, f64::max);
+        let min = fracs.iter().map(|f| f.1).fold(1.0, f64::min);
+        assert!(max > 0.6, "no mostly-beneficial benchmark: {fracs:?}");
+        assert!(min < 0.4, "no mostly-harmful benchmark: {fracs:?}");
+    }
+
+    #[test]
+    fn names_are_unique_within_benchmarks() {
+        let dev = DeviceSpec::m2090();
+        for b in all() {
+            let mut seen = std::collections::HashSet::new();
+            for d in (b.instances)(&dev) {
+                assert!(seen.insert(d.name.clone()), "dup {}", d.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! Parboil MRI-GRIDDING: regular-grid MR reconstruction by weighted
+//! interpolation of acquired sample points (Table 3: 126 LOC, 35
+//! instances).
+//!
+//! Each work unit processes one sample and scatters a weighted kernel
+//! into a neighbourhood of grid cells. The sample reads are coalesced
+//! streams; the grid updates are scattered with little inter-thread
+//! overlap (samples land anywhere), so the stageable region is a large
+//! bin of the output grid with low reuse — staging is usually not worth
+//! it, except for dense bins with small kernels.
+//!
+//! 35 instances = 5 workgroups x 7 (kernel width, bin size) configs.
+
+use crate::gpu::spec::DeviceSpec;
+use crate::kernelmodel::descriptor::KernelDescriptor;
+
+use super::{launch_over, DescriptorBuilder};
+
+const WGS: [(u32, u32); 5] = [(64, 1), (128, 1), (256, 1), (512, 1), (32, 4)];
+/// (interp kernel width, grid bin edge) — 7 combos.
+const CONFIGS: [(u32, u32); 7] = [
+    (2, 16), (2, 32), (4, 16), (4, 32), (4, 64), (8, 32), (8, 64),
+];
+
+pub fn instances(dev: &DeviceSpec) -> Vec<KernelDescriptor> {
+    let mut out = Vec::with_capacity(35);
+    for &wg in &WGS {
+        for &(kw, bin) in &CONFIGS {
+            let launch = launch_over(wg, (32768, 1));
+            let taps = kw * kw;
+            let rows = bin as u64;
+            let cols = bin as u64;
+            // Samples scatter: modest overlap within a bin.
+            let reuse = (launch.wg.size() as u64 * taps as u64) as f64
+                / (rows * cols) as f64;
+            out.push(
+                DescriptorBuilder {
+                    name: format!("MRI-GRIDDING_wg{}x{}_k{kw}_b{bin}", wg.0, wg.1),
+                    taps,
+                    inner_iters: 1,
+                    comp_ilb: 6 + 2 * taps, // Kaiser-Bessel weight + MACs
+                    comp_ep: 4,
+                    coal_ilb: 2, // sample coordinates + value reads
+                    coal_ep: 0,
+                    uncoal_ilb: 0,
+                    uncoal_ep: 0,
+                    // Scattered grid updates: lanes land in different rows.
+                    tx_per_target_access: (dev.warp_size / 4) as f64,
+                    region_rows: rows,
+                    region_cols: cols,
+                    reuse,
+                    offset_bounds: (
+                        0,
+                        kw as i32 - 1,
+                        0,
+                        kw as i32 - 1,
+                    ),
+                    base_regs: 38,
+                    opt_extra_regs: 6,
+                    launch,
+                    wus_per_wi: 8,
+                }
+                .build(dev),
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::exec::{measure, MeasureConfig};
+
+    #[test]
+    fn count_is_35() {
+        assert_eq!(instances(&DeviceSpec::m2090()).len(), 35);
+    }
+
+    #[test]
+    fn outcome_is_mixed() {
+        let dev = DeviceSpec::m2090();
+        let cfg = MeasureConfig::deterministic();
+        let recs: Vec<_> =
+            instances(&dev).iter().map(|d| measure(d, &dev, &cfg)).collect();
+        let wins = recs.iter().filter(|r| r.beneficial()).count();
+        assert!(wins > 0 && wins < recs.len(), "{wins}/{}", recs.len());
+    }
+
+    #[test]
+    fn low_reuse_vs_sad() {
+        let dev = DeviceSpec::m2090();
+        let avg: f64 = instances(&dev).iter().map(|d| d.reuse).sum::<f64>()
+            / 35.0;
+        assert!(avg < 20.0, "avg reuse {avg}");
+    }
+}

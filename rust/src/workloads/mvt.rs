@@ -1,0 +1,107 @@
+//! Polybench MVT: y1 = A*x1 and y2 = A^T*x2 (Table 3: 9 LOC, 120
+//! instances).
+//!
+//! Kernel 1 (row-wise reduction) is the paper's §2 motivating case: each
+//! workitem reduces its own row, so a warp touches 32 different rows at
+//! once — fully scattered. Staging a column batch fixes the coalescing.
+//! Kernel 2 walks columns: already coalesced, no reuse — staging can only
+//! lose. The two shapes give MVT its bimodal Fig.-1 histogram.
+//!
+//! 120 instances = 2 kernels x 6 workgroups x 10 problem/batch configs.
+
+use crate::gpu::spec::DeviceSpec;
+use crate::kernelmodel::descriptor::KernelDescriptor;
+
+use super::{launch_over, DescriptorBuilder};
+
+const WGS: [(u32, u32); 6] =
+    [(32, 1), (64, 1), (128, 1), (256, 1), (32, 4), (64, 4)];
+const CONFIGS: [(u32, u32); 10] = [
+    // (matrix size, column batch staged per round)
+    (512, 16), (512, 32), (1024, 16), (1024, 32), (1024, 64),
+    (2048, 16), (2048, 32), (2048, 64), (2048, 128), (4096, 32),
+];
+
+pub fn instances(dev: &DeviceSpec) -> Vec<KernelDescriptor> {
+    let mut out = Vec::with_capacity(120);
+    for kernel in [1u32, 2u32] {
+        for &wg in &WGS {
+            for &(size, batch) in &CONFIGS {
+                let launch = launch_over(wg, (size, 1));
+                let wg_size = launch.wg.size();
+                let scattered = kernel == 1;
+                let tx = if scattered {
+                    dev.warp_size.min(wg_size) as f64
+                } else {
+                    1.0
+                };
+                out.push(
+                    DescriptorBuilder {
+                        name: format!("MVT_k{kernel}_wg{}x{}_{size}_b{batch}", wg.0, wg.1),
+                        taps: 1,
+                        inner_iters: batch as u64,
+                        comp_ilb: 2, // multiply-add with x
+                        comp_ep: 1,
+                        coal_ilb: 1, // x vector read (broadcast-coalesced)
+                        coal_ep: 1,  // y write
+                        uncoal_ilb: 0,
+                        uncoal_ep: 0,
+                        tx_per_target_access: tx,
+                        // Stage wg_size rows x batch columns of A.
+                        region_rows: wg_size as u64,
+                        region_cols: batch as u64,
+                        reuse: 1.0, // every A element read exactly once
+                        offset_bounds: (0, 0, 0, 0),
+                        base_regs: 12,
+                        opt_extra_regs: 4,
+                        launch,
+                        wus_per_wi: (size / batch).max(1) as u64,
+                    }
+                    .build(dev),
+                );
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::exec::{measure, MeasureConfig};
+
+    #[test]
+    fn count_is_120() {
+        assert_eq!(instances(&DeviceSpec::m2090()).len(), 120);
+    }
+
+    #[test]
+    fn kernel1_scattered_kernel2_coalesced() {
+        for d in instances(&DeviceSpec::m2090()) {
+            if d.name.contains("_k1_") {
+                assert!(d.tx_per_target_access > 1.0, "{}", d.name);
+            } else {
+                assert_eq!(d.tx_per_target_access, 1.0, "{}", d.name);
+            }
+        }
+    }
+
+    #[test]
+    fn bimodal_benefit() {
+        let dev = DeviceSpec::m2090();
+        let cfg = MeasureConfig::deterministic();
+        let (mut k1_wins, mut k1_n, mut k2_wins, mut k2_n) = (0, 0, 0, 0);
+        for d in instances(&dev) {
+            let r = measure(&d, &dev, &cfg);
+            if d.name.contains("_k1_") {
+                k1_n += 1;
+                k1_wins += r.beneficial() as usize;
+            } else {
+                k2_n += 1;
+                k2_wins += r.beneficial() as usize;
+            }
+        }
+        assert!(k1_wins * 2 > k1_n, "k1: {k1_wins}/{k1_n}");
+        assert!(k2_wins * 2 < k2_n, "k2: {k2_wins}/{k2_n}");
+    }
+}

@@ -1,0 +1,117 @@
+//! Parboil SAD: sum-of-absolute-differences between image-block pairs
+//! for H.264 motion estimation (Table 3: 94 LOC, 517 instances).
+//!
+//! Each work unit scores one candidate motion vector for one 4x4 block:
+//! 16 reference-frame taps per search position, with neighbouring search
+//! positions overlapping heavily (high intra-workgroup reuse of the
+//! search window). The search window staged per workgroup can get large,
+//! so benefit flips with search range and workgroup shape.
+//!
+//! 517 instances = 11 (block, search-range) combos x 47 launch configs —
+//! the paper's sweep is likewise a truncated parameter product.
+
+use crate::gpu::spec::DeviceSpec;
+use crate::kernelmodel::descriptor::KernelDescriptor;
+
+use super::{launch_over, DescriptorBuilder};
+
+/// (block edge, search range) — 11 combos.
+const SHAPES: [(u32, u32); 11] = [
+    (4, 4), (4, 8), (4, 16), (4, 32), (8, 4), (8, 8), (8, 16), (8, 32),
+    (16, 4), (16, 8), (16, 48),
+];
+const WGS: [(u32, u32); 8] = [
+    (8, 4), (8, 8), (16, 4), (16, 8), (16, 16), (32, 4), (32, 8), (64, 2),
+];
+const FRAMES: [u32; 6] = [176, 352, 704, 1408, 2816, 5632]; // CIF multiples
+
+pub fn instances(dev: &DeviceSpec) -> Vec<KernelDescriptor> {
+    let mut out = Vec::with_capacity(517);
+    'outer: for &(block, range) in &SHAPES {
+        for &wg in &WGS {
+            for &frame in &FRAMES {
+                if out.len() == 517 {
+                    break 'outer;
+                }
+                let launch = launch_over(wg, (frame.min(1408), 64));
+                let taps = block * block;
+                // Search window staged per workgroup: the union of all
+                // candidate blocks the group's work units touch.
+                let rows = (2 * range + block + wg.1) as u64;
+                let cols = (2 * range + block + wg.0) as u64;
+                let positions = (2 * range + 1) as u64; // per work unit
+                let reuse = (launch.wg.size() as u64
+                    * taps as u64
+                    * positions) as f64
+                    / (rows * cols) as f64;
+                out.push(
+                    DescriptorBuilder {
+                        name: format!(
+                            "SAD_b{block}_r{range}_wg{}x{}_{frame}",
+                            wg.0, wg.1
+                        ),
+                        taps,
+                        inner_iters: positions,
+                        comp_ilb: 2 * taps, // abs-diff + accumulate per tap
+                        comp_ep: 6,         // min-reduction bookkeeping
+                        coal_ilb: 1,        // current-block read
+                        coal_ep: 1,         // SAD output write
+                        uncoal_ilb: 0,
+                        uncoal_ep: 1,       // motion-vector table update
+                        tx_per_target_access: (block as f64 / 8.0).max(1.0),
+                        region_rows: rows,
+                        region_cols: cols,
+                        reuse,
+                        offset_bounds: (
+                            -(range as i32),
+                            (range + block) as i32,
+                            -(range as i32),
+                            (range + block) as i32,
+                        ),
+                        base_regs: 30,
+                        opt_extra_regs: 6,
+                        launch,
+                        wus_per_wi: 4,
+                    }
+                    .build(dev),
+                );
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::exec::{measure, MeasureConfig};
+
+    #[test]
+    fn count_is_517() {
+        assert_eq!(instances(&DeviceSpec::m2090()).len(), 517);
+    }
+
+    #[test]
+    fn reuse_is_high() {
+        let dev = DeviceSpec::m2090();
+        let avg: f64 = instances(&dev).iter().map(|d| d.reuse).sum::<f64>()
+            / 517.0;
+        assert!(avg > 10.0, "avg reuse {avg}");
+    }
+
+    #[test]
+    fn large_windows_can_be_infeasible() {
+        // Some search windows exceed 48 KB -> those instances must be
+        // "don't optimize" (the mixed outcome the paper reports for SAD).
+        let dev = DeviceSpec::m2090();
+        let cfg = MeasureConfig::deterministic();
+        let over: Vec<_> = instances(&dev)
+            .into_iter()
+            .filter(|d| !d.lmem_feasible(&dev))
+            .collect();
+        assert!(!over.is_empty());
+        for d in &over {
+            assert!(!measure(d, &dev, &cfg).beneficial());
+        }
+    }
+}

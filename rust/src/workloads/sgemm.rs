@@ -1,0 +1,71 @@
+//! Polybench SGEMM: C = alpha*A*B + beta*C (Table 3: 10 LOC, 48
+//! instances).
+//!
+//! Same staging structure as matrixMul (tile of B reused across the
+//! workgroup's rows) plus a heavier epilogue: the alpha/beta update reads
+//! and writes C. 48 instances = 4 workgroups x 3 sizes x 4 k-tiles.
+
+use crate::gpu::spec::DeviceSpec;
+use crate::kernelmodel::descriptor::KernelDescriptor;
+
+use super::{launch_over, DescriptorBuilder};
+
+const WGS: [(u32, u32); 4] = [(16, 4), (16, 16), (32, 4), (32, 8)];
+const SIZES: [u32; 3] = [512, 1024, 2048];
+const TILE_K: [u32; 4] = [4, 8, 16, 32];
+
+pub fn instances(dev: &DeviceSpec) -> Vec<KernelDescriptor> {
+    let mut out = Vec::with_capacity(48);
+    for &wg in &WGS {
+        for &size in &SIZES {
+            for &tk in &TILE_K {
+                let launch = launch_over(wg, (size, size));
+                let region = (tk as u64, wg.0 as u64);
+                let reuse = (launch.wg.size() as u64 * tk as u64) as f64
+                    / (region.0 * region.1) as f64;
+                out.push(
+                    DescriptorBuilder {
+                        name: format!("SGEMM_{size}_k{tk}_wg{}x{}", wg.0, wg.1),
+                        taps: 1,
+                        inner_iters: tk as u64,
+                        comp_ilb: 2,
+                        comp_ep: 4, // alpha*acc + beta*C
+                        coal_ilb: 1,
+                        coal_ep: 2, // C read + write
+                        uncoal_ilb: 0,
+                        uncoal_ep: 0,
+                        tx_per_target_access: 1.0,
+                        region_rows: region.0,
+                        region_cols: region.1,
+                        reuse,
+                        offset_bounds: (0, 0, 0, 0),
+                        base_regs: 24,
+                        opt_extra_regs: 4,
+                        launch,
+                        wus_per_wi: (size / tk).max(1) as u64,
+                    }
+                    .build(dev),
+                );
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn count_is_48() {
+        assert_eq!(instances(&DeviceSpec::m2090()).len(), 48);
+    }
+
+    #[test]
+    fn epilogue_heavier_than_matrixmul() {
+        for d in instances(&DeviceSpec::m2090()) {
+            assert!(d.comp_ep >= 4);
+            assert_eq!(d.coal_ep, 2);
+        }
+    }
+}

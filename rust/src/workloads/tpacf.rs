@@ -1,0 +1,89 @@
+//! Parboil TPACF: two-point angular correlation function of astronomical
+//! bodies (Table 3: 129 LOC, 35 instances).
+//!
+//! Compute-dominated: each work unit compares a body against a tile of
+//! other bodies — dozens of transcendental-heavy operations per pair,
+//! a single coalesced target read per iteration, and a histogram update.
+//! Latency is already hidden by arithmetic, so staging the body tile
+//! rarely pays and the extra shared memory can cost occupancy: TPACF is
+//! the "mostly don't optimize" histogram of Fig. 1.
+//!
+//! 35 instances = 5 workgroups x 7 dataset/tile configs.
+
+use crate::gpu::spec::DeviceSpec;
+use crate::kernelmodel::descriptor::KernelDescriptor;
+
+use super::{launch_over, DescriptorBuilder};
+
+const WGS: [(u32, u32); 5] = [(64, 1), (128, 1), (256, 1), (32, 4), (64, 4)];
+/// (bodies, tile of bodies staged per round) — 7 combos.
+const CONFIGS: [(u32, u32); 7] = [
+    (4096, 64), (4096, 128), (16384, 64), (16384, 128), (16384, 256),
+    (65536, 128), (65536, 256),
+];
+
+pub fn instances(dev: &DeviceSpec) -> Vec<KernelDescriptor> {
+    let mut out = Vec::with_capacity(35);
+    for &wg in &WGS {
+        for &(bodies, tile) in &CONFIGS {
+            let launch = launch_over(wg, (bodies.min(8192), 1));
+            // Staged region: tile bodies x 3 coords (f32).
+            let rows = tile as u64;
+            let cols = 3u64;
+            let reuse = (launch.wg.size() as u64 * tile as u64) as f64
+                / (rows * cols) as f64;
+            out.push(
+                DescriptorBuilder {
+                    name: format!("TPACF_wg{}x{}_{bodies}_t{tile}", wg.0, wg.1),
+                    taps: 3, // the three coordinates of the partner body
+                    inner_iters: tile as u64,
+                    comp_ilb: 38, // dot product + acos approximation + bin
+                    comp_ep: 8,
+                    coal_ilb: 0,
+                    coal_ep: 0,
+                    uncoal_ilb: 0,
+                    uncoal_ep: 1, // per-round histogram merge (scattered)
+                    tx_per_target_access: 1.0,
+                    region_rows: rows,
+                    region_cols: cols,
+                    reuse,
+                    offset_bounds: (0, 2, 0, 0),
+                    base_regs: 42,
+                    opt_extra_regs: 6,
+                    launch,
+                    wus_per_wi: (bodies / tile).max(1) as u64,
+                }
+                .build(dev),
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::exec::{measure, MeasureConfig};
+
+    #[test]
+    fn count_is_35() {
+        assert_eq!(instances(&DeviceSpec::m2090()).len(), 35);
+    }
+
+    #[test]
+    fn mostly_not_beneficial() {
+        let dev = DeviceSpec::m2090();
+        let cfg = MeasureConfig::deterministic();
+        let recs: Vec<_> =
+            instances(&dev).iter().map(|d| measure(d, &dev, &cfg)).collect();
+        let wins = recs.iter().filter(|r| r.beneficial()).count();
+        assert!(wins * 2 < recs.len(), "{wins}/{}", recs.len());
+    }
+
+    #[test]
+    fn compute_dominated() {
+        for d in instances(&DeviceSpec::m2090()) {
+            assert!(d.comp_ilb as f64 >= 10.0 * d.taps as f64 / 3.0);
+        }
+    }
+}

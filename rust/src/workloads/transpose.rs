@@ -1,0 +1,86 @@
+//! NVIDIA SDK matrix transpose (Table 3: 6 LOC, 21 instances).
+//!
+//! out[x][y] = in[y][x]. The read is coalesced; the transposed write is
+//! fully scattered across rows — the canonical coalescing-fix use of
+//! local memory (stage a tile, write it back transposed, both coalesced).
+//! No data reuse at all: the optimization lives or dies on the
+//! non-coalescing degree and the launch shape.
+//!
+//! 21 instances = 7 workgroup tiles x 3 matrix sizes.
+
+use crate::gpu::spec::DeviceSpec;
+use crate::kernelmodel::descriptor::KernelDescriptor;
+
+use super::{launch_over, DescriptorBuilder};
+
+const WGS: [(u32, u32); 7] =
+    [(8, 8), (16, 8), (16, 16), (32, 8), (32, 16), (32, 32), (64, 4)];
+const SIZES: [u32; 3] = [512, 1024, 2048];
+
+pub fn instances(dev: &DeviceSpec) -> Vec<KernelDescriptor> {
+    let mut out = Vec::with_capacity(21);
+    for &size in &SIZES {
+        for &wg in &WGS {
+            let launch = launch_over(wg, (size, size));
+            // Scattered write: one row per lane along wi_x.
+            let tx = dev.warp_size.min(wg.0) as f64;
+            out.push(
+                DescriptorBuilder {
+                    name: format!("transpose_{size}_wg{}x{}", wg.0, wg.1),
+                    taps: 1,
+                    inner_iters: 1,
+                    comp_ilb: 0,
+                    comp_ep: 2, // index arithmetic
+                    coal_ilb: 1, // the coalesced read of in
+                    coal_ep: 0,
+                    uncoal_ilb: 0,
+                    uncoal_ep: 0,
+                    tx_per_target_access: tx,
+                    // Scattered writes span wg.0 rows of `out`; the staged
+                    // tile is wg.0 rows x (wg.1 + 1) columns (+1 is the
+                    // classic bank-conflict pad).
+                    region_rows: wg.0 as u64,
+                    region_cols: wg.1 as u64 + 1,
+                    reuse: 1.0,
+                    offset_bounds: (0, 0, 0, 0),
+                    base_regs: 10,
+                    opt_extra_regs: 4,
+                    launch,
+                    wus_per_wi: 1,
+                }
+                .build(dev),
+            );
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::exec::{measure, MeasureConfig};
+
+    #[test]
+    fn count_is_21() {
+        assert_eq!(instances(&DeviceSpec::m2090()).len(), 21);
+    }
+
+    #[test]
+    fn mostly_beneficial() {
+        // Transpose is the canonical staging win.
+        let dev = DeviceSpec::m2090();
+        let cfg = MeasureConfig::deterministic();
+        let recs: Vec<_> =
+            instances(&dev).iter().map(|d| measure(d, &dev, &cfg)).collect();
+        let wins = recs.iter().filter(|r| r.beneficial()).count();
+        assert!(wins * 2 > recs.len(), "{wins}/{}", recs.len());
+    }
+
+    #[test]
+    fn no_reuse_extracted() {
+        for d in instances(&DeviceSpec::m2090()) {
+            assert_eq!(d.reuse, 1.0);
+            assert!(d.tx_per_target_access >= 8.0);
+        }
+    }
+}

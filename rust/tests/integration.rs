@@ -1,0 +1,222 @@
+//! Cross-module integration tests: generator -> simulator -> trainer ->
+//! metrics -> persistence, plus property checks on system invariants.
+
+use lmtuner::gpu::spec::DeviceSpec;
+use lmtuner::kernelmodel::features::{extract, NUM_FEATURES};
+use lmtuner::kernelmodel::launch::Launch;
+use lmtuner::ml::export::{encode, ExportContract};
+use lmtuner::ml::forest::{Forest, ForestConfig};
+use lmtuner::ml::metrics;
+use lmtuner::sim::exec::{measure, MeasureConfig};
+use lmtuner::sim::timing::{simulate, Variant};
+use lmtuner::synth::{dataset, generator, sweep::LaunchSweep};
+use lmtuner::util::prng::Rng;
+use lmtuner::util::prop;
+use lmtuner::workloads;
+
+fn small_records() -> Vec<lmtuner::sim::exec::SpeedupRecord> {
+    let dev = DeviceSpec::m2090();
+    let mut rng = Rng::new(42);
+    let templates = generator::generate_n(&mut rng, 5);
+    let sweep = LaunchSweep::new(2048, 2048);
+    let cfg = dataset::BuildConfig { configs_per_kernel: 8, ..Default::default() };
+    dataset::build(&templates, &sweep, &dev, &cfg)
+}
+
+#[test]
+fn pipeline_learns_the_simulator() {
+    let records = small_records();
+    assert!(records.len() > 3000);
+    let (train, test) = dataset::split(&records, 0.2, 1);
+    let forest = Forest::fit_records(&train, &ForestConfig::default());
+    let acc = metrics::evaluate_model(&test, |x| forest.decide(x));
+    assert!(acc.count_based > 0.72, "count {}", acc.count_based);
+    assert!(acc.penalty_weighted > 0.92, "penalty {}", acc.penalty_weighted);
+}
+
+#[test]
+fn encoded_forest_preserves_decisions_end_to_end() {
+    let records = small_records();
+    let (train, test) = dataset::split(&records, 0.2, 2);
+    let forest = Forest::fit_records(&train, &ForestConfig::default());
+    let enc = encode(&forest, ExportContract::default());
+    enc.validate().unwrap();
+    let mut agree = 0usize;
+    let mut graded = 0usize;
+    for r in test.iter().take(2000) {
+        let native = forest.predict(&r.features);
+        if native.abs() < 0.05 {
+            continue; // boundary cases may flip under f32 + truncation
+        }
+        graded += 1;
+        agree += (enc.decide(&r.features) == (native > 0.0)) as usize;
+    }
+    assert!(
+        agree as f64 / graded as f64 > 0.98,
+        "{agree}/{graded} decisions agree"
+    );
+}
+
+#[test]
+fn model_roundtrip_through_disk_and_metrics() {
+    let records = small_records();
+    let (train, test) = dataset::split(&records, 0.2, 3);
+    let forest = Forest::fit_records(&train, &ForestConfig {
+        num_trees: 8,
+        ..Default::default()
+    });
+    let dir = std::env::temp_dir();
+    let path = dir.join(format!("lmtuner-int-{}.model", std::process::id()));
+    lmtuner::ml::io::save(&forest, &path).unwrap();
+    let loaded = lmtuner::ml::io::load(&path).unwrap();
+    let a = metrics::evaluate_model(&test, |x| forest.decide(x));
+    let b = metrics::evaluate_model(&test, |x| loaded.decide(x));
+    assert_eq!(a.count_based, b.count_based);
+    assert_eq!(a.penalty_weighted, b.penalty_weighted);
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn real_benchmarks_flow_through_the_same_feature_space() {
+    let dev = DeviceSpec::m2090();
+    let cfg = MeasureConfig::deterministic();
+    for b in workloads::all() {
+        for d in (b.instances)(&dev).iter().take(5) {
+            let r = measure(d, &dev, &cfg);
+            assert_eq!(r.features.len(), NUM_FEATURES);
+            // Oracle consistency: the record's own decision matches a
+            // fresh simulation pair.
+            let base = simulate(d, &dev, Variant::Baseline);
+            let opt = simulate(d, &dev, Variant::Optimized);
+            if opt.feasible() {
+                let s = base.time_s / opt.time_s;
+                assert!((s.clamp(0.01, 100.0) - r.speedup).abs() < 1e-9);
+            } else {
+                assert!(!r.beneficial());
+            }
+        }
+    }
+}
+
+// ---- property tests over system invariants -------------------------
+
+#[test]
+fn prop_speedup_invariant_under_feature_noise_free_measure() {
+    // Measuring the same descriptor twice gives identical records.
+    let dev = DeviceSpec::m2090();
+    let sweep = LaunchSweep::new(2048, 2048);
+    prop::check("measure-deterministic", 64, |rng| {
+        let mut trng = rng.fork(1);
+        let t = &generator::generate_n(&mut trng, 1)[rng.range(0, 111)];
+        let launch = sweep.all()[rng.range(0, sweep.len() - 1)];
+        let d = t.descriptor(&launch, &dev);
+        let cfg = MeasureConfig::default();
+        let a = measure(&d, &dev, &cfg);
+        let b = measure(&d, &dev, &cfg);
+        lmtuner::prop_assert!(a.speedup == b.speedup, "nondeterministic");
+        lmtuner::prop_assert!(
+            a.features == b.features,
+            "feature extraction nondeterministic"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_infeasible_regions_never_beneficial() {
+    let dev = DeviceSpec::m2090();
+    let sweep = LaunchSweep::new(2048, 2048);
+    prop::check("infeasible-never-wins", 128, |rng| {
+        let mut trng = rng.fork(2);
+        let ts = generator::generate_n(&mut trng, 2);
+        let t = &ts[rng.range(0, ts.len() - 1)];
+        let launch = sweep.all()[rng.range(0, sweep.len() - 1)];
+        let d = t.descriptor(&launch, &dev);
+        if !d.lmem_feasible(&dev) {
+            let r = measure(&d, &dev, &MeasureConfig::deterministic());
+            lmtuner::prop_assert!(
+                !r.beneficial(),
+                "{} infeasible but beneficial ({}x)",
+                d.name,
+                r.speedup
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_occupancy_monotone_in_resources() {
+    use lmtuner::gpu::occupancy::{occupancy, BlockUsage};
+    let dev = DeviceSpec::m2090();
+    prop::check("occupancy-monotone", 256, |rng| {
+        let threads = 32 * rng.range(1, 32) as u32;
+        let regs = rng.range(8, 63) as u32;
+        let smem = rng.range(0, 48 * 1024) as u32;
+        let o1 = occupancy(&dev, &BlockUsage {
+            threads_per_block: threads,
+            regs_per_thread: regs,
+            shared_bytes_per_block: smem,
+        });
+        let o2 = occupancy(&dev, &BlockUsage {
+            threads_per_block: threads,
+            regs_per_thread: regs,
+            shared_bytes_per_block: smem + 1024,
+        });
+        lmtuner::prop_assert!(
+            o2.blocks_per_sm <= o1.blocks_per_sm,
+            "more smem increased occupancy: {o1:?} -> {o2:?}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_batching_decisions_equal_unbatched() {
+    // The encoded forest gives identical answers whatever the batch mix.
+    let records = small_records();
+    let (train, _) = dataset::split(&records, 0.1, 5);
+    let forest = Forest::fit_records(&train, &ForestConfig {
+        num_trees: 5,
+        ..Default::default()
+    });
+    let enc = encode(&forest, ExportContract::default());
+    prop::check("batch-invariance", 32, |rng| {
+        let i = rng.range(0, records.len() - 1);
+        let single = enc.predict(&records[i].features);
+        // same row surrounded by arbitrary others
+        let j = rng.range(0, records.len() - 1);
+        let batch = [
+            records[j].features.to_vec(),
+            records[i].features.to_vec(),
+        ];
+        let again = enc.predict(&batch[1]);
+        lmtuner::prop_assert!(single == again, "batch position changed result");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_launch_sweep_all_descriptors_valid() {
+    let dev = DeviceSpec::m2090();
+    let sweep = LaunchSweep::new(2048, 2048);
+    prop::check("descriptor-validity", 128, |rng| {
+        let mut trng = rng.fork(3);
+        let ts = generator::generate_n(&mut trng, 1);
+        let t = &ts[rng.range(0, ts.len() - 1)];
+        let launch: Launch = sweep.all()[rng.range(0, sweep.len() - 1)];
+        let d = t.descriptor(&launch, &dev);
+        let f = extract(&d);
+        lmtuner::prop_assert!(
+            f.iter().all(|x| x.is_finite()),
+            "non-finite feature in {}",
+            d.name
+        );
+        lmtuner::prop_assert!(d.reuse > 0.0, "non-positive reuse");
+        lmtuner::prop_assert!(
+            d.region_rows > 0 && d.region_cols > 0,
+            "empty region"
+        );
+        Ok(())
+    });
+}

@@ -1,0 +1,120 @@
+//! Integration tests over the runtime + coordinator: PJRT artifacts,
+//! the batched service, and failure injection. These skip (with a
+//! message) when artifacts/ has not been built.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use lmtuner::coordinator::service::{Service, ServiceConfig};
+use lmtuner::coordinator::train::{self, TrainConfig};
+use lmtuner::gpu::spec::DeviceSpec;
+use lmtuner::kernelmodel::features::NUM_FEATURES;
+use lmtuner::runtime::forest_exec::ForestExecutor;
+use lmtuner::runtime::pjrt::Engine;
+use lmtuner::util::prng::Rng;
+
+fn artifacts() -> Option<PathBuf> {
+    let d = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if d.join("manifest.json").exists() {
+        Some(d)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+#[test]
+fn trained_model_serves_identically_native_and_pjrt() {
+    let Some(dir) = artifacts() else { return };
+    let dev = DeviceSpec::m2090();
+    let cfg = TrainConfig { scale: 0.03, configs_per_kernel: 6, ..Default::default() };
+    let out = train::run(&dev, &cfg);
+    let engine = Engine::new(&dir).unwrap();
+    let enc = train::encode_for_serving(&out.forest, &engine.manifest);
+    let exec = ForestExecutor::new(&engine, &enc).unwrap();
+
+    let rows: Vec<Vec<f64>> = out
+        .records
+        .iter()
+        .take(300)
+        .map(|r| r.features.to_vec())
+        .collect();
+    let pjrt = exec.predict(&rows).unwrap();
+    let mut graded = 0;
+    let mut agree = 0;
+    for (row, p) in rows.iter().zip(&pjrt) {
+        let native = enc.predict(row);
+        assert!((native - p).abs() < 1e-4, "{native} vs {p}");
+        let full = out.forest.predict(row);
+        if full.abs() > 0.1 {
+            graded += 1;
+            agree += ((full > 0.0) == (*p > 0.0)) as usize;
+        }
+    }
+    assert!(agree as f64 / graded.max(1) as f64 > 0.95, "{agree}/{graded}");
+}
+
+#[test]
+fn service_survives_bursts_and_reports_backpressure() {
+    let Some(dir) = artifacts() else { return };
+    let dev = DeviceSpec::m2090();
+    let cfg = TrainConfig { scale: 0.02, configs_per_kernel: 4, ..Default::default() };
+    let out = train::run(&dev, &cfg);
+    let engine = Arc::new(Engine::new(&dir).unwrap());
+    let enc = train::encode_for_serving(&out.forest, &engine.manifest);
+    let svc = Service::start(
+        engine,
+        enc,
+        ServiceConfig {
+            max_batch: 256,
+            max_wait: std::time::Duration::from_micros(50),
+            queue_depth: 64, // tiny queue to provoke backpressure
+        },
+    )
+    .unwrap();
+    let h = svc.handle();
+    let (tx, rx) = std::sync::mpsc::channel();
+    let mut rng = Rng::new(1);
+    let mut accepted = 0usize;
+    let mut rejected = 0usize;
+    for i in 0..5000u64 {
+        let mut f = [0.0; NUM_FEATURES];
+        for x in f.iter_mut() {
+            *x = rng.range_f64(0.0, 10.0);
+        }
+        match h.submit(i, f, tx.clone()) {
+            Ok(()) => accepted += 1,
+            Err(_) => rejected += 1, // queue full: backpressure works
+        }
+    }
+    drop(tx);
+    let mut got = 0;
+    while rx.recv().is_ok() {
+        got += 1;
+    }
+    assert_eq!(got, accepted);
+    drop(h);
+    let stats = svc.shutdown();
+    assert_eq!(stats.served as usize, accepted);
+    // On a 1-core box the burst must overflow the 64-deep queue at least
+    // occasionally; if not, backpressure never engaged and the test is
+    // vacuous — accept either but record the split.
+    eprintln!("accepted={accepted} rejected={rejected} batches={}", stats.batches);
+}
+
+#[test]
+fn corrupt_artifact_fails_loudly_not_silently() {
+    let Some(dir) = artifacts() else { return };
+    // Engine must refuse a mangled HLO file.
+    let tmp = std::env::temp_dir().join(format!("lmtuner-art-{}", std::process::id()));
+    std::fs::create_dir_all(&tmp).unwrap();
+    std::fs::copy(dir.join("manifest.json"), tmp.join("manifest.json")).unwrap();
+    // provide one corrupt artifact
+    std::fs::write(tmp.join("forest_b64.hlo.txt"), "HloModule garbage\nENTRY {").unwrap();
+    let engine = Engine::new(&tmp).unwrap(); // lazy compile: ok
+    let err = engine.execute("forest_b64.hlo.txt", &[]);
+    assert!(err.is_err(), "corrupt artifact executed successfully?!");
+    let missing = engine.execute("forest_b4096.hlo.txt", &[]);
+    assert!(missing.is_err(), "missing artifact executed successfully?!");
+    std::fs::remove_dir_all(&tmp).ok();
+}
