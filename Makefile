@@ -1,0 +1,18 @@
+# Convenience targets. Tier-1 verification needs only `build` + `test`
+# (no artifacts, no network). `artifacts` requires a python with jax to
+# AOT-lower the Pallas kernels to HLO text for the PJRT backend.
+
+.PHONY: build test artifacts clean
+
+build:
+	cargo build --release
+
+test:
+	cargo test -q
+
+artifacts:
+	cd python/compile && python3 aot.py --out-dir ../../artifacts
+
+clean:
+	cargo clean
+	rm -rf artifacts

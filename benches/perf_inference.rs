@@ -1,16 +1,22 @@
 //! Perf bench (L3/L2/L1 hot path): forest inference throughput/latency.
 //!
 //! Compares:
-//!   native   — rust recursive-tree traversal (training-time path)
-//!   encoded  — rust flat-array traversal (the tensor encoding)
-//!   pjrt:bN  — the AOT Pallas/XLA executable at each batch variant
+//!   native        — rust recursive-tree traversal (training-time path)
+//!   encoded       — rust flat-array traversal, one row at a time
+//!   native-batch  — the BatchExecutor native backend (chunked parallel
+//!                   traversal of the tensor encoding), per batch size
+//!   pjrt:bN       — the AOT Pallas/XLA executable at each batch variant
+//!                   (skipped when artifacts are absent)
 //!
 //! This is the §Perf driver for EXPERIMENTS.md.
+
+use std::sync::Arc;
 
 use lmtuner::gpu::spec::DeviceSpec;
 use lmtuner::kernelmodel::features::{self, NUM_FEATURES};
 use lmtuner::ml::export;
 use lmtuner::ml::forest::{Forest, ForestConfig};
+use lmtuner::runtime::executor::{BatchExecutor, NativeForestExecutor};
 use lmtuner::runtime::forest_exec::ForestExecutor;
 use lmtuner::runtime::pjrt::Engine;
 use lmtuner::util::bench::{black_box, report_throughput, Bencher};
@@ -44,6 +50,7 @@ fn main() -> anyhow::Result<()> {
     println!("{n} query rows, forest: {}", forest.config_summary);
 
     let bench = Bencher::default();
+    let batch_sizes = [64usize, 256, 1024, 4096];
 
     // L3 native recursive.
     let r = bench.run("native: recursive trees", || {
@@ -53,7 +60,7 @@ fn main() -> anyhow::Result<()> {
     });
     report_throughput(&r, n as f64, "pred");
 
-    // L3 flat encoded.
+    // L3 flat encoded, row at a time.
     let contract = export::ExportContract::default();
     let enc = export::encode(&forest, contract);
     let r = bench.run("encoded: flat arrays", || {
@@ -63,13 +70,25 @@ fn main() -> anyhow::Result<()> {
     });
     report_throughput(&r, n as f64, "pred");
 
+    // The native BatchExecutor backend at each batch size — this is the
+    // artifact-free serving hot path, directly comparable to pjrt:bN.
+    let native_exec = NativeForestExecutor::new(enc.clone());
+    for &bsz in &batch_sizes {
+        let chunk: Vec<Vec<f64>> =
+            rows.iter().cycle().take(bsz).cloned().collect();
+        let r = bench.run(&format!("native-batch: batch {bsz}"), || {
+            black_box(native_exec.predict(&chunk).unwrap());
+        });
+        report_throughput(&r, bsz as f64, "pred");
+    }
+
     // L1/L2 via PJRT, per batch variant.
     let dir = std::path::Path::new("artifacts");
     if !dir.join("manifest.json").exists() {
         println!("(skipping pjrt variants: run `make artifacts`)");
         return Ok(());
     }
-    let engine = Engine::new(dir)?;
+    let engine = Arc::new(Engine::new(dir)?);
     let enc2 = export::encode(
         &forest,
         export::ExportContract {
@@ -79,8 +98,9 @@ fn main() -> anyhow::Result<()> {
             num_features: NUM_FEATURES,
         },
     );
-    let exec = ForestExecutor::new(&engine, &enc2)?;
-    for &bsz in engine.manifest.forest_batch_sizes.clone().iter() {
+    let variants = engine.manifest.forest_batch_sizes.clone();
+    let exec = ForestExecutor::new(engine, &enc2)?;
+    for &bsz in variants.iter() {
         let chunk: Vec<Vec<f64>> =
             rows.iter().cycle().take(bsz).cloned().collect();
         let r = bench.run(&format!("pjrt: batch {bsz}"), || {

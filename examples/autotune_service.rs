@@ -1,15 +1,17 @@
 //! End-to-end serving driver — the repository's full-stack validation.
 //!
 //! Exercises every layer together: trains the forest (L3), exports it to
-//! the tensor contract, loads the AOT-compiled L2/L1 artifact (jax graph
-//! wrapping the Pallas forest kernel) through PJRT, starts the batched
-//! prediction service, and replays the complete real-benchmark instance
-//! stream (all 1706 Table-3 instances, repeated) as concurrent requests.
+//! the tensor contract, starts the sharded batched prediction service,
+//! and replays the complete real-benchmark instance stream (all Table-3
+//! instances, repeated) as concurrent requests. When AOT artifacts are
+//! present the batches run through the PJRT executable (the L2 jax graph
+//! wrapping the L1 Pallas forest kernel); without them the service uses
+//! the native batched executor, so this driver needs no `make artifacts`.
 //!
 //! Reports decision accuracy against the oracle plus latency/throughput
 //! percentiles. Recorded in EXPERIMENTS.md §End-to-end.
 //!
-//! Run: make artifacts && cargo run --release --offline --example autotune_service
+//! Run: cargo run --release --offline --example autotune_service
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -39,28 +41,33 @@ fn main() -> anyhow::Result<()> {
         100.0 * out.synth_accuracy.penalty_weighted
     );
 
-    // --- Load PJRT engine + artifacts ------------------------------
-    println!("[2/4] loading AOT artifacts via PJRT ...");
-    let engine = Arc::new(Engine::new(std::path::Path::new("artifacts"))?);
-    let n = engine.warmup()?;
-    println!("      compiled {n} artifacts on {}", engine.platform());
-    let encoded = train::encode_for_serving(&out.forest, &engine.manifest);
-    println!(
-        "      forest encoded: {} truncated splits (budget {} nodes x {} trees)",
-        encoded.truncated, engine.manifest.max_nodes, engine.manifest.num_trees
-    );
-
-    // --- Start the service ------------------------------------------
+    // --- Pick a backend + start the service -------------------------
+    println!("[2/4] selecting inference backend ...");
+    let svc_cfg = ServiceConfig {
+        max_batch: 1024,
+        max_wait: std::time::Duration::from_micros(200),
+        workers: 2,
+        ..Default::default()
+    };
     println!("[3/4] starting batched prediction service ...");
-    let svc = Service::start(
-        engine,
-        encoded,
-        ServiceConfig {
-            max_batch: 1024,
-            max_wait: std::time::Duration::from_micros(200),
-            ..Default::default()
-        },
-    )?;
+    let svc = match Engine::new(std::path::Path::new("artifacts")) {
+        Ok(engine) => {
+            let engine = Arc::new(engine);
+            let n = engine.warmup()?;
+            println!("      compiled {n} artifacts on {}", engine.platform());
+            let encoded = train::encode_for_serving(&out.forest, &engine.manifest);
+            println!(
+                "      forest encoded: {} truncated splits (budget {} nodes x {} trees)",
+                encoded.truncated, engine.manifest.max_nodes, engine.manifest.num_trees
+            );
+            Service::start_pjrt(engine, encoded, svc_cfg)?
+        }
+        Err(e) => {
+            println!("      artifacts unavailable ({e:#})");
+            println!("      using the native batched executor (no artifacts needed)");
+            Service::start_native(train::encode_default(&out.forest), svc_cfg)?
+        }
+    };
     let handle = svc.handle();
 
     // --- Replay the real-benchmark stream ---------------------------
@@ -101,7 +108,7 @@ fn main() -> anyhow::Result<()> {
     let mut decisions: Vec<(u64, bool)> = Vec::with_capacity(total);
     let mut batch_sizes = Vec::new();
     for _ in 0..total {
-        let resp = rx.recv()?;
+        let resp = rx.recv()??; // channel error, then typed batch error
         lat_us.push(resp.latency.as_secs_f64() * 1e6);
         decisions.push((resp.id, resp.use_local_memory));
         batch_sizes.push(resp.batch_size as f64);

@@ -1,4 +1,4 @@
-//! Request/response types of the prediction service.
+//! Request/response/control types of the prediction service.
 
 use std::time::Instant;
 
@@ -24,9 +24,37 @@ pub struct PredictResponse {
     pub latency: std::time::Duration,
 }
 
+/// Typed failure delivered to a client whose batch failed, instead of
+/// silently dropping its reply channel.
+#[derive(Clone, Debug)]
+pub struct PredictError {
+    pub id: u64,
+    pub reason: String,
+}
+
+impl std::fmt::Display for PredictError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "request {}: batch inference failed: {}", self.id, self.reason)
+    }
+}
+
+impl std::error::Error for PredictError {}
+
+/// What a client receives on its reply channel.
+pub type PredictReply = Result<PredictResponse, PredictError>;
+
 /// Internal queue entry.
 pub(crate) struct Pending {
     pub req: PredictRequest,
     pub enqueued: Instant,
-    pub reply: std::sync::mpsc::Sender<PredictResponse>,
+    pub reply: std::sync::mpsc::Sender<PredictReply>,
+}
+
+/// Control protocol between the service façade and its shard workers.
+/// Shutdown is an explicit message, not a channel-disconnect side effect,
+/// so live client handles can never keep a worker alive.
+pub(crate) enum WorkerMsg {
+    Job(Pending),
+    /// Serve everything already queued, then exit.
+    Shutdown,
 }

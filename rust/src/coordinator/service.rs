@@ -1,34 +1,43 @@
 //! The prediction service: phase 2 of the paper's framework (Fig. 2,
 //! right side) as a serving system.
 //!
-//! Clients submit feature vectors; a dynamic batcher drains the queue,
-//! pads to the nearest compiled batch-size variant, and runs the batch
-//! through the PJRT forest executable. Bounded queue gives backpressure;
-//! batching policy = "wait up to `max_wait` for `max_batch` requests,
-//! ship what you have" (the classic serving tradeoff).
+//! Clients submit feature vectors through one [`ServiceHandle`]; requests
+//! are round-robined across N sharded worker threads, each owning a
+//! [`BatchExecutor`]. A worker drains its queue, batches up to
+//! `max_batch` rows or `max_wait`, and ships the batch to its backend —
+//! the pure-rust native executor by default, or the PJRT artifact path.
+//! Bounded queues give backpressure; a failed batch produces typed
+//! [`PredictError`] replies (never dropped channels); shutdown is an
+//! explicit control message, so live client handles cannot hang it.
 
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use crate::kernelmodel::features::NUM_FEATURES;
 use crate::ml::export::EncodedForest;
+use crate::runtime::executor::{BatchExecutor, NativeForestExecutor};
 use crate::runtime::forest_exec::ForestExecutor;
 use crate::runtime::pjrt::Engine;
 
-use super::messages::{Pending, PredictRequest, PredictResponse};
+use super::messages::{
+    Pending, PredictError, PredictReply, PredictRequest, PredictResponse, WorkerMsg,
+};
 
 #[derive(Clone, Debug)]
 pub struct ServiceConfig {
-    /// Maximum rows per PJRT batch (clamped to the largest artifact).
+    /// Maximum rows per backend batch (clamped to the backend's limit).
     pub max_batch: usize,
     /// How long the batcher waits to fill a batch.
     pub max_wait: Duration,
-    /// Bounded-queue depth (backpressure beyond this).
+    /// Bounded per-shard queue depth (backpressure beyond this).
     pub queue_depth: usize,
+    /// Number of sharded worker threads (each owns one executor).
+    pub workers: usize,
 }
 
 impl Default for ServiceConfig {
@@ -37,36 +46,91 @@ impl Default for ServiceConfig {
             max_batch: 4096,
             max_wait: Duration::from_micros(200),
             queue_depth: 16 * 1024,
+            workers: 1,
         }
     }
 }
 
-/// Aggregate serving metrics.
+/// Aggregate serving metrics (summed over shards at shutdown).
 #[derive(Clone, Debug, Default)]
 pub struct ServiceStats {
     pub served: u64,
     pub batches: u64,
+    /// Requests answered with a typed error (failed batches).
     pub rejected: u64,
 }
 
-/// Handle used by clients; cheap to clone.
+impl ServiceStats {
+    fn absorb(&mut self, other: ServiceStats) {
+        self.served += other.served;
+        self.batches += other.batches;
+        self.rejected += other.rejected;
+    }
+}
+
+/// Handle used by clients; cheap to clone. Holding a clone never blocks
+/// service shutdown.
 #[derive(Clone)]
 pub struct ServiceHandle {
-    tx: SyncSender<Pending>,
+    shards: Arc<Vec<SyncSender<WorkerMsg>>>,
+    next: Arc<AtomicUsize>,
+    /// Set by shutdown before the control message, so handles stop
+    /// accepting work that the draining workers might never see.
+    stopped: Arc<AtomicBool>,
+}
+
+fn into_job(msg: WorkerMsg) -> Pending {
+    match msg {
+        WorkerMsg::Job(p) => p,
+        WorkerMsg::Shutdown => unreachable!("handles only send jobs"),
+    }
 }
 
 impl ServiceHandle {
-    /// Submit one request and wait for its response (blocking).
+    /// Round-robin the request to a shard; on a full shard, fail over to
+    /// the others before reporting backpressure.
+    fn enqueue(&self, pending: Pending) -> Result<()> {
+        if self.stopped.load(Ordering::Acquire) {
+            return Err(anyhow!("service stopped"));
+        }
+        let n = self.shards.len();
+        let start = self.next.fetch_add(1, Ordering::Relaxed);
+        let mut pending = pending;
+        let mut saw_full = false;
+        for k in 0..n {
+            let tx = &self.shards[(start + k) % n];
+            match tx.try_send(WorkerMsg::Job(pending)) {
+                Ok(()) => return Ok(()),
+                Err(TrySendError::Full(m)) => {
+                    saw_full = true;
+                    pending = into_job(m);
+                }
+                Err(TrySendError::Disconnected(m)) => {
+                    pending = into_job(m);
+                }
+            }
+        }
+        if saw_full {
+            Err(anyhow!("queue full (backpressure)"))
+        } else {
+            Err(anyhow!("service stopped"))
+        }
+    }
+
+    /// Submit one request and wait for its response (blocking). A failed
+    /// batch surfaces as the typed [`PredictError`], not a channel error.
     pub fn predict(&self, features: [f64; NUM_FEATURES]) -> Result<PredictResponse> {
         let (reply_tx, reply_rx) = std::sync::mpsc::channel();
-        let req = PredictRequest { id: 0, features };
-        self.tx
-            .try_send(Pending { req, enqueued: Instant::now(), reply: reply_tx })
-            .map_err(|e| match e {
-                TrySendError::Full(_) => anyhow::anyhow!("queue full (backpressure)"),
-                TrySendError::Disconnected(_) => anyhow::anyhow!("service stopped"),
-            })?;
-        Ok(reply_rx.recv()?)
+        self.enqueue(Pending {
+            req: PredictRequest { id: 0, features },
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        })?;
+        match reply_rx.recv() {
+            Ok(Ok(resp)) => Ok(resp),
+            Ok(Err(e)) => Err(e.into()),
+            Err(_) => Err(anyhow!("service stopped before replying")),
+        }
     }
 
     /// Fire a request with an async reply channel (for load generators).
@@ -74,121 +138,233 @@ impl ServiceHandle {
         &self,
         id: u64,
         features: [f64; NUM_FEATURES],
-        reply: std::sync::mpsc::Sender<PredictResponse>,
+        reply: std::sync::mpsc::Sender<PredictReply>,
     ) -> Result<()> {
-        self.tx
-            .try_send(Pending {
-                req: PredictRequest { id, features },
-                enqueued: Instant::now(),
-                reply,
-            })
-            .map_err(|e| match e {
-                TrySendError::Full(_) => anyhow::anyhow!("queue full (backpressure)"),
-                TrySendError::Disconnected(_) => anyhow::anyhow!("service stopped"),
-            })
+        self.enqueue(Pending {
+            req: PredictRequest { id, features },
+            enqueued: Instant::now(),
+            reply,
+        })
     }
 }
 
-/// The running service; dropping it stops the worker.
+/// The running service. `shutdown()` (or drop) stops every shard via the
+/// explicit control message and joins them.
 pub struct Service {
     handle: ServiceHandle,
-    worker: Option<JoinHandle<ServiceStats>>,
+    workers: Vec<JoinHandle<ServiceStats>>,
 }
 
 impl Service {
-    /// Start the batcher/worker thread. The engine and forest are owned
-    /// by the worker for its lifetime.
-    pub fn start(
+    /// Start with the artifact-free native backend: one
+    /// [`NativeForestExecutor`] per shard, no PJRT required.
+    pub fn start_native(forest: EncodedForest, cfg: ServiceConfig) -> Result<Service> {
+        let shards = cfg.workers.max(1);
+        let shared = Arc::new(forest);
+        // Split the host's cores across shards so concurrent batches
+        // don't oversubscribe (each shard batches independently).
+        let host = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let per_shard = (host / shards).max(1);
+        let execs: Vec<NativeForestExecutor> = (0..shards)
+            .map(|_| NativeForestExecutor::from_shared(shared.clone()).threads(per_shard))
+            .collect();
+        Self::start_sharded(execs, cfg)
+    }
+
+    /// Start with the PJRT backend: one [`ForestExecutor`] per shard over
+    /// a shared engine (the compiled-executable cache is shared).
+    pub fn start_pjrt(
         engine: Arc<Engine>,
         forest: EncodedForest,
         cfg: ServiceConfig,
     ) -> Result<Service> {
-        let (tx, rx) = sync_channel::<Pending>(cfg.queue_depth);
-        let worker = std::thread::Builder::new()
-            .name("lmtuner-batcher".into())
-            .spawn(move || worker_loop(engine, forest, cfg, rx))?;
-        Ok(Service { handle: ServiceHandle { tx }, worker: Some(worker) })
+        let shards = cfg.workers.max(1);
+        let execs: Vec<ForestExecutor> = (0..shards)
+            .map(|_| ForestExecutor::new(engine.clone(), &forest))
+            .collect::<Result<_>>()?;
+        Self::start_sharded(execs, cfg)
+    }
+
+    /// Start one worker thread per executor. Executor construction
+    /// happens before any thread spawns, so backend init errors surface
+    /// here instead of as silently-dead workers.
+    pub fn start_sharded<E: BatchExecutor + 'static>(
+        execs: Vec<E>,
+        cfg: ServiceConfig,
+    ) -> Result<Service> {
+        anyhow::ensure!(!execs.is_empty(), "need at least one executor");
+        let mut shards = Vec::with_capacity(execs.len());
+        let mut workers = Vec::with_capacity(execs.len());
+        for (i, exec) in execs.into_iter().enumerate() {
+            let (tx, rx) = sync_channel::<WorkerMsg>(cfg.queue_depth.max(1));
+            let worker_cfg = cfg.clone();
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("lmtuner-batcher-{i}"))
+                    .spawn(move || worker_loop(exec, worker_cfg, rx))?,
+            );
+            shards.push(tx);
+        }
+        Ok(Service {
+            handle: ServiceHandle {
+                shards: Arc::new(shards),
+                next: Arc::new(AtomicUsize::new(0)),
+                stopped: Arc::new(AtomicBool::new(false)),
+            },
+            workers,
+        })
     }
 
     pub fn handle(&self) -> ServiceHandle {
         self.handle.clone()
     }
 
-    /// Stop and collect stats.
+    pub fn num_shards(&self) -> usize {
+        self.handle.shards.len()
+    }
+
+    /// Stop every shard and collect summed stats. Safe to call while
+    /// clients still hold handles: shutdown is a control message, not a
+    /// channel disconnect, so it cannot hang on live clones. Handles are
+    /// flagged stopped first, then each worker serves what is already
+    /// queued before exiting; enqueues after the flag get "service
+    /// stopped". A submit racing the flag itself may instead observe a
+    /// closed reply channel, which the blocking `predict` reports as
+    /// "service stopped before replying".
     pub fn shutdown(mut self) -> ServiceStats {
-        let ServiceHandle { tx } = self.handle.clone();
-        drop(tx);
-        // Drop our handle so the channel closes once all clients are done.
-        self.handle = ServiceHandle { tx: sync_channel(1).0 };
-        self.worker
-            .take()
-            .map(|w| w.join().unwrap_or_default())
-            .unwrap_or_default()
+        self.initiate_shutdown();
+        let mut total = ServiceStats::default();
+        for w in self.workers.drain(..) {
+            if let Ok(stats) = w.join() {
+                total.absorb(stats);
+            }
+        }
+        total
+    }
+
+    fn initiate_shutdown(&self) {
+        self.handle.stopped.store(true, Ordering::Release);
+        for tx in self.handle.shards.iter() {
+            // Blocking send: the worker is draining its queue, so space
+            // frees up; if the worker already died, send errors cleanly.
+            let _ = tx.send(WorkerMsg::Shutdown);
+        }
     }
 }
 
-fn worker_loop(
-    engine: Arc<Engine>,
-    forest: EncodedForest,
-    cfg: ServiceConfig,
-    rx: Receiver<Pending>,
-) -> ServiceStats {
-    let exec = match ForestExecutor::new(&engine, &forest) {
-        Ok(e) => e,
-        Err(err) => {
-            eprintln!("forest executor init failed: {err:#}");
-            return ServiceStats::default();
+impl Drop for Service {
+    fn drop(&mut self) {
+        if self.workers.is_empty() {
+            return; // shutdown() already joined them
         }
-    };
-    let max_batch = cfg.max_batch.min(exec.max_batch());
+        self.initiate_shutdown();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+fn worker_loop<E: BatchExecutor>(
+    exec: E,
+    cfg: ServiceConfig,
+    rx: Receiver<WorkerMsg>,
+) -> ServiceStats {
+    let max_batch = cfg.max_batch.min(exec.max_batch()).max(1);
     let mut stats = ServiceStats::default();
-    let mut batch: Vec<Pending> = Vec::with_capacity(max_batch);
+    let mut batch: Vec<Pending> = Vec::with_capacity(max_batch.min(4096));
+    let mut shutting_down = false;
     loop {
         batch.clear();
-        // Block for the first request.
+        // Block for the first request (or the shutdown marker).
         match rx.recv() {
-            Ok(p) => batch.push(p),
-            Err(_) => break, // all senders gone
+            Ok(WorkerMsg::Job(p)) => batch.push(p),
+            Ok(WorkerMsg::Shutdown) | Err(_) => shutting_down = true,
         }
-        // Drain up to max_batch or until max_wait expires.
-        let deadline = Instant::now() + cfg.max_wait;
-        while batch.len() < max_batch {
-            let now = Instant::now();
-            if now >= deadline {
-                break;
-            }
-            match rx.recv_timeout(deadline - now) {
-                Ok(p) => batch.push(p),
-                Err(RecvTimeoutError::Timeout) => break,
-                Err(RecvTimeoutError::Disconnected) => break,
-            }
-        }
-        let rows: Vec<Vec<f64>> =
-            batch.iter().map(|p| p.req.features.to_vec()).collect();
-        match exec.predict(&rows) {
-            Ok(preds) => {
-                let bsize = batch.len();
-                for (p, score) in batch.drain(..).zip(preds) {
-                    let resp = PredictResponse {
-                        id: p.req.id,
-                        score,
-                        use_local_memory: score > 0.0,
-                        batch_size: bsize,
-                        latency: p.enqueued.elapsed(),
-                    };
-                    let _ = p.reply.send(resp);
-                    stats.served += 1;
+        if !shutting_down {
+            // Drain up to max_batch or until max_wait expires.
+            let deadline = Instant::now() + cfg.max_wait;
+            while batch.len() < max_batch {
+                let now = Instant::now();
+                if now >= deadline {
+                    break;
                 }
-                stats.batches += 1;
+                match rx.recv_timeout(deadline - now) {
+                    Ok(WorkerMsg::Job(p)) => batch.push(p),
+                    Ok(WorkerMsg::Shutdown) => {
+                        shutting_down = true;
+                        break;
+                    }
+                    Err(RecvTimeoutError::Timeout) => break,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        shutting_down = true;
+                        break;
+                    }
+                }
             }
-            Err(err) => {
-                eprintln!("batch inference failed: {err:#}");
-                stats.rejected += batch.len() as u64;
+        }
+        if !batch.is_empty() {
+            serve_batch(&exec, &mut batch, &mut stats);
+        }
+        if shutting_down {
+            // Serve whatever is already queued (handles were flagged
+            // stopped before the Shutdown marker, so only a send racing
+            // that flag can still slip in behind this drain), then exit.
+            loop {
                 batch.clear();
+                while batch.len() < max_batch {
+                    match rx.try_recv() {
+                        Ok(WorkerMsg::Job(p)) => batch.push(p),
+                        Ok(WorkerMsg::Shutdown) => {}
+                        Err(_) => break,
+                    }
+                }
+                if batch.is_empty() {
+                    break;
+                }
+                serve_batch(&exec, &mut batch, &mut stats);
+            }
+            return stats;
+        }
+    }
+}
+
+fn serve_batch<E: BatchExecutor>(
+    exec: &E,
+    batch: &mut Vec<Pending>,
+    stats: &mut ServiceStats,
+) {
+    let rows: Vec<Vec<f64>> = batch.iter().map(|p| p.req.features.to_vec()).collect();
+    match exec.predict(&rows) {
+        Ok(preds) => {
+            let bsize = batch.len();
+            for (p, score) in batch.drain(..).zip(preds) {
+                let resp = PredictResponse {
+                    id: p.req.id,
+                    score,
+                    use_local_memory: score > 0.0,
+                    batch_size: bsize,
+                    latency: p.enqueued.elapsed(),
+                };
+                let _ = p.reply.send(Ok(resp));
+                stats.served += 1;
+            }
+            stats.batches += 1;
+        }
+        Err(err) => {
+            // Propagate the failure to every waiting client as a typed
+            // error response instead of dropping their reply channels.
+            let reason = format!("{err:#}");
+            stats.rejected += batch.len() as u64;
+            for p in batch.drain(..) {
+                let _ = p.reply.send(Err(PredictError {
+                    id: p.req.id,
+                    reason: reason.clone(),
+                }));
             }
         }
     }
-    stats
 }
 
 #[cfg(test)]
@@ -197,15 +373,10 @@ mod tests {
     use crate::ml::export::{encode, ExportContract};
     use crate::ml::forest::{Forest, ForestConfig};
     use crate::util::prng::Rng;
-    use std::path::PathBuf;
 
-    fn artifacts_dir() -> PathBuf {
-        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-    }
-
-    fn toy_encoded(engine: &Engine) -> EncodedForest {
+    fn toy_encoded(seed: u64) -> EncodedForest {
         let nf = NUM_FEATURES;
-        let mut rng = Rng::new(7);
+        let mut rng = Rng::new(seed);
         let x: Vec<Vec<f64>> = (0..nf)
             .map(|_| (0..300).map(|_| rng.range_f64(-1.0, 1.0)).collect())
             .collect();
@@ -216,27 +387,21 @@ mod tests {
             &y,
             &ForestConfig { num_trees: 20, threads: 1, ..Default::default() },
         );
-        encode(
-            &f,
-            ExportContract {
-                num_trees: engine.manifest.num_trees,
-                max_nodes: engine.manifest.max_nodes,
-                max_depth: engine.manifest.max_depth,
-                num_features: nf,
-            },
-        )
+        encode(&f, ExportContract::default())
+    }
+
+    fn random_features(rng: &mut Rng) -> [f64; NUM_FEATURES] {
+        let mut feats = [0.0; NUM_FEATURES];
+        for f in feats.iter_mut() {
+            *f = rng.range_f64(-1.0, 1.0);
+        }
+        feats
     }
 
     #[test]
-    fn service_roundtrip_and_batching() {
-        if !artifacts_dir().join("manifest.json").exists() {
-            eprintln!("skipping: run `make artifacts` first");
-            return;
-        }
-        let engine = Arc::new(Engine::new(&artifacts_dir()).unwrap());
-        let enc = toy_encoded(&engine);
-        let svc = Service::start(
-            engine,
+    fn service_roundtrip_and_batching_native() {
+        let enc = toy_encoded(7);
+        let svc = Service::start_native(
             enc.clone(),
             ServiceConfig {
                 max_batch: 64,
@@ -255,13 +420,10 @@ mod tests {
             threads.push(std::thread::spawn(move || {
                 let mut rng = Rng::new(100 + t);
                 for _ in 0..50 {
-                    let mut feats = [0.0; NUM_FEATURES];
-                    for f in feats.iter_mut() {
-                        *f = rng.range_f64(-1.0, 1.0);
-                    }
+                    let feats = random_features(&mut rng);
                     let resp = h.predict(feats).unwrap();
                     let want = enc.predict(&feats);
-                    assert!((resp.score - want).abs() < 1e-4);
+                    assert!((resp.score - want).abs() < 1e-9);
                     assert_eq!(resp.use_local_memory, want > 0.0);
                     assert!(resp.batch_size >= 1);
                 }
@@ -270,9 +432,127 @@ mod tests {
         for t in threads {
             t.join().unwrap();
         }
-        drop(h);
         let stats = svc.shutdown();
         assert_eq!(stats.served, 200);
+        assert_eq!(stats.rejected, 0);
         assert!(stats.batches <= 200);
+    }
+
+    #[test]
+    fn sharded_workers_serve_everything() {
+        let enc = toy_encoded(9);
+        let svc = Service::start_native(
+            enc,
+            ServiceConfig {
+                max_batch: 16,
+                max_wait: Duration::from_micros(100),
+                workers: 3,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(svc.num_shards(), 3);
+        let h = svc.handle();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut rng = Rng::new(10);
+        let total = 500u64;
+        for i in 0..total {
+            h.submit(i, random_features(&mut rng), tx.clone()).unwrap();
+        }
+        drop(tx);
+        let mut seen = 0u64;
+        while let Ok(reply) = rx.recv() {
+            reply.unwrap();
+            seen += 1;
+        }
+        assert_eq!(seen, total);
+        let stats = svc.shutdown();
+        assert_eq!(stats.served, total);
+    }
+
+    #[test]
+    fn shutdown_with_live_handles_does_not_hang() {
+        let enc = toy_encoded(11);
+        let svc = Service::start_native(enc, ServiceConfig::default()).unwrap();
+        let h = svc.handle();
+        let _second = h.clone(); // two live client handles
+
+        // Run shutdown on another thread so a regression (the old
+        // clone-and-drop hack waiting on channel disconnect) fails the
+        // test instead of hanging the suite.
+        let (done_tx, done_rx) = std::sync::mpsc::channel();
+        std::thread::spawn(move || {
+            let _ = done_tx.send(svc.shutdown());
+        });
+        let stats = done_rx
+            .recv_timeout(Duration::from_secs(10))
+            .expect("shutdown hung while client handles were alive");
+        assert_eq!(stats.served, 0);
+
+        // The held handle now sees a stopped service, not a hang.
+        let err = h.predict([0.0; NUM_FEATURES]).unwrap_err();
+        assert!(format!("{err}").contains("service stopped"), "{err}");
+    }
+
+    struct FailingExec;
+
+    impl BatchExecutor for FailingExec {
+        fn backend(&self) -> &'static str {
+            "failing"
+        }
+        fn max_batch(&self) -> usize {
+            8
+        }
+        fn predict(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+            anyhow::bail!("injected backend failure ({} rows)", rows.len())
+        }
+    }
+
+    #[test]
+    fn failed_batches_return_typed_errors_and_count_rejected() {
+        let svc = Service::start_sharded(
+            vec![FailingExec],
+            ServiceConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(50),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let h = svc.handle();
+
+        // Blocking path: typed error, not an opaque RecvError.
+        let err = h.predict([0.5; NUM_FEATURES]).unwrap_err();
+        assert!(
+            format!("{err:#}").contains("injected backend failure"),
+            "{err:#}"
+        );
+
+        // Async path: every submitted request gets an Err reply.
+        let (tx, rx) = std::sync::mpsc::channel();
+        for i in 0..20u64 {
+            h.submit(i, [0.25; NUM_FEATURES], tx.clone()).unwrap();
+        }
+        drop(tx);
+        let mut errors = 0;
+        while let Ok(reply) = rx.recv() {
+            let e = reply.unwrap_err();
+            assert!(e.reason.contains("injected backend failure"));
+            errors += 1;
+        }
+        assert_eq!(errors, 20);
+
+        let stats = svc.shutdown();
+        assert_eq!(stats.served, 0);
+        assert_eq!(stats.rejected, 21);
+    }
+
+    #[test]
+    fn drop_stops_workers_without_shutdown_call() {
+        let enc = toy_encoded(13);
+        let svc = Service::start_native(enc, ServiceConfig::default()).unwrap();
+        let h = svc.handle();
+        drop(svc); // must join workers, not hang
+        assert!(h.predict([0.0; NUM_FEATURES]).is_err());
     }
 }

@@ -135,6 +135,17 @@ pub fn encode_for_serving(
     )
 }
 
+/// Encode under an artifact-independent contract sized to the forest,
+/// for the native batched executor (no PJRT manifest required). The
+/// default budget is grown to fit, so nothing is truncated.
+pub fn encode_default(forest: &Forest) -> export::EncodedForest {
+    let mut contract = export::ExportContract::default();
+    contract.num_trees = contract.num_trees.max(forest.trees.len());
+    contract.max_nodes = contract.max_nodes.max(forest.max_nodes());
+    contract.max_depth = contract.max_depth.max(forest.max_depth());
+    export::encode(forest, contract)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

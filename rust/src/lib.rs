@@ -1,7 +1,9 @@
 //! lmtuner: ML-based auto-tuning of the local-memory optimization on
-//! GPGPUs — a reproduction of Han & Abdelrahman (2014).
+//! GPGPUs — a reproduction of Han & Abdelrahman (2014) grown into a
+//! batched inference serving system.
 //!
-//! See DESIGN.md for the module inventory and the experiment index.
+//! See DESIGN.md for the module inventory, the `BatchExecutor` backend
+//! contract, and the experiment index.
 pub mod coordinator;
 pub mod gpu;
 pub mod kernelmodel;
@@ -12,5 +14,7 @@ pub mod sim;
 pub mod synth;
 pub mod util;
 pub mod workloads;
+
+pub use runtime::executor::BatchExecutor;
 
 pub fn version() -> &'static str { env!("CARGO_PKG_VERSION") }

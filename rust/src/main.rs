@@ -41,8 +41,9 @@ fn usage() -> &'static str {
                [--configs 24] [--trees 20] [--mtry 4] [--train-frac 0.1]\n\
      eval      --model models/rf.txt [--data data/synth.csv] [--real]\n\
      predict   --model models/rf.txt --features f1,...,f18 [--artifacts DIR]\n\
-     serve     --model models/rf.txt [--artifacts artifacts] [--requests N]\n\
-               [--batch 4096] [--wait-us 200]\n\
+     serve     --model models/rf.txt [--backend auto|native|pjrt]\n\
+               [--artifacts artifacts] [--requests N] [--batch 4096]\n\
+               [--wait-us 200] [--workers 1]\n\
      reproduce --figure fig1|fig6|table1|table2|table3|all [--scale 0.2]\n\
      info      [--artifacts artifacts]"
 }
@@ -211,10 +212,11 @@ fn cmd_predict(args: &mut Args) -> Result<()> {
     let forest = model_io::load(&model_path)?;
     let feats = parse_features(&feats_str)?;
     let (score, path) = if let Some(dir) = artifacts {
-        // Serve through the PJRT artifact (the production path).
-        let engine = Engine::new(Path::new(&dir))?;
+        // Serve through the PJRT artifact (the artifact-backed path).
+        let engine = Arc::new(Engine::new(Path::new(&dir))?);
         let enc = train::encode_for_serving(&forest, &engine.manifest);
-        let exec = lmtuner::runtime::forest_exec::ForestExecutor::new(&engine, &enc)?;
+        let exec =
+            lmtuner::runtime::forest_exec::ForestExecutor::new(engine, &enc)?;
         (exec.predict(&[feats.to_vec()])?[0], "pjrt")
     } else {
         (forest.predict(&feats), "native")
@@ -230,25 +232,51 @@ fn cmd_predict(args: &mut Args) -> Result<()> {
 fn cmd_serve(args: &mut Args) -> Result<()> {
     let model_path = PathBuf::from(args.str_or("model", "models/rf.txt"));
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
+    let backend = args.str_or("backend", "auto");
     let requests: usize = args.get_or("requests", 10_000).map_err(anyhow::Error::msg)?;
     let batch: usize = args.get_or("batch", 4096).map_err(anyhow::Error::msg)?;
     let wait_us: u64 = args.get_or("wait-us", 200).map_err(anyhow::Error::msg)?;
+    let workers: usize = args.get_or("workers", 1).map_err(anyhow::Error::msg)?;
     args.finish().map_err(anyhow::Error::msg)?;
 
     let forest = model_io::load(&model_path)?;
-    let engine = Arc::new(Engine::new(&artifacts)?);
-    println!("engine: platform={}", engine.platform());
-    engine.warmup()?;
-    let enc = train::encode_for_serving(&forest, &engine.manifest);
-    let svc = Service::start(
-        engine,
-        enc,
-        ServiceConfig {
-            max_batch: batch,
-            max_wait: std::time::Duration::from_micros(wait_us),
-            ..Default::default()
+    let cfg = ServiceConfig {
+        max_batch: batch,
+        max_wait: std::time::Duration::from_micros(wait_us),
+        workers,
+        ..Default::default()
+    };
+    let (svc, served_by) = match backend.as_str() {
+        "pjrt" => {
+            let engine = Arc::new(Engine::new(&artifacts)?);
+            println!("engine: platform={}", engine.platform());
+            engine.warmup()?;
+            let enc = train::encode_for_serving(&forest, &engine.manifest);
+            (Service::start_pjrt(engine, enc, cfg)?, "pjrt")
+        }
+        "native" => (
+            Service::start_native(train::encode_default(&forest), cfg)?,
+            "native",
+        ),
+        "auto" => match Engine::new(&artifacts) {
+            Ok(engine) => {
+                let engine = Arc::new(engine);
+                println!("engine: platform={}", engine.platform());
+                engine.warmup()?;
+                let enc = train::encode_for_serving(&forest, &engine.manifest);
+                (Service::start_pjrt(engine, enc, cfg)?, "pjrt")
+            }
+            Err(e) => {
+                println!("artifacts unavailable ({e:#}); serving natively");
+                (
+                    Service::start_native(train::encode_default(&forest), cfg)?,
+                    "native",
+                )
+            }
         },
-    )?;
+        other => bail!("unknown --backend {other} (auto|native|pjrt)"),
+    };
+    println!("serving via the {served_by} backend ({workers} worker shard(s))");
     let h = svc.handle();
 
     // Demo load: replay the real-benchmark instance stream.
@@ -271,29 +299,42 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     drop(tx);
     let mut lat_us: Vec<f64> = Vec::with_capacity(sent);
     let mut yes = 0usize;
+    let mut failed = 0usize;
     for _ in 0..sent {
-        let resp = rx.recv()?;
-        lat_us.push(resp.latency.as_secs_f64() * 1e6);
-        yes += resp.use_local_memory as usize;
+        match rx.recv()? {
+            Ok(resp) => {
+                lat_us.push(resp.latency.as_secs_f64() * 1e6);
+                yes += resp.use_local_memory as usize;
+            }
+            Err(e) => {
+                eprintln!("request failed: {e}");
+                failed += 1;
+            }
+        }
     }
     let elapsed = t0.elapsed();
     drop(h);
     let stats = svc.shutdown();
     println!(
-        "served {}/{} requests in {:.2}s  ({:.0} req/s, {} batches)",
+        "served {}/{} requests in {:.2}s  ({:.0} req/s, {} batches, {} failed)",
         stats.served,
         requests,
         elapsed.as_secs_f64(),
         stats.served as f64 / elapsed.as_secs_f64(),
-        stats.batches
+        stats.batches,
+        failed
     );
-    println!(
-        "latency p50 {:.0}us  p95 {:.0}us  p99 {:.0}us  | decisions: {:.1}% use-lmem",
-        lmtuner::util::stats::percentile(&lat_us, 50.0),
-        lmtuner::util::stats::percentile(&lat_us, 95.0),
-        lmtuner::util::stats::percentile(&lat_us, 99.0),
-        100.0 * yes as f64 / sent.max(1) as f64
-    );
+    if lat_us.is_empty() {
+        println!("no successful responses; skipping latency percentiles");
+    } else {
+        println!(
+            "latency p50 {:.0}us  p95 {:.0}us  p99 {:.0}us  | decisions: {:.1}% use-lmem",
+            lmtuner::util::stats::percentile(&lat_us, 50.0),
+            lmtuner::util::stats::percentile(&lat_us, 95.0),
+            lmtuner::util::stats::percentile(&lat_us, 99.0),
+            100.0 * yes as f64 / lat_us.len() as f64
+        );
+    }
     Ok(())
 }
 

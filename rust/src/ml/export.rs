@@ -46,25 +46,35 @@ pub struct EncodedForest {
 }
 
 impl EncodedForest {
+    /// Traverse one tree to its leaf. This is THE shared predict kernel:
+    /// the scalar path, the native batch executor, and (semantically) the
+    /// Pallas kernel all implement this exact traversal. Leaves self-loop,
+    /// so stopping early at a self-loop is equivalent to the kernel's
+    /// fixed-depth walk.
+    #[inline]
+    fn tree_leaf(&self, tree: usize, features: &[f64]) -> f64 {
+        let n = self.contract.max_nodes;
+        let base = tree * n;
+        let mut node = 0usize;
+        for _ in 0..self.contract.max_depth {
+            let l = self.left[base + node] as usize;
+            let r = self.right[base + node] as usize;
+            if l == node && r == node {
+                break; // leaf reached (padded trees stop at the root)
+            }
+            let fi = self.feat_idx[base + node] as usize;
+            let go_left = (features[fi] as f32) <= self.thresh[base + node];
+            node = if go_left { l } else { r };
+        }
+        self.leaf[base + node] as f64
+    }
+
     /// Pure-rust reference of the encoded traversal — must agree with the
     /// Pallas kernel and (modulo truncation) with `Forest::predict`.
     pub fn predict(&self, features: &[f64]) -> f64 {
-        let n = self.contract.max_nodes;
         let mut total = 0.0;
         for t in 0..self.contract.num_trees {
-            let base = t * n;
-            let mut node = 0usize;
-            for _ in 0..self.contract.max_depth {
-                let fi = self.feat_idx[base + node] as usize;
-                let go_left =
-                    (features[fi] as f32) <= self.thresh[base + node];
-                node = if go_left {
-                    self.left[base + node] as usize
-                } else {
-                    self.right[base + node] as usize
-                };
-            }
-            total += self.leaf[base + node] as f64;
+            total += self.tree_leaf(t, features);
         }
         total / self.contract.num_trees as f64
     }

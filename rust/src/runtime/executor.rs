@@ -1,0 +1,199 @@
+//! Backend-agnostic batched forest inference.
+//!
+//! [`BatchExecutor`] is the contract the prediction service batches
+//! against; it has two implementations:
+//!
+//!   * [`NativeForestExecutor`] (here) — traverses the tensor-encoded
+//!     forest (`ml::export` layout) in pure rust, with chunked
+//!     parallelism over `util::pool::parallel_map` and row-major batch
+//!     iteration. Always available: no artifacts, no FFI.
+//!   * `runtime::forest_exec::ForestExecutor` — routes batches to the
+//!     AOT-compiled PJRT executables when artifacts exist.
+//!
+//! Both must agree with `EncodedForest::predict` row-for-row; the
+//! serving tests check the native path to 1e-6 over 10k-row batches.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::ml::export::EncodedForest;
+use crate::util::pool::parallel_map;
+
+/// A batched `features -> log2(speedup)` backend the service can drive.
+pub trait BatchExecutor: Send {
+    /// Short backend name for logs/metrics ("native", "pjrt", ...).
+    fn backend(&self) -> &'static str;
+
+    /// Largest batch the backend serves in one call; the service clamps
+    /// its batching window to this.
+    fn max_batch(&self) -> usize;
+
+    /// Predict log2(speedup) for each row, preserving order. A malformed
+    /// batch (e.g. wrong feature width) must return `Err`, not panic —
+    /// the service turns that into typed per-request error replies.
+    fn predict(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>>;
+
+    /// The auto-tuning decisions for a batch.
+    fn decide(&self, rows: &[Vec<f64>]) -> Result<Vec<bool>> {
+        Ok(self.predict(rows)?.into_iter().map(|p| p > 0.0).collect())
+    }
+}
+
+/// Pure-rust batched executor over the tensor-encoded forest. The forest
+/// tables are behind an `Arc`, so N sharded executors share one copy.
+pub struct NativeForestExecutor {
+    forest: Arc<EncodedForest>,
+    threads: usize,
+    /// Rows per parallel work item; small batches stay single-threaded.
+    chunk_rows: usize,
+}
+
+impl NativeForestExecutor {
+    /// Executor sized to the host (all cores, 64-row chunks).
+    pub fn new(forest: EncodedForest) -> Self {
+        Self::from_shared(Arc::new(forest))
+    }
+
+    /// Share one forest across several executors (one per service shard).
+    pub fn from_shared(forest: Arc<EncodedForest>) -> Self {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Self {
+            forest,
+            threads: threads.max(1),
+            chunk_rows: 64,
+        }
+    }
+
+    pub fn with_parallelism(
+        forest: EncodedForest,
+        threads: usize,
+        chunk_rows: usize,
+    ) -> Self {
+        NativeForestExecutor {
+            forest: Arc::new(forest),
+            threads: threads.max(1),
+            chunk_rows: chunk_rows.max(1),
+        }
+    }
+
+    /// Cap this executor's parallelism (e.g. divide the host's cores
+    /// across service shards so concurrent batches don't oversubscribe).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    pub fn forest(&self) -> &EncodedForest {
+        &self.forest
+    }
+}
+
+impl BatchExecutor for NativeForestExecutor {
+    fn backend(&self) -> &'static str {
+        "native"
+    }
+
+    fn max_batch(&self) -> usize {
+        usize::MAX
+    }
+
+    fn predict(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+        let nf = self.forest.contract.num_features;
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != nf {
+                return Err(anyhow!(
+                    "row {i}: feature vector has {} dims, expected {nf}",
+                    r.len()
+                ));
+            }
+        }
+        // Small batches: the scoped-thread fan-out costs more than the
+        // traversal itself.
+        if self.threads <= 1 || rows.len() < 2 * self.chunk_rows {
+            return Ok(rows.iter().map(|r| self.forest.predict(r)).collect());
+        }
+        let chunks: Vec<&[Vec<f64>]> = rows.chunks(self.chunk_rows).collect();
+        let nested = parallel_map(&chunks, self.threads, |chunk| {
+            chunk
+                .iter()
+                .map(|r| self.forest.predict(r))
+                .collect::<Vec<f64>>()
+        });
+        Ok(nested.into_iter().flatten().collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernelmodel::features::NUM_FEATURES;
+    use crate::ml::export::{encode, ExportContract};
+    use crate::ml::forest::{Forest, ForestConfig};
+    use crate::util::prng::Rng;
+
+    fn toy_encoded(seed: u64) -> EncodedForest {
+        let mut rng = Rng::new(seed);
+        let x: Vec<Vec<f64>> = (0..NUM_FEATURES)
+            .map(|_| (0..250).map(|_| rng.range_f64(-1.0, 1.0)).collect())
+            .collect();
+        let y: Vec<f64> =
+            (0..250).map(|i| if x[1][i] > 0.0 { 1.0 } else { -1.0 }).collect();
+        let f = Forest::fit(
+            &x,
+            &y,
+            &ForestConfig { num_trees: 8, threads: 2, ..Default::default() },
+        );
+        encode(&f, ExportContract::default())
+    }
+
+    fn random_rows(n: usize, seed: u64) -> Vec<Vec<f64>> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| (0..NUM_FEATURES).map(|_| rng.range_f64(-2.0, 2.0)).collect())
+            .collect()
+    }
+
+    #[test]
+    fn batched_equals_scalar_reference() {
+        let enc = toy_encoded(11);
+        let exec = NativeForestExecutor::with_parallelism(enc.clone(), 4, 16);
+        let rows = random_rows(500, 12);
+        let got = exec.predict(&rows).unwrap();
+        assert_eq!(got.len(), rows.len());
+        for (r, g) in rows.iter().zip(&got) {
+            assert_eq!(*g, enc.predict(r), "batched path diverged");
+        }
+    }
+
+    #[test]
+    fn single_thread_and_tiny_batches_work() {
+        let enc = toy_encoded(13);
+        let exec = NativeForestExecutor::with_parallelism(enc.clone(), 1, 64);
+        let rows = random_rows(3, 14);
+        let got = exec.predict(&rows).unwrap();
+        assert_eq!(got[1], enc.predict(&rows[1]));
+        assert!(exec.predict(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn malformed_row_is_a_typed_error_not_a_panic() {
+        let enc = toy_encoded(15);
+        let exec = NativeForestExecutor::new(enc);
+        let err = exec.predict(&[vec![0.0; NUM_FEATURES - 1]]).unwrap_err();
+        assert!(format!("{err}").contains("expected"));
+    }
+
+    #[test]
+    fn decide_thresholds_at_zero() {
+        let enc = toy_encoded(17);
+        let exec = NativeForestExecutor::new(enc.clone());
+        let rows = random_rows(64, 18);
+        let decisions = exec.decide(&rows).unwrap();
+        for (r, d) in rows.iter().zip(&decisions) {
+            assert_eq!(*d, enc.predict(r) > 0.0);
+        }
+    }
+}

@@ -1,17 +1,21 @@
-//! Batched forest inference through PJRT: the serving hot path.
+//! Batched forest inference through PJRT: the artifact-backed hot path.
 //!
 //! Holds the tensor-encoded forest as pre-built XLA literals (built once;
 //! ~6 MB reused across calls) and routes each batch to the smallest
-//! compiled batch-size variant that fits, padding with zeros.
+//! compiled batch-size variant that fits, padding with zeros. Owns an
+//! `Arc<Engine>` so service workers can hold one executor per shard.
+
+use std::sync::Arc;
 
 use anyhow::{ensure, Context, Result};
 
 use crate::ml::export::EncodedForest;
 
+use super::executor::BatchExecutor;
 use super::pjrt::Engine;
 
-pub struct ForestExecutor<'e> {
-    engine: &'e Engine,
+pub struct ForestExecutor {
+    engine: Arc<Engine>,
     feats_dim: usize,
     batch_sizes: Vec<usize>,
     // Pre-built forest literals, reused every call.
@@ -22,8 +26,8 @@ pub struct ForestExecutor<'e> {
     lf: xla::Literal,
 }
 
-impl<'e> ForestExecutor<'e> {
-    pub fn new(engine: &'e Engine, forest: &EncodedForest) -> Result<Self> {
+impl ForestExecutor {
+    pub fn new(engine: Arc<Engine>, forest: &EncodedForest) -> Result<Self> {
         let m = &engine.manifest;
         ensure!(
             forest.contract.num_trees == m.num_trees
@@ -43,15 +47,22 @@ impl<'e> ForestExecutor<'e> {
         let shape = [t, n];
         let mut sizes = m.forest_batch_sizes.clone();
         sizes.sort_unstable();
+        ensure!(!sizes.is_empty(), "manifest lists no forest batch sizes");
+        let feats_dim = m.num_features;
+        let fi = xla::Literal::vec1(&forest.feat_idx).reshape(&shape)?;
+        let th = xla::Literal::vec1(&forest.thresh).reshape(&shape)?;
+        let lt = xla::Literal::vec1(&forest.left).reshape(&shape)?;
+        let rt = xla::Literal::vec1(&forest.right).reshape(&shape)?;
+        let lf = xla::Literal::vec1(&forest.leaf).reshape(&shape)?;
         Ok(ForestExecutor {
             engine,
-            feats_dim: m.num_features,
+            feats_dim,
             batch_sizes: sizes,
-            fi: xla::Literal::vec1(&forest.feat_idx).reshape(&shape)?,
-            th: xla::Literal::vec1(&forest.thresh).reshape(&shape)?,
-            lt: xla::Literal::vec1(&forest.left).reshape(&shape)?,
-            rt: xla::Literal::vec1(&forest.right).reshape(&shape)?,
-            lf: xla::Literal::vec1(&forest.leaf).reshape(&shape)?,
+            fi,
+            th,
+            lt,
+            rt,
+            lf,
         })
     }
 
@@ -119,6 +130,20 @@ impl<'e> ForestExecutor<'e> {
     }
 }
 
+impl BatchExecutor for ForestExecutor {
+    fn backend(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn max_batch(&self) -> usize {
+        ForestExecutor::max_batch(self)
+    }
+
+    fn predict(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+        ForestExecutor::predict(self, rows)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,7 +162,7 @@ mod tests {
             eprintln!("skipping: run `make artifacts` first");
             return;
         }
-        let engine = Engine::new(&artifacts_dir()).unwrap();
+        let engine = Arc::new(Engine::new(&artifacts_dir()).unwrap());
         // Train a small real forest on random data.
         let nf = crate::kernelmodel::features::NUM_FEATURES;
         let mut rng = Rng::new(44);
@@ -159,7 +184,7 @@ mod tests {
             num_features: nf,
         };
         let enc = encode(&forest, contract);
-        let exec = ForestExecutor::new(&engine, &enc).unwrap();
+        let exec = ForestExecutor::new(engine, &enc).unwrap();
 
         let rows: Vec<Vec<f64>> = (0..100)
             .map(|_| (0..nf).map(|_| rng.range_f64(-2.0, 2.0)).collect())
@@ -177,7 +202,7 @@ mod tests {
             eprintln!("skipping: run `make artifacts` first");
             return;
         }
-        let engine = Engine::new(&artifacts_dir()).unwrap();
+        let engine = Arc::new(Engine::new(&artifacts_dir()).unwrap());
         let contract = ExportContract {
             num_trees: engine.manifest.num_trees,
             max_nodes: engine.manifest.max_nodes,
@@ -195,7 +220,7 @@ mod tests {
             config_summary: String::new(),
         };
         let enc = encode(&forest, contract);
-        let exec = ForestExecutor::new(&engine, &enc).unwrap();
+        let exec = ForestExecutor::new(engine, &enc).unwrap();
         assert_eq!(exec.route(1), 64);
         assert_eq!(exec.route(64), 64);
         assert_eq!(exec.route(65), 256);

@@ -1,5 +1,8 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts (L2 jax graphs wrapping
-//! the L1 Pallas kernels) and executes them from the rust hot path.
+//! Inference runtime: the backend-agnostic [`executor::BatchExecutor`]
+//! contract with its pure-rust implementation, plus the PJRT path that
+//! loads the AOT HLO-text artifacts (L2 jax graphs wrapping the L1
+//! Pallas kernels) and executes them from the rust hot path.
+pub mod executor;
 pub mod forest_exec;
 pub mod pjrt;
 pub mod stencil_exec;

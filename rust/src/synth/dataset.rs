@@ -100,26 +100,34 @@ pub fn load(path: &Path) -> Result<Vec<SpeedupRecord>> {
     let (header, rows) = csv::read_table(path)?;
     anyhow::ensure!(
         header.len() == NUM_FEATURES + 1,
-        "expected {} columns, got {}",
+        "{}: expected {} columns, got {}",
+        path.display(),
         NUM_FEATURES + 1,
         header.len()
     );
-    Ok(rows
-        .into_iter()
-        .enumerate()
-        .map(|(i, row)| {
-            let mut features = [0.0; NUM_FEATURES];
-            features.copy_from_slice(&row[..NUM_FEATURES]);
-            let speedup = row[NUM_FEATURES];
-            SpeedupRecord {
-                name: format!("row{i}"),
-                features,
-                speedup,
-                baseline_time: f64::NAN,
-                optimized_time: f64::NAN,
-            }
-        })
-        .collect())
+    let mut out = Vec::with_capacity(rows.len());
+    for (i, row) in rows.into_iter().enumerate() {
+        // Validate each row independently of the reader's invariants so
+        // short/ragged rows are an Err, never a copy_from_slice panic.
+        anyhow::ensure!(
+            row.len() == NUM_FEATURES + 1,
+            "{}:{}: row has {} columns, expected {}",
+            path.display(),
+            i + 2,
+            row.len(),
+            NUM_FEATURES + 1
+        );
+        let mut features = [0.0; NUM_FEATURES];
+        features.copy_from_slice(&row[..NUM_FEATURES]);
+        out.push(SpeedupRecord {
+            name: format!("row{i}"),
+            features,
+            speedup: row[NUM_FEATURES],
+            baseline_time: f64::NAN,
+            optimized_time: f64::NAN,
+        });
+    }
+    Ok(out)
 }
 
 /// Split records into train/test by random permutation (paper: train on
@@ -199,6 +207,43 @@ mod tests {
             assert!((a.speedup - b.speedup).abs() < 1e-9);
         }
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_rejects_malformed_files_without_panicking() {
+        let dir = std::env::temp_dir();
+        let pid = std::process::id();
+
+        // Short data row under a correct header. Today the CSV layer
+        // already rejects this (load's own per-row ensure is a second
+        // line of defense against reader changes); either way the
+        // contract under test is `Err`, never a copy_from_slice panic.
+        let short_row = dir.join(format!("lmtuner-ds-short-{pid}.csv"));
+        std::fs::write(
+            &short_row,
+            format!("{}\n1,2,3\n", csv_header().join(",")),
+        )
+        .unwrap();
+        assert!(load(&short_row).is_err());
+        std::fs::remove_file(&short_row).ok();
+
+        // Header with too few columns.
+        let short_header = dir.join(format!("lmtuner-ds-hdr-{pid}.csv"));
+        std::fs::write(&short_header, "a,b\n1,2\n").unwrap();
+        assert!(load(&short_header).is_err());
+        std::fs::remove_file(&short_header).ok();
+
+        // Non-numeric cell.
+        let bad_cell = dir.join(format!("lmtuner-ds-bad-{pid}.csv"));
+        let row: Vec<String> =
+            (0..NUM_FEATURES + 1).map(|_| "oops".to_string()).collect();
+        std::fs::write(
+            &bad_cell,
+            format!("{}\n{}\n", csv_header().join(","), row.join(",")),
+        )
+        .unwrap();
+        assert!(load(&bad_cell).is_err());
+        std::fs::remove_file(&bad_cell).ok();
     }
 
     #[test]

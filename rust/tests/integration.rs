@@ -197,6 +197,38 @@ fn prop_batching_decisions_equal_unbatched() {
 }
 
 #[test]
+fn prop_native_executor_invariant_under_batch_mix() {
+    // The native BatchExecutor returns the same value for a row whether
+    // it is served alone, in a shuffled batch, or across chunk splits.
+    use lmtuner::runtime::executor::{BatchExecutor, NativeForestExecutor};
+    let records = small_records();
+    let (train, _) = dataset::split(&records, 0.1, 7);
+    let forest = Forest::fit_records(&train, &ForestConfig {
+        num_trees: 5,
+        ..Default::default()
+    });
+    let enc = encode(&forest, ExportContract::default());
+    let exec = NativeForestExecutor::with_parallelism(enc.clone(), 3, 4);
+    prop::check("native-batch-invariance", 32, |rng| {
+        let n = rng.range(1, 40);
+        let rows: Vec<Vec<f64>> = (0..n)
+            .map(|_| {
+                records[rng.range(0, records.len() - 1)].features.to_vec()
+            })
+            .collect();
+        let batched = exec.predict(&rows).map_err(|e| e.to_string())?;
+        for (row, b) in rows.iter().zip(&batched) {
+            let single = enc.predict(row);
+            lmtuner::prop_assert!(
+                *b == single,
+                "batched {b} != single {single}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn prop_launch_sweep_all_descriptors_valid() {
     let dev = DeviceSpec::m2090();
     let sweep = LaunchSweep::new(2048, 2048);

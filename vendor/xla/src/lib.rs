@@ -1,0 +1,252 @@
+//! Pure-Rust stub of the `xla` (PJRT) FFI crate.
+//!
+//! The real crate links the XLA C++ runtime, which is not present in
+//! this build environment. The stub keeps the whole call surface that
+//! `lmtuner::runtime` compiles against — `Literal`, `PjRtClient`,
+//! `PjRtLoadedExecutable`, `HloModuleProto`, `XlaComputation` — but
+//! [`PjRtClient::cpu`] fails at runtime with a clear error, so every
+//! caller hits one well-defined "PJRT unavailable" point and can fall
+//! back to the native executor. `Literal` is a real little typed tensor
+//! container (data + dims), so literal construction and readback behave
+//! normally even in stub mode.
+
+use std::fmt;
+
+/// Error type mirroring the real crate's: displayable, `std::error`.
+#[derive(Clone, Debug)]
+pub struct Error(String);
+
+impl Error {
+    pub fn new(msg: impl Into<String>) -> Self {
+        Error(msg.into())
+    }
+
+    fn unavailable(what: &str) -> Self {
+        Error(format!(
+            "{what}: the XLA/PJRT runtime is not linked into this build \
+             (vendor/xla stub); use the native executor instead"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element storage for [`Literal`]. Public only so [`NativeType`] can
+/// name it in its signatures; not part of the intended API.
+#[doc(hidden)]
+#[derive(Clone, Debug, PartialEq)]
+pub enum Repr {
+    F32(Vec<f32>),
+    F64(Vec<f64>),
+    I32(Vec<i32>),
+    I64(Vec<i64>),
+}
+
+impl Repr {
+    fn len(&self) -> usize {
+        match self {
+            Repr::F32(v) => v.len(),
+            Repr::F64(v) => v.len(),
+            Repr::I32(v) => v.len(),
+            Repr::I64(v) => v.len(),
+        }
+    }
+
+    fn type_name(&self) -> &'static str {
+        match self {
+            Repr::F32(_) => "f32",
+            Repr::F64(_) => "f64",
+            Repr::I32(_) => "i32",
+            Repr::I64(_) => "i64",
+        }
+    }
+}
+
+/// Element types a [`Literal`] can hold.
+pub trait NativeType: Copy + Sized {
+    #[doc(hidden)]
+    fn to_repr(data: Vec<Self>) -> Repr;
+    #[doc(hidden)]
+    fn from_repr(repr: &Repr) -> Option<Vec<Self>>;
+    #[doc(hidden)]
+    fn type_name() -> &'static str;
+}
+
+macro_rules! native_type {
+    ($ty:ty, $variant:ident, $name:literal) => {
+        impl NativeType for $ty {
+            fn to_repr(data: Vec<Self>) -> Repr {
+                Repr::$variant(data)
+            }
+            fn from_repr(repr: &Repr) -> Option<Vec<Self>> {
+                match repr {
+                    Repr::$variant(v) => Some(v.clone()),
+                    _ => None,
+                }
+            }
+            fn type_name() -> &'static str {
+                $name
+            }
+        }
+    };
+}
+
+native_type!(f32, F32, "f32");
+native_type!(f64, F64, "f64");
+native_type!(i32, I32, "i32");
+native_type!(i64, I64, "i64");
+
+/// A typed host tensor: element data plus dimensions.
+#[derive(Clone, Debug)]
+pub struct Literal {
+    repr: Repr,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal from a slice.
+    pub fn vec1<T: NativeType>(data: &[T]) -> Literal {
+        Literal {
+            repr: T::to_repr(data.to_vec()),
+            dims: vec![data.len() as i64],
+        }
+    }
+
+    pub fn element_count(&self) -> usize {
+        self.repr.len()
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Same data, new shape; the element count must match.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n < 0 || n as usize != self.repr.len() {
+            return Err(Error::new(format!(
+                "reshape {:?} -> {:?}: element count mismatch ({} elements)",
+                self.dims,
+                dims,
+                self.repr.len()
+            )));
+        }
+        Ok(Literal { repr: self.repr.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy the elements out, checking the requested type.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::from_repr(&self.repr).ok_or_else(|| {
+            Error::new(format!(
+                "literal holds {}, requested {}",
+                self.repr.type_name(),
+                T::type_name()
+            ))
+        })
+    }
+
+    /// Decompose a tuple literal. Stub literals are never tuples.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        Err(Error::new("literal is not a tuple (vendor/xla stub)"))
+    }
+}
+
+impl AsRef<Literal> for Literal {
+    fn as_ref(&self) -> &Literal {
+        self
+    }
+}
+
+/// Parsed HLO module. The stub cannot parse HLO text.
+pub struct HloModuleProto {
+    _private: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable(&format!("parse HLO text {path}")))
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+pub struct XlaComputation {
+    _private: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _private: () }
+    }
+}
+
+/// Device buffer handle returned by an execution.
+pub struct PjRtBuffer {
+    _private: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// A compiled executable.
+pub struct PjRtLoadedExecutable {
+    _private: (),
+}
+
+impl PjRtLoadedExecutable {
+    /// Execute with literal arguments; `[replica][output]` buffers.
+    pub fn execute<L: AsRef<Literal>>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+/// PJRT client. Construction fails in the stub: there is no runtime.
+pub struct PjRtClient {
+    _private: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("PjRtClient::compile"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_and_reshape() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(l.element_count(), 6);
+        let m = l.reshape(&[2, 3]).unwrap();
+        assert_eq!(m.dims(), &[2, 3]);
+        assert_eq!(m.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert!(l.reshape(&[4, 2]).is_err());
+        assert!(m.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn client_is_unavailable() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("not linked"));
+    }
+}
