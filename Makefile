@@ -2,13 +2,17 @@
 # (no artifacts, no network). `artifacts` requires a python with jax to
 # AOT-lower the Pallas kernels to HLO text for the PJRT backend.
 
-.PHONY: build test artifacts clean
+.PHONY: build test docs artifacts clean
 
 build:
 	cargo build --release
 
 test:
 	cargo test -q
+
+# Same gate CI runs: doc rot fails the build.
+docs:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps -p lmtuner
 
 artifacts:
 	cd python/compile && python3 aot.py --out-dir ../../artifacts

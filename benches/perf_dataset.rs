@@ -1,0 +1,84 @@
+//! Dataset-pipeline throughput (rows/sec): the serial reference build
+//! vs the streamed chunk-parallel build, and the per-sink overhead of
+//! streaming to sharded CSV or a reservoir sample. The parallel/serial
+//! ratio is the headline number: it is what makes paper-scale
+//! (`--scale 1.0`, millions of instances) phase-1 runs practical.
+
+use lmtuner::gpu::spec::DeviceSpec;
+use lmtuner::synth::sink::{MemorySink, ReservoirSink, ShardedCsvSink};
+use lmtuner::synth::{dataset, generator, sweep::LaunchSweep};
+use lmtuner::util::bench::{black_box, report_throughput, Bencher};
+use lmtuner::util::prng::Rng;
+
+fn main() {
+    let dev = DeviceSpec::m2090();
+    let sweep = LaunchSweep::new(2048, 2048);
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!("host threads: {threads}");
+
+    for tuples in [2usize, 8] {
+        let mut rng = Rng::new(0xBE4C4);
+        let templates = generator::generate_n(&mut rng, tuples);
+        let cfg = dataset::BuildConfig {
+            configs_per_kernel: 8,
+            ..Default::default()
+        };
+        let serial_cfg = dataset::BuildConfig { threads: 1, ..cfg.clone() };
+        let bench = Bencher::coarse();
+
+        // Serial reference (the old `dataset::build` shape: one thread,
+        // one Vec).
+        let mut rows = 0usize;
+        let r_serial = bench.run(
+            &format!("serial reference ({tuples} tuples x 8 cfgs)"),
+            || {
+                let recs = dataset::build_serial(&templates, &sweep, &dev, &serial_cfg);
+                rows = recs.len();
+                black_box(recs);
+            },
+        );
+        report_throughput(&r_serial, rows as f64, "rows");
+
+        // Streamed chunk-parallel build into memory.
+        let r_mem = bench.run(
+            &format!("streamed -> MemorySink ({threads} threads)"),
+            || {
+                let mut sink = MemorySink::new();
+                dataset::build_streaming(&templates, &sweep, &dev, &cfg, &mut sink, None)
+                    .unwrap();
+                black_box(sink.records);
+            },
+        );
+        report_throughput(&r_mem, rows as f64, "rows");
+
+        // Streamed to round-robin CSV shards on disk.
+        let dir = std::env::temp_dir()
+            .join(format!("lmtuner-perf-ds-{}", std::process::id()));
+        let r_csv = bench.run("streamed -> ShardedCsvSink (4 shards)", || {
+            let mut sink = ShardedCsvSink::create(&dir, 4).unwrap();
+            dataset::build_streaming(&templates, &sweep, &dev, &cfg, &mut sink, None)
+                .unwrap();
+            black_box(sink.written());
+        });
+        report_throughput(&r_csv, rows as f64, "rows");
+        std::fs::remove_dir_all(&dir).ok();
+
+        // Streamed through a training-split reservoir.
+        let r_res = bench.run("streamed -> ReservoirSink (cap 1000)", || {
+            let mut sink = ReservoirSink::new(1000, 7);
+            dataset::build_streaming(&templates, &sweep, &dev, &cfg, &mut sink, None)
+                .unwrap();
+            black_box(sink.records().len());
+        });
+        report_throughput(&r_res, rows as f64, "rows");
+
+        println!(
+            "  parallel/serial speedup: {:.2}x over {} rows ({} threads)\n",
+            r_serial.mean.as_secs_f64() / r_mem.mean.as_secs_f64(),
+            rows,
+            threads
+        );
+    }
+}

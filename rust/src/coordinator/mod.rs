@@ -1,5 +1,24 @@
 //! The coordinator: phase-1 training pipeline and the phase-2 batched
 //! prediction service (paper Fig. 2, both halves).
+//!
+//! Training runs either fully in memory ([`train::run`]) or as the
+//! paper-scale streaming pipeline ([`train::run_sharded`]): one build
+//! pass shards the dataset to CSV on disk while reservoir-sampling the
+//! training split, then a second streaming pass over the shards grades
+//! every held-out instance — peak memory stays bounded at any scale.
+//!
+//! ```no_run
+//! use lmtuner::coordinator::train::{self, ShardedTrainConfig, TrainConfig};
+//! use lmtuner::gpu::spec::DeviceSpec;
+//!
+//! let dev = DeviceSpec::m2090();
+//! let cfg = ShardedTrainConfig::new(
+//!     TrainConfig { scale: 1.0, ..Default::default() },
+//!     "data/shards".into(),
+//! );
+//! let out = train::run_sharded(&dev, &cfg, None).unwrap();
+//! println!("{} instances, trained on {}", out.summary.records, out.train_size);
+//! ```
 pub mod messages;
 pub mod service;
 pub mod train;

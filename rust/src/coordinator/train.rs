@@ -2,17 +2,36 @@
 //! generate synthetic kernels -> sweep launches -> measure on the
 //! simulated testbed -> train the Random Forest -> evaluate both metrics
 //! -> persist model + dataset.
+//!
+//! Two pipelines share the same deterministic record stream:
+//!
+//! * [`run`] — the in-memory pipeline: every record is materialized,
+//!   split by random permutation, and evaluated in one pass. Right for
+//!   toy/CI scales.
+//! * [`run_sharded`] — the paper-scale pipeline: one streaming build
+//!   pass shards the dataset to disk while reservoir-sampling the
+//!   training split, the forest fits on the sample, and a second
+//!   streaming pass over the shards evaluates the held-out instances
+//!   through `metrics::AccuracyAccumulator`. Peak memory is bounded by
+//!   (reservoir capacity + two build chunks) regardless of `scale`.
 
-use std::path::Path;
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::gpu::spec::DeviceSpec;
+use crate::kernelmodel::features::NUM_FEATURES;
 use crate::ml::forest::{Forest, ForestConfig};
-use crate::ml::metrics::{self, Accuracy};
+use crate::ml::metrics::{self, Accuracy, AccuracyAccumulator};
 use crate::ml::{export, io};
 use crate::sim::exec::{MeasureConfig, SpeedupRecord};
+use crate::synth::dataset::BuildProgress;
+use crate::util::pool::parallel_map;
+use crate::synth::sink::{
+    self, DatasetSummary, MemorySink, ReservoirSink, ShardedCsvSink, Tee,
+};
 use crate::synth::{dataset, generator, sweep::LaunchSweep};
 use crate::util::prng::Rng;
 use crate::workloads;
@@ -43,9 +62,40 @@ impl Default for TrainConfig {
     }
 }
 
+/// Options for the sharded streaming pipeline on top of a base
+/// [`TrainConfig`].
+#[derive(Clone, Debug)]
+pub struct ShardedTrainConfig {
+    pub base: TrainConfig,
+    /// Directory receiving `shard-NNN.csv` files.
+    pub out_dir: PathBuf,
+    /// Number of CSV shards.
+    pub shards: usize,
+    /// Reservoir capacity for the training split. Plays the role of
+    /// `train_fraction` when the stream length is unknown: the forest
+    /// fits on a uniform sample of this size, everything else is test.
+    pub train_capacity: usize,
+}
+
+impl ShardedTrainConfig {
+    pub fn new(base: TrainConfig, out_dir: PathBuf) -> Self {
+        ShardedTrainConfig {
+            base,
+            out_dir,
+            shards: 8,
+            train_capacity: 50_000,
+        }
+    }
+}
+
 pub struct TrainOutcome {
     pub forest: Forest,
+    /// Materialized records (in-memory pipeline only; empty when the
+    /// dataset streamed to disk shards).
     pub records: Vec<SpeedupRecord>,
+    /// Stream statistics of the full dataset, accumulated during the
+    /// build pass.
+    pub summary: DatasetSummary,
     pub synth_accuracy: Accuracy,
     pub per_benchmark: Vec<(String, Accuracy)>,
     pub train_size: usize,
@@ -53,19 +103,39 @@ pub struct TrainOutcome {
     pub fit_seconds: f64,
 }
 
-/// Run the full phase-1 pipeline.
-pub fn run(dev: &DeviceSpec, cfg: &TrainConfig) -> TrainOutcome {
-    let t0 = Instant::now();
-    let mut rng = Rng::new(cfg.seed);
-    let templates = generator::generate(&mut rng, cfg.scale);
-    let sweep = LaunchSweep::new(2048, 2048);
-    let build = dataset::BuildConfig {
+/// Dataset build options derived from a train config. The seed
+/// derivation lives here only, so `lmtuner generate` and the train
+/// pipelines produce the same record stream for the same `--seed`.
+pub fn build_config(cfg: &TrainConfig) -> dataset::BuildConfig {
+    dataset::BuildConfig {
         configs_per_kernel: cfg.configs_per_kernel,
         measure: cfg.measure,
         seed: cfg.seed ^ 0xDA7A,
         ..dataset::BuildConfig::default()
-    };
-    let records = dataset::build(&templates, &sweep, dev, &build);
+    }
+}
+
+/// Run the full phase-1 pipeline in memory.
+pub fn run(dev: &DeviceSpec, cfg: &TrainConfig) -> TrainOutcome {
+    run_with_progress(dev, cfg, None)
+}
+
+/// In-memory pipeline with an optional per-chunk progress callback.
+pub fn run_with_progress(
+    dev: &DeviceSpec,
+    cfg: &TrainConfig,
+    progress: Option<&mut dyn FnMut(&BuildProgress)>,
+) -> TrainOutcome {
+    let t0 = Instant::now();
+    let mut rng = Rng::new(cfg.seed);
+    let templates = generator::generate(&mut rng, cfg.scale);
+    let sweep = LaunchSweep::new(2048, 2048);
+    let build = build_config(cfg);
+    let mut mem = MemorySink::new();
+    let summary =
+        dataset::build_streaming(&templates, &sweep, dev, &build, &mut mem, progress)
+            .expect("in-memory sink cannot fail");
+    let records = mem.records;
     let gen_seconds = t0.elapsed().as_secs_f64();
 
     let (train, test) = dataset::split(&records, cfg.train_fraction, cfg.seed);
@@ -82,11 +152,110 @@ pub fn run(dev: &DeviceSpec, cfg: &TrainConfig) -> TrainOutcome {
     TrainOutcome {
         forest,
         records,
+        summary,
         synth_accuracy,
         per_benchmark,
         train_size,
         gen_seconds,
         fit_seconds,
+    }
+}
+
+/// Run the paper-scale streaming pipeline: shard the dataset to disk,
+/// fit on a reservoir sample, evaluate the held-out rows in a second
+/// streaming pass. Peak memory is bounded by the reservoir capacity
+/// plus two build chunks (one consumed, one lookahead), regardless of scale.
+pub fn run_sharded(
+    dev: &DeviceSpec,
+    cfg: &ShardedTrainConfig,
+    progress: Option<&mut dyn FnMut(&BuildProgress)>,
+) -> Result<TrainOutcome> {
+    let base = &cfg.base;
+    let t0 = Instant::now();
+    let mut rng = Rng::new(base.seed);
+    let templates = generator::generate(&mut rng, base.scale);
+    let sweep = LaunchSweep::new(2048, 2048);
+    let build = build_config(base);
+
+    // Pass 1: simulate once, streaming every record to the CSV shards
+    // while the reservoir uniformly samples the training split.
+    let mut shards = ShardedCsvSink::create(&cfg.out_dir, cfg.shards)?;
+    let mut reservoir =
+        ReservoirSink::new(cfg.train_capacity, base.seed ^ 0x7EA1_5A3D);
+    let mut tee = Tee(&mut shards, &mut reservoir);
+    let summary =
+        dataset::build_streaming(&templates, &sweep, dev, &build, &mut tee, progress)?;
+    let gen_seconds = t0.elapsed().as_secs_f64();
+
+    let (train_records, train_indices) = reservoir.into_sample();
+    let train_size = train_records.len();
+    let t1 = Instant::now();
+    let forest = Forest::fit_records(&train_records, &base.forest);
+    let fit_seconds = t1.elapsed().as_secs_f64();
+    drop(train_records);
+
+    // Pass 2: stream the shards back and grade every held-out row.
+    // Rows are graded in parallel batches — a serial decide() here
+    // would cap the whole pipeline at single-thread speed at paper
+    // scale, after the build pass was parallelized.
+    const EVAL_BATCH: usize = 8192;
+    let train_set: HashSet<u64> = train_indices.into_iter().collect();
+    let mut acc = AccuracyAccumulator::new();
+    let mut batch: Vec<Vec<f64>> = Vec::with_capacity(EVAL_BATCH);
+    let threads = build.threads;
+    let streamed = sink::stream_sharded_rows(&cfg.out_dir, |idx, row| {
+        if !train_set.contains(&idx) {
+            batch.push(row);
+            if batch.len() == EVAL_BATCH {
+                grade_rows(&mut acc, &forest, &batch, threads);
+                batch.clear();
+            }
+        }
+        Ok(())
+    })?;
+    grade_rows(&mut acc, &forest, &batch, threads);
+    anyhow::ensure!(
+        streamed == summary.records,
+        "{}: shards replay {} records but the build streamed {} — \
+         stale files in the output directory?",
+        cfg.out_dir.display(),
+        streamed,
+        summary.records
+    );
+    anyhow::ensure!(
+        acc.n() > 0,
+        "training reservoir (capacity {}) swallowed the entire \
+         {}-record stream, leaving nothing to evaluate; lower \
+         train_capacity below the stream size or raise scale",
+        cfg.train_capacity,
+        summary.records
+    );
+
+    let per_benchmark = evaluate_real(dev, &forest, &base.measure);
+    Ok(TrainOutcome {
+        forest,
+        records: Vec::new(),
+        summary,
+        synth_accuracy: acc.finish(),
+        per_benchmark,
+        train_size,
+        gen_seconds,
+        fit_seconds,
+    })
+}
+
+/// Grade one batch of raw dataset rows (features + speedup) against
+/// the forest, fanning `decide` across the thread pool.
+fn grade_rows(
+    acc: &mut AccuracyAccumulator,
+    forest: &Forest,
+    rows: &[Vec<f64>],
+    threads: usize,
+) {
+    let decisions =
+        parallel_map(rows, threads, |row| forest.decide(&row[..NUM_FEATURES]));
+    for (row, d) in rows.iter().zip(decisions) {
+        acc.push(row[NUM_FEATURES], d);
     }
 }
 
@@ -99,13 +268,12 @@ pub fn evaluate_real(
     workloads::all()
         .into_iter()
         .map(|b| {
-            let recs: Vec<SpeedupRecord> = (b.instances)(dev)
-                .iter()
-                .map(|d| crate::sim::exec::measure(d, dev, measure))
-                .collect();
-            let refs: Vec<&SpeedupRecord> = recs.iter().collect();
-            let acc = metrics::evaluate_model(&refs, |x| forest.decide(x));
-            (b.name.to_string(), acc)
+            let mut acc = AccuracyAccumulator::new();
+            for d in (b.instances)(dev).iter() {
+                let r = crate::sim::exec::measure(d, dev, measure);
+                acc.push_record(&r, forest.decide(&r.features));
+            }
+            (b.name.to_string(), acc.finish())
         })
         .collect()
 }
@@ -160,6 +328,7 @@ mod tests {
         };
         let out = run(&dev, &cfg);
         assert!(out.records.len() > 1000, "{}", out.records.len());
+        assert_eq!(out.summary.records as usize, out.records.len());
         assert!(out.synth_accuracy.count_based > 0.6,
             "count {}", out.synth_accuracy.count_based);
         assert!(out.synth_accuracy.penalty_weighted > 0.8);
@@ -182,5 +351,73 @@ mod tests {
         let probe = out.records[0].features;
         assert!((back.predict(&probe) - out.forest.predict(&probe)).abs() < 1e-12);
         std::fs::remove_file(&mp).ok();
+    }
+
+    #[test]
+    fn sharded_pipeline_end_to_end() {
+        let dev = DeviceSpec::m2090();
+        let dir = std::env::temp_dir()
+            .join(format!("lmtuner-train-shards-{}", std::process::id()));
+        let cfg = ShardedTrainConfig {
+            shards: 3,
+            train_capacity: 400,
+            ..ShardedTrainConfig::new(
+                TrainConfig {
+                    scale: 0.03,
+                    configs_per_kernel: 6,
+                    ..Default::default()
+                },
+                dir.clone(),
+            )
+        };
+        let out = run_sharded(&dev, &cfg, None).unwrap();
+        // dataset streamed to disk, not memory
+        assert!(out.records.is_empty());
+        assert!(out.summary.records > 1000);
+        assert_eq!(out.train_size, 400);
+        // every non-train row was graded
+        assert_eq!(
+            out.synth_accuracy.n as u64 + out.train_size as u64,
+            out.summary.records
+        );
+        assert!(out.synth_accuracy.count_based > 0.6,
+            "count {}", out.synth_accuracy.count_based);
+        assert_eq!(out.per_benchmark.len(), 8);
+        // the shards reload to exactly the stream the summary counted
+        let back = sink::load_sharded(&dir).unwrap();
+        assert_eq!(back.len() as u64, out.summary.records);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sharded_matches_in_memory_dataset() {
+        // Same seed: the sharded pipeline writes exactly the records
+        // the in-memory pipeline materializes.
+        let dev = DeviceSpec::m2090();
+        let cfg = TrainConfig {
+            scale: 0.02,
+            configs_per_kernel: 4,
+            ..Default::default()
+        };
+        let dir = std::env::temp_dir()
+            .join(format!("lmtuner-train-eq-{}", std::process::id()));
+        let mem = run(&dev, &cfg);
+        let sharded = run_sharded(
+            &dev,
+            &ShardedTrainConfig {
+                shards: 2,
+                train_capacity: 100,
+                ..ShardedTrainConfig::new(cfg, dir.clone())
+            },
+            None,
+        )
+        .unwrap();
+        assert_eq!(sharded.summary.records as usize, mem.records.len());
+        let back = sink::load_sharded(&dir).unwrap();
+        for (a, b) in back.iter().zip(&mem.records) {
+            assert_eq!(a.features, b.features);
+            assert!((a.speedup - b.speedup).abs() < 1e-9);
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

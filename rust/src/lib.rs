@@ -2,8 +2,51 @@
 //! GPGPUs — a reproduction of Han & Abdelrahman (2014) grown into a
 //! batched inference serving system.
 //!
-//! See DESIGN.md for the module inventory, the `BatchExecutor` backend
-//! contract, and the experiment index.
+//! The paper's framework has two phases. **Phase 1** trains a Random
+//! Forest on millions of synthetic kernel instances, each labeled with
+//! the measured speedup of staging its data in local/shared memory:
+//! [`synth`] generates the kernel population, [`sim`] measures it on a
+//! simulated Tesla M2090 testbed, [`ml`] fits and evaluates the model,
+//! and [`coordinator::train`] drives the pipeline — either fully in
+//! memory or streamed through `synth::sink` record sinks so paper-scale
+//! datasets shard to disk with bounded peak memory. **Phase 2** serves
+//! the use/don't-use decision online: [`coordinator::service`] batches
+//! requests across sharded workers onto a [`runtime`] backend (native
+//! tensorized traversal, or PJRT when artifacts are present).
+//!
+//! See `README.md` for the quickstart, `DESIGN.md` for the module
+//! inventory and backend contracts, and `EXPERIMENTS.md` for how each
+//! paper figure/table is regenerated.
+//!
+//! # End-to-end example
+//!
+//! Generate a small synthetic population, measure it, fit a forest,
+//! and evaluate the paper's two accuracy metrics:
+//!
+//! ```
+//! use lmtuner::gpu::spec::DeviceSpec;
+//! use lmtuner::ml::forest::{Forest, ForestConfig};
+//! use lmtuner::ml::metrics;
+//! use lmtuner::synth::{dataset, generator, sweep::LaunchSweep};
+//! use lmtuner::util::prng::Rng;
+//!
+//! let dev = DeviceSpec::m2090();
+//! let mut rng = Rng::new(7);
+//! // 1 context tuple -> 112 kernel templates (paper scale is 100 tuples)
+//! let templates = generator::generate_n(&mut rng, 1);
+//! let sweep = LaunchSweep::new(2048, 2048);
+//! let cfg = dataset::BuildConfig { configs_per_kernel: 2, ..Default::default() };
+//! let records = dataset::build(&templates, &sweep, &dev, &cfg);
+//! assert!(!records.is_empty());
+//!
+//! let (train, test) = dataset::split(&records, 0.5, 1);
+//! let forest = Forest::fit_records(
+//!     &train,
+//!     &ForestConfig { num_trees: 3, ..Default::default() },
+//! );
+//! let acc = metrics::evaluate_model(&test, |x| forest.decide(x));
+//! assert!(acc.n > 0 && acc.penalty_weighted > 0.0);
+//! ```
 pub mod coordinator;
 pub mod gpu;
 pub mod kernelmodel;

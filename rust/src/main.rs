@@ -37,8 +37,12 @@ fn usage() -> &'static str {
     "lmtuner <generate|train|eval|predict|serve|reproduce|info> [options]\n\
      \n\
      generate  --out data/synth.csv [--scale 0.2] [--configs 24] [--seed N]\n\
+               [--shards N --out-dir data/shards]  (streamed, sharded CSV)\n\
      train     --model models/rf.txt [--data data/synth.csv] [--scale 0.2]\n\
                [--configs 24] [--trees 20] [--mtry 4] [--train-frac 0.1]\n\
+               [--shards N --out-dir data/shards --train-cap 50000]\n\
+               (--shards streams the dataset to disk: bounded memory at\n\
+                any --scale; the forest fits on a reservoir sample)\n\
      eval      --model models/rf.txt [--data data/synth.csv] [--real]\n\
      predict   --model models/rf.txt --features f1,...,f18 [--artifacts DIR]\n\
      serve     --model models/rf.txt [--backend auto|native|pjrt]\n\
@@ -83,33 +87,81 @@ fn train_config(args: &mut Args) -> Result<TrainConfig> {
     Ok(cfg)
 }
 
+/// Progress callback printing build throughput to stderr at most every
+/// two seconds (and on the final chunk).
+fn progress_printer() -> impl FnMut(&lmtuner::synth::dataset::BuildProgress) {
+    let mut last = std::time::Instant::now();
+    move |p| {
+        let done = p.templates_done == p.templates_total;
+        if last.elapsed().as_secs_f64() >= 2.0 || done {
+            last = std::time::Instant::now();
+            eprintln!(
+                "  [{}/{} templates] {} records, {:.0} rows/s, {:.0}s elapsed",
+                p.templates_done,
+                p.templates_total,
+                p.records,
+                p.rows_per_second(),
+                p.elapsed_seconds
+            );
+        }
+    }
+}
+
 fn cmd_generate(args: &mut Args, dev: &DeviceSpec) -> Result<()> {
-    let out = PathBuf::from(args.str_or("out", "data/synth.csv"));
+    let out_explicit = args.opt_str("out");
+    let out = PathBuf::from(out_explicit.as_deref().unwrap_or("data/synth.csv"));
+    let shards: Option<usize> = args.get("shards").map_err(anyhow::Error::msg)?;
+    let out_dir_explicit = args.opt_str("out-dir");
+    let out_dir =
+        PathBuf::from(out_dir_explicit.as_deref().unwrap_or("data/shards"));
     let cfg = train_config(args)?;
     args.finish().map_err(anyhow::Error::msg)?;
+    if shards.is_some() && out_explicit.is_some() {
+        bail!(
+            "--out conflicts with --shards (sharded output goes to \
+             --out-dir, currently {})",
+            out_dir.display()
+        );
+    }
+    if shards.is_none() && out_dir_explicit.is_some() {
+        bail!("--out-dir requires --shards N (single-file output uses --out)");
+    }
 
     let mut rng = Rng::new(cfg.seed);
     let templates = lmtuner::synth::generator::generate(&mut rng, cfg.scale);
     let sweep = lmtuner::synth::sweep::LaunchSweep::new(2048, 2048);
-    let build = dataset::BuildConfig {
-        configs_per_kernel: cfg.configs_per_kernel,
-        measure: cfg.measure,
-        seed: cfg.seed ^ 0xDA7A,
-        ..dataset::BuildConfig::default()
+    let build = train::build_config(&cfg);
+    let mut progress = progress_printer();
+    let summary = if let Some(shards) = shards {
+        // Streamed, sharded build: bounded memory at any scale.
+        let mut sink = lmtuner::synth::sink::ShardedCsvSink::create(&out_dir, shards)?;
+        let summary = dataset::build_streaming(
+            &templates, &sweep, dev, &build, &mut sink, Some(&mut progress),
+        )?;
+        println!(
+            "wrote {} instances to {} ({} shards)",
+            sink.written(),
+            out_dir.display(),
+            sink.shards()
+        );
+        summary
+    } else {
+        let mut sink = lmtuner::synth::sink::MemorySink::new();
+        let summary = dataset::build_streaming(
+            &templates, &sweep, dev, &build, &mut sink, Some(&mut progress),
+        )?;
+        if let Some(dir) = out.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        dataset::save(&sink.records, &out)?;
+        println!("wrote {} instances to {}", sink.records.len(), out.display());
+        summary
     };
-    let records = dataset::build(&templates, &sweep, dev, &build);
-    if let Some(dir) = out.parent() {
-        std::fs::create_dir_all(dir)?;
-    }
-    dataset::save(&records, &out)?;
-    let (n, ben, geo, max) = dataset::summarize(&records);
     println!(
-        "wrote {} instances to {} (beneficial {:.1}%, geomean {:.2}x, max {:.1}x)",
-        n,
-        out.display(),
-        100.0 * ben,
-        geo,
-        max
+        "beneficial {:.1}%, geomean {:.2}x, max {:.1}x",
+        100.0 * summary.beneficial_fraction(),
+        summary.geomean_speedup(),
+        summary.max_speedup
     );
     Ok(())
 }
@@ -117,8 +169,43 @@ fn cmd_generate(args: &mut Args, dev: &DeviceSpec) -> Result<()> {
 fn cmd_train(args: &mut Args, dev: &DeviceSpec) -> Result<()> {
     let model_path = PathBuf::from(args.str_or("model", "models/rf.txt"));
     let data_path = args.opt_str("data").map(PathBuf::from);
+    let shards: Option<usize> = args.get("shards").map_err(anyhow::Error::msg)?;
+    let out_dir_explicit = args.opt_str("out-dir");
+    let out_dir =
+        PathBuf::from(out_dir_explicit.as_deref().unwrap_or("data/shards"));
+    let train_cap_explicit = args.opt_str("train-cap").is_some();
+    let train_cap: usize =
+        args.get_or("train-cap", 50_000).map_err(anyhow::Error::msg)?;
+    let train_frac_given = args.opt_str("train-frac").is_some();
     let cfg = train_config(args)?;
     args.finish().map_err(anyhow::Error::msg)?;
+    if shards.is_none() && (out_dir_explicit.is_some() || train_cap_explicit) {
+        // These options select the streaming pipeline; consuming them
+        // silently would run the in-memory path the user asked to avoid.
+        bail!("--out-dir/--train-cap require --shards N (streamed mode)");
+    }
+    if shards.is_some() {
+        if train_frac_given {
+            println!(
+                "note: --train-frac ignored with --shards (the training \
+                 split is the --train-cap {train_cap}-row reservoir)"
+            );
+        }
+        // The reservoir must leave held-out rows to evaluate; the
+        // instance count is bounded by templates x configs, so a cap
+        // at or above that bound is guaranteed to swallow everything.
+        let max_rows = lmtuner::synth::generator::template_count(cfg.scale)
+            * cfg.configs_per_kernel;
+        if train_cap >= max_rows {
+            bail!(
+                "--train-cap {train_cap} >= the {max_rows}-instance upper \
+                 bound at --scale {} x --configs {}; nothing would be left \
+                 to evaluate (lower --train-cap or raise --scale)",
+                cfg.scale,
+                cfg.configs_per_kernel
+            );
+        }
+    }
 
     println!(
         "training: scale={} configs/kernel={} trees={} mtry={} train-frac={}",
@@ -128,10 +215,26 @@ fn cmd_train(args: &mut Args, dev: &DeviceSpec) -> Result<()> {
         cfg.forest.tree.mtry,
         cfg.train_fraction
     );
-    let out = train::run(dev, &cfg);
+    let mut progress = progress_printer();
+    let out = if let Some(shards) = shards {
+        let scfg = train::ShardedTrainConfig {
+            shards,
+            train_capacity: train_cap,
+            ..train::ShardedTrainConfig::new(cfg, out_dir.clone())
+        };
+        println!(
+            "streaming dataset to {} ({} shards, train reservoir {})",
+            scfg.out_dir.display(),
+            scfg.shards,
+            scfg.train_capacity
+        );
+        train::run_sharded(dev, &scfg, Some(&mut progress))?
+    } else {
+        train::run_with_progress(dev, &cfg, Some(&mut progress))
+    };
     println!(
         "dataset: {} instances in {:.1}s; trained on {} in {:.1}s (max depth {}, max nodes {})",
-        out.records.len(),
+        out.summary.records,
         out.gen_seconds,
         out.train_size,
         out.fit_seconds,
@@ -142,11 +245,19 @@ fn cmd_train(args: &mut Args, dev: &DeviceSpec) -> Result<()> {
     if let Some(dir) = model_path.parent() {
         std::fs::create_dir_all(dir)?;
     }
-    train::save_outcome(&out, &model_path, data_path.as_deref())?;
-    println!("model saved to {}", model_path.display());
-    if let Some(p) = data_path {
-        println!("dataset saved to {}", p.display());
+    if shards.is_some() && data_path.is_some() {
+        println!(
+            "note: --data ignored with --shards (dataset already at {})",
+            out_dir.display()
+        );
+        train::save_outcome(&out, &model_path, None)?;
+    } else {
+        train::save_outcome(&out, &model_path, data_path.as_deref())?;
+        if let Some(p) = data_path {
+            println!("dataset saved to {}", p.display());
+        }
     }
+    println!("model saved to {}", model_path.display());
     Ok(())
 }
 

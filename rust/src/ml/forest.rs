@@ -40,12 +40,17 @@ pub struct Forest {
 }
 
 impl Forest {
-    /// Fit on dataset records: features -> log2(speedup).
-    pub fn fit_records(records: &[&SpeedupRecord], cfg: &ForestConfig) -> Forest {
+    /// Fit on dataset records: features -> log2(speedup). Accepts both
+    /// borrowed (`&[&SpeedupRecord]`, the split() output) and owned
+    /// (`&[SpeedupRecord]`, e.g. a reservoir sample) slices.
+    pub fn fit_records<R: std::borrow::Borrow<SpeedupRecord>>(
+        records: &[R],
+        cfg: &ForestConfig,
+    ) -> Forest {
         let x: Vec<Vec<f64>> = (0..NUM_FEATURES)
-            .map(|f| records.iter().map(|r| r.features[f]).collect())
+            .map(|f| records.iter().map(|r| r.borrow().features[f]).collect())
             .collect();
-        let y: Vec<f64> = records.iter().map(|r| r.target()).collect();
+        let y: Vec<f64> = records.iter().map(|r| r.borrow().target()).collect();
         Self::fit(&x, &y, cfg)
     }
 

@@ -36,32 +36,69 @@ pub fn instance_score(speedup: f64, use_lmem: bool) -> f64 {
     }
 }
 
+/// Streaming accuracy accumulator: push one (record, decision) pair at
+/// a time, read the metrics out at the end. O(1) memory, which is what
+/// lets the sharded training pipeline evaluate millions of instances
+/// without holding any of them. `evaluate` and `evaluate_model` are
+/// thin wrappers over this.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct AccuracyAccumulator {
+    correct: usize,
+    sum: f64,
+    min: f64,
+    max: f64,
+    n: usize,
+}
+
+impl AccuracyAccumulator {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Score one instance: the true measured speedup and the model's
+    /// use/don't-use decision.
+    pub fn push(&mut self, speedup: f64, use_lmem: bool) {
+        let oracle = speedup > 1.0;
+        if use_lmem == oracle {
+            self.correct += 1;
+        }
+        let s = instance_score(speedup, use_lmem);
+        self.sum += s;
+        self.min = if self.n == 0 { s } else { self.min.min(s) };
+        self.max = if self.n == 0 { s } else { self.max.max(s) };
+        self.n += 1;
+    }
+
+    pub fn push_record(&mut self, rec: &SpeedupRecord, use_lmem: bool) {
+        self.push(rec.speedup, use_lmem);
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn finish(&self) -> Accuracy {
+        if self.n == 0 {
+            return Accuracy::default();
+        }
+        Accuracy {
+            count_based: self.correct as f64 / self.n as f64,
+            penalty_weighted: self.sum / self.n as f64,
+            min_score: self.min,
+            max_score: self.max,
+            n: self.n,
+        }
+    }
+}
+
 /// Evaluate decisions against oracle records.
 pub fn evaluate(records: &[&SpeedupRecord], decisions: &[bool]) -> Accuracy {
     assert_eq!(records.len(), decisions.len());
-    if records.is_empty() {
-        return Accuracy::default();
-    }
-    let mut correct = 0usize;
-    let mut sum = 0.0;
-    let mut min = f64::INFINITY;
-    let mut max = f64::NEG_INFINITY;
+    let mut acc = AccuracyAccumulator::new();
     for (r, &d) in records.iter().zip(decisions) {
-        if d == r.beneficial() {
-            correct += 1;
-        }
-        let s = instance_score(r.speedup, d);
-        sum += s;
-        min = min.min(s);
-        max = max.max(s);
+        acc.push(r.speedup, d);
     }
-    Accuracy {
-        count_based: correct as f64 / records.len() as f64,
-        penalty_weighted: sum / records.len() as f64,
-        min_score: min,
-        max_score: max,
-        n: records.len(),
-    }
+    acc.finish()
 }
 
 /// Evaluate a prediction function (e.g. the forest) on records.
@@ -133,5 +170,24 @@ mod tests {
         let a = evaluate(&[], &[]);
         assert_eq!(a.n, 0);
         assert_eq!(a.count_based, 0.0);
+    }
+
+    #[test]
+    fn accumulator_matches_batch_evaluate() {
+        let rs = [rec(10.0), rec(2.0), rec(0.9), rec(0.3), rec(1.1)];
+        let ds = [false, true, false, true, true];
+        let refs: Vec<&SpeedupRecord> = rs.iter().collect();
+        let batch = evaluate(&refs, &ds);
+        let mut acc = AccuracyAccumulator::new();
+        for (r, &d) in rs.iter().zip(&ds) {
+            acc.push_record(r, d);
+        }
+        let streamed = acc.finish();
+        assert_eq!(streamed.count_based, batch.count_based);
+        assert_eq!(streamed.penalty_weighted, batch.penalty_weighted);
+        assert_eq!(streamed.min_score, batch.min_score);
+        assert_eq!(streamed.max_score, batch.max_score);
+        assert_eq!(streamed.n, batch.n);
+        assert_eq!(acc.n(), 5);
     }
 }

@@ -35,6 +35,31 @@ impl SpeedupRecord {
     pub fn target(&self) -> f64 {
         self.speedup.log2()
     }
+
+    /// Flatten to the dataset persistence layout: the feature vector
+    /// followed by the measured speedup (`synth::dataset::csv_header`
+    /// order). Raw times are not persisted.
+    pub fn csv_row(&self) -> Vec<f64> {
+        let mut row = Vec::with_capacity(NUM_FEATURES + 1);
+        row.extend_from_slice(&self.features);
+        row.push(self.speedup);
+        row
+    }
+
+    /// Rebuild from a persisted row (`csv_row` layout). The raw times
+    /// are not stored on disk, so they come back as NaN.
+    pub fn from_csv_row(name: String, row: &[f64]) -> Self {
+        debug_assert_eq!(row.len(), NUM_FEATURES + 1);
+        let mut features = [0.0; NUM_FEATURES];
+        features.copy_from_slice(&row[..NUM_FEATURES]);
+        SpeedupRecord {
+            name,
+            features,
+            speedup: row[NUM_FEATURES],
+            baseline_time: f64::NAN,
+            optimized_time: f64::NAN,
+        }
+    }
 }
 
 /// Measurement configuration for the simulated testbed.
@@ -162,6 +187,17 @@ mod tests {
         // and differs from the noiseless measurement (with high prob.)
         let c = measure(&d, &dev, &MeasureConfig::deterministic());
         assert_ne!(a.speedup, c.speedup);
+    }
+
+    #[test]
+    fn csv_row_roundtrips() {
+        let r = record(HomePattern::NoReuseRow, (32, 2), 1, 8);
+        let row = r.csv_row();
+        assert_eq!(row.len(), crate::kernelmodel::features::NUM_FEATURES + 1);
+        let back = SpeedupRecord::from_csv_row("x".into(), &row);
+        assert_eq!(back.features, r.features);
+        assert_eq!(back.speedup, r.speedup);
+        assert!(back.baseline_time.is_nan());
     }
 
     #[test]

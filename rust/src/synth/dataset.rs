@@ -1,11 +1,24 @@
 //! Kernel-instance dataset: build (template x launch) instances, measure
 //! them on the simulated testbed, persist/reload as CSV.
 //!
+//! Two build paths share one deterministic record order:
+//!
+//! * [`build_serial`] — the reference implementation: one thread, one
+//!   `Vec`. Kept as the equivalence baseline and the bench yardstick.
+//! * [`build_streaming`] — the paper-scale path: templates are
+//!   processed in chunks, each chunk fanned across the thread pool,
+//!   and every record streamed to a [`sink::RecordSink`] in the same
+//!   order `build_serial` would produce it. Peak memory is ~two chunks
+//!   of records regardless of dataset size.
+//!
+//! [`build`] is `build_streaming` into a [`sink::MemorySink`].
+//!
 //! Instances whose *baseline* cannot launch (register file overflow with
 //! huge workgroups) are skipped — the paper's sweep likewise only contains
 //! configurations the original kernel can run.
 
 use std::path::Path;
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -14,10 +27,11 @@ use crate::kernelmodel::features::{FEATURE_NAMES, NUM_FEATURES};
 use crate::kernelmodel::template::Template;
 use crate::sim::exec::{measure, MeasureConfig, SpeedupRecord};
 use crate::sim::timing::{simulate, Variant};
-use crate::util::pool::parallel_map;
+use crate::util::pool::parallel_map_streamed;
 use crate::util::prng::Rng;
 use crate::util::{csv, stats};
 
+use super::sink::{self, DatasetSummary, MemorySink, RecordSink};
 use super::sweep::LaunchSweep;
 
 /// Dataset build options.
@@ -28,6 +42,11 @@ pub struct BuildConfig {
     pub measure: MeasureConfig,
     pub seed: u64,
     pub threads: usize,
+    /// Templates simulated per streaming chunk (0 = auto: 8 x threads).
+    /// Peak memory of a streaming build is ~two chunks of records (one
+    /// being consumed, one lookahead), so this is the
+    /// memory/parallelism-grain trade-off.
+    pub chunk_templates: usize,
 }
 
 impl Default for BuildConfig {
@@ -39,42 +58,138 @@ impl Default for BuildConfig {
             threads: std::thread::available_parallelism()
                 .map(|n| n.get())
                 .unwrap_or(1),
+            chunk_templates: 0,
         }
     }
 }
 
-/// Build speedup records for every (template, sampled launch) instance.
+impl BuildConfig {
+    fn chunk(&self) -> usize {
+        if self.chunk_templates > 0 {
+            self.chunk_templates
+        } else {
+            8 * self.threads.max(1)
+        }
+    }
+}
+
+/// Progress snapshot handed to the streaming build's callback after
+/// every chunk.
+#[derive(Clone, Copy, Debug)]
+pub struct BuildProgress {
+    pub templates_done: usize,
+    pub templates_total: usize,
+    pub records: u64,
+    pub elapsed_seconds: f64,
+}
+
+impl BuildProgress {
+    pub fn rows_per_second(&self) -> f64 {
+        self.records as f64 / self.elapsed_seconds.max(1e-9)
+    }
+}
+
+/// Per-template fork of the build RNG. Drawn sequentially from the
+/// root seed so every build path sees the identical stream, whatever
+/// its chunking or thread count.
+fn template_rngs(seed: u64, n: usize) -> Vec<Rng> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|i| rng.fork(i as u64)).collect()
+}
+
+/// Measure every feasible (template, sampled launch) instance.
+fn measure_template(
+    t: &Template,
+    mut trng: Rng,
+    sweep: &LaunchSweep,
+    dev: &DeviceSpec,
+    cfg: &BuildConfig,
+) -> Vec<SpeedupRecord> {
+    let launches = sweep.sampled_balanced(&mut trng, cfg.configs_per_kernel);
+    let mut recs = Vec::with_capacity(launches.len());
+    for launch in &launches {
+        let d = t.descriptor(launch, dev);
+        // Skip instances whose baseline can't even launch.
+        if !simulate(&d, dev, Variant::Baseline).feasible() {
+            continue;
+        }
+        recs.push(measure(&d, dev, &cfg.measure));
+    }
+    recs
+}
+
+/// Reference single-threaded build: the canonical record order every
+/// other build path must reproduce bit-for-bit.
+pub fn build_serial(
+    templates: &[Template],
+    sweep: &LaunchSweep,
+    dev: &DeviceSpec,
+    cfg: &BuildConfig,
+) -> Vec<SpeedupRecord> {
+    let rngs = template_rngs(cfg.seed, templates.len());
+    let mut out = Vec::new();
+    for (t, trng) in templates.iter().zip(rngs) {
+        out.extend(measure_template(t, trng, sweep, dev, cfg));
+    }
+    out
+}
+
+/// Streaming chunk-parallel build: fans template work across the
+/// thread pool one chunk at a time and pushes every record to `sink`
+/// in canonical order. Returns the incrementally-accumulated summary.
+/// `progress` (if given) is invoked after every chunk.
+pub fn build_streaming<S: RecordSink>(
+    templates: &[Template],
+    sweep: &LaunchSweep,
+    dev: &DeviceSpec,
+    cfg: &BuildConfig,
+    sink: &mut S,
+    mut progress: Option<&mut dyn FnMut(&BuildProgress)>,
+) -> Result<DatasetSummary> {
+    let t0 = Instant::now();
+    let rngs = template_rngs(cfg.seed, templates.len());
+    let jobs: Vec<(usize, Rng)> = rngs.into_iter().enumerate().collect();
+    let mut summary = DatasetSummary::default();
+    parallel_map_streamed(
+        &jobs,
+        cfg.threads,
+        cfg.chunk(),
+        |(i, trng)| measure_template(&templates[*i], trng.clone(), sweep, dev, cfg),
+        |base, chunk| -> Result<()> {
+            let done = base + chunk.len();
+            for recs in chunk {
+                for rec in recs {
+                    summary.observe(&rec);
+                    sink.accept(&rec)?;
+                }
+            }
+            if let Some(p) = progress.as_deref_mut() {
+                p(&BuildProgress {
+                    templates_done: done,
+                    templates_total: templates.len(),
+                    records: summary.records,
+                    elapsed_seconds: t0.elapsed().as_secs_f64(),
+                });
+            }
+            Ok(())
+        },
+    )?;
+    sink.finish()?;
+    Ok(summary)
+}
+
+/// Build speedup records for every (template, sampled launch) instance
+/// in memory (streaming build into a `MemorySink`).
 pub fn build(
     templates: &[Template],
     sweep: &LaunchSweep,
     dev: &DeviceSpec,
     cfg: &BuildConfig,
 ) -> Vec<SpeedupRecord> {
-    // Pre-draw per-template launch samples (deterministic from seed).
-    let mut rng = Rng::new(cfg.seed);
-    let jobs: Vec<(usize, Vec<crate::kernelmodel::launch::Launch>)> = templates
-        .iter()
-        .enumerate()
-        .map(|(i, _)| {
-            let mut trng = rng.fork(i as u64);
-            (i, sweep.sampled_balanced(&mut trng, cfg.configs_per_kernel))
-        })
-        .collect();
-
-    let nested = parallel_map(&jobs, cfg.threads, |(i, launches)| {
-        let t = &templates[*i];
-        let mut recs = Vec::with_capacity(launches.len());
-        for launch in launches {
-            let d = t.descriptor(launch, dev);
-            // Skip instances whose baseline can't even launch.
-            if !simulate(&d, dev, Variant::Baseline).feasible() {
-                continue;
-            }
-            recs.push(measure(&d, dev, &cfg.measure));
-        }
-        recs
-    });
-    nested.into_iter().flatten().collect()
+    let mut sink = MemorySink::new();
+    build_streaming(templates, sweep, dev, cfg, &mut sink, None)
+        .expect("in-memory sink cannot fail");
+    sink.records
 }
 
 /// CSV header: the 18 features + the measured speedup.
@@ -85,14 +200,7 @@ pub fn csv_header() -> Vec<&'static str> {
 }
 
 pub fn save(records: &[SpeedupRecord], path: &Path) -> Result<()> {
-    let rows: Vec<Vec<f64>> = records
-        .iter()
-        .map(|r| {
-            let mut row = r.features.to_vec();
-            row.push(r.speedup);
-            row
-        })
-        .collect();
+    let rows: Vec<Vec<f64>> = records.iter().map(|r| r.csv_row()).collect();
     csv::write_table(path, &csv_header(), &rows)
 }
 
@@ -117,15 +225,7 @@ pub fn load(path: &Path) -> Result<Vec<SpeedupRecord>> {
             row.len(),
             NUM_FEATURES + 1
         );
-        let mut features = [0.0; NUM_FEATURES];
-        features.copy_from_slice(&row[..NUM_FEATURES]);
-        out.push(SpeedupRecord {
-            name: format!("row{i}"),
-            features,
-            speedup: row[NUM_FEATURES],
-            baseline_time: f64::NAN,
-            optimized_time: f64::NAN,
-        });
+        out.push(SpeedupRecord::from_csv_row(format!("row{i}"), &row));
     }
     Ok(out)
 }
@@ -163,7 +263,7 @@ mod tests {
     use super::*;
     use crate::synth::generator;
 
-    fn small_dataset() -> Vec<SpeedupRecord> {
+    fn small_setup() -> (Vec<Template>, LaunchSweep, DeviceSpec, BuildConfig) {
         let mut rng = Rng::new(1234);
         let templates = generator::generate_n(&mut rng, 2); // 2*7*16 kernels
         let sweep = LaunchSweep::new(2048, 2048);
@@ -173,6 +273,11 @@ mod tests {
             threads: 2,
             ..BuildConfig::default()
         };
+        (templates, sweep, dev, cfg)
+    }
+
+    fn small_dataset() -> Vec<SpeedupRecord> {
+        let (templates, sweep, dev, cfg) = small_setup();
         build(&templates, &sweep, &dev, &cfg)
     }
 
@@ -192,6 +297,57 @@ mod tests {
         let pos = recs.iter().filter(|r| r.beneficial()).count();
         assert!(pos > 0, "no beneficial instances");
         assert!(pos < recs.len(), "every instance beneficial");
+    }
+
+    #[test]
+    fn parallel_build_equals_serial_reference() {
+        let (templates, sweep, dev, cfg) = small_setup();
+        let serial = build_serial(&templates, &sweep, &dev, &cfg);
+        // several chunkings and thread counts, all bit-for-bit equal
+        for (threads, chunk) in [(1, 3), (2, 0), (4, 7), (3, 1000)] {
+            let c = BuildConfig { threads, chunk_templates: chunk, ..cfg.clone() };
+            let par = build(&templates, &sweep, &dev, &c);
+            assert_eq!(par.len(), serial.len(), "t={threads} c={chunk}");
+            for (a, b) in par.iter().zip(&serial) {
+                assert_eq!(a.features, b.features);
+                assert_eq!(a.speedup, b.speedup);
+                assert_eq!(a.name, b.name);
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_summary_matches_batch_summarize() {
+        let (templates, sweep, dev, cfg) = small_setup();
+        let mut sink = MemorySink::new();
+        let summary =
+            build_streaming(&templates, &sweep, &dev, &cfg, &mut sink, None)
+                .unwrap();
+        let (n, ben, geo, max) = summarize(&sink.records);
+        assert_eq!(summary.records as usize, n);
+        assert!((summary.beneficial_fraction() - ben).abs() < 1e-12);
+        assert!((summary.geomean_speedup() - geo).abs() < 1e-9);
+        assert_eq!(summary.max_speedup, max);
+    }
+
+    #[test]
+    fn streaming_progress_reaches_total() {
+        let (templates, sweep, dev, cfg) = small_setup();
+        let mut sink = MemorySink::new();
+        let mut last = None;
+        let mut calls = 0usize;
+        let mut cb = |p: &BuildProgress| {
+            calls += 1;
+            last = Some(*p);
+        };
+        build_streaming(&templates, &sweep, &dev, &cfg, &mut sink, Some(&mut cb))
+            .unwrap();
+        let last = last.unwrap();
+        assert!(calls >= 1);
+        assert_eq!(last.templates_done, templates.len());
+        assert_eq!(last.templates_total, templates.len());
+        assert_eq!(last.records as usize, sink.records.len());
+        assert!(last.rows_per_second() > 0.0);
     }
 
     #[test]
@@ -263,5 +419,23 @@ mod tests {
         for (x, y) in a.iter().zip(&b) {
             assert_eq!(x.speedup, y.speedup);
         }
+    }
+
+    #[test]
+    fn sharded_build_reloads_identically() {
+        let (templates, sweep, dev, cfg) = small_setup();
+        let reference = build(&templates, &sweep, &dev, &cfg);
+        let dir = std::env::temp_dir()
+            .join(format!("lmtuner-ds-shards-{}", std::process::id()));
+        let mut s = sink::ShardedCsvSink::create(&dir, 3).unwrap();
+        build_streaming(&templates, &sweep, &dev, &cfg, &mut s, None).unwrap();
+        assert_eq!(s.written() as usize, reference.len());
+        let back = sink::load_sharded(&dir).unwrap();
+        assert_eq!(back.len(), reference.len());
+        for (a, b) in back.iter().zip(&reference) {
+            assert_eq!(a.features, b.features);
+            assert!((a.speedup - b.speedup).abs() < 1e-9);
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 }

@@ -20,6 +20,20 @@ pub const IN_W: u32 = 2048;
 /// Paper-scale tuple count.
 pub const PAPER_TUPLES: usize = 100;
 
+/// Templates enumerated per context tuple (7 home patterns x 4x4 N/M).
+pub const TEMPLATES_PER_TUPLE: usize = 7 * 16;
+
+/// Context tuples generated at `scale` (1.0 = the paper's 100).
+pub fn tuple_count(scale: f64) -> usize {
+    ((PAPER_TUPLES as f64 * scale).round() as usize).max(1)
+}
+
+/// Templates generated at `scale` — lets callers size progress totals
+/// and chunking before generating anything.
+pub fn template_count(scale: f64) -> usize {
+    tuple_count(scale) * TEMPLATES_PER_TUPLE
+}
+
 pub fn template_from(tuple: &ContextTuple, home: HomePattern, n: u32, m: u32) -> Template {
     Template {
         in_h: IN_H,
@@ -41,13 +55,12 @@ pub fn template_from(tuple: &ContextTuple, home: HomePattern, n: u32, m: u32) ->
 /// Generate the synthetic kernel population. `scale` in (0, 1] scales the
 /// number of context tuples (1.0 = the paper's 100).
 pub fn generate(rng: &mut Rng, scale: f64) -> Vec<Template> {
-    let tuples = ((PAPER_TUPLES as f64 * scale).round() as usize).max(1);
-    generate_n(rng, tuples)
+    generate_n(rng, tuple_count(scale))
 }
 
 pub fn generate_n(rng: &mut Rng, num_tuples: usize) -> Vec<Template> {
     let tuples = sample_tuples(rng, num_tuples);
-    let mut out = Vec::with_capacity(num_tuples * 7 * 16);
+    let mut out = Vec::with_capacity(num_tuples * TEMPLATES_PER_TUPLE);
     for tuple in &tuples {
         for home in HomePattern::ALL {
             for &n in &home.n_values() {
@@ -95,6 +108,15 @@ mod tests {
         let ts = generate(&mut rng, 0.02);
         for home in HomePattern::ALL {
             assert!(ts.iter().any(|t| t.home == home), "{home} missing");
+        }
+    }
+
+    #[test]
+    fn count_helpers_match_generation() {
+        assert_eq!(template_count(1.0), 100 * 7 * 16);
+        for scale in [0.001, 0.03, 0.2, 1.0] {
+            let mut rng = Rng::new(3);
+            assert_eq!(generate(&mut rng, scale).len(), template_count(scale));
         }
     }
 

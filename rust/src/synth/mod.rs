@@ -1,6 +1,16 @@
 //! Synthetic benchmark generation (paper §4.1/§5): Table 2 sampling,
 //! template enumeration, launch sweep, dataset building.
+//!
+//! The dataset layer has two build paths sharing one deterministic
+//! record order: [`dataset::build_serial`] (the reference) and
+//! [`dataset::build_streaming`], which fans template work across the
+//! thread pool in chunks and streams every record to a
+//! [`sink::RecordSink`] — in-memory, sharded-CSV-on-disk, or a
+//! reservoir sample — so paper-scale datasets never have to fit in
+//! memory. See `EXPERIMENTS.md` at the repository root for how the
+//! generated population relates to the paper's reported counts.
 pub mod dataset;
 pub mod generator;
 pub mod sampler;
+pub mod sink;
 pub mod sweep;

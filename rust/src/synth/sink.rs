@@ -1,0 +1,539 @@
+//! Record sinks: where the streaming dataset builder puts its rows.
+//!
+//! `dataset::build_streaming` produces `SpeedupRecord`s in a canonical
+//! deterministic order and hands each one to a [`RecordSink`]. The sink
+//! decides what "keeping" a record means, which is what makes
+//! paper-scale (millions of instances) runs practical:
+//!
+//! * [`MemorySink`] — collect everything in a `Vec` (the old
+//!   `dataset::build` behavior; fine at toy scale).
+//! * [`ShardedCsvSink`] — append records round-robin across N CSV
+//!   shards on disk; peak memory is one row. [`load_sharded`] restores
+//!   the exact stream order, [`stream_sharded`] replays it row-by-row
+//!   without materializing anything.
+//! * [`ReservoirSink`] — uniform reservoir sample of K records (with
+//!   their global stream indices), used to draw the training split
+//!   from a stream of unknown length.
+//! * [`Tee`] — feed two sinks from one stream (e.g. shard to disk
+//!   *and* reservoir-sample the train split in a single pass).
+//!
+//! [`DatasetSummary`] accumulates the report statistics (count,
+//! beneficial fraction, geomean/max speedup) incrementally so nothing
+//! needs the full record set.
+
+use std::collections::HashSet;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::kernelmodel::features::NUM_FEATURES;
+use crate::sim::exec::SpeedupRecord;
+use crate::util::csv::{RowReader, RowWriter};
+use crate::util::prng::Rng;
+
+use super::dataset::csv_header;
+
+/// Consumer of the streaming dataset build. `accept` is called once
+/// per record in stream order; `finish` once after the last record.
+/// Records arrive by reference so implementations clone only what they
+/// keep — at paper scale most sinks keep almost nothing (the CSV sink
+/// serializes without owning, the reservoir discards nearly all rows).
+pub trait RecordSink {
+    fn accept(&mut self, rec: &SpeedupRecord) -> Result<()>;
+    fn finish(&mut self) -> Result<()> {
+        Ok(())
+    }
+}
+
+/// Collect every record in memory (the classic behavior).
+#[derive(Default)]
+pub struct MemorySink {
+    pub records: Vec<SpeedupRecord>,
+}
+
+impl MemorySink {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl RecordSink for MemorySink {
+    fn accept(&mut self, rec: &SpeedupRecord) -> Result<()> {
+        self.records.push(rec.clone());
+        Ok(())
+    }
+}
+
+/// Path of shard `i` under `dir`.
+pub fn shard_path(dir: &Path, i: usize) -> PathBuf {
+    dir.join(format!("shard-{i:03}.csv"))
+}
+
+/// List the shard files under `dir` in index order.
+pub fn shard_files(dir: &Path) -> Result<Vec<PathBuf>> {
+    let mut out = Vec::new();
+    loop {
+        let p = shard_path(dir, out.len());
+        if !p.is_file() {
+            break;
+        }
+        out.push(p);
+    }
+    anyhow::ensure!(
+        !out.is_empty(),
+        "{}: no shard-NNN.csv files",
+        dir.display()
+    );
+    Ok(out)
+}
+
+/// Write records round-robin across `shards` CSV files in `dir`: the
+/// record with global stream index `k` lands in shard `k % shards`.
+/// That assignment is what lets readers reconstruct the exact stream
+/// order by popping shards in rotation.
+pub struct ShardedCsvSink {
+    writers: Vec<RowWriter>,
+    next: usize,
+    written: u64,
+}
+
+impl ShardedCsvSink {
+    pub fn create(dir: &Path, shards: usize) -> Result<Self> {
+        let shards = shards.max(1);
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create {}", dir.display()))?;
+        let header = csv_header();
+        let writers = (0..shards)
+            .map(|i| RowWriter::create(&shard_path(dir, i), &header))
+            .collect::<Result<Vec<_>>>()?;
+        // Remove stale higher-numbered shards from a previous run with
+        // a larger shard count — readers enumerate shard-NNN.csv
+        // contiguously and would otherwise interleave old rows.
+        let mut i = shards;
+        loop {
+            let stale = shard_path(dir, i);
+            if !stale.is_file() {
+                break;
+            }
+            std::fs::remove_file(&stale)
+                .with_context(|| format!("remove stale {}", stale.display()))?;
+            i += 1;
+        }
+        Ok(ShardedCsvSink { writers, next: 0, written: 0 })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.writers.len()
+    }
+
+    pub fn written(&self) -> u64 {
+        self.written
+    }
+}
+
+impl RecordSink for ShardedCsvSink {
+    fn accept(&mut self, rec: &SpeedupRecord) -> Result<()> {
+        self.writers[self.next].write_row(&rec.csv_row())?;
+        self.next = (self.next + 1) % self.writers.len();
+        self.written += 1;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        for w in self.writers.iter_mut() {
+            w.finish()?;
+        }
+        Ok(())
+    }
+}
+
+/// Replay a sharded dataset's raw rows (`dataset::csv_header` layout:
+/// features then speedup) in original stream order, one row at a time
+/// (peak memory: one buffered line per shard). The callback gets the
+/// global stream index of each row. Returns the row count. Errors on
+/// ragged shards (an interrupted writer) instead of silently
+/// truncating.
+pub fn stream_sharded_rows(
+    dir: &Path,
+    mut f: impl FnMut(u64, Vec<f64>) -> Result<()>,
+) -> Result<u64> {
+    let files = shard_files(dir)?;
+    let mut readers = files
+        .iter()
+        .map(|p| {
+            let r = RowReader::open(p)?;
+            anyhow::ensure!(
+                r.header().len() == NUM_FEATURES + 1,
+                "{}: expected {} columns, got {}",
+                p.display(),
+                NUM_FEATURES + 1,
+                r.header().len()
+            );
+            Ok(r)
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let mut idx = 0u64;
+    // Round-robin pop: shard k%n holds record k, so one rotation over
+    // the readers yields records idx, idx+1, ... in stream order. The
+    // first exhausted shard in rotation order ends the stream.
+    'outer: loop {
+        for r in readers.iter_mut() {
+            match r.next_row()? {
+                Some(row) => {
+                    f(idx, row)?;
+                    idx += 1;
+                }
+                None => break 'outer,
+            }
+        }
+    }
+    // In a coherent round-robin layout, once one shard is exhausted at
+    // its rotation slot every shard is empty. Trailing rows mean a
+    // writer died mid-stream and the files are not a consistent
+    // prefix — reject rather than return truncated data.
+    for (s, r) in readers.iter_mut().enumerate() {
+        anyhow::ensure!(
+            r.next_row()?.is_none(),
+            "{}: shard {s} has trailing rows after record {idx} — \
+             ragged shards from an interrupted write?",
+            dir.display()
+        );
+    }
+    Ok(idx)
+}
+
+/// Replay a sharded dataset as `SpeedupRecord`s in original stream
+/// order (see [`stream_sharded_rows`]). The callback gets the global
+/// stream index of each record. Returns the record count.
+pub fn stream_sharded(
+    dir: &Path,
+    mut f: impl FnMut(u64, SpeedupRecord) -> Result<()>,
+) -> Result<u64> {
+    stream_sharded_rows(dir, |idx, row| {
+        f(idx, SpeedupRecord::from_csv_row(format!("row{idx}"), &row))
+    })
+}
+
+/// Load a sharded dataset back into memory in original stream order.
+pub fn load_sharded(dir: &Path) -> Result<Vec<SpeedupRecord>> {
+    let mut out = Vec::new();
+    stream_sharded(dir, |_, rec| {
+        out.push(rec);
+        Ok(())
+    })?;
+    Ok(out)
+}
+
+/// Uniform reservoir sample (algorithm R) of `capacity` records from a
+/// stream of unknown length, deterministic given the seed. Keeps each
+/// kept record's global stream index so a later pass can exclude the
+/// sampled rows (train/test separation).
+pub struct ReservoirSink {
+    capacity: usize,
+    rng: Rng,
+    records: Vec<SpeedupRecord>,
+    indices: Vec<u64>,
+    seen: u64,
+}
+
+impl ReservoirSink {
+    pub fn new(capacity: usize, seed: u64) -> Self {
+        ReservoirSink {
+            capacity: capacity.max(1),
+            rng: Rng::new(seed),
+            records: Vec::new(),
+            indices: Vec::new(),
+            seen: 0,
+        }
+    }
+
+    /// Records seen (not kept) so far.
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    pub fn records(&self) -> &[SpeedupRecord] {
+        &self.records
+    }
+
+    /// Global stream indices of the kept records.
+    pub fn selected_indices(&self) -> HashSet<u64> {
+        self.indices.iter().copied().collect()
+    }
+
+    /// Consume the sink, returning (records, their stream indices).
+    pub fn into_sample(self) -> (Vec<SpeedupRecord>, Vec<u64>) {
+        (self.records, self.indices)
+    }
+}
+
+impl RecordSink for ReservoirSink {
+    fn accept(&mut self, rec: &SpeedupRecord) -> Result<()> {
+        let k = self.seen;
+        self.seen += 1;
+        if self.records.len() < self.capacity {
+            self.records.push(rec.clone());
+            self.indices.push(k);
+        } else {
+            let j = self.rng.below(k + 1);
+            if (j as usize) < self.capacity {
+                self.records[j as usize] = rec.clone();
+                self.indices[j as usize] = k;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Feed one stream into two sinks.
+pub struct Tee<'a, A: RecordSink, B: RecordSink>(pub &'a mut A, pub &'a mut B);
+
+impl<A: RecordSink, B: RecordSink> RecordSink for Tee<'_, A, B> {
+    fn accept(&mut self, rec: &SpeedupRecord) -> Result<()> {
+        self.0.accept(rec)?;
+        self.1.accept(rec)
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.0.finish()?;
+        self.1.finish()
+    }
+}
+
+/// Streaming dataset statistics: everything `dataset::summarize`
+/// reports, accumulated record-by-record in O(1) memory.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DatasetSummary {
+    pub records: u64,
+    pub beneficial: u64,
+    log_speedup_sum: f64,
+    pub max_speedup: f64,
+}
+
+impl DatasetSummary {
+    pub fn observe(&mut self, rec: &SpeedupRecord) {
+        self.records += 1;
+        self.beneficial += rec.beneficial() as u64;
+        self.log_speedup_sum += rec.speedup.ln();
+        self.max_speedup = self.max_speedup.max(rec.speedup);
+    }
+
+    pub fn beneficial_fraction(&self) -> f64 {
+        self.beneficial as f64 / (self.records.max(1)) as f64
+    }
+
+    pub fn geomean_speedup(&self) -> f64 {
+        if self.records == 0 {
+            return 0.0;
+        }
+        (self.log_speedup_sum / self.records as f64).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rec(i: u64) -> SpeedupRecord {
+        let mut features = [0.0; NUM_FEATURES];
+        features[0] = i as f64;
+        SpeedupRecord {
+            name: format!("r{i}"),
+            features,
+            speedup: 0.5 + (i % 4) as f64,
+            baseline_time: 1.0,
+            optimized_time: 1.0,
+        }
+    }
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let p = std::env::temp_dir()
+            .join(format!("lmtuner-sink-{name}-{}", std::process::id()));
+        std::fs::create_dir_all(&p).unwrap();
+        p
+    }
+
+    #[test]
+    fn sharded_roundtrip_preserves_stream_order() {
+        for shards in [1usize, 3, 4] {
+            let dir = tmpdir(&format!("rt{shards}"));
+            let mut sink = ShardedCsvSink::create(&dir, shards).unwrap();
+            // 10 records: not a multiple of 3, so shard lengths
+            // differ by one (a valid round-robin layout).
+            for i in 0..10 {
+                sink.accept(&rec(i)).unwrap();
+            }
+            sink.finish().unwrap();
+            assert_eq!(sink.written(), 10);
+            let back = load_sharded(&dir).unwrap();
+            assert_eq!(back.len(), 10);
+            for (i, r) in back.iter().enumerate() {
+                assert_eq!(r.features[0], i as f64, "shards={shards}");
+                assert_eq!(r.speedup, rec(i as u64).speedup);
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
+    }
+
+    #[test]
+    fn stream_sharded_reports_global_indices() {
+        let dir = tmpdir("idx");
+        let mut sink = ShardedCsvSink::create(&dir, 2).unwrap();
+        for i in 0..7 {
+            sink.accept(&rec(i)).unwrap();
+        }
+        sink.finish().unwrap();
+        let mut seen = Vec::new();
+        let n = stream_sharded(&dir, |idx, r| {
+            assert_eq!(r.features[0], idx as f64);
+            seen.push(idx);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(n, 7);
+        assert_eq!(seen, (0..7).collect::<Vec<_>>());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ragged_shards_are_rejected_not_truncated() {
+        let dir = tmpdir("ragged");
+        let mut sink = ShardedCsvSink::create(&dir, 3).unwrap();
+        for i in 0..5 {
+            sink.accept(&rec(i)).unwrap();
+        }
+        sink.finish().unwrap();
+        // Simulate an interrupted later writer: shard 0 gains an extra
+        // row the other shards never matched.
+        use std::io::Write;
+        let mut fh = std::fs::OpenOptions::new()
+            .append(true)
+            .open(shard_path(&dir, 0))
+            .unwrap();
+        let row: Vec<String> =
+            rec(9).csv_row().iter().map(|x| x.to_string()).collect();
+        writeln!(fh, "{}", row.join(",")).unwrap();
+        drop(fh);
+        let err = load_sharded(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("ragged"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn recreating_with_fewer_shards_removes_stale_files() {
+        let dir = tmpdir("stale");
+        let mut first = ShardedCsvSink::create(&dir, 4).unwrap();
+        for i in 0..10 {
+            first.accept(&rec(i)).unwrap();
+        }
+        first.finish().unwrap();
+
+        // Re-run into the same directory with fewer shards: the old
+        // shard-002/003 files must not leak into the new stream.
+        let mut second = ShardedCsvSink::create(&dir, 2).unwrap();
+        for i in 100..106 {
+            second.accept(&rec(i)).unwrap();
+        }
+        second.finish().unwrap();
+
+        let back = load_sharded(&dir).unwrap();
+        assert_eq!(back.len(), 6);
+        for (i, r) in back.iter().enumerate() {
+            assert_eq!(r.features[0], (100 + i) as f64);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_shards_is_an_error() {
+        let dir = tmpdir("empty");
+        assert!(load_sharded(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn reservoir_keeps_capacity_and_is_deterministic() {
+        let mut a = ReservoirSink::new(16, 99);
+        let mut b = ReservoirSink::new(16, 99);
+        for i in 0..1000 {
+            a.accept(&rec(i)).unwrap();
+            b.accept(&rec(i)).unwrap();
+        }
+        assert_eq!(a.seen(), 1000);
+        assert_eq!(a.records().len(), 16);
+        let (ra, ia) = a.into_sample();
+        let (rb, ib) = b.into_sample();
+        assert_eq!(ia, ib);
+        for (x, y) in ra.iter().zip(&rb) {
+            assert_eq!(x.features, y.features);
+        }
+        // indices actually identify the kept records
+        for (r, &i) in rb.iter().zip(&ib) {
+            assert_eq!(r.features[0], i as f64);
+        }
+    }
+
+    #[test]
+    fn reservoir_sample_is_roughly_uniform() {
+        // Over many seeds, late and early records are kept about
+        // equally often.
+        let mut early = 0usize;
+        let mut late = 0usize;
+        for seed in 0..200 {
+            let mut s = ReservoirSink::new(10, seed);
+            for i in 0..100 {
+                s.accept(&rec(i)).unwrap();
+            }
+            for &i in &s.indices {
+                if i < 50 {
+                    early += 1;
+                } else {
+                    late += 1;
+                }
+            }
+        }
+        let frac = early as f64 / (early + late) as f64;
+        assert!((frac - 0.5).abs() < 0.1, "early fraction {frac}");
+    }
+
+    #[test]
+    fn reservoir_short_stream_keeps_everything() {
+        let mut s = ReservoirSink::new(100, 1);
+        for i in 0..5 {
+            s.accept(&rec(i)).unwrap();
+        }
+        assert_eq!(s.records().len(), 5);
+        assert_eq!(s.selected_indices().len(), 5);
+    }
+
+    #[test]
+    fn tee_feeds_both_sinks() {
+        let mut m = MemorySink::new();
+        let mut r = ReservoirSink::new(4, 7);
+        let mut tee = Tee(&mut m, &mut r);
+        for i in 0..20 {
+            tee.accept(&rec(i)).unwrap();
+        }
+        tee.finish().unwrap();
+        assert_eq!(m.records.len(), 20);
+        assert_eq!(r.records().len(), 4);
+        assert_eq!(r.seen(), 20);
+    }
+
+    #[test]
+    fn summary_matches_batch_stats() {
+        let recs: Vec<SpeedupRecord> = (0..50).map(rec).collect();
+        let mut s = DatasetSummary::default();
+        for r in &recs {
+            s.observe(r);
+        }
+        assert_eq!(s.records, 50);
+        let ben = recs.iter().filter(|r| r.beneficial()).count();
+        assert_eq!(s.beneficial, ben as u64);
+        let geo = crate::util::stats::geomean(
+            &recs.iter().map(|r| r.speedup).collect::<Vec<_>>(),
+        );
+        assert!((s.geomean_speedup() - geo).abs() < 1e-12);
+        assert_eq!(s.max_speedup, 3.5);
+    }
+}

@@ -26,11 +26,22 @@ pub fn full_sweep(out_w: u32, out_h: u32) -> Vec<Launch> {
 /// A reusable sweep with per-kernel sampling.
 pub struct LaunchSweep {
     all: Vec<Launch>,
+    /// Launches grouped by workgroup shape, in ascending (w, h) order.
+    /// Precomputed once: `sampled_balanced` runs once per template
+    /// (11200 times at paper scale), so rebuilding the grouping per
+    /// call was a measurable slice of dataset-build time.
+    wg_buckets: Vec<Vec<Launch>>,
 }
 
 impl LaunchSweep {
     pub fn new(out_w: u32, out_h: u32) -> Self {
-        LaunchSweep { all: full_sweep(out_w, out_h) }
+        let all = full_sweep(out_w, out_h);
+        let mut by_wg: std::collections::BTreeMap<(u32, u32), Vec<Launch>> =
+            std::collections::BTreeMap::new();
+        for l in &all {
+            by_wg.entry((l.wg.w, l.wg.h)).or_default().push(*l);
+        }
+        LaunchSweep { all, wg_buckets: by_wg.into_values().collect() }
     }
 
     pub fn len(&self) -> usize {
@@ -63,12 +74,7 @@ impl LaunchSweep {
         if k >= self.all.len() {
             return self.all.clone();
         }
-        let mut by_wg: std::collections::BTreeMap<(u32, u32), Vec<Launch>> =
-            std::collections::BTreeMap::new();
-        for l in &self.all {
-            by_wg.entry((l.wg.w, l.wg.h)).or_default().push(*l);
-        }
-        let mut buckets: Vec<Vec<Launch>> = by_wg.into_values().collect();
+        let mut buckets = self.wg_buckets.clone();
         for b in buckets.iter_mut() {
             rng.shuffle(b);
         }

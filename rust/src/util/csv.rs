@@ -1,73 +1,166 @@
 //! Tiny CSV substrate for dataset persistence (header + f64 columns).
 //!
-//! The instance datasets (features + measured speedup) are written once by
-//! `lmtuner generate` and re-read by `train`/`eval`; files can reach a few
-//! hundred MB at full scale, so reading is buffered and allocation-light.
+//! Two layers:
+//!
+//! * `RowWriter` / `RowReader` — incremental, row-at-a-time streaming.
+//!   The sharded dataset sinks write millions of rows through these
+//!   without ever materializing a table, and the streaming evaluation
+//!   pass reads them back the same way (peak memory: one row).
+//! * `write_table` / `read_table` — whole-table convenience wrappers
+//!   over the streaming layer, used for small reports and models.
 
-use std::io::{BufRead, BufWriter, Write};
-use std::path::Path;
+use std::io::{BufRead, BufReader, BufWriter, Lines, Write};
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-/// Write a numeric table with a header row.
-pub fn write_table(path: &Path, header: &[&str], rows: &[Vec<f64>]) -> Result<()> {
-    let f = std::fs::File::create(path)
-        .with_context(|| format!("create {}", path.display()))?;
-    let mut w = BufWriter::new(f);
-    writeln!(w, "{}", header.join(","))?;
-    let mut line = String::with_capacity(header.len() * 12);
-    for row in rows {
-        if row.len() != header.len() {
-            bail!("row width {} != header width {}", row.len(), header.len());
+/// Append one f64 to `line` using the compact dataset format (integers
+/// without a trailing `.0`, everything else via the shortest roundtrip
+/// float formatting).
+fn push_number(line: &mut String, x: f64) {
+    if x.fract() == 0.0 && x.abs() < 1e15 {
+        line.push_str(&format!("{}", x as i64));
+    } else {
+        line.push_str(&format!("{x}"));
+    }
+}
+
+/// Incremental writer: header on creation, then one numeric row at a
+/// time. Rows are width-checked against the header.
+pub struct RowWriter {
+    w: BufWriter<std::fs::File>,
+    width: usize,
+    path: PathBuf,
+    rows: u64,
+    line: String,
+}
+
+impl RowWriter {
+    pub fn create(path: &Path, header: &[&str]) -> Result<Self> {
+        let f = std::fs::File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        writeln!(w, "{}", header.join(","))?;
+        Ok(RowWriter {
+            w,
+            width: header.len(),
+            path: path.to_path_buf(),
+            rows: 0,
+            line: String::with_capacity(header.len() * 12),
+        })
+    }
+
+    pub fn write_row(&mut self, row: &[f64]) -> Result<()> {
+        if row.len() != self.width {
+            bail!(
+                "{}: row width {} != header width {}",
+                self.path.display(),
+                row.len(),
+                self.width
+            );
         }
-        line.clear();
+        self.line.clear();
         for (i, x) in row.iter().enumerate() {
             if i > 0 {
-                line.push(',');
+                self.line.push(',');
             }
-            if x.fract() == 0.0 && x.abs() < 1e15 {
-                line.push_str(&format!("{}", *x as i64));
-            } else {
-                line.push_str(&format!("{x}"));
-            }
+            push_number(&mut self.line, *x);
         }
-        writeln!(w, "{line}")?;
+        writeln!(self.w, "{}", self.line)?;
+        self.rows += 1;
+        Ok(())
     }
-    w.flush()?;
-    Ok(())
+
+    /// Rows written so far.
+    pub fn rows(&self) -> u64 {
+        self.rows
+    }
+
+    /// Flush buffered output to disk.
+    pub fn finish(&mut self) -> Result<()> {
+        self.w
+            .flush()
+            .with_context(|| format!("flush {}", self.path.display()))
+    }
+}
+
+/// Incremental reader: parses the header on open, then yields one
+/// numeric row per `next_row` call (None at EOF). Blank lines are
+/// skipped; ragged rows and non-numeric cells are errors.
+pub struct RowReader {
+    lines: Lines<BufReader<std::fs::File>>,
+    header: Vec<String>,
+    path: PathBuf,
+    lineno: usize,
+}
+
+impl RowReader {
+    pub fn open(path: &Path) -> Result<Self> {
+        let f = std::fs::File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut lines = BufReader::new(f).lines();
+        let header_line = match lines.next() {
+            Some(l) => l?,
+            None => bail!("{}: empty file", path.display()),
+        };
+        let header: Vec<String> =
+            header_line.split(',').map(|s| s.trim().to_string()).collect();
+        Ok(RowReader {
+            lines,
+            header,
+            path: path.to_path_buf(),
+            lineno: 1,
+        })
+    }
+
+    pub fn header(&self) -> &[String] {
+        &self.header
+    }
+
+    pub fn next_row(&mut self) -> Result<Option<Vec<f64>>> {
+        loop {
+            let line = match self.lines.next() {
+                Some(l) => l?,
+                None => return Ok(None),
+            };
+            self.lineno += 1;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let row: Result<Vec<f64>, _> =
+                line.split(',').map(|s| s.trim().parse::<f64>()).collect();
+            let row = row.with_context(|| {
+                format!("{}:{}: bad number", self.path.display(), self.lineno)
+            })?;
+            if row.len() != self.header.len() {
+                bail!(
+                    "{}:{}: width {} != header {}",
+                    self.path.display(),
+                    self.lineno,
+                    row.len(),
+                    self.header.len()
+                );
+            }
+            return Ok(Some(row));
+        }
+    }
+}
+
+/// Write a numeric table with a header row.
+pub fn write_table(path: &Path, header: &[&str], rows: &[Vec<f64>]) -> Result<()> {
+    let mut w = RowWriter::create(path, header)?;
+    for row in rows {
+        w.write_row(row)?;
+    }
+    w.finish()
 }
 
 /// Read a numeric table; returns (header, rows).
 pub fn read_table(path: &Path) -> Result<(Vec<String>, Vec<Vec<f64>>)> {
-    let f = std::fs::File::open(path)
-        .with_context(|| format!("open {}", path.display()))?;
-    let mut lines = std::io::BufReader::new(f).lines();
-    let header_line = match lines.next() {
-        Some(l) => l?,
-        None => bail!("{}: empty file", path.display()),
-    };
-    let header: Vec<String> =
-        header_line.split(',').map(|s| s.trim().to_string()).collect();
+    let mut r = RowReader::open(path)?;
+    let header = r.header().to_vec();
     let mut rows = Vec::new();
-    for (lineno, line) in lines.enumerate() {
-        let line = line?;
-        if line.trim().is_empty() {
-            continue;
-        }
-        let row: Result<Vec<f64>, _> =
-            line.split(',').map(|s| s.trim().parse::<f64>()).collect();
-        let row = row.with_context(|| {
-            format!("{}:{}: bad number", path.display(), lineno + 2)
-        })?;
-        if row.len() != header.len() {
-            bail!(
-                "{}:{}: width {} != header {}",
-                path.display(),
-                lineno + 2,
-                row.len(),
-                header.len()
-            );
-        }
+    while let Some(row) = r.next_row()? {
         rows.push(row);
     }
     Ok((header, rows))
@@ -115,6 +208,49 @@ mod tests {
     fn write_rejects_width_mismatch() {
         let path = tmp("width");
         assert!(write_table(&path, &["a", "b"], &[vec![1.0]]).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn row_reader_streams_and_counts_rows() {
+        let path = tmp("stream");
+        let header = ["x", "y"];
+        let mut w = RowWriter::create(&path, &header).unwrap();
+        for i in 0..100 {
+            w.write_row(&[i as f64, (i * i) as f64]).unwrap();
+        }
+        assert_eq!(w.rows(), 100);
+        w.finish().unwrap();
+
+        let mut r = RowReader::open(&path).unwrap();
+        assert_eq!(r.header(), &["x".to_string(), "y".to_string()]);
+        let mut n = 0u64;
+        while let Some(row) = r.next_row().unwrap() {
+            assert_eq!(row[1], row[0] * row[0]);
+            n += 1;
+        }
+        assert_eq!(n, 100);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn row_writer_rejects_wrong_width_row() {
+        let path = tmp("rw-width");
+        let mut w = RowWriter::create(&path, &["a", "b"]).unwrap();
+        assert!(w.write_row(&[1.0]).is_err());
+        assert!(w.write_row(&[1.0, 2.0]).is_ok());
+        w.finish().unwrap();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn row_reader_skips_blank_lines() {
+        let path = tmp("blank");
+        std::fs::write(&path, "a,b\n1,2\n\n3,4\n").unwrap();
+        let mut r = RowReader::open(&path).unwrap();
+        assert_eq!(r.next_row().unwrap(), Some(vec![1.0, 2.0]));
+        assert_eq!(r.next_row().unwrap(), Some(vec![3.0, 4.0]));
+        assert_eq!(r.next_row().unwrap(), None);
         std::fs::remove_file(&path).ok();
     }
 }

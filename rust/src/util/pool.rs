@@ -141,6 +141,59 @@ where
         .collect()
 }
 
+/// Streamed chunked parallel map: `items` are processed in chunks of
+/// `chunk` elements; each chunk is mapped in parallel across `threads`
+/// workers, then `consume` receives that chunk's results *in input
+/// order* on the calling thread. Peak memory is ~two chunks of
+/// results, independent of `items.len()` — this is the fan-out
+/// primitive behind the streaming dataset builder, where the full
+/// result set would not fit in memory at paper scale.
+///
+/// Runs with a one-chunk lookahead: while `consume` handles chunk N on
+/// the calling thread (e.g. serializing records to disk shards), a
+/// background worker computes chunk N+1, so sink I/O and simulation
+/// overlap instead of summing.
+///
+/// An `Err` from `consume` aborts the stream; beyond the in-flight
+/// lookahead chunk, no further chunks are computed.
+pub fn parallel_map_streamed<T, R, E, F, C>(
+    items: &[T],
+    threads: usize,
+    chunk: usize,
+    f: F,
+    mut consume: C,
+) -> Result<(), E>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(&T) -> R + Sync,
+    C: FnMut(usize, Vec<R>) -> Result<(), E>,
+{
+    let chunk = chunk.max(1);
+    let mut chunks = items.chunks(chunk);
+    let first = match chunks.next() {
+        Some(c) => c,
+        None => return Ok(()),
+    };
+    let f = &f;
+    std::thread::scope(|scope| {
+        let mut current = parallel_map(first, threads, f);
+        let mut base = 0usize;
+        loop {
+            let next = chunks
+                .next()
+                .map(|c| scope.spawn(move || parallel_map(c, threads, f)));
+            let len = current.len();
+            consume(base, std::mem::take(&mut current))?;
+            base += len;
+            match next {
+                Some(h) => current = h.join().expect("lookahead chunk panicked"),
+                None => return Ok(()),
+            }
+        }
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -183,6 +236,56 @@ mod tests {
     fn parallel_map_empty() {
         let items: Vec<u32> = vec![];
         assert!(parallel_map(&items, 4, |&x| x).is_empty());
+    }
+
+    #[test]
+    fn streamed_map_equals_plain_map() {
+        let items: Vec<u64> = (0..257).collect();
+        let mut streamed: Vec<u64> = Vec::new();
+        parallel_map_streamed::<_, _, (), _, _>(&items, 4, 10, |&x| x * 3, |base, rs| {
+            assert_eq!(base % 10, 0);
+            streamed.extend(rs);
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(streamed, parallel_map(&items, 4, |&x| x * 3));
+    }
+
+    #[test]
+    fn streamed_map_bounds_chunk_size() {
+        let items: Vec<u64> = (0..100).collect();
+        let mut max_chunk = 0usize;
+        parallel_map_streamed::<_, _, (), _, _>(&items, 2, 7, |&x| x, |_, rs| {
+            max_chunk = max_chunk.max(rs.len());
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(max_chunk, 7);
+    }
+
+    #[test]
+    fn streamed_map_consume_error_aborts() {
+        let items: Vec<u64> = (0..100).collect();
+        let computed = AtomicU64::new(0);
+        let mut chunks = 0usize;
+        let r = parallel_map_streamed(
+            &items,
+            2,
+            10,
+            |&x| {
+                computed.fetch_add(1, Ordering::SeqCst);
+                x
+            },
+            |_, _| {
+                chunks += 1;
+                if chunks == 2 { Err("stop") } else { Ok(()) }
+            },
+        );
+        assert_eq!(r, Err("stop"));
+        assert_eq!(chunks, 2);
+        // the two consumed chunks plus the one in-flight lookahead
+        // chunk were computed; the remaining seven never started
+        assert_eq!(computed.load(Ordering::SeqCst), 30);
     }
 
     #[test]

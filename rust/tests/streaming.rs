@@ -1,0 +1,183 @@
+//! Integration tests for the streaming dataset subsystem: the sink
+//! layer's persistence contract, reservoir determinism, and the
+//! bounded-memory behavior of the chunked builder at elevated scale.
+
+use lmtuner::gpu::spec::DeviceSpec;
+use lmtuner::sim::exec::SpeedupRecord;
+use lmtuner::synth::sink::{
+    load_sharded, stream_sharded, MemorySink, RecordSink, ReservoirSink,
+    ShardedCsvSink, Tee,
+};
+use lmtuner::synth::{dataset, generator, sweep::LaunchSweep};
+use lmtuner::util::prng::Rng;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("lmtuner-it-{name}-{}", std::process::id()))
+}
+
+fn setup(
+    tuples: usize,
+    configs: usize,
+) -> (Vec<lmtuner::kernelmodel::template::Template>, LaunchSweep, DeviceSpec, dataset::BuildConfig)
+{
+    let mut rng = Rng::new(0x57E4);
+    let templates = generator::generate_n(&mut rng, tuples);
+    let sweep = LaunchSweep::new(2048, 2048);
+    let dev = DeviceSpec::m2090();
+    let cfg = dataset::BuildConfig {
+        configs_per_kernel: configs,
+        ..Default::default()
+    };
+    (templates, sweep, dev, cfg)
+}
+
+#[test]
+fn sharded_write_reload_equals_in_memory_build() {
+    let (templates, sweep, dev, cfg) = setup(3, 6);
+    let reference = dataset::build(&templates, &sweep, &dev, &cfg);
+    assert!(reference.len() > 1000, "{} rows", reference.len());
+
+    for shards in [1usize, 5] {
+        let dir = tmpdir(&format!("rt-{shards}"));
+        let mut sink = ShardedCsvSink::create(&dir, shards).unwrap();
+        let summary =
+            dataset::build_streaming(&templates, &sweep, &dev, &cfg, &mut sink, None)
+                .unwrap();
+        assert_eq!(summary.records as usize, reference.len());
+        assert_eq!(sink.written() as usize, reference.len());
+
+        let back = load_sharded(&dir).unwrap();
+        assert_eq!(back.len(), reference.len(), "shards={shards}");
+        for (i, (a, b)) in back.iter().zip(&reference).enumerate() {
+            assert_eq!(a.features, b.features, "row {i}, shards={shards}");
+            assert!(
+                (a.speedup - b.speedup).abs() < 1e-9,
+                "row {i}: {} vs {}",
+                a.speedup,
+                b.speedup
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}
+
+#[test]
+fn reservoir_sample_is_deterministic_and_sized() {
+    let (templates, sweep, dev, cfg) = setup(2, 5);
+    let run = || {
+        let mut sink = ReservoirSink::new(200, 0xCAFE);
+        dataset::build_streaming(&templates, &sweep, &dev, &cfg, &mut sink, None)
+            .unwrap();
+        sink.into_sample()
+    };
+    let (recs_a, idx_a) = run();
+    let (recs_b, idx_b) = run();
+    assert_eq!(recs_a.len(), 200);
+    assert_eq!(idx_a, idx_b);
+    for (a, b) in recs_a.iter().zip(&recs_b) {
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.speedup, b.speedup);
+    }
+    // indices are distinct and within the stream
+    let total = dataset::build(&templates, &sweep, &dev, &cfg).len() as u64;
+    let mut sorted = idx_a.clone();
+    sorted.sort_unstable();
+    sorted.dedup();
+    assert_eq!(sorted.len(), 200);
+    assert!(sorted.iter().all(|&i| i < total));
+}
+
+/// Sink that counts records without keeping any — the observer for the
+/// bounded-memory contract.
+#[derive(Default)]
+struct CountingSink {
+    n: u64,
+}
+
+impl RecordSink for CountingSink {
+    fn accept(&mut self, _rec: &SpeedupRecord) -> anyhow::Result<()> {
+        self.n += 1;
+        Ok(())
+    }
+}
+
+#[test]
+fn bounded_memory_smoke_at_elevated_scale() {
+    // 10 tuples = 1120 templates; with a tiny chunk the builder must
+    // hand records over incrementally: each progress step may add at
+    // most chunk_templates x configs_per_kernel records, so nothing
+    // ever materializes more than a couple of in-flight chunks.
+    let (templates, sweep, dev, mut cfg) = setup(10, 4);
+    cfg.chunk_templates = 16;
+    let chunk_bound = (cfg.chunk_templates * cfg.configs_per_kernel) as u64;
+
+    let mut sink = CountingSink::default();
+    let mut last_records = 0u64;
+    let mut max_step = 0u64;
+    let mut steps = 0usize;
+    let mut cb = |p: &dataset::BuildProgress| {
+        let step = p.records - last_records;
+        last_records = p.records;
+        max_step = max_step.max(step);
+        steps += 1;
+    };
+    let summary =
+        dataset::build_streaming(&templates, &sweep, &dev, &cfg, &mut sink, Some(&mut cb))
+            .unwrap();
+
+    assert_eq!(sink.n, summary.records);
+    assert!(summary.records > 3000, "{} records", summary.records);
+    // one progress step per chunk, every chunk bounded
+    assert_eq!(steps, (templates.len() + 15) / 16);
+    assert!(
+        max_step <= chunk_bound,
+        "a chunk surfaced {max_step} records (> bound {chunk_bound})"
+    );
+}
+
+#[test]
+fn tee_shards_and_samples_in_one_pass() {
+    // The single-pass train layout: shard to disk while the reservoir
+    // draws the training split; the shards hold the full stream and
+    // the reservoir indices point into it.
+    let (templates, sweep, dev, cfg) = setup(2, 4);
+    let dir = tmpdir("tee");
+    let mut shards = ShardedCsvSink::create(&dir, 3).unwrap();
+    let mut reservoir = ReservoirSink::new(100, 42);
+    let mut tee = Tee(&mut shards, &mut reservoir);
+    dataset::build_streaming(&templates, &sweep, &dev, &cfg, &mut tee, None).unwrap();
+
+    let selected = reservoir.selected_indices();
+    assert_eq!(selected.len(), 100);
+    let (sample, indices) = reservoir.into_sample();
+
+    // Walking the shards, the sampled indices carry the sampled rows.
+    let mut matched = 0usize;
+    let total = stream_sharded(&dir, |idx, rec| {
+        if let Some(pos) = indices.iter().position(|&i| i == idx) {
+            assert_eq!(rec.features, sample[pos].features);
+            matched += 1;
+        }
+        Ok(())
+    })
+    .unwrap();
+    assert_eq!(matched, 100);
+    assert!(total > 400);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn streamed_memory_sink_equals_classic_build() {
+    // The public `build` is itself the streaming path; cross-check it
+    // against the serial reference at integration scale.
+    let (templates, sweep, dev, cfg) = setup(2, 6);
+    let serial = dataset::build_serial(&templates, &sweep, &dev, &cfg);
+    let mut sink = MemorySink::new();
+    dataset::build_streaming(&templates, &sweep, &dev, &cfg, &mut sink, None).unwrap();
+    assert_eq!(sink.records.len(), serial.len());
+    for (a, b) in sink.records.iter().zip(&serial) {
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.features, b.features);
+        assert_eq!(a.speedup, b.speedup);
+    }
+}
