@@ -18,6 +18,29 @@ fn main() {
         .unwrap_or(1);
     println!("host threads: {threads}");
 
+    // The per-template launch-sampling hot path: `sampled_balanced` runs
+    // once per template (11200x at paper scale). It used to clone and
+    // fully shuffle every workgroup bucket — the whole {len}-launch sweep
+    // — per call; it now draws only the k launches it returns (sparse
+    // partial Fisher-Yates), so calls/sec here is the direct measure of
+    // that win.
+    {
+        let bench = Bencher::coarse();
+        const CALLS_PER_ITER: usize = 1000;
+        for k in [24usize, 48, 200] {
+            let mut rng = Rng::new(0x5A3E);
+            let r = bench.run(
+                &format!("sampled_balanced k={k} (sweep len {})", sweep.len()),
+                || {
+                    for _ in 0..CALLS_PER_ITER {
+                        black_box(sweep.sampled_balanced(&mut rng, k));
+                    }
+                },
+            );
+            report_throughput(&r, CALLS_PER_ITER as f64, "calls");
+        }
+    }
+
     for tuples in [2usize, 8] {
         let mut rng = Rng::new(0xBE4C4);
         let templates = generator::generate_n(&mut rng, tuples);
@@ -57,7 +80,7 @@ fn main() {
         let dir = std::env::temp_dir()
             .join(format!("lmtuner-perf-ds-{}", std::process::id()));
         let r_csv = bench.run("streamed -> ShardedCsvSink (4 shards)", || {
-            let mut sink = ShardedCsvSink::create(&dir, 4).unwrap();
+            let mut sink = ShardedCsvSink::create(&dir, 4, dev.key).unwrap();
             dataset::build_streaming(&templates, &sweep, &dev, &cfg, &mut sink, None)
                 .unwrap();
             black_box(sink.written());

@@ -1,0 +1,346 @@
+//! Cross-device generalization: train on device A, test on device B.
+//!
+//! The paper trains and evaluates on a single Tesla M2090; whether the
+//! learned decision survives a change of hardware is exactly the
+//! performance-portability question the OpenCL autotuning literature
+//! (Falch & Elster; Cummins et al.) asks of such models. This module
+//! produces the train-on-A/test-on-B accuracy matrix over the device
+//! portfolio (`gpu::registry`):
+//!
+//! * every device gets its own dataset — same seed, same synthetic
+//!   template population, measured on *that* device's simulated testbed —
+//!   split into train/test the same way;
+//! * one forest is fitted per device and registered in a
+//!   `runtime::executor::ForestRegistry` (the same per-device model
+//!   registry the serving layer routes by);
+//! * every (model, testbed) pair is graded with the paper's two accuracy
+//!   metrics, batched through the registry's native executors.
+//!
+//! The diagonal is the paper's single-device setting; the off-diagonal
+//! cells measure how much accuracy a model loses on hardware it never
+//! saw. `lmtuner crossdev` writes the count-based matrix to CSV for
+//! EXPERIMENTS.md.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::gpu::spec::DeviceSpec;
+use crate::kernelmodel::features::NUM_FEATURES;
+use crate::ml::metrics::{Accuracy, AccuracyAccumulator};
+use crate::runtime::executor::{BatchExecutor, ForestRegistry};
+use crate::sim::exec::SpeedupRecord;
+use crate::synth::{dataset, generator, sweep::LaunchSweep};
+use crate::util::prng::Rng;
+
+use super::train::{self, TrainConfig};
+
+/// Configuration of one cross-device run.
+#[derive(Clone, Debug)]
+pub struct CrossDevConfig {
+    /// Shared phase-1 settings (scale, configs/kernel, forest, seed).
+    pub base: TrainConfig,
+    /// The portfolio: one model and one testbed per entry (>= 2).
+    pub devices: Vec<DeviceSpec>,
+}
+
+/// The train-on-A/test-on-B result grid. Row index = the device the
+/// model was trained on, column index = the device whose held-out
+/// instances it was graded on; `devices` gives both orders.
+#[derive(Clone, Debug)]
+pub struct CrossDevMatrix {
+    pub devices: Vec<String>,
+    /// Count-based accuracy per (train, test) cell.
+    pub count_based: Vec<Vec<f64>>,
+    /// Penalty-weighted accuracy per (train, test) cell.
+    pub penalty_weighted: Vec<Vec<f64>>,
+    /// Held-out rows graded per test device.
+    pub test_rows: Vec<usize>,
+}
+
+impl CrossDevMatrix {
+    pub fn n(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Mean count-based accuracy of the same-device (diagonal) cells.
+    pub fn diagonal_mean(&self) -> f64 {
+        let n = self.n().max(1);
+        (0..self.n()).map(|i| self.count_based[i][i]).sum::<f64>() / n as f64
+    }
+
+    /// Mean count-based accuracy of the cross-device (off-diagonal)
+    /// cells.
+    pub fn off_diagonal_mean(&self) -> f64 {
+        let n = self.n();
+        if n < 2 {
+            return 0.0;
+        }
+        let mut sum = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                if i != j {
+                    sum += self.count_based[i][j];
+                }
+            }
+        }
+        sum / (n * (n - 1)) as f64
+    }
+
+    /// Write the count-based matrix as CSV: one row per training device,
+    /// one column per test device.
+    pub fn to_csv(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("create {}", dir.display()))?;
+            }
+        }
+        let mut s = String::from("train_device");
+        for d in &self.devices {
+            s.push(',');
+            s.push_str(d);
+        }
+        s.push('\n');
+        for (i, d) in self.devices.iter().enumerate() {
+            s.push_str(d);
+            for j in 0..self.n() {
+                s.push_str(&format!(",{:.4}", self.count_based[i][j]));
+            }
+            s.push('\n');
+        }
+        std::fs::write(path, s)
+            .with_context(|| format!("write {}", path.display()))
+    }
+
+    /// Human-readable table: count-based (penalty-weighted) per cell.
+    pub fn render(&self) -> String {
+        let mut out = String::from("train\\test   ");
+        for d in &self.devices {
+            out.push_str(&format!("{d:>16}"));
+        }
+        out.push('\n');
+        for (i, d) in self.devices.iter().enumerate() {
+            out.push_str(&format!("{d:<13}"));
+            for j in 0..self.n() {
+                out.push_str(&format!(
+                    "  {:5.1}% ({:4.1}%)",
+                    100.0 * self.count_based[i][j],
+                    100.0 * self.penalty_weighted[i][j],
+                ));
+            }
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "diagonal mean {:.1}%  off-diagonal mean {:.1}%\n",
+            100.0 * self.diagonal_mean(),
+            100.0 * self.off_diagonal_mean()
+        ));
+        out
+    }
+}
+
+/// Run the full cross-device experiment: per-device datasets and models,
+/// then the (model x testbed) accuracy grid.
+pub fn run(cfg: &CrossDevConfig) -> Result<CrossDevMatrix> {
+    run_with_progress(cfg, |_| {})
+}
+
+/// [`run`] with a per-stage progress callback (stage description).
+pub fn run_with_progress(
+    cfg: &CrossDevConfig,
+    mut progress: impl FnMut(&str),
+) -> Result<CrossDevMatrix> {
+    anyhow::ensure!(
+        cfg.devices.len() >= 2,
+        "cross-device evaluation needs >= 2 devices, got {}",
+        cfg.devices.len()
+    );
+    {
+        let mut keys: Vec<&str> = cfg.devices.iter().map(|d| d.key).collect();
+        keys.sort_unstable();
+        keys.dedup();
+        anyhow::ensure!(
+            keys.len() == cfg.devices.len(),
+            "duplicate devices in the cross-device portfolio"
+        );
+    }
+
+    let base = &cfg.base;
+    let sweep = LaunchSweep::new(2048, 2048);
+    let build = train::build_config(base);
+
+    // Phase 1 per device: identical template population (same seed),
+    // measured on that device, split identically, one forest each.
+    let mut registry = ForestRegistry::new();
+    let mut tests: Vec<Vec<SpeedupRecord>> = Vec::with_capacity(cfg.devices.len());
+    for dev in &cfg.devices {
+        progress(&format!("building dataset + model for {}", dev.key));
+        let mut rng = Rng::new(base.seed);
+        let templates = generator::generate(&mut rng, base.scale);
+        let records = dataset::build(&templates, &sweep, dev, &build);
+        anyhow::ensure!(
+            !records.is_empty(),
+            "{}: empty dataset at scale {}",
+            dev.key,
+            base.scale
+        );
+        let (train_split, test_split) =
+            dataset::split(&records, base.train_fraction, base.seed);
+        let forest = crate::ml::forest::Forest::fit_records(&train_split, &base.forest);
+        registry.insert(dev.key, train::encode_default(&forest));
+        tests.push(test_split.into_iter().cloned().collect());
+    }
+
+    // The grid: model i graded on device j's held-out instances, batched
+    // through the per-device registry executors. Row matrices depend
+    // only on the test set, so they are materialized once, not per model.
+    let row_sets: Vec<Vec<Vec<f64>>> = tests
+        .iter()
+        .map(|test_set| {
+            test_set
+                .iter()
+                .map(|r| r.features[..NUM_FEATURES].to_vec())
+                .collect()
+        })
+        .collect();
+    let n = cfg.devices.len();
+    let mut count = vec![vec![0.0; n]; n];
+    let mut penalty = vec![vec![0.0; n]; n];
+    for (i, train_dev) in cfg.devices.iter().enumerate() {
+        progress(&format!("grading the {} model", train_dev.key));
+        let exec = registry
+            .executor_for(train_dev.key)
+            .expect("model registered above");
+        for (j, test_set) in tests.iter().enumerate() {
+            let decisions = exec.decide(&row_sets[j])?;
+            let mut acc = AccuracyAccumulator::new();
+            for (rec, d) in test_set.iter().zip(decisions) {
+                acc.push_record(rec, d);
+            }
+            let a: Accuracy = acc.finish();
+            count[i][j] = a.count_based;
+            penalty[i][j] = a.penalty_weighted;
+        }
+    }
+
+    Ok(CrossDevMatrix {
+        devices: cfg.devices.iter().map(|d| d.key.to_string()).collect(),
+        count_based: count,
+        penalty_weighted: penalty,
+        test_rows: tests.iter().map(Vec::len).collect(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::exec::MeasureConfig;
+
+    fn small_cfg(devices: Vec<DeviceSpec>) -> CrossDevConfig {
+        CrossDevConfig {
+            base: TrainConfig {
+                scale: 0.02,
+                configs_per_kernel: 4,
+                train_fraction: 0.5,
+                measure: MeasureConfig::deterministic(),
+                ..Default::default()
+            },
+            devices,
+        }
+    }
+
+    #[test]
+    fn matrix_has_the_right_shape_and_bounds() {
+        let devices = vec![DeviceSpec::m2090(), DeviceSpec::k20()];
+        let m = run(&small_cfg(devices)).unwrap();
+        assert_eq!(m.devices, vec!["m2090", "k20"]);
+        assert_eq!(m.count_based.len(), 2);
+        assert_eq!(m.penalty_weighted.len(), 2);
+        for row in m.count_based.iter().chain(&m.penalty_weighted) {
+            assert_eq!(row.len(), 2);
+            for &x in row {
+                assert!((0.0..=1.0).contains(&x), "accuracy {x} out of range");
+            }
+        }
+        assert!(m.test_rows.iter().all(|&r| r > 100), "{:?}", m.test_rows);
+    }
+
+    #[test]
+    fn fewer_than_two_devices_is_an_error() {
+        assert!(run(&small_cfg(vec![DeviceSpec::m2090()])).is_err());
+        let dup = vec![DeviceSpec::m2090(), DeviceSpec::m2090()];
+        let err = run(&small_cfg(dup)).unwrap_err();
+        assert!(format!("{err:#}").contains("duplicate"), "{err:#}");
+    }
+
+    #[test]
+    fn csv_round_trips_through_the_table_shape() {
+        let m = CrossDevMatrix {
+            devices: vec!["a".into(), "b".into()],
+            count_based: vec![vec![0.9, 0.7], vec![0.6, 0.95]],
+            penalty_weighted: vec![vec![0.99, 0.9], vec![0.88, 0.97]],
+            test_rows: vec![10, 12],
+        };
+        assert!((m.diagonal_mean() - 0.925).abs() < 1e-12);
+        assert!((m.off_diagonal_mean() - 0.65).abs() < 1e-12);
+        let path = std::env::temp_dir()
+            .join(format!("lmtuner-crossdev-{}.csv", std::process::id()));
+        m.to_csv(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let mut lines = body.lines();
+        assert_eq!(lines.next(), Some("train_device,a,b"));
+        assert_eq!(lines.next(), Some("a,0.9000,0.7000"));
+        assert_eq!(lines.next(), Some("b,0.6000,0.9500"));
+        assert_eq!(lines.next(), None);
+        assert!(m.render().contains("diagonal mean"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn labels_flip_between_devices_for_some_kernel() {
+        // The premise of the whole experiment: the same kernel instance
+        // can favor local memory on one device and not on another, while
+        // its feature vector stays finite on both.
+        use crate::sim::exec::measure;
+        use crate::sim::timing::{simulate, Variant};
+        let a = DeviceSpec::m2090();
+        let b = DeviceSpec::k20();
+        let mut rng = Rng::new(0x0DD5);
+        let templates = generator::generate_n(&mut rng, 2);
+        let sweep = LaunchSweep::new(2048, 2048);
+        let cfg = MeasureConfig::deterministic();
+        let mut lrng = Rng::new(42);
+        let mut flips = 0usize;
+        let mut compared = 0usize;
+        for t in &templates {
+            for launch in sweep.sampled_balanced(&mut lrng, 3) {
+                let da = t.descriptor(&launch, &a);
+                let db = t.descriptor(&launch, &b);
+                if !simulate(&da, &a, Variant::Baseline).feasible()
+                    || !simulate(&db, &b, Variant::Baseline).feasible()
+                {
+                    continue;
+                }
+                let ra = measure(&da, &a, &cfg);
+                let rb = measure(&db, &b, &cfg);
+                assert!(ra.features.iter().all(|x| x.is_finite()), "{}", ra.name);
+                assert!(rb.features.iter().all(|x| x.is_finite()), "{}", rb.name);
+                compared += 1;
+                flips += (ra.beneficial() != rb.beneficial()) as usize;
+            }
+        }
+        assert!(compared > 100, "only {compared} comparable instances");
+        assert!(
+            flips > 0,
+            "no kernel's oracle label flipped between {} and {} \
+             ({compared} instances compared)",
+            a.key,
+            b.key
+        );
+    }
+
+    // The full-portfolio diagonal-vs-off-diagonal acceptance assertion
+    // lives in rust/tests/crossdev.rs (one expensive run per CI pass,
+    // not two).
+}

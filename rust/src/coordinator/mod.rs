@@ -19,6 +19,11 @@
 //! let out = train::run_sharded(&dev, &cfg, None).unwrap();
 //! println!("{} instances, trained on {}", out.summary.records, out.train_size);
 //! ```
+//! Cross-device generalization lives in [`crossdev`]: per-device
+//! datasets and models over the `gpu::registry` portfolio, graded as a
+//! train-on-A/test-on-B accuracy matrix. Serving routes prediction
+//! batches by device through [`service::DeviceRouter`].
+pub mod crossdev;
 pub mod messages;
 pub mod service;
 pub mod train;

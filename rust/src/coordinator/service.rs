@@ -20,7 +20,7 @@ use anyhow::{anyhow, Result};
 
 use crate::kernelmodel::features::NUM_FEATURES;
 use crate::ml::export::EncodedForest;
-use crate::runtime::executor::{BatchExecutor, NativeForestExecutor};
+use crate::runtime::executor::{BatchExecutor, ForestRegistry, NativeForestExecutor};
 use crate::runtime::forest_exec::ForestExecutor;
 use crate::runtime::pjrt::Engine;
 
@@ -263,6 +263,114 @@ impl Drop for Service {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
+    }
+}
+
+/// One serving process, a whole device portfolio: a [`Service`] per
+/// registered device behind a single routing handle. Clients name the
+/// device their kernel targets and the router dispatches the request to
+/// that device's model — the serving-side face of the
+/// `runtime::executor::ForestRegistry`.
+pub struct DeviceRouter {
+    services: Vec<(String, Service)>,
+    handle: RouterHandle,
+}
+
+/// Cheap-to-clone client handle that routes by device key.
+#[derive(Clone)]
+pub struct RouterHandle {
+    handles: Arc<std::collections::BTreeMap<String, ServiceHandle>>,
+}
+
+impl RouterHandle {
+    fn shard(&self, device: &str) -> Result<&ServiceHandle> {
+        self.handles.get(device).ok_or_else(|| {
+            anyhow!(
+                "no model registered for device '{device}' (serving: {})",
+                self.handles
+                    .keys()
+                    .map(String::as_str)
+                    .collect::<Vec<_>>()
+                    .join(", ")
+            )
+        })
+    }
+
+    /// Blocking predict against `device`'s model.
+    pub fn predict(
+        &self,
+        device: &str,
+        features: [f64; NUM_FEATURES],
+    ) -> Result<PredictResponse> {
+        self.shard(device)?.predict(features)
+    }
+
+    /// Async submit against `device`'s model.
+    pub fn submit(
+        &self,
+        device: &str,
+        id: u64,
+        features: [f64; NUM_FEATURES],
+        reply: std::sync::mpsc::Sender<PredictReply>,
+    ) -> Result<()> {
+        self.shard(device)?.submit(id, features, reply)
+    }
+
+    /// Devices this router serves, sorted.
+    pub fn devices(&self) -> Vec<&str> {
+        self.handles.keys().map(String::as_str).collect()
+    }
+}
+
+impl DeviceRouter {
+    /// Start one native-backend [`Service`] per registry entry. Each
+    /// device's shards share that device's forest tables; `cfg.workers`
+    /// applies per device.
+    pub fn start_native(registry: &ForestRegistry, cfg: ServiceConfig) -> Result<DeviceRouter> {
+        anyhow::ensure!(!registry.is_empty(), "empty model registry");
+        let shards = cfg.workers.max(1);
+        // Divide the host's cores across every shard of every device so
+        // concurrent batches don't oversubscribe.
+        let host = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        let per_shard = (host / (shards * registry.len())).max(1);
+        let mut services = Vec::with_capacity(registry.len());
+        let mut handles = std::collections::BTreeMap::new();
+        for device in registry.devices() {
+            let execs: Vec<NativeForestExecutor> = (0..shards)
+                .map(|_| {
+                    registry
+                        .executor_for(device)
+                        .expect("device iterated from the registry")
+                        .threads(per_shard)
+                })
+                .collect();
+            let svc = Service::start_sharded(execs, cfg.clone())?;
+            handles.insert(device.to_string(), svc.handle());
+            services.push((device.to_string(), svc));
+        }
+        Ok(DeviceRouter {
+            services,
+            handle: RouterHandle { handles: Arc::new(handles) },
+        })
+    }
+
+    pub fn handle(&self) -> RouterHandle {
+        self.handle.clone()
+    }
+
+    pub fn devices(&self) -> Vec<&str> {
+        self.services.iter().map(|(d, _)| d.as_str()).collect()
+    }
+
+    /// Stop every per-device service; returns (device, stats) pairs in
+    /// start order.
+    pub fn shutdown(self) -> Vec<(String, ServiceStats)> {
+        self.services
+            .into_iter()
+            .map(|(d, svc)| (d, svc.shutdown()))
+            .collect()
     }
 }
 
@@ -545,6 +653,74 @@ mod tests {
         let stats = svc.shutdown();
         assert_eq!(stats.served, 0);
         assert_eq!(stats.rejected, 21);
+    }
+
+    #[test]
+    fn device_router_routes_requests_to_the_right_model() {
+        let enc_a = toy_encoded(21);
+        let enc_b = toy_encoded(23);
+        let mut reg = ForestRegistry::new();
+        reg.insert("m2090", enc_a.clone());
+        reg.insert("k20", enc_b.clone());
+        let router = DeviceRouter::start_native(
+            &reg,
+            ServiceConfig {
+                max_batch: 32,
+                max_wait: Duration::from_micros(100),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(router.devices(), vec!["k20", "m2090"]);
+        let h = router.handle();
+        assert_eq!(h.devices(), vec!["k20", "m2090"]);
+
+        let mut rng = Rng::new(55);
+        let mut disagreements = 0usize;
+        for _ in 0..40 {
+            let feats = random_features(&mut rng);
+            let ra = h.predict("m2090", feats).unwrap();
+            let rb = h.predict("k20", feats).unwrap();
+            assert!((ra.score - enc_a.predict(&feats)).abs() < 1e-9);
+            assert!((rb.score - enc_b.predict(&feats)).abs() < 1e-9);
+            disagreements += (ra.score != rb.score) as usize;
+        }
+        assert!(disagreements > 0, "models never disagreed; routing unproven");
+
+        // unknown device: typed routing error naming the portfolio
+        let err = h.predict("gtx9000", [0.0; NUM_FEATURES]).unwrap_err();
+        let msg = format!("{err}");
+        assert!(msg.contains("gtx9000") && msg.contains("m2090"), "{msg}");
+
+        let stats = router.shutdown();
+        assert_eq!(stats.len(), 2);
+        let served: u64 = stats.iter().map(|(_, s)| s.served).sum();
+        assert_eq!(served, 80);
+    }
+
+    #[test]
+    fn device_router_async_submit_and_shutdown() {
+        let mut reg = ForestRegistry::new();
+        reg.insert("gtx480", toy_encoded(29));
+        let router =
+            DeviceRouter::start_native(&reg, ServiceConfig::default()).unwrap();
+        let h = router.handle();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut rng = Rng::new(77);
+        for i in 0..50u64 {
+            h.submit("gtx480", i, random_features(&mut rng), tx.clone())
+                .unwrap();
+        }
+        drop(tx);
+        let mut seen = 0;
+        while let Ok(reply) = rx.recv() {
+            reply.unwrap();
+            seen += 1;
+        }
+        assert_eq!(seen, 50);
+        router.shutdown();
+        // after shutdown the handle reports a stopped service
+        assert!(h.predict("gtx480", [0.0; NUM_FEATURES]).is_err());
     }
 
     #[test]

@@ -90,6 +90,9 @@ impl ShardedTrainConfig {
 
 pub struct TrainOutcome {
     pub forest: Forest,
+    /// Key of the simulated device the dataset was measured on; stamped
+    /// into every dataset/shard this outcome persists.
+    pub device: String,
     /// Materialized records (in-memory pipeline only; empty when the
     /// dataset streamed to disk shards).
     pub records: Vec<SpeedupRecord>,
@@ -151,6 +154,7 @@ pub fn run_with_progress(
 
     TrainOutcome {
         forest,
+        device: dev.key.to_string(),
         records,
         summary,
         synth_accuracy,
@@ -178,8 +182,9 @@ pub fn run_sharded(
     let build = build_config(base);
 
     // Pass 1: simulate once, streaming every record to the CSV shards
-    // while the reservoir uniformly samples the training split.
-    let mut shards = ShardedCsvSink::create(&cfg.out_dir, cfg.shards)?;
+    // while the reservoir uniformly samples the training split. Every
+    // shard is stamped with the device it was measured on.
+    let mut shards = ShardedCsvSink::create(&cfg.out_dir, cfg.shards, dev.key)?;
     let mut reservoir =
         ReservoirSink::new(cfg.train_capacity, base.seed ^ 0x7EA1_5A3D);
     let mut tee = Tee(&mut shards, &mut reservoir);
@@ -203,7 +208,7 @@ pub fn run_sharded(
     let mut acc = AccuracyAccumulator::new();
     let mut batch: Vec<Vec<f64>> = Vec::with_capacity(EVAL_BATCH);
     let threads = build.threads;
-    let streamed = sink::stream_sharded_rows(&cfg.out_dir, |idx, row| {
+    let replay = sink::stream_sharded_rows(&cfg.out_dir, |idx, row| {
         if !train_set.contains(&idx) {
             batch.push(row);
             if batch.len() == EVAL_BATCH {
@@ -215,13 +220,20 @@ pub fn run_sharded(
     })?;
     grade_rows(&mut acc, &forest, &batch, threads);
     anyhow::ensure!(
-        streamed == summary.records,
+        replay.rows == summary.records,
         "{}: shards replay {} records but the build streamed {} — \
          stale files in the output directory?",
         cfg.out_dir.display(),
-        streamed,
+        replay.rows,
         summary.records
     );
+    // The shards we just wrote must replay as the device we simulated;
+    // anything else means foreign files crept into the directory.
+    sink::ensure_same_device(
+        dev.key,
+        replay.device.as_deref().unwrap_or("<unstamped>"),
+        cfg.out_dir.display().to_string(),
+    )?;
     anyhow::ensure!(
         acc.n() > 0,
         "training reservoir (capacity {}) swallowed the entire \
@@ -234,6 +246,7 @@ pub fn run_sharded(
     let per_benchmark = evaluate_real(dev, &forest, &base.measure);
     Ok(TrainOutcome {
         forest,
+        device: dev.key.to_string(),
         records: Vec::new(),
         summary,
         synth_accuracy: acc.finish(),
@@ -278,11 +291,12 @@ pub fn evaluate_real(
         .collect()
 }
 
-/// Persist everything the serving side needs.
+/// Persist everything the serving side needs. Datasets are stamped with
+/// the device they were measured on.
 pub fn save_outcome(out: &TrainOutcome, model_path: &Path, data_path: Option<&Path>) -> Result<()> {
     io::save(&out.forest, model_path)?;
     if let Some(p) = data_path {
-        dataset::save(&out.records, p)?;
+        dataset::save(&out.records, p, &out.device)?;
     }
     Ok(())
 }
@@ -327,6 +341,7 @@ mod tests {
             ..Default::default()
         };
         let out = run(&dev, &cfg);
+        assert_eq!(out.device, "m2090");
         assert!(out.records.len() > 1000, "{}", out.records.len());
         assert_eq!(out.summary.records as usize, out.records.len());
         assert!(out.synth_accuracy.count_based > 0.6,
@@ -373,6 +388,7 @@ mod tests {
         let out = run_sharded(&dev, &cfg, None).unwrap();
         // dataset streamed to disk, not memory
         assert!(out.records.is_empty());
+        assert_eq!(out.device, "m2090");
         assert!(out.summary.records > 1000);
         assert_eq!(out.train_size, 400);
         // every non-train row was graded

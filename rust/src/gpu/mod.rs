@@ -1,3 +1,6 @@
-//! Device model of the paper's testbed (Tesla M2090, Fermi CC 2.0).
+//! Device models: the paper's testbed (Tesla M2090, Fermi CC 2.0) plus
+//! the rest of the simulated device portfolio ([`registry`]), and the
+//! per-CC occupancy calculator.
 pub mod occupancy;
+pub mod registry;
 pub mod spec;

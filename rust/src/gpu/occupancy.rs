@@ -92,12 +92,19 @@ pub fn occupancy(dev: &DeviceSpec, u: &BlockUsage) -> Occupancy {
         return infeasible;
     }
 
-    // Attribute the binding constraint (ties: report the scarcest).
-    let limiter = if blocks == lim_regs && lim_regs <= lim_smem {
-        Limiter::Registers
-    } else if blocks == lim_smem {
+    // Attribute the binding constraint: the scarcest resource wins (every
+    // candidate below equals `blocks`, the minimum). On exact ties the
+    // documented order is SharedMem > Registers > Threads (which also
+    // covers the warp cap — threads and warps are the same resource at
+    // warp granularity) > Blocks: the resources the local-memory
+    // optimization actually spends come first, the fixed hardware caps
+    // last, so a tie is always attributed to the knob a tuner can move.
+    let lim_occ = lim_threads.min(lim_warps);
+    let limiter = if blocks == lim_smem {
         Limiter::SharedMem
-    } else if blocks == lim_threads.min(lim_warps) {
+    } else if blocks == lim_regs {
+        Limiter::Registers
+    } else if blocks == lim_occ {
         Limiter::Threads
     } else {
         Limiter::Blocks
@@ -189,5 +196,136 @@ mod tests {
         // 2 warps/block, warp cap 48/2 = 24, block cap 8 binds.
         assert_eq!(o.blocks_per_sm, 8);
         assert_eq!(o.warps_per_sm, 16);
+    }
+
+    // ---- tie attribution: documented order SharedMem > Registers >
+    //      Threads > Blocks, one direct test per tie ----
+
+    #[test]
+    fn regs_smem_tie_reports_shared_mem() {
+        // 256 threads, 63 regs: regs/warp = ceil(63*32/64)*64 = 2048,
+        // 8 warps/block => 16384 regs/block => lim_regs = 2. 24 KB of
+        // smem => lim_smem = 2. Both bind; SharedMem wins the tie.
+        let o = occupancy(&dev(), &usage(256, 63, 24 * 1024));
+        assert_eq!(o.blocks_per_sm, 2);
+        assert_eq!(o.limiter, Limiter::SharedMem);
+    }
+
+    #[test]
+    fn regs_threads_tie_reports_registers() {
+        // 256 threads, 20 regs: regs/warp = ceil(20*32/64)*64 = 640,
+        // 8 warps/block => 5120 regs/block => lim_regs = 6; thread cap
+        // 1536/256 = 6 and warp cap 48/8 = 6 tie with it.
+        let o = occupancy(&dev(), &usage(256, 20, 0));
+        assert_eq!(o.blocks_per_sm, 6);
+        assert_eq!(o.limiter, Limiter::Registers);
+    }
+
+    #[test]
+    fn threads_blocks_tie_reports_threads() {
+        // 192 threads: thread cap 1536/192 = 8, warp cap 48/6 = 8, and
+        // the block-count cap 8 all tie; Threads outranks Blocks.
+        let o = occupancy(&dev(), &usage(192, 10, 0));
+        assert_eq!(o.blocks_per_sm, 8);
+        assert_eq!(o.limiter, Limiter::Threads);
+    }
+
+    #[test]
+    fn four_way_tie_reports_shared_mem() {
+        // 192 threads (caps 8/8/8 as above), 20 regs => 6 warps * 640 =
+        // 3840 regs/block => lim_regs = 8, and 6144 B smem => lim_smem =
+        // 8: every resource ties at 8, SharedMem is first in the order.
+        let o = occupancy(&dev(), &usage(192, 20, 6144));
+        assert_eq!(o.blocks_per_sm, 8);
+        assert_eq!(o.limiter, Limiter::SharedMem);
+    }
+
+    #[test]
+    fn blocks_only_still_reports_blocks() {
+        let o = occupancy(&dev(), &usage(64, 10, 0));
+        assert_eq!(o.limiter, Limiter::Blocks);
+    }
+
+    // ---- golden occupancy numbers per registered device, validated
+    //      against the CUDA occupancy calculator's constant sets ----
+
+    #[test]
+    fn golden_k20_full_occupancy() {
+        // CC 3.5: 256 threads, 32 regs => regs/warp = ceil(32*32/256)*256
+        // = 1024, 8 warps/block => 8192 regs/block => lim_regs = 8;
+        // thread cap 2048/256 = 8, warp cap 64/8 = 8, block cap 16.
+        // 8 blocks, 64 warps: 100% occupancy.
+        let d = DeviceSpec::k20();
+        let o = occupancy(&d, &usage(256, 32, 0));
+        assert_eq!(o.blocks_per_sm, 8);
+        assert_eq!(o.warps_per_sm, 64);
+        assert!((o.fraction - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn golden_k20_accepts_high_register_kernels() {
+        // 255 regs/thread is legal on CC 3.5 (infeasible on CC 2.x/3.0):
+        // regs/warp = ceil(255*32/256)*256 = 8192 => 64 threads (2 warps)
+        // => 16384 regs/block => lim_regs = 4 binds (block cap 16).
+        let d = DeviceSpec::k20();
+        let o = occupancy(&d, &usage(64, 255, 0));
+        assert_eq!(o.blocks_per_sm, 4);
+        assert_eq!(o.limiter, Limiter::Registers);
+        assert_eq!(
+            occupancy(&DeviceSpec::gtx680(), &usage(64, 255, 0)).limiter,
+            Limiter::Infeasible
+        );
+    }
+
+    #[test]
+    fn golden_gtx680_register_pressure() {
+        // CC 3.0: 128 threads, 63 regs => regs/warp = ceil(63*32/256)*256
+        // = 2048, 4 warps/block => 8192 regs/block => lim_regs = 8 binds
+        // (thread cap 16, warp cap 16, block cap 16): 32 warps, 50%.
+        let d = DeviceSpec::gtx680();
+        let o = occupancy(&d, &usage(128, 63, 0));
+        assert_eq!(o.blocks_per_sm, 8);
+        assert_eq!(o.warps_per_sm, 32);
+        assert_eq!(o.limiter, Limiter::Registers);
+        assert!((o.fraction - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn golden_gtx680_smem_granularity() {
+        // CC 3.0 rounds shared memory to 256 B: 6200 B/block allocates
+        // 6400 B => lim_smem = 49152/6400 = 7 binds.
+        let d = DeviceSpec::gtx680();
+        let o = occupancy(&d, &usage(128, 16, 6200));
+        assert_eq!(o.blocks_per_sm, 7);
+        assert_eq!(o.limiter, Limiter::SharedMem);
+    }
+
+    #[test]
+    fn golden_gtx480_matches_m2090_constants() {
+        // Same CC 2.0 constant set as the M2090: identical residency for
+        // identical per-block usage (the parts differ in SM count/clock,
+        // not occupancy constants).
+        let a = DeviceSpec::gtx480();
+        let b = DeviceSpec::m2090();
+        for u in [usage(256, 16, 0), usage(512, 63, 0), usage(128, 16, 20 * 1024)] {
+            let oa = occupancy(&a, &u);
+            let ob = occupancy(&b, &u);
+            assert_eq!(oa.blocks_per_sm, ob.blocks_per_sm);
+            assert_eq!(oa.limiter, ob.limiter);
+        }
+    }
+
+    #[test]
+    fn golden_kepler_wide_blocks() {
+        // 1024 threads, 24 regs, CC 3.0: regs/warp = ceil(24*32/256)*256
+        // = 768, 32 warps => 24576 regs/block => lim_regs = 65536/24576
+        // = 2; thread cap 2048/1024 = 2, warp cap 64/32 = 2 tie =>
+        // Registers by documented order (SharedMem unused). 64 resident
+        // warps, full occupancy.
+        let d = DeviceSpec::gtx680();
+        let o = occupancy(&d, &usage(1024, 24, 0));
+        assert_eq!(o.blocks_per_sm, 2);
+        assert_eq!(o.warps_per_sm, 64);
+        assert_eq!(o.limiter, Limiter::Registers);
     }
 }

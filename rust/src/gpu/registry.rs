@@ -1,0 +1,103 @@
+//! The device portfolio: every simulated testbed the system knows,
+//! addressable by a stable key.
+//!
+//! The registry is what turns the single-card reproduction into a
+//! portfolio of hardware scenarios: `lmtuner generate/train --device
+//! <key>` selects the simulated testbed, datasets are stamped with the
+//! key they were measured on, the serving layer routes prediction
+//! batches by it, and `lmtuner crossdev` trains on one device and tests
+//! on another. Keys are lowercase slugs (`m2090`, `gtx480`, `gtx680`,
+//! `k20`); lookup is case-insensitive.
+
+use anyhow::{bail, Result};
+
+use super::spec::DeviceSpec;
+
+/// Key of the default device — the paper's testbed.
+pub const DEFAULT_DEVICE: &str = "m2090";
+
+/// Every registered device, in canonical order (the paper's testbed
+/// first, then the rest alphabetically). The order is stable: the
+/// cross-device matrix and `lmtuner info` both present devices this way.
+pub fn all() -> Vec<DeviceSpec> {
+    vec![
+        DeviceSpec::m2090(),
+        DeviceSpec::gtx480(),
+        DeviceSpec::gtx680(),
+        DeviceSpec::k20(),
+    ]
+}
+
+/// Registered device keys, in canonical order.
+pub fn keys() -> Vec<&'static str> {
+    all().into_iter().map(|d| d.key).collect()
+}
+
+/// Look a device up by key (case-insensitive). Unknown keys report the
+/// available portfolio.
+pub fn get(key: &str) -> Result<DeviceSpec> {
+    let want = key.trim().to_ascii_lowercase();
+    for d in all() {
+        if d.key == want {
+            return Ok(d);
+        }
+    }
+    bail!(
+        "unknown device '{key}' (registered: {})",
+        keys().join(", ")
+    )
+}
+
+/// The default simulated testbed (the paper's Tesla M2090).
+pub fn default_device() -> DeviceSpec {
+    DeviceSpec::m2090()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn at_least_four_devices_registered() {
+        assert!(all().len() >= 4, "{:?}", keys());
+    }
+
+    #[test]
+    fn keys_are_unique_slugs() {
+        let ks = keys();
+        let mut sorted = ks.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), ks.len(), "duplicate keys in {ks:?}");
+        for k in ks {
+            assert!(!k.is_empty());
+            assert!(
+                k.chars().all(|c| c.is_ascii_lowercase() || c.is_ascii_digit()),
+                "key '{k}' is not a lowercase slug"
+            );
+        }
+    }
+
+    #[test]
+    fn lookup_is_case_insensitive_and_roundtrips() {
+        for d in all() {
+            assert_eq!(get(d.key).unwrap().name, d.name);
+            assert_eq!(get(&d.key.to_ascii_uppercase()).unwrap().key, d.key);
+        }
+        assert_eq!(get(" m2090 ").unwrap().key, "m2090");
+    }
+
+    #[test]
+    fn unknown_device_lists_the_portfolio() {
+        let err = get("gtx9000").unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("gtx9000"), "{msg}");
+        assert!(msg.contains("m2090"), "{msg}");
+    }
+
+    #[test]
+    fn default_is_the_paper_testbed() {
+        assert_eq!(default_device().key, DEFAULT_DEVICE);
+        assert_eq!(keys()[0], DEFAULT_DEVICE);
+    }
+}

@@ -1,13 +1,21 @@
 //! GPU device model.
 //!
 //! The paper measures on an NVIDIA Tesla M2090 (Fermi GF110, compute
-//! capability 2.0). We model that card; the spec is data, so other devices
-//! can be described for ablations (`DeviceSpec::gtx480()` etc.).
+//! capability 2.0). The spec is data, so the same simulator runs a whole
+//! portfolio of devices: [`super::registry`] names every card the system
+//! knows (two Fermi and two Kepler parts), each with the per-CC occupancy
+//! constants of the CUDA occupancy calculator.
 
-/// Static hardware description of a Fermi-class GPU.
+/// Static hardware description of a Fermi/Kepler-class GPU.
 #[derive(Clone, Debug)]
 pub struct DeviceSpec {
     pub name: &'static str,
+    /// Short slug used by the CLI (`--device`), dataset metadata and the
+    /// serving model registry. Lowercase, no spaces.
+    pub key: &'static str,
+    /// Compute capability (major, minor) — determines the occupancy
+    /// constant set below.
+    pub compute_capability: (u32, u32),
     /// Streaming multiprocessors.
     pub num_sms: u32,
     /// Threads per warp.
@@ -22,17 +30,17 @@ pub struct DeviceSpec {
     pub max_warps_per_sm: u32,
     /// 32-bit registers per SM.
     pub regs_per_sm: u32,
-    /// Max registers addressable per thread (CC 2.0: 63).
+    /// Max registers addressable per thread (CC 2.x/3.0: 63, CC 3.5: 255).
     pub max_regs_per_thread: u32,
-    /// Register allocation granularity (per-warp, CC 2.0: 64 registers).
+    /// Register allocation granularity (per-warp; CC 2.x: 64, CC 3.x: 256).
     pub reg_alloc_unit: u32,
     /// Shared ("local" in OpenCL terms) memory per SM, bytes.
     pub shared_mem_per_sm: u32,
-    /// Shared-memory allocation granularity, bytes.
+    /// Shared-memory allocation granularity, bytes (CC 2.x: 128, 3.x: 256).
     pub shared_alloc_unit: u32,
     /// Max threads per block.
     pub max_threads_per_block: u32,
-    /// DRAM transaction size in bytes (128 B on Fermi).
+    /// DRAM transaction size in bytes (128 B line on Fermi/Kepler).
     pub transaction_bytes: u32,
     /// Aggregate DRAM bandwidth, bytes/s.
     pub mem_bandwidth: f64,
@@ -42,9 +50,9 @@ pub struct DeviceSpec {
     pub smem_latency: f64,
     /// Issue cost of a barrier, cycles (fixed part).
     pub barrier_base_cost: f64,
-    /// L1 cache per SM, bytes (Fermi: 16 KB with 48 KB shared config).
+    /// L1 cache per SM, bytes (16 KB with the 48 KB shared config).
     pub l1_bytes: u32,
-    /// L2 slice per SM, bytes (768 KB total / 16 SMs on GF110).
+    /// L2 slice per SM, bytes (total L2 / SM count).
     pub l2_bytes_per_sm: u32,
     /// Latency of an L1/L2 hit, cycles.
     pub cache_hit_latency: f64,
@@ -52,9 +60,12 @@ pub struct DeviceSpec {
 
 impl DeviceSpec {
     /// NVIDIA Tesla M2090 — the paper's testbed (Table/Section 5).
+    /// Fermi GF110, CC 2.0.
     pub fn m2090() -> Self {
         DeviceSpec {
             name: "Tesla M2090",
+            key: "m2090",
+            compute_capability: (2, 0),
             num_sms: 16,
             warp_size: 32,
             clock_hz: 1.3e9,
@@ -78,14 +89,65 @@ impl DeviceSpec {
         }
     }
 
-    /// GeForce GTX 480 — a second Fermi part for device ablations.
+    /// GeForce GTX 480 — a second Fermi part (GF100, CC 2.0): one SM
+    /// fewer, higher shader clock, 768 KB of L2 over 15 SMs.
     pub fn gtx480() -> Self {
         DeviceSpec {
             name: "GeForce GTX 480",
+            key: "gtx480",
             num_sms: 15,
+            clock_hz: 1.401e9,
             mem_bandwidth: 177.4e9,
-            clock_hz: 1.4e9,
+            l2_bytes_per_sm: 768 * 1024 / 15,
             ..Self::m2090()
+        }
+    }
+
+    /// GeForce GTX 680 — Kepler GK104, CC 3.0: 8 wide SMXs, 2048
+    /// threads / 64 warps / 16 blocks per SMX, a 64K register file with
+    /// 256-register per-warp allocation granularity, and no hot clock.
+    pub fn gtx680() -> Self {
+        DeviceSpec {
+            name: "GeForce GTX 680",
+            key: "gtx680",
+            compute_capability: (3, 0),
+            num_sms: 8,
+            warp_size: 32,
+            clock_hz: 1.006e9,
+            max_threads_per_sm: 2048,
+            max_blocks_per_sm: 16,
+            max_warps_per_sm: 64,
+            regs_per_sm: 65536,
+            max_regs_per_thread: 63,
+            reg_alloc_unit: 256,
+            shared_mem_per_sm: 48 * 1024,
+            shared_alloc_unit: 256,
+            max_threads_per_block: 1024,
+            transaction_bytes: 128,
+            mem_bandwidth: 192.3e9,
+            mem_latency: 500.0,
+            smem_latency: 28.0,
+            barrier_base_cost: 32.0,
+            l1_bytes: 16 * 1024,
+            l2_bytes_per_sm: 512 * 1024 / 8,
+            cache_hit_latency: 80.0,
+        }
+    }
+
+    /// Tesla K20 — Kepler GK110, CC 3.5: 13 SMXs, the CC 3.0 occupancy
+    /// constants plus the raised 255-register per-thread cap, and a
+    /// 1.5 MB L2.
+    pub fn k20() -> Self {
+        DeviceSpec {
+            name: "Tesla K20",
+            key: "k20",
+            compute_capability: (3, 5),
+            num_sms: 13,
+            clock_hz: 0.706e9,
+            max_regs_per_thread: 255,
+            mem_bandwidth: 208.0e9,
+            l2_bytes_per_sm: 1536 * 1024 / 13,
+            ..Self::gtx680()
         }
     }
 
@@ -116,12 +178,53 @@ mod tests {
     }
 
     #[test]
+    fn warp_and_thread_caps_are_consistent_on_every_device() {
+        for d in [
+            DeviceSpec::m2090(),
+            DeviceSpec::gtx480(),
+            DeviceSpec::gtx680(),
+            DeviceSpec::k20(),
+        ] {
+            assert_eq!(
+                d.max_warps_per_sm * d.warp_size,
+                d.max_threads_per_sm,
+                "{}",
+                d.key
+            );
+            assert!(d.max_threads_per_block <= d.max_threads_per_sm);
+            assert!(d.regs_per_sm % d.reg_alloc_unit == 0, "{}", d.key);
+        }
+    }
+
+    #[test]
+    fn cc_occupancy_constants_match_the_calculator() {
+        // The per-CC constant sets of the CUDA occupancy calculator.
+        let m = DeviceSpec::m2090();
+        assert_eq!((m.max_warps_per_sm, m.max_blocks_per_sm), (48, 8));
+        assert_eq!((m.regs_per_sm, m.reg_alloc_unit, m.max_regs_per_thread), (32768, 64, 63));
+        assert_eq!(m.shared_alloc_unit, 128);
+        let g = DeviceSpec::gtx680();
+        assert_eq!((g.max_warps_per_sm, g.max_blocks_per_sm), (64, 16));
+        assert_eq!((g.regs_per_sm, g.reg_alloc_unit, g.max_regs_per_thread), (65536, 256, 63));
+        assert_eq!(g.shared_alloc_unit, 256);
+        let k = DeviceSpec::k20();
+        assert_eq!(k.max_regs_per_thread, 255);
+        assert_eq!(k.reg_alloc_unit, 256);
+    }
+
+    #[test]
     fn departure_delay_is_plausible() {
         // 177 GB/s over 16 SMs at 1.3 GHz => ~8.5 B/cycle/SM => ~15 cycles
         // per 128 B transaction.
         let d = DeviceSpec::m2090();
         let delta = d.tx_departure_cycles();
         assert!((10.0..25.0).contains(&delta), "delta {delta}");
+        // Kepler parts have more bandwidth per SM-cycle, so the departure
+        // delay shrinks but stays positive.
+        for d in [DeviceSpec::gtx680(), DeviceSpec::k20()] {
+            let delta = d.tx_departure_cycles();
+            assert!((1.0..25.0).contains(&delta), "{}: delta {delta}", d.key);
+        }
     }
 
     #[test]

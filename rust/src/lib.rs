@@ -6,13 +6,20 @@
 //! Forest on millions of synthetic kernel instances, each labeled with
 //! the measured speedup of staging its data in local/shared memory:
 //! [`synth`] generates the kernel population, [`sim`] measures it on a
-//! simulated Tesla M2090 testbed, [`ml`] fits and evaluates the model,
-//! and [`coordinator::train`] drives the pipeline — either fully in
+//! simulated testbed drawn from the [`gpu::registry`] device portfolio
+//! (the paper's Tesla M2090 by default; Fermi and Kepler parts are
+//! registered), [`ml`] fits and evaluates the model, and
+//! [`coordinator::train`] drives the pipeline — either fully in
 //! memory or streamed through `synth::sink` record sinks so paper-scale
-//! datasets shard to disk with bounded peak memory. **Phase 2** serves
+//! datasets shard to disk with bounded peak memory (every dataset is
+//! stamped with its device; mixing devices is a typed error).
+//! [`coordinator::crossdev`] grades cross-device generalization as a
+//! train-on-A/test-on-B accuracy matrix. **Phase 2** serves
 //! the use/don't-use decision online: [`coordinator::service`] batches
 //! requests across sharded workers onto a [`runtime`] backend (native
-//! tensorized traversal, or PJRT when artifacts are present).
+//! tensorized traversal, or PJRT when artifacts are present), with
+//! `coordinator::service::DeviceRouter` routing batches to per-device
+//! models.
 //!
 //! See `README.md` for the quickstart, `DESIGN.md` for the module
 //! inventory and backend contracts, and `EXPERIMENTS.md` for how each

@@ -3,19 +3,25 @@
 //! Subcommands:
 //!   generate   build the synthetic kernel-instance dataset (CSV)
 //!   train      phase-1 pipeline: generate + simulate + fit + evaluate
+//!   crossdev   train-on-A/test-on-B accuracy matrix over the portfolio
 //!   eval       evaluate a saved model on a dataset / the real benchmarks
 //!   predict    one-off decision for a feature vector
 //!   serve      start the batched PJRT prediction service (demo load)
 //!   reproduce  regenerate paper figures/tables: fig1, fig6, table1-3
 //!   info       device + artifact status
+//!
+//! `--device <key>` selects the simulated testbed wherever one is
+//! involved (see `lmtuner info` for the registered portfolio).
 
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
+use lmtuner::coordinator::crossdev;
 use lmtuner::coordinator::service::{Service, ServiceConfig};
 use lmtuner::coordinator::train::{self, TrainConfig};
+use lmtuner::gpu::registry;
 use lmtuner::gpu::spec::DeviceSpec;
 use lmtuner::kernelmodel::features::{FEATURE_NAMES, NUM_FEATURES};
 use lmtuner::ml::{io as model_io, metrics};
@@ -34,36 +40,51 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "lmtuner <generate|train|eval|predict|serve|reproduce|info> [options]\n\
+    "lmtuner <generate|train|crossdev|eval|predict|serve|reproduce|info> [options]\n\
      \n\
-     generate  --out data/synth.csv [--scale 0.2] [--configs 24] [--seed N]\n\
+     generate  --out data/synth.csv [--device m2090] [--scale 0.2]\n\
+               [--configs 24] [--seed N]\n\
                [--shards N --out-dir data/shards]  (streamed, sharded CSV)\n\
-     train     --model models/rf.txt [--data data/synth.csv] [--scale 0.2]\n\
-               [--configs 24] [--trees 20] [--mtry 4] [--train-frac 0.1]\n\
+     train     --model models/rf.txt [--device m2090] [--data data/synth.csv]\n\
+               [--scale 0.2] [--configs 24] [--trees 20] [--mtry 4]\n\
+               [--train-frac 0.1]\n\
                [--shards N --out-dir data/shards --train-cap 50000]\n\
                (--shards streams the dataset to disk: bounded memory at\n\
                 any --scale; the forest fits on a reservoir sample)\n\
+     crossdev  [--devices m2090,gtx480,gtx680,k20] [--out data/crossdev.csv]\n\
+               [--scale 0.05] [--configs 8] [--train-frac 0.1] [--seed N]\n\
+               (train-on-A/test-on-B accuracy matrix over the portfolio)\n\
      eval      --model models/rf.txt [--data data/synth.csv] [--real]\n\
+               [--device KEY]  (must match the dataset's stamped device)\n\
      predict   --model models/rf.txt --features f1,...,f18 [--artifacts DIR]\n\
-     serve     --model models/rf.txt [--backend auto|native|pjrt]\n\
-               [--artifacts artifacts] [--requests N] [--batch 4096]\n\
-               [--wait-us 200] [--workers 1]\n\
+     serve     --model models/rf.txt [--device m2090]\n\
+               [--backend auto|native|pjrt] [--artifacts artifacts]\n\
+               [--requests N] [--batch 4096] [--wait-us 200] [--workers 1]\n\
      reproduce --figure fig1|fig6|table1|table2|table3|all [--scale 0.2]\n\
-     info      [--artifacts artifacts]"
+               [--device m2090]\n\
+     info      [--artifacts artifacts]  (lists the device portfolio)"
+}
+
+/// Resolve `--device` against the registry (default: the paper's M2090).
+fn device_arg(args: &mut Args) -> Result<DeviceSpec> {
+    match args.opt_str("device") {
+        Some(key) => registry::get(&key),
+        None => Ok(registry::default_device()),
+    }
 }
 
 fn run() -> Result<()> {
     let mut args = Args::parse_env().map_err(|e| anyhow::anyhow!(e))?;
-    let dev = DeviceSpec::m2090();
     let cmd = args.subcommand().map(str::to_string);
     match cmd.as_deref() {
-        Some("generate") => cmd_generate(&mut args, &dev),
-        Some("train") => cmd_train(&mut args, &dev),
-        Some("eval") => cmd_eval(&mut args, &dev),
+        Some("generate") => cmd_generate(&mut args),
+        Some("train") => cmd_train(&mut args),
+        Some("crossdev") => cmd_crossdev(&mut args),
+        Some("eval") => cmd_eval(&mut args),
         Some("predict") => cmd_predict(&mut args),
         Some("serve") => cmd_serve(&mut args),
-        Some("reproduce") => cmd_reproduce(&mut args, &dev),
-        Some("info") => cmd_info(&mut args, &dev),
+        Some("reproduce") => cmd_reproduce(&mut args),
+        Some("info") => cmd_info(&mut args),
         _ => {
             println!("{}", usage());
             Ok(())
@@ -107,7 +128,8 @@ fn progress_printer() -> impl FnMut(&lmtuner::synth::dataset::BuildProgress) {
     }
 }
 
-fn cmd_generate(args: &mut Args, dev: &DeviceSpec) -> Result<()> {
+fn cmd_generate(args: &mut Args) -> Result<()> {
+    let dev = &device_arg(args)?;
     let out_explicit = args.opt_str("out");
     let out = PathBuf::from(out_explicit.as_deref().unwrap_or("data/synth.csv"));
     let shards: Option<usize> = args.get("shards").map_err(anyhow::Error::msg)?;
@@ -127,6 +149,7 @@ fn cmd_generate(args: &mut Args, dev: &DeviceSpec) -> Result<()> {
         bail!("--out-dir requires --shards N (single-file output uses --out)");
     }
 
+    println!("device: {} ({})", dev.name, dev.key);
     let mut rng = Rng::new(cfg.seed);
     let templates = lmtuner::synth::generator::generate(&mut rng, cfg.scale);
     let sweep = lmtuner::synth::sweep::LaunchSweep::new(2048, 2048);
@@ -134,15 +157,17 @@ fn cmd_generate(args: &mut Args, dev: &DeviceSpec) -> Result<()> {
     let mut progress = progress_printer();
     let summary = if let Some(shards) = shards {
         // Streamed, sharded build: bounded memory at any scale.
-        let mut sink = lmtuner::synth::sink::ShardedCsvSink::create(&out_dir, shards)?;
+        let mut sink =
+            lmtuner::synth::sink::ShardedCsvSink::create(&out_dir, shards, dev.key)?;
         let summary = dataset::build_streaming(
             &templates, &sweep, dev, &build, &mut sink, Some(&mut progress),
         )?;
         println!(
-            "wrote {} instances to {} ({} shards)",
+            "wrote {} instances to {} ({} shards, device {})",
             sink.written(),
             out_dir.display(),
-            sink.shards()
+            sink.shards(),
+            sink.device()
         );
         summary
     } else {
@@ -153,7 +178,7 @@ fn cmd_generate(args: &mut Args, dev: &DeviceSpec) -> Result<()> {
         if let Some(dir) = out.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        dataset::save(&sink.records, &out)?;
+        dataset::save(&sink.records, &out, dev.key)?;
         println!("wrote {} instances to {}", sink.records.len(), out.display());
         summary
     };
@@ -166,7 +191,8 @@ fn cmd_generate(args: &mut Args, dev: &DeviceSpec) -> Result<()> {
     Ok(())
 }
 
-fn cmd_train(args: &mut Args, dev: &DeviceSpec) -> Result<()> {
+fn cmd_train(args: &mut Args) -> Result<()> {
+    let dev = &device_arg(args)?;
     let model_path = PathBuf::from(args.str_or("model", "models/rf.txt"));
     let data_path = args.opt_str("data").map(PathBuf::from);
     let shards: Option<usize> = args.get("shards").map_err(anyhow::Error::msg)?;
@@ -208,7 +234,9 @@ fn cmd_train(args: &mut Args, dev: &DeviceSpec) -> Result<()> {
     }
 
     println!(
-        "training: scale={} configs/kernel={} trees={} mtry={} train-frac={}",
+        "training on {} ({}): scale={} configs/kernel={} trees={} mtry={} train-frac={}",
+        dev.name,
+        dev.key,
         cfg.scale,
         cfg.configs_per_kernel,
         cfg.forest.num_trees,
@@ -261,7 +289,57 @@ fn cmd_train(args: &mut Args, dev: &DeviceSpec) -> Result<()> {
     Ok(())
 }
 
-fn cmd_eval(args: &mut Args, dev: &DeviceSpec) -> Result<()> {
+fn cmd_crossdev(args: &mut Args) -> Result<()> {
+    let devices_arg = args.str_or("devices", "");
+    let out = PathBuf::from(args.str_or("out", "data/crossdev.csv"));
+    let mut base = TrainConfig {
+        scale: args.get_or("scale", 0.05).map_err(anyhow::Error::msg)?,
+        configs_per_kernel: args.get_or("configs", 8).map_err(anyhow::Error::msg)?,
+        train_fraction: args.get_or("train-frac", 0.10).map_err(anyhow::Error::msg)?,
+        seed: args.get_or("seed", 0x5EEDu64).map_err(anyhow::Error::msg)?,
+        ..TrainConfig::default()
+    };
+    base.forest.num_trees = args.get_or("trees", 20).map_err(anyhow::Error::msg)?;
+    base.forest.tree.mtry = args.get_or("mtry", 4).map_err(anyhow::Error::msg)?;
+    if args.flag("no-noise") {
+        base.measure = MeasureConfig::deterministic();
+    }
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let devices = if devices_arg.is_empty() {
+        registry::all()
+    } else {
+        devices_arg
+            .split(',')
+            .map(registry::get)
+            .collect::<Result<Vec<_>>>()?
+    };
+    println!(
+        "cross-device matrix over [{}] at scale {} x {} configs/kernel",
+        devices.iter().map(|d| d.key).collect::<Vec<_>>().join(", "),
+        base.scale,
+        base.configs_per_kernel
+    );
+    let t0 = std::time::Instant::now();
+    let matrix = crossdev::run_with_progress(
+        &crossdev::CrossDevConfig { base, devices },
+        |stage| eprintln!("  {stage}"),
+    )?;
+    print!("{}", matrix.render());
+    matrix.to_csv(&out)?;
+    println!(
+        "matrix written to {} ({} devices, held-out rows {:?}) in {:.1}s",
+        out.display(),
+        matrix.n(),
+        matrix.test_rows,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_eval(args: &mut Args) -> Result<()> {
+    let device_explicit = args.opt_str("device");
+    let dev = &device_arg(args)?;
     let model_path = PathBuf::from(args.str_or("model", "models/rf.txt"));
     let data = args.opt_str("data").map(PathBuf::from);
     let real = args.flag("real");
@@ -269,7 +347,21 @@ fn cmd_eval(args: &mut Args, dev: &DeviceSpec) -> Result<()> {
 
     let forest = model_io::load(&model_path)?;
     if let Some(p) = data {
-        let records = dataset::load(&p)?;
+        let (records, tagged) = dataset::load_tagged(&p)?;
+        // Refuse to grade a dataset measured on a different device than
+        // the one explicitly requested — the labels would not match the
+        // testbed the caller thinks they are evaluating.
+        if let (Some(_), Some(found)) = (&device_explicit, &tagged) {
+            lmtuner::synth::sink::ensure_same_device(
+                dev.key,
+                found,
+                p.display().to_string(),
+            )?;
+        }
+        match &tagged {
+            Some(d) => println!("dataset device: {d}"),
+            None => println!("dataset device: <unstamped legacy file>"),
+        }
         let refs: Vec<_> = records.iter().collect();
         let acc = metrics::evaluate_model(&refs, |x| forest.decide(x));
         println!(
@@ -282,6 +374,7 @@ fn cmd_eval(args: &mut Args, dev: &DeviceSpec) -> Result<()> {
         );
     }
     if real {
+        println!("real benchmarks on {} ({})", dev.name, dev.key);
         let per = train::evaluate_real(dev, &forest, &MeasureConfig::default());
         for (name, a) in &per {
             println!(
@@ -341,6 +434,7 @@ fn cmd_predict(args: &mut Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &mut Args) -> Result<()> {
+    let dev = device_arg(args)?;
     let model_path = PathBuf::from(args.str_or("model", "models/rf.txt"));
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
     let backend = args.str_or("backend", "auto");
@@ -390,8 +484,8 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     println!("serving via the {served_by} backend ({workers} worker shard(s))");
     let h = svc.handle();
 
-    // Demo load: replay the real-benchmark instance stream.
-    let dev = DeviceSpec::m2090();
+    // Demo load: replay the real-benchmark instance stream for the
+    // selected device.
     let mut stream: Vec<[f64; NUM_FEATURES]> = Vec::new();
     for b in lmtuner::workloads::all() {
         for d in (b.instances)(&dev) {
@@ -449,7 +543,8 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_reproduce(args: &mut Args, dev: &DeviceSpec) -> Result<()> {
+fn cmd_reproduce(args: &mut Args) -> Result<()> {
+    let dev = &device_arg(args)?;
     let figure = args.str_or("figure", "all");
     let cfg = train_config(args)?;
     args.finish().map_err(anyhow::Error::msg)?;
@@ -478,17 +573,25 @@ fn cmd_reproduce(args: &mut Args, dev: &DeviceSpec) -> Result<()> {
     Ok(())
 }
 
-fn cmd_info(args: &mut Args, dev: &DeviceSpec) -> Result<()> {
+fn cmd_info(args: &mut Args) -> Result<()> {
+    let dev = device_arg(args)?;
     let artifacts = PathBuf::from(args.str_or("artifacts", "artifacts"));
     args.finish().map_err(anyhow::Error::msg)?;
     println!("lmtuner {}", lmtuner::version());
-    println!(
-        "device model: {} ({} SMs, {} KB lmem/SM, {:.0} GB/s)",
-        dev.name,
-        dev.num_sms,
-        dev.shared_mem_per_sm / 1024,
-        dev.mem_bandwidth / 1e9
-    );
+    println!("device portfolio ({} registered):", registry::all().len());
+    for d in registry::all() {
+        let marker = if d.key == dev.key { "*" } else { " " };
+        println!(
+            " {marker} {:<8} {} (CC {}.{}, {} SMs, {} KB lmem/SM, {:.0} GB/s)",
+            d.key,
+            d.name,
+            d.compute_capability.0,
+            d.compute_capability.1,
+            d.num_sms,
+            d.shared_mem_per_sm / 1024,
+            d.mem_bandwidth / 1e9
+        );
+    }
     println!("features ({}): {}", NUM_FEATURES, FEATURE_NAMES.join(", "));
     match Engine::new(&artifacts) {
         Ok(engine) => {

@@ -91,6 +91,52 @@ impl NativeForestExecutor {
     }
 }
 
+/// Per-device registry of encoded forests: one serving process holds a
+/// model per simulated device and builds executors that share the
+/// underlying tensor tables (`Arc`), so routing a batch by device never
+/// copies a forest. Keys are `gpu::registry` device slugs; iteration
+/// order is sorted (BTreeMap), so shard layouts are deterministic.
+#[derive(Default)]
+pub struct ForestRegistry {
+    map: std::collections::BTreeMap<String, Arc<EncodedForest>>,
+}
+
+impl ForestRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register (or replace) the model serving `device`.
+    pub fn insert(&mut self, device: impl Into<String>, forest: EncodedForest) {
+        self.map.insert(device.into(), Arc::new(forest));
+    }
+
+    pub fn get(&self, device: &str) -> Option<&Arc<EncodedForest>> {
+        self.map.get(device)
+    }
+
+    /// Build a native executor over `device`'s model, sharing the
+    /// forest tables with every other executor built from this entry.
+    pub fn executor_for(&self, device: &str) -> Option<NativeForestExecutor> {
+        self.map
+            .get(device)
+            .map(|f| NativeForestExecutor::from_shared(f.clone()))
+    }
+
+    /// Registered device keys, sorted.
+    pub fn devices(&self) -> Vec<&str> {
+        self.map.keys().map(String::as_str).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+}
+
 impl BatchExecutor for NativeForestExecutor {
     fn backend(&self) -> &'static str {
         "native"
@@ -184,6 +230,38 @@ mod tests {
         let exec = NativeForestExecutor::new(enc);
         let err = exec.predict(&[vec![0.0; NUM_FEATURES - 1]]).unwrap_err();
         assert!(format!("{err}").contains("expected"));
+    }
+
+    #[test]
+    fn registry_routes_to_the_right_model_and_shares_tables() {
+        let enc_a = toy_encoded(31);
+        let enc_b = toy_encoded(37);
+        let mut reg = ForestRegistry::new();
+        reg.insert("m2090", enc_a.clone());
+        reg.insert("k20", enc_b.clone());
+        assert_eq!(reg.devices(), vec!["k20", "m2090"]); // sorted
+        assert_eq!(reg.len(), 2);
+
+        let rows = random_rows(32, 41);
+        let ea = reg.executor_for("m2090").unwrap();
+        let eb = reg.executor_for("k20").unwrap();
+        for r in &rows {
+            assert_eq!(ea.predict(&[r.clone()]).unwrap()[0], enc_a.predict(r));
+            assert_eq!(eb.predict(&[r.clone()]).unwrap()[0], enc_b.predict(r));
+        }
+        // distinct models actually disagree somewhere
+        assert!(
+            rows.iter().any(|r| enc_a.predict(r) != enc_b.predict(r)),
+            "toy forests were identical; routing untestable"
+        );
+        // unknown device -> None, not a panic
+        assert!(reg.executor_for("gtx9000").is_none());
+        // executors share one copy of each forest
+        let again = reg.executor_for("m2090").unwrap();
+        assert!(Arc::ptr_eq(
+            &again.forest,
+            reg.get("m2090").unwrap()
+        ));
     }
 
     #[test]

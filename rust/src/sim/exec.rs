@@ -48,17 +48,27 @@ impl SpeedupRecord {
 
     /// Rebuild from a persisted row (`csv_row` layout). The raw times
     /// are not stored on disk, so they come back as NaN.
-    pub fn from_csv_row(name: String, row: &[f64]) -> Self {
-        debug_assert_eq!(row.len(), NUM_FEATURES + 1);
+    ///
+    /// Row width is validated in every build profile: a short row is a
+    /// typed `Err`, never a `copy_from_slice` panic, and an over-long
+    /// row (which a `debug_assert` would silently accept in release
+    /// builds) is rejected the same way.
+    pub fn from_csv_row(name: String, row: &[f64]) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            row.len() == NUM_FEATURES + 1,
+            "record '{name}': row has {} columns, expected {} (features + speedup)",
+            row.len(),
+            NUM_FEATURES + 1
+        );
         let mut features = [0.0; NUM_FEATURES];
         features.copy_from_slice(&row[..NUM_FEATURES]);
-        SpeedupRecord {
+        Ok(SpeedupRecord {
             name,
             features,
             speedup: row[NUM_FEATURES],
             baseline_time: f64::NAN,
             optimized_time: f64::NAN,
-        }
+        })
     }
 }
 
@@ -194,10 +204,25 @@ mod tests {
         let r = record(HomePattern::NoReuseRow, (32, 2), 1, 8);
         let row = r.csv_row();
         assert_eq!(row.len(), crate::kernelmodel::features::NUM_FEATURES + 1);
-        let back = SpeedupRecord::from_csv_row("x".into(), &row);
+        let back = SpeedupRecord::from_csv_row("x".into(), &row).unwrap();
         assert_eq!(back.features, r.features);
         assert_eq!(back.speedup, r.speedup);
         assert!(back.baseline_time.is_nan());
+    }
+
+    #[test]
+    fn malformed_rows_are_errors_not_panics() {
+        // Short row: would have been a copy_from_slice panic in release
+        // builds under the old debug_assert-only check.
+        let short = vec![1.0; crate::kernelmodel::features::NUM_FEATURES - 3];
+        let err = SpeedupRecord::from_csv_row("short".into(), &short).unwrap_err();
+        assert!(format!("{err:#}").contains("expected"), "{err:#}");
+        // Over-long row: silently truncating it would mis-parse the
+        // speedup column; it must be rejected too.
+        let long = vec![1.0; crate::kernelmodel::features::NUM_FEATURES + 5];
+        assert!(SpeedupRecord::from_csv_row("long".into(), &long).is_err());
+        // Empty row.
+        assert!(SpeedupRecord::from_csv_row("empty".into(), &[]).is_err());
     }
 
     #[test]

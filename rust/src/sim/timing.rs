@@ -14,7 +14,12 @@
 //!              "drop in parallelism" harm of paper §3).
 //!
 //! cycles/round/SM = max(issue, bandwidth, latency); kernel time scales by
-//! rounds per workitem and block waves per SM.
+//! rounds per workitem and block waves per SM. Waves are counted
+//! exactly: full waves at the occupancy-limited residency plus at most
+//! one residual wave at the leftover blocks' own (lower) residency, so a
+//! grid that overfills the device by one block pays one extra block's
+//! time, not a whole extra wave. `Bound` attribution is deterministic on
+//! exact ties (Bandwidth > Issue > Latency, see `classify_bound`).
 //!
 //! ## Baseline cache model
 //!
@@ -206,15 +211,8 @@ pub fn simulate(d: &KernelDescriptor, dev: &DeviceSpec, v: Variant) -> SimResult
         };
     }
 
-    // Resident blocks are bounded by occupancy AND by how many blocks the
-    // launch actually provides per SM (a 64-block grid never fills 6
-    // blocks/SM on 16 SMs).
-    let total_blocks = d.launch.total_groups();
-    let launched_per_sm =
-        (total_blocks as f64 / dev.num_sms as f64).ceil().max(1.0) as u32;
-    let resident_blocks = occ.blocks_per_sm.min(launched_per_sm);
+    let total_blocks = d.launch.total_groups().max(1);
     let warps_per_block = dev.warps_for_threads(d.launch.wg.size()) as f64;
-    let w = resident_blocks as f64 * warps_per_block;
 
     // Barrier cost: fixed pipeline drain + reconvergence over the block's
     // warps, paid once per barrier per round.
@@ -231,24 +229,51 @@ pub fn simulate(d: &KernelDescriptor, dev: &DeviceSpec, v: Variant) -> SimResult
     let stall = profile.gmem_insts * profile.avg_gmem_latency / mlp(d)
         + profile.smem_insts * dev.smem_latency / 4.0;
 
-    let issue = w * issue_per_warp;
-    let bandwidth = w * profile.gmem_tx * dev.tx_departure_cycles();
-    let latency = issue_per_warp + stall;
-
-    let cycles = issue.max(bandwidth).max(latency);
-    let bound = if cycles == bandwidth {
-        Bound::Bandwidth
-    } else if cycles == issue {
-        Bound::Issue
-    } else {
-        Bound::Latency
+    // Per-wave cycles for a given residency: issue and bandwidth scale
+    // with the resident warps, the latency floor does not.
+    let cycles_for = |resident_blocks: u32| -> f64 {
+        let w = resident_blocks as f64 * warps_per_block;
+        let issue = w * issue_per_warp;
+        let bandwidth = w * profile.gmem_tx * dev.tx_departure_cycles();
+        let latency = issue_per_warp + stall;
+        issue.max(bandwidth).max(latency)
     };
 
-    // Block waves over the whole device.
-    let concurrent = (resident_blocks * dev.num_sms) as f64;
-    let waves = (total_blocks as f64 / concurrent).ceil().max(1.0);
+    // Wave accounting: the launch fills the device with
+    // `blocks_per_sm * num_sms` blocks per full wave; whatever remains
+    // runs as ONE residual wave at its own (lower) residency instead of
+    // being billed as another full wave. A 17-block grid on 16 SMs is a
+    // single wave whose busiest SM holds 2 blocks — not 32 blocks of
+    // work; a 33-block grid is one full wave plus a 1-block/SM residual,
+    // not two full waves. This keeps simulated time monotone
+    // non-decreasing in the grid's block count (tested below).
+    let per_wave = occ.blocks_per_sm as u64 * dev.num_sms as u64;
+    let full_waves = total_blocks / per_wave;
+    let residual_blocks = total_blocks - full_waves * per_wave;
+    let residual_per_sm =
+        residual_blocks.div_ceil(dev.num_sms as u64).min(u32::MAX as u64) as u32;
 
-    let total_cycles = cycles * d.wus_per_wi as f64 * waves;
+    // The steady-state residency reported in `cycles_per_round` / `bound`
+    // is the full wave's when one exists, else the single partial wave's.
+    let steady_blocks = if full_waves > 0 {
+        occ.blocks_per_sm
+    } else {
+        residual_per_sm
+    };
+    let cycles = cycles_for(steady_blocks);
+    let w = steady_blocks as f64 * warps_per_block;
+    let bound = classify_bound(
+        w * issue_per_warp,
+        w * profile.gmem_tx * dev.tx_departure_cycles(),
+        issue_per_warp + stall,
+    );
+
+    let mut wave_cycles = full_waves as f64 * cycles_for(occ.blocks_per_sm);
+    if residual_per_sm > 0 {
+        wave_cycles += cycles_for(residual_per_sm);
+    }
+
+    let total_cycles = wave_cycles * d.wus_per_wi as f64;
     SimResult {
         time_s: total_cycles / dev.clock_hz,
         cycles_per_round: cycles,
@@ -256,6 +281,22 @@ pub fn simulate(d: &KernelDescriptor, dev: &DeviceSpec, v: Variant) -> SimResult
         bound,
         profile,
         cache_hit,
+    }
+}
+
+/// Deterministic regime attribution for one wave's cycle count. On exact
+/// ties the documented order is Bandwidth > Issue > Latency: when two
+/// regimes cost the same, the one earlier in that order is reported, so
+/// attribution can never flip between runs (or platforms) on an equal
+/// `max`.
+fn classify_bound(issue: f64, bandwidth: f64, latency: f64) -> Bound {
+    let c = issue.max(bandwidth).max(latency);
+    if bandwidth == c {
+        Bound::Bandwidth
+    } else if issue == c {
+        Bound::Issue
+    } else {
+        Bound::Latency
     }
 }
 
@@ -391,6 +432,92 @@ mod tests {
         let base = simulate(&d, &dev(), Variant::Baseline);
         let opt = simulate(&d, &dev(), Variant::Optimized);
         assert!(opt.occupancy.warps_per_sm < base.occupancy.warps_per_sm);
+    }
+
+    #[test]
+    fn bound_tie_order_is_bandwidth_issue_latency() {
+        use super::classify_bound;
+        // exact three-way tie -> Bandwidth
+        assert_eq!(classify_bound(2.0, 2.0, 2.0), Bound::Bandwidth);
+        // issue/bandwidth tie -> Bandwidth
+        assert_eq!(classify_bound(3.0, 3.0, 1.0), Bound::Bandwidth);
+        // issue/latency tie above bandwidth -> Issue
+        assert_eq!(classify_bound(3.0, 1.0, 3.0), Bound::Issue);
+        // strict maxima keep their own label
+        assert_eq!(classify_bound(5.0, 1.0, 1.0), Bound::Issue);
+        assert_eq!(classify_bound(1.0, 5.0, 1.0), Bound::Bandwidth);
+        assert_eq!(classify_bound(1.0, 1.0, 5.0), Bound::Latency);
+    }
+
+    #[test]
+    fn time_is_monotone_in_total_groups() {
+        // Fixed per-round work and fixed wus_per_wi (descriptor built
+        // directly, so growing the grid does not shrink the per-item
+        // rounds): simulated time must be non-decreasing in the block
+        // count, including across full-wave boundaries.
+        let dev = dev();
+        let base = {
+            let launch = Launch::new(
+                WgGeom { w: 16, h: 8 },
+                GridGeom { w: 128, h: 128 },
+            );
+            Template::base().descriptor(&launch, &dev)
+        };
+        let mut last = 0.0f64;
+        let mut last_groups = 0u64;
+        for gh in [128u32, 256, 512, 1024, 2048, 4096] {
+            for gw in [128u32, 256] {
+                let mut d = base.clone();
+                d.launch.grid = GridGeom { w: gw, h: gh };
+                let groups = d.launch.total_groups();
+                let r = simulate(&d, &dev, Variant::Baseline);
+                assert!(r.feasible());
+                if groups >= last_groups {
+                    assert!(
+                        r.time_s >= last * (1.0 - 1e-12),
+                        "time dropped from {last} to {} when groups grew \
+                         {last_groups} -> {groups}",
+                        r.time_s
+                    );
+                    last = r.time_s;
+                    last_groups = groups;
+                }
+            }
+        }
+        assert!(last_groups > 0);
+    }
+
+    #[test]
+    fn residual_wave_is_cheaper_than_a_full_wave() {
+        // One block past an exact multiple of the device's concurrent
+        // capacity must cost less than a whole extra wave.
+        let dev = dev();
+        let launch = Launch::new(
+            WgGeom { w: 16, h: 8 },
+            GridGeom { w: 128, h: 128 },
+        );
+        let base = Template::base().descriptor(&launch, &dev);
+        let occ = occupancy(&dev, &block_usage(&base, Variant::Baseline));
+        let per_wave = (occ.blocks_per_sm * dev.num_sms) as u64;
+        assert!(per_wave > 1);
+
+        // grid sized to exactly two full waves, in blocks of 128 threads
+        let mk = |groups: u64| {
+            let mut d = base.clone();
+            // wg 16x8 => groups = (gw/16)*(gh/8); encode groups on one axis
+            d.launch.grid = GridGeom { w: 16 * groups as u32, h: 8 };
+            d
+        };
+        let exact = simulate(&mk(2 * per_wave), &dev, Variant::Baseline);
+        let plus_one = simulate(&mk(2 * per_wave + 1), &dev, Variant::Baseline);
+        let three_waves = simulate(&mk(3 * per_wave), &dev, Variant::Baseline);
+        assert!(plus_one.time_s > exact.time_s, "extra block must cost time");
+        assert!(
+            plus_one.time_s < three_waves.time_s,
+            "one extra block ({}) must cost less than a full extra wave ({})",
+            plus_one.time_s,
+            three_waves.time_s
+        );
     }
 
     #[test]

@@ -20,7 +20,7 @@
 use std::path::Path;
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
 
 use crate::gpu::spec::DeviceSpec;
 use crate::kernelmodel::features::{FEATURE_NAMES, NUM_FEATURES};
@@ -199,35 +199,49 @@ pub fn csv_header() -> Vec<&'static str> {
     h
 }
 
-pub fn save(records: &[SpeedupRecord], path: &Path) -> Result<()> {
-    let rows: Vec<Vec<f64>> = records.iter().map(|r| r.csv_row()).collect();
-    csv::write_table(path, &csv_header(), &rows)
+/// Persist records as CSV, stamped with the simulated device they were
+/// measured on (a `# device=<key>` metadata line ahead of the header).
+pub fn save(records: &[SpeedupRecord], path: &Path, device: &str) -> Result<()> {
+    let mut w = csv::RowWriter::create_with_meta(
+        path,
+        &csv_header(),
+        &[(sink::DEVICE_META_KEY, device)],
+    )?;
+    for r in records {
+        w.write_row(&r.csv_row())?;
+    }
+    w.finish()
 }
 
 pub fn load(path: &Path) -> Result<Vec<SpeedupRecord>> {
-    let (header, rows) = csv::read_table(path)?;
+    Ok(load_tagged(path)?.0)
+}
+
+/// Load a dataset plus its stamped device (`None` for files written
+/// before device stamping).
+pub fn load_tagged(path: &Path) -> Result<(Vec<SpeedupRecord>, Option<String>)> {
+    let mut reader = csv::RowReader::open(path)?;
     anyhow::ensure!(
-        header.len() == NUM_FEATURES + 1,
+        reader.header().len() == NUM_FEATURES + 1,
         "{}: expected {} columns, got {}",
         path.display(),
         NUM_FEATURES + 1,
-        header.len()
+        reader.header().len()
     );
-    let mut out = Vec::with_capacity(rows.len());
-    for (i, row) in rows.into_iter().enumerate() {
-        // Validate each row independently of the reader's invariants so
-        // short/ragged rows are an Err, never a copy_from_slice panic.
-        anyhow::ensure!(
-            row.len() == NUM_FEATURES + 1,
-            "{}:{}: row has {} columns, expected {}",
-            path.display(),
-            i + 2,
-            row.len(),
-            NUM_FEATURES + 1
+    let device = reader.meta().get(sink::DEVICE_META_KEY).cloned();
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while let Some(row) = reader.next_row()? {
+        // from_csv_row re-validates the width, so short/ragged rows are
+        // an Err whatever the reader's own invariants — never a
+        // copy_from_slice panic.
+        out.push(
+            SpeedupRecord::from_csv_row(format!("row{i}"), &row)
+                .with_context(|| path.display().to_string())?,
         );
-        out.push(SpeedupRecord::from_csv_row(format!("row{i}"), &row));
+        i += 1;
     }
-    Ok(out)
+    Ok((out, device))
 }
 
 /// Split records into train/test by random permutation (paper: train on
@@ -351,18 +365,28 @@ mod tests {
     }
 
     #[test]
-    fn save_load_roundtrip() {
+    fn save_load_roundtrip_with_device_tag() {
         let recs = small_dataset();
         let path = std::env::temp_dir()
             .join(format!("lmtuner-ds-{}.csv", std::process::id()));
-        save(&recs, &path).unwrap();
-        let back = load(&path).unwrap();
+        save(&recs, &path, "m2090").unwrap();
+        let (back, device) = load_tagged(&path).unwrap();
+        assert_eq!(device.as_deref(), Some("m2090"));
         assert_eq!(back.len(), recs.len());
         for (a, b) in recs.iter().zip(&back) {
             assert_eq!(a.features, b.features);
             assert!((a.speedup - b.speedup).abs() < 1e-9);
         }
+        // plain load still works and untagged legacy files load as None
+        assert_eq!(load(&path).unwrap().len(), recs.len());
+        let body = std::fs::read_to_string(&path).unwrap();
+        let untagged = std::env::temp_dir()
+            .join(format!("lmtuner-ds-untagged-{}.csv", std::process::id()));
+        std::fs::write(&untagged, body.replace("# device=m2090\n", "")).unwrap();
+        let (_, device) = load_tagged(&untagged).unwrap();
+        assert_eq!(device, None);
         std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&untagged).ok();
     }
 
     #[test]
@@ -427,7 +451,7 @@ mod tests {
         let reference = build(&templates, &sweep, &dev, &cfg);
         let dir = std::env::temp_dir()
             .join(format!("lmtuner-ds-shards-{}", std::process::id()));
-        let mut s = sink::ShardedCsvSink::create(&dir, 3).unwrap();
+        let mut s = sink::ShardedCsvSink::create(&dir, 3, dev.key).unwrap();
         build_streaming(&templates, &sweep, &dev, &cfg, &mut s, None).unwrap();
         assert_eq!(s.written() as usize, reference.len());
         let back = sink::load_sharded(&dir).unwrap();

@@ -10,7 +10,9 @@
 //! * [`ShardedCsvSink`] — append records round-robin across N CSV
 //!   shards on disk; peak memory is one row. [`load_sharded`] restores
 //!   the exact stream order, [`stream_sharded`] replays it row-by-row
-//!   without materializing anything.
+//!   without materializing anything. Every shard is stamped with the
+//!   simulated device it was measured on (`# device=<key>`); readers
+//!   refuse to mix shards from different devices ([`DeviceMismatch`]).
 //! * [`ReservoirSink`] — uniform reservoir sample of K records (with
 //!   their global stream indices), used to draw the training split
 //!   from a stream of unknown length.
@@ -22,6 +24,7 @@
 //! needs the full record set.
 
 use std::collections::HashSet;
+use std::fmt;
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
@@ -32,6 +35,61 @@ use crate::util::csv::{RowReader, RowWriter};
 use crate::util::prng::Rng;
 
 use super::dataset::csv_header;
+
+/// Metadata key under which shard/dataset CSVs carry the simulated
+/// device they were measured on (see `util::csv` `# key=value` lines).
+pub const DEVICE_META_KEY: &str = "device";
+
+/// Typed error: data measured on different simulated devices was mixed,
+/// or a dataset's stamped device does not match the one requested.
+/// Training a model on rows from two devices would silently blend two
+/// different feature→label maps, so every reader enforces this.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DeviceMismatch {
+    pub expected: String,
+    pub found: String,
+    /// Where the mismatch was detected (a path or pipeline stage).
+    pub at: String,
+}
+
+impl fmt::Display for DeviceMismatch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "device mismatch at {}: expected '{}', found '{}'",
+            self.at, self.expected, self.found
+        )
+    }
+}
+
+impl std::error::Error for DeviceMismatch {}
+
+/// Enforce that `found` names the `expected` device; the `Err` is the
+/// typed [`DeviceMismatch`] (convertible into `anyhow::Error` with `?`).
+pub fn ensure_same_device(
+    expected: &str,
+    found: &str,
+    at: impl Into<String>,
+) -> std::result::Result<(), DeviceMismatch> {
+    if expected == found {
+        Ok(())
+    } else {
+        Err(DeviceMismatch {
+            expected: expected.to_string(),
+            found: found.to_string(),
+            at: at.into(),
+        })
+    }
+}
+
+/// What a sharded-dataset replay saw: the row count and the device the
+/// shards were stamped with (`None` for legacy shards written before
+/// device stamping).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardStream {
+    pub rows: u64,
+    pub device: Option<String>,
+}
 
 /// Consumer of the streaming dataset build. `accept` is called once
 /// per record in stream order; `finish` once after the last record.
@@ -90,21 +148,25 @@ pub fn shard_files(dir: &Path) -> Result<Vec<PathBuf>> {
 /// Write records round-robin across `shards` CSV files in `dir`: the
 /// record with global stream index `k` lands in shard `k % shards`.
 /// That assignment is what lets readers reconstruct the exact stream
-/// order by popping shards in rotation.
+/// order by popping shards in rotation. Every shard is stamped with the
+/// simulated device the records were measured on; readers refuse to
+/// interleave shards stamped with different devices.
 pub struct ShardedCsvSink {
     writers: Vec<RowWriter>,
+    device: String,
     next: usize,
     written: u64,
 }
 
 impl ShardedCsvSink {
-    pub fn create(dir: &Path, shards: usize) -> Result<Self> {
+    pub fn create(dir: &Path, shards: usize, device: &str) -> Result<Self> {
         let shards = shards.max(1);
         std::fs::create_dir_all(dir)
             .with_context(|| format!("create {}", dir.display()))?;
         let header = csv_header();
+        let meta = [(DEVICE_META_KEY, device)];
         let writers = (0..shards)
-            .map(|i| RowWriter::create(&shard_path(dir, i), &header))
+            .map(|i| RowWriter::create_with_meta(&shard_path(dir, i), &header, &meta))
             .collect::<Result<Vec<_>>>()?;
         // Remove stale higher-numbered shards from a previous run with
         // a larger shard count — readers enumerate shard-NNN.csv
@@ -119,7 +181,12 @@ impl ShardedCsvSink {
                 .with_context(|| format!("remove stale {}", stale.display()))?;
             i += 1;
         }
-        Ok(ShardedCsvSink { writers, next: 0, written: 0 })
+        Ok(ShardedCsvSink {
+            writers,
+            device: device.to_string(),
+            next: 0,
+            written: 0,
+        })
     }
 
     pub fn shards(&self) -> usize {
@@ -128,6 +195,11 @@ impl ShardedCsvSink {
 
     pub fn written(&self) -> u64 {
         self.written
+    }
+
+    /// The device key stamped into every shard.
+    pub fn device(&self) -> &str {
+        &self.device
     }
 }
 
@@ -150,13 +222,15 @@ impl RecordSink for ShardedCsvSink {
 /// Replay a sharded dataset's raw rows (`dataset::csv_header` layout:
 /// features then speedup) in original stream order, one row at a time
 /// (peak memory: one buffered line per shard). The callback gets the
-/// global stream index of each row. Returns the row count. Errors on
-/// ragged shards (an interrupted writer) instead of silently
-/// truncating.
+/// global stream index of each row. Returns the row count and the
+/// shards' stamped device. Errors on ragged shards (an interrupted
+/// writer) instead of silently truncating, and on shards stamped with
+/// different devices (the typed [`DeviceMismatch`]) instead of
+/// interleaving two testbeds' measurements.
 pub fn stream_sharded_rows(
     dir: &Path,
     mut f: impl FnMut(u64, Vec<f64>) -> Result<()>,
-) -> Result<u64> {
+) -> Result<ShardStream> {
     let files = shard_files(dir)?;
     let mut readers = files
         .iter()
@@ -172,6 +246,24 @@ pub fn stream_sharded_rows(
             Ok(r)
         })
         .collect::<Result<Vec<_>>>()?;
+    // All shards must agree on the device they were measured on. The
+    // first shard sets the expectation; any deviation (including a mix
+    // of stamped and unstamped files) is the typed error.
+    let device = readers[0].meta().get(DEVICE_META_KEY).cloned();
+    for (p, r) in files.iter().zip(&readers).skip(1) {
+        let found = r.meta().get(DEVICE_META_KEY).cloned();
+        if found != device {
+            let fmt_dev = |d: &Option<String>| {
+                d.clone().unwrap_or_else(|| "<unstamped>".to_string())
+            };
+            return Err(DeviceMismatch {
+                expected: fmt_dev(&device),
+                found: fmt_dev(&found),
+                at: p.display().to_string(),
+            }
+            .into());
+        }
+    }
     let mut idx = 0u64;
     // Round-robin pop: shard k%n holds record k, so one rotation over
     // the readers yields records idx, idx+1, ... in stream order. The
@@ -199,29 +291,37 @@ pub fn stream_sharded_rows(
             dir.display()
         );
     }
-    Ok(idx)
+    Ok(ShardStream { rows: idx, device })
 }
 
 /// Replay a sharded dataset as `SpeedupRecord`s in original stream
 /// order (see [`stream_sharded_rows`]). The callback gets the global
-/// stream index of each record. Returns the record count.
+/// stream index of each record. Returns the row count and stamped
+/// device.
 pub fn stream_sharded(
     dir: &Path,
     mut f: impl FnMut(u64, SpeedupRecord) -> Result<()>,
-) -> Result<u64> {
+) -> Result<ShardStream> {
     stream_sharded_rows(dir, |idx, row| {
-        f(idx, SpeedupRecord::from_csv_row(format!("row{idx}"), &row))
+        f(idx, SpeedupRecord::from_csv_row(format!("row{idx}"), &row)?)
     })
 }
 
 /// Load a sharded dataset back into memory in original stream order.
 pub fn load_sharded(dir: &Path) -> Result<Vec<SpeedupRecord>> {
+    Ok(load_sharded_tagged(dir)?.0)
+}
+
+/// Load a sharded dataset plus the device it was measured on.
+pub fn load_sharded_tagged(
+    dir: &Path,
+) -> Result<(Vec<SpeedupRecord>, Option<String>)> {
     let mut out = Vec::new();
-    stream_sharded(dir, |_, rec| {
+    let stream = stream_sharded(dir, |_, rec| {
         out.push(rec);
         Ok(())
     })?;
-    Ok(out)
+    Ok((out, stream.device))
 }
 
 /// Uniform reservoir sample (algorithm R) of `capacity` records from a
@@ -357,7 +457,7 @@ mod tests {
     fn sharded_roundtrip_preserves_stream_order() {
         for shards in [1usize, 3, 4] {
             let dir = tmpdir(&format!("rt{shards}"));
-            let mut sink = ShardedCsvSink::create(&dir, shards).unwrap();
+            let mut sink = ShardedCsvSink::create(&dir, shards, "m2090").unwrap();
             // 10 records: not a multiple of 3, so shard lengths
             // differ by one (a valid round-robin layout).
             for i in 0..10 {
@@ -376,29 +476,102 @@ mod tests {
     }
 
     #[test]
-    fn stream_sharded_reports_global_indices() {
+    fn stream_sharded_reports_global_indices_and_device() {
         let dir = tmpdir("idx");
-        let mut sink = ShardedCsvSink::create(&dir, 2).unwrap();
+        let mut sink = ShardedCsvSink::create(&dir, 2, "gtx480").unwrap();
+        assert_eq!(sink.device(), "gtx480");
         for i in 0..7 {
             sink.accept(&rec(i)).unwrap();
         }
         sink.finish().unwrap();
         let mut seen = Vec::new();
-        let n = stream_sharded(&dir, |idx, r| {
+        let stream = stream_sharded(&dir, |idx, r| {
             assert_eq!(r.features[0], idx as f64);
             seen.push(idx);
             Ok(())
         })
         .unwrap();
-        assert_eq!(n, 7);
+        assert_eq!(stream.rows, 7);
+        assert_eq!(stream.device.as_deref(), Some("gtx480"));
         assert_eq!(seen, (0..7).collect::<Vec<_>>());
+        let (back, dev) = load_sharded_tagged(&dir).unwrap();
+        assert_eq!(back.len(), 7);
+        assert_eq!(dev.as_deref(), Some("gtx480"));
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mixed_device_shards_are_a_typed_error() {
+        // Two shards written by runs on different devices must never
+        // interleave into one stream.
+        let dir = tmpdir("mix");
+        let mut sink = ShardedCsvSink::create(&dir, 2, "m2090").unwrap();
+        for i in 0..4 {
+            sink.accept(&rec(i)).unwrap();
+        }
+        sink.finish().unwrap();
+        // Restamp shard 1 as if it came from a K20 run.
+        let p = shard_path(&dir, 1);
+        let body = std::fs::read_to_string(&p).unwrap();
+        std::fs::write(&p, body.replace("# device=m2090", "# device=k20")).unwrap();
+
+        let err = load_sharded(&dir).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("device mismatch"), "{msg}");
+        assert!(msg.contains("m2090") && msg.contains("k20"), "{msg}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unstamped_legacy_shards_still_load() {
+        // Shards written before device stamping (no `# device=` line)
+        // must load with device=None, but mixing stamped and unstamped
+        // files is rejected.
+        let dir = tmpdir("legacy");
+        let mut sink = ShardedCsvSink::create(&dir, 2, "m2090").unwrap();
+        for i in 0..4 {
+            sink.accept(&rec(i)).unwrap();
+        }
+        sink.finish().unwrap();
+        for i in 0..2 {
+            let p = shard_path(&dir, i);
+            let body = std::fs::read_to_string(&p).unwrap();
+            std::fs::write(&p, body.replace("# device=m2090\n", "")).unwrap();
+        }
+        let stream = stream_sharded_rows(&dir, |_, _| Ok(())).unwrap();
+        assert_eq!(stream.rows, 4);
+        assert_eq!(stream.device, None);
+
+        // restore the stamp on shard 0 only -> mixed -> typed error
+        let p = shard_path(&dir, 1);
+        let body = std::fs::read_to_string(&p).unwrap();
+        std::fs::write(&p, format!("# device=m2090\n{body}")).unwrap();
+        let err = stream_sharded_rows(&dir, |_, _| Ok(())).unwrap_err();
+        assert!(format!("{err:#}").contains("device mismatch"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ensure_same_device_returns_the_typed_error() {
+        assert!(ensure_same_device("m2090", "m2090", "x").is_ok());
+        let err = ensure_same_device("m2090", "k20", "data/shards").unwrap_err();
+        assert_eq!(
+            err,
+            DeviceMismatch {
+                expected: "m2090".into(),
+                found: "k20".into(),
+                at: "data/shards".into(),
+            }
+        );
+        // and it converts into anyhow with the message intact
+        let any: anyhow::Error = err.into();
+        assert!(format!("{any}").contains("device mismatch"));
     }
 
     #[test]
     fn ragged_shards_are_rejected_not_truncated() {
         let dir = tmpdir("ragged");
-        let mut sink = ShardedCsvSink::create(&dir, 3).unwrap();
+        let mut sink = ShardedCsvSink::create(&dir, 3, "m2090").unwrap();
         for i in 0..5 {
             sink.accept(&rec(i)).unwrap();
         }
@@ -422,7 +595,7 @@ mod tests {
     #[test]
     fn recreating_with_fewer_shards_removes_stale_files() {
         let dir = tmpdir("stale");
-        let mut first = ShardedCsvSink::create(&dir, 4).unwrap();
+        let mut first = ShardedCsvSink::create(&dir, 4, "m2090").unwrap();
         for i in 0..10 {
             first.accept(&rec(i)).unwrap();
         }
@@ -430,7 +603,7 @@ mod tests {
 
         // Re-run into the same directory with fewer shards: the old
         // shard-002/003 files must not leak into the new stream.
-        let mut second = ShardedCsvSink::create(&dir, 2).unwrap();
+        let mut second = ShardedCsvSink::create(&dir, 2, "m2090").unwrap();
         for i in 100..106 {
             second.accept(&rec(i)).unwrap();
         }

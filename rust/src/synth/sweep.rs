@@ -70,24 +70,34 @@ impl LaunchSweep {
     /// Workgroup-balanced sample: `k` launches spread across distinct
     /// workgroup shapes first (so small samples still span the
     /// occupancy-relevant axis).
+    ///
+    /// Runs once per template (11200 times at paper scale), so it must
+    /// not touch the whole sweep: instead of cloning and fully shuffling
+    /// every bucket (the old implementation — O(sweep) clones + RNG
+    /// draws per call) it first computes how many launches each bucket
+    /// contributes, then draws exactly that many indices per bucket via
+    /// the sparse partial Fisher–Yates (`Rng::sample_indices_sparse`).
+    /// Total work is O(k + #buckets) per call. Deterministic for a fixed
+    /// seed: same RNG state, same sample.
     pub fn sampled_balanced(&self, rng: &mut Rng, k: usize) -> Vec<Launch> {
         if k >= self.all.len() {
             return self.all.clone();
         }
-        let mut buckets = self.wg_buckets.clone();
-        for b in buckets.iter_mut() {
-            rng.shuffle(b);
-        }
-        let mut out = Vec::with_capacity(k);
-        let mut round = 0;
-        while out.len() < k {
+        // Round-robin quota per bucket, in ascending (w, h) order: round
+        // r takes one launch from every bucket still holding > r, until
+        // k are assigned. Purely structural — no randomness involved.
+        let mut take = vec![0usize; self.wg_buckets.len()];
+        let mut assigned = 0usize;
+        let mut round = 0usize;
+        while assigned < k {
             let mut advanced = false;
-            for b in buckets.iter() {
-                if out.len() >= k {
+            for (t, bucket) in take.iter_mut().zip(&self.wg_buckets) {
+                if assigned >= k {
                     break;
                 }
-                if let Some(l) = b.get(round) {
-                    out.push(*l);
+                if round < bucket.len() {
+                    *t += 1;
+                    assigned += 1;
                     advanced = true;
                 }
             }
@@ -95,6 +105,24 @@ impl LaunchSweep {
                 break;
             }
             round += 1;
+        }
+        // Draw each bucket's quota without replacement, then interleave
+        // by round so the output still alternates workgroup shapes.
+        let picks: Vec<Vec<usize>> = self
+            .wg_buckets
+            .iter()
+            .zip(&take)
+            .map(|(bucket, &t)| rng.sample_indices_sparse(bucket.len(), t))
+            .collect();
+        let mut out = Vec::with_capacity(assigned);
+        let mut r = 0usize;
+        while out.len() < assigned {
+            for (bucket, p) in self.wg_buckets.iter().zip(&picks) {
+                if let Some(&i) = p.get(r) {
+                    out.push(bucket[i]);
+                }
+            }
+            r += 1;
         }
         out
     }
@@ -165,5 +193,38 @@ mod tests {
             s.iter().map(|l| (l.wg.w, l.wg.h)).collect();
         // at least half the distinct workgroup shapes show up
         assert!(wgs.len() >= 30, "only {} wg shapes", wgs.len());
+    }
+
+    #[test]
+    fn balanced_sample_is_exact_distinct_and_deterministic() {
+        let sweep = LaunchSweep::new(2048, 2048);
+        for k in [1usize, 13, 48, 200, sweep.len() - 1] {
+            let a = sweep.sampled_balanced(&mut Rng::new(99), k);
+            let b = sweep.sampled_balanced(&mut Rng::new(99), k);
+            assert_eq!(a.len(), k);
+            assert_eq!(a, b, "same seed must reproduce the sample (k={k})");
+            let mut set = std::collections::HashSet::new();
+            for l in &a {
+                assert!(
+                    set.insert((l.wg.w, l.wg.h, l.grid.w, l.grid.h)),
+                    "duplicate launch in balanced sample (k={k})"
+                );
+            }
+        }
+        // different seeds draw different samples (overwhelmingly likely)
+        let a = sweep.sampled_balanced(&mut Rng::new(1), 48);
+        let b = sweep.sampled_balanced(&mut Rng::new(2), 48);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn balanced_sample_k_at_or_above_len_returns_all() {
+        let sweep = LaunchSweep::new(2048, 2048);
+        let mut rng = Rng::new(3);
+        assert_eq!(sweep.sampled_balanced(&mut rng, sweep.len()).len(), sweep.len());
+        assert_eq!(
+            sweep.sampled_balanced(&mut rng, usize::MAX).len(),
+            sweep.len()
+        );
     }
 }

@@ -8,7 +8,14 @@
 //!   pass reads them back the same way (peak memory: one row).
 //! * `write_table` / `read_table` — whole-table convenience wrappers
 //!   over the streaming layer, used for small reports and models.
+//!
+//! Files may carry metadata as `# key=value` comment lines *before* the
+//! header (`RowWriter::create_with_meta` writes them, `RowReader::meta`
+//! exposes them). The dataset layer uses this to stamp which simulated
+//! device a dataset was measured on; files without metadata lines parse
+//! exactly as before.
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, BufWriter, Lines, Write};
 use std::path::{Path, PathBuf};
 
@@ -37,9 +44,26 @@ pub struct RowWriter {
 
 impl RowWriter {
     pub fn create(path: &Path, header: &[&str]) -> Result<Self> {
+        Self::create_with_meta(path, header, &[])
+    }
+
+    /// Create with `# key=value` metadata lines ahead of the header.
+    /// Keys and values must not contain newlines; keys must not be
+    /// empty or contain '='.
+    pub fn create_with_meta(
+        path: &Path,
+        header: &[&str],
+        meta: &[(&str, &str)],
+    ) -> Result<Self> {
         let f = std::fs::File::create(path)
             .with_context(|| format!("create {}", path.display()))?;
         let mut w = BufWriter::new(f);
+        for (k, v) in meta {
+            if k.is_empty() || k.contains('=') || k.contains('\n') || v.contains('\n') {
+                bail!("{}: invalid metadata entry '{k}={v}'", path.display());
+            }
+            writeln!(w, "# {k}={v}")?;
+        }
         writeln!(w, "{}", header.join(","))?;
         Ok(RowWriter {
             w,
@@ -90,6 +114,7 @@ impl RowWriter {
 pub struct RowReader {
     lines: Lines<BufReader<std::fs::File>>,
     header: Vec<String>,
+    meta: BTreeMap<String, String>,
     path: PathBuf,
     lineno: usize,
 }
@@ -99,22 +124,51 @@ impl RowReader {
         let f = std::fs::File::open(path)
             .with_context(|| format!("open {}", path.display()))?;
         let mut lines = BufReader::new(f).lines();
-        let header_line = match lines.next() {
-            Some(l) => l?,
-            None => bail!("{}: empty file", path.display()),
+        // Leading `# key=value` lines are file metadata; the first
+        // non-comment line is the header.
+        let mut meta = BTreeMap::new();
+        let mut lineno = 0usize;
+        let header_line = loop {
+            let line = match lines.next() {
+                Some(l) => l?,
+                None => bail!("{}: empty file", path.display()),
+            };
+            lineno += 1;
+            if let Some(body) = line.strip_prefix('#') {
+                match body.trim().split_once('=') {
+                    Some((k, v)) if !k.trim().is_empty() => {
+                        meta.insert(k.trim().to_string(), v.trim().to_string());
+                    }
+                    _ => bail!(
+                        "{}:{}: malformed metadata line '{line}' \
+                         (expected '# key=value')",
+                        path.display(),
+                        lineno
+                    ),
+                }
+            } else {
+                break line;
+            }
         };
         let header: Vec<String> =
             header_line.split(',').map(|s| s.trim().to_string()).collect();
         Ok(RowReader {
             lines,
             header,
+            meta,
             path: path.to_path_buf(),
-            lineno: 1,
+            lineno,
         })
     }
 
     pub fn header(&self) -> &[String] {
         &self.header
+    }
+
+    /// Metadata parsed from the leading `# key=value` lines (empty for
+    /// files without them).
+    pub fn meta(&self) -> &BTreeMap<String, String> {
+        &self.meta
     }
 
     pub fn next_row(&mut self) -> Result<Option<Vec<f64>>> {
@@ -241,6 +295,51 @@ mod tests {
         assert!(w.write_row(&[1.0, 2.0]).is_ok());
         w.finish().unwrap();
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn metadata_roundtrips_and_plain_files_have_none() {
+        let path = tmp("meta");
+        let mut w = RowWriter::create_with_meta(
+            &path,
+            &["a", "b"],
+            &[("device", "m2090"), ("schema", "features18+speedup")],
+        )
+        .unwrap();
+        w.write_row(&[1.0, 2.0]).unwrap();
+        w.finish().unwrap();
+        let mut r = RowReader::open(&path).unwrap();
+        assert_eq!(r.meta().get("device").map(String::as_str), Some("m2090"));
+        assert_eq!(
+            r.meta().get("schema").map(String::as_str),
+            Some("features18+speedup")
+        );
+        assert_eq!(r.header(), &["a".to_string(), "b".to_string()]);
+        assert_eq!(r.next_row().unwrap(), Some(vec![1.0, 2.0]));
+        assert_eq!(r.next_row().unwrap(), None);
+        std::fs::remove_file(&path).ok();
+
+        // files without metadata lines parse exactly as before
+        let plain = tmp("plainmeta");
+        std::fs::write(&plain, "a,b\n1,2\n").unwrap();
+        let r = RowReader::open(&plain).unwrap();
+        assert!(r.meta().is_empty());
+        std::fs::remove_file(&plain).ok();
+    }
+
+    #[test]
+    fn malformed_metadata_is_rejected() {
+        let path = tmp("badmeta");
+        std::fs::write(&path, "# deviceonly\na,b\n1,2\n").unwrap();
+        assert!(RowReader::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+
+        let path2 = tmp("badmeta2");
+        assert!(RowWriter::create_with_meta(&path2, &["a"], &[("", "x")]).is_err());
+        assert!(
+            RowWriter::create_with_meta(&path2, &["a"], &[("k=v", "x")]).is_err()
+        );
+        std::fs::remove_file(&path2).ok();
     }
 
     #[test]

@@ -146,6 +146,29 @@ impl Rng {
         idx.truncate(k);
         idx
     }
+
+    /// Sample `k` distinct indices from 0..n without materializing the
+    /// index range: the same partial Fisher–Yates as [`Self::sample_indices`]
+    /// (identical draws, identical output for the same generator state)
+    /// but tracking only the displaced entries in a map, so time and
+    /// memory are O(k) instead of O(n). This is what keeps
+    /// `LaunchSweep::sampled_balanced` from touching every launch in the
+    /// sweep on every call.
+    pub fn sample_indices_sparse(&mut self, n: usize, k: usize) -> Vec<usize> {
+        debug_assert!(k <= n);
+        let mut displaced: std::collections::HashMap<usize, usize> =
+            std::collections::HashMap::with_capacity(2 * k);
+        let mut out = Vec::with_capacity(k);
+        for i in 0..k {
+            let j = i + self.below((n - i) as u64) as usize;
+            let vj = displaced.get(&j).copied().unwrap_or(j);
+            let vi = displaced.get(&i).copied().unwrap_or(i);
+            // swap(i, j) in the virtual identity array
+            displaced.insert(j, vi);
+            out.push(vj);
+        }
+        out
+    }
 }
 
 #[cfg(test)]
@@ -238,6 +261,34 @@ mod tests {
         d.dedup();
         assert_eq!(d.len(), 20);
         assert!(d.iter().all(|&i| i < 50));
+    }
+
+    #[test]
+    fn sparse_sampling_matches_dense_exactly() {
+        // Same algorithm, same draws: for equal generator states the two
+        // implementations must return identical index sequences.
+        for (n, k) in [(1usize, 1usize), (50, 20), (50, 50), (1000, 3), (7, 0)] {
+            let mut a = Rng::new(777);
+            let mut b = Rng::new(777);
+            assert_eq!(
+                a.sample_indices(n, k),
+                b.sample_indices_sparse(n, k),
+                "n={n} k={k}"
+            );
+            // and the generators end in the same state
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn sparse_sample_indices_distinct_and_in_range() {
+        let mut r = Rng::new(21);
+        let s = r.sample_indices_sparse(64, 48);
+        let mut d = s.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 48);
+        assert!(d.iter().all(|&i| i < 64));
     }
 
     #[test]

@@ -232,6 +232,70 @@ mod tests {
     }
 
     #[test]
+    fn benchmarks_port_across_the_device_registry() {
+        // Every benchmark lowers cleanly on every registered device:
+        // Table-3 instance counts hold, baselines stay launchable, and
+        // features stay finite.
+        use crate::gpu::registry;
+        let cfg = MeasureConfig::deterministic();
+        for dev in registry::all() {
+            for b in all() {
+                let instances = (b.instances)(&dev);
+                assert_eq!(
+                    instances.len(),
+                    b.paper_instances,
+                    "{} on {}",
+                    b.name,
+                    dev.key
+                );
+                for d in instances.iter().step_by(7) {
+                    assert!(
+                        simulate(d, &dev, Variant::Baseline).feasible(),
+                        "{}: {} baseline infeasible on {}",
+                        b.name,
+                        d.name,
+                        dev.key
+                    );
+                    let r = measure(d, &dev, &cfg);
+                    assert!(
+                        r.features.iter().all(|x| x.is_finite()),
+                        "{} on {}",
+                        d.name,
+                        dev.key
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn some_benchmark_label_flips_between_devices() {
+        // The cross-device premise on the real workloads: at least one
+        // instance's oracle decision differs between two devices in the
+        // portfolio.
+        use crate::gpu::registry;
+        let cfg = MeasureConfig::deterministic();
+        let devices = registry::all();
+        for b in all() {
+            let per_dev: Vec<Vec<bool>> = devices
+                .iter()
+                .map(|dev| {
+                    (b.instances)(dev)
+                        .iter()
+                        .map(|d| measure(d, dev, &cfg).beneficial())
+                        .collect()
+                })
+                .collect();
+            for labels in &per_dev[1..] {
+                if labels != &per_dev[0] {
+                    return; // found a flip
+                }
+            }
+        }
+        panic!("no benchmark instance's oracle label differs across the portfolio");
+    }
+
+    #[test]
     fn names_are_unique_within_benchmarks() {
         let dev = DeviceSpec::m2090();
         for b in all() {

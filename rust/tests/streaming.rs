@@ -39,7 +39,7 @@ fn sharded_write_reload_equals_in_memory_build() {
 
     for shards in [1usize, 5] {
         let dir = tmpdir(&format!("rt-{shards}"));
-        let mut sink = ShardedCsvSink::create(&dir, shards).unwrap();
+        let mut sink = ShardedCsvSink::create(&dir, shards, dev.key).unwrap();
         let summary =
             dataset::build_streaming(&templates, &sweep, &dev, &cfg, &mut sink, None)
                 .unwrap();
@@ -142,7 +142,7 @@ fn tee_shards_and_samples_in_one_pass() {
     // the reservoir indices point into it.
     let (templates, sweep, dev, cfg) = setup(2, 4);
     let dir = tmpdir("tee");
-    let mut shards = ShardedCsvSink::create(&dir, 3).unwrap();
+    let mut shards = ShardedCsvSink::create(&dir, 3, dev.key).unwrap();
     let mut reservoir = ReservoirSink::new(100, 42);
     let mut tee = Tee(&mut shards, &mut reservoir);
     dataset::build_streaming(&templates, &sweep, &dev, &cfg, &mut tee, None).unwrap();
@@ -153,7 +153,7 @@ fn tee_shards_and_samples_in_one_pass() {
 
     // Walking the shards, the sampled indices carry the sampled rows.
     let mut matched = 0usize;
-    let total = stream_sharded(&dir, |idx, rec| {
+    let stream = stream_sharded(&dir, |idx, rec| {
         if let Some(pos) = indices.iter().position(|&i| i == idx) {
             assert_eq!(rec.features, sample[pos].features);
             matched += 1;
@@ -162,7 +162,8 @@ fn tee_shards_and_samples_in_one_pass() {
     })
     .unwrap();
     assert_eq!(matched, 100);
-    assert!(total > 400);
+    assert!(stream.rows > 400);
+    assert_eq!(stream.device.as_deref(), Some(dev.key));
     std::fs::remove_dir_all(&dir).ok();
 }
 
