@@ -34,7 +34,7 @@ fn build(noise: bool) -> Vec<SpeedupRecord> {
 fn eval(records: &[SpeedupRecord], frac: f64, cfg: &ForestConfig) -> (f64, f64, f64) {
     let (train, test) = dataset::split(records, frac, 7);
     let t0 = std::time::Instant::now();
-    let f = Forest::fit_records(&train, cfg);
+    let f = Forest::fit_records(&train, cfg).expect("finite records");
     let dt = t0.elapsed().as_secs_f64();
     let acc = metrics::evaluate_model(&test, |x| f.decide(x));
     (acc.count_based, acc.penalty_weighted, dt)

@@ -37,7 +37,8 @@ fn main() -> anyhow::Result<()> {
         &lmtuner::synth::dataset::BuildConfig { configs_per_kernel: 8, ..Default::default() },
     );
     let refs: Vec<_> = recs.iter().collect();
-    let forest = Forest::fit_records(&refs, &ForestConfig::default());
+    let forest =
+        Forest::fit_records(&refs, &ForestConfig::default()).expect("finite records");
 
     // Realistic queries: the full real-benchmark feature stream.
     let mut rows: Vec<Vec<f64>> = Vec::new();

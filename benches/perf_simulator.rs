@@ -53,7 +53,7 @@ fn main() {
     let refs: Vec<_> = recs.iter().collect();
     let fcfg = ForestConfig::default();
     let r = Bencher::coarse().run("train: 20-tree forest", || {
-        black_box(Forest::fit_records(&refs, &fcfg));
+        black_box(Forest::fit_records(&refs, &fcfg).expect("finite records"));
     });
     report_throughput(&r, refs.len() as f64, "samples");
 }

@@ -1,0 +1,97 @@
+//! Forest-training throughput: the v1 exact sort-based split engine vs
+//! the ml-v2 pre-binned histogram engine, in rows/sec (rows = samples ×
+//! trees). The binned/exact ratio is the headline number — the ml-v2
+//! acceptance bar is >= 2x at n >= 50k, which is what makes paper-scale
+//! (`--scale 1.0`, millions of instances) forest training tractable.
+//!
+//! Also reports `predict_batch` throughput at 1 thread vs all host
+//! threads (the evaluation half of the training loop).
+
+use std::time::Duration;
+
+use lmtuner::ml::forest::{Forest, ForestConfig};
+use lmtuner::ml::tree::SplitEngine;
+use lmtuner::util::bench::{black_box, report_throughput, Bencher};
+use lmtuner::util::prng::Rng;
+
+const NUM_FEATURES: usize = 18;
+
+/// Synthetic column-major training matrix with a learnable nonlinear
+/// signal — cheap to generate, so the bench times the trainer, not the
+/// simulator.
+fn synth_matrix(n: usize, seed: u64) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let mut rng = Rng::new(seed);
+    let x: Vec<Vec<f64>> = (0..NUM_FEATURES)
+        .map(|_| (0..n).map(|_| rng.range_f64(-2.0, 2.0)).collect())
+        .collect();
+    let y: Vec<f64> = (0..n)
+        .map(|i| {
+            let (a, b, c) = (x[0][i], x[1][i], x[2][i]);
+            (a * b).signum() * (1.0 + 0.5 * c.abs()) + 0.1 * rng.normal()
+        })
+        .collect();
+    (x, y)
+}
+
+fn main() {
+    let threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    println!("host threads: {threads}");
+    // Few, long iterations: an exact 50k-row fit is seconds, not micros.
+    let bench = Bencher {
+        warmup_iters: 0,
+        min_iters: 1,
+        min_time: Duration::from_millis(50),
+        max_iters: 3,
+    };
+    let trees = 4;
+
+    for n in [10_000usize, 50_000] {
+        let (x, y) = synth_matrix(n, 0xBEEF ^ n as u64);
+        let cfg_for = |engine: SplitEngine| {
+            let mut cfg = ForestConfig { num_trees: trees, threads, ..Default::default() };
+            cfg.tree.engine = engine;
+            cfg.tree.min_samples_leaf = 2;
+            cfg
+        };
+
+        let exact_cfg = cfg_for(SplitEngine::Exact);
+        let r_exact = bench.run(&format!("exact  fit n={n} trees={trees}"), || {
+            black_box(Forest::fit(&x, &y, &exact_cfg));
+        });
+        report_throughput(&r_exact, (n * trees) as f64, "rows");
+
+        let binned_cfg = cfg_for(SplitEngine::Binned);
+        let mut forest = None;
+        let r_binned = bench.run(&format!("binned fit n={n} trees={trees}"), || {
+            forest = Some(Forest::fit(&x, &y, &binned_cfg));
+        });
+        report_throughput(&r_binned, (n * trees) as f64, "rows");
+        println!(
+            "  binned/exact fit speedup: {:.2}x at n={n}\n",
+            r_exact.mean.as_secs_f64() / r_binned.mean.as_secs_f64()
+        );
+
+        // Batch prediction: serial vs fanned across the host.
+        let forest = forest.expect("bench ran");
+        let probes: Vec<Vec<f64>> = (0..20_000)
+            .map(|i| (0..NUM_FEATURES).map(|f| x[f][i % n]).collect())
+            .collect();
+        let refs: Vec<&[f64]> = probes.iter().map(|p| p.as_slice()).collect();
+        let pb = Bencher::coarse();
+        let r1 = pb.run("predict_batch 1 thread", || {
+            black_box(forest.predict_batch_with(&refs, 1));
+        });
+        report_throughput(&r1, refs.len() as f64, "rows");
+        let rn = pb.run(&format!("predict_batch {threads} threads"), || {
+            black_box(forest.predict_batch_with(&refs, threads));
+        });
+        report_throughput(&rn, refs.len() as f64, "rows");
+        println!(
+            "  parallel/serial predict speedup: {:.2}x ({} threads)\n",
+            r1.mean.as_secs_f64() / rn.mean.as_secs_f64(),
+            threads
+        );
+    }
+}

@@ -187,7 +187,7 @@ pub fn run_with_progress(
         );
         let (train_split, test_split) =
             dataset::split(&records, base.train_fraction, base.seed);
-        let forest = crate::ml::forest::Forest::fit_records(&train_split, &base.forest);
+        let forest = crate::ml::forest::Forest::fit_records(&train_split, &base.forest)?;
         registry.insert(dev.key, train::encode_default(&forest));
         tests.push(test_split.into_iter().cloned().collect());
     }

@@ -23,7 +23,7 @@ use anyhow::Result;
 
 use crate::gpu::spec::DeviceSpec;
 use crate::kernelmodel::features::NUM_FEATURES;
-use crate::ml::forest::{Forest, ForestConfig};
+use crate::ml::forest::{Forest, ForestConfig, OobEstimate};
 use crate::ml::metrics::{self, Accuracy, AccuracyAccumulator};
 use crate::ml::{export, io};
 use crate::sim::exec::{MeasureConfig, SpeedupRecord};
@@ -47,6 +47,9 @@ pub struct TrainConfig {
     pub forest: ForestConfig,
     pub measure: MeasureConfig,
     pub seed: u64,
+    /// Also compute the out-of-bag estimate during the fit (one extra
+    /// traversal pass over the training split; off by default).
+    pub compute_oob: bool,
 }
 
 impl Default for TrainConfig {
@@ -58,6 +61,7 @@ impl Default for TrainConfig {
             forest: ForestConfig::default(),
             measure: MeasureConfig::default(),
             seed: 0x5EED,
+            compute_oob: false,
         }
     }
 }
@@ -104,6 +108,27 @@ pub struct TrainOutcome {
     pub train_size: usize,
     pub gen_seconds: f64,
     pub fit_seconds: f64,
+    /// Out-of-bag estimate of the fitted forest (only when
+    /// `TrainConfig::compute_oob` is set).
+    pub oob: Option<OobEstimate>,
+}
+
+/// Fit the forest on a training split, with the optional OOB pass.
+/// Propagates `FitError` typed: the simulator only emits finite
+/// features and clamped-positive speedups (asserted by the crossdev
+/// label-flip test), but an empty split (e.g. a zero-capacity
+/// reservoir) is a legitimate runtime condition, not a panic.
+fn fit_split<R: std::borrow::Borrow<SpeedupRecord>>(
+    records: &[R],
+    cfg: &ForestConfig,
+    compute_oob: bool,
+) -> Result<(Forest, Option<OobEstimate>), crate::ml::forest::FitError> {
+    if compute_oob {
+        let (f, oob) = Forest::fit_records_with_oob(records, cfg)?;
+        Ok((f, Some(oob)))
+    } else {
+        Ok((Forest::fit_records(records, cfg)?, None))
+    }
 }
 
 /// Dataset build options derived from a train config. The seed
@@ -116,6 +141,18 @@ pub fn build_config(cfg: &TrainConfig) -> dataset::BuildConfig {
         seed: cfg.seed ^ 0xDA7A,
         ..dataset::BuildConfig::default()
     }
+}
+
+/// Materialize exactly the record stream the in-memory train pipeline
+/// fits on (same seed derivation via [`build_config`], same template
+/// population and launch sweep). `lmtuner tune` cross-validates on
+/// these records, so the selected config is graded against the same
+/// distribution `train` will see.
+pub fn build_records(dev: &DeviceSpec, cfg: &TrainConfig) -> Vec<SpeedupRecord> {
+    let mut rng = Rng::new(cfg.seed);
+    let templates = generator::generate(&mut rng, cfg.scale);
+    let sweep = LaunchSweep::new(2048, 2048);
+    dataset::build(&templates, &sweep, dev, &build_config(cfg))
 }
 
 /// Run the full phase-1 pipeline in memory.
@@ -144,7 +181,8 @@ pub fn run_with_progress(
     let (train, test) = dataset::split(&records, cfg.train_fraction, cfg.seed);
     let train_size = train.len();
     let t1 = Instant::now();
-    let forest = Forest::fit_records(&train, &cfg.forest);
+    let (forest, oob) = fit_split(&train, &cfg.forest, cfg.compute_oob)
+        .expect("cannot fit on the generated dataset (empty or non-finite)");
     let fit_seconds = t1.elapsed().as_secs_f64();
 
     let synth_accuracy = metrics::evaluate_model(&test, |x| forest.decide(x));
@@ -162,6 +200,7 @@ pub fn run_with_progress(
         train_size,
         gen_seconds,
         fit_seconds,
+        oob,
     }
 }
 
@@ -195,7 +234,7 @@ pub fn run_sharded(
     let (train_records, train_indices) = reservoir.into_sample();
     let train_size = train_records.len();
     let t1 = Instant::now();
-    let forest = Forest::fit_records(&train_records, &base.forest);
+    let (forest, oob) = fit_split(&train_records, &base.forest, base.compute_oob)?;
     let fit_seconds = t1.elapsed().as_secs_f64();
     drop(train_records);
 
@@ -254,6 +293,7 @@ pub fn run_sharded(
         train_size,
         gen_seconds,
         fit_seconds,
+        oob,
     })
 }
 
@@ -348,6 +388,23 @@ mod tests {
             "count {}", out.synth_accuracy.count_based);
         assert!(out.synth_accuracy.penalty_weighted > 0.8);
         assert_eq!(out.per_benchmark.len(), 8);
+    }
+
+    #[test]
+    fn oob_estimate_is_wired_through() {
+        let dev = DeviceSpec::m2090();
+        let cfg = TrainConfig {
+            scale: 0.02,
+            configs_per_kernel: 4,
+            compute_oob: true,
+            ..Default::default()
+        };
+        let out = run(&dev, &cfg);
+        let oob = out.oob.expect("oob requested via compute_oob");
+        assert_eq!(oob.total, out.train_size);
+        assert!(oob.covered > 0, "no OOB coverage");
+        assert!(oob.mse.is_finite());
+        assert!(oob.decision_accuracy > 0.5, "{}", oob.decision_accuracy);
     }
 
     #[test]

@@ -47,10 +47,11 @@
 //! assert!(!records.is_empty());
 //!
 //! let (train, test) = dataset::split(&records, 0.5, 1);
+//! // fit_records rejects non-finite features/targets with a typed error
 //! let forest = Forest::fit_records(
 //!     &train,
 //!     &ForestConfig { num_trees: 3, ..Default::default() },
-//! );
+//! ).expect("simulator records are finite");
 //! let acc = metrics::evaluate_model(&test, |x| forest.decide(x));
 //! assert!(acc.n > 0 && acc.penalty_weighted > 0.0);
 //! ```

@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   generate   build the synthetic kernel-instance dataset (CSV)
 //!   train      phase-1 pipeline: generate + simulate + fit + evaluate
+//!   tune       k-fold CV over the forest hyperparameter grid (ml::select)
 //!   crossdev   train-on-A/test-on-B accuracy matrix over the portfolio
 //!   eval       evaluate a saved model on a dataset / the real benchmarks
 //!   predict    one-off decision for a feature vector
@@ -24,7 +25,7 @@ use lmtuner::coordinator::train::{self, TrainConfig};
 use lmtuner::gpu::registry;
 use lmtuner::gpu::spec::DeviceSpec;
 use lmtuner::kernelmodel::features::{FEATURE_NAMES, NUM_FEATURES};
-use lmtuner::ml::{io as model_io, metrics};
+use lmtuner::ml::{io as model_io, metrics, select};
 use lmtuner::report::{figures, tables};
 use lmtuner::runtime::pjrt::Engine;
 use lmtuner::sim::exec::MeasureConfig;
@@ -40,19 +41,29 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "lmtuner <generate|train|crossdev|eval|predict|serve|reproduce|info> [options]\n\
+    "lmtuner <generate|train|tune|crossdev|eval|predict|serve|reproduce|info> [options]\n\
      \n\
      generate  --out data/synth.csv [--device m2090] [--scale 0.2]\n\
                [--configs 24] [--seed N]\n\
                [--shards N --out-dir data/shards]  (streamed, sharded CSV)\n\
      train     --model models/rf.txt [--device m2090] [--data data/synth.csv]\n\
                [--scale 0.2] [--configs 24] [--trees 20] [--mtry 4]\n\
-               [--train-frac 0.1]\n\
+               [--min-leaf 1] [--engine binned|exact] [--train-frac 0.1]\n\
+               [--forest-config models/forest-config.txt] [--oob]\n\
                [--shards N --out-dir data/shards --train-cap 50000]\n\
                (--shards streams the dataset to disk: bounded memory at\n\
-                any --scale; the forest fits on a reservoir sample)\n\
+                any --scale; the forest fits on a reservoir sample;\n\
+                --forest-config loads a `lmtuner tune` winner, explicit\n\
+                flags still override it)\n\
+     tune      [--out data/tune.csv] [--best models/forest-config.txt]\n\
+               [--device m2090] [--scale 0.05] [--configs 8] [--seed N]\n\
+               [--trees 10,20,40] [--mtry 2,4,8] [--min-leaf 1,4]\n\
+               [--folds 5] [--threads N] [--engine binned|exact] [--no-noise]\n\
+               (deterministic k-fold CV over the grid: per-config CSV ->\n\
+                --out, best config -> --best for --forest-config)\n\
      crossdev  [--devices m2090,gtx480,gtx680,k20] [--out data/crossdev.csv]\n\
                [--scale 0.05] [--configs 8] [--train-frac 0.1] [--seed N]\n\
+               [--forest-config models/forest-config.txt]\n\
                (train-on-A/test-on-B accuracy matrix over the portfolio)\n\
      eval      --model models/rf.txt [--data data/synth.csv] [--real]\n\
                [--device KEY]  (must match the dataset's stamped device)\n\
@@ -79,6 +90,7 @@ fn run() -> Result<()> {
     match cmd.as_deref() {
         Some("generate") => cmd_generate(&mut args),
         Some("train") => cmd_train(&mut args),
+        Some("tune") => cmd_tune(&mut args),
         Some("crossdev") => cmd_crossdev(&mut args),
         Some("eval") => cmd_eval(&mut args),
         Some("predict") => cmd_predict(&mut args),
@@ -92,6 +104,51 @@ fn run() -> Result<()> {
     }
 }
 
+/// The skip-and-count guard's user-facing surface (ml::metrics): say
+/// when evaluation instances were dropped instead of reporting accuracy
+/// as if every row was covered.
+fn warn_skipped(skipped: usize) {
+    if skipped > 0 {
+        eprintln!(
+            "warning: {skipped} evaluation instance(s) skipped — non-finite \
+             or <= 0 speedups carry no oracle label (see ml::metrics)"
+        );
+    }
+}
+
+/// Apply `--forest-config` (a `lmtuner tune` winner) and the explicit
+/// forest flags to `cfg.forest`, explicit flags winning.
+fn apply_forest_args(args: &mut Args, forest: &mut lmtuner::ml::forest::ForestConfig) -> Result<()> {
+    if let Some(path) = args.opt_str("forest-config") {
+        let loaded = select::load_forest_config(Path::new(&path))?;
+        forest.num_trees = loaded.num_trees;
+        forest.tree = loaded.tree;
+        println!(
+            "forest config from {path}: trees={} mtry={} min_leaf={} \
+             max_depth={} engine={} bins={}",
+            loaded.num_trees,
+            loaded.tree.mtry,
+            loaded.tree.min_samples_leaf,
+            loaded.tree.max_depth,
+            loaded.tree.engine,
+            loaded.tree.max_bins
+        );
+    }
+    if let Some(trees) = args.get::<usize>("trees").map_err(anyhow::Error::msg)? {
+        forest.num_trees = trees;
+    }
+    if let Some(mtry) = args.get::<usize>("mtry").map_err(anyhow::Error::msg)? {
+        forest.tree.mtry = mtry;
+    }
+    if let Some(min_leaf) = args.get::<usize>("min-leaf").map_err(anyhow::Error::msg)? {
+        forest.tree.min_samples_leaf = min_leaf;
+    }
+    if let Some(engine) = args.opt_str("engine") {
+        forest.tree.engine = engine.parse().map_err(anyhow::Error::msg)?;
+    }
+    Ok(())
+}
+
 fn train_config(args: &mut Args) -> Result<TrainConfig> {
     let mut cfg = TrainConfig {
         scale: args.get_or("scale", 0.2).map_err(anyhow::Error::msg)?,
@@ -100,8 +157,8 @@ fn train_config(args: &mut Args) -> Result<TrainConfig> {
         seed: args.get_or("seed", 0x5EEDu64).map_err(anyhow::Error::msg)?,
         ..TrainConfig::default()
     };
-    cfg.forest.num_trees = args.get_or("trees", 20).map_err(anyhow::Error::msg)?;
-    cfg.forest.tree.mtry = args.get_or("mtry", 4).map_err(anyhow::Error::msg)?;
+    apply_forest_args(args, &mut cfg.forest)?;
+    cfg.compute_oob = args.flag("oob");
     if args.flag("no-noise") {
         cfg.measure = MeasureConfig::deterministic();
     }
@@ -269,7 +326,17 @@ fn cmd_train(args: &mut Args) -> Result<()> {
         out.forest.max_depth(),
         out.forest.max_nodes(),
     );
+    if let Some(oob) = &out.oob {
+        println!(
+            "oob: mse {:.4}  decision accuracy {:.1}%  ({}/{} samples covered)",
+            oob.mse,
+            100.0 * oob.decision_accuracy,
+            oob.covered,
+            oob.total
+        );
+    }
     println!("{}", figures::fig6(&out.synth_accuracy, &out.per_benchmark));
+    warn_skipped(out.synth_accuracy.skipped);
     if let Some(dir) = model_path.parent() {
         std::fs::create_dir_all(dir)?;
     }
@@ -289,6 +356,86 @@ fn cmd_train(args: &mut Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_tune(args: &mut Args) -> Result<()> {
+    let dev = &device_arg(args)?;
+    let out = PathBuf::from(args.str_or("out", "data/tune.csv"));
+    let best_path = PathBuf::from(args.str_or("best", "models/forest-config.txt"));
+    let scale: f64 = args.get_or("scale", 0.05).map_err(anyhow::Error::msg)?;
+    let configs_per_kernel: usize =
+        args.get_or("configs", 8).map_err(anyhow::Error::msg)?;
+    let seed: u64 = args.get_or("seed", 0x5EEDu64).map_err(anyhow::Error::msg)?;
+    let folds: usize = args.get_or("folds", 5).map_err(anyhow::Error::msg)?;
+    let default_threads = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let threads: usize =
+        args.get_or("threads", default_threads).map_err(anyhow::Error::msg)?;
+    let grid = select::GridSpec::parse(
+        &args.str_or("trees", "10,20,40"),
+        &args.str_or("mtry", "2,4,8"),
+        &args.str_or("min-leaf", "1,4"),
+    )?;
+    let mut base_train = TrainConfig {
+        scale,
+        configs_per_kernel,
+        seed,
+        ..TrainConfig::default()
+    };
+    if args.flag("no-noise") {
+        base_train.measure = MeasureConfig::deterministic();
+    }
+    let mut base_forest = lmtuner::ml::forest::ForestConfig::default();
+    // --seed drives the whole run: dataset generation, fold assignment,
+    // and every forest's bagging/mtry streams.
+    base_forest.seed = seed;
+    if let Some(engine) = args.opt_str("engine") {
+        base_forest.tree.engine = engine.parse().map_err(anyhow::Error::msg)?;
+    }
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    println!(
+        "tune on {} ({}): scale={scale} configs/kernel={configs_per_kernel} \
+         grid={} configs x {folds} folds ({} threads)",
+        dev.name,
+        dev.key,
+        grid.len(),
+        threads
+    );
+    let t0 = std::time::Instant::now();
+    // Same generation path as `train` (train::build_records), so the
+    // winning config is selected on the distribution train fits on.
+    let records = train::build_records(dev, &base_train);
+    println!("{} instances in {:.1}s", records.len(), t0.elapsed().as_secs_f64());
+
+    let tune_cfg = select::TuneConfig { folds, seed, threads, base: base_forest };
+    let t1 = std::time::Instant::now();
+    let outcome = select::cross_validate(&records, &grid, &tune_cfg)?;
+    for (i, s) in outcome.scores.iter().enumerate() {
+        let marker = if i == outcome.best { "*" } else { " " };
+        println!(" {marker} {}", s.render());
+    }
+    select::write_csv(&outcome, &out)?;
+    let best = outcome.best_score();
+    select::save_forest_config(&best.config, &best_path)?;
+    println!(
+        "cross-validated {} configs x {} folds over {} rows in {:.1}s",
+        outcome.scores.len(),
+        outcome.folds,
+        outcome.rows,
+        t1.elapsed().as_secs_f64()
+    );
+    println!("per-config CV table written to {}", out.display());
+    println!(
+        "best config (count {:.1}%, penalty-weighted {:.1}%) written to {} \
+         — consume with `lmtuner train --forest-config {}`",
+        100.0 * best.count_based,
+        100.0 * best.penalty_weighted,
+        best_path.display(),
+        best_path.display()
+    );
+    Ok(())
+}
+
 fn cmd_crossdev(args: &mut Args) -> Result<()> {
     let devices_arg = args.str_or("devices", "");
     let out = PathBuf::from(args.str_or("out", "data/crossdev.csv"));
@@ -299,8 +446,7 @@ fn cmd_crossdev(args: &mut Args) -> Result<()> {
         seed: args.get_or("seed", 0x5EEDu64).map_err(anyhow::Error::msg)?,
         ..TrainConfig::default()
     };
-    base.forest.num_trees = args.get_or("trees", 20).map_err(anyhow::Error::msg)?;
-    base.forest.tree.mtry = args.get_or("mtry", 4).map_err(anyhow::Error::msg)?;
+    apply_forest_args(args, &mut base.forest)?;
     if args.flag("no-noise") {
         base.measure = MeasureConfig::deterministic();
     }
@@ -372,6 +518,7 @@ fn cmd_eval(args: &mut Args) -> Result<()> {
             acc.min_score,
             acc.n
         );
+        warn_skipped(acc.skipped);
     }
     if real {
         println!("real benchmarks on {} ({})", dev.name, dev.key);
@@ -385,6 +532,7 @@ fn cmd_eval(args: &mut Args) -> Result<()> {
                 a.n
             );
         }
+        warn_skipped(per.iter().map(|(_, a)| a.skipped).sum());
     }
     Ok(())
 }

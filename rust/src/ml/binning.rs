@@ -1,0 +1,229 @@
+//! Histogram pre-binning for the forest trainer (the ml-v2 split engine).
+//!
+//! [`BinnedDataset::build`] quantizes each feature column **once** into at
+//! most `max_bins` (≤ 256, so codes fit a `u8`) quantile bins;
+//! [`crate::ml::tree::Tree::fit_with_bins`] then finds each node's best
+//! split with an O(n·mtry) bucket sweep instead of the exact engine's
+//! per-node O(mtry·n log n) sorts. Binning depends only on the raw
+//! columns — not on any bootstrap sample — so a forest bins once and
+//! shares the result across all of its trees.
+//!
+//! Cut values are real feature-space thresholds (midpoints between
+//! adjacent distinct column values), so a binned tree predicts on raw
+//! feature vectors exactly like an exact one.
+//!
+//! Equivalence contract (tested in `rust/tests/mlcore.rs` and the tree
+//! unit tests):
+//!
+//! * a column with at most `max_bins` distinct values gets one bin per
+//!   distinct value — the candidate cut set is then identical to the
+//!   exact engine's, and the two engines induce identical partitions of
+//!   the training samples at every node;
+//! * a continuous column is quantized to quantile bins: candidate cuts
+//!   are restricted to bin boundaries, which perturbs individual trees
+//!   only near score ties; on the tier-1 suites both paper metrics stay
+//!   within 0.5% of the exact engine (asserted in the equivalence
+//!   suite).
+
+/// Hard upper bound on bins per feature: codes must fit in a `u8`.
+pub const MAX_BINS: usize = 256;
+
+/// The bin layout of one feature column.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FeatureBins {
+    /// Strictly increasing cut values. `cuts[b]` separates bin `b`
+    /// (where `x <= cuts[b]`) from bin `b + 1`; a column with `k ≤
+    /// max_bins` distinct values has `k - 1` cuts.
+    pub cuts: Vec<f64>,
+}
+
+impl FeatureBins {
+    /// Quantile-bin one column into at most `max_bins` bins.
+    pub fn from_column(col: &[f64], max_bins: usize) -> FeatureBins {
+        let max_bins = max_bins.clamp(2, MAX_BINS);
+        let mut sorted: Vec<f64> =
+            col.iter().copied().filter(|v| !v.is_nan()).collect();
+        sorted.sort_unstable_by(f64::total_cmp);
+        let mut distinct: Vec<f64> = Vec::new();
+        for &v in &sorted {
+            if distinct.last().map_or(true, |&p| p != v) {
+                distinct.push(v);
+            }
+        }
+        let mut cuts = Vec::new();
+        if distinct.len() <= max_bins {
+            // One bin per distinct value: the binned candidate cut set
+            // equals the exact engine's.
+            for w in distinct.windows(2) {
+                push_cut(&mut cuts, w[0], w[1]);
+            }
+        } else {
+            // Quantile edges: cut between the values flanking each
+            // rank k·n/max_bins (skipped where the flanking values tie,
+            // which merges duplicate-heavy quantiles).
+            let n = sorted.len();
+            for k in 1..max_bins {
+                let r = k * n / max_bins; // 1 <= r <= n-1
+                let (lo, hi) = (sorted[r - 1], sorted[r]);
+                if hi > lo {
+                    push_cut(&mut cuts, lo, hi);
+                }
+            }
+        }
+        FeatureBins { cuts }
+    }
+
+    pub fn num_bins(&self) -> usize {
+        self.cuts.len() + 1
+    }
+
+    /// Bin index of a raw value: the number of cuts strictly below it,
+    /// so `code(x) <= b` iff `x <= cuts[b]` — partitioning a node by
+    /// code is identical to partitioning it by the raw threshold. NaN
+    /// lands in the last bin (the exact engine's `total_cmp` order
+    /// sorts NaN last too).
+    #[inline]
+    pub fn code_of(&self, v: f64) -> u8 {
+        if v.is_nan() {
+            return self.cuts.len() as u8;
+        }
+        self.cuts.partition_point(|&c| v > c) as u8
+    }
+}
+
+/// Append the midpoint of `(lo, hi)` as a cut, keeping the cut list
+/// strictly increasing and finite. An f64 midpoint of huge values can
+/// overflow (fall back to `lo`, which still separates `<= lo` from
+/// `> lo`), and a midpoint that rounds onto an existing cut is dropped —
+/// the neighbouring cut already separates the same values.
+fn push_cut(cuts: &mut Vec<f64>, lo: f64, hi: f64) {
+    let mut c = 0.5 * (lo + hi);
+    if !c.is_finite() {
+        c = lo;
+    }
+    if cuts.last().map_or(true, |&p| c > p) {
+        cuts.push(c);
+    }
+}
+
+/// All feature columns of one training matrix, pre-binned. Built once
+/// per forest fit and shared (by reference) across the tree builders.
+#[derive(Clone, Debug)]
+pub struct BinnedDataset {
+    pub features: Vec<FeatureBins>,
+    /// `codes[f][i]`: bin of sample `i` in feature `f` (column-major,
+    /// mirroring the raw matrix it was built from).
+    pub codes: Vec<Vec<u8>>,
+}
+
+impl BinnedDataset {
+    /// Bin every column of a column-major feature matrix.
+    pub fn build(x: &[Vec<f64>], max_bins: usize) -> BinnedDataset {
+        let mut features = Vec::with_capacity(x.len());
+        let mut codes = Vec::with_capacity(x.len());
+        for col in x {
+            let fb = FeatureBins::from_column(col, max_bins);
+            codes.push(col.iter().map(|&v| fb.code_of(v)).collect());
+            features.push(fb);
+        }
+        BinnedDataset { features, codes }
+    }
+
+    pub fn num_features(&self) -> usize {
+        self.features.len()
+    }
+
+    pub fn num_samples(&self) -> usize {
+        self.codes.first().map_or(0, Vec::len)
+    }
+
+    /// Largest per-feature bin count (sizes the split-sweep scratch).
+    pub fn max_bins_used(&self) -> usize {
+        self.features.iter().map(FeatureBins::num_bins).max().unwrap_or(1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Rng;
+
+    #[test]
+    fn small_distinct_column_gets_exact_cuts() {
+        // 5 distinct values -> 4 cuts at the midpoints, codes 0..=4.
+        let col = vec![3.0, 1.0, 2.0, 1.0, 5.0, 4.0, 3.0];
+        let fb = FeatureBins::from_column(&col, 256);
+        assert_eq!(fb.cuts, vec![1.5, 2.5, 3.5, 4.5]);
+        assert_eq!(fb.num_bins(), 5);
+        let codes: Vec<u8> = col.iter().map(|&v| fb.code_of(v)).collect();
+        assert_eq!(codes, vec![2, 0, 1, 0, 4, 3, 2]);
+    }
+
+    #[test]
+    fn code_threshold_consistency() {
+        // code(x) <= b  iff  x <= cuts[b], for every cut and value.
+        let mut rng = Rng::new(11);
+        let col: Vec<f64> =
+            (0..3000).map(|_| rng.range_f64(-10.0, 10.0)).collect();
+        let fb = FeatureBins::from_column(&col, 64);
+        assert!(fb.num_bins() <= 64);
+        assert!(fb.num_bins() > 32, "quantiles collapsed: {}", fb.num_bins());
+        for w in fb.cuts.windows(2) {
+            assert!(w[0] < w[1], "cuts not strictly increasing");
+        }
+        for &v in col.iter().take(500) {
+            let c = fb.code_of(v) as usize;
+            for (b, &cut) in fb.cuts.iter().enumerate() {
+                assert_eq!(c <= b, v <= cut, "v={v} cut={cut} code={c}");
+            }
+        }
+    }
+
+    #[test]
+    fn constant_column_is_one_bin() {
+        let fb = FeatureBins::from_column(&[7.0; 50], 256);
+        assert_eq!(fb.num_bins(), 1);
+        assert_eq!(fb.code_of(7.0), 0);
+    }
+
+    #[test]
+    fn nan_goes_to_the_last_bin() {
+        let fb = FeatureBins::from_column(&[1.0, 2.0, f64::NAN, 3.0], 256);
+        assert_eq!(fb.num_bins(), 3); // NaN excluded from cut estimation
+        assert_eq!(fb.code_of(f64::NAN) as usize, fb.num_bins() - 1);
+        assert!(fb.cuts.iter().all(|c| c.is_finite()));
+    }
+
+    #[test]
+    fn duplicate_heavy_column_merges_quantiles() {
+        // 90% zeros, a long tail: quantile edges inside the zero run
+        // must merge instead of producing duplicate cuts.
+        let mut col = vec![0.0; 900];
+        col.extend((0..300).map(|i| 1.0 + i as f64));
+        let fb = FeatureBins::from_column(&col, 16);
+        assert!(fb.num_bins() <= 16);
+        for w in fb.cuts.windows(2) {
+            assert!(w[0] < w[1]);
+        }
+        // the zero mass is separable from the tail
+        assert!(fb.code_of(0.0) < fb.code_of(5.0));
+    }
+
+    #[test]
+    fn dataset_builds_all_columns() {
+        let x = vec![
+            (0..100).map(|i| i as f64).collect::<Vec<_>>(),
+            vec![1.0; 100],
+        ];
+        let ds = BinnedDataset::build(&x, 256);
+        assert_eq!(ds.num_features(), 2);
+        assert_eq!(ds.num_samples(), 100);
+        assert_eq!(ds.features[0].num_bins(), 100);
+        assert_eq!(ds.features[1].num_bins(), 1);
+        assert_eq!(ds.max_bins_used(), 100);
+        // codes of the ramp column are the identity
+        for (i, &c) in ds.codes[0].iter().enumerate() {
+            assert_eq!(c as usize, i);
+        }
+    }
+}

@@ -3,13 +3,21 @@
 //!
 //! The forest regresses log2(kernel speedup); `decide()` thresholds the
 //! prediction at 0 (speedup 1.0) to produce the optimize/don't decision.
+//!
+//! ml-v2: with the default [`SplitEngine::Binned`] engine the feature
+//! columns are quantile-binned **once** per fit (`ml::binning`) and the
+//! binning is shared across every tree's builder — binning depends only
+//! on the columns, never on a bootstrap sample. `SplitEngine::Exact`
+//! keeps the v1 per-node-sort reference engine selectable for
+//! equivalence testing and ablation.
 
 use crate::kernelmodel::features::NUM_FEATURES;
 use crate::sim::exec::SpeedupRecord;
 use crate::util::pool::parallel_map;
 use crate::util::prng::Rng;
 
-use super::tree::{Tree, TreeConfig};
+use super::binning::BinnedDataset;
+use super::tree::{SplitEngine, Tree, TreeConfig};
 
 #[derive(Clone, Copy, Debug)]
 pub struct ForestConfig {
@@ -33,6 +41,56 @@ impl Default for ForestConfig {
     }
 }
 
+/// Typed rejection of training input the forest cannot learn from.
+/// Before ml-v2 a single NaN feature would panic the split sweep deep
+/// inside `tree.rs`; now the sweeps are NaN-total and the *validation*
+/// is explicit, up front, and recoverable.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum FitError {
+    EmptyTrainingSet,
+    /// `features[feature]` of record `row` is NaN or infinite.
+    NonFiniteFeature { row: usize, feature: usize, value: f64 },
+    /// Record `row` has a speedup whose log2 target is not finite
+    /// (NaN/infinite, zero or negative speedup).
+    NonFiniteTarget { row: usize, speedup: f64 },
+}
+
+impl std::fmt::Display for FitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FitError::EmptyTrainingSet => write!(f, "empty training set"),
+            FitError::NonFiniteFeature { row, feature, value } => write!(
+                f,
+                "training record {row}: feature {feature} is {value} — \
+                 the trainer requires finite features"
+            ),
+            FitError::NonFiniteTarget { row, speedup } => write!(
+                f,
+                "training record {row}: speedup {speedup} has no finite \
+                 log2 target — speedups must be finite and > 0"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for FitError {}
+
+/// Out-of-bag generalization estimate (free with bagging: every tree
+/// leaves ~37% of the samples out of its bootstrap, and those samples
+/// are test data for that tree).
+#[derive(Clone, Copy, Debug)]
+pub struct OobEstimate {
+    /// Mean squared error of OOB predictions against the log2 targets.
+    pub mse: f64,
+    /// Fraction of covered samples whose OOB decision (prediction > 0)
+    /// matches the oracle label (target > 0).
+    pub decision_accuracy: f64,
+    /// Samples left out of at least one bootstrap (only they have an
+    /// OOB prediction; with >= 10 trees this is nearly all of them).
+    pub covered: usize,
+    pub total: usize,
+}
+
 #[derive(Clone, Debug)]
 pub struct Forest {
     pub trees: Vec<Tree>,
@@ -42,40 +100,203 @@ pub struct Forest {
 impl Forest {
     /// Fit on dataset records: features -> log2(speedup). Accepts both
     /// borrowed (`&[&SpeedupRecord]`, the split() output) and owned
-    /// (`&[SpeedupRecord]`, e.g. a reservoir sample) slices.
+    /// (`&[SpeedupRecord]`, e.g. a reservoir sample) slices. Rejects
+    /// empty input and non-finite features/targets with a typed
+    /// [`FitError`] instead of training a silently-poisoned model.
     pub fn fit_records<R: std::borrow::Borrow<SpeedupRecord>>(
         records: &[R],
         cfg: &ForestConfig,
-    ) -> Forest {
+    ) -> Result<Forest, FitError> {
+        Self::validate_records(records)?;
+        let (x, y) = Self::columns(records);
+        Ok(Self::fit(&x, &y, cfg))
+    }
+
+    /// [`Forest::fit_records`] plus the out-of-bag estimate.
+    pub fn fit_records_with_oob<R: std::borrow::Borrow<SpeedupRecord>>(
+        records: &[R],
+        cfg: &ForestConfig,
+    ) -> Result<(Forest, OobEstimate), FitError> {
+        Self::validate_records(records)?;
+        let (x, y) = Self::columns(records);
+        Ok(Self::fit_with_oob(&x, &y, cfg))
+    }
+
+    /// Column-major feature matrix + log2 targets of a record slice
+    /// (the layout `fit`/`fit_prebinned` consume; `ml::select` uses it
+    /// to extract each CV fold once instead of per grid config).
+    pub fn columns<R: std::borrow::Borrow<SpeedupRecord>>(
+        records: &[R],
+    ) -> (Vec<Vec<f64>>, Vec<f64>) {
         let x: Vec<Vec<f64>> = (0..NUM_FEATURES)
             .map(|f| records.iter().map(|r| r.borrow().features[f]).collect())
             .collect();
         let y: Vec<f64> = records.iter().map(|r| r.borrow().target()).collect();
-        Self::fit(&x, &y, cfg)
+        (x, y)
+    }
+
+    /// Check every record the trainer is about to learn from: all
+    /// features finite, log2(speedup) finite. Returns the first
+    /// offending row as a typed error.
+    pub fn validate_records<R: std::borrow::Borrow<SpeedupRecord>>(
+        records: &[R],
+    ) -> Result<(), FitError> {
+        if records.is_empty() {
+            return Err(FitError::EmptyTrainingSet);
+        }
+        for (row, r) in records.iter().enumerate() {
+            let r = r.borrow();
+            for (feature, &value) in r.features.iter().enumerate() {
+                if !value.is_finite() {
+                    return Err(FitError::NonFiniteFeature { row, feature, value });
+                }
+            }
+            if !r.target().is_finite() {
+                return Err(FitError::NonFiniteTarget { row, speedup: r.speedup });
+            }
+        }
+        Ok(())
     }
 
     /// Fit on column-major features and targets.
     pub fn fit(x: &[Vec<f64>], y: &[f64], cfg: &ForestConfig) -> Forest {
+        // ml-v2: bin once, share across trees.
+        let bins = match cfg.tree.engine {
+            SplitEngine::Binned => Some(BinnedDataset::build(x, cfg.tree.max_bins)),
+            SplitEngine::Exact => None,
+        };
+        Self::fit_impl(x, y, bins.as_ref(), cfg)
+    }
+
+    /// [`Forest::fit`] reusing a pre-built binning of `x` — `ml::select`
+    /// bins each CV fold once and shares it across every grid config
+    /// (binning depends only on the columns, not on the forest
+    /// hyperparameters). With the exact engine the binning is ignored.
+    pub fn fit_prebinned(
+        x: &[Vec<f64>],
+        y: &[f64],
+        bins: &BinnedDataset,
+        cfg: &ForestConfig,
+    ) -> Forest {
+        let bins = match cfg.tree.engine {
+            SplitEngine::Binned => Some(bins),
+            SplitEngine::Exact => None,
+        };
+        Self::fit_impl(x, y, bins, cfg)
+    }
+
+    /// The per-tree bagging draws. The SINGLE definition of the
+    /// bootstrap stream: `fit_impl` grows each tree from it and
+    /// `oob_estimate` recovers in-bag membership from it, so the two
+    /// can never silently desynchronize. Returns the drawn indices plus
+    /// the generator, positioned after the draws, that the tree builder
+    /// continues with (mtry sampling).
+    fn bootstrap(tree_seed: u64, n: usize) -> (Rng, Vec<usize>) {
+        let mut rng = Rng::new(tree_seed);
+        let idx = (0..n).map(|_| rng.below(n as u64) as usize).collect();
+        (rng, idx)
+    }
+
+    fn fit_impl(
+        x: &[Vec<f64>],
+        y: &[f64],
+        bins: Option<&BinnedDataset>,
+        cfg: &ForestConfig,
+    ) -> Forest {
         assert!(!y.is_empty(), "empty training set");
         let n = y.len();
         let mut root = Rng::new(cfg.seed);
         let seeds: Vec<u64> = (0..cfg.num_trees).map(|_| root.next_u64()).collect();
         let trees = parallel_map(&seeds, cfg.threads, |&seed| {
-            let mut rng = Rng::new(seed);
             // Bootstrap sample (with replacement), classic bagging.
-            let mut idx: Vec<usize> =
-                (0..n).map(|_| rng.below(n as u64) as usize).collect();
-            Tree::fit(x, y, &mut idx, cfg.tree, &mut rng)
+            let (mut rng, mut idx) = Self::bootstrap(seed, n);
+            match bins {
+                Some(b) => Tree::fit_with_bins(b, y, &mut idx, cfg.tree, &mut rng),
+                None => Tree::fit(x, y, &mut idx, cfg.tree, &mut rng),
+            }
         });
         Forest {
             trees,
             config_summary: format!(
-                "trees={} mtry={} min_leaf={} max_depth={}",
+                "trees={} mtry={} min_leaf={} max_depth={} engine={} bins={}",
                 cfg.num_trees,
                 cfg.tree.mtry,
                 cfg.tree.min_samples_leaf,
-                cfg.tree.max_depth
+                cfg.tree.max_depth,
+                cfg.tree.engine,
+                cfg.tree.max_bins
             ),
+        }
+    }
+
+    /// Fit plus the out-of-bag estimate. `cfg` must be the config the
+    /// forest is fitted with: the bagging draws are replayed from
+    /// `cfg.seed` to recover each tree's bootstrap membership.
+    pub fn fit_with_oob(
+        x: &[Vec<f64>],
+        y: &[f64],
+        cfg: &ForestConfig,
+    ) -> (Forest, OobEstimate) {
+        let forest = Self::fit(x, y, cfg);
+        let oob = forest.oob_estimate(x, y, cfg);
+        (forest, oob)
+    }
+
+    /// Recover each tree's bootstrap membership by replaying
+    /// `Forest::bootstrap` (the same private function `fit` draws from,
+    /// so the two paths cannot desynchronize) and grade every sample on
+    /// the trees that never saw it. `covered == 0` (possible only with
+    /// very few trees) yields NaN metrics.
+    pub fn oob_estimate(&self, x: &[Vec<f64>], y: &[f64], cfg: &ForestConfig) -> OobEstimate {
+        let n = y.len();
+        let mut root = Rng::new(cfg.seed);
+        let inbag: Vec<Vec<bool>> = (0..self.trees.len())
+            .map(|_| {
+                let (_, idx) = Self::bootstrap(root.next_u64(), n);
+                let mut m = vec![false; n];
+                for i in idx {
+                    m[i] = true;
+                }
+                m
+            })
+            .collect();
+        let rows: Vec<Vec<f64>> =
+            (0..n).map(|i| x.iter().map(|c| c[i]).collect()).collect();
+        let ids: Vec<usize> = (0..n).collect();
+        let preds: Vec<Option<f64>> = parallel_map(&ids, cfg.threads, |&i| {
+            let mut s = 0.0;
+            let mut c = 0usize;
+            for (t, tree) in self.trees.iter().enumerate() {
+                if !inbag[t][i] {
+                    s += tree.predict(&rows[i]);
+                    c += 1;
+                }
+            }
+            if c > 0 { Some(s / c as f64) } else { None }
+        });
+        let mut covered = 0usize;
+        let mut se = 0.0;
+        let mut agree = 0usize;
+        for (i, p) in preds.iter().enumerate() {
+            if let Some(p) = p {
+                covered += 1;
+                se += (p - y[i]) * (p - y[i]);
+                agree += ((*p > 0.0) == (y[i] > 0.0)) as usize;
+            }
+        }
+        if covered == 0 {
+            return OobEstimate {
+                mse: f64::NAN,
+                decision_accuracy: f64::NAN,
+                covered: 0,
+                total: n,
+            };
+        }
+        OobEstimate {
+            mse: se / covered as f64,
+            decision_accuracy: agree as f64 / covered as f64,
+            covered,
+            total: n,
         }
     }
 
@@ -90,8 +311,19 @@ impl Forest {
         self.predict(features) > 0.0
     }
 
+    /// Batch prediction fanned across the host's cores. Order-preserving
+    /// chunked map, so results are identical at any thread count.
     pub fn predict_batch(&self, rows: &[&[f64]]) -> Vec<f64> {
-        rows.iter().map(|r| self.predict(r)).collect()
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        self.predict_batch_with(rows, threads)
+    }
+
+    /// [`Forest::predict_batch`] with an explicit thread count
+    /// (`1` = serial, for callers that already parallelize above).
+    pub fn predict_batch_with(&self, rows: &[&[f64]], threads: usize) -> Vec<f64> {
+        parallel_map(rows, threads, |r| self.predict(r))
     }
 
     pub fn max_depth(&self) -> usize {
@@ -124,6 +356,26 @@ mod tests {
         ];
         let y = rows.iter().map(|r| r.2).collect();
         (x, y)
+    }
+
+    fn toy_records(n: usize, seed: u64) -> Vec<SpeedupRecord> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                let mut features = [0.0; NUM_FEATURES];
+                for f in features.iter_mut() {
+                    *f = rng.range_f64(-1.0, 1.0);
+                }
+                let speedup = (features[0] + 0.2 * rng.normal()).exp2();
+                SpeedupRecord {
+                    name: format!("toy-{i}"),
+                    features,
+                    speedup,
+                    baseline_time: 1.0,
+                    optimized_time: 1.0 / speedup,
+                }
+            })
+            .collect()
     }
 
     #[test]
@@ -186,5 +438,112 @@ mod tests {
         let f = Forest::fit(&x, &y, &cfg);
         assert_eq!(f.trees.len(), 1);
         assert!(f.predict(&[1.0, 1.0]).is_finite());
+    }
+
+    #[test]
+    fn exact_and_binned_agree_on_the_toy_problem() {
+        let (x, y) = toy_problem(1500, 12);
+        let mut cfg = ForestConfig { num_trees: 8, threads: 2, ..Default::default() };
+        cfg.tree.engine = SplitEngine::Exact;
+        let fe = Forest::fit(&x, &y, &cfg);
+        cfg.tree.engine = SplitEngine::Binned;
+        let fb = Forest::fit(&x, &y, &cfg);
+        // Same decisions away from the boundary.
+        let mut rng = Rng::new(31);
+        let mut agree = 0usize;
+        let mut graded = 0usize;
+        for _ in 0..500 {
+            let p = [rng.range_f64(-2.0, 2.0), rng.range_f64(-2.0, 2.0)];
+            let pe = fe.predict(&p);
+            if pe.abs() < 0.1 {
+                continue;
+            }
+            graded += 1;
+            agree += (fb.decide(&p) == (pe > 0.0)) as usize;
+        }
+        assert!(graded > 300);
+        assert!(
+            agree as f64 / graded as f64 > 0.95,
+            "{agree}/{graded} decisions agree"
+        );
+    }
+
+    #[test]
+    fn poisoned_rows_are_typed_errors_not_panics() {
+        // Regression: a single NaN feature used to panic the split sweep
+        // (`partial_cmp().unwrap()`); now it is a typed, recoverable Err.
+        let mut recs = toy_records(50, 3);
+        recs[13].features[2] = f64::NAN;
+        let err = Forest::fit_records(&recs, &ForestConfig::default()).unwrap_err();
+        assert!(
+            matches!(
+                err,
+                FitError::NonFiniteFeature { row: 13, feature: 2, value } if value.is_nan()
+            ),
+            "{err:?}"
+        );
+        assert!(err.to_string().contains("feature 2"));
+
+        let mut recs = toy_records(50, 4);
+        recs[7].speedup = 0.0; // log2 -> -inf
+        let err = Forest::fit_records(&recs, &ForestConfig::default()).unwrap_err();
+        assert!(matches!(err, FitError::NonFiniteTarget { row: 7, .. }), "{err}");
+
+        let mut recs = toy_records(50, 5);
+        recs[0].features[0] = f64::INFINITY;
+        assert!(Forest::fit_records(&recs, &ForestConfig::default()).is_err());
+
+        let empty: Vec<SpeedupRecord> = Vec::new();
+        assert_eq!(
+            Forest::fit_records(&empty, &ForestConfig::default()).unwrap_err(),
+            FitError::EmptyTrainingSet
+        );
+
+        // clean records still fit
+        let recs = toy_records(80, 6);
+        let f = Forest::fit_records(&recs, &ForestConfig {
+            num_trees: 3,
+            threads: 1,
+            ..Default::default()
+        })
+        .unwrap();
+        assert!(f.predict(&recs[0].features).is_finite());
+    }
+
+    #[test]
+    fn predict_batch_matches_predict_at_any_thread_count() {
+        let (x, y) = toy_problem(400, 10);
+        let cfg = ForestConfig { num_trees: 6, threads: 2, ..Default::default() };
+        let f = Forest::fit(&x, &y, &cfg);
+        let probes: Vec<Vec<f64>> = (0..257)
+            .map(|i| vec![(i as f64 / 64.0) - 2.0, ((i * 7 % 257) as f64 / 64.0) - 2.0])
+            .collect();
+        let refs: Vec<&[f64]> = probes.iter().map(|p| p.as_slice()).collect();
+        let serial: Vec<f64> = probes.iter().map(|p| f.predict(p)).collect();
+        for threads in [1usize, 2, 5] {
+            assert_eq!(f.predict_batch_with(&refs, threads), serial, "threads={threads}");
+        }
+        assert_eq!(f.predict_batch(&refs), serial);
+    }
+
+    #[test]
+    fn oob_estimate_tracks_generalization() {
+        let (x, y) = toy_problem(600, 11);
+        let cfg = ForestConfig { num_trees: 15, threads: 2, ..Default::default() };
+        let (f, oob) = Forest::fit_with_oob(&x, &y, &cfg);
+        assert_eq!(f.trees.len(), 15);
+        assert_eq!(oob.total, 600);
+        // with 15 trees nearly every sample is OOB for some tree
+        assert!(oob.covered > 550, "covered {}", oob.covered);
+        // y variance is ~2.25; an OOB forest must beat the mean
+        assert!(oob.mse.is_finite() && oob.mse < 1.5, "mse {}", oob.mse);
+        assert!(
+            oob.decision_accuracy > 0.75,
+            "decision accuracy {}",
+            oob.decision_accuracy
+        );
+        // the returned forest is the plain fit (OOB is a side estimate)
+        let plain = Forest::fit(&x, &y, &cfg);
+        assert_eq!(f.predict(&[0.7, 0.7]), plain.predict(&[0.7, 0.7]));
     }
 }

@@ -37,6 +37,25 @@ pub fn save(forest: &Forest, path: &Path) -> Result<()> {
     Ok(())
 }
 
+/// Close the in-flight tree, enforcing its declared node count — a
+/// truncated or concatenated file must never load as a silently-wrong
+/// model (e.g. a 5-node tree collapsed to its first leaf would still
+/// pass `validate()`).
+fn close_tree(trees: &mut Vec<Tree>, current: Option<(usize, Vec<Node>)>) -> Result<()> {
+    if let Some((declared, nodes)) = current {
+        if nodes.len() != declared {
+            bail!(
+                "tree {}: declared {declared} nodes, found {} — truncated \
+                 or corrupt forest file",
+                trees.len(),
+                nodes.len()
+            );
+        }
+        trees.push(Tree { nodes });
+    }
+    Ok(())
+}
+
 pub fn load(path: &Path) -> Result<Forest> {
     let f = std::fs::File::open(path)
         .with_context(|| format!("open {}", path.display()))?;
@@ -47,20 +66,37 @@ pub fn load(path: &Path) -> Result<Forest> {
         .with_context(|| format!("bad header {header:?}"))?
         .parse()?;
     let mut trees: Vec<Tree> = Vec::with_capacity(trees_expected);
+    let mut summary: Option<String> = None;
     let mut current: Option<(usize, Vec<Node>)> = None;
     for line in lines {
         let line = line?;
-        if line.is_empty() || line.starts_with('#') {
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('#') {
+            // The first comment line is the persisted config summary.
+            if summary.is_none() {
+                summary = Some(rest.trim().to_string());
+            }
             continue;
         }
         if let Some(rest) = line.strip_prefix("tree ") {
-            if let Some((_, nodes)) = current.take() {
-                trees.push(Tree { nodes });
-            }
-            let nodes_part = rest
+            close_tree(&mut trees, current.take())?;
+            let (idx_part, n_part) = rest
                 .split_once(" nodes=")
                 .with_context(|| format!("bad tree line {line:?}"))?;
-            let n: usize = nodes_part.1.parse()?;
+            let idx: usize = idx_part
+                .trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad tree index in {line:?}: {e}"))?;
+            if idx != trees.len() {
+                bail!(
+                    "tree index {idx} out of order (expected {}) — forest \
+                     file corrupt or spliced",
+                    trees.len()
+                );
+            }
+            let n: usize = n_part.parse()?;
             current = Some((n, Vec::with_capacity(n)));
         } else if let Some((_, ref mut nodes)) = current {
             let mut it = line.split_whitespace();
@@ -83,16 +119,18 @@ pub fn load(path: &Path) -> Result<Forest> {
             bail!("node line before any tree header: {line:?}");
         }
     }
-    if let Some((_, nodes)) = current.take() {
-        trees.push(Tree { nodes });
-    }
+    close_tree(&mut trees, current.take())?;
     if trees.len() != trees_expected {
         bail!("expected {trees_expected} trees, found {}", trees.len());
     }
     for (i, t) in trees.iter().enumerate() {
         t.validate().map_err(|e| anyhow::anyhow!("tree {i}: {e}"))?;
     }
-    Ok(Forest { trees, config_summary: format!("loaded from {}", path.display()) })
+    // Restore the persisted config summary; legacy files without the
+    // `#` header line fall back to a provenance note.
+    let config_summary =
+        summary.unwrap_or_else(|| format!("loaded from {}", path.display()));
+    Ok(Forest { trees, config_summary })
 }
 
 #[cfg(test)]
@@ -116,12 +154,16 @@ mod tests {
     }
 
     #[test]
-    fn roundtrip_preserves_predictions() {
+    fn roundtrip_preserves_predictions_and_summary() {
         let f = toy_forest();
         let path = tmp("rt");
         save(&f, &path).unwrap();
         let g = load(&path).unwrap();
         assert_eq!(f.trees.len(), g.trees.len());
+        // the persisted `#` header line restores the config summary
+        // (it used to come back as "loaded from <path>")
+        assert_eq!(f.config_summary, g.config_summary);
+        assert!(g.config_summary.contains("trees=4"), "{}", g.config_summary);
         let mut rng = Rng::new(9);
         for _ in 0..50 {
             let p = [
@@ -131,6 +173,77 @@ mod tests {
             ];
             assert!((f.predict(&p) - g.predict(&p)).abs() < 1e-12);
         }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn legacy_files_without_summary_get_a_provenance_note() {
+        let path = tmp("legacy");
+        std::fs::write(&path, "lmtuner-forest v1 trees=1\ntree 0 nodes=1\nL 0.5\n")
+            .unwrap();
+        let g = load(&path).unwrap();
+        assert!(g.config_summary.contains("loaded from"), "{}", g.config_summary);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_forest_files_are_rejected() {
+        let f = toy_forest();
+        let path = tmp("trunc");
+        save(&f, &path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        // Chop the file at several points: every prefix that ends
+        // mid-tree must fail the declared-node-count check instead of
+        // loading a silently smaller model.
+        for keep in [lines.len() - 1, lines.len() - 3, 2 * lines.len() / 3] {
+            let cut = lines[..keep].join("\n");
+            std::fs::write(&path, &cut).unwrap();
+            assert!(
+                load(&path).is_err(),
+                "truncation to {keep}/{} lines was accepted",
+                lines.len()
+            );
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn declared_node_count_is_enforced() {
+        let path = tmp("count");
+        // 5 declared, 1 present, next tree header follows: the old
+        // loader accepted this as a 1-leaf tree that passes validate().
+        std::fs::write(
+            &path,
+            "lmtuner-forest v1 trees=2\n\
+             tree 0 nodes=5\nL 0.5\n\
+             tree 1 nodes=1\nL 0.25\n",
+        )
+        .unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("declared 5"), "{err:#}");
+        // over-long trees are rejected the same way
+        std::fs::write(
+            &path,
+            "lmtuner-forest v1 trees=1\ntree 0 nodes=1\nL 0.5\nL 0.6\n",
+        )
+        .unwrap();
+        assert!(load(&path).is_err(), "extra node accepted");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn tree_indices_must_be_sequential() {
+        let path = tmp("order");
+        std::fs::write(
+            &path,
+            "lmtuner-forest v1 trees=2\n\
+             tree 1 nodes=1\nL 0.5\n\
+             tree 0 nodes=1\nL 0.25\n",
+        )
+        .unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("out of order"), "{err:#}");
         std::fs::remove_file(&path).ok();
     }
 

@@ -18,6 +18,11 @@ pub struct Accuracy {
     /// Best per-instance penalty-weighted score.
     pub max_score: f64,
     pub n: usize,
+    /// Instances dropped by the skip-and-count guard: non-finite or
+    /// <= 0 speedups carry no usable oracle label, so they are excluded
+    /// from every metric and tallied here instead of poisoning the
+    /// means with NaN.
+    pub skipped: usize,
 }
 
 /// Per-instance penalty-weighted score of deciding `use_lmem` when the
@@ -25,7 +30,16 @@ pub struct Accuracy {
 ///   correct        -> 1
 ///   said yes, lost -> t_best / t_chosen = speedup (< 1)
 ///   said no, lost  -> 1 / speedup       (< 1)
+///
+/// The score is only defined for finite, strictly positive speedups
+/// (both branches take a ratio or compare against 1.0). An invalid
+/// speedup returns an *explicit* NaN so accidental use stays loud;
+/// streaming callers never see it — [`AccuracyAccumulator::push`]
+/// skips-and-counts invalid instances before scoring.
 pub fn instance_score(speedup: f64, use_lmem: bool) -> f64 {
+    if !(speedup.is_finite() && speedup > 0.0) {
+        return f64::NAN;
+    }
     let oracle = speedup > 1.0;
     if use_lmem == oracle {
         1.0
@@ -48,6 +62,7 @@ pub struct AccuracyAccumulator {
     min: f64,
     max: f64,
     n: usize,
+    skipped: usize,
 }
 
 impl AccuracyAccumulator {
@@ -57,7 +72,17 @@ impl AccuracyAccumulator {
 
     /// Score one instance: the true measured speedup and the model's
     /// use/don't-use decision.
+    ///
+    /// Guard policy (**skip-and-count**): a non-finite or <= 0 speedup
+    /// has no oracle label and no defined penalty score, so the
+    /// instance is excluded from every metric and counted in
+    /// [`Accuracy::skipped`] — it never contributes NaN or a negative
+    /// "score" to the reported accuracy.
     pub fn push(&mut self, speedup: f64, use_lmem: bool) {
+        if !(speedup.is_finite() && speedup > 0.0) {
+            self.skipped += 1;
+            return;
+        }
         let oracle = speedup > 1.0;
         if use_lmem == oracle {
             self.correct += 1;
@@ -77,9 +102,14 @@ impl AccuracyAccumulator {
         self.n
     }
 
+    /// Instances rejected by the skip-and-count guard so far.
+    pub fn skipped(&self) -> usize {
+        self.skipped
+    }
+
     pub fn finish(&self) -> Accuracy {
         if self.n == 0 {
-            return Accuracy::default();
+            return Accuracy { skipped: self.skipped, ..Accuracy::default() };
         }
         Accuracy {
             count_based: self.correct as f64 / self.n as f64,
@@ -87,6 +117,7 @@ impl AccuracyAccumulator {
             min_score: self.min,
             max_score: self.max,
             n: self.n,
+            skipped: self.skipped,
         }
     }
 }
@@ -170,6 +201,45 @@ mod tests {
         let a = evaluate(&[], &[]);
         assert_eq!(a.n, 0);
         assert_eq!(a.count_based, 0.0);
+    }
+
+    #[test]
+    fn invalid_speedups_are_skipped_and_counted() {
+        // NaN / inf / 0 / negative speedups must not poison the metrics:
+        // the documented skip-and-count policy excludes them entirely.
+        let mut acc = AccuracyAccumulator::new();
+        acc.push(2.0, true); // valid, correct
+        acc.push(f64::NAN, true);
+        acc.push(f64::INFINITY, false);
+        acc.push(0.0, false);
+        acc.push(-3.0, true);
+        acc.push(0.5, false); // valid, correct
+        let a = acc.finish();
+        assert_eq!(a.n, 2);
+        assert_eq!(a.skipped, 4);
+        assert_eq!(acc.skipped(), 4);
+        assert_eq!(a.count_based, 1.0);
+        assert_eq!(a.penalty_weighted, 1.0);
+        assert!(a.min_score.is_finite() && a.max_score.is_finite());
+
+        // all-invalid input degrades to the zeroed default + the tally
+        let mut bad = AccuracyAccumulator::new();
+        bad.push(f64::NEG_INFINITY, true);
+        let b = bad.finish();
+        assert_eq!(b.n, 0);
+        assert_eq!(b.skipped, 1);
+        assert_eq!(b.count_based, 0.0);
+    }
+
+    #[test]
+    fn instance_score_is_nan_for_invalid_speedups() {
+        for s in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY, 0.0, -1.5] {
+            assert!(instance_score(s, true).is_nan(), "{s}");
+            assert!(instance_score(s, false).is_nan(), "{s}");
+        }
+        // valid inputs are untouched by the guard
+        assert_eq!(instance_score(2.0, true), 1.0);
+        assert_eq!(instance_score(0.5, true), 0.5);
     }
 
     #[test]

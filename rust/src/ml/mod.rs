@@ -1,9 +1,12 @@
-//! Machine-learning substrate built from scratch: CART regression trees,
-//! Random Forest (paper §5.1: 20 trees, 4 attributes/node), the paper's
-//! two accuracy metrics, tensor export for the PJRT inference path, and
-//! model persistence.
+//! Machine-learning substrate built from scratch: CART regression trees
+//! (exact + pre-binned split engines), Random Forest (paper §5.1: 20
+//! trees, 4 attributes/node), the paper's two accuracy metrics,
+//! deterministic k-fold model selection (`select`), tensor export for
+//! the PJRT inference path, and model persistence.
+pub mod binning;
 pub mod export;
 pub mod forest;
 pub mod io;
 pub mod metrics;
+pub mod select;
 pub mod tree;

@@ -1,0 +1,626 @@
+//! Model selection: deterministic k-fold cross-validation over a forest
+//! hyperparameter grid (`num_trees × mtry × min_samples_leaf`).
+//!
+//! The OpenCL autotuning literature (Falch & Elster 1506.00842; Cummins
+//! et al. 1511.02490) finds that model/hyperparameter *search*, not one
+//! fixed configuration, is what makes ML auto-tuners portable across
+//! workloads and devices. This module is that search for the paper's
+//! Random Forest:
+//!
+//! * every (config, fold) cell is an independent task fanned across
+//!   `util::pool::parallel_map` — order-preserving, with all RNG streams
+//!   derived from fixed seeds, so every metric (and the selected best
+//!   config) is **identical at any thread count**; only the wall-time
+//!   columns are measurements;
+//! * each cell reports both paper metrics (count-based +
+//!   penalty-weighted accuracy) plus fit/predict wall time;
+//! * [`write_csv`] emits the per-config table and
+//!   [`save_forest_config`]/[`load_forest_config`] persist the winner in
+//!   a small key=value file that `lmtuner train`/`crossdev` consume via
+//!   `--forest-config`.
+//!
+//! Fold assignment: sample `i` goes to fold `pos_i % folds` where
+//! `pos_i` is `i`'s position in a seed-shuffled permutation — balanced
+//! folds, deterministic from `TuneConfig::seed` alone.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::sim::exec::SpeedupRecord;
+use crate::util::pool::parallel_map;
+use crate::util::prng::Rng;
+
+use super::binning::BinnedDataset;
+use super::forest::{Forest, ForestConfig};
+use super::metrics::AccuracyAccumulator;
+use super::tree::{SplitEngine, TreeConfig};
+
+/// The hyperparameter grid: the cross product of the three axes, in
+/// `num_trees → mtry → min_samples_leaf` (row-major) order.
+#[derive(Clone, Debug)]
+pub struct GridSpec {
+    pub num_trees: Vec<usize>,
+    pub mtry: Vec<usize>,
+    pub min_samples_leaf: Vec<usize>,
+}
+
+impl Default for GridSpec {
+    fn default() -> Self {
+        GridSpec {
+            num_trees: vec![10, 20, 40],
+            mtry: vec![2, 4, 8],
+            min_samples_leaf: vec![1, 4],
+        }
+    }
+}
+
+impl GridSpec {
+    /// Parse three comma-separated axis lists (the CLI surface).
+    pub fn parse(num_trees: &str, mtry: &str, min_samples_leaf: &str) -> Result<GridSpec> {
+        let axis = |name: &str, s: &str| -> Result<Vec<usize>> {
+            let vals: Vec<usize> = s
+                .split(',')
+                .map(|v| {
+                    v.trim()
+                        .parse::<usize>()
+                        .map_err(|e| anyhow::anyhow!("--{name} {v:?}: {e}"))
+                })
+                .collect::<Result<_>>()?;
+            if vals.is_empty() || vals.iter().any(|&v| v == 0) {
+                bail!("--{name} needs positive comma-separated values, got {s:?}");
+            }
+            Ok(vals)
+        };
+        Ok(GridSpec {
+            num_trees: axis("trees", num_trees)?,
+            mtry: axis("mtry", mtry)?,
+            min_samples_leaf: axis("min-leaf", min_samples_leaf)?,
+        })
+    }
+
+    pub fn len(&self) -> usize {
+        self.num_trees.len() * self.mtry.len() * self.min_samples_leaf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Materialize the grid as full forest configs on top of `base`
+    /// (base supplies engine, max_bins, max_depth, seed; `threads` is
+    /// forced to 1 — parallelism lives at the (config, fold) level).
+    pub fn configs(&self, base: &ForestConfig) -> Vec<ForestConfig> {
+        let mut out = Vec::with_capacity(self.len());
+        for &trees in &self.num_trees {
+            for &mtry in &self.mtry {
+                for &min_leaf in &self.min_samples_leaf {
+                    out.push(ForestConfig {
+                        num_trees: trees,
+                        tree: TreeConfig {
+                            mtry,
+                            min_samples_leaf: min_leaf,
+                            ..base.tree
+                        },
+                        seed: base.seed,
+                        threads: 1,
+                    });
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Settings of one cross-validation run.
+#[derive(Clone, Debug)]
+pub struct TuneConfig {
+    /// Folds (>= 2). Every sample is evaluated exactly once.
+    pub folds: usize,
+    /// Seed of the fold permutation. The forests' bagging/mtry streams
+    /// are seeded by `base.seed` — `lmtuner tune` sets both from
+    /// `--seed`, so one flag varies the whole run.
+    pub seed: u64,
+    /// Concurrent (config, fold) tasks. Affects wall time only — every
+    /// metric is identical at any value.
+    pub threads: usize,
+    /// Template for every grid cell (engine, bins, depth, forest seed).
+    pub base: ForestConfig,
+}
+
+impl Default for TuneConfig {
+    fn default() -> Self {
+        TuneConfig {
+            folds: 5,
+            seed: 0x7E57,
+            threads: std::thread::available_parallelism()
+                .map(|n| n.get())
+                .unwrap_or(1),
+            base: ForestConfig::default(),
+        }
+    }
+}
+
+/// Cross-validated score of one grid cell (fold means; times are totals
+/// across folds).
+#[derive(Clone, Debug)]
+pub struct ConfigScore {
+    pub config: ForestConfig,
+    /// Mean count-based accuracy over folds.
+    pub count_based: f64,
+    /// Population std-dev of count-based accuracy across folds.
+    pub count_std: f64,
+    /// Mean penalty-weighted accuracy over folds.
+    pub penalty_weighted: f64,
+    /// Worst per-instance penalty score seen in any fold.
+    pub min_score: f64,
+    /// Total fit wall time across folds (seconds).
+    pub fit_seconds: f64,
+    /// Total predict wall time across folds (seconds).
+    pub predict_seconds: f64,
+    pub folds: usize,
+}
+
+impl ConfigScore {
+    /// One-line human-readable form (also used by `lmtuner tune`).
+    pub fn render(&self) -> String {
+        format!(
+            "trees={:<3} mtry={:<2} min_leaf={:<2} count {:.3}±{:.3}  penalty {:.3}  \
+             min {:.2}  fit {:.2}s predict {:.2}s",
+            self.config.num_trees,
+            self.config.tree.mtry,
+            self.config.tree.min_samples_leaf,
+            self.count_based,
+            self.count_std,
+            self.penalty_weighted,
+            self.min_score,
+            self.fit_seconds,
+            self.predict_seconds
+        )
+    }
+}
+
+/// The full grid result. `scores` is in grid order; `best` indexes the
+/// winner (highest mean count-based accuracy; ties go to the higher
+/// penalty-weighted accuracy, then to the earlier — cheaper — grid
+/// cell).
+#[derive(Clone, Debug)]
+pub struct TuneOutcome {
+    pub scores: Vec<ConfigScore>,
+    pub best: usize,
+    /// Instances cross-validated.
+    pub rows: usize,
+    pub folds: usize,
+}
+
+impl TuneOutcome {
+    pub fn best_score(&self) -> &ConfigScore {
+        &self.scores[self.best]
+    }
+}
+
+struct FoldScore {
+    count: f64,
+    penalty: f64,
+    min_score: f64,
+    fit_s: f64,
+    predict_s: f64,
+}
+
+/// Run the grid × k-fold cross-validation. Deterministic for a fixed
+/// `cfg.seed`/`cfg.base.seed` at any `cfg.threads` (tested in
+/// `rust/tests/mlcore.rs`).
+pub fn cross_validate(
+    records: &[SpeedupRecord],
+    grid: &GridSpec,
+    cfg: &TuneConfig,
+) -> Result<TuneOutcome> {
+    anyhow::ensure!(cfg.folds >= 2, "cross-validation needs >= 2 folds, got {}", cfg.folds);
+    anyhow::ensure!(!grid.is_empty(), "empty hyperparameter grid");
+    anyhow::ensure!(
+        records.len() >= 2 * cfg.folds,
+        "{} records cannot fill {} folds (need >= {})",
+        records.len(),
+        cfg.folds,
+        2 * cfg.folds
+    );
+    // Fail fast on poisoned rows: one typed error up front beats one
+    // per (config, fold) task.
+    Forest::validate_records(records)?;
+
+    // Deterministic balanced fold assignment.
+    let n = records.len();
+    let mut order: Vec<usize> = (0..n).collect();
+    Rng::new(cfg.seed ^ 0xF0_1D5).shuffle(&mut order);
+    let fold_of = |pos: usize| pos % cfg.folds;
+
+    let configs = grid.configs(&cfg.base);
+    let config_ids: Vec<usize> = (0..configs.len()).collect();
+
+    // One fold resident at a time: extract the fold's training matrix
+    // and bin it ONCE (every grid config shares the columns and the
+    // binning — both depend only on the data, not the hyperparameters),
+    // fan the grid across the pool, then drop the fold before building
+    // the next. Peak memory stays ~one training matrix regardless of
+    // `folds`, and `fit_s` times exactly the per-config training work.
+    struct FoldData {
+        x: Vec<Vec<f64>>,
+        y: Vec<f64>,
+        /// `None` with the exact engine, which would ignore it anyway.
+        bins: Option<BinnedDataset>,
+        test: Vec<usize>,
+    }
+    let mut per_config: Vec<Vec<FoldScore>> =
+        (0..configs.len()).map(|_| Vec::with_capacity(cfg.folds)).collect();
+    for fi in 0..cfg.folds {
+        let fd = {
+            let train: Vec<&SpeedupRecord> = order
+                .iter()
+                .enumerate()
+                .filter(|(pos, _)| fold_of(*pos) != fi)
+                .map(|(_, &i)| &records[i])
+                .collect();
+            let test: Vec<usize> = order
+                .iter()
+                .enumerate()
+                .filter(|(pos, _)| fold_of(*pos) == fi)
+                .map(|(_, &i)| i)
+                .collect();
+            let (x, y) = Forest::columns(&train);
+            let bins = match cfg.base.tree.engine {
+                SplitEngine::Binned =>
+                    Some(BinnedDataset::build(&x, cfg.base.tree.max_bins)),
+                SplitEngine::Exact => None,
+            };
+            FoldData { x, y, bins, test }
+        };
+
+        let results: Vec<Result<FoldScore>> =
+            parallel_map(&config_ids, cfg.threads, |&ci| -> Result<FoldScore> {
+                let t0 = std::time::Instant::now();
+                let forest = match &fd.bins {
+                    Some(bins) => {
+                        Forest::fit_prebinned(&fd.x, &fd.y, bins, &configs[ci])
+                    }
+                    None => Forest::fit(&fd.x, &fd.y, &configs[ci]),
+                };
+                let fit_s = t0.elapsed().as_secs_f64();
+
+                let rows: Vec<&[f64]> = fd
+                    .test
+                    .iter()
+                    .map(|&i| &records[i].features[..])
+                    .collect();
+                let t1 = std::time::Instant::now();
+                // threads=1: parallelism lives at the grid level.
+                let preds = forest.predict_batch_with(&rows, 1);
+                let predict_s = t1.elapsed().as_secs_f64();
+
+                let mut acc = AccuracyAccumulator::new();
+                for (&i, p) in fd.test.iter().zip(&preds) {
+                    acc.push_record(&records[i], *p > 0.0);
+                }
+                let a = acc.finish();
+                Ok(FoldScore {
+                    count: a.count_based,
+                    penalty: a.penalty_weighted,
+                    min_score: a.min_score,
+                    fit_s,
+                    predict_s,
+                })
+            });
+        for (ci, r) in results.into_iter().enumerate() {
+            per_config[ci].push(r?);
+        }
+    }
+
+    let mut scores = Vec::with_capacity(configs.len());
+    for (config, folds) in configs.into_iter().zip(per_config) {
+        let k = folds.len() as f64;
+        let count = folds.iter().map(|f| f.count).sum::<f64>() / k;
+        let count_std = (folds
+            .iter()
+            .map(|f| (f.count - count) * (f.count - count))
+            .sum::<f64>()
+            / k)
+            .sqrt();
+        scores.push(ConfigScore {
+            config,
+            count_based: count,
+            count_std,
+            penalty_weighted: folds.iter().map(|f| f.penalty).sum::<f64>() / k,
+            min_score: folds
+                .iter()
+                .map(|f| f.min_score)
+                .fold(f64::INFINITY, f64::min),
+            fit_seconds: folds.iter().map(|f| f.fit_s).sum(),
+            predict_seconds: folds.iter().map(|f| f.predict_s).sum(),
+            folds: cfg.folds,
+        });
+    }
+
+    // Winner: strict improvement only, so grid order breaks exact ties
+    // toward the earlier (cheaper) cell.
+    let mut best = 0usize;
+    for (i, s) in scores.iter().enumerate().skip(1) {
+        let b = &scores[best];
+        if s.count_based > b.count_based
+            || (s.count_based == b.count_based
+                && s.penalty_weighted > b.penalty_weighted)
+        {
+            best = i;
+        }
+    }
+
+    Ok(TuneOutcome { scores, best, rows: n, folds: cfg.folds })
+}
+
+/// Write the per-config CV table. Metric columns are deterministic for
+/// a fixed seed; the two `*_seconds` columns are wall-clock
+/// measurements.
+pub fn write_csv(out: &TuneOutcome, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("create {}", dir.display()))?;
+        }
+    }
+    let mut s = String::from(
+        "trees,mtry,min_leaf,folds,count_based,count_std,penalty_weighted,\
+         min_score,fit_seconds,predict_seconds,best\n",
+    );
+    for (i, c) in out.scores.iter().enumerate() {
+        s.push_str(&format!(
+            "{},{},{},{},{:.6},{:.6},{:.6},{:.6},{:.4},{:.4},{}\n",
+            c.config.num_trees,
+            c.config.tree.mtry,
+            c.config.tree.min_samples_leaf,
+            c.folds,
+            c.count_based,
+            c.count_std,
+            c.penalty_weighted,
+            c.min_score,
+            c.fit_seconds,
+            c.predict_seconds,
+            (i == out.best) as u8
+        ));
+    }
+    std::fs::write(path, s).with_context(|| format!("write {}", path.display()))
+}
+
+/// Persist a forest config as the best-config summary `lmtuner train
+/// --forest-config` / `crossdev --forest-config` consume. Runtime
+/// concerns (seed, threads) are deliberately not persisted.
+pub fn save_forest_config(cfg: &ForestConfig, path: &Path) -> Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("create {}", dir.display()))?;
+        }
+    }
+    let body = format!(
+        "lmtuner-forest-config v1\n\
+         trees={}\nmtry={}\nmin_leaf={}\nmax_depth={}\nengine={}\nbins={}\n",
+        cfg.num_trees,
+        cfg.tree.mtry,
+        cfg.tree.min_samples_leaf,
+        cfg.tree.max_depth,
+        cfg.tree.engine,
+        cfg.tree.max_bins
+    );
+    std::fs::write(path, body).with_context(|| format!("write {}", path.display()))
+}
+
+/// Load a best-config summary written by [`save_forest_config`].
+/// Missing keys keep their defaults; unknown keys are an error (a typo
+/// must not silently fall back to defaults).
+pub fn load_forest_config(path: &Path) -> Result<ForestConfig> {
+    let body = std::fs::read_to_string(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut lines = body.lines();
+    let header = lines.next().context("empty forest-config file")?;
+    anyhow::ensure!(
+        header.trim() == "lmtuner-forest-config v1",
+        "bad forest-config header {header:?}"
+    );
+    let mut cfg = ForestConfig::default();
+    // Numeric parse failures name the file and offending line, like
+    // every other error path here — a bare ParseIntError would not.
+    let num = |line: &str, value: &str| -> Result<usize> {
+        value.trim().parse::<usize>().map_err(|e| {
+            anyhow::anyhow!("bad forest-config line {line:?} in {}: {e}", path.display())
+        })
+    };
+    for line in lines {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let (key, value) = line
+            .split_once('=')
+            .with_context(|| format!("bad forest-config line {line:?}"))?;
+        match key.trim() {
+            "trees" => cfg.num_trees = num(line, value)?,
+            "mtry" => cfg.tree.mtry = num(line, value)?,
+            "min_leaf" => cfg.tree.min_samples_leaf = num(line, value)?,
+            "max_depth" => cfg.tree.max_depth = num(line, value)?,
+            "engine" => {
+                cfg.tree.engine = value.trim().parse().map_err(|e| {
+                    anyhow::anyhow!("in {}: {e}", path.display())
+                })?
+            }
+            "bins" => cfg.tree.max_bins = num(line, value)?,
+            other => bail!("unknown forest-config key {other:?} in {}", path.display()),
+        }
+    }
+    // The same floor GridSpec::parse enforces on the CLI axes: a
+    // hand-edited zero would otherwise fit a degenerate model (0 trees
+    // predicts NaN; mtry 0 grows single-leaf stumps) without any error.
+    anyhow::ensure!(
+        cfg.num_trees >= 1
+            && cfg.tree.mtry >= 1
+            && cfg.tree.min_samples_leaf >= 1
+            && cfg.tree.max_depth >= 1
+            && cfg.tree.max_bins >= 2,
+        "degenerate forest config in {} (trees/mtry/min_leaf/max_depth \
+         must be >= 1, bins >= 2)",
+        path.display()
+    );
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernelmodel::features::NUM_FEATURES;
+    use crate::ml::tree::SplitEngine;
+
+    fn synth_records(n: usize, seed: u64) -> Vec<SpeedupRecord> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                let mut features = [0.0; NUM_FEATURES];
+                for f in features.iter_mut() {
+                    *f = rng.range_f64(-1.0, 1.0);
+                }
+                let signal = features[0] * 1.5 - features[3] + 0.2 * rng.normal();
+                let speedup = signal.exp2().clamp(0.01, 100.0);
+                SpeedupRecord {
+                    name: format!("cv-{i}"),
+                    features,
+                    speedup,
+                    baseline_time: 1.0,
+                    optimized_time: 1.0 / speedup,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn grid_parse_and_materialize() {
+        let g = GridSpec::parse("5, 10", "2,4", "1").unwrap();
+        assert_eq!(g.len(), 4);
+        let cfgs = g.configs(&ForestConfig::default());
+        assert_eq!(cfgs.len(), 4);
+        assert_eq!(cfgs[0].num_trees, 5);
+        assert_eq!(cfgs[0].tree.mtry, 2);
+        assert_eq!(cfgs[3].num_trees, 10);
+        assert_eq!(cfgs[3].tree.mtry, 4);
+        assert!(cfgs.iter().all(|c| c.threads == 1));
+        assert!(GridSpec::parse("5,x", "2", "1").is_err());
+        assert!(GridSpec::parse("0", "2", "1").is_err());
+    }
+
+    #[test]
+    fn cross_validate_scores_the_grid() {
+        let records = synth_records(400, 0xCAFE);
+        let grid = GridSpec {
+            num_trees: vec![3, 8],
+            mtry: vec![4],
+            min_samples_leaf: vec![1],
+        };
+        let cfg = TuneConfig { folds: 4, threads: 2, ..Default::default() };
+        let out = cross_validate(&records, &grid, &cfg).unwrap();
+        assert_eq!(out.scores.len(), 2);
+        assert_eq!(out.rows, 400);
+        for s in &out.scores {
+            assert!((0.0..=1.0).contains(&s.count_based), "{}", s.count_based);
+            assert!((0.0..=1.0).contains(&s.penalty_weighted));
+            assert!(s.fit_seconds >= 0.0 && s.predict_seconds >= 0.0);
+            assert!(!s.render().is_empty());
+        }
+        // the learnable signal must beat coin flipping for some config
+        assert!(out.best_score().count_based > 0.6, "{}", out.best_score().count_based);
+    }
+
+    #[test]
+    fn cross_validate_rejects_bad_input() {
+        let records = synth_records(30, 1);
+        let grid = GridSpec::default();
+        assert!(cross_validate(
+            &records,
+            &grid,
+            &TuneConfig { folds: 1, ..Default::default() }
+        )
+        .is_err());
+        assert!(cross_validate(
+            &records[..4],
+            &grid,
+            &TuneConfig { folds: 5, ..Default::default() }
+        )
+        .is_err());
+        let mut poisoned = synth_records(60, 2);
+        poisoned[10].features[0] = f64::NAN;
+        let err = cross_validate(
+            &poisoned,
+            &grid,
+            &TuneConfig { folds: 3, ..Default::default() },
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("finite"), "{err:#}");
+    }
+
+    #[test]
+    fn forest_config_roundtrip() {
+        let mut cfg = ForestConfig::default();
+        cfg.num_trees = 37;
+        cfg.tree.mtry = 6;
+        cfg.tree.min_samples_leaf = 3;
+        cfg.tree.max_depth = 21;
+        cfg.tree.engine = SplitEngine::Exact;
+        cfg.tree.max_bins = 128;
+        let path = std::env::temp_dir()
+            .join(format!("lmtuner-fc-{}.txt", std::process::id()));
+        save_forest_config(&cfg, &path).unwrap();
+        let back = load_forest_config(&path).unwrap();
+        assert_eq!(back.num_trees, 37);
+        assert_eq!(back.tree.mtry, 6);
+        assert_eq!(back.tree.min_samples_leaf, 3);
+        assert_eq!(back.tree.max_depth, 21);
+        assert_eq!(back.tree.engine, SplitEngine::Exact);
+        assert_eq!(back.tree.max_bins, 128);
+        // unknown keys are loud
+        std::fs::write(&path, "lmtuner-forest-config v1\nforests=2\n").unwrap();
+        assert!(load_forest_config(&path).is_err());
+        // degenerate values are rejected like the CLI grid axes (a
+        // 0-tree forest would predict NaN without any error)
+        std::fs::write(&path, "lmtuner-forest-config v1\ntrees=0\n").unwrap();
+        assert!(load_forest_config(&path).is_err());
+        std::fs::write(&path, "lmtuner-forest-config v1\nmtry=0\n").unwrap();
+        assert!(load_forest_config(&path).is_err());
+        // bad header is loud
+        std::fs::write(&path, "not a config\n").unwrap();
+        assert!(load_forest_config(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn csv_has_one_row_per_config_plus_header() {
+        let records = synth_records(120, 9);
+        let grid = GridSpec {
+            num_trees: vec![3],
+            mtry: vec![2, 4],
+            min_samples_leaf: vec![1],
+        };
+        let out = cross_validate(
+            &records,
+            &grid,
+            &TuneConfig { folds: 3, threads: 1, ..Default::default() },
+        )
+        .unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("lmtuner-tunecsv-{}.csv", std::process::id()));
+        write_csv(&out, &path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = body.lines().collect();
+        assert_eq!(lines.len(), 1 + 2);
+        assert!(lines[0].starts_with("trees,mtry,min_leaf,folds,count_based"));
+        // exactly one row is flagged best
+        let bests = lines[1..]
+            .iter()
+            .filter(|l| l.ends_with(",1"))
+            .count();
+        assert_eq!(bests, 1);
+        std::fs::remove_file(&path).ok();
+    }
+}

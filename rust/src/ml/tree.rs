@@ -4,8 +4,54 @@
 //! (`mtry`), grown to purity subject to `min_samples_leaf` — matching
 //! Weka's RandomTree as used by the paper (20 trees, 4 attributes/node,
 //! unlimited depth).
+//!
+//! Two split engines share the growth logic and the scoring rule
+//! (SSE reduction with the constant term dropped):
+//!
+//! * [`SplitEngine::Exact`] — the v1 reference: re-sort the node's
+//!   samples per candidate feature and sweep adjacent distinct values
+//!   (O(mtry·n log n) per node).
+//! * [`SplitEngine::Binned`] — ml-v2, the default: sweep pre-binned
+//!   histograms ([`crate::ml::binning`], ≤ 256 quantile bins per
+//!   feature) in O(mtry·n) per node, falling back to a sort of the
+//!   node's `u8` codes for tiny nodes where zeroing 256 buckets would
+//!   dominate. See `binning.rs` for the equivalence contract.
+//!
+//! Split sweeps order values with `f64::total_cmp`, so a NaN feature
+//! value can never panic the trainer (NaN sorts last / bins last and is
+//! never a valid cut); rejecting non-finite inputs outright is the job
+//! of `Forest::fit_records`.
 
+use super::binning::BinnedDataset;
 use crate::util::prng::Rng;
+
+/// How candidate splits are enumerated. `Exact` is the v1 per-node-sort
+/// reference engine; `Binned` is the ml-v2 histogram engine.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SplitEngine {
+    Exact,
+    Binned,
+}
+
+impl std::fmt::Display for SplitEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SplitEngine::Exact => "exact",
+            SplitEngine::Binned => "binned",
+        })
+    }
+}
+
+impl std::str::FromStr for SplitEngine {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "exact" => Ok(SplitEngine::Exact),
+            "binned" => Ok(SplitEngine::Binned),
+            other => Err(format!("unknown split engine {other:?} (exact|binned)")),
+        }
+    }
+}
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Node {
@@ -38,11 +84,22 @@ pub struct TreeConfig {
     pub min_samples_leaf: usize,
     /// Hard depth cap (large = effectively unlimited).
     pub max_depth: usize,
+    /// Split-candidate enumeration engine.
+    pub engine: SplitEngine,
+    /// Quantile bins per feature for the binned engine (clamped to
+    /// [2, 256]; codes must fit a `u8`).
+    pub max_bins: usize,
 }
 
 impl Default for TreeConfig {
     fn default() -> Self {
-        TreeConfig { mtry: 4, min_samples_leaf: 1, max_depth: 64 }
+        TreeConfig {
+            mtry: 4,
+            min_samples_leaf: 1,
+            max_depth: 64,
+            engine: SplitEngine::Binned,
+            max_bins: super::binning::MAX_BINS,
+        }
     }
 }
 
@@ -56,7 +113,9 @@ struct Builder<'a> {
 impl Tree {
     /// Fit on (x columns, y) using the provided sample indices (the
     /// bootstrap sample). `x` is column-major: x[f][i] is feature f of
-    /// sample i.
+    /// sample i. Dispatches on `cfg.engine`; with `Binned` a private
+    /// binning is built for this tree — forests bin once and call
+    /// [`Tree::fit_with_bins`] directly instead.
     pub fn fit(
         x: &[Vec<f64>],
         y: &[f64],
@@ -65,7 +124,40 @@ impl Tree {
         rng: &mut Rng,
     ) -> Tree {
         assert!(!x.is_empty() && !indices.is_empty());
-        let mut b = Builder { x, y, cfg, nodes: Vec::new() };
+        match cfg.engine {
+            SplitEngine::Exact => {
+                let mut b = Builder { x, y, cfg, nodes: Vec::new() };
+                b.nodes.push(Node::Leaf { value: 0.0 }); // placeholder root
+                b.grow(0, indices, 0, rng);
+                Tree { nodes: b.nodes }
+            }
+            SplitEngine::Binned => {
+                let bins = BinnedDataset::build(x, cfg.max_bins);
+                Tree::fit_with_bins(&bins, y, indices, cfg, rng)
+            }
+        }
+    }
+
+    /// Fit against a pre-binned dataset (`ml::binning`). Thresholds
+    /// stored on split nodes are raw feature-space cut values, so the
+    /// resulting tree predicts on unbinned feature vectors.
+    pub fn fit_with_bins(
+        bins: &BinnedDataset,
+        y: &[f64],
+        indices: &mut [usize],
+        cfg: TreeConfig,
+        rng: &mut Rng,
+    ) -> Tree {
+        assert!(bins.num_features() > 0 && !indices.is_empty());
+        let nb = bins.max_bins_used();
+        let mut b = BinnedBuilder {
+            bins,
+            y,
+            cfg,
+            nodes: Vec::new(),
+            cnt: vec![0u32; nb],
+            sum: vec![0.0f64; nb],
+        };
         b.nodes.push(Node::Leaf { value: 0.0 }); // placeholder root
         b.grow(0, indices, 0, rng);
         Tree { nodes: b.nodes }
@@ -142,7 +234,8 @@ impl<'a> Builder<'a> {
             None => self.nodes[node] = Node::Leaf { value: mean },
             Some((feature, threshold)) => {
                 // Partition in place.
-                let mid = partition(idx, |i| self.x[feature][i] <= threshold);
+                let col = &self.x[feature];
+                let mid = partition(idx, |i| col[i] <= threshold);
                 if mid == 0 || mid == idx.len() {
                     self.nodes[node] = Node::Leaf { value: mean };
                     return;
@@ -175,9 +268,8 @@ impl<'a> Builder<'a> {
         let mut order: Vec<usize> = idx.to_vec();
         for &f in &feats {
             let col = &self.x[f];
-            order.sort_unstable_by(|&a, &b| {
-                col[a].partial_cmp(&col[b]).unwrap()
-            });
+            // total_cmp: NaN sorts last and can never panic the sweep.
+            order.sort_unstable_by(|&a, &b| col[a].total_cmp(&col[b]));
             let mut lsum = 0.0;
             let mut lcnt = 0.0;
             for w in 0..order.len() - 1 {
@@ -185,8 +277,8 @@ impl<'a> Builder<'a> {
                 lsum += self.y[i];
                 lcnt += 1.0;
                 let (a, b) = (col[i], col[order[w + 1]]);
-                if a == b {
-                    continue; // not a valid cut point
+                if !(a < b) {
+                    continue; // equal (or NaN-adjacent): not a valid cut
                 }
                 let lc = lcnt as usize;
                 let rc = order.len() - lc;
@@ -204,6 +296,155 @@ impl<'a> Builder<'a> {
             }
         }
         best.map(|(_, f, t)| (f, t))
+    }
+}
+
+/// Node sizes below this use a sort of the node's `u8` codes instead of
+/// the bucket sweep: for tiny nodes, zeroing and scanning up to 256
+/// buckets per candidate feature costs more than sorting the handful of
+/// codes. Both paths enumerate the same candidates with the same scores.
+const SORT_SWEEP_CUTOFF: usize = 128;
+
+struct BinnedBuilder<'a> {
+    bins: &'a BinnedDataset,
+    y: &'a [f64],
+    cfg: TreeConfig,
+    nodes: Vec<Node>,
+    /// Per-bin sample counts, reused across nodes (zeroed per feature).
+    cnt: Vec<u32>,
+    /// Per-bin target sums, reused across nodes.
+    sum: Vec<f64>,
+}
+
+impl<'a> BinnedBuilder<'a> {
+    fn grow(&mut self, node: usize, idx: &mut [usize], depth: usize, rng: &mut Rng) {
+        let y = self.y;
+        let mean = idx.iter().map(|&i| y[i]).sum::<f64>() / idx.len() as f64;
+
+        if idx.len() < 2 * self.cfg.min_samples_leaf || depth >= self.cfg.max_depth {
+            self.nodes[node] = Node::Leaf { value: mean };
+            return;
+        }
+
+        match self.best_split(idx, rng) {
+            None => self.nodes[node] = Node::Leaf { value: mean },
+            Some((feature, bin)) => {
+                let threshold = self.bins.features[feature].cuts[bin];
+                let codes = &self.bins.codes[feature];
+                // code <= bin  iff  x <= cuts[bin] (binning.rs), so the
+                // u8 partition is the raw-threshold partition.
+                let mid = partition(idx, |i| codes[i] as usize <= bin);
+                if mid == 0 || mid == idx.len() {
+                    self.nodes[node] = Node::Leaf { value: mean };
+                    return;
+                }
+                let left = self.nodes.len();
+                self.nodes.push(Node::Leaf { value: 0.0 });
+                let right = self.nodes.len();
+                self.nodes.push(Node::Leaf { value: 0.0 });
+                self.nodes[node] = Node::Split { feature, threshold, left, right, mean };
+                let (l, r) = idx.split_at_mut(mid);
+                self.grow(left, l, depth + 1, rng);
+                self.grow(right, r, depth + 1, rng);
+            }
+        }
+    }
+
+    /// Best (feature, left-bin) by the same SSE-reduction score as the
+    /// exact engine. A candidate cut sits right after every non-empty
+    /// bin with a non-empty remainder, i.e. between adjacent *present*
+    /// codes — exactly the exact engine's adjacent-distinct-values rule,
+    /// restricted to bin boundaries.
+    fn best_split(&mut self, idx: &[usize], rng: &mut Rng) -> Option<(usize, usize)> {
+        let bins = self.bins;
+        let y = self.y;
+        let nf = bins.num_features();
+        let mtry = self.cfg.mtry.min(nf);
+        let mut feats = rng.sample_indices(nf, mtry);
+        // Deterministic tie-break order.
+        feats.sort_unstable();
+
+        let n = idx.len() as f64;
+        let sum: f64 = idx.iter().map(|&i| y[i]).sum();
+        let parent_score = sum * sum / n; // constant term dropped
+        let min_leaf = self.cfg.min_samples_leaf;
+
+        let sorted_path = idx.len() < SORT_SWEEP_CUTOFF;
+        let mut order: Vec<usize> = if sorted_path { idx.to_vec() } else { Vec::new() };
+
+        let mut best: Option<(f64, usize, usize)> = None;
+        for &f in &feats {
+            let fb = &bins.features[f];
+            let nb = fb.num_bins();
+            if nb < 2 {
+                continue; // constant column: nothing to cut
+            }
+            let codes = &bins.codes[f];
+            if sorted_path {
+                // Sweep the node's codes in sorted order (u8 keys).
+                order.sort_unstable_by_key(|&i| codes[i]);
+                let mut lsum = 0.0;
+                let mut lcnt = 0usize;
+                for w in 0..order.len() - 1 {
+                    let i = order[w];
+                    lsum += y[i];
+                    lcnt += 1;
+                    let (a, b) = (codes[i], codes[order[w + 1]]);
+                    if a == b {
+                        continue; // not a bin boundary
+                    }
+                    if lcnt < min_leaf || order.len() - lcnt < min_leaf {
+                        continue;
+                    }
+                    let lc = lcnt as f64;
+                    let rsum = sum - lsum;
+                    let score = lsum * lsum / lc + rsum * rsum / (n - lc);
+                    let gain = score - parent_score;
+                    if gain > 1e-12
+                        && best.map(|(g, _, _)| gain > g).unwrap_or(true)
+                    {
+                        best = Some((gain, f, a as usize));
+                    }
+                }
+            } else {
+                // Bucket sweep: one histogram pass, then a walk over the
+                // (≤ 256) bins.
+                for b in 0..nb {
+                    self.cnt[b] = 0;
+                    self.sum[b] = 0.0;
+                }
+                for &i in idx.iter() {
+                    let c = codes[i] as usize;
+                    self.cnt[c] += 1;
+                    self.sum[c] += y[i];
+                }
+                let mut lsum = 0.0;
+                let mut lcnt = 0usize;
+                for b in 0..nb - 1 {
+                    lcnt += self.cnt[b] as usize;
+                    lsum += self.sum[b];
+                    if self.cnt[b] == 0 {
+                        continue; // same partition as an earlier boundary
+                    }
+                    if lcnt == idx.len() {
+                        break; // nothing left on the right
+                    }
+                    if lcnt < min_leaf || idx.len() - lcnt < min_leaf {
+                        continue;
+                    }
+                    let lc = lcnt as f64;
+                    let rsum = sum - lsum;
+                    let score = lsum * lsum / lc + rsum * rsum / (n - lc);
+                    let gain = score - parent_score;
+                    if gain > 1e-12
+                        && best.map(|(g, _, _)| gain > g).unwrap_or(true)
+                    {
+                        best = Some((gain, f, b));
+                    }
+                }
+            }
+        }
+        best.map(|(_, f, b)| (f, b))
     }
 }
 
@@ -238,57 +479,77 @@ mod tests {
         Tree::fit(&x, y, &mut idx, cfg, &mut rng)
     }
 
+    fn both_engines(cfg: TreeConfig) -> [TreeConfig; 2] {
+        [
+            TreeConfig { engine: SplitEngine::Exact, ..cfg },
+            TreeConfig { engine: SplitEngine::Binned, ..cfg },
+        ]
+    }
+
     #[test]
     fn fits_a_step_function_exactly() {
         let rows: Vec<Vec<f64>> =
             (0..100).map(|i| vec![i as f64, 0.0]).collect();
         let y: Vec<f64> =
             (0..100).map(|i| if i < 50 { -1.0 } else { 1.0 }).collect();
-        let cfg = TreeConfig { mtry: 2, min_samples_leaf: 1, max_depth: 16 };
-        let t = fit_all(&rows, &y, cfg);
-        for i in 0..100 {
-            let want = if i < 50 { -1.0 } else { 1.0 };
-            assert_eq!(t.predict(&[i as f64, 0.0]), want, "i={i}");
+        for cfg in both_engines(TreeConfig {
+            mtry: 2,
+            min_samples_leaf: 1,
+            max_depth: 16,
+            ..TreeConfig::default()
+        }) {
+            let t = fit_all(&rows, &y, cfg);
+            for i in 0..100 {
+                let want = if i < 50 { -1.0 } else { 1.0 };
+                assert_eq!(t.predict(&[i as f64, 0.0]), want, "i={i} {}", cfg.engine);
+            }
+            assert!(t.depth() >= 1);
+            t.validate().unwrap();
         }
-        assert!(t.depth() >= 1);
-        t.validate().unwrap();
     }
 
     #[test]
     fn constant_target_is_single_leaf() {
         let rows: Vec<Vec<f64>> = (0..20).map(|i| vec![i as f64]).collect();
         let y = vec![3.25; 20];
-        let t = fit_all(&rows, &y, TreeConfig::default());
-        assert_eq!(t.nodes.len(), 1);
-        assert_eq!(t.predict(&[5.0]), 3.25);
+        for cfg in both_engines(TreeConfig::default()) {
+            let t = fit_all(&rows, &y, cfg);
+            assert_eq!(t.nodes.len(), 1, "{}", cfg.engine);
+            assert_eq!(t.predict(&[5.0]), 3.25);
+        }
     }
 
     #[test]
     fn min_samples_leaf_respected() {
         let rows: Vec<Vec<f64>> = (0..64).map(|i| vec![i as f64]).collect();
         let y: Vec<f64> = (0..64).map(|i| (i % 7) as f64).collect();
-        let cfg = TreeConfig { mtry: 1, min_samples_leaf: 8, max_depth: 64 };
-        let t = fit_all(&rows, &y, cfg);
-        // Count samples per leaf by running all points through.
-        let mut counts = std::collections::HashMap::new();
-        for i in 0..64 {
-            let mut node = 0usize;
-            loop {
-                match &t.nodes[node] {
-                    Node::Leaf { .. } => break,
-                    Node::Split { feature, threshold, left, right, .. } => {
-                        node = if rows[i][*feature] <= *threshold {
-                            *left
-                        } else {
-                            *right
-                        };
+        for cfg in both_engines(TreeConfig {
+            mtry: 1,
+            min_samples_leaf: 8,
+            ..TreeConfig::default()
+        }) {
+            let t = fit_all(&rows, &y, cfg);
+            // Count samples per leaf by running all points through.
+            let mut counts = std::collections::HashMap::new();
+            for i in 0..64 {
+                let mut node = 0usize;
+                loop {
+                    match &t.nodes[node] {
+                        Node::Leaf { .. } => break,
+                        Node::Split { feature, threshold, left, right, .. } => {
+                            node = if rows[i][*feature] <= *threshold {
+                                *left
+                            } else {
+                                *right
+                            };
+                        }
                     }
                 }
+                *counts.entry(node).or_insert(0usize) += 1;
             }
-            *counts.entry(node).or_insert(0usize) += 1;
-        }
-        for (_, c) in counts {
-            assert!(c >= 8, "leaf with {c} samples");
+            for (_, c) in counts {
+                assert!(c >= 8, "leaf with {c} samples ({})", cfg.engine);
+            }
         }
     }
 
@@ -296,9 +557,14 @@ mod tests {
     fn depth_cap_enforced() {
         let rows: Vec<Vec<f64>> = (0..256).map(|i| vec![i as f64]).collect();
         let y: Vec<f64> = (0..256).map(|i| i as f64).collect();
-        let cfg = TreeConfig { mtry: 1, min_samples_leaf: 1, max_depth: 3 };
-        let t = fit_all(&rows, &y, cfg);
-        assert!(t.depth() <= 3);
+        for cfg in both_engines(TreeConfig {
+            mtry: 1,
+            max_depth: 3,
+            ..TreeConfig::default()
+        }) {
+            let t = fit_all(&rows, &y, cfg);
+            assert!(t.depth() <= 3, "{}", cfg.engine);
+        }
     }
 
     #[test]
@@ -311,20 +577,25 @@ mod tests {
             .iter()
             .map(|r| 3.0 * r[0] - 2.0 * r[1] + 0.1 * rng.normal())
             .collect();
-        let cfg = TreeConfig { mtry: 3, min_samples_leaf: 4, max_depth: 64 };
-        let t = fit_all(&rows, &y, cfg);
         let mean = y.iter().sum::<f64>() / y.len() as f64;
         let sse_mean: f64 = y.iter().map(|v| (v - mean) * (v - mean)).sum();
-        let sse_tree: f64 = rows
-            .iter()
-            .zip(&y)
-            .map(|(r, v)| {
-                let p = t.predict(r);
-                (v - p) * (v - p)
-            })
-            .sum();
-        assert!(sse_tree < 0.2 * sse_mean, "{sse_tree} vs {sse_mean}");
-        t.validate().unwrap();
+        for cfg in both_engines(TreeConfig {
+            mtry: 3,
+            min_samples_leaf: 4,
+            ..TreeConfig::default()
+        }) {
+            let t = fit_all(&rows, &y, cfg);
+            let sse_tree: f64 = rows
+                .iter()
+                .zip(&y)
+                .map(|(r, v)| {
+                    let p = t.predict(r);
+                    (v - p) * (v - p)
+                })
+                .sum();
+            assert!(sse_tree < 0.2 * sse_mean, "{sse_tree} vs {sse_mean} ({})", cfg.engine);
+            t.validate().unwrap();
+        }
     }
 
     #[test]
@@ -336,15 +607,83 @@ mod tests {
                 .collect();
             let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
             let x = columns(&rows);
-            let mut idx: Vec<usize> = (0..n).collect();
-            let cfg = TreeConfig { mtry: 2, min_samples_leaf: 2, max_depth: 32 };
-            let t = Tree::fit(&x, &y, &mut idx, cfg, rng);
-            t.validate()?;
-            // predictions must be finite
-            for r in rows.iter().take(10) {
-                crate::prop_assert!(t.predict(r).is_finite(), "nan pred");
+            for engine in [SplitEngine::Exact, SplitEngine::Binned] {
+                let mut idx: Vec<usize> = (0..n).collect();
+                let cfg = TreeConfig {
+                    mtry: 2,
+                    min_samples_leaf: 2,
+                    max_depth: 32,
+                    engine,
+                    ..TreeConfig::default()
+                };
+                let mut trng = rng.fork(engine as u64);
+                let t = Tree::fit(&x, &y, &mut idx, cfg, &mut trng);
+                t.validate()?;
+                // predictions must be finite
+                for r in rows.iter().take(10) {
+                    crate::prop_assert!(t.predict(r).is_finite(), "nan pred");
+                }
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn binned_matches_exact_when_values_fit_the_bins() {
+        // One sample per distinct value and splits confined to feature 0:
+        // every node's value range stays contiguous, so the exact
+        // engine's node-local midpoints coincide with the global bin
+        // cuts and the two engines grow *identical* trees.
+        let rows: Vec<Vec<f64>> =
+            (0..200).map(|i| vec![i as f64, 0.0]).collect();
+        let y: Vec<f64> = (0..200)
+            .map(|i| match i {
+                0..=49 => -2.0,
+                50..=119 => 0.5,
+                _ => 3.0,
+            })
+            .collect();
+        let cfg = TreeConfig { mtry: 2, ..TreeConfig::default() };
+        let [ce, cb] = both_engines(cfg);
+        let te = fit_all(&rows, &y, ce);
+        let tb = fit_all(&rows, &y, cb);
+        assert_eq!(te.nodes, tb.nodes);
+    }
+
+    #[test]
+    fn nan_feature_values_do_not_panic_either_engine() {
+        // Regression for the partial_cmp().unwrap() panic at the old
+        // tree.rs:179: a poisoned feature value must not abort the fit.
+        let mut rows: Vec<Vec<f64>> =
+            (0..50).map(|i| vec![i as f64, (i % 5) as f64]).collect();
+        rows[17][0] = f64::NAN;
+        rows[31][1] = f64::NAN;
+        let y: Vec<f64> = (0..50).map(|i| if i < 25 { -1.0 } else { 1.0 }).collect();
+        for cfg in both_engines(TreeConfig { mtry: 2, ..TreeConfig::default() }) {
+            let t = fit_all(&rows, &y, cfg);
+            t.validate().unwrap();
+            assert!(t.predict(&[3.0, 1.0]).is_finite());
+        }
+    }
+
+    #[test]
+    fn fit_with_bins_matches_fit_binned_dispatch() {
+        // Tree::fit with the binned engine must equal building the
+        // binning by hand and calling fit_with_bins (the forest path).
+        let mut rng = Rng::new(21);
+        let rows: Vec<Vec<f64>> = (0..300)
+            .map(|_| vec![rng.range_f64(-1.0, 1.0), rng.range_f64(-1.0, 1.0)])
+            .collect();
+        let y: Vec<f64> = rows.iter().map(|r| r[0] * r[1]).collect();
+        let x = columns(&rows);
+        let cfg = TreeConfig { mtry: 2, ..TreeConfig::default() };
+        let mut idx_a: Vec<usize> = (0..300).collect();
+        let mut idx_b: Vec<usize> = (0..300).collect();
+        let mut rng_a = Rng::new(5);
+        let mut rng_b = Rng::new(5);
+        let a = Tree::fit(&x, &y, &mut idx_a, cfg, &mut rng_a);
+        let bins = crate::ml::binning::BinnedDataset::build(&x, cfg.max_bins);
+        let b = Tree::fit_with_bins(&bins, &y, &mut idx_b, cfg, &mut rng_b);
+        assert_eq!(a.nodes, b.nodes);
     }
 }

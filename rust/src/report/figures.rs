@@ -98,6 +98,7 @@ mod tests {
             min_score: 0.30,
             max_score: 1.0,
             n: 100,
+            skipped: 0,
         };
         let s = fig6(&a, &[("transpose".into(), a)]);
         assert!(s.contains("86.0%"));

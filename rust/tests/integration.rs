@@ -28,7 +28,7 @@ fn pipeline_learns_the_simulator() {
     let records = small_records();
     assert!(records.len() > 3000);
     let (train, test) = dataset::split(&records, 0.2, 1);
-    let forest = Forest::fit_records(&train, &ForestConfig::default());
+    let forest = Forest::fit_records(&train, &ForestConfig::default()).expect("finite records");
     let acc = metrics::evaluate_model(&test, |x| forest.decide(x));
     assert!(acc.count_based > 0.72, "count {}", acc.count_based);
     assert!(acc.penalty_weighted > 0.92, "penalty {}", acc.penalty_weighted);
@@ -38,7 +38,7 @@ fn pipeline_learns_the_simulator() {
 fn encoded_forest_preserves_decisions_end_to_end() {
     let records = small_records();
     let (train, test) = dataset::split(&records, 0.2, 2);
-    let forest = Forest::fit_records(&train, &ForestConfig::default());
+    let forest = Forest::fit_records(&train, &ForestConfig::default()).expect("finite records");
     let enc = encode(&forest, ExportContract::default());
     enc.validate().unwrap();
     let mut agree = 0usize;
@@ -64,7 +64,8 @@ fn model_roundtrip_through_disk_and_metrics() {
     let forest = Forest::fit_records(&train, &ForestConfig {
         num_trees: 8,
         ..Default::default()
-    });
+    })
+    .expect("finite records");
     let dir = std::env::temp_dir();
     let path = dir.join(format!("lmtuner-int-{}.model", std::process::id()));
     lmtuner::ml::io::save(&forest, &path).unwrap();
@@ -179,7 +180,8 @@ fn prop_batching_decisions_equal_unbatched() {
     let forest = Forest::fit_records(&train, &ForestConfig {
         num_trees: 5,
         ..Default::default()
-    });
+    })
+    .expect("finite records");
     let enc = encode(&forest, ExportContract::default());
     prop::check("batch-invariance", 32, |rng| {
         let i = rng.range(0, records.len() - 1);
@@ -206,7 +208,8 @@ fn prop_native_executor_invariant_under_batch_mix() {
     let forest = Forest::fit_records(&train, &ForestConfig {
         num_trees: 5,
         ..Default::default()
-    });
+    })
+    .expect("finite records");
     let enc = encode(&forest, ExportContract::default());
     let exec = NativeForestExecutor::with_parallelism(enc.clone(), 3, 4);
     prop::check("native-batch-invariance", 32, |rng| {

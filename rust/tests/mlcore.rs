@@ -1,0 +1,211 @@
+//! ml-v2 equivalence + determinism suite.
+//!
+//! The binned split engine must be provably interchangeable with the
+//! exact sort-based reference (DESIGN.md §ml-v2): identical results
+//! where the binning is lossless (constant targets, <= 256 distinct
+//! values per feature), and both paper metrics within 0.5% on the
+//! continuous crossdev-style synthetic dataset. `lmtuner tune`'s
+//! cross-validation must be bitwise deterministic at any thread count.
+
+use lmtuner::gpu::spec::DeviceSpec;
+use lmtuner::ml::forest::{Forest, ForestConfig};
+use lmtuner::ml::metrics;
+use lmtuner::ml::select::{self, GridSpec, TuneConfig};
+use lmtuner::ml::tree::{SplitEngine, Tree, TreeConfig};
+use lmtuner::sim::exec::{MeasureConfig, SpeedupRecord};
+use lmtuner::synth::{dataset, generator, sweep::LaunchSweep};
+use lmtuner::util::prng::Rng;
+
+fn engine_cfg(base: ForestConfig, engine: SplitEngine) -> ForestConfig {
+    let mut cfg = base;
+    cfg.tree.engine = engine;
+    cfg
+}
+
+/// Small crossdev-style synthetic dataset: the same generator ->
+/// sweep -> simulated-measure path `lmtuner crossdev` trains on.
+fn crossdev_synthetic(scale: f64, configs_per_kernel: usize) -> Vec<SpeedupRecord> {
+    let dev = DeviceSpec::m2090();
+    let mut rng = Rng::new(0x5EED ^ 0xDA7A);
+    let templates = generator::generate(&mut rng, scale);
+    let sweep = LaunchSweep::new(2048, 2048);
+    let cfg = dataset::BuildConfig {
+        configs_per_kernel,
+        measure: MeasureConfig::deterministic(),
+        ..Default::default()
+    };
+    dataset::build(&templates, &sweep, &dev, &cfg)
+}
+
+// ---- shape 1: constant target ---------------------------------------
+
+#[test]
+fn equivalence_constant_target() {
+    // Both engines must collapse a constant target to a single leaf per
+    // tree, predicting the constant exactly.
+    let x: Vec<Vec<f64>> = (0..3)
+        .map(|f| (0..200).map(|i| ((i * (f + 1)) % 37) as f64).collect())
+        .collect();
+    let y = vec![1.75; 200];
+    for engine in [SplitEngine::Exact, SplitEngine::Binned] {
+        let cfg = engine_cfg(
+            ForestConfig { num_trees: 5, threads: 2, ..Default::default() },
+            engine,
+        );
+        let f = Forest::fit(&x, &y, &cfg);
+        for t in &f.trees {
+            assert_eq!(t.nodes.len(), 1, "{engine:?}");
+        }
+        assert_eq!(f.predict(&[3.0, 5.0, 7.0]), 1.75, "{engine:?}");
+    }
+}
+
+// ---- shape 2: step function (lossless binning) ----------------------
+
+#[test]
+fn equivalence_step_function_identical_trees() {
+    // One sample per distinct value, splits confined to the single
+    // informative feature: the binning is lossless and both engines
+    // must grow byte-identical trees from the same seed.
+    let n = 240;
+    let rows: Vec<Vec<f64>> = (0..n).map(|i| vec![i as f64, 1.0]).collect();
+    let x: Vec<Vec<f64>> = (0..2)
+        .map(|f| rows.iter().map(|r| r[f]).collect())
+        .collect();
+    let y: Vec<f64> = (0..n)
+        .map(|i| match i {
+            0..=59 => -2.0,
+            60..=149 => 0.25,
+            _ => 1.5,
+        })
+        .collect();
+    for seed in [1u64, 9, 42] {
+        let cfg = TreeConfig { mtry: 2, ..TreeConfig::default() };
+        let mut idx_e: Vec<usize> = (0..n).collect();
+        let mut idx_b: Vec<usize> = (0..n).collect();
+        let mut rng_e = Rng::new(seed);
+        let mut rng_b = Rng::new(seed);
+        let te = Tree::fit(
+            &x,
+            &y,
+            &mut idx_e,
+            TreeConfig { engine: SplitEngine::Exact, ..cfg },
+            &mut rng_e,
+        );
+        let tb = Tree::fit(
+            &x,
+            &y,
+            &mut idx_b,
+            TreeConfig { engine: SplitEngine::Binned, ..cfg },
+            &mut rng_b,
+        );
+        assert_eq!(te.nodes, tb.nodes, "seed {seed}");
+        for i in 0..n {
+            assert_eq!(te.predict(&rows[i]), tb.predict(&rows[i]), "i={i}");
+        }
+    }
+}
+
+// ---- shape 3: crossdev synthetic (continuous features) --------------
+
+#[test]
+fn equivalence_crossdev_synthetic_metrics_within_half_percent() {
+    // Continuous simulator features: binning is quantized, so individual
+    // trees differ — but averaged over forest seeds, both paper metrics
+    // must agree within 0.5 percentage points, and the two engines'
+    // decisions must agree on the overwhelming majority of held-out
+    // instances.
+    let records = crossdev_synthetic(0.05, 8);
+    assert!(records.len() > 2500, "{} records", records.len());
+    let (train, test) = dataset::split(&records, 0.1, 3);
+
+    let seeds = [0xF0_4E57u64, 0xA11CE, 0xB0B];
+    let mut count = [0.0f64; 2];
+    let mut penalty = [0.0f64; 2];
+    for &seed in &seeds {
+        let mut forests = Vec::new();
+        for engine in [SplitEngine::Exact, SplitEngine::Binned] {
+            let cfg = engine_cfg(
+                ForestConfig { seed, threads: 2, ..Default::default() },
+                engine,
+            );
+            forests.push(Forest::fit_records(&train, &cfg).expect("finite records"));
+        }
+        let mut agree = 0usize;
+        for r in test.iter() {
+            agree += (forests[0].decide(&r.features) == forests[1].decide(&r.features))
+                as usize;
+        }
+        assert!(
+            agree as f64 / test.len() as f64 > 0.95,
+            "engines disagree on {}/{} held-out decisions (seed {seed})",
+            test.len() - agree,
+            test.len()
+        );
+        for (k, f) in forests.iter().enumerate() {
+            let a = metrics::evaluate_model(&test, |x| f.decide(x));
+            count[k] += a.count_based / seeds.len() as f64;
+            penalty[k] += a.penalty_weighted / seeds.len() as f64;
+        }
+    }
+    assert!(count[0] > 0.7, "exact engine count accuracy {}", count[0]);
+    assert!(
+        (count[0] - count[1]).abs() <= 0.005,
+        "count-based accuracy drifted: exact {} vs binned {}",
+        count[0],
+        count[1]
+    );
+    assert!(
+        (penalty[0] - penalty[1]).abs() <= 0.005,
+        "penalty-weighted accuracy drifted: exact {} vs binned {}",
+        penalty[0],
+        penalty[1]
+    );
+}
+
+// ---- lmtuner tune determinism ---------------------------------------
+
+#[test]
+fn tune_is_deterministic_at_any_thread_count() {
+    let records = crossdev_synthetic(0.02, 4);
+    assert!(records.len() >= 200, "{} records", records.len());
+    let grid = GridSpec {
+        num_trees: vec![5, 10],
+        mtry: vec![2, 4],
+        min_samples_leaf: vec![1],
+    };
+    let run = |threads: usize| {
+        select::cross_validate(
+            &records,
+            &grid,
+            &TuneConfig { folds: 3, seed: 0x7E57, threads, ..Default::default() },
+        )
+        .unwrap()
+    };
+    let a = run(1);
+    let b = run(4);
+    let c = run(4); // repeatability at the same thread count
+    assert_eq!(a.best, b.best);
+    assert_eq!(b.best, c.best);
+    assert_eq!(a.scores.len(), 4);
+    for ((sa, sb), sc) in a.scores.iter().zip(&b.scores).zip(&c.scores) {
+        // every metric bitwise identical; only wall times may differ
+        assert_eq!(sa.count_based, sb.count_based);
+        assert_eq!(sa.count_std, sb.count_std);
+        assert_eq!(sa.penalty_weighted, sb.penalty_weighted);
+        assert_eq!(sa.min_score, sb.min_score);
+        assert_eq!(sb.count_based, sc.count_based);
+        assert_eq!(sb.penalty_weighted, sc.penalty_weighted);
+        assert_eq!(sa.config.num_trees, sb.config.num_trees);
+        assert_eq!(sa.config.tree.mtry, sb.config.tree.mtry);
+    }
+    // the winner's persisted form round-trips into a train-consumable
+    // ForestConfig
+    let path = std::env::temp_dir()
+        .join(format!("lmtuner-mlcore-best-{}.txt", std::process::id()));
+    select::save_forest_config(&a.best_score().config, &path).unwrap();
+    let back = select::load_forest_config(&path).unwrap();
+    assert_eq!(back.num_trees, a.best_score().config.num_trees);
+    assert_eq!(back.tree.mtry, a.best_score().config.tree.mtry);
+    std::fs::remove_file(&path).ok();
+}
