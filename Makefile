@@ -2,13 +2,22 @@
 # (no artifacts, no network). `artifacts` requires a python with jax to
 # AOT-lower the Pallas kernels to HLO text for the PJRT backend.
 
-.PHONY: build test docs artifacts clean
+.PHONY: build test fmt-check docs artifacts clean
 
 build:
 	cargo build --release
 
 test:
 	cargo test -q
+
+# Same format gate CI runs (scoped to the frontend subsystem until the
+# pre-existing tree is rustfmt-clean).
+fmt-check:
+	rustfmt --edition 2021 --check \
+	    rust/src/frontend/lexer.rs rust/src/frontend/ast.rs \
+	    rust/src/frontend/parser.rs rust/src/frontend/access.rs \
+	    rust/src/frontend/extract.rs rust/src/frontend/mod.rs \
+	    rust/tests/frontend.rs benches/perf_frontend.rs
 
 # Same gate CI runs: doc rot fails the build.
 docs:

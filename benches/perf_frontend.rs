@@ -1,0 +1,99 @@
+//! Frontend hot-path throughput: lex+parse and full parse+extract
+//! kernels/sec over the four shipped `.cl` fixtures.
+//!
+//! Acceptance (DESIGN.md bench table): parse+extract sustains
+//! >= 2000 kernels/sec on the fixture kernels — `lmtuner analyze` must
+//! stay interactive, and a batch sweep over thousands of launch
+//! configurations must be extraction-bound, not parser-bound.
+
+use lmtuner::frontend::extract::extract_descriptor;
+use lmtuner::frontend::{parse_program, AnalyzeOptions, Bindings};
+use lmtuner::gpu::spec::DeviceSpec;
+use lmtuner::util::bench::{black_box, report_throughput, Bencher};
+use lmtuner::workloads;
+
+fn fixture(name: &str) -> String {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures")
+        .join(name);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("{}: {e}", p.display()))
+}
+
+fn main() {
+    let dev = DeviceSpec::m2090();
+    let launch = workloads::launch_over((16, 8), (512, 512));
+    let conv_bind = Bindings::new().set("width", 512).set("rows_per_thread", 1).set("radius", 2);
+    let cases: Vec<(String, AnalyzeOptions)> = vec![
+        (
+            fixture("convolution_row.cl"),
+            AnalyzeOptions {
+                target: "input".into(),
+                kernel: None,
+                launch,
+                bindings: conv_bind.clone(),
+            },
+        ),
+        (
+            fixture("convolution_col.cl"),
+            AnalyzeOptions {
+                target: "input".into(),
+                kernel: None,
+                launch,
+                bindings: conv_bind,
+            },
+        ),
+        (
+            fixture("matrixmul.cl"),
+            AnalyzeOptions {
+                target: "b".into(),
+                kernel: None,
+                launch,
+                bindings: Bindings::new().set("size", 512).set("tile_k", 8),
+            },
+        ),
+        (
+            fixture("transpose.cl"),
+            AnalyzeOptions {
+                target: "output".into(),
+                kernel: None,
+                launch,
+                bindings: Bindings::new().set("width", 512).set("height", 512),
+            },
+        ),
+    ];
+    let n = cases.len() as f64;
+    let b = Bencher::default();
+
+    let r = b.run("frontend: lex+parse fixtures", || {
+        for (src, _) in &cases {
+            black_box(parse_program(src).expect("fixture parses"));
+        }
+    });
+    report_throughput(&r, n, "kernels");
+
+    let r = b.run("frontend: parse+extract fixtures", || {
+        for (src, opts) in &cases {
+            let prog = parse_program(src).expect("fixture parses");
+            black_box(extract_descriptor(&prog, opts, &dev).expect("fixture extracts"));
+        }
+    });
+    report_throughput(&r, n, "kernels");
+    let per_sec = r.throughput(n);
+    println!(
+        "acceptance: parse+extract {per_sec:.0} kernels/s (bar: >= 2000) {}",
+        if per_sec >= 2000.0 { "PASS" } else { "MISS" }
+    );
+
+    // Extraction alone, re-analyzing one parse under many launches — the
+    // `analyze` sweep shape.
+    let parsed: Vec<_> = cases
+        .iter()
+        .map(|(src, opts)| (parse_program(src).expect("fixture parses"), opts))
+        .collect();
+    let r = b.run("frontend: extract-only (pre-parsed)", || {
+        for (prog, opts) in &parsed {
+            black_box(extract_descriptor(prog, opts, &dev).expect("fixture extracts"));
+        }
+    });
+    report_throughput(&r, n, "kernels");
+}

@@ -1,0 +1,388 @@
+//! Affine index analysis: the algebra under the feature extractor.
+//!
+//! Every array subscript the frontend accepts must reduce to an *affine
+//! form* — an integer-linear combination of work-item intrinsics and
+//! loop variables plus a constant (scalar kernel arguments are bound to
+//! concrete values first, so they fold into coefficients). This module
+//! defines that form ([`Affine`]), the row/column decomposition of a
+//! flattened 2D index ([`split_row_col`]), and the warp-coalescing
+//! classification ([`tx_per_access`]).
+//!
+//! **Row/column decomposition.** Real kernels flatten 2D arrays as
+//! `row * stride + col`. The stride is recovered from the coefficients
+//! themselves: every |coefficient| >= [`STRIDE_MIN`] must be a multiple
+//! of the smallest such coefficient S (else: typed mixed-stride error);
+//! terms with |c| >= STRIDE_MIN contribute `c/S` to the row, the rest to
+//! the column. The constant splits by rounding to the nearest multiple
+//! of S, so small negative column offsets (stencil taps like `-radius`)
+//! stay in the column. Indices with no large coefficient are 1D (row 0).
+//!
+//! **Coalescing.** Work items linearize row-major with x fastest
+//! (`Launch::warp_lanes`), so a warp covers `dx` adjacent x-lanes. The
+//! y-spread of a warp is the launch geometry's doing, not the access
+//! pattern's, and is deliberately ignored (the paper's non-coalescing
+//! degree measures the access's own scatter):
+//!
+//! * row coordinate depends on x  ->  `dx` distinct rows, one
+//!   transaction each (the transposed-write shape);
+//! * else column depends on x with coefficient c  ->  the warp's row
+//!   segment spans `dx*|c|` elements: `ceil(dx*|c|/seg)` transactions
+//!   (1 when unit-stride);
+//! * else  ->  broadcast, 1 transaction.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+use crate::kernelmodel::launch::Launch;
+
+/// Base variables an index may depend on after constant folding.
+/// Loop variables are numbered in encounter order by the extractor
+/// (shadowed names get distinct ids).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Var {
+    /// `get_global_id(d)`, d in {0, 1}.
+    Gid(u8),
+    /// `get_local_id(d)`.
+    Lid(u8),
+    /// `get_group_id(d)` — constant within a workgroup.
+    Group(u8),
+    /// Loop variable (id assigned by the extractor).
+    Loop(u32),
+}
+
+/// An integer-affine expression: `sum(coeff * var) + constant`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Affine {
+    pub terms: BTreeMap<Var, i64>,
+    pub c: i64,
+}
+
+/// Affine arithmetic can overflow i64 only through absurd user input;
+/// every operation is checked and reports this typed error.
+#[derive(Clone, Debug)]
+pub struct Overflow;
+
+impl fmt::Display for Overflow {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "index arithmetic overflows i64")
+    }
+}
+
+impl Affine {
+    pub fn constant(c: i64) -> Affine {
+        Affine { terms: BTreeMap::new(), c }
+    }
+
+    pub fn var(v: Var) -> Affine {
+        let mut terms = BTreeMap::new();
+        terms.insert(v, 1);
+        Affine { terms, c: 0 }
+    }
+
+    pub fn is_const(&self) -> bool {
+        self.terms.is_empty()
+    }
+
+    pub fn as_const(&self) -> Option<i64> {
+        self.is_const().then_some(self.c)
+    }
+
+    pub fn coeff(&self, v: Var) -> i64 {
+        self.terms.get(&v).copied().unwrap_or(0)
+    }
+
+    pub fn add(&self, other: &Affine) -> Result<Affine, Overflow> {
+        let mut out = self.clone();
+        for (v, c) in &other.terms {
+            let e = out.terms.entry(*v).or_insert(0);
+            *e = e.checked_add(*c).ok_or(Overflow)?;
+            if *e == 0 {
+                out.terms.remove(v);
+            }
+        }
+        out.c = out.c.checked_add(other.c).ok_or(Overflow)?;
+        Ok(out)
+    }
+
+    pub fn neg(&self) -> Result<Affine, Overflow> {
+        self.scale(-1)
+    }
+
+    pub fn sub(&self, other: &Affine) -> Result<Affine, Overflow> {
+        self.add(&other.neg()?)
+    }
+
+    pub fn scale(&self, k: i64) -> Result<Affine, Overflow> {
+        if k == 0 {
+            return Ok(Affine::constant(0));
+        }
+        let mut out = Affine::constant(self.c.checked_mul(k).ok_or(Overflow)?);
+        for (v, c) in &self.terms {
+            out.terms.insert(*v, c.checked_mul(k).ok_or(Overflow)?);
+        }
+        Ok(out)
+    }
+
+    /// Exact division by a constant: every coefficient and the constant
+    /// must be divisible (used for `expr / k` in loop bounds & indices).
+    /// Checked throughout — `i64::MIN / -1` yields `None`, not an abort.
+    pub fn div_exact(&self, k: i64) -> Option<Affine> {
+        if k == 0 {
+            return None;
+        }
+        if self.c.checked_rem(k)? != 0 {
+            return None;
+        }
+        let mut out = Affine::constant(self.c.checked_div(k)?);
+        for (v, c) in &self.terms {
+            if c.checked_rem(k)? != 0 {
+                return None;
+            }
+            out.terms.insert(*v, c.checked_div(k)?);
+        }
+        Some(out)
+    }
+
+    /// Does this expression depend on any work-item coordinate?
+    pub fn depends_on_wi(&self) -> bool {
+        self.terms.keys().any(|v| matches!(v, Var::Gid(_) | Var::Lid(_)))
+    }
+
+    /// Coefficient of the x / y work-item coordinate (gid and lid move
+    /// in lockstep within a workgroup, so their coefficients add).
+    pub fn wi_coeff(&self, dim: u8) -> i64 {
+        self.coeff(Var::Gid(dim)).saturating_add(self.coeff(Var::Lid(dim)))
+    }
+}
+
+impl fmt::Display for Affine {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut first = true;
+        for (v, c) in &self.terms {
+            if !first {
+                write!(f, " + ")?;
+            }
+            first = false;
+            let name = match v {
+                Var::Gid(d) => format!("gid{d}"),
+                Var::Lid(d) => format!("lid{d}"),
+                Var::Group(d) => format!("grp{d}"),
+                Var::Loop(i) => format!("L{i}"),
+            };
+            if *c == 1 {
+                write!(f, "{name}")?;
+            } else {
+                write!(f, "{c}*{name}")?;
+            }
+        }
+        if first {
+            write!(f, "{}", self.c)
+        } else if self.c != 0 {
+            write!(f, " + {}", self.c)
+        } else {
+            Ok(())
+        }
+    }
+}
+
+/// Smallest coefficient magnitude treated as a row stride. Column terms
+/// (work-item x offsets, stencil taps, tile offsets) stay well below
+/// this in the supported kernel shapes; problem-size strides sit well
+/// above it.
+pub const STRIDE_MIN: i64 = 64;
+
+/// A flattened index decomposed into 2D coordinates.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct RowCol {
+    pub row: Affine,
+    pub col: Affine,
+    /// Elements per row; 0 means the index was 1D (row == 0).
+    pub stride: i64,
+}
+
+/// Decompose `index = row * stride + col`; see the module docs for the
+/// stride-recovery rule. Errors are strings; the extractor wraps them
+/// with the access's source position.
+pub fn split_row_col(index: &Affine) -> Result<RowCol, String> {
+    let stride = index
+        .terms
+        .values()
+        .map(|c| c.abs())
+        .filter(|c| *c >= STRIDE_MIN)
+        .min()
+        .unwrap_or(0);
+    if stride == 0 {
+        return Ok(RowCol { row: Affine::constant(0), col: index.clone(), stride: 0 });
+    }
+    let mut row = Affine::constant(0);
+    let mut col = Affine::constant(0);
+    for (v, c) in &index.terms {
+        if c.abs() >= STRIDE_MIN {
+            if c % stride != 0 {
+                return Err(format!(
+                    "cannot separate rows from columns: coefficient {c} is not \
+                     a multiple of the inferred row stride {stride}"
+                ));
+            }
+            row.terms.insert(*v, c / stride);
+        } else {
+            col.terms.insert(*v, *c);
+        }
+    }
+    // Constant: round to the nearest multiple of the stride so small
+    // negative tap offsets stay in the column. i128 so extreme constants
+    // cannot wrap (the no-panic contract covers this path too).
+    let c = index.c as i128;
+    let s = stride as i128;
+    let half = s / 2;
+    let rounded_rows = if c >= 0 {
+        (c + half) / s
+    } else {
+        (c - half) / s
+    };
+    row.c = i64::try_from(rounded_rows)
+        .map_err(|_| "index constant exceeds the addressable row range".to_string())?;
+    // |c - rounded_rows*s| < s <= i64::MAX, so the cast is lossless.
+    col.c = (c - rounded_rows * s) as i64;
+    Ok(RowCol { row, col, stride })
+}
+
+/// Average DRAM transactions one warp issues for one dynamic execution
+/// of this access in the unoptimized kernel (1.0 = coalesced or
+/// broadcast). `seg` is the transaction width in elements.
+pub fn tx_per_access(rc: &RowCol, launch: &Launch, warp_size: u32, seg: u32) -> f64 {
+    let (dx, _dy) = launch.warp_lanes(warp_size);
+    let dx = dx.max(1) as i64;
+    let seg = seg.max(1) as i64;
+    if rc.row.wi_coeff(0) != 0 {
+        // Each x-lane lands in its own row.
+        return dx as f64;
+    }
+    let cx = rc.col.wi_coeff(0).abs();
+    if cx == 0 {
+        return 1.0; // broadcast along x
+    }
+    let span = dx.saturating_mul(cx) as u64;
+    (span.div_ceil(seg as u64).max(1)) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernelmodel::launch::{GridGeom, WgGeom};
+
+    fn launch(w: u32, h: u32) -> Launch {
+        Launch::new(WgGeom { w, h }, GridGeom { w: 2048, h: 2048 })
+    }
+
+    fn aff(terms: &[(Var, i64)], c: i64) -> Affine {
+        let mut a = Affine::constant(c);
+        for (v, k) in terms {
+            a.terms.insert(*v, *k);
+        }
+        a
+    }
+
+    #[test]
+    fn affine_algebra() {
+        let x = Affine::var(Var::Gid(0));
+        let y = Affine::var(Var::Gid(1));
+        let e = y.scale(512).unwrap().add(&x).unwrap().add(&Affine::constant(-3)).unwrap();
+        assert_eq!(e.coeff(Var::Gid(1)), 512);
+        assert_eq!(e.coeff(Var::Gid(0)), 1);
+        assert_eq!(e.c, -3);
+        assert!(e.sub(&e).unwrap().is_const());
+        assert_eq!(e.sub(&e).unwrap().as_const(), Some(0));
+        assert_eq!(e.scale(2).unwrap().coeff(Var::Gid(1)), 1024);
+        assert!(Affine::constant(i64::MAX).add(&Affine::constant(1)).is_err());
+    }
+
+    #[test]
+    fn div_exact_requires_divisibility() {
+        let e = aff(&[(Var::Gid(1), 512)], 1024);
+        let d = e.div_exact(512).unwrap();
+        assert_eq!(d.coeff(Var::Gid(1)), 1);
+        assert_eq!(d.c, 2);
+        assert!(e.div_exact(100).is_none());
+        assert!(e.div_exact(0).is_none());
+        // i64::MIN / -1 must not abort.
+        assert!(Affine::constant(i64::MIN).div_exact(-1).is_none());
+    }
+
+    #[test]
+    fn row_col_split_recovers_stride() {
+        // (gy + k) * 512 + gx  with tap constant -2
+        let idx = aff(&[(Var::Gid(1), 512), (Var::Loop(0), 512), (Var::Gid(0), 1)], -2);
+        let rc = split_row_col(&idx).unwrap();
+        assert_eq!(rc.stride, 512);
+        assert_eq!(rc.row, aff(&[(Var::Gid(1), 1), (Var::Loop(0), 1)], 0));
+        assert_eq!(rc.col, aff(&[(Var::Gid(0), 1)], -2));
+    }
+
+    #[test]
+    fn one_dim_and_mixed_stride_cases() {
+        let idx = aff(&[(Var::Gid(0), 1), (Var::Loop(0), 4)], 7);
+        let rc = split_row_col(&idx).unwrap();
+        assert_eq!(rc.stride, 0);
+        assert_eq!(rc.row.as_const(), Some(0));
+        assert_eq!(rc.col, idx);
+
+        // 768 is not a multiple of 512 -> typed mixed-stride error.
+        let bad = aff(&[(Var::Gid(1), 512), (Var::Loop(0), 768)], 0);
+        assert!(split_row_col(&bad).is_err());
+    }
+
+    #[test]
+    fn constant_rounds_to_nearest_stride_multiple() {
+        let idx = aff(&[(Var::Gid(1), 512)], 510);
+        let rc = split_row_col(&idx).unwrap();
+        assert_eq!(rc.row.c, 1);
+        assert_eq!(rc.col.c, -2);
+        let idx = aff(&[(Var::Gid(1), 512)], -3);
+        let rc = split_row_col(&idx).unwrap();
+        assert_eq!(rc.row.c, 0);
+        assert_eq!(rc.col.c, -3);
+    }
+
+    #[test]
+    fn extreme_constants_do_not_panic() {
+        // The no-panic contract: an i64::MAX index constant must round
+        // without wrapping (debug builds would otherwise abort).
+        let idx = aff(&[(Var::Gid(1), 64)], i64::MAX);
+        let rc = split_row_col(&idx).unwrap();
+        assert!(rc.col.c.abs() <= 32);
+        let idx = aff(&[(Var::Gid(1), 64)], i64::MIN);
+        let rc = split_row_col(&idx).unwrap();
+        assert!(rc.col.c.abs() <= 32);
+    }
+
+    #[test]
+    fn coalescing_classification() {
+        let l = launch(16, 8);
+        let seg = 32;
+        // in[y*w + x]: unit-stride along x -> 1 transaction.
+        let rc = split_row_col(&aff(&[(Var::Gid(1), 512), (Var::Gid(0), 1)], 0)).unwrap();
+        assert_eq!(tx_per_access(&rc, &l, 32, seg), 1.0);
+        // out[x*h + y]: x drives the row -> dx transactions.
+        let rc = split_row_col(&aff(&[(Var::Gid(0), 512), (Var::Gid(1), 1)], 0)).unwrap();
+        assert_eq!(tx_per_access(&rc, &l, 32, seg), 16.0);
+        // b[k*w + x] broadcast row, coalesced col.
+        let rc = split_row_col(&aff(&[(Var::Loop(0), 512), (Var::Gid(0), 1)], 0)).unwrap();
+        assert_eq!(tx_per_access(&rc, &l, 32, seg), 1.0);
+        // a[y*w + k]: no x anywhere -> broadcast.
+        let rc = split_row_col(&aff(&[(Var::Gid(1), 512), (Var::Loop(0), 1)], 0)).unwrap();
+        assert_eq!(tx_per_access(&rc, &l, 32, seg), 1.0);
+        // stride-2 column access: 32 lanes span 64 elements -> 2 segments.
+        let rc = split_row_col(&aff(&[(Var::Gid(1), 512), (Var::Gid(0), 2)], 0)).unwrap();
+        assert_eq!(tx_per_access(&rc, &launch(32, 4), 32, seg), 2.0);
+    }
+
+    #[test]
+    fn wi_coeff_sums_gid_and_lid() {
+        let e = aff(&[(Var::Gid(0), 2), (Var::Lid(0), 3), (Var::Gid(1), 5)], 0);
+        assert_eq!(e.wi_coeff(0), 5);
+        assert_eq!(e.wi_coeff(1), 5);
+        assert!(e.depends_on_wi());
+        assert!(!aff(&[(Var::Group(0), 4)], 1).depends_on_wi());
+    }
+}

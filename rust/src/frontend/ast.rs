@@ -1,0 +1,351 @@
+//! AST for the OpenCL C subset, plus a canonical pretty-printer.
+//!
+//! The printer emits source the parser accepts (binary and unary
+//! expressions are always fully parenthesized), so `parse(print(ast))`
+//! reproduces the same tree shape up to redundant parentheses — the
+//! frontend property suite asserts the round trip yields an *identical
+//! kernel descriptor*. Every node carries the source [`Pos`] it came
+//! from for positioned analysis errors.
+
+use std::fmt;
+
+use super::lexer::Pos;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    EqEq,
+    Ne,
+    And,
+    Or,
+}
+
+impl BinOp {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BinOp::Add => "+",
+            BinOp::Sub => "-",
+            BinOp::Mul => "*",
+            BinOp::Div => "/",
+            BinOp::Rem => "%",
+            BinOp::Lt => "<",
+            BinOp::Le => "<=",
+            BinOp::Gt => ">",
+            BinOp::Ge => ">=",
+            BinOp::EqEq => "==",
+            BinOp::Ne => "!=",
+            BinOp::And => "&&",
+            BinOp::Or => "||",
+        }
+    }
+
+    /// Arithmetic (value-producing) as opposed to comparison/logical.
+    pub fn is_arith(self) -> bool {
+        matches!(self, BinOp::Add | BinOp::Sub | BinOp::Mul | BinOp::Div | BinOp::Rem)
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    Int(i64, Pos),
+    Float(f64, Pos),
+    Var(String, Pos),
+    Call { name: String, args: Vec<Expr>, pos: Pos },
+    /// `base[index]` — `base` must resolve to an array identifier; the
+    /// analyzer rejects nested subscripts with a typed error.
+    Index { base: Box<Expr>, index: Box<Expr>, pos: Pos },
+    /// Unary minus / logical not.
+    Unary { op: char, expr: Box<Expr>, pos: Pos },
+    Bin { op: BinOp, lhs: Box<Expr>, rhs: Box<Expr>, pos: Pos },
+}
+
+impl Expr {
+    pub fn pos(&self) -> Pos {
+        match self {
+            Expr::Int(_, p)
+            | Expr::Float(_, p)
+            | Expr::Var(_, p)
+            | Expr::Call { pos: p, .. }
+            | Expr::Index { pos: p, .. }
+            | Expr::Unary { pos: p, .. }
+            | Expr::Bin { pos: p, .. } => *p,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AssignOp {
+    Set,
+    Add,
+    Sub,
+    Mul,
+    Div,
+}
+
+impl AssignOp {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AssignOp::Set => "=",
+            AssignOp::Add => "+=",
+            AssignOp::Sub => "-=",
+            AssignOp::Mul => "*=",
+            AssignOp::Div => "/=",
+        }
+    }
+}
+
+/// Loop step clause: `v++`, `v--`, `v += e`, `v -= e`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum ForStep {
+    Inc,
+    Dec,
+    Add(Expr),
+    Sub(Expr),
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Stmt {
+    /// `int x = e;` / `float s;` — scalar local declaration.
+    Decl { ty: String, name: String, init: Option<Expr>, pos: Pos },
+    /// `lhs op= e;` where `lhs` is a variable or a subscript.
+    Assign { target: Expr, op: AssignOp, value: Expr, pos: Pos },
+    For {
+        var_ty: String,
+        var: String,
+        init: Expr,
+        /// Comparison op of the condition (`<`, `<=`, `>`, `>=`).
+        cond_op: BinOp,
+        bound: Expr,
+        step: ForStep,
+        body: Vec<Stmt>,
+        pos: Pos,
+    },
+    If { cond: Expr, then_body: Vec<Stmt>, else_body: Vec<Stmt>, pos: Pos },
+    /// Expression statement — in practice `barrier(...)` and friends.
+    Call { name: String, args: Vec<Expr>, pos: Pos },
+    Return { pos: Pos },
+}
+
+/// OpenCL address-space qualifier of a kernel parameter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AddrSpace {
+    Global,
+    Local,
+    Constant,
+    Private,
+}
+
+impl AddrSpace {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AddrSpace::Global => "__global",
+            AddrSpace::Local => "__local",
+            AddrSpace::Constant => "__constant",
+            AddrSpace::Private => "",
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Param {
+    pub space: AddrSpace,
+    pub is_const: bool,
+    pub ty: String,
+    pub is_ptr: bool,
+    pub name: String,
+    pub pos: Pos,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Kernel {
+    pub name: String,
+    pub params: Vec<Param>,
+    pub body: Vec<Stmt>,
+    pub pos: Pos,
+}
+
+#[derive(Clone, Debug, PartialEq, Default)]
+pub struct Program {
+    pub kernels: Vec<Kernel>,
+}
+
+// ---------------------------------------------------------------------
+// Canonical pretty-printer.
+
+fn fmt_float(v: f64) -> String {
+    // `{:?}` always includes a decimal point or exponent, so the output
+    // re-lexes as a float (`0.0`, `1.5e-7`), never as an int.
+    format!("{v:?}f")
+}
+
+impl fmt::Display for Expr {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Expr::Int(v, _) => write!(f, "{v}"),
+            Expr::Float(v, _) => write!(f, "{}", fmt_float(*v)),
+            Expr::Var(name, _) => write!(f, "{name}"),
+            Expr::Call { name, args, .. } => {
+                write!(f, "{name}(")?;
+                for (i, a) in args.iter().enumerate() {
+                    if i > 0 {
+                        write!(f, ", ")?;
+                    }
+                    write!(f, "{a}")?;
+                }
+                write!(f, ")")
+            }
+            Expr::Index { base, index, .. } => write!(f, "{base}[{index}]"),
+            Expr::Unary { op, expr, .. } => write!(f, "({op}{expr})"),
+            Expr::Bin { op, lhs, rhs, .. } => {
+                write!(f, "({lhs} {} {rhs})", op.as_str())
+            }
+        }
+    }
+}
+
+fn write_block(f: &mut fmt::Formatter<'_>, body: &[Stmt], indent: usize) -> fmt::Result {
+    writeln!(f, "{{")?;
+    for s in body {
+        write_stmt(f, s, indent + 1)?;
+    }
+    write!(f, "{:indent$}}}", "", indent = indent * 4)
+}
+
+fn write_stmt(f: &mut fmt::Formatter<'_>, s: &Stmt, indent: usize) -> fmt::Result {
+    write!(f, "{:indent$}", "", indent = indent * 4)?;
+    match s {
+        Stmt::Decl { ty, name, init, .. } => match init {
+            Some(e) => writeln!(f, "{ty} {name} = {e};"),
+            None => writeln!(f, "{ty} {name};"),
+        },
+        Stmt::Assign { target, op, value, .. } => {
+            writeln!(f, "{target} {} {value};", op.as_str())
+        }
+        Stmt::For { var_ty, var, init, cond_op, bound, step, body, .. } => {
+            write!(f, "for ({var_ty} {var} = {init}; {var} {} {bound}; ", cond_op.as_str())?;
+            match step {
+                ForStep::Inc => write!(f, "{var}++)")?,
+                ForStep::Dec => write!(f, "{var}--)")?,
+                ForStep::Add(e) => write!(f, "{var} += {e})")?,
+                ForStep::Sub(e) => write!(f, "{var} -= {e})")?,
+            }
+            write!(f, " ")?;
+            write_block(f, body, indent)?;
+            writeln!(f)
+        }
+        Stmt::If { cond, then_body, else_body, .. } => {
+            write!(f, "if ({cond}) ")?;
+            write_block(f, then_body, indent)?;
+            if !else_body.is_empty() {
+                write!(f, " else ")?;
+                write_block(f, else_body, indent)?;
+            }
+            writeln!(f)
+        }
+        Stmt::Call { name, args, .. } => {
+            write!(f, "{name}(")?;
+            for (i, a) in args.iter().enumerate() {
+                if i > 0 {
+                    write!(f, ", ")?;
+                }
+                write!(f, "{a}")?;
+            }
+            writeln!(f, ");")
+        }
+        Stmt::Return { .. } => writeln!(f, "return;"),
+    }
+}
+
+impl fmt::Display for Kernel {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "__kernel void {}(", self.name)?;
+        for (i, p) in self.params.iter().enumerate() {
+            if i > 0 {
+                write!(f, ", ")?;
+            }
+            if p.space != AddrSpace::Private {
+                write!(f, "{} ", p.space.as_str())?;
+            }
+            if p.is_const {
+                write!(f, "const ")?;
+            }
+            write!(f, "{}{} {}", p.ty, if p.is_ptr { "*" } else { "" }, p.name)?;
+        }
+        write!(f, ") ")?;
+        write_block(f, &self.body, 0)?;
+        writeln!(f)
+    }
+}
+
+impl fmt::Display for Program {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (i, k) in self.kernels.iter().enumerate() {
+            if i > 0 {
+                writeln!(f)?;
+            }
+            write!(f, "{k}")?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p() -> Pos {
+        Pos { line: 1, col: 1 }
+    }
+
+    #[test]
+    fn exprs_print_fully_parenthesized() {
+        let e = Expr::Bin {
+            op: BinOp::Add,
+            lhs: Box::new(Expr::Bin {
+                op: BinOp::Mul,
+                lhs: Box::new(Expr::Var("y".into(), p())),
+                rhs: Box::new(Expr::Var("w".into(), p())),
+                pos: p(),
+            }),
+            rhs: Box::new(Expr::Var("x".into(), p())),
+            pos: p(),
+        };
+        assert_eq!(e.to_string(), "((y * w) + x)");
+    }
+
+    #[test]
+    fn floats_relex_as_floats() {
+        assert_eq!(fmt_float(0.0), "0.0f");
+        assert_eq!(fmt_float(1.5), "1.5f");
+        let tiny = fmt_float(1e-9);
+        assert!(tiny.contains('e') || tiny.contains('.'), "{tiny}");
+    }
+
+    #[test]
+    fn kernel_prints_params_and_body() {
+        let k = Kernel {
+            name: "t".into(),
+            params: vec![Param {
+                space: AddrSpace::Global,
+                is_const: true,
+                ty: "float".into(),
+                is_ptr: true,
+                name: "in".into(),
+                pos: p(),
+            }],
+            body: vec![Stmt::Return { pos: p() }],
+            pos: p(),
+        };
+        let s = k.to_string();
+        assert!(s.starts_with("__kernel void t(__global const float* in) {"));
+        assert!(s.contains("return;"));
+    }
+}

@@ -1,0 +1,1204 @@
+//! Descriptor synthesis: from a parsed kernel to a
+//! [`KernelDescriptor`] + the canonical 18-feature vector.
+//!
+//! The extractor symbolically walks the kernel body once, binding every
+//! integer-valued local to an [`Affine`] form over work-item intrinsics
+//! and loop variables (scalar kernel arguments are bound to concrete
+//! values via [`Bindings`] first). Every `__global` subscript must
+//! reduce to an affine index; each one is recorded with its enclosing
+//! loop nest, then the loops are classified against the *target* array
+//! (see DESIGN.md §2d for the full contract):
+//!
+//! * **Work-unit (round) loop** — the loop variable strides past the
+//!   work-item footprint: either cyclically (coefficient >= the grid
+//!   span of the coordinate's work-item part, the paper's §4.1 cyclic
+//!   distribution) or as an exact blocked tile (unit coefficient,
+//!   zero-based, trip == the work-item coefficient). Trips multiply
+//!   into `wus_per_wi`.
+//! * **Tap loop** — the variable offsets a work-item-dependent home by
+//!   bounded constants (a stencil expressed as a loop). The loop is
+//!   unrolled: trips multiply into the tap count and its value range
+//!   becomes tap offsets.
+//! * **Inner loop** — the variable *is* the home position in some
+//!   coordinate (no work-item term). The innermost such loops multiply
+//!   into `inner_iters`; when two or more nest, the outermost is the
+//!   round loop (`matrixMul`'s k-tile loop over tiles).
+//!
+//! Computation is counted in FMA-equivalents (a multiply feeding an
+//! add/sub counts once), excluding subscript arithmetic; contextual
+//! (non-target) global accesses are split coalesced/non-coalesced by
+//! `access::tx_per_access` and inner-loop-body/epilogue by loop nest
+//! (loads outside any inner/tap loop count as body work when
+//! `inner_iters == 1`, matching the template model's accounting).
+//! `__constant` reads ride the constant cache and are not counted.
+//!
+//! Every failure is a typed, positioned [`ExtractError`]; nothing in
+//! this module panics on user input.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+
+use super::access::{split_row_col, tx_per_access, Affine, RowCol, Var};
+use super::ast::{AddrSpace, AssignOp, BinOp, Expr, ForStep, Kernel, Program, Stmt};
+use super::lexer::Pos;
+
+use crate::gpu::spec::DeviceSpec;
+use crate::kernelmodel::descriptor::KernelDescriptor;
+use crate::kernelmodel::launch::Launch;
+use crate::workloads::DescriptorBuilder;
+
+/// Loops longer than this are rejected (they would make the unrolled
+/// model meaningless and the arithmetic overflow-prone).
+pub const MAX_TRIP: u64 = 1 << 20;
+
+/// Register-estimate heuristic: base + 2 per declared scalar local +
+/// one per 4 taps (live stencil operands). Reconciled against the
+/// hand-mapped workloads within +-8 registers (DESIGN.md §2d).
+pub const REG_BASE: u32 = 8;
+
+/// Extra registers the staging transform costs (address arithmetic for
+/// the cooperative copy) — matches the hand-mapped workloads.
+pub const OPT_EXTRA_REGS: u32 = 4;
+
+/// Concrete values for scalar kernel arguments (`--set name=value`).
+#[derive(Clone, Debug, Default)]
+pub struct Bindings {
+    map: BTreeMap<String, i64>,
+}
+
+impl Bindings {
+    pub fn new() -> Bindings {
+        Bindings::default()
+    }
+
+    /// Builder-style insert.
+    pub fn set(mut self, name: &str, value: i64) -> Bindings {
+        self.map.insert(name.to_string(), value);
+        self
+    }
+
+    pub fn insert(&mut self, name: &str, value: i64) {
+        self.map.insert(name.to_string(), value);
+    }
+
+    pub fn get(&self, name: &str) -> Option<i64> {
+        self.map.get(name).copied()
+    }
+
+    /// Parse a `name=value,name=value` list (the CLI `--set` format).
+    pub fn parse(s: &str) -> Result<Bindings, String> {
+        let mut b = Bindings::new();
+        for part in s.split(',').filter(|p| !p.trim().is_empty()) {
+            let (name, value) = part
+                .split_once('=')
+                .ok_or_else(|| format!("`{part}`: expected name=value"))?;
+            let v: i64 = value.trim().parse().map_err(|e| format!("`{part}`: {e}"))?;
+            b.insert(name.trim(), v);
+        }
+        Ok(b)
+    }
+}
+
+/// What to analyze: which kernel, which array to consider staging, the
+/// launch configuration, and scalar-argument values.
+#[derive(Clone, Debug)]
+pub struct AnalyzeOptions {
+    pub target: String,
+    /// Kernel name; `None` is allowed when the file holds exactly one.
+    pub kernel: Option<String>,
+    pub launch: Launch,
+    pub bindings: Bindings,
+}
+
+#[derive(Clone, Debug)]
+pub enum ExtractErrorKind {
+    NoKernels,
+    UnknownKernel { name: String, available: Vec<String> },
+    AmbiguousKernel { available: Vec<String> },
+    UnknownArray { name: String, available: Vec<String> },
+    TargetNotGlobal { name: String },
+    TargetNeverAccessed { name: String },
+    UsesLocalMemory,
+    UnboundParam { name: String },
+    UnknownIdent { name: String },
+    NonAffine { what: String },
+    UnsupportedLoop { what: String },
+    MixedStride { what: String },
+    InvalidLaunch { what: String },
+    DivByZero,
+    TooLarge { what: String },
+    Unsupported { what: String },
+}
+
+/// Typed, positioned analysis error.
+#[derive(Clone, Debug)]
+pub struct ExtractError {
+    pub pos: Pos,
+    pub kind: ExtractErrorKind,
+}
+
+impl fmt::Display for ExtractError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        use ExtractErrorKind::*;
+        write!(f, "analysis error at {}: ", self.pos)?;
+        match &self.kind {
+            NoKernels => write!(f, "source contains no __kernel definitions"),
+            UnknownKernel { name, available } => {
+                write!(f, "no kernel named `{name}` (available: {})", available.join(", "))
+            }
+            AmbiguousKernel { available } => write!(
+                f,
+                "multiple kernels in file — pick one with --kernel ({})",
+                available.join(", ")
+            ),
+            UnknownArray { name, available } => write!(
+                f,
+                "no __global array parameter named `{name}` (arrays: {})",
+                available.join(", ")
+            ),
+            TargetNotGlobal { name } => {
+                write!(f, "target array `{name}` is not in the __global address space")
+            }
+            TargetNeverAccessed { name } => {
+                write!(f, "target array `{name}` is never subscripted in the kernel body")
+            }
+            UsesLocalMemory => write!(
+                f,
+                "kernel already uses __local memory — analyze the unoptimized \
+                 (unstaged) kernel"
+            ),
+            UnboundParam { name } => write!(
+                f,
+                "scalar argument `{name}` is used in an index or loop bound but \
+                 has no value — bind it with --set {name}=<int>"
+            ),
+            UnknownIdent { name } => write!(f, "unknown identifier `{name}`"),
+            NonAffine { what } => write!(
+                f,
+                "{what} is not an affine function of work-item ids and loop \
+                 variables"
+            ),
+            UnsupportedLoop { what } => write!(f, "unsupported loop: {what}"),
+            MixedStride { what } => write!(f, "{what}"),
+            InvalidLaunch { what } => write!(f, "invalid launch configuration: {what}"),
+            DivByZero => write!(f, "division by zero in a constant expression"),
+            TooLarge { what } => write!(f, "{what}"),
+            Unsupported { what } => write!(f, "{what} is not supported"),
+        }
+    }
+}
+
+impl std::error::Error for ExtractError {}
+
+fn err<T>(pos: Pos, kind: ExtractErrorKind) -> Result<T, ExtractError> {
+    Err(ExtractError { pos, kind })
+}
+
+// ---------------------------------------------------------------------
+// Symbolic walk.
+
+#[derive(Clone, Debug)]
+enum Val {
+    Aff(Affine),
+    Opaque,
+    /// A scalar kernel argument with no binding: usable as data, an
+    /// error (naming the argument) if it reaches an index or bound.
+    Unbound(String),
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Role {
+    Wu,
+    Inner,
+    Tap,
+    Other,
+}
+
+#[derive(Clone, Debug)]
+struct LoopCtx {
+    start: i64,
+    step: i64,
+    trip: u64,
+    /// Nesting depth at creation (outermost = 0).
+    depth: usize,
+}
+
+impl LoopCtx {
+    /// Smallest / largest value the loop variable takes (i128: the
+    /// product cannot wrap even for absurd user-chosen steps).
+    fn value_range(&self) -> (i128, i128) {
+        let start = self.start as i128;
+        let last = start + (self.trip as i128 - 1) * self.step as i128;
+        (start.min(last), start.max(last))
+    }
+}
+
+#[derive(Clone, Debug)]
+struct Site {
+    array: String,
+    index: Affine,
+    is_store: bool,
+    loops: Vec<u32>,
+    pos: Pos,
+}
+
+#[derive(Clone, Debug)]
+struct CompRec {
+    ops: u32,
+    loops: Vec<u32>,
+}
+
+struct Walker<'a> {
+    env: BTreeMap<String, Val>,
+    arrays: BTreeMap<String, AddrSpace>,
+    launch: Launch,
+    loops: Vec<LoopCtx>,
+    stack: Vec<u32>,
+    sites: Vec<Site>,
+    comps: Vec<CompRec>,
+    decls: u32,
+    bindings: &'a Bindings,
+}
+
+type EResult<T> = Result<T, ExtractError>;
+
+impl<'a> Walker<'a> {
+    fn overflow<T>(pos: Pos) -> EResult<T> {
+        err(pos, ExtractErrorKind::TooLarge { what: "index arithmetic overflows i64".into() })
+    }
+
+    fn eval(&mut self, e: &Expr) -> EResult<Val> {
+        match e {
+            Expr::Int(v, _) => Ok(Val::Aff(Affine::constant(*v))),
+            Expr::Float(..) => Ok(Val::Opaque),
+            Expr::Var(name, pos) => match self.env.get(name) {
+                Some(v) => Ok(v.clone()),
+                None => err(*pos, ExtractErrorKind::UnknownIdent { name: name.clone() }),
+            },
+            Expr::Call { name, args, pos } => self.eval_call(name, args, *pos),
+            Expr::Index { base, index, pos } => {
+                let array = match base.as_ref() {
+                    Expr::Var(name, _) => name.clone(),
+                    Expr::Index { .. } => {
+                        return err(
+                            *pos,
+                            ExtractErrorKind::Unsupported {
+                                what: "nested subscripts (multi-dimensional arrays)".into(),
+                            },
+                        )
+                    }
+                    _ => {
+                        return err(
+                            *pos,
+                            ExtractErrorKind::Unsupported {
+                                what: "subscripting a non-identifier expression".into(),
+                            },
+                        )
+                    }
+                };
+                self.record_access(&array, index, false, *pos)?;
+                Ok(Val::Opaque)
+            }
+            Expr::Unary { op, expr, pos } => {
+                let v = self.eval(expr)?;
+                match (*op, v) {
+                    ('-', Val::Aff(a)) => match a.neg() {
+                        Ok(n) => Ok(Val::Aff(n)),
+                        Err(_) => Self::overflow(*pos),
+                    },
+                    (_, Val::Unbound(n)) => Ok(Val::Unbound(n)),
+                    _ => Ok(Val::Opaque),
+                }
+            }
+            Expr::Bin { op, lhs, rhs, pos } => {
+                let l = self.eval(lhs)?;
+                let r = self.eval(rhs)?;
+                self.eval_bin(*op, l, r, *pos)
+            }
+        }
+    }
+
+    fn eval_bin(&mut self, op: BinOp, l: Val, r: Val, pos: Pos) -> EResult<Val> {
+        if !op.is_arith() {
+            // Comparisons / logical ops produce booleans we never index by.
+            return Ok(Val::Opaque);
+        }
+        // Unbound arguments poison the expression with their name so the
+        // eventual index/bound error can say which `--set` is missing.
+        if let Val::Unbound(n) = &l {
+            return Ok(Val::Unbound(n.clone()));
+        }
+        if let Val::Unbound(n) = &r {
+            return Ok(Val::Unbound(n.clone()));
+        }
+        let (a, b) = match (l, r) {
+            (Val::Aff(a), Val::Aff(b)) => (a, b),
+            _ => return Ok(Val::Opaque),
+        };
+        let out = match op {
+            BinOp::Add => a.add(&b),
+            BinOp::Sub => a.sub(&b),
+            BinOp::Mul => {
+                if let Some(k) = b.as_const() {
+                    a.scale(k)
+                } else if let Some(k) = a.as_const() {
+                    b.scale(k)
+                } else {
+                    return Ok(Val::Opaque);
+                }
+            }
+            BinOp::Div => match b.as_const() {
+                Some(0) => return err(pos, ExtractErrorKind::DivByZero),
+                Some(k) => {
+                    if let Some(c) = a.as_const() {
+                        // checked: i64::MIN / -1 would abort otherwise.
+                        return match c.checked_div(k) {
+                            Some(v) => Ok(Val::Aff(Affine::constant(v))),
+                            None => Self::overflow(pos),
+                        };
+                    }
+                    match a.div_exact(k) {
+                        Some(d) => return Ok(Val::Aff(d)),
+                        None => return Ok(Val::Opaque),
+                    }
+                }
+                None => return Ok(Val::Opaque),
+            },
+            BinOp::Rem => match (a.as_const(), b.as_const()) {
+                (_, Some(0)) => return err(pos, ExtractErrorKind::DivByZero),
+                (Some(x), Some(k)) => {
+                    return match x.checked_rem(k) {
+                        Some(v) => Ok(Val::Aff(Affine::constant(v))),
+                        None => Self::overflow(pos),
+                    }
+                }
+                _ => return Ok(Val::Opaque),
+            },
+            _ => unreachable!("non-arith handled above"),
+        };
+        match out {
+            Ok(a) => Ok(Val::Aff(a)),
+            Err(_) => Self::overflow(pos),
+        }
+    }
+
+    /// The `0`/`1` dimension argument of a work-item intrinsic.
+    fn dim_arg(&mut self, name: &str, args: &[Expr], pos: Pos) -> EResult<u8> {
+        if args.len() != 1 {
+            return err(
+                pos,
+                ExtractErrorKind::Unsupported {
+                    what: format!("`{name}` with {} arguments", args.len()),
+                },
+            );
+        }
+        match self.eval(&args[0])? {
+            Val::Aff(a) if a.as_const() == Some(0) => Ok(0),
+            Val::Aff(a) if a.as_const() == Some(1) => Ok(1),
+            _ => err(
+                pos,
+                ExtractErrorKind::Unsupported {
+                    what: format!("`{name}` dimension other than the constant 0 or 1"),
+                },
+            ),
+        }
+    }
+
+    fn eval_call(&mut self, name: &str, args: &[Expr], pos: Pos) -> EResult<Val> {
+        match name {
+            "get_global_id" => {
+                let d = self.dim_arg(name, args, pos)?;
+                Ok(Val::Aff(Affine::var(Var::Gid(d))))
+            }
+            "get_local_id" => {
+                let d = self.dim_arg(name, args, pos)?;
+                Ok(Val::Aff(Affine::var(Var::Lid(d))))
+            }
+            "get_group_id" => {
+                let d = self.dim_arg(name, args, pos)?;
+                Ok(Val::Aff(Affine::var(Var::Group(d))))
+            }
+            "get_local_size" => {
+                let d = self.dim_arg(name, args, pos)?;
+                let wg = self.launch.wg;
+                let v = if d == 0 { wg.w } else { wg.h };
+                Ok(Val::Aff(Affine::constant(v as i64)))
+            }
+            "get_global_size" => {
+                let d = self.dim_arg(name, args, pos)?;
+                let grid = self.launch.grid;
+                let v = if d == 0 { grid.w } else { grid.h };
+                Ok(Val::Aff(Affine::constant(v as i64)))
+            }
+            "get_num_groups" => {
+                let d = self.dim_arg(name, args, pos)?;
+                let l = self.launch;
+                let v = if d == 0 { l.groups_x() } else { l.groups_y() };
+                Ok(Val::Aff(Affine::constant(v as i64)))
+            }
+            _ => {
+                // Math builtins etc.: walk the arguments (they may contain
+                // global accesses), result is opaque data.
+                for a in args {
+                    self.eval(a)?;
+                }
+                Ok(Val::Opaque)
+            }
+        }
+    }
+
+    fn record_access(
+        &mut self,
+        array: &str,
+        index: &Expr,
+        is_store: bool,
+        pos: Pos,
+    ) -> EResult<()> {
+        let space = match self.arrays.get(array) {
+            Some(s) => *s,
+            None => {
+                return if self.env.contains_key(array) {
+                    err(
+                        pos,
+                        ExtractErrorKind::Unsupported {
+                            what: format!("subscripting scalar `{array}`"),
+                        },
+                    )
+                } else {
+                    err(pos, ExtractErrorKind::UnknownIdent { name: array.to_string() })
+                }
+            }
+        };
+        match space {
+            AddrSpace::Local => return err(pos, ExtractErrorKind::UsesLocalMemory),
+            AddrSpace::Constant => {
+                if is_store {
+                    return err(
+                        pos,
+                        ExtractErrorKind::Unsupported {
+                            what: format!("storing to __constant array `{array}`"),
+                        },
+                    );
+                }
+                // Constant-cache reads are free context; index shape is
+                // irrelevant, but still walk it for nested accesses.
+                self.eval(index)?;
+                return Ok(());
+            }
+            // Private pointers are rejected at parameter binding.
+            AddrSpace::Global | AddrSpace::Private => {}
+        }
+        let idx = match self.eval(index)? {
+            Val::Aff(a) => a,
+            Val::Unbound(n) => return err(pos, ExtractErrorKind::UnboundParam { name: n }),
+            Val::Opaque => {
+                return err(
+                    pos,
+                    ExtractErrorKind::NonAffine {
+                        what: format!("the subscript of `{array}`"),
+                    },
+                )
+            }
+        };
+        self.sites.push(Site {
+            array: array.to_string(),
+            index: idx,
+            is_store,
+            loops: self.stack.clone(),
+            pos,
+        });
+        Ok(())
+    }
+
+    /// FMA-equivalent op count of an expression, excluding subscript
+    /// arithmetic: a multiply feeding an add/sub fuses to one op.
+    fn count_ops(e: &Expr) -> u32 {
+        fn is_mul(e: &Expr) -> bool {
+            matches!(e, Expr::Bin { op: BinOp::Mul, .. })
+        }
+        match e {
+            Expr::Bin { op, lhs, rhs, .. } if op.is_arith() => {
+                let mut n = Self::count_ops(lhs) + Self::count_ops(rhs) + 1;
+                if matches!(op, BinOp::Add | BinOp::Sub) && (is_mul(lhs) || is_mul(rhs)) {
+                    n -= 1;
+                }
+                n
+            }
+            Expr::Bin { lhs, rhs, .. } => Self::count_ops(lhs) + Self::count_ops(rhs),
+            Expr::Unary { expr, .. } => Self::count_ops(expr),
+            Expr::Call { args, .. } => args.iter().map(Self::count_ops).sum(),
+            Expr::Index { .. } => 0,
+            Expr::Int(..) | Expr::Float(..) | Expr::Var(..) => 0,
+        }
+    }
+
+    fn push_comp(&mut self, ops: u32) {
+        if ops > 0 {
+            self.comps.push(CompRec { ops, loops: self.stack.clone() });
+        }
+    }
+
+    fn walk(&mut self, body: &[Stmt]) -> EResult<()> {
+        for s in body {
+            self.walk_stmt(s)?;
+        }
+        Ok(())
+    }
+
+    fn walk_stmt(&mut self, s: &Stmt) -> EResult<()> {
+        match s {
+            Stmt::Decl { name, init, .. } => {
+                self.decls += 1;
+                let v = match init {
+                    Some(e) => {
+                        self.push_comp(Self::count_ops(e));
+                        self.eval(e)?
+                    }
+                    None => Val::Opaque,
+                };
+                self.env.insert(name.clone(), v);
+                Ok(())
+            }
+            Stmt::Assign { target, op, value, pos } => {
+                let mut ops = Self::count_ops(value);
+                if *op != AssignOp::Set {
+                    ops += 1;
+                    // `x += a*b` is one FMA, not mul-then-add.
+                    if matches!(op, AssignOp::Add | AssignOp::Sub)
+                        && matches!(value, Expr::Bin { op: BinOp::Mul, .. })
+                    {
+                        ops -= 1;
+                    }
+                }
+                self.push_comp(ops);
+                let rhs = self.eval(value)?;
+                match target {
+                    Expr::Index { base, index, pos } => {
+                        let array = match base.as_ref() {
+                            Expr::Var(name, _) => name.clone(),
+                            _ => {
+                                return err(
+                                    *pos,
+                                    ExtractErrorKind::Unsupported {
+                                        what: "nested subscripts (multi-dimensional arrays)"
+                                            .into(),
+                                    },
+                                )
+                            }
+                        };
+                        self.record_access(&array, index, true, *pos)
+                    }
+                    Expr::Var(name, vpos) => {
+                        let old = match self.env.get(name) {
+                            Some(v) => v.clone(),
+                            None => {
+                                return err(
+                                    *vpos,
+                                    ExtractErrorKind::UnknownIdent { name: name.clone() },
+                                )
+                            }
+                        };
+                        let new = match op {
+                            AssignOp::Set => rhs,
+                            AssignOp::Add => self.eval_bin(BinOp::Add, old, rhs, *pos)?,
+                            AssignOp::Sub => self.eval_bin(BinOp::Sub, old, rhs, *pos)?,
+                            AssignOp::Mul => self.eval_bin(BinOp::Mul, old, rhs, *pos)?,
+                            AssignOp::Div => self.eval_bin(BinOp::Div, old, rhs, *pos)?,
+                        };
+                        self.env.insert(name.clone(), new);
+                        Ok(())
+                    }
+                    other => err(
+                        other.pos(),
+                        ExtractErrorKind::Unsupported {
+                            what: "assignment to a non-lvalue".into(),
+                        },
+                    ),
+                }
+            }
+            Stmt::For { var, init, cond_op, bound, step, body, pos, .. } => {
+                self.walk_for(var, init, *cond_op, bound, step, body, *pos)
+            }
+            Stmt::If { cond, then_body, else_body, .. } => {
+                self.eval(cond)?;
+                // Both branches are assumed executed (guards in the
+                // supported kernels are boundary checks, not control of
+                // the access pattern); variables they write become opaque.
+                let mut assigned = BTreeSet::new();
+                assigned_scalars(then_body, &mut assigned);
+                assigned_scalars(else_body, &mut assigned);
+                let saved = self.env.clone();
+                self.walk(then_body)?;
+                self.env = saved.clone();
+                self.walk(else_body)?;
+                self.env = saved;
+                self.mark_opaque(&assigned);
+                Ok(())
+            }
+            Stmt::Call { args, .. } => {
+                for a in args {
+                    self.eval(a)?;
+                }
+                Ok(())
+            }
+            Stmt::Return { .. } => Ok(()),
+        }
+    }
+
+    fn mark_opaque(&mut self, names: &BTreeSet<String>) {
+        for n in names {
+            if self.env.contains_key(n) {
+                self.env.insert(n.clone(), Val::Opaque);
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn walk_for(
+        &mut self,
+        var: &str,
+        init: &Expr,
+        cond_op: BinOp,
+        bound: &Expr,
+        step: &ForStep,
+        body: &[Stmt],
+        pos: Pos,
+    ) -> EResult<()> {
+        let start = self.const_of(init, "the loop start")?;
+        let bound_v = self.const_of(bound, "the loop bound")?;
+        let step_v: i64 = match step {
+            ForStep::Inc => 1,
+            ForStep::Dec => -1,
+            ForStep::Add(e) => self.const_of(e, "the loop step")?,
+            ForStep::Sub(e) => {
+                let v = self.const_of(e, "the loop step")?;
+                v.checked_neg().ok_or(ExtractError {
+                    pos,
+                    kind: ExtractErrorKind::TooLarge {
+                        what: "loop step out of range".into(),
+                    },
+                })?
+            }
+        };
+        if step_v == 0 {
+            return err(pos, ExtractErrorKind::UnsupportedLoop { what: "zero step".into() });
+        }
+        let up = step_v > 0;
+        // i128 so user-chosen extremes cannot wrap in release builds.
+        let s = step_v as i128;
+        let diff = bound_v as i128 - start as i128;
+        let trip: i128 = match (cond_op, up) {
+            (BinOp::Lt, true) => (diff + s - 1).div_euclid(s),
+            (BinOp::Le, true) => diff.div_euclid(s) + 1,
+            (BinOp::Gt, false) => (diff + s + 1).div_euclid(s),
+            (BinOp::Ge, false) => diff.div_euclid(s) + 1,
+            _ => {
+                return err(
+                    pos,
+                    ExtractErrorKind::UnsupportedLoop {
+                        what: format!(
+                            "step direction `{}` never reaches the `{}` bound",
+                            if up { "+" } else { "-" },
+                            cond_op.as_str()
+                        ),
+                    },
+                )
+            }
+        };
+        let trip = trip.max(0).min(u64::MAX as i128) as u64;
+        if trip == 0 {
+            return Ok(()); // body never executes
+        }
+        if trip > MAX_TRIP {
+            return err(
+                pos,
+                ExtractErrorKind::TooLarge {
+                    what: format!("loop trip count {trip} exceeds the supported {MAX_TRIP}"),
+                },
+            );
+        }
+        // Induction variables other than the counter are not modeled:
+        // anything the body assigns is opaque inside (and after) it.
+        let mut assigned = BTreeSet::new();
+        assigned_scalars(body, &mut assigned);
+        let saved = self.env.clone();
+        self.mark_opaque(&assigned);
+        let id = self.loops.len() as u32;
+        self.loops.push(LoopCtx { start, step: step_v, trip, depth: self.stack.len() });
+        self.env.insert(var.to_string(), Val::Aff(Affine::var(Var::Loop(id))));
+        self.stack.push(id);
+        let res = self.walk(body);
+        self.stack.pop();
+        self.env = saved;
+        self.mark_opaque(&assigned);
+        res
+    }
+}
+
+impl<'a> Walker<'a> {
+    /// Evaluate an expression that must fold to a compile-time constant
+    /// (loop starts, bounds and steps).
+    fn const_of(&mut self, e: &Expr, what: &str) -> EResult<i64> {
+        match self.eval(e)? {
+            Val::Aff(a) => match a.as_const() {
+                Some(v) => Ok(v),
+                None => err(
+                    e.pos(),
+                    ExtractErrorKind::UnsupportedLoop {
+                        what: format!("{what} must be constant after binding scalar arguments"),
+                    },
+                ),
+            },
+            Val::Unbound(n) => err(e.pos(), ExtractErrorKind::UnboundParam { name: n }),
+            Val::Opaque => err(
+                e.pos(),
+                ExtractErrorKind::UnsupportedLoop {
+                    what: format!("{what} must be constant after binding scalar arguments"),
+                },
+            ),
+        }
+    }
+}
+
+/// Names assigned (not declared) anywhere in `body`, recursively.
+fn assigned_scalars(body: &[Stmt], out: &mut BTreeSet<String>) {
+    for s in body {
+        match s {
+            Stmt::Assign { target: Expr::Var(name, _), .. } => {
+                out.insert(name.clone());
+            }
+            Stmt::For { body, .. } => assigned_scalars(body, out),
+            Stmt::If { then_body, else_body, .. } => {
+                assigned_scalars(then_body, out);
+                assigned_scalars(else_body, out);
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Post-walk classification & synthesis.
+
+struct GlobalSite {
+    site: Site,
+    rc: RowCol,
+}
+
+fn select_kernel<'p>(prog: &'p Program, opts: &AnalyzeOptions) -> EResult<&'p Kernel> {
+    let names: Vec<String> = prog.kernels.iter().map(|k| k.name.clone()).collect();
+    if prog.kernels.is_empty() {
+        return err(Pos::start(), ExtractErrorKind::NoKernels);
+    }
+    match &opts.kernel {
+        Some(want) => prog
+            .kernels
+            .iter()
+            .find(|k| &k.name == want)
+            .ok_or(ExtractError {
+                pos: Pos::start(),
+                kind: ExtractErrorKind::UnknownKernel { name: want.clone(), available: names },
+            }),
+        None if prog.kernels.len() == 1 => Ok(&prog.kernels[0]),
+        None => err(prog.kernels[1].pos, ExtractErrorKind::AmbiguousKernel { available: names }),
+    }
+}
+
+/// Analyze `prog` and synthesize the kernel descriptor for the given
+/// target array, launch and device.
+pub fn extract_descriptor(
+    prog: &Program,
+    opts: &AnalyzeOptions,
+    dev: &DeviceSpec,
+) -> EResult<KernelDescriptor> {
+    let kernel = select_kernel(prog, opts)?;
+    let launch = opts.launch;
+    if !launch.valid() {
+        return err(
+            kernel.pos,
+            ExtractErrorKind::InvalidLaunch {
+                what: format!(
+                    "workgroup {}x{} must divide grid {}x{}",
+                    launch.wg.w, launch.wg.h, launch.grid.w, launch.grid.h
+                ),
+            },
+        );
+    }
+    if launch.wg.size() > dev.max_threads_per_block {
+        return err(
+            kernel.pos,
+            ExtractErrorKind::InvalidLaunch {
+                what: format!(
+                    "workgroup {}x{} exceeds {} threads/block on {}",
+                    launch.wg.w,
+                    launch.wg.h,
+                    dev.max_threads_per_block,
+                    dev.key
+                ),
+            },
+        );
+    }
+
+    // Parameter environment: pointers become arrays, bound integer
+    // scalars become constants, everything else is opaque data.
+    let mut walker = Walker {
+        env: BTreeMap::new(),
+        arrays: BTreeMap::new(),
+        launch,
+        loops: Vec::new(),
+        stack: Vec::new(),
+        sites: Vec::new(),
+        comps: Vec::new(),
+        decls: 0,
+        bindings: &opts.bindings,
+    };
+    let mut array_names = Vec::new();
+    for p in &kernel.params {
+        if p.is_ptr {
+            match p.space {
+                AddrSpace::Local => {
+                    return err(p.pos, ExtractErrorKind::UsesLocalMemory);
+                }
+                AddrSpace::Private => {
+                    // Kernel pointer args must carry an address space in
+                    // OpenCL; don't guess which memory they alias.
+                    return err(
+                        p.pos,
+                        ExtractErrorKind::Unsupported {
+                            what: format!(
+                                "unqualified pointer parameter `{}` (declare it \
+                                 __global or __constant)",
+                                p.name
+                            ),
+                        },
+                    );
+                }
+                AddrSpace::Global | AddrSpace::Constant => {}
+            }
+            walker.arrays.insert(p.name.clone(), p.space);
+            if p.space == AddrSpace::Global {
+                array_names.push(p.name.clone());
+            }
+        } else {
+            let v = match walker.bindings.get(&p.name) {
+                Some(v) if is_int_type(&p.ty) => Val::Aff(Affine::constant(v)),
+                _ if is_int_type(&p.ty) => Val::Unbound(p.name.clone()),
+                _ => Val::Opaque,
+            };
+            walker.env.insert(p.name.clone(), v);
+        }
+    }
+    match walker.arrays.get(&opts.target) {
+        None => {
+            return err(
+                kernel.pos,
+                ExtractErrorKind::UnknownArray {
+                    name: opts.target.clone(),
+                    available: array_names,
+                },
+            )
+        }
+        Some(AddrSpace::Global) => {}
+        Some(_) => {
+            return err(kernel.pos, ExtractErrorKind::TargetNotGlobal { name: opts.target.clone() })
+        }
+    }
+
+    walker.walk(&kernel.body)?;
+
+    // Decompose every global access into 2D coordinates.
+    let mut globals: Vec<GlobalSite> = Vec::new();
+    for site in std::mem::take(&mut walker.sites) {
+        let rc = split_row_col(&site.index).map_err(|msg| ExtractError {
+            pos: site.pos,
+            kind: ExtractErrorKind::MixedStride { what: format!("`{}`: {msg}", site.array) },
+        })?;
+        globals.push(GlobalSite { site, rc });
+    }
+    let target_sites: Vec<&GlobalSite> =
+        globals.iter().filter(|g| g.site.array == opts.target).collect();
+    if target_sites.is_empty() {
+        return err(kernel.pos, ExtractErrorKind::TargetNeverAccessed { name: opts.target.clone() });
+    }
+
+    let roles = classify_loops(&walker.loops, &target_sites, &launch);
+    synthesize(kernel, dev, &launch, &walker, &globals, &target_sites, &roles)
+}
+
+fn is_int_type(ty: &str) -> bool {
+    matches!(ty, "int" | "uint" | "long" | "ulong" | "short" | "size_t" | "char")
+}
+
+/// Classify every loop against the target tap set (module docs / DESIGN
+/// §2d). Loops the target never depends on but that enclose target
+/// accesses are Inner (the same elements are re-accessed every
+/// iteration); loops not enclosing any target access are Other.
+fn classify_loops(loops: &[LoopCtx], target_sites: &[&GlobalSite], launch: &Launch) -> Vec<Role> {
+    let grid_span = |a: &Affine| -> i64 {
+        let gx = (launch.grid.w as i64 - 1).max(0);
+        let gy = (launch.grid.h as i64 - 1).max(0);
+        let x_span = a.wi_coeff(0).abs().saturating_mul(gx);
+        x_span.saturating_add(a.wi_coeff(1).abs().saturating_mul(gy))
+    };
+    let mut roles: Vec<Option<Role>> = vec![None; loops.len()];
+    let mut encloses_target = vec![false; loops.len()];
+    let mut home_votes: Vec<bool> = vec![false; loops.len()];
+    for g in target_sites {
+        for &lid in &g.site.loops {
+            encloses_target[lid as usize] = true;
+        }
+        for coord in [&g.rc.row, &g.rc.col] {
+            for (v, lc) in &coord.terms {
+                let lid = match v {
+                    Var::Loop(i) => *i as usize,
+                    _ => continue,
+                };
+                let info = &loops[lid];
+                if coord.depends_on_wi() {
+                    let span = grid_span(coord);
+                    let cyclic = lc.abs() >= span.saturating_add(1);
+                    let cw = if coord.wi_coeff(0) != 0 {
+                        coord.wi_coeff(0).abs()
+                    } else {
+                        coord.wi_coeff(1).abs()
+                    };
+                    let blocked = lc.abs() == 1
+                        && info.start == 0
+                        && info.step == 1
+                        && info.trip as i64 == cw;
+                    if cyclic || blocked {
+                        // Wu only if no stronger (Tap) vote exists.
+                        if roles[lid] != Some(Role::Tap) {
+                            roles[lid] = Some(Role::Wu);
+                        }
+                    } else {
+                        roles[lid] = Some(Role::Tap);
+                    }
+                } else {
+                    home_votes[lid] = true;
+                }
+            }
+        }
+    }
+    // Home-driving loops: Inner by default; when several nest, the
+    // outermost is the round loop.
+    let home: Vec<usize> = (0..loops.len())
+        .filter(|&i| roles[i].is_none() && home_votes[i])
+        .collect();
+    if home.len() >= 2 {
+        let min_depth = home.iter().map(|&i| loops[i].depth).min().unwrap_or(0);
+        let outermost: Vec<usize> =
+            home.iter().copied().filter(|&i| loops[i].depth == min_depth).collect();
+        for &i in &home {
+            roles[i] = Some(if outermost.len() == 1 && outermost[0] == i {
+                Role::Wu
+            } else {
+                Role::Inner
+            });
+        }
+    } else {
+        for &i in &home {
+            roles[i] = Some(Role::Inner);
+        }
+    }
+    (0..loops.len())
+        .map(|i| match roles[i] {
+            Some(r) => r,
+            None if encloses_target[i] => Role::Inner,
+            None => Role::Other,
+        })
+        .collect()
+}
+
+/// Interval of a coordinate over one workgroup and one round: work-item
+/// ids span the workgroup, inner/tap/other loop variables span their
+/// ranges, round (Wu) loops and group ids are fixed.
+fn coord_interval(a: &Affine, launch: &Launch, loops: &[LoopCtx], roles: &[Role]) -> (i128, i128) {
+    let mut lo = a.c as i128;
+    let mut hi = a.c as i128;
+    for (v, c) in &a.terms {
+        // Contribution interval of this term over one round.
+        let (d0, d1): (i128, i128) = match v {
+            Var::Gid(0) | Var::Lid(0) => (0, (*c as i128) * (launch.wg.w as i128 - 1)),
+            Var::Gid(1) | Var::Lid(1) => (0, (*c as i128) * (launch.wg.h as i128 - 1)),
+            Var::Gid(_) | Var::Lid(_) | Var::Group(_) => (0, 0),
+            Var::Loop(i) => {
+                if roles[*i as usize] == Role::Wu {
+                    (0, 0)
+                } else {
+                    let (mn, mx) = loops[*i as usize].value_range();
+                    ((*c as i128) * mn, (*c as i128) * mx)
+                }
+            }
+        };
+        lo += d0.min(d1);
+        hi += d0.max(d1);
+    }
+    (lo, hi)
+}
+
+/// Tap-offset interval of a coordinate: constants plus tap-loop spans
+/// (work-item home and round/inner positions excluded).
+fn offset_interval(a: &Affine, loops: &[LoopCtx], roles: &[Role]) -> (i128, i128) {
+    let mut lo = a.c as i128;
+    let mut hi = a.c as i128;
+    for (v, c) in &a.terms {
+        if let Var::Loop(i) = v {
+            if roles[*i as usize] == Role::Tap {
+                let (mn, mx) = loops[*i as usize].value_range();
+                let d0 = (*c as i128) * mn;
+                let d1 = (*c as i128) * mx;
+                lo += d0.min(d1);
+                hi += d0.max(d1);
+            }
+        }
+    }
+    (lo, hi)
+}
+
+fn product_of(loop_ids: &[u32], loops: &[LoopCtx], roles: &[Role], keep: &[Role]) -> Option<u64> {
+    let mut p: u64 = 1;
+    for &id in loop_ids {
+        if keep.contains(&roles[id as usize]) {
+            p = p.checked_mul(loops[id as usize].trip)?;
+        }
+    }
+    Some(p)
+}
+
+fn synthesize(
+    kernel: &Kernel,
+    dev: &DeviceSpec,
+    launch: &Launch,
+    walker: &Walker<'_>,
+    globals: &[GlobalSite],
+    target_sites: &[&GlobalSite],
+    roles: &[Role],
+) -> EResult<KernelDescriptor> {
+    let loops = &walker.loops;
+    let kpos = kernel.pos;
+    let too_large = |what: &str| ExtractError {
+        pos: kpos,
+        kind: ExtractErrorKind::TooLarge { what: what.to_string() },
+    };
+    let seg = (dev.transaction_bytes / 4).max(1);
+
+    // Work units & inner iterations: products over the classified loops.
+    let all_ids: Vec<u32> = (0..loops.len() as u32).collect();
+    let wus_per_wi = product_of(&all_ids, loops, roles, &[Role::Wu])
+        .ok_or_else(|| too_large("work-unit rounds overflow"))?;
+    let inner_iters = product_of(&all_ids, loops, roles, &[Role::Inner])
+        .ok_or_else(|| too_large("inner iteration count overflows"))?;
+
+    // Tap set: multiplicity, offsets, average transactions, footprint.
+    let mut taps: u64 = 0;
+    let mut tx_weighted = 0.0f64;
+    let mut off = (i128::MAX, i128::MIN, i128::MAX, i128::MIN);
+    let mut region = (i128::MAX, i128::MIN, i128::MAX, i128::MIN);
+    let mut pad_cols = false;
+    for g in target_sites {
+        let mult = product_of(&g.site.loops, loops, roles, &[Role::Tap])
+            .ok_or_else(|| too_large("tap multiplicity overflows"))?;
+        taps = taps.checked_add(mult).ok_or_else(|| too_large("tap count overflows"))?;
+        tx_weighted += mult as f64 * tx_per_access(&g.rc, launch, dev.warp_size, seg);
+        let (rlo, rhi) = offset_interval(&g.rc.row, loops, roles);
+        let (clo, chi) = offset_interval(&g.rc.col, loops, roles);
+        off = (off.0.min(rlo), off.1.max(rhi), off.2.min(clo), off.3.max(chi));
+        let (rlo, rhi) = coord_interval(&g.rc.row, launch, loops, roles);
+        let (clo, chi) = coord_interval(&g.rc.col, launch, loops, roles);
+        region = (region.0.min(rlo), region.1.max(rhi), region.2.min(clo), region.3.max(chi));
+        if g.rc.row.wi_coeff(0) != 0 {
+            // Warp lanes traverse the staged tile along the slow
+            // dimension (transposed access): classic +1 column pad to
+            // dodge bank conflicts.
+            pad_cols = true;
+        }
+    }
+    if taps == 0 || taps > u32::MAX as u64 {
+        return Err(too_large("tap count out of range"));
+    }
+    let tx_per_target_access = tx_weighted / taps as f64;
+    let bound_i32 = |v: i128, what: &str| -> EResult<i32> {
+        i32::try_from(v).map_err(|_| too_large(what))
+    };
+    let offset_bounds = (
+        bound_i32(off.0, "row tap offset out of range")?,
+        bound_i32(off.1, "row tap offset out of range")?,
+        bound_i32(off.2, "column tap offset out of range")?,
+        bound_i32(off.3, "column tap offset out of range")?,
+    );
+    let dim_of = |lo: i128, hi: i128, what: &str| -> EResult<u64> {
+        let d = hi - lo + 1;
+        if d < 1 || d > u32::MAX as i128 {
+            Err(too_large(what))
+        } else {
+            Ok(d as u64)
+        }
+    };
+    let region_rows = dim_of(region.0, region.1, "staged-region rows out of range")?;
+    let region_cols_unpadded = dim_of(region.2, region.3, "staged-region columns out of range")?;
+    let region_cols = region_cols_unpadded + pad_cols as u64;
+
+    // Degree of reuse: accesses per round over distinct staged elements.
+    let accesses_per_round = launch.wg.size() as f64 * taps as f64 * inner_iters as f64;
+    let reuse = accesses_per_round / (region_rows as f64 * region_cols_unpadded as f64);
+
+    // Contextual accesses & computation, bucketed body/epilogue.
+    let mut coal = [0u64; 2]; // [ilb, ep]
+    let mut uncoal = [0u64; 2];
+    let mut comp = [0u64; 2];
+    let in_body = |loop_ids: &[u32]| {
+        loop_ids.iter().any(|&id| matches!(roles[id as usize], Role::Inner | Role::Tap))
+    };
+    for g in globals {
+        if g.site.array == walker_target(target_sites) {
+            continue;
+        }
+        let mult = product_of(&g.site.loops, loops, roles, &[Role::Tap, Role::Other])
+            .ok_or_else(|| too_large("context access count overflows"))?;
+        let body = in_body(&g.site.loops) || (!g.site.is_store && inner_iters == 1);
+        let coalesced = tx_per_access(&g.rc, launch, dev.warp_size, seg) <= 1.0;
+        let slot = if body { 0 } else { 1 };
+        let bucket = if coalesced { &mut coal } else { &mut uncoal };
+        bucket[slot] = bucket[slot]
+            .checked_add(mult)
+            .ok_or_else(|| too_large("context access count overflows"))?;
+    }
+    for c in &walker.comps {
+        let mult = product_of(&c.loops, loops, roles, &[Role::Tap, Role::Other])
+            .ok_or_else(|| too_large("computation count overflows"))?;
+        let slot = if in_body(&c.loops) { 0 } else { 1 };
+        let added = mult.checked_mul(c.ops as u64).and_then(|v| comp[slot].checked_add(v));
+        comp[slot] = added.ok_or_else(|| too_large("computation count overflows"))?;
+    }
+    let as_u32 = |v: u64, what: &str| -> EResult<u32> {
+        u32::try_from(v).map_err(|_| too_large(what))
+    };
+
+    let base_regs = REG_BASE + 2 * walker.decls + (taps as u32) / 4;
+    Ok(DescriptorBuilder {
+        name: kernel.name.clone(),
+        taps: taps as u32,
+        inner_iters,
+        comp_ilb: as_u32(comp[0], "inner-loop computation out of range")?,
+        comp_ep: as_u32(comp[1], "epilogue computation out of range")?,
+        coal_ilb: as_u32(coal[0], "context access count out of range")?,
+        coal_ep: as_u32(coal[1], "context access count out of range")?,
+        uncoal_ilb: as_u32(uncoal[0], "context access count out of range")?,
+        uncoal_ep: as_u32(uncoal[1], "context access count out of range")?,
+        tx_per_target_access,
+        region_rows,
+        region_cols,
+        reuse,
+        offset_bounds,
+        base_regs,
+        opt_extra_regs: OPT_EXTRA_REGS,
+        launch: *launch,
+        wus_per_wi,
+    }
+    .build(dev))
+}
+
+fn walker_target(target_sites: &[&GlobalSite]) -> &str {
+    &target_sites[0].site.array
+}

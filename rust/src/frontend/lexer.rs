@@ -1,0 +1,339 @@
+//! Tokenizer for the OpenCL C subset the frontend understands.
+//!
+//! Every token carries its source position (1-based line/column), and
+//! every failure is a typed, positioned [`LexError`] — this layer is the
+//! first to touch untrusted user input and must never panic. Supported
+//! lexemes: identifiers (including the `__kernel`/`__global`/... address
+//! qualifiers, which are plain identifiers at this level), decimal
+//! integer and float literals (optional exponent, optional `f`/`u`/`l`
+//! suffix), the C operator/punctuation set the parser consumes, and
+//! `//` / `/* */` comments. Out of scope (typed errors, documented in
+//! DESIGN.md §2d): preprocessor directives, string/char literals, hex
+//! literals.
+
+use std::fmt;
+
+/// 1-based source position.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Pos {
+    pub line: u32,
+    pub col: u32,
+}
+
+impl Pos {
+    pub fn start() -> Pos {
+        Pos { line: 1, col: 1 }
+    }
+}
+
+impl fmt::Display for Pos {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}", self.line, self.col)
+    }
+}
+
+/// A lexeme. Punctuation/operators are interned static strings so the
+/// parser can match on `&str`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    Ident(String),
+    Int(i64),
+    Float(f64),
+    Punct(&'static str),
+}
+
+impl fmt::Display for Tok {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Tok::Ident(s) => write!(f, "`{s}`"),
+            Tok::Int(v) => write!(f, "integer `{v}`"),
+            Tok::Float(v) => write!(f, "float `{v}`"),
+            Tok::Punct(p) => write!(f, "`{p}`"),
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Token {
+    pub tok: Tok,
+    pub pos: Pos,
+}
+
+/// Typed, positioned lexer error.
+#[derive(Clone, Debug)]
+pub struct LexError {
+    pub pos: Pos,
+    pub msg: String,
+}
+
+impl fmt::Display for LexError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "lex error at {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for LexError {}
+
+/// Multi-character operators first (longest match wins), then singles.
+const PUNCT2: [&str; 12] = ["+=", "-=", "*=", "/=", "<=", ">=", "==", "!=", "&&", "||", "++", "--"];
+const PUNCT1: [&str; 17] = [
+    "+", "-", "*", "/", "%", "<", ">", "=", "(", ")", "[", "]", "{", "}", ";", ",", "!",
+];
+
+struct Scanner<'a> {
+    src: &'a [u8],
+    i: usize,
+    pos: Pos,
+}
+
+impl<'a> Scanner<'a> {
+    fn peek(&self) -> Option<u8> {
+        self.src.get(self.i).copied()
+    }
+
+    fn peek2(&self) -> Option<u8> {
+        self.src.get(self.i + 1).copied()
+    }
+
+    fn bump(&mut self) -> Option<u8> {
+        let c = self.peek()?;
+        self.i += 1;
+        if c == b'\n' {
+            self.pos.line += 1;
+            self.pos.col = 1;
+        } else {
+            self.pos.col += 1;
+        }
+        Some(c)
+    }
+
+    fn err(&self, pos: Pos, msg: impl Into<String>) -> LexError {
+        LexError { pos, msg: msg.into() }
+    }
+
+    fn skip_trivia(&mut self) -> Result<(), LexError> {
+        loop {
+            match self.peek() {
+                Some(c) if c.is_ascii_whitespace() => {
+                    self.bump();
+                }
+                Some(b'/') if self.peek2() == Some(b'/') => {
+                    while let Some(c) = self.peek() {
+                        if c == b'\n' {
+                            break;
+                        }
+                        self.bump();
+                    }
+                }
+                Some(b'/') if self.peek2() == Some(b'*') => {
+                    let open = self.pos;
+                    self.bump();
+                    self.bump();
+                    loop {
+                        match self.peek() {
+                            None => {
+                                return Err(self.err(open, "unterminated block comment"));
+                            }
+                            Some(b'*') if self.peek2() == Some(b'/') => {
+                                self.bump();
+                                self.bump();
+                                break;
+                            }
+                            _ => {
+                                self.bump();
+                            }
+                        }
+                    }
+                }
+                _ => return Ok(()),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Tok, LexError> {
+        let start_pos = self.pos;
+        let start = self.i;
+        let mut is_float = false;
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.bump();
+        }
+        if self.peek() == Some(b'.') {
+            is_float = true;
+            self.bump();
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.bump();
+            }
+        }
+        if matches!(self.peek(), Some(b'e') | Some(b'E')) {
+            // Exponent only if followed by a (signed) digit — otherwise the
+            // `e` belongs to an identifier-like suffix and is an error below.
+            let after_sign = match self.peek2() {
+                Some(b'+') | Some(b'-') => self.src.get(self.i + 2).copied(),
+                other => other,
+            };
+            if matches!(after_sign, Some(c) if c.is_ascii_digit()) {
+                is_float = true;
+                self.bump();
+                if matches!(self.peek(), Some(b'+') | Some(b'-')) {
+                    self.bump();
+                }
+                while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                    self.bump();
+                }
+            }
+        }
+        let text = std::str::from_utf8(&self.src[start..self.i])
+            .map_err(|_| self.err(start_pos, "non-utf8 number"))?
+            .to_string();
+        // Single trailing type suffix (f/F on floats, u/U/l/L on ints).
+        match self.peek() {
+            Some(b'f') | Some(b'F') => {
+                is_float = true;
+                self.bump();
+            }
+            Some(b'u') | Some(b'U') | Some(b'l') | Some(b'L') if !is_float => {
+                self.bump();
+            }
+            _ => {}
+        }
+        if matches!(self.peek(), Some(c) if c.is_ascii_alphanumeric() || c == b'_') {
+            return Err(self.err(start_pos, format!("malformed numeric literal `{text}...`")));
+        }
+        if is_float {
+            let v: f64 = text
+                .parse()
+                .map_err(|_| self.err(start_pos, format!("malformed float literal `{text}`")))?;
+            if !v.is_finite() {
+                // Rust's FromStr parses overflowing literals to +-inf;
+                // the pretty-printer could not re-lex those.
+                return Err(self.err(start_pos, format!("float literal `{text}` out of range")));
+            }
+            Ok(Tok::Float(v))
+        } else {
+            text.parse::<i64>()
+                .map(Tok::Int)
+                .map_err(|_| self.err(start_pos, format!("integer literal `{text}` out of range")))
+        }
+    }
+}
+
+/// Tokenize `src`. Returns the token stream (without an EOF marker) or
+/// the first typed error.
+pub fn lex(src: &str) -> Result<Vec<Token>, LexError> {
+    let mut s = Scanner { src: src.as_bytes(), i: 0, pos: Pos::start() };
+    let mut out = Vec::new();
+    loop {
+        s.skip_trivia()?;
+        let pos = s.pos;
+        let c = match s.peek() {
+            None => return Ok(out),
+            Some(c) => c,
+        };
+        let dot_number = c == b'.' && matches!(s.peek2(), Some(d) if d.is_ascii_digit());
+        let tok = if c.is_ascii_digit() || dot_number {
+            s.number()?
+        } else if c.is_ascii_alphabetic() || c == b'_' {
+            let start = s.i;
+            while matches!(s.peek(), Some(c) if c.is_ascii_alphanumeric() || c == b'_') {
+                s.bump();
+            }
+            let text = std::str::from_utf8(&s.src[start..s.i])
+                .map_err(|_| s.err(pos, "non-utf8 identifier"))?;
+            Tok::Ident(text.to_string())
+        } else if c == b'#' {
+            return Err(s.err(
+                pos,
+                "preprocessor directives are not supported — bind constants \
+                 via `--set name=value` instead",
+            ));
+        } else {
+            let rest = &s.src[s.i..];
+            let two = PUNCT2.iter().copied().find(|p| rest.starts_with(p.as_bytes()));
+            let one = PUNCT1.iter().copied().find(|p| rest.starts_with(p.as_bytes()));
+            if let Some(p) = two {
+                s.bump();
+                s.bump();
+                Tok::Punct(p)
+            } else if let Some(p) = one {
+                s.bump();
+                Tok::Punct(p)
+            } else {
+                return Err(s.err(pos, format!("unexpected character `{}`", c as char)));
+            }
+        };
+        out.push(Token { tok, pos });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn kinds(src: &str) -> Vec<Tok> {
+        lex(src).unwrap().into_iter().map(|t| t.tok).collect()
+    }
+
+    #[test]
+    fn idents_numbers_and_punct() {
+        assert_eq!(
+            kinds("int x = 42 + y2;"),
+            vec![
+                Tok::Ident("int".into()),
+                Tok::Ident("x".into()),
+                Tok::Punct("="),
+                Tok::Int(42),
+                Tok::Punct("+"),
+                Tok::Ident("y2".into()),
+                Tok::Punct(";"),
+            ]
+        );
+    }
+
+    #[test]
+    fn float_forms_and_suffixes() {
+        assert_eq!(kinds("0.0f"), vec![Tok::Float(0.0)]);
+        assert_eq!(kinds("1.5"), vec![Tok::Float(1.5)]);
+        assert_eq!(kinds("2e3"), vec![Tok::Float(2000.0)]);
+        assert_eq!(kinds("1e-2"), vec![Tok::Float(0.01)]);
+        assert_eq!(kinds("7u"), vec![Tok::Int(7)]);
+    }
+
+    #[test]
+    fn multichar_operators_win() {
+        assert_eq!(
+            kinds("a += b <= c"),
+            vec![
+                Tok::Ident("a".into()),
+                Tok::Punct("+="),
+                Tok::Ident("b".into()),
+                Tok::Punct("<="),
+                Tok::Ident("c".into()),
+            ]
+        );
+    }
+
+    #[test]
+    fn comments_are_skipped_and_positions_tracked() {
+        let toks = lex("// line\n/* block\nblock */ x").unwrap();
+        assert_eq!(toks.len(), 1);
+        assert_eq!(toks[0].pos, Pos { line: 3, col: 10 });
+    }
+
+    #[test]
+    fn errors_are_positioned_not_panics() {
+        let e = lex("int x = @;").unwrap_err();
+        assert_eq!(e.pos, Pos { line: 1, col: 9 });
+        assert!(e.to_string().contains("1:9"));
+        let e = lex("/* never closed").unwrap_err();
+        assert!(e.msg.contains("unterminated"));
+        let e = lex("#define R 4").unwrap_err();
+        assert!(e.msg.contains("preprocessor"));
+        let e = lex("int x = 12abc;").unwrap_err();
+        assert!(e.msg.contains("malformed numeric"));
+        assert!(lex("int big = 99999999999999999999;").is_err());
+        // Overflowing float literals parse to inf in Rust; reject them so
+        // every accepted Float token re-lexes from the pretty-printer.
+        let e = lex("float f = 1e999;").unwrap_err();
+        assert!(e.msg.contains("out of range"), "{}", e.msg);
+    }
+}

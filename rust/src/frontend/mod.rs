@@ -1,0 +1,126 @@
+//! Kernel-source frontend: from real OpenCL C to the 18 model features.
+//!
+//! The rest of the system consumes [`KernelDescriptor`]s — the synthetic
+//! generator emits them directly and `crate::workloads` hand-maps the
+//! paper's Table 3 benchmarks. This subsystem closes the loop for
+//! arbitrary user kernels: it parses a practical subset of OpenCL C
+//! ([`parser`]), performs per-array affine access analysis ([`access`],
+//! [`extract`]), and synthesizes the descriptor + canonical feature
+//! vector for a given launch configuration and device — which is what
+//! `lmtuner analyze <kernel.cl>` runs end-to-end into the trained
+//! forest.
+//!
+//! The supported subset and every modeling rule (loop classification,
+//! coalescing, computation accounting, the register heuristic) are
+//! specified in DESIGN.md §2d; the golden suite in
+//! `rust/tests/frontend.rs` reconciles extracted descriptors against
+//! the hand-mapped convolution / matrixMul / transpose workloads.
+//!
+//! This is the first subsystem that consumes untrusted user input:
+//! every failure mode is a typed error carrying a source position
+//! ([`FrontendError`]), and nothing here panics on malformed source.
+//!
+//! ```
+//! use lmtuner::frontend::{self, AnalyzeOptions, Bindings};
+//! use lmtuner::gpu::spec::DeviceSpec;
+//! use lmtuner::kernelmodel::launch::{GridGeom, Launch, WgGeom};
+//!
+//! let src = "
+//! __kernel void scale(__global const float* in, __global float* out, int w) {
+//!     int x = get_global_id(0);
+//!     int y = get_global_id(1);
+//!     out[y * w + x] = in[y * w + x] * 2.0f;
+//! }";
+//! let opts = AnalyzeOptions {
+//!     target: "in".into(),
+//!     kernel: None,
+//!     launch: Launch::new(WgGeom { w: 16, h: 8 }, GridGeom { w: 512, h: 512 }),
+//!     bindings: Bindings::new().set("w", 512),
+//! };
+//! let d = frontend::analyze(src, &opts, &DeviceSpec::m2090()).unwrap();
+//! assert_eq!(d.taps, 1);
+//! let features = lmtuner::kernelmodel::features::extract(&d);
+//! assert!(features.iter().all(|f| f.is_finite()));
+//! ```
+
+pub mod access;
+pub mod ast;
+pub mod extract;
+pub mod lexer;
+pub mod parser;
+
+use std::fmt;
+
+use crate::gpu::spec::DeviceSpec;
+use crate::kernelmodel::descriptor::KernelDescriptor;
+
+pub use extract::{AnalyzeOptions, Bindings, ExtractError, ExtractErrorKind};
+pub use lexer::{LexError, Pos};
+pub use parser::ParseError;
+
+/// Any frontend failure: lexing, parsing, or analysis. All variants are
+/// positioned (line:column) and none are produced by panicking.
+#[derive(Debug)]
+pub enum FrontendError {
+    Lex(LexError),
+    Parse(ParseError),
+    Extract(ExtractError),
+}
+
+impl FrontendError {
+    /// The source position the error points at.
+    pub fn pos(&self) -> Pos {
+        match self {
+            FrontendError::Lex(e) => e.pos,
+            FrontendError::Parse(e) => e.pos,
+            FrontendError::Extract(e) => e.pos,
+        }
+    }
+}
+
+impl fmt::Display for FrontendError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrontendError::Lex(e) => write!(f, "{e}"),
+            FrontendError::Parse(e) => write!(f, "{e}"),
+            FrontendError::Extract(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for FrontendError {}
+
+impl From<LexError> for FrontendError {
+    fn from(e: LexError) -> Self {
+        FrontendError::Lex(e)
+    }
+}
+
+impl From<ParseError> for FrontendError {
+    fn from(e: ParseError) -> Self {
+        FrontendError::Parse(e)
+    }
+}
+
+impl From<ExtractError> for FrontendError {
+    fn from(e: ExtractError) -> Self {
+        FrontendError::Extract(e)
+    }
+}
+
+/// Parse a translation unit.
+pub fn parse_program(src: &str) -> Result<ast::Program, FrontendError> {
+    Ok(parser::parse(src)?)
+}
+
+/// End-to-end: parse `src` and synthesize the kernel descriptor for the
+/// target array / launch / device in `opts`. The 18 features follow via
+/// `kernelmodel::features::extract`.
+pub fn analyze(
+    src: &str,
+    opts: &AnalyzeOptions,
+    dev: &DeviceSpec,
+) -> Result<KernelDescriptor, FrontendError> {
+    let prog = parser::parse(src)?;
+    Ok(extract::extract_descriptor(&prog, opts, dev)?)
+}

@@ -8,7 +8,7 @@
 use super::launch::Launch;
 use crate::gpu::spec::DeviceSpec;
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct KernelDescriptor {
     pub name: String,
     /// Target-array accesses per inner-loop iteration (stencil taps).

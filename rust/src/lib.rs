@@ -19,7 +19,10 @@
 //! requests across sharded workers onto a [`runtime`] backend (native
 //! tensorized traversal, or PJRT when artifacts are present), with
 //! `coordinator::service::DeviceRouter` routing batches to per-device
-//! models.
+//! models. The [`frontend`] closes the loop for real kernels: it parses
+//! OpenCL C source, runs per-array access analysis, and synthesizes the
+//! same descriptor/feature vector the trained forest consumes
+//! (`lmtuner analyze <kernel.cl>`).
 //!
 //! See `README.md` for the quickstart, `DESIGN.md` for the module
 //! inventory and backend contracts, and `EXPERIMENTS.md` for how each
@@ -56,6 +59,7 @@
 //! assert!(acc.n > 0 && acc.penalty_weighted > 0.0);
 //! ```
 pub mod coordinator;
+pub mod frontend;
 pub mod gpu;
 pub mod kernelmodel;
 pub mod ml;

@@ -6,6 +6,7 @@
 //!   tune       k-fold CV over the forest hyperparameter grid (ml::select)
 //!   crossdev   train-on-A/test-on-B accuracy matrix over the portfolio
 //!   eval       evaluate a saved model on a dataset / the real benchmarks
+//!   analyze    extract descriptor + 18 features from an OpenCL C kernel
 //!   predict    one-off decision for a feature vector
 //!   serve      start the batched PJRT prediction service (demo load)
 //!   reproduce  regenerate paper figures/tables: fig1, fig6, table1-3
@@ -22,9 +23,12 @@ use anyhow::{bail, Context, Result};
 use lmtuner::coordinator::crossdev;
 use lmtuner::coordinator::service::{Service, ServiceConfig};
 use lmtuner::coordinator::train::{self, TrainConfig};
+use lmtuner::frontend::{self, AnalyzeOptions, Bindings};
 use lmtuner::gpu::registry;
 use lmtuner::gpu::spec::DeviceSpec;
-use lmtuner::kernelmodel::features::{FEATURE_NAMES, NUM_FEATURES};
+use lmtuner::kernelmodel::features::{self, FEATURE_NAMES, NUM_FEATURES};
+use lmtuner::kernelmodel::launch::{GridGeom, Launch, WgGeom};
+use lmtuner::runtime::executor::{BatchExecutor, NativeForestExecutor};
 use lmtuner::ml::{io as model_io, metrics, select};
 use lmtuner::report::{figures, tables};
 use lmtuner::runtime::pjrt::Engine;
@@ -41,7 +45,7 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "lmtuner <generate|train|tune|crossdev|eval|predict|serve|reproduce|info> [options]\n\
+    "lmtuner <generate|train|tune|crossdev|eval|analyze|predict|serve|reproduce|info> [options]\n\
      \n\
      generate  --out data/synth.csv [--device m2090] [--scale 0.2]\n\
                [--configs 24] [--seed N]\n\
@@ -67,6 +71,12 @@ fn usage() -> &'static str {
                (train-on-A/test-on-B accuracy matrix over the portfolio)\n\
      eval      --model models/rf.txt [--data data/synth.csv] [--real]\n\
                [--device KEY]  (must match the dataset's stamped device)\n\
+     analyze   <kernel.cl> --array NAME [--kernel NAME] [--device m2090]\n\
+               [--wg 16x16] [--grid 512x512] [--set w=512,radius=2,...]\n\
+               [--model models/rf.txt]\n\
+               (parse OpenCL C, extract the descriptor + 18 features for\n\
+                the given launch; --set binds scalar kernel arguments;\n\
+                --model additionally prints the use-local-memory verdict)\n\
      predict   --model models/rf.txt --features f1,...,f18 [--artifacts DIR]\n\
      serve     --model models/rf.txt [--device m2090]\n\
                [--backend auto|native|pjrt] [--artifacts artifacts]\n\
@@ -93,6 +103,7 @@ fn run() -> Result<()> {
         Some("tune") => cmd_tune(&mut args),
         Some("crossdev") => cmd_crossdev(&mut args),
         Some("eval") => cmd_eval(&mut args),
+        Some("analyze") => cmd_analyze(&mut args),
         Some("predict") => cmd_predict(&mut args),
         Some("serve") => cmd_serve(&mut args),
         Some("reproduce") => cmd_reproduce(&mut args),
@@ -533,6 +544,105 @@ fn cmd_eval(args: &mut Args) -> Result<()> {
             );
         }
         warn_skipped(per.iter().map(|(_, a)| a.skipped).sum());
+    }
+    Ok(())
+}
+
+/// Parse a `WxH` geometry argument ("16x8") on the typed error path.
+fn parse_geom(s: &str, flag: &str) -> Result<(u32, u32)> {
+    let (w, h) = s
+        .split_once('x')
+        .with_context(|| format!("{flag}={s}: expected WxH (e.g. 16x8)"))?;
+    let parse = |v: &str| -> Result<u32> {
+        let n: u32 = v
+            .trim()
+            .parse()
+            .with_context(|| format!("{flag}={s}: `{v}` is not a positive integer"))?;
+        if n == 0 {
+            bail!("{flag}={s}: dimensions must be nonzero");
+        }
+        Ok(n)
+    };
+    Ok((parse(w)?, parse(h)?))
+}
+
+fn cmd_analyze(args: &mut Args) -> Result<()> {
+    let dev = &device_arg(args)?;
+    let file = args
+        .positional()
+        .get(1)
+        .cloned()
+        .context("usage: lmtuner analyze <kernel.cl> --array NAME [options]")?;
+    let target = args
+        .opt_str("array")
+        .context("--array <name> is required (the array considered for staging)")?;
+    let kernel = args.opt_str("kernel");
+    let (wg_w, wg_h) = parse_geom(&args.str_or("wg", "16x16"), "--wg")?;
+    let (grid_w, grid_h) = parse_geom(&args.str_or("grid", "512x512"), "--grid")?;
+    let set = args.str_or("set", "");
+    let model = args.opt_str("model");
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let bindings = Bindings::parse(&set).map_err(|e| anyhow::anyhow!("--set {e}"))?;
+    let src = std::fs::read_to_string(&file).with_context(|| format!("reading {file}"))?;
+    let launch = Launch::new(
+        WgGeom { w: wg_w, h: wg_h },
+        GridGeom { w: grid_w, h: grid_h },
+    );
+    let opts = AnalyzeOptions { target: target.clone(), kernel, launch, bindings };
+    let d = frontend::analyze(&src, &opts, dev)?;
+
+    println!("kernel: {} ({file})", d.name);
+    println!(
+        "target array: {target}; device: {} ({}); wg {}x{}; grid {}x{}",
+        dev.name, dev.key, wg_w, wg_h, grid_w, grid_h
+    );
+    println!("descriptor:");
+    println!(
+        "  taps={} inner_iters={} wus_per_wi={} tx/access={:.2}",
+        d.taps, d.inner_iters, d.wus_per_wi, d.tx_per_target_access
+    );
+    println!(
+        "  staged region {}x{} ({} B), reuse {:.3}, tap offsets rows {}..{} cols {}..{}",
+        d.region_rows,
+        d.region_cols,
+        d.region_bytes(),
+        d.reuse,
+        d.offset_bounds.0,
+        d.offset_bounds.1,
+        d.offset_bounds.2,
+        d.offset_bounds.3
+    );
+    println!(
+        "  comp ilb/ep {}/{}, ctx coalesced {}/{}, ctx non-coalesced {}/{}, regs {}+{}",
+        d.comp_ilb,
+        d.comp_ep,
+        d.coal_ilb,
+        d.coal_ep,
+        d.uncoal_ilb,
+        d.uncoal_ep,
+        d.base_regs,
+        d.opt_extra_regs
+    );
+    println!(
+        "  lmem feasible on {}: {}",
+        dev.key,
+        if d.lmem_feasible(dev) { "yes" } else { "no (region exceeds shared memory)" }
+    );
+    let feats = features::extract(&d);
+    println!("features:");
+    for (name, v) in FEATURE_NAMES.iter().zip(feats.iter()) {
+        println!("  {name}={v}");
+    }
+    if let Some(model_path) = model {
+        let forest = model_io::load(Path::new(&model_path))?;
+        let exec = NativeForestExecutor::new(train::encode_default(&forest));
+        let score = exec.predict(&[feats.to_vec()])?[0];
+        println!(
+            "verdict ({model_path}): log2(speedup) = {score:+.3} ({:.2}x) -> {}",
+            2f64.powf(score),
+            if score > 0.0 { "USE local memory" } else { "do NOT use local memory" }
+        );
     }
     Ok(())
 }

@@ -65,7 +65,12 @@ pub fn load(path: &Path) -> Result<Forest> {
         .strip_prefix("lmtuner-forest v1 trees=")
         .with_context(|| format!("bad header {header:?}"))?
         .parse()?;
-    let mut trees: Vec<Tree> = Vec::with_capacity(trees_expected);
+    // Declared counts are untrusted (the file may be corrupt or hostile):
+    // cap the pre-allocation so a bogus header cannot trigger a
+    // capacity-overflow panic or a multi-GB allocation. Real counts are
+    // re-checked against the parsed content below.
+    const MAX_PREALLOC: usize = 1 << 20;
+    let mut trees: Vec<Tree> = Vec::with_capacity(trees_expected.min(MAX_PREALLOC));
     let mut summary: Option<String> = None;
     let mut current: Option<(usize, Vec<Node>)> = None;
     for line in lines {
@@ -97,7 +102,7 @@ pub fn load(path: &Path) -> Result<Forest> {
                 );
             }
             let n: usize = n_part.parse()?;
-            current = Some((n, Vec::with_capacity(n)));
+            current = Some((n, Vec::with_capacity(n.min(MAX_PREALLOC))));
         } else if let Some((_, ref mut nodes)) = current {
             let mut it = line.split_whitespace();
             match it.next() {
@@ -183,6 +188,23 @@ mod tests {
             .unwrap();
         let g = load(&path).unwrap();
         assert!(g.config_summary.contains("loaded from"), "{}", g.config_summary);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn absurd_declared_counts_are_rejected_without_allocating() {
+        // A hostile header must neither panic (capacity overflow) nor
+        // reserve gigabytes — it fails the count re-check instead.
+        let path = tmp("huge");
+        let huge = usize::MAX;
+        std::fs::write(
+            &path,
+            format!("lmtuner-forest v1 trees=1\ntree 0 nodes={huge}\nL 0.5\n"),
+        )
+        .unwrap();
+        assert!(load(&path).is_err());
+        std::fs::write(&path, format!("lmtuner-forest v1 trees={huge}\n")).unwrap();
+        assert!(load(&path).is_err());
         std::fs::remove_file(&path).ok();
     }
 

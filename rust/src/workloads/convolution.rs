@@ -93,6 +93,18 @@ mod tests {
     }
 
     #[test]
+    fn table3_row_count_is_exact() {
+        // Pin the paper's count through the Table 3 registry so the
+        // frontend fixture reconciliation cannot silently drift.
+        let b = crate::workloads::all()
+            .into_iter()
+            .find(|b| b.name == "convolution")
+            .expect("Table 3 row");
+        assert_eq!(b.paper_instances, 600);
+        assert_eq!((b.instances)(&DeviceSpec::m2090()).len(), b.paper_instances);
+    }
+
+    #[test]
     fn reuse_grows_with_radius() {
         let dev = DeviceSpec::m2090();
         let all = instances(&dev);

@@ -75,6 +75,16 @@ mod tests {
     }
 
     #[test]
+    fn table3_row_count_is_exact() {
+        let b = crate::workloads::all()
+            .into_iter()
+            .find(|b| b.name == "matrixMul")
+            .expect("Table 3 row");
+        assert_eq!(b.paper_instances, 330);
+        assert_eq!((b.instances)(&DeviceSpec::m2090()).len(), b.paper_instances);
+    }
+
+    #[test]
     fn reuse_equals_wg_height() {
         for d in instances(&DeviceSpec::m2090()) {
             assert!((d.reuse - d.launch.wg.h as f64).abs() < 1e-9, "{}", d.name);

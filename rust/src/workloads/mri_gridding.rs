@@ -78,6 +78,16 @@ mod tests {
     }
 
     #[test]
+    fn table3_row_count_is_exact() {
+        let b = crate::workloads::all()
+            .into_iter()
+            .find(|b| b.name == "MRI-GRIDDING")
+            .expect("Table 3 row");
+        assert_eq!(b.paper_instances, 35);
+        assert_eq!((b.instances)(&DeviceSpec::m2090()).len(), b.paper_instances);
+    }
+
+    #[test]
     fn outcome_is_mixed() {
         let dev = DeviceSpec::m2090();
         let cfg = MeasureConfig::deterministic();

@@ -76,6 +76,16 @@ mod tests {
     }
 
     #[test]
+    fn table3_row_count_is_exact() {
+        let b = crate::workloads::all()
+            .into_iter()
+            .find(|b| b.name == "MVT")
+            .expect("Table 3 row");
+        assert_eq!(b.paper_instances, 120);
+        assert_eq!((b.instances)(&DeviceSpec::m2090()).len(), b.paper_instances);
+    }
+
+    #[test]
     fn kernel1_scattered_kernel2_coalesced() {
         for d in instances(&DeviceSpec::m2090()) {
             if d.name.contains("_k1_") {

@@ -92,6 +92,16 @@ mod tests {
     }
 
     #[test]
+    fn table3_row_count_is_exact() {
+        let b = crate::workloads::all()
+            .into_iter()
+            .find(|b| b.name == "SAD")
+            .expect("Table 3 row");
+        assert_eq!(b.paper_instances, 517);
+        assert_eq!((b.instances)(&DeviceSpec::m2090()).len(), b.paper_instances);
+    }
+
+    #[test]
     fn reuse_is_high() {
         let dev = DeviceSpec::m2090();
         let avg: f64 = instances(&dev).iter().map(|d| d.reuse).sum::<f64>()

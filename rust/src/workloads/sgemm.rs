@@ -62,6 +62,16 @@ mod tests {
     }
 
     #[test]
+    fn table3_row_count_is_exact() {
+        let b = crate::workloads::all()
+            .into_iter()
+            .find(|b| b.name == "SGEMM")
+            .expect("Table 3 row");
+        assert_eq!(b.paper_instances, 48);
+        assert_eq!((b.instances)(&DeviceSpec::m2090()).len(), b.paper_instances);
+    }
+
+    #[test]
     fn epilogue_heavier_than_matrixmul() {
         for d in instances(&DeviceSpec::m2090()) {
             assert!(d.comp_ep >= 4);

@@ -66,6 +66,16 @@ mod tests {
     }
 
     #[test]
+    fn table3_row_count_is_exact() {
+        let b = crate::workloads::all()
+            .into_iter()
+            .find(|b| b.name == "transpose")
+            .expect("Table 3 row");
+        assert_eq!(b.paper_instances, 21);
+        assert_eq!((b.instances)(&DeviceSpec::m2090()).len(), b.paper_instances);
+    }
+
+    #[test]
     fn mostly_beneficial() {
         // Transpose is the canonical staging win.
         let dev = DeviceSpec::m2090();

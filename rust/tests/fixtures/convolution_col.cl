@@ -1,0 +1,28 @@
+/*
+ * Column-pass 2D separable convolution (NVIDIA SDK shape, paper
+ * Table 3). Same work decomposition as the row pass, but the
+ * (2*radius + 1) taps run vertically: the stencil offsets land in the
+ * row coordinate, so the staged region grows a row apron instead of a
+ * column apron. Every access is still warp-coalesced.
+ *
+ * Analyze with:
+ *   lmtuner analyze convolution_col.cl --array input \
+ *       --set width=512,rows_per_thread=1,radius=2 --wg 16x16 --grid 512x512
+ */
+__kernel void convolution_col(__global const float* input,
+                              __global float* output,
+                              __constant float* coeff,
+                              int width,
+                              int rows_per_thread,
+                              int radius,
+                              float norm) {
+    int gx = get_global_id(0);
+    int gy = get_global_id(1);
+    for (int p = 0; p < rows_per_thread; p++) {
+        float sum = 0.0f;
+        for (int k = -radius; k <= radius; k++) {
+            sum += input[(gy + p * get_global_size(1) + k) * width + gx] * coeff[k + radius];
+        }
+        output[(gy + p * get_global_size(1)) * width + gx] = sum * norm;
+    }
+}

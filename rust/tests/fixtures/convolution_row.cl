@@ -1,0 +1,30 @@
+/*
+ * Row-pass 2D separable convolution (NVIDIA SDK shape, paper Table 3).
+ *
+ * Each work item produces `rows_per_thread` output rows, distributed
+ * cyclically over the grid's y extent (paper §4.1); per row it reads a
+ * (2*radius + 1)-tap horizontal stencil of `input` and writes one
+ * coalesced output element. `coeff` lives in __constant space (constant
+ * cache), so the only DRAM context access is the output store.
+ *
+ * Analyze with:
+ *   lmtuner analyze convolution_row.cl --array input \
+ *       --set width=512,rows_per_thread=1,radius=2 --wg 16x16 --grid 512x512
+ */
+__kernel void convolution_row(__global const float* input,
+                              __global float* output,
+                              __constant float* coeff,
+                              int width,
+                              int rows_per_thread,
+                              int radius,
+                              float norm) {
+    int gx = get_global_id(0);
+    int gy = get_global_id(1);
+    for (int p = 0; p < rows_per_thread; p++) {
+        float sum = 0.0f;
+        for (int k = -radius; k <= radius; k++) {
+            sum += input[(gy + p * get_global_size(1)) * width + gx + k] * coeff[k + radius];
+        }
+        output[(gy + p * get_global_size(1)) * width + gx] = sum * norm;
+    }
+}

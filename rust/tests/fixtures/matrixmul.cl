@@ -1,0 +1,28 @@
+/*
+ * Matrix multiply C = A x B (NVIDIA SDK shape, paper Table 3).
+ *
+ * One work item per C element. The k dimension is processed in
+ * `tile_k`-sized rounds: per round the workgroup touches a
+ * tile_k x wg_w block of B (the staging candidate — every element is
+ * reused by the workgroup's wg_h rows), while the A read broadcasts
+ * across the row and the C store is the coalesced epilogue.
+ *
+ * Analyze with:
+ *   lmtuner analyze matrixmul.cl --array b \
+ *       --set size=512,tile_k=8 --wg 16x8 --grid 512x512
+ */
+__kernel void matrixmul(__global const float* a,
+                        __global const float* b,
+                        __global float* c,
+                        int size,
+                        int tile_k) {
+    int gx = get_global_id(0);
+    int gy = get_global_id(1);
+    float sum = 0.0f;
+    for (int t = 0; t < size / tile_k; t++) {
+        for (int k = 0; k < tile_k; k++) {
+            sum += a[gy * size + t * tile_k + k] * b[(t * tile_k + k) * size + gx];
+        }
+    }
+    c[gy * size + gx] = sum;
+}

@@ -1,0 +1,20 @@
+/*
+ * Matrix transpose out[x][y] = in[y][x] (NVIDIA SDK shape, paper
+ * Table 3). The read is coalesced; the write scatters one row per
+ * x-lane — the canonical coalescing-fix candidate for local-memory
+ * staging. No data reuse at all.
+ *
+ * Analyze with:
+ *   lmtuner analyze transpose.cl --array output \
+ *       --set width=1024,height=1024 --wg 16x16 --grid 1024x1024
+ */
+__kernel void transpose(__global const float* input,
+                        __global float* output,
+                        int width,
+                        int height) {
+    int x = get_global_id(0);
+    int y = get_global_id(1);
+    int idx_in = y * width + x;
+    int idx_out = x * height + y;
+    output[idx_out] = input[idx_in];
+}

@@ -1,0 +1,467 @@
+//! Frontend golden suite: the kernel-source frontend must reproduce the
+//! hand-mapped `workloads/` descriptors from real OpenCL C fixtures,
+//! malformed input must yield typed positioned errors (never panics),
+//! and extraction invariants must hold under randomized launches.
+//!
+//! Reconciliation contract (documented in DESIGN.md §2d): every
+//! descriptor field is matched exactly except
+//!   * `comp_ilb` (+-1)  — the hand model charges mul+add separately
+//!     where the frontend counts fused FMA-equivalents (matrixMul);
+//!   * `comp_ep`  (+-2)  — ditto for the writeback epilogue;
+//!   * `base_regs` (+-8) — the frontend's register estimate is a
+//!     documented heuristic, not a compiler.
+
+use lmtuner::frontend::extract::{extract_descriptor, ExtractErrorKind};
+use lmtuner::frontend::{self, parse_program, AnalyzeOptions, Bindings, FrontendError};
+use lmtuner::gpu::spec::DeviceSpec;
+use lmtuner::kernelmodel::descriptor::KernelDescriptor;
+use lmtuner::kernelmodel::features::{extract as features_of, FEATURE_NAMES, NUM_FEATURES};
+use lmtuner::kernelmodel::launch::{GridGeom, Launch, WgGeom};
+use lmtuner::util::prop;
+use lmtuner::workloads;
+
+fn fixture(name: &str) -> String {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures")
+        .join(name);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("{}: {e}", p.display()))
+}
+
+fn opts(target: &str, launch: Launch, bindings: Bindings) -> AnalyzeOptions {
+    AnalyzeOptions { target: target.into(), kernel: None, launch, bindings }
+}
+
+/// Per-feature reconciliation tolerances, in canonical feature order
+/// (zero = exact).
+fn tolerances() -> [f64; NUM_FEATURES] {
+    let mut tol = [0.0; NUM_FEATURES];
+    for (i, name) in FEATURE_NAMES.iter().enumerate() {
+        tol[i] = match *name {
+            "comp_ilb" => 1.0,
+            "comp_ep" => 2.0,
+            "regs" => 8.0,
+            _ => 0.0,
+        };
+    }
+    tol
+}
+
+/// Assert the extracted descriptor matches the hand-mapped one: exact on
+/// the structural fields, documented tolerances on the rest, and the
+/// 18-feature vectors agree under the same tolerances.
+fn reconcile(extracted: &KernelDescriptor, hand: &KernelDescriptor) {
+    let who = &hand.name;
+    assert_eq!(extracted.taps, hand.taps, "{who}: taps");
+    assert_eq!(extracted.inner_iters, hand.inner_iters, "{who}: inner_iters");
+    assert_eq!(extracted.wus_per_wi, hand.wus_per_wi, "{who}: wus_per_wi");
+    assert_eq!(extracted.region_rows, hand.region_rows, "{who}: region_rows");
+    assert_eq!(extracted.region_cols, hand.region_cols, "{who}: region_cols");
+    assert_eq!(extracted.offset_bounds, hand.offset_bounds, "{who}: offset_bounds");
+    assert_eq!(extracted.launch, hand.launch, "{who}: launch");
+    assert_eq!(extracted.elem_bytes, hand.elem_bytes, "{who}: elem_bytes");
+    assert_eq!(
+        (extracted.coal_ilb, extracted.coal_ep, extracted.uncoal_ilb, extracted.uncoal_ep),
+        (hand.coal_ilb, hand.coal_ep, hand.uncoal_ilb, hand.uncoal_ep),
+        "{who}: context access counts"
+    );
+    assert!(
+        (extracted.tx_per_target_access - hand.tx_per_target_access).abs() < 1e-9,
+        "{who}: tx/access {} vs {}",
+        extracted.tx_per_target_access,
+        hand.tx_per_target_access
+    );
+    assert!(
+        (extracted.reuse - hand.reuse).abs() < 1e-9,
+        "{who}: reuse {} vs {}",
+        extracted.reuse,
+        hand.reuse
+    );
+    let fe = features_of(extracted);
+    let fh = features_of(hand);
+    let tol = tolerances();
+    for i in 0..NUM_FEATURES {
+        assert!(
+            (fe[i] - fh[i]).abs() <= tol[i] + 1e-9,
+            "{who}: feature `{}` extracted {} vs hand {} (tolerance {})",
+            FEATURE_NAMES[i],
+            fe[i],
+            fh[i],
+            tol[i]
+        );
+    }
+}
+
+/// Hand-mapped instances of one Table 3 benchmark, by instance name.
+fn hand_instances(
+    bench: &str,
+    dev: &DeviceSpec,
+) -> std::collections::HashMap<String, KernelDescriptor> {
+    let b = workloads::all()
+        .into_iter()
+        .find(|b| b.name == bench)
+        .unwrap_or_else(|| panic!("no Table 3 row named {bench}"));
+    (b.instances)(dev).into_iter().map(|d| (d.name.clone(), d)).collect()
+}
+
+// Sweeps mirrored from the workloads modules; the by-name lookup fails
+// loudly if either side drifts.
+const CONV_RADII: [u32; 5] = [1, 2, 3, 4, 6];
+const CONV_WGS: [(u32, u32); 5] = [(16, 4), (16, 16), (32, 4), (32, 8), (64, 4)];
+const CONV_SIZES: [u32; 4] = [256, 512, 1024, 2048];
+const CONV_RPT: [u32; 3] = [1, 2, 4];
+
+#[test]
+fn golden_convolution_matches_hand_mapping() {
+    let dev = DeviceSpec::m2090();
+    let hand = hand_instances("convolution", &dev);
+    let mut checked = 0usize;
+    for pass in ["row", "col"] {
+        let prog = parse_program(&fixture(&format!("convolution_{pass}.cl"))).unwrap();
+        for &r in &CONV_RADII {
+            for &wg in &CONV_WGS {
+                for &size in &CONV_SIZES {
+                    for &rpt in &CONV_RPT {
+                        let launch = workloads::launch_over(wg, (size, size / rpt));
+                        let b = Bindings::new()
+                            .set("width", size as i64)
+                            .set("rows_per_thread", rpt as i64)
+                            .set("radius", r as i64);
+                        let d = extract_descriptor(&prog, &opts("input", launch, b), &dev)
+                            .unwrap_or_else(|e| panic!("{pass} r{r} {size} rpt{rpt}: {e}"));
+                        let name = format!(
+                            "convolution_{pass}_r{r}_wg{}x{}_{size}_rpt{rpt}",
+                            wg.0, wg.1
+                        );
+                        let h = hand.get(&name).unwrap_or_else(|| panic!("no {name}"));
+                        reconcile(&d, h);
+                        checked += 1;
+                    }
+                }
+            }
+        }
+    }
+    assert_eq!(checked, 600, "must cover every Table 3 convolution instance");
+}
+
+const MM_SIZES: [u32; 2] = [512, 1024];
+const MM_TILE_K: [u32; 3] = [4, 8, 16];
+const MM_WGS: [(u32, u32); 11] = [
+    (16, 4),
+    (16, 8),
+    (16, 16),
+    (32, 2),
+    (32, 4),
+    (32, 8),
+    (32, 16),
+    (8, 8),
+    (8, 16),
+    (64, 2),
+    (64, 4),
+];
+
+#[test]
+fn golden_matrixmul_matches_hand_mapping() {
+    // The hand mapping sweeps an unroll factor the source expresses only
+    // through its FMA accounting (comp_ilb = 2u); the fixture is the
+    // canonical u=1 kernel, reconciled against every u=1 instance.
+    let dev = DeviceSpec::m2090();
+    let hand = hand_instances("matrixMul", &dev);
+    let prog = parse_program(&fixture("matrixmul.cl")).unwrap();
+    let mut checked = 0usize;
+    for &size in &MM_SIZES {
+        for &tk in &MM_TILE_K {
+            for &wg in &MM_WGS {
+                let launch = workloads::launch_over(wg, (size, size));
+                let b = Bindings::new().set("size", size as i64).set("tile_k", tk as i64);
+                let d = extract_descriptor(&prog, &opts("b", launch, b), &dev)
+                    .unwrap_or_else(|e| panic!("mm {size} k{tk}: {e}"));
+                let name = format!("matrixMul_{size}_k{tk}_wg{}x{}_u1", wg.0, wg.1);
+                let h = hand.get(&name).unwrap_or_else(|| panic!("no {name}"));
+                reconcile(&d, h);
+                checked += 1;
+            }
+        }
+    }
+    assert_eq!(checked, 66);
+}
+
+const TR_WGS: [(u32, u32); 7] =
+    [(8, 8), (16, 8), (16, 16), (32, 8), (32, 16), (32, 32), (64, 4)];
+const TR_SIZES: [u32; 3] = [512, 1024, 2048];
+
+#[test]
+fn golden_transpose_matches_hand_mapping() {
+    let dev = DeviceSpec::m2090();
+    let hand = hand_instances("transpose", &dev);
+    let prog = parse_program(&fixture("transpose.cl")).unwrap();
+    let mut checked = 0usize;
+    for &size in &TR_SIZES {
+        for &wg in &TR_WGS {
+            let launch = workloads::launch_over(wg, (size, size));
+            let b = Bindings::new().set("width", size as i64).set("height", size as i64);
+            let d = extract_descriptor(&prog, &opts("output", launch, b), &dev)
+                .unwrap_or_else(|e| panic!("transpose {size}: {e}"));
+            let name = format!("transpose_{size}_wg{}x{}", wg.0, wg.1);
+            let h = hand.get(&name).unwrap_or_else(|| panic!("no {name}"));
+            reconcile(&d, h);
+            checked += 1;
+        }
+    }
+    assert_eq!(checked, 21, "must cover every Table 3 transpose instance");
+}
+
+#[test]
+fn golden_descriptors_port_across_the_device_registry() {
+    // The same source reconciles on every registered device (the hand
+    // mapping is device-parametric through DescriptorBuilder).
+    use lmtuner::gpu::registry;
+    for dev in registry::all() {
+        let hand = hand_instances("transpose", &dev);
+        let prog = parse_program(&fixture("transpose.cl")).unwrap();
+        let launch = workloads::launch_over((16, 16), (1024, 1024));
+        let b = Bindings::new().set("width", 1024).set("height", 1024);
+        let d = extract_descriptor(&prog, &opts("output", launch, b), &dev).unwrap();
+        reconcile(&d, &hand["transpose_1024_wg16x16"]);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Typed, positioned errors on malformed / unsupported input.
+
+fn default_launch() -> Launch {
+    Launch::new(WgGeom { w: 16, h: 16 }, GridGeom { w: 512, h: 512 })
+}
+
+fn analyze_str(
+    src: &str,
+    target: &str,
+    bindings: Bindings,
+) -> Result<KernelDescriptor, FrontendError> {
+    frontend::analyze(src, &opts(target, default_launch(), bindings), &DeviceSpec::m2090())
+}
+
+#[test]
+fn malformed_sources_give_typed_positioned_errors() {
+    // Lex error.
+    let e = analyze_str("__kernel void f€", "x", Bindings::new()).unwrap_err();
+    assert!(matches!(e, FrontendError::Lex(_)), "{e}");
+    // Parse error with position.
+    let e = analyze_str(
+        "__kernel void f(__global float* a) {\n    a[0] = ;\n}",
+        "a",
+        Bindings::new(),
+    )
+    .unwrap_err();
+    match &e {
+        FrontendError::Parse(p) => assert_eq!(p.pos.line, 2, "{p}"),
+        other => panic!("expected parse error, got {other}"),
+    }
+    // Unterminated block.
+    let e = analyze_str("__kernel void f(__global float* a) { a[0] = 1.0f;", "a", Bindings::new())
+        .unwrap_err();
+    assert!(e.to_string().contains("unterminated"), "{e}");
+}
+
+#[test]
+fn analysis_errors_are_typed_and_name_the_problem() {
+    let src = fixture("transpose.cl");
+    let dev = DeviceSpec::m2090();
+    let launch = default_launch();
+
+    // Unknown target array lists the alternatives.
+    let e = frontend::analyze(&src, &opts("nosuch", launch, Bindings::new()), &dev).unwrap_err();
+    match &e {
+        FrontendError::Extract(x) => {
+            assert!(matches!(x.kind, ExtractErrorKind::UnknownArray { .. }), "{x}");
+            assert!(x.to_string().contains("input"), "{x}");
+        }
+        other => panic!("expected extract error, got {other}"),
+    }
+
+    // Unbound scalar argument names the missing --set.
+    let e = frontend::analyze(&src, &opts("output", launch, Bindings::new()), &dev).unwrap_err();
+    assert!(e.to_string().contains("--set"), "{e}");
+
+    // Invalid launch (wg does not divide grid).
+    let bad = Launch::new(WgGeom { w: 48, h: 16 }, GridGeom { w: 512, h: 512 });
+    let b = Bindings::new().set("width", 512).set("height", 512);
+    let e = frontend::analyze(&src, &opts("output", bad, b), &dev).unwrap_err();
+    assert!(e.to_string().contains("launch"), "{e}");
+}
+
+#[test]
+fn unsupported_constructs_are_typed_errors() {
+    // Non-affine subscript.
+    let src = "__kernel void f(__global float* a) {\n    int x = get_global_id(0);\n    \
+               a[x * x] = 1.0f;\n}";
+    let e = analyze_str(src, "a", Bindings::new()).unwrap_err();
+    assert!(e.to_string().contains("affine"), "{e}");
+    assert_eq!(e.pos().line, 3, "{e}");
+
+    // Kernel that already stages into __local memory.
+    let e = analyze_str(
+        "__kernel void f(__global float* a, __local float* tile) {\n    tile[0] = a[0];\n}",
+        "a",
+        Bindings::new(),
+    )
+    .unwrap_err();
+    assert!(e.to_string().contains("__local"), "{e}");
+
+    // Preprocessor use points at --set.
+    let src = "#define R 4\n__kernel void f(__global float* a) { a[0] = 1.0f; }";
+    let e = analyze_str(src, "a", Bindings::new()).unwrap_err();
+    assert!(e.to_string().contains("--set"), "{e}");
+
+    // Zero-step loop.
+    let src = "__kernel void f(__global float* a) {\n    \
+               for (int i = 0; i < 4; i += 0) { a[i] = 1.0f; }\n}";
+    let e = analyze_str(src, "a", Bindings::new()).unwrap_err();
+    assert!(e.to_string().contains("zero step"), "{e}");
+
+    // i64::MIN / -1 in constant folding is a typed overflow error, not
+    // an arithmetic abort (division overflow panics even in release).
+    let src = "__kernel void f(__global float* a) {\n    \
+               int v = (0 - 9223372036854775807 - 1) / (0 - 1);\n    a[v] = 1.0f;\n}";
+    let e = analyze_str(src, "a", Bindings::new()).unwrap_err();
+    assert!(e.to_string().contains("overflow"), "{e}");
+
+    // Unqualified pointer parameters are invalid OpenCL — refuse to
+    // guess which memory they alias.
+    let src = "__kernel void f(float* a) { a[0] = 1.0f; }";
+    let e = analyze_str(src, "a", Bindings::new()).unwrap_err();
+    assert!(e.to_string().contains("unqualified pointer"), "{e}");
+
+    // Target never accessed.
+    let e = analyze_str(
+        "__kernel void f(__global float* a, __global float* b) { a[0] = 1.0f; }",
+        "b",
+        Bindings::new(),
+    )
+    .unwrap_err();
+    assert!(e.to_string().contains("never subscripted"), "{e}");
+}
+
+// ---------------------------------------------------------------------
+// Property tests (util::prop): extraction invariants.
+
+/// Launch/parameter draws valid for the convolution fixtures.
+fn draw_conv_case(rng: &mut lmtuner::util::prng::Rng) -> (Launch, Bindings, u32) {
+    let wgs = [(8u32, 8u32), (16, 4), (16, 16), (32, 8), (32, 32), (64, 4)];
+    let sizes = [256u32, 512, 1024, 2048];
+    let rpts = [1u32, 2, 4];
+    let wg = wgs[rng.below(wgs.len() as u64) as usize];
+    let size = sizes[rng.below(sizes.len() as u64) as usize];
+    let rpt = rpts[rng.below(rpts.len() as u64) as usize];
+    let r = rng.below(7) as u32; // radius 0..6, including the degenerate 0
+    let launch = workloads::launch_over(wg, (size, size / rpt));
+    let b = Bindings::new()
+        .set("width", size as i64)
+        .set("rows_per_thread", rpt as i64)
+        .set("radius", r as i64);
+    (launch, b, r)
+}
+
+#[test]
+fn prop_extracted_features_are_finite_and_sane() {
+    let row = parse_program(&fixture("convolution_row.cl")).unwrap();
+    let col = parse_program(&fixture("convolution_col.cl")).unwrap();
+    let devices = lmtuner::gpu::registry::all();
+    prop::check("frontend-invariants", 192, |rng| {
+        let (launch, b, _r) = draw_conv_case(rng);
+        let dev = &devices[rng.below(devices.len() as u64) as usize];
+        let prog = if rng.below(2) == 0 { &row } else { &col };
+        let d = match extract_descriptor(prog, &opts("input", launch, b), dev) {
+            Ok(d) => d,
+            Err(e) => return Err(format!("extraction failed: {e}")),
+        };
+        let f = features_of(&d);
+        lmtuner::prop_assert!(f.iter().all(|x| x.is_finite()), "non-finite features {f:?}");
+        let (r0, r1, c0, c1) = d.offset_bounds;
+        lmtuner::prop_assert!(r1 >= r0 && c1 >= c0, "negative offset span {:?}", d.offset_bounds);
+        lmtuner::prop_assert!(d.region_rows >= 1, "region_rows {}", d.region_rows);
+        lmtuner::prop_assert!(d.region_cols >= 1, "region_cols {}", d.region_cols);
+        lmtuner::prop_assert!(d.taps >= 1, "taps {}", d.taps);
+        lmtuner::prop_assert!(d.reuse > 0.0, "reuse {}", d.reuse);
+        lmtuner::prop_assert!(d.tx_per_target_access >= 1.0, "tx {}", d.tx_per_target_access);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pretty_print_roundtrip_preserves_descriptor() {
+    let dev = DeviceSpec::m2090();
+    let fixtures = [
+        ("convolution_row.cl", "input"),
+        ("convolution_col.cl", "input"),
+        ("matrixmul.cl", "b"),
+        ("transpose.cl", "output"),
+    ];
+    let progs: Vec<_> = fixtures
+        .iter()
+        .map(|(f, t)| (parse_program(&fixture(f)).unwrap(), *t))
+        .collect();
+    prop::check("frontend-roundtrip", 96, |rng| {
+        let (prog, target) = &progs[rng.below(progs.len() as u64) as usize];
+        let (launch, b, _r) = draw_conv_case(rng);
+        let b = b.set("size", 512).set("tile_k", 8).set("height", 512);
+        let o = opts(target, launch, b);
+        let direct = extract_descriptor(prog, &o, &dev);
+        let printed = prog.to_string();
+        let reparsed = match parse_program(&printed) {
+            Ok(p) => p,
+            Err(e) => {
+                return Err(format!("pretty-printed source failed to reparse: {e}\n{printed}"))
+            }
+        };
+        let roundtrip = extract_descriptor(&reparsed, &o, &dev);
+        match (direct, roundtrip) {
+            (Ok(a), Ok(b)) => {
+                lmtuner::prop_assert!(a == b, "descriptor changed across pretty-print round trip");
+            }
+            (Err(_), Err(_)) => {
+                // Both sides reject: fine. Positions differ between the
+                // original and the canonical print, so messages may too.
+            }
+            (a, b) => {
+                return Err(format!(
+                    "round trip flipped outcome: {:?} vs {:?}",
+                    a.map(|d| d.name),
+                    b.map(|d| d.name)
+                ))
+            }
+        }
+        Ok(())
+    });
+}
+
+// ---------------------------------------------------------------------
+// End-to-end: extracted features flow into a trained forest.
+
+#[test]
+fn extracted_features_drive_the_runtime_executor() {
+    use lmtuner::runtime::executor::{BatchExecutor, NativeForestExecutor};
+    let dev = DeviceSpec::m2090();
+    let prog = parse_program(&fixture("transpose.cl")).unwrap();
+    let launch = workloads::launch_over((16, 16), (1024, 1024));
+    let b = Bindings::new().set("width", 1024).set("height", 1024);
+    let d = extract_descriptor(&prog, &opts("output", launch, b), &dev).unwrap();
+    let feats = features_of(&d);
+
+    // Tiny forest trained on a small synthetic population.
+    let mut rng = lmtuner::util::prng::Rng::new(7);
+    let templates = lmtuner::synth::generator::generate_n(&mut rng, 1);
+    let sweep = lmtuner::synth::sweep::LaunchSweep::new(2048, 2048);
+    let cfg = lmtuner::synth::dataset::BuildConfig { configs_per_kernel: 2, ..Default::default() };
+    let records = lmtuner::synth::dataset::build(&templates, &sweep, &dev, &cfg);
+    let forest = lmtuner::ml::forest::Forest::fit_records(
+        &records,
+        &lmtuner::ml::forest::ForestConfig { num_trees: 3, ..Default::default() },
+    )
+    .expect("simulator records are finite");
+    let enc = lmtuner::ml::export::encode(&forest, lmtuner::ml::export::ExportContract::default());
+    let exec = NativeForestExecutor::new(enc);
+    let scores = exec.predict(&[feats.to_vec()]).unwrap();
+    assert_eq!(scores.len(), 1);
+    assert!(scores[0].is_finite());
+    assert_eq!(scores[0], forest.predict(&feats));
+}
