@@ -9,12 +9,12 @@
 use lmtuner::gpu::spec::DeviceSpec;
 use lmtuner::ml::forest::{Forest, ForestConfig};
 use lmtuner::ml::metrics;
-use lmtuner::sim::exec::{MeasureConfig, SpeedupRecord};
+use lmtuner::sim::exec::{MeasureConfig, SpeedupRecord, TuneRecord};
 use lmtuner::synth::{dataset, generator, sweep::LaunchSweep};
 use lmtuner::util::bench::black_box;
 use lmtuner::util::prng::Rng;
 
-fn build(noise: bool) -> Vec<SpeedupRecord> {
+fn build(noise: bool) -> Vec<TuneRecord> {
     let dev = DeviceSpec::m2090();
     let mut rng = Rng::new(0xAB1A7E);
     let templates = generator::generate_n(&mut rng, 15);
@@ -31,8 +31,10 @@ fn build(noise: bool) -> Vec<SpeedupRecord> {
     dataset::build(&templates, &sweep, &dev, &cfg)
 }
 
-fn eval(records: &[SpeedupRecord], frac: f64, cfg: &ForestConfig) -> (f64, f64, f64) {
+fn eval(records: &[TuneRecord], frac: f64, cfg: &ForestConfig) -> (f64, f64, f64) {
     let (train, test) = dataset::split(records, frac, 7);
+    let train: Vec<&SpeedupRecord> = train.iter().map(|r| &r.base).collect();
+    let test: Vec<&SpeedupRecord> = test.iter().map(|r| &r.base).collect();
     let t0 = std::time::Instant::now();
     let f = Forest::fit_records(&train, cfg).expect("finite records");
     let dt = t0.elapsed().as_secs_f64();
@@ -42,8 +44,10 @@ fn eval(records: &[SpeedupRecord], frac: f64, cfg: &ForestConfig) -> (f64, f64, 
 
 /// k-NN regressor over normalized features: the simplest credible
 /// "other machine learning model" (paper §7).
-fn knn_eval(records: &[SpeedupRecord], frac: f64, k: usize) -> (f64, f64) {
+fn knn_eval(records: &[TuneRecord], frac: f64, k: usize) -> (f64, f64) {
     let (train, test) = dataset::split(records, frac, 7);
+    let train: Vec<&SpeedupRecord> = train.iter().map(|r| &r.base).collect();
+    let test: Vec<&SpeedupRecord> = test.iter().map(|r| &r.base).collect();
     let nf = train[0].features.len();
     // z-normalize on train stats
     let mut mean = vec![0.0; nf];

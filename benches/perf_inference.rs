@@ -19,7 +19,7 @@ use lmtuner::ml::forest::{Forest, ForestConfig};
 use lmtuner::runtime::executor::{BatchExecutor, NativeForestExecutor};
 use lmtuner::runtime::forest_exec::ForestExecutor;
 use lmtuner::runtime::pjrt::Engine;
-use lmtuner::util::bench::{black_box, report_throughput, Bencher};
+use lmtuner::util::bench::{black_box, Bencher, JsonReport};
 use lmtuner::util::prng::Rng;
 use lmtuner::workloads;
 
@@ -36,9 +36,10 @@ fn main() -> anyhow::Result<()> {
         &dev,
         &lmtuner::synth::dataset::BuildConfig { configs_per_kernel: 8, ..Default::default() },
     );
-    let refs: Vec<_> = recs.iter().collect();
-    let forest =
-        Forest::fit_records(&refs, &ForestConfig::default()).expect("finite records");
+    // Joint (schema v2) model: the inference hot path now carries the
+    // workgroup planes too, so the bench times what serving actually runs.
+    let forest = Forest::fit_tune_records(&recs, &ForestConfig::default())
+        .expect("finite, labeled records");
 
     // Realistic queries: the full real-benchmark feature stream.
     let mut rows: Vec<Vec<f64>> = Vec::new();
@@ -52,6 +53,7 @@ fn main() -> anyhow::Result<()> {
 
     let bench = Bencher::default();
     let batch_sizes = [64usize, 256, 1024, 4096];
+    let mut rep = JsonReport::new("perf_inference");
 
     // L3 native recursive.
     let r = bench.run("native: recursive trees", || {
@@ -59,7 +61,7 @@ fn main() -> anyhow::Result<()> {
             black_box(forest.predict(row));
         }
     });
-    report_throughput(&r, n as f64, "pred");
+    rep.record_throughput(&r, n as f64, "pred");
 
     // L3 flat encoded, row at a time.
     let contract = export::ExportContract::default();
@@ -69,7 +71,7 @@ fn main() -> anyhow::Result<()> {
             black_box(enc.predict(row));
         }
     });
-    report_throughput(&r, n as f64, "pred");
+    rep.record_throughput(&r, n as f64, "pred");
 
     // The native BatchExecutor backend at each batch size — this is the
     // artifact-free serving hot path, directly comparable to pjrt:bN.
@@ -80,13 +82,24 @@ fn main() -> anyhow::Result<()> {
         let r = bench.run(&format!("native-batch: batch {bsz}"), || {
             black_box(native_exec.predict(&chunk).unwrap());
         });
-        report_throughput(&r, bsz as f64, "pred");
+        rep.record_throughput(&r, bsz as f64, "pred");
+    }
+
+    // Joint recommendation path: verdict + workgroup planes per row.
+    {
+        let chunk: Vec<Vec<f64>> = rows.iter().cycle().take(1024).cloned().collect();
+        let r = bench.run("native-batch: joint wg, batch 1024", || {
+            black_box(native_exec.predict_wg_logs(&chunk).unwrap());
+        });
+        rep.record_throughput(&r, chunk.len() as f64, "pred");
     }
 
     // L1/L2 via PJRT, per batch variant.
     let dir = std::path::Path::new("artifacts");
     if !dir.join("manifest.json").exists() {
         println!("(skipping pjrt variants: run `make artifacts`)");
+        let out = rep.write()?;
+        println!("wrote {}", out.display());
         return Ok(());
     }
     let engine = Arc::new(Engine::new(dir)?);
@@ -107,7 +120,9 @@ fn main() -> anyhow::Result<()> {
         let r = bench.run(&format!("pjrt: batch {bsz}"), || {
             black_box(exec.predict(&chunk).unwrap());
         });
-        report_throughput(&r, bsz as f64, "pred");
+        rep.record_throughput(&r, bsz as f64, "pred");
     }
+    let out = rep.write()?;
+    println!("wrote {}", out.display());
     Ok(())
 }

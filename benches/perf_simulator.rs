@@ -48,12 +48,11 @@ fn main() {
     });
     report_throughput(&r, n as f64, "instances");
 
-    // Forest training throughput.
+    // Forest training throughput (joint: all three targets).
     let recs = dataset::build(&templates, &sweep, &dev, &cfg);
-    let refs: Vec<_> = recs.iter().collect();
     let fcfg = ForestConfig::default();
     let r = Bencher::coarse().run("train: 20-tree forest", || {
-        black_box(Forest::fit_records(&refs, &fcfg).expect("finite records"));
+        black_box(Forest::fit_tune_records(&recs, &fcfg).expect("finite records"));
     });
-    report_throughput(&r, refs.len() as f64, "samples");
+    report_throughput(&r, recs.len() as f64, "samples");
 }

@@ -11,7 +11,7 @@ use std::time::Duration;
 
 use lmtuner::ml::forest::{Forest, ForestConfig};
 use lmtuner::ml::tree::SplitEngine;
-use lmtuner::util::bench::{black_box, report_throughput, Bencher};
+use lmtuner::util::bench::{black_box, Bencher, JsonReport};
 use lmtuner::util::prng::Rng;
 
 const NUM_FEATURES: usize = 18;
@@ -46,6 +46,7 @@ fn main() {
         max_iters: 3,
     };
     let trees = 4;
+    let mut rep = JsonReport::new("perf_train");
 
     for n in [10_000usize, 50_000] {
         let (x, y) = synth_matrix(n, 0xBEEF ^ n as u64);
@@ -60,18 +61,18 @@ fn main() {
         let r_exact = bench.run(&format!("exact  fit n={n} trees={trees}"), || {
             black_box(Forest::fit(&x, &y, &exact_cfg));
         });
-        report_throughput(&r_exact, (n * trees) as f64, "rows");
+        rep.record_throughput(&r_exact, (n * trees) as f64, "rows");
 
         let binned_cfg = cfg_for(SplitEngine::Binned);
         let mut forest = None;
         let r_binned = bench.run(&format!("binned fit n={n} trees={trees}"), || {
             forest = Some(Forest::fit(&x, &y, &binned_cfg));
         });
-        report_throughput(&r_binned, (n * trees) as f64, "rows");
-        println!(
-            "  binned/exact fit speedup: {:.2}x at n={n}\n",
-            r_exact.mean.as_secs_f64() / r_binned.mean.as_secs_f64()
-        );
+        rep.record_throughput(&r_binned, (n * trees) as f64, "rows");
+        let fit_speedup =
+            r_exact.mean.as_secs_f64() / r_binned.mean.as_secs_f64();
+        println!("  binned/exact fit speedup: {fit_speedup:.2}x at n={n}\n");
+        rep.note(&format!("binned_exact_fit_speedup_n{n}"), fit_speedup);
 
         // Batch prediction: serial vs fanned across the host.
         let forest = forest.expect("bench ran");
@@ -83,15 +84,17 @@ fn main() {
         let r1 = pb.run("predict_batch 1 thread", || {
             black_box(forest.predict_batch_with(&refs, 1));
         });
-        report_throughput(&r1, refs.len() as f64, "rows");
+        rep.record_throughput(&r1, refs.len() as f64, "rows");
         let rn = pb.run(&format!("predict_batch {threads} threads"), || {
             black_box(forest.predict_batch_with(&refs, threads));
         });
-        report_throughput(&rn, refs.len() as f64, "rows");
+        rep.record_throughput(&rn, refs.len() as f64, "rows");
         println!(
             "  parallel/serial predict speedup: {:.2}x ({} threads)\n",
             r1.mean.as_secs_f64() / rn.mean.as_secs_f64(),
             threads
         );
     }
+    let out = rep.write().expect("write bench json");
+    println!("wrote {}", out.display());
 }

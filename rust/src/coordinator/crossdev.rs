@@ -27,9 +27,9 @@ use anyhow::{Context, Result};
 
 use crate::gpu::spec::DeviceSpec;
 use crate::kernelmodel::features::NUM_FEATURES;
-use crate::ml::metrics::{Accuracy, AccuracyAccumulator};
+use crate::ml::metrics::{Accuracy, AccuracyAccumulator, JointAccumulator};
 use crate::runtime::executor::{BatchExecutor, ForestRegistry};
-use crate::sim::exec::SpeedupRecord;
+use crate::sim::exec::{Schema, SpeedupRecord, TuneRecord};
 use crate::synth::{dataset, generator, sweep::LaunchSweep};
 use crate::util::prng::Rng;
 
@@ -54,6 +54,10 @@ pub struct CrossDevMatrix {
     pub count_based: Vec<Vec<f64>>,
     /// Penalty-weighted accuracy per (train, test) cell.
     pub penalty_weighted: Vec<Vec<f64>>,
+    /// Joint accuracy (verdict correct AND measured-best workgroup in
+    /// the model's top-k shortlist) per cell; populated only for schema
+    /// v2 runs.
+    pub joint: Option<Vec<Vec<f64>>>,
     /// Held-out rows graded per test device.
     pub test_rows: Vec<usize>,
 }
@@ -101,11 +105,21 @@ impl CrossDevMatrix {
             s.push(',');
             s.push_str(d);
         }
+        if self.joint.is_some() {
+            for d in &self.devices {
+                s.push_str(&format!(",joint_{d}"));
+            }
+        }
         s.push('\n');
         for (i, d) in self.devices.iter().enumerate() {
             s.push_str(d);
             for j in 0..self.n() {
                 s.push_str(&format!(",{:.4}", self.count_based[i][j]));
+            }
+            if let Some(jm) = &self.joint {
+                for j in 0..self.n() {
+                    s.push_str(&format!(",{:.4}", jm[i][j]));
+                }
             }
             s.push('\n');
         }
@@ -130,6 +144,16 @@ impl CrossDevMatrix {
                 ));
             }
             out.push('\n');
+        }
+        if let Some(jm) = &self.joint {
+            out.push_str("joint (verdict x wg top-k) accuracy\n");
+            for (i, d) in self.devices.iter().enumerate() {
+                out.push_str(&format!("{d:<13}"));
+                for j in 0..self.n() {
+                    out.push_str(&format!("  {:13.1}%", 100.0 * jm[i][j]));
+                }
+                out.push('\n');
+            }
         }
         out.push_str(&format!(
             "diagonal mean {:.1}%  off-diagonal mean {:.1}%\n",
@@ -173,7 +197,7 @@ pub fn run_with_progress(
     // Phase 1 per device: identical template population (same seed),
     // measured on that device, split identically, one forest each.
     let mut registry = ForestRegistry::new();
-    let mut tests: Vec<Vec<SpeedupRecord>> = Vec::with_capacity(cfg.devices.len());
+    let mut tests: Vec<Vec<TuneRecord>> = Vec::with_capacity(cfg.devices.len());
     for dev in &cfg.devices {
         progress(&format!("building dataset + model for {}", dev.key));
         let mut rng = Rng::new(base.seed);
@@ -187,7 +211,17 @@ pub fn run_with_progress(
         );
         let (train_split, test_split) =
             dataset::split(&records, base.train_fraction, base.seed);
-        let forest = crate::ml::forest::Forest::fit_records(&train_split, &base.forest)?;
+        let forest = match base.schema {
+            Schema::V1 => {
+                let bases: Vec<&SpeedupRecord> =
+                    train_split.iter().map(|r| &r.base).collect();
+                crate::ml::forest::Forest::fit_records(&bases, &base.forest)?
+            }
+            Schema::V2 => crate::ml::forest::Forest::fit_tune_records(
+                &train_split,
+                &base.forest,
+            )?,
+        };
         registry.insert(dev.key, train::encode_default(&forest));
         tests.push(test_split.into_iter().cloned().collect());
     }
@@ -200,13 +234,17 @@ pub fn run_with_progress(
         .map(|test_set| {
             test_set
                 .iter()
-                .map(|r| r.features[..NUM_FEATURES].to_vec())
+                .map(|r| r.base.features[..NUM_FEATURES].to_vec())
                 .collect()
         })
         .collect();
     let n = cfg.devices.len();
     let mut count = vec![vec![0.0; n]; n];
     let mut penalty = vec![vec![0.0; n]; n];
+    let mut joint = match base.schema {
+        Schema::V1 => None,
+        Schema::V2 => Some(vec![vec![0.0; n]; n]),
+    };
     for (i, train_dev) in cfg.devices.iter().enumerate() {
         progress(&format!("grading the {} model", train_dev.key));
         let exec = registry
@@ -214,13 +252,24 @@ pub fn run_with_progress(
             .expect("model registered above");
         for (j, test_set) in tests.iter().enumerate() {
             let decisions = exec.decide(&row_sets[j])?;
+            let wgs = match &joint {
+                Some(_) => Some(exec.predict_wg_logs(&row_sets[j])?),
+                None => None,
+            };
             let mut acc = AccuracyAccumulator::new();
-            for (rec, d) in test_set.iter().zip(decisions) {
-                acc.push_record(rec, d);
+            let mut jacc = JointAccumulator::new();
+            for (k, (rec, d)) in test_set.iter().zip(&decisions).enumerate() {
+                acc.push_record(&rec.base, *d);
+                if let Some(w) = &wgs {
+                    jacc.push(rec.base.speedup, *d, rec.best_wg, w[k]);
+                }
             }
             let a: Accuracy = acc.finish();
             count[i][j] = a.count_based;
             penalty[i][j] = a.penalty_weighted;
+            if let Some(jm) = joint.as_mut() {
+                jm[i][j] = jacc.finish().joint;
+            }
         }
     }
 
@@ -228,6 +277,7 @@ pub fn run_with_progress(
         devices: cfg.devices.iter().map(|d| d.key.to_string()).collect(),
         count_based: count,
         penalty_weighted: penalty,
+        joint,
         test_rows: tests.iter().map(Vec::len).collect(),
     })
 }
@@ -280,6 +330,7 @@ mod tests {
             devices: vec!["a".into(), "b".into()],
             count_based: vec![vec![0.9, 0.7], vec![0.6, 0.95]],
             penalty_weighted: vec![vec![0.99, 0.9], vec![0.88, 0.97]],
+            joint: None,
             test_rows: vec![10, 12],
         };
         assert!((m.diagonal_mean() - 0.925).abs() < 1e-12);
@@ -294,7 +345,42 @@ mod tests {
         assert_eq!(lines.next(), Some("b,0.6000,0.9500"));
         assert_eq!(lines.next(), None);
         assert!(m.render().contains("diagonal mean"));
+        assert!(!m.render().contains("joint"));
+        // joint runs append joint_<dev> columns and a render block
+        let jm = CrossDevMatrix {
+            joint: Some(vec![vec![0.5, 0.4], vec![0.3, 0.6]]),
+            ..m
+        };
+        jm.to_csv(&path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        let mut lines = body.lines();
+        assert_eq!(lines.next(), Some("train_device,a,b,joint_a,joint_b"));
+        assert_eq!(lines.next(), Some("a,0.9000,0.7000,0.5000,0.4000"));
+        assert_eq!(lines.next(), Some("b,0.6000,0.9500,0.3000,0.6000"));
+        assert!(jm.render().contains("joint"));
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn joint_crossdev_populates_the_joint_grid() {
+        let mut cfg = small_cfg(vec![DeviceSpec::m2090(), DeviceSpec::k20()]);
+        cfg.base.schema = Schema::V2;
+        let m = run(&cfg).unwrap();
+        let jm = m.joint.as_ref().expect("schema v2 populates joint");
+        assert_eq!(jm.len(), 2);
+        for (i, row) in jm.iter().enumerate() {
+            assert_eq!(row.len(), 2);
+            for (j, &x) in row.iter().enumerate() {
+                assert!((0.0..=1.0).contains(&x), "joint {x} out of range");
+                // joint accuracy cannot beat the verdict accuracy
+                assert!(x <= m.count_based[i][j] + 1e-12);
+            }
+        }
+        // the models actually learned something about workgroup shapes
+        assert!(
+            (0..2).any(|i| jm[i][i] > 0.0),
+            "joint diagonal all zero: {jm:?}"
+        );
     }
 
     #[test]

@@ -24,9 +24,11 @@ use anyhow::Result;
 use crate::gpu::spec::DeviceSpec;
 use crate::kernelmodel::features::NUM_FEATURES;
 use crate::ml::forest::{Forest, ForestConfig, OobEstimate};
-use crate::ml::metrics::{self, Accuracy, AccuracyAccumulator};
+use crate::ml::metrics::{
+    self, Accuracy, AccuracyAccumulator, JointAccumulator, JointAccuracy,
+};
 use crate::ml::{export, io};
-use crate::sim::exec::{MeasureConfig, SpeedupRecord};
+use crate::sim::exec::{MeasureConfig, Schema, SpeedupRecord, TuneRecord};
 use crate::synth::dataset::BuildProgress;
 use crate::util::pool::parallel_map;
 use crate::synth::sink::{
@@ -48,8 +50,14 @@ pub struct TrainConfig {
     pub measure: MeasureConfig,
     pub seed: u64,
     /// Also compute the out-of-bag estimate during the fit (one extra
-    /// traversal pass over the training split; off by default).
+    /// traversal pass over the training split; off by default). The OOB
+    /// pass grades the primary (verdict) output only, so joint (schema
+    /// v2) runs skip it and report `oob: None`.
     pub compute_oob: bool,
+    /// Dataset/label schema: v1 trains the paper's single-output verdict
+    /// forest; v2 trains the joint verdict × workgroup-size forest and
+    /// additionally reports [`TrainOutcome::joint`].
+    pub schema: Schema,
 }
 
 impl Default for TrainConfig {
@@ -62,6 +70,7 @@ impl Default for TrainConfig {
             measure: MeasureConfig::default(),
             seed: 0x5EED,
             compute_oob: false,
+            schema: Schema::V1,
         }
     }
 }
@@ -97,9 +106,12 @@ pub struct TrainOutcome {
     /// Key of the simulated device the dataset was measured on; stamped
     /// into every dataset/shard this outcome persists.
     pub device: String,
+    /// Schema the pipeline ran under (drives how `records` persist and
+    /// whether `joint` is populated).
+    pub schema: Schema,
     /// Materialized records (in-memory pipeline only; empty when the
     /// dataset streamed to disk shards).
-    pub records: Vec<SpeedupRecord>,
+    pub records: Vec<TuneRecord>,
     /// Stream statistics of the full dataset, accumulated during the
     /// build pass.
     pub summary: DatasetSummary,
@@ -109,8 +121,11 @@ pub struct TrainOutcome {
     pub gen_seconds: f64,
     pub fit_seconds: f64,
     /// Out-of-bag estimate of the fitted forest (only when
-    /// `TrainConfig::compute_oob` is set).
+    /// `TrainConfig::compute_oob` is set and the schema is v1).
     pub oob: Option<OobEstimate>,
+    /// Joint verdict × workgroup metrics over the held-out split
+    /// (schema v2 runs only).
+    pub joint: Option<JointAccuracy>,
 }
 
 /// Fit the forest on a training split, with the optional OOB pass.
@@ -118,17 +133,42 @@ pub struct TrainOutcome {
 /// features and clamped-positive speedups (asserted by the crossdev
 /// label-flip test), but an empty split (e.g. a zero-capacity
 /// reservoir) is a legitimate runtime condition, not a panic.
-fn fit_split<R: std::borrow::Borrow<SpeedupRecord>>(
+fn fit_split<R: std::borrow::Borrow<TuneRecord>>(
     records: &[R],
     cfg: &ForestConfig,
     compute_oob: bool,
+    schema: Schema,
 ) -> Result<(Forest, Option<OobEstimate>), crate::ml::forest::FitError> {
-    if compute_oob {
-        let (f, oob) = Forest::fit_records_with_oob(records, cfg)?;
-        Ok((f, Some(oob)))
-    } else {
-        Ok((Forest::fit_records(records, cfg)?, None))
+    match schema {
+        // Joint fit: same tree structure (extras never influence splits),
+        // no OOB pass (it grades the primary output only).
+        Schema::V2 => Ok((Forest::fit_tune_records(records, cfg)?, None)),
+        Schema::V1 => {
+            let bases: Vec<&SpeedupRecord> =
+                records.iter().map(|r| &r.borrow().base).collect();
+            if compute_oob {
+                let (f, oob) = Forest::fit_records_with_oob(&bases, cfg)?;
+                Ok((f, Some(oob)))
+            } else {
+                Ok((Forest::fit_records(&bases, cfg)?, None))
+            }
+        }
     }
+}
+
+/// Grade the joint (verdict × workgroup) quality of a fitted joint
+/// forest over held-out records.
+fn joint_eval<'a, I: IntoIterator<Item = &'a TuneRecord>>(
+    forest: &Forest,
+    test: I,
+) -> JointAccuracy {
+    let mut acc = JointAccumulator::new();
+    for r in test {
+        let x = &r.base.features[..];
+        let wg = forest.predict_wg_logs(x).unwrap_or((0.0, 0.0));
+        acc.push(r.base.speedup, forest.decide(x), r.best_wg, wg);
+    }
+    acc.finish()
 }
 
 /// Dataset build options derived from a train config. The seed
@@ -148,7 +188,7 @@ pub fn build_config(cfg: &TrainConfig) -> dataset::BuildConfig {
 /// population and launch sweep). `lmtuner tune` cross-validates on
 /// these records, so the selected config is graded against the same
 /// distribution `train` will see.
-pub fn build_records(dev: &DeviceSpec, cfg: &TrainConfig) -> Vec<SpeedupRecord> {
+pub fn build_records(dev: &DeviceSpec, cfg: &TrainConfig) -> Vec<TuneRecord> {
     let mut rng = Rng::new(cfg.seed);
     let templates = generator::generate(&mut rng, cfg.scale);
     let sweep = LaunchSweep::new(2048, 2048);
@@ -181,11 +221,17 @@ pub fn run_with_progress(
     let (train, test) = dataset::split(&records, cfg.train_fraction, cfg.seed);
     let train_size = train.len();
     let t1 = Instant::now();
-    let (forest, oob) = fit_split(&train, &cfg.forest, cfg.compute_oob)
+    let (forest, oob) = fit_split(&train, &cfg.forest, cfg.compute_oob, cfg.schema)
         .expect("cannot fit on the generated dataset (empty or non-finite)");
     let fit_seconds = t1.elapsed().as_secs_f64();
 
-    let synth_accuracy = metrics::evaluate_model(&test, |x| forest.decide(x));
+    let test_bases: Vec<&SpeedupRecord> = test.iter().map(|r| &r.base).collect();
+    let synth_accuracy = metrics::evaluate_model(&test_bases, |x| forest.decide(x));
+    drop(test_bases);
+    let joint = match cfg.schema {
+        Schema::V1 => None,
+        Schema::V2 => Some(joint_eval(&forest, test.iter().copied())),
+    };
     drop(train);
     drop(test);
     let per_benchmark = evaluate_real(dev, &forest, &cfg.measure);
@@ -193,6 +239,7 @@ pub fn run_with_progress(
     TrainOutcome {
         forest,
         device: dev.key.to_string(),
+        schema: cfg.schema,
         records,
         summary,
         synth_accuracy,
@@ -201,6 +248,7 @@ pub fn run_with_progress(
         gen_seconds,
         fit_seconds,
         oob,
+        joint,
     }
 }
 
@@ -223,7 +271,8 @@ pub fn run_sharded(
     // Pass 1: simulate once, streaming every record to the CSV shards
     // while the reservoir uniformly samples the training split. Every
     // shard is stamped with the device it was measured on.
-    let mut shards = ShardedCsvSink::create(&cfg.out_dir, cfg.shards, dev.key)?;
+    let mut shards =
+        ShardedCsvSink::create_schema(&cfg.out_dir, cfg.shards, dev.key, base.schema)?;
     let mut reservoir =
         ReservoirSink::new(cfg.train_capacity, base.seed ^ 0x7EA1_5A3D);
     let mut tee = Tee(&mut shards, &mut reservoir);
@@ -234,7 +283,8 @@ pub fn run_sharded(
     let (train_records, train_indices) = reservoir.into_sample();
     let train_size = train_records.len();
     let t1 = Instant::now();
-    let (forest, oob) = fit_split(&train_records, &base.forest, base.compute_oob)?;
+    let (forest, oob) =
+        fit_split(&train_records, &base.forest, base.compute_oob, base.schema)?;
     let fit_seconds = t1.elapsed().as_secs_f64();
     drop(train_records);
 
@@ -245,19 +295,30 @@ pub fn run_sharded(
     const EVAL_BATCH: usize = 8192;
     let train_set: HashSet<u64> = train_indices.into_iter().collect();
     let mut acc = AccuracyAccumulator::new();
+    let mut joint_acc = match base.schema {
+        Schema::V1 => None,
+        Schema::V2 => Some(JointAccumulator::new()),
+    };
     let mut batch: Vec<Vec<f64>> = Vec::with_capacity(EVAL_BATCH);
     let threads = build.threads;
-    let replay = sink::stream_sharded_rows(&cfg.out_dir, |idx, row| {
+    let replay = sink::stream_sharded_rows(&cfg.out_dir, |idx, schema, row| {
+        anyhow::ensure!(
+            schema == base.schema,
+            "{}: shards replay schema {schema} but this run is {} — \
+             stale files in the output directory?",
+            cfg.out_dir.display(),
+            base.schema
+        );
         if !train_set.contains(&idx) {
             batch.push(row);
             if batch.len() == EVAL_BATCH {
-                grade_rows(&mut acc, &forest, &batch, threads);
+                grade_rows(&mut acc, &mut joint_acc, &forest, &batch, threads);
                 batch.clear();
             }
         }
         Ok(())
     })?;
-    grade_rows(&mut acc, &forest, &batch, threads);
+    grade_rows(&mut acc, &mut joint_acc, &forest, &batch, threads);
     anyhow::ensure!(
         replay.rows == summary.records,
         "{}: shards replay {} records but the build streamed {} — \
@@ -286,6 +347,7 @@ pub fn run_sharded(
     Ok(TrainOutcome {
         forest,
         device: dev.key.to_string(),
+        schema: base.schema,
         records: Vec::new(),
         summary,
         synth_accuracy: acc.finish(),
@@ -294,21 +356,36 @@ pub fn run_sharded(
         gen_seconds,
         fit_seconds,
         oob,
+        joint: joint_acc.map(|j| j.finish()),
     })
 }
 
-/// Grade one batch of raw dataset rows (features + speedup) against
-/// the forest, fanning `decide` across the thread pool.
+/// Grade one batch of raw dataset rows against the forest, fanning the
+/// traversals across the thread pool. Row layout is the CSV column
+/// order: features, speedup, then (schema v2, iff `joint` is live) the
+/// measured-best workgroup label with its (0, 0) = unlabeled sentinel.
 fn grade_rows(
     acc: &mut AccuracyAccumulator,
+    joint: &mut Option<JointAccumulator>,
     forest: &Forest,
     rows: &[Vec<f64>],
     threads: usize,
 ) {
-    let decisions =
-        parallel_map(rows, threads, |row| forest.decide(&row[..NUM_FEATURES]));
-    for (row, d) in rows.iter().zip(decisions) {
+    let preds = parallel_map(rows, threads, |row| {
+        let x = &row[..NUM_FEATURES];
+        (forest.decide(x), forest.predict_wg_logs(x))
+    });
+    for (row, (d, wg)) in rows.iter().zip(preds) {
         acc.push(row[NUM_FEATURES], d);
+        if let Some(j) = joint.as_mut() {
+            let label = match (row.get(NUM_FEATURES + 1), row.get(NUM_FEATURES + 2)) {
+                (Some(&w), Some(&h)) if w >= 1.0 && h >= 1.0 => {
+                    Some((w as u32, h as u32))
+                }
+                _ => None,
+            };
+            j.push(row[NUM_FEATURES], d, label, wg.unwrap_or((0.0, 0.0)));
+        }
     }
 }
 
@@ -336,7 +413,7 @@ pub fn evaluate_real(
 pub fn save_outcome(out: &TrainOutcome, model_path: &Path, data_path: Option<&Path>) -> Result<()> {
     io::save(&out.forest, model_path)?;
     if let Some(p) = data_path {
-        dataset::save(&out.records, p, &out.device)?;
+        dataset::save_schema(&out.records, p, &out.device, out.schema)?;
     }
     Ok(())
 }
@@ -420,7 +497,7 @@ mod tests {
         let mp = dir.join(format!("lmtuner-model-{}.txt", std::process::id()));
         save_outcome(&out, &mp, None).unwrap();
         let back = crate::ml::io::load(&mp).unwrap();
-        let probe = out.records[0].features;
+        let probe = out.records[0].base.features;
         assert!((back.predict(&probe) - out.forest.predict(&probe)).abs() < 1e-12);
         std::fs::remove_file(&mp).ok();
     }
@@ -488,8 +565,77 @@ mod tests {
         assert_eq!(sharded.summary.records as usize, mem.records.len());
         let back = sink::load_sharded(&dir).unwrap();
         for (a, b) in back.iter().zip(&mem.records) {
-            assert_eq!(a.features, b.features);
-            assert!((a.speedup - b.speedup).abs() < 1e-9);
+            assert_eq!(a.base.features, b.base.features);
+            assert!((a.base.speedup - b.base.speedup).abs() < 1e-9);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn joint_pipeline_reports_the_joint_metric() {
+        let dev = DeviceSpec::m2090();
+        let cfg = TrainConfig {
+            scale: 0.03,
+            configs_per_kernel: 6,
+            schema: Schema::V2,
+            ..Default::default()
+        };
+        let out = run(&dev, &cfg);
+        assert_eq!(out.schema, Schema::V2);
+        assert_eq!(out.forest.num_outputs(), 3);
+        let j = out.joint.expect("schema v2 must report the joint metric");
+        assert!(j.n > 0);
+        assert!(j.wg_hit_rate > 0.0, "wg hit rate {}", j.wg_hit_rate);
+        assert!(j.joint <= j.wg_hit_rate);
+        assert!(j.joint <= j.verdict.count_based + 1e-12);
+        // the verdict component grades the same rows the plain metric does
+        assert_eq!(j.verdict.n, out.synth_accuracy.n);
+        // v2-saved dataset round-trips with its labels
+        let dir = std::env::temp_dir();
+        let dp = dir.join(format!("lmtuner-train-v2-{}.csv", std::process::id()));
+        save_outcome(&out, &dir.join("lmtuner-train-v2-m.txt"), Some(&dp)).unwrap();
+        let (back, tag) = dataset::load_tagged(&dp).unwrap();
+        assert_eq!(tag.schema, Schema::V2);
+        assert_eq!(back[0].best_wg, out.records[0].best_wg);
+        assert!(back[0].best_wg.is_some());
+        std::fs::remove_file(&dp).ok();
+        std::fs::remove_file(dir.join("lmtuner-train-v2-m.txt")).ok();
+    }
+
+    #[test]
+    fn joint_sharded_pipeline_matches_in_memory_records() {
+        let dev = DeviceSpec::m2090();
+        let base = TrainConfig {
+            scale: 0.02,
+            configs_per_kernel: 4,
+            schema: Schema::V2,
+            ..Default::default()
+        };
+        let dir = std::env::temp_dir()
+            .join(format!("lmtuner-train-v2eq-{}", std::process::id()));
+        let mem = run(&dev, &base);
+        let sharded = run_sharded(
+            &dev,
+            &ShardedTrainConfig {
+                shards: 2,
+                train_capacity: 100,
+                ..ShardedTrainConfig::new(base, dir.clone())
+            },
+            None,
+        )
+        .unwrap();
+        let j = sharded.joint.expect("sharded v2 reports joint");
+        assert!(j.n > 0);
+        assert_eq!(
+            j.n as u64 + j.skipped as u64 + sharded.train_size as u64,
+            sharded.summary.records
+        );
+        // shards carry the same joint labels the in-memory run produced
+        let back = sink::load_sharded(&dir).unwrap();
+        assert_eq!(back.len(), mem.records.len());
+        for (a, b) in back.iter().zip(&mem.records) {
+            assert_eq!(a.best_wg, b.best_wg);
+            assert!(a.best_wg.is_some());
         }
         std::fs::remove_dir_all(&dir).ok();
     }

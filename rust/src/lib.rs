@@ -46,17 +46,22 @@
 //! let templates = generator::generate_n(&mut rng, 1);
 //! let sweep = LaunchSweep::new(2048, 2048);
 //! let cfg = dataset::BuildConfig { configs_per_kernel: 2, ..Default::default() };
+//! // Each TuneRecord carries the scalar speedup label plus the
+//! // fastest measured workgroup shape (the schema-v2 joint label).
 //! let records = dataset::build(&templates, &sweep, &dev, &cfg);
-//! assert!(!records.is_empty());
+//! assert!(!records.is_empty() && records[0].best_wg.is_some());
 //!
 //! let (train, test) = dataset::split(&records, 0.5, 1);
-//! // fit_records rejects non-finite features/targets with a typed error
-//! let forest = Forest::fit_records(
+//! // fit_tune_records grows one forest predicting all three targets;
+//! // non-finite features/targets are a typed error
+//! let forest = Forest::fit_tune_records(
 //!     &train,
 //!     &ForestConfig { num_trees: 3, ..Default::default() },
-//! ).expect("simulator records are finite");
-//! let acc = metrics::evaluate_model(&test, |x| forest.decide(x));
+//! ).expect("simulator records are finite and labeled");
+//! let test_bases: Vec<_> = test.iter().map(|r| &r.base).collect();
+//! let acc = metrics::evaluate_model(&test_bases, |x| forest.decide(x));
 //! assert!(acc.n > 0 && acc.penalty_weighted > 0.0);
+//! assert!(forest.predict_wg_logs(&test[0].base.features).is_some());
 //! ```
 pub mod coordinator;
 pub mod frontend;

@@ -32,7 +32,7 @@ use lmtuner::runtime::executor::{BatchExecutor, NativeForestExecutor};
 use lmtuner::ml::{io as model_io, metrics, select};
 use lmtuner::report::{figures, tables};
 use lmtuner::runtime::pjrt::Engine;
-use lmtuner::sim::exec::MeasureConfig;
+use lmtuner::sim::exec::{MeasureConfig, Schema, SpeedupRecord};
 use lmtuner::synth::dataset;
 use lmtuner::util::cli::Args;
 use lmtuner::util::prng::Rng;
@@ -48,17 +48,22 @@ fn usage() -> &'static str {
     "lmtuner <generate|train|tune|crossdev|eval|analyze|predict|serve|reproduce|info> [options]\n\
      \n\
      generate  --out data/synth.csv [--device m2090] [--scale 0.2]\n\
-               [--configs 24] [--seed N]\n\
+               [--configs 24] [--seed N] [--schema v1|v2]\n\
                [--shards N --out-dir data/shards]  (streamed, sharded CSV)\n\
+               (--schema v2 adds the measured-best workgroup label per\n\
+                instance; shards/files are stamped `# schema=v2`)\n\
      train     --model models/rf.txt [--device m2090] [--data data/synth.csv]\n\
                [--scale 0.2] [--configs 24] [--trees 20] [--mtry 4]\n\
                [--min-leaf 1] [--engine binned|exact] [--train-frac 0.1]\n\
                [--forest-config models/forest-config.txt] [--oob]\n\
+               [--schema v1|v2]\n\
                [--shards N --out-dir data/shards --train-cap 50000]\n\
                (--shards streams the dataset to disk: bounded memory at\n\
                 any --scale; the forest fits on a reservoir sample;\n\
                 --forest-config loads a `lmtuner tune` winner, explicit\n\
-                flags still override it)\n\
+                flags still override it; --schema v2 trains the joint\n\
+                verdict x workgroup-size forest and reports the joint\n\
+                metric)\n\
      tune      [--out data/tune.csv] [--best models/forest-config.txt]\n\
                [--device m2090] [--scale 0.05] [--configs 8] [--seed N]\n\
                [--trees 10,20,40] [--mtry 2,4,8] [--min-leaf 1,4]\n\
@@ -67,16 +72,20 @@ fn usage() -> &'static str {
                 --out, best config -> --best for --forest-config)\n\
      crossdev  [--devices m2090,gtx480,gtx680,k20] [--out data/crossdev.csv]\n\
                [--scale 0.05] [--configs 8] [--train-frac 0.1] [--seed N]\n\
-               [--forest-config models/forest-config.txt]\n\
-               (train-on-A/test-on-B accuracy matrix over the portfolio)\n\
+               [--forest-config models/forest-config.txt] [--schema v1|v2]\n\
+               (train-on-A/test-on-B accuracy matrix over the portfolio;\n\
+                --schema v2 additionally grades the joint verdict x\n\
+                workgroup metric per cell)\n\
      eval      --model models/rf.txt [--data data/synth.csv] [--real]\n\
-               [--device KEY]  (must match the dataset's stamped device)\n\
+               [--device KEY]  (must match the dataset's stamped device;\n\
+                the model's output arity must match the dataset schema)\n\
      analyze   <kernel.cl> --array NAME [--kernel NAME] [--device m2090]\n\
                [--wg 16x16] [--grid 512x512] [--set w=512,radius=2,...]\n\
                [--model models/rf.txt]\n\
                (parse OpenCL C, extract the descriptor + 18 features for\n\
                 the given launch; --set binds scalar kernel arguments;\n\
-                --model additionally prints the use-local-memory verdict)\n\
+                --model additionally prints the use-local-memory verdict,\n\
+                plus a suggested workgroup size for joint v2 models)\n\
      predict   --model models/rf.txt --features f1,...,f18 [--artifacts DIR]\n\
      serve     --model models/rf.txt [--device m2090]\n\
                [--backend auto|native|pjrt] [--artifacts artifacts]\n\
@@ -173,6 +182,9 @@ fn train_config(args: &mut Args) -> Result<TrainConfig> {
     if args.flag("no-noise") {
         cfg.measure = MeasureConfig::deterministic();
     }
+    if let Some(s) = args.opt_str("schema") {
+        cfg.schema = s.parse().map_err(anyhow::Error::msg)?;
+    }
     Ok(cfg)
 }
 
@@ -217,7 +229,7 @@ fn cmd_generate(args: &mut Args) -> Result<()> {
         bail!("--out-dir requires --shards N (single-file output uses --out)");
     }
 
-    println!("device: {} ({})", dev.name, dev.key);
+    println!("device: {} ({}); schema: {}", dev.name, dev.key, cfg.schema);
     let mut rng = Rng::new(cfg.seed);
     let templates = lmtuner::synth::generator::generate(&mut rng, cfg.scale);
     let sweep = lmtuner::synth::sweep::LaunchSweep::new(2048, 2048);
@@ -225,17 +237,19 @@ fn cmd_generate(args: &mut Args) -> Result<()> {
     let mut progress = progress_printer();
     let summary = if let Some(shards) = shards {
         // Streamed, sharded build: bounded memory at any scale.
-        let mut sink =
-            lmtuner::synth::sink::ShardedCsvSink::create(&out_dir, shards, dev.key)?;
+        let mut sink = lmtuner::synth::sink::ShardedCsvSink::create_schema(
+            &out_dir, shards, dev.key, cfg.schema,
+        )?;
         let summary = dataset::build_streaming(
             &templates, &sweep, dev, &build, &mut sink, Some(&mut progress),
         )?;
         println!(
-            "wrote {} instances to {} ({} shards, device {})",
+            "wrote {} instances to {} ({} shards, device {}, schema {})",
             sink.written(),
             out_dir.display(),
             sink.shards(),
-            sink.device()
+            sink.device(),
+            sink.schema()
         );
         summary
     } else {
@@ -246,7 +260,7 @@ fn cmd_generate(args: &mut Args) -> Result<()> {
         if let Some(dir) = out.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        dataset::save(&sink.records, &out, dev.key)?;
+        dataset::save_schema(&sink.records, &out, dev.key, cfg.schema)?;
         println!("wrote {} instances to {}", sink.records.len(), out.display());
         summary
     };
@@ -348,6 +362,18 @@ fn cmd_train(args: &mut Args) -> Result<()> {
     }
     println!("{}", figures::fig6(&out.synth_accuracy, &out.per_benchmark));
     warn_skipped(out.synth_accuracy.skipped);
+    if let Some(j) = &out.joint {
+        println!(
+            "joint (schema v2): verdict {:.1}%  wg top-{} hit {:.1}%  \
+             joint {:.1}%  (n {}, skipped {})",
+            100.0 * j.verdict.count_based,
+            j.top_k,
+            100.0 * j.wg_hit_rate,
+            100.0 * j.joint,
+            j.n,
+            j.skipped
+        );
+    }
     if let Some(dir) = model_path.parent() {
         std::fs::create_dir_all(dir)?;
     }
@@ -461,6 +487,9 @@ fn cmd_crossdev(args: &mut Args) -> Result<()> {
     if args.flag("no-noise") {
         base.measure = MeasureConfig::deterministic();
     }
+    if let Some(s) = args.opt_str("schema") {
+        base.schema = s.parse().map_err(anyhow::Error::msg)?;
+    }
     args.finish().map_err(anyhow::Error::msg)?;
 
     let devices = if devices_arg.is_empty() {
@@ -504,22 +533,39 @@ fn cmd_eval(args: &mut Args) -> Result<()> {
 
     let forest = model_io::load(&model_path)?;
     if let Some(p) = data {
-        let (records, tagged) = dataset::load_tagged(&p)?;
+        let (records, tag) = dataset::load_tagged(&p)?;
         // Refuse to grade a dataset measured on a different device than
         // the one explicitly requested — the labels would not match the
         // testbed the caller thinks they are evaluating.
-        if let (Some(_), Some(found)) = (&device_explicit, &tagged) {
+        if let (Some(_), Some(found)) = (&device_explicit, &tag.device) {
             lmtuner::synth::sink::ensure_same_device(
                 dev.key,
                 found,
                 p.display().to_string(),
             )?;
         }
-        match &tagged {
-            Some(d) => println!("dataset device: {d}"),
-            None => println!("dataset device: <unstamped legacy file>"),
+        match &tag.device {
+            Some(d) => println!("dataset device: {d}; schema: {}", tag.schema),
+            None => {
+                println!(
+                    "dataset device: <unstamped legacy file>; schema: {}",
+                    tag.schema
+                )
+            }
         }
-        let refs: Vec<_> = records.iter().collect();
+        // A single-output model graded on a joint dataset (or a joint
+        // model on a v1 dataset) would silently score only half the
+        // recommendation — refuse the pair instead.
+        model_io::ensure_output_arity(
+            &forest,
+            tag.schema.outputs(),
+            &format!(
+                "eval --model {} --data {}",
+                model_path.display(),
+                p.display()
+            ),
+        )?;
+        let refs: Vec<&SpeedupRecord> = records.iter().map(|r| &r.base).collect();
         let acc = metrics::evaluate_model(&refs, |x| forest.decide(x));
         println!(
             "{}: count {:.1}%  penalty-weighted {:.1}%  (min {:.2}, n {})",
@@ -530,6 +576,23 @@ fn cmd_eval(args: &mut Args) -> Result<()> {
             acc.n
         );
         warn_skipped(acc.skipped);
+        if tag.schema == Schema::V2 {
+            let mut jacc = metrics::JointAccumulator::new();
+            for r in &records {
+                let x = &r.base.features[..];
+                let wg = forest.predict_wg_logs(x).unwrap_or((0.0, 0.0));
+                jacc.push(r.base.speedup, forest.decide(x), r.best_wg, wg);
+            }
+            let j = jacc.finish();
+            println!(
+                "joint: wg top-{} hit {:.1}%  joint {:.1}%  (n {}, skipped {})",
+                j.top_k,
+                100.0 * j.wg_hit_rate,
+                100.0 * j.joint,
+                j.n,
+                j.skipped
+            );
+        }
     }
     if real {
         println!("real benchmarks on {} ({})", dev.name, dev.key);
@@ -643,6 +706,20 @@ fn cmd_analyze(args: &mut Args) -> Result<()> {
             2f64.powf(score),
             if score > 0.0 { "USE local memory" } else { "do NOT use local memory" }
         );
+        if exec.num_outputs() >= 3 {
+            let (lw, lh) = exec.predict_wg_logs(&[feats.to_vec()])?[0];
+            let cands = metrics::wg_candidates(lw, lh, metrics::WG_TOP_K);
+            let (bw, bh) = cands[0];
+            let alts = cands[1..]
+                .iter()
+                .map(|(w, h)| format!("{w}x{h}"))
+                .collect::<Vec<_>>()
+                .join(", ");
+            println!(
+                "workgroup ({model_path}): suggest {bw}x{bh} (predicted log2 \
+                 {lw:.2}/{lh:.2}; next best {alts})"
+            );
+        }
     }
     Ok(())
 }
@@ -815,7 +892,9 @@ fn cmd_reproduce(args: &mut Args) -> Result<()> {
             let out = train::run(dev, &cfg);
             if figure != "fig6" {
                 let real = figures::real_benchmark_records(dev, &cfg.measure);
-                println!("{}", figures::fig1(&out.records, &real));
+                let bases: Vec<SpeedupRecord> =
+                    out.records.iter().map(|r| r.base.clone()).collect();
+                println!("{}", figures::fig1(&bases, &real));
             }
             if figure != "fig1" {
                 println!("{}", figures::fig6(&out.synth_accuracy, &out.per_benchmark));

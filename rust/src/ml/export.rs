@@ -41,18 +41,23 @@ pub struct EncodedForest {
     pub left: Vec<i32>,
     pub right: Vec<i32>,
     pub leaf: Vec<f32>,
+    /// Extra-output leaf planes (joint forests, dataset schema v2): one
+    /// [T * N] tensor per extra output, indexed exactly like `leaf` and
+    /// filled at the same leaf/truncation sites, so every output of a
+    /// prediction comes from one traversal.
+    pub extra: Vec<Vec<f32>>,
     /// How many split nodes were truncated to leaves during export.
     pub truncated: usize,
 }
 
 impl EncodedForest {
-    /// Traverse one tree to its leaf. This is THE shared predict kernel:
-    /// the scalar path, the native batch executor, and (semantically) the
-    /// Pallas kernel all implement this exact traversal. Leaves self-loop,
-    /// so stopping early at a self-loop is equivalent to the kernel's
-    /// fixed-depth walk.
+    /// Traverse one tree to its leaf's flat index. This is THE shared
+    /// predict kernel: the scalar path, the native batch executor, and
+    /// (semantically) the Pallas kernel all implement this exact
+    /// traversal. Leaves self-loop, so stopping early at a self-loop is
+    /// equivalent to the kernel's fixed-depth walk.
     #[inline]
-    fn tree_leaf(&self, tree: usize, features: &[f64]) -> f64 {
+    fn tree_leaf_index(&self, tree: usize, features: &[f64]) -> usize {
         let n = self.contract.max_nodes;
         let base = tree * n;
         let mut node = 0usize;
@@ -66,7 +71,7 @@ impl EncodedForest {
             let go_left = (features[fi] as f32) <= self.thresh[base + node];
             node = if go_left { l } else { r };
         }
-        self.leaf[base + node] as f64
+        base + node
     }
 
     /// Pure-rust reference of the encoded traversal — must agree with the
@@ -74,7 +79,7 @@ impl EncodedForest {
     pub fn predict(&self, features: &[f64]) -> f64 {
         let mut total = 0.0;
         for t in 0..self.contract.num_trees {
-            total += self.tree_leaf(t, features);
+            total += self.leaf[self.tree_leaf_index(t, features)] as f64;
         }
         total / self.contract.num_trees as f64
     }
@@ -83,10 +88,45 @@ impl EncodedForest {
         self.predict(features) > 0.0
     }
 
+    /// Outputs per prediction: 1 + extra planes (matches
+    /// `Forest::num_outputs` of the encoded forest).
+    pub fn num_outputs(&self) -> usize {
+        1 + self.extra.len()
+    }
+
+    /// Predicted extra output `k` (0-based among the extras), same
+    /// traversal and padded-tree scale correction as `predict`.
+    pub fn predict_extra(&self, features: &[f64], k: usize) -> f64 {
+        let plane = &self.extra[k];
+        let mut total = 0.0;
+        for t in 0..self.contract.num_trees {
+            total += plane[self.tree_leaf_index(t, features)] as f64;
+        }
+        total / self.contract.num_trees as f64
+    }
+
+    /// Joint forests: predicted (log2 wg_w, log2 wg_h); `None` when the
+    /// encoding carries no workgroup outputs.
+    pub fn predict_wg_logs(&self, features: &[f64]) -> Option<(f64, f64)> {
+        if self.num_outputs() < 3 {
+            return None;
+        }
+        Some((self.predict_extra(features, 0), self.predict_extra(features, 1)))
+    }
+
     /// Validity: children in range, leaves self-loop, reachable depth
     /// bounded by the contract.
     pub fn validate(&self) -> Result<(), String> {
         let n = self.contract.max_nodes;
+        for (k, plane) in self.extra.iter().enumerate() {
+            if plane.len() != self.contract.num_trees * n {
+                return Err(format!(
+                    "extra plane {k}: {} values, contract needs {}",
+                    plane.len(),
+                    self.contract.num_trees * n
+                ));
+            }
+        }
         for t in 0..self.contract.num_trees {
             let base = t * n;
             for i in 0..n {
@@ -125,6 +165,7 @@ pub fn encode(forest: &Forest, contract: ExportContract) -> EncodedForest {
     );
     let n = contract.max_nodes;
     let t = contract.num_trees;
+    let num_extra = forest.num_outputs() - 1;
     let mut enc = EncodedForest {
         contract,
         feat_idx: vec![0; t * n],
@@ -132,6 +173,7 @@ pub fn encode(forest: &Forest, contract: ExportContract) -> EncodedForest {
         left: Vec::with_capacity(t * n),
         right: Vec::with_capacity(t * n),
         leaf: vec![0.0; t * n],
+        extra: vec![vec![0.0; t * n]; num_extra],
         truncated: 0,
     };
     // Default: every node is a self-looping zero leaf.
@@ -165,16 +207,25 @@ fn encode_tree(tree: &Tree, ti: usize, scale: f32, enc: &mut EncodedForest) -> u
                 enc.leaf[base + dst] = *value as f32 * scale;
                 enc.left[base + dst] = dst as i32;
                 enc.right[base + dst] = dst as i32;
+                for (k, plane) in tree.extra.iter().enumerate() {
+                    enc.extra[k][base + dst] = plane[src] as f32 * scale;
+                }
             }
             Node::Split { feature, threshold, left, right, mean } => {
                 let out_of_budget = next_free + 2 > n;
                 let out_of_depth = depth + 1 > enc.contract.max_depth;
                 if out_of_budget || out_of_depth {
                     // Truncate: leaf predicting the subtree's training mean.
+                    // `tree.extra` holds a value for every node (splits
+                    // included) precisely so truncation has subtree means
+                    // for the extra outputs too.
                     truncated += 1;
                     enc.leaf[base + dst] = *mean as f32 * scale;
                     enc.left[base + dst] = dst as i32;
                     enc.right[base + dst] = dst as i32;
+                    for (k, plane) in tree.extra.iter().enumerate() {
+                        enc.extra[k][base + dst] = plane[src] as f32 * scale;
+                    }
                 } else {
                     let l = next_free;
                     let r = next_free + 1;
@@ -291,5 +342,78 @@ mod tests {
         let (f, _) = toy_forest(5);
         let contract = ExportContract { num_trees: 3, ..Default::default() };
         encode(&f, contract);
+    }
+
+    fn toy_joint_forest(trees: usize) -> (Forest, Vec<Vec<f64>>) {
+        let mut rng = Rng::new(47);
+        let rows: Vec<Vec<f64>> = (0..400)
+            .map(|_| {
+                (0..crate::kernelmodel::features::NUM_FEATURES)
+                    .map(|_| rng.range_f64(-1.0, 1.0))
+                    .collect()
+            })
+            .collect();
+        let y: Vec<f64> = rows
+            .iter()
+            .map(|r| if r[0] + r[3] > 0.0 { 1.0 } else { -1.0 })
+            .collect();
+        // Extra targets correlated with different features than y.
+        let lw: Vec<f64> =
+            rows.iter().map(|r| if r[1] > 0.0 { 5.0 } else { 2.0 }).collect();
+        let lh: Vec<f64> =
+            rows.iter().map(|r| if r[2] > 0.0 { 3.0 } else { 0.0 }).collect();
+        let x: Vec<Vec<f64>> = (0..rows[0].len())
+            .map(|f| rows.iter().map(|r| r[f]).collect())
+            .collect();
+        let cfg = ForestConfig { num_trees: trees, threads: 2, ..Default::default() };
+        (Forest::fit_multi(&x, &y, &[lw, lh], &cfg), rows)
+    }
+
+    #[test]
+    fn joint_encoding_carries_extra_planes() {
+        let (f, rows) = toy_joint_forest(5);
+        assert_eq!(f.num_outputs(), 3);
+        // Padded contract exercises the scale correction on extras too.
+        let contract = ExportContract {
+            num_trees: 8,
+            max_nodes: 8192,
+            max_depth: 64,
+            ..Default::default()
+        };
+        let enc = encode(&f, contract);
+        assert_eq!(enc.truncated, 0);
+        assert_eq!(enc.num_outputs(), 3);
+        enc.validate().unwrap();
+        for r in rows.iter().take(50) {
+            let (ew, eh) = enc.predict_wg_logs(r).unwrap();
+            assert!((f.predict_extra(r, 0) - ew).abs() < 1e-4);
+            assert!((f.predict_extra(r, 1) - eh).abs() < 1e-4);
+        }
+        // Single-output forests encode with no extra planes.
+        let (single, _) = toy_forest(5);
+        let senc = encode(&single, ExportContract::default());
+        assert_eq!(senc.num_outputs(), 1);
+        assert!(senc.predict_wg_logs(&rows[0]).is_none());
+    }
+
+    #[test]
+    fn truncated_joint_encoding_stays_valid() {
+        let (f, rows) = toy_joint_forest(5);
+        let contract = ExportContract {
+            num_trees: 5,
+            max_nodes: 16,
+            max_depth: 3,
+            ..Default::default()
+        };
+        let enc = encode(&f, contract);
+        assert!(enc.truncated > 0);
+        enc.validate().unwrap();
+        // Truncated leaves predict subtree means: still finite and in the
+        // convex hull of the training targets.
+        for r in rows.iter().take(50) {
+            let (ew, eh) = enc.predict_wg_logs(r).unwrap();
+            assert!((2.0..=5.0).contains(&ew), "{ew}");
+            assert!((0.0..=3.0).contains(&eh), "{eh}");
+        }
     }
 }

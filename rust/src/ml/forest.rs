@@ -12,7 +12,7 @@
 //! equivalence testing and ablation.
 
 use crate::kernelmodel::features::NUM_FEATURES;
-use crate::sim::exec::SpeedupRecord;
+use crate::sim::exec::{SpeedupRecord, TuneRecord};
 use crate::util::pool::parallel_map;
 use crate::util::prng::Rng;
 
@@ -53,6 +53,11 @@ pub enum FitError {
     /// Record `row` has a speedup whose log2 target is not finite
     /// (NaN/infinite, zero or negative speedup).
     NonFiniteTarget { row: usize, speedup: f64 },
+    /// Joint (multi-output) training was requested but record `row`
+    /// carries no workgroup label (a v1 up-conversion, or the `0,0`
+    /// sentinel). Training the workgroup outputs on fabricated labels
+    /// would silently poison the joint model.
+    MissingWgLabel { row: usize },
 }
 
 impl std::fmt::Display for FitError {
@@ -68,6 +73,11 @@ impl std::fmt::Display for FitError {
                 f,
                 "training record {row}: speedup {speedup} has no finite \
                  log2 target — speedups must be finite and > 0"
+            ),
+            FitError::MissingWgLabel { row } => write!(
+                f,
+                "training record {row}: no workgroup label — joint \
+                 (schema v2) training needs labeled records"
             ),
         }
     }
@@ -122,6 +132,34 @@ impl Forest {
         Ok(Self::fit_with_oob(&x, &y, cfg))
     }
 
+    /// Joint (multi-output) fit on schema-v2 records: the trees are
+    /// grown on log2(speedup) exactly as [`Forest::fit_records`] —
+    /// identical structure, splits, and primary predictions — with
+    /// log2(wg_w) and log2(wg_h) recorded as per-node extra outputs.
+    /// Every record must carry a workgroup label; an unlabeled record
+    /// (v1 up-conversion) is the typed [`FitError::MissingWgLabel`].
+    pub fn fit_tune_records<R: std::borrow::Borrow<TuneRecord>>(
+        records: &[R],
+        cfg: &ForestConfig,
+    ) -> Result<Forest, FitError> {
+        let bases: Vec<&SpeedupRecord> =
+            records.iter().map(|r| &r.borrow().base).collect();
+        Self::validate_records(&bases)?;
+        let mut lw = Vec::with_capacity(records.len());
+        let mut lh = Vec::with_capacity(records.len());
+        for (row, r) in records.iter().enumerate() {
+            match r.borrow().wg_targets() {
+                Some((w, h)) => {
+                    lw.push(w);
+                    lh.push(h);
+                }
+                None => return Err(FitError::MissingWgLabel { row }),
+            }
+        }
+        let (x, y) = Self::columns(&bases);
+        Ok(Self::fit_multi(&x, &y, &[lw, lh], cfg))
+    }
+
     /// Column-major feature matrix + log2 targets of a record slice
     /// (the layout `fit`/`fit_prebinned` consume; `ml::select` uses it
     /// to extract each CV fold once instead of per grid config).
@@ -160,12 +198,25 @@ impl Forest {
 
     /// Fit on column-major features and targets.
     pub fn fit(x: &[Vec<f64>], y: &[f64], cfg: &ForestConfig) -> Forest {
+        Self::fit_multi(x, y, &[], cfg)
+    }
+
+    /// Multi-output fit on column-major features: trees grown on `y`,
+    /// per-node means of each `extras` column recorded as extra
+    /// outputs (see [`crate::ml::tree::Tree::fit_multi`]). With
+    /// `extras = &[]` this IS [`Forest::fit`].
+    pub fn fit_multi(
+        x: &[Vec<f64>],
+        y: &[f64],
+        extras: &[Vec<f64>],
+        cfg: &ForestConfig,
+    ) -> Forest {
         // ml-v2: bin once, share across trees.
         let bins = match cfg.tree.engine {
             SplitEngine::Binned => Some(BinnedDataset::build(x, cfg.tree.max_bins)),
             SplitEngine::Exact => None,
         };
-        Self::fit_impl(x, y, bins.as_ref(), cfg)
+        Self::fit_impl(x, y, extras, bins.as_ref(), cfg)
     }
 
     /// [`Forest::fit`] reusing a pre-built binning of `x` — `ml::select`
@@ -182,7 +233,7 @@ impl Forest {
             SplitEngine::Binned => Some(bins),
             SplitEngine::Exact => None,
         };
-        Self::fit_impl(x, y, bins, cfg)
+        Self::fit_impl(x, y, &[], bins, cfg)
     }
 
     /// The per-tree bagging draws. The SINGLE definition of the
@@ -200,6 +251,7 @@ impl Forest {
     fn fit_impl(
         x: &[Vec<f64>],
         y: &[f64],
+        extras: &[Vec<f64>],
         bins: Option<&BinnedDataset>,
         cfg: &ForestConfig,
     ) -> Forest {
@@ -211,8 +263,10 @@ impl Forest {
             // Bootstrap sample (with replacement), classic bagging.
             let (mut rng, mut idx) = Self::bootstrap(seed, n);
             match bins {
-                Some(b) => Tree::fit_with_bins(b, y, &mut idx, cfg.tree, &mut rng),
-                None => Tree::fit(x, y, &mut idx, cfg.tree, &mut rng),
+                Some(b) => Tree::fit_with_bins_multi(
+                    b, y, extras, &mut idx, cfg.tree, &mut rng,
+                ),
+                None => Tree::fit_multi(x, y, extras, &mut idx, cfg.tree, &mut rng),
             }
         });
         Forest {
@@ -309,6 +363,29 @@ impl Forest {
     /// The auto-tuning decision: apply the optimization?
     pub fn decide(&self, features: &[f64]) -> bool {
         self.predict(features) > 0.0
+    }
+
+    /// Outputs per prediction: 1 for single-output forests, 1 + extra
+    /// planes for joint forests (every tree has the same arity).
+    pub fn num_outputs(&self) -> usize {
+        self.trees.first().map(|t| t.num_outputs()).unwrap_or(1)
+    }
+
+    /// Predicted extra output `k` (0-based among the extras): forest
+    /// mean of the per-tree leaf values.
+    pub fn predict_extra(&self, features: &[f64], k: usize) -> f64 {
+        let s: f64 = self.trees.iter().map(|t| t.predict_extra(features, k)).sum();
+        s / self.trees.len() as f64
+    }
+
+    /// Joint forests: predicted (log2 wg_w, log2 wg_h). `None` for
+    /// single-output forests (callers snap the logs to a valid
+    /// power-of-two shape via `ml::metrics::snap_wg`).
+    pub fn predict_wg_logs(&self, features: &[f64]) -> Option<(f64, f64)> {
+        if self.num_outputs() < 3 {
+            return None;
+        }
+        Some((self.predict_extra(features, 0), self.predict_extra(features, 1)))
     }
 
     /// Batch prediction fanned across the host's cores. Order-preserving
@@ -545,5 +622,72 @@ mod tests {
         // the returned forest is the plain fit (OOB is a side estimate)
         let plain = Forest::fit(&x, &y, &cfg);
         assert_eq!(f.predict(&[0.7, 0.7]), plain.predict(&[0.7, 0.7]));
+    }
+
+    fn toy_tune_records(n: usize, seed: u64) -> Vec<TuneRecord> {
+        toy_records(n, seed)
+            .into_iter()
+            .enumerate()
+            .map(|(i, base)| {
+                // wg label correlated with feature 1 so it is learnable
+                let w = if base.features[1] > 0.0 { 32 } else { 4 };
+                TuneRecord { base, best_wg: Some((w, 1 << (i % 3))) }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn joint_fit_matches_single_fit_on_the_primary_output() {
+        let recs = toy_tune_records(300, 17);
+        let bases: Vec<SpeedupRecord> =
+            recs.iter().map(|r| r.base.clone()).collect();
+        let cfg = ForestConfig { num_trees: 5, threads: 2, ..Default::default() };
+        let joint = Forest::fit_tune_records(&recs, &cfg).unwrap();
+        let single = Forest::fit_records(&bases, &cfg).unwrap();
+        assert_eq!(joint.num_outputs(), 3);
+        assert_eq!(single.num_outputs(), 1);
+        assert_eq!(joint.trees.len(), single.trees.len());
+        // identical structure and bit-identical primary predictions
+        for (a, b) in joint.trees.iter().zip(&single.trees) {
+            assert_eq!(a.nodes, b.nodes);
+        }
+        for r in recs.iter().take(25) {
+            assert_eq!(joint.predict(&r.base.features), single.predict(&r.base.features));
+            let (lw, lh) = joint.predict_wg_logs(&r.base.features).unwrap();
+            assert!(lw.is_finite() && lh.is_finite());
+        }
+        assert_eq!(single.predict_wg_logs(&recs[0].base.features), None);
+    }
+
+    #[test]
+    fn joint_fit_learns_the_wg_label() {
+        let recs = toy_tune_records(600, 23);
+        let cfg = ForestConfig { num_trees: 10, threads: 2, ..Default::default() };
+        let f = Forest::fit_tune_records(&recs, &cfg).unwrap();
+        // the width label is a function of feature 1: log2(32)=5 vs
+        // log2(4)=2, so predictions must separate the two classes
+        let mut hi = Vec::new();
+        let mut lo = Vec::new();
+        for r in &recs {
+            let (lw, _) = f.predict_wg_logs(&r.base.features).unwrap();
+            if r.base.features[1] > 0.25 {
+                hi.push(lw);
+            } else if r.base.features[1] < -0.25 {
+                lo.push(lw);
+            }
+        }
+        let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+        assert!(mean(&hi) > 4.0, "hi mean {}", mean(&hi));
+        assert!(mean(&lo) < 3.0, "lo mean {}", mean(&lo));
+    }
+
+    #[test]
+    fn unlabeled_records_are_a_typed_error_for_joint_fit() {
+        let mut recs = toy_tune_records(40, 29);
+        recs[11].best_wg = None;
+        let err = Forest::fit_tune_records(&recs, &ForestConfig::default())
+            .unwrap_err();
+        assert_eq!(err, FitError::MissingWgLabel { row: 11 });
+        assert!(err.to_string().contains("workgroup label"));
     }
 }

@@ -1,12 +1,19 @@
 //! Forest persistence: a compact line-oriented text format (serde is not
 //! available). One header line, then one line per node per tree.
 //!
-//! Format v1:
+//! Format v1 (single-output forests — written bit-for-bit as before):
 //!   lmtuner-forest v1 trees=<T>
 //!   tree <i> nodes=<n>
 //!   S <feature> <threshold> <left> <right> <mean>
 //!   L <value>
 //!   ...
+//!
+//! Format v2 (multi-output forests, dataset schema v2): the header
+//! declares the output arity and every node line appends the K-1 extra
+//! per-node means after the primary fields:
+//!   lmtuner-forest v2 trees=<T> outputs=<K>
+//!   S <feature> <threshold> <left> <right> <mean> <extra_1> .. <extra_{K-1}>
+//!   L <value> <extra_1> .. <extra_{K-1}>
 
 use std::io::{BufRead, BufWriter, Write};
 use std::path::Path;
@@ -16,21 +23,74 @@ use anyhow::{bail, Context, Result};
 use super::forest::Forest;
 use super::tree::{Node, Tree};
 
+/// Upper bound on the persisted output arity: far above anything the
+/// label plane produces (3), low enough that a hostile header cannot
+/// drive per-node allocations.
+const MAX_OUTPUTS: usize = 16;
+
+/// A model whose output arity does not match what the caller's dataset
+/// schema requires — e.g. evaluating a single-output (v1) forest against
+/// a joint (schema v2) dataset, or vice versa. Typed so the CLI can
+/// reject the pair with a clear message instead of silently scoring
+/// garbage.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArityMismatch {
+    pub model_outputs: usize,
+    pub expected: usize,
+    pub at: String,
+}
+
+impl std::fmt::Display for ArityMismatch {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "output arity mismatch at {}: model predicts {} output(s), \
+             dataset schema needs {}",
+            self.at, self.model_outputs, self.expected
+        )
+    }
+}
+
+impl std::error::Error for ArityMismatch {}
+
+/// Reject a forest whose output arity disagrees with `expected` (the
+/// dataset schema's `outputs()`).
+pub fn ensure_output_arity(forest: &Forest, expected: usize, at: &str) -> Result<()> {
+    let model_outputs = forest.num_outputs();
+    if model_outputs != expected {
+        bail!(ArityMismatch { model_outputs, expected, at: at.to_string() });
+    }
+    Ok(())
+}
+
 pub fn save(forest: &Forest, path: &Path) -> Result<()> {
     let f = std::fs::File::create(path)
         .with_context(|| format!("create {}", path.display()))?;
     let mut w = BufWriter::new(f);
-    writeln!(w, "lmtuner-forest v1 trees={}", forest.trees.len())?;
+    let outputs = forest.num_outputs();
+    if outputs == 1 {
+        writeln!(w, "lmtuner-forest v1 trees={}", forest.trees.len())?;
+    } else {
+        writeln!(
+            w,
+            "lmtuner-forest v2 trees={} outputs={outputs}",
+            forest.trees.len()
+        )?;
+    }
     writeln!(w, "# {}", forest.config_summary)?;
     for (i, t) in forest.trees.iter().enumerate() {
         writeln!(w, "tree {i} nodes={}", t.nodes.len())?;
-        for n in &t.nodes {
+        for (ni, n) in t.nodes.iter().enumerate() {
             match n {
                 Node::Split { feature, threshold, left, right, mean } => {
-                    writeln!(w, "S {feature} {threshold:e} {left} {right} {mean:e}")?;
+                    write!(w, "S {feature} {threshold:e} {left} {right} {mean:e}")?;
                 }
-                Node::Leaf { value } => writeln!(w, "L {value:e}")?,
+                Node::Leaf { value } => write!(w, "L {value:e}")?,
             }
+            for plane in &t.extra {
+                write!(w, " {:e}", plane[ni])?;
+            }
+            writeln!(w)?;
         }
     }
     w.flush()?;
@@ -41,8 +101,11 @@ pub fn save(forest: &Forest, path: &Path) -> Result<()> {
 /// truncated or concatenated file must never load as a silently-wrong
 /// model (e.g. a 5-node tree collapsed to its first leaf would still
 /// pass `validate()`).
-fn close_tree(trees: &mut Vec<Tree>, current: Option<(usize, Vec<Node>)>) -> Result<()> {
-    if let Some((declared, nodes)) = current {
+fn close_tree(
+    trees: &mut Vec<Tree>,
+    current: Option<(usize, Vec<Node>, Vec<Vec<f64>>)>,
+) -> Result<()> {
+    if let Some((declared, nodes, extra)) = current {
         if nodes.len() != declared {
             bail!(
                 "tree {}: declared {declared} nodes, found {} — truncated \
@@ -51,9 +114,27 @@ fn close_tree(trees: &mut Vec<Tree>, current: Option<(usize, Vec<Node>)>) -> Res
                 nodes.len()
             );
         }
-        trees.push(Tree { nodes });
+        trees.push(Tree { nodes, extra });
     }
     Ok(())
+}
+
+/// Parse the header line into (tree count, output arity).
+fn parse_header(header: &str) -> Result<(usize, usize)> {
+    if let Some(rest) = header.strip_prefix("lmtuner-forest v1 trees=") {
+        return Ok((rest.parse()?, 1));
+    }
+    if let Some(rest) = header.strip_prefix("lmtuner-forest v2 trees=") {
+        let (t_part, o_part) = rest
+            .split_once(" outputs=")
+            .with_context(|| format!("bad v2 header {header:?}"))?;
+        let outputs: usize = o_part.parse()?;
+        if outputs < 2 || outputs > MAX_OUTPUTS {
+            bail!("bad output arity {outputs} in header {header:?}");
+        }
+        return Ok((t_part.parse()?, outputs));
+    }
+    bail!("bad header {header:?}")
 }
 
 pub fn load(path: &Path) -> Result<Forest> {
@@ -61,10 +142,8 @@ pub fn load(path: &Path) -> Result<Forest> {
         .with_context(|| format!("open {}", path.display()))?;
     let mut lines = std::io::BufReader::new(f).lines();
     let header = lines.next().context("empty forest file")??;
-    let trees_expected: usize = header
-        .strip_prefix("lmtuner-forest v1 trees=")
-        .with_context(|| format!("bad header {header:?}"))?
-        .parse()?;
+    let (trees_expected, outputs) = parse_header(&header)?;
+    let num_extra = outputs - 1;
     // Declared counts are untrusted (the file may be corrupt or hostile):
     // cap the pre-allocation so a bogus header cannot trigger a
     // capacity-overflow panic or a multi-GB allocation. Real counts are
@@ -72,7 +151,7 @@ pub fn load(path: &Path) -> Result<Forest> {
     const MAX_PREALLOC: usize = 1 << 20;
     let mut trees: Vec<Tree> = Vec::with_capacity(trees_expected.min(MAX_PREALLOC));
     let mut summary: Option<String> = None;
-    let mut current: Option<(usize, Vec<Node>)> = None;
+    let mut current: Option<(usize, Vec<Node>, Vec<Vec<f64>>)> = None;
     for line in lines {
         let line = line?;
         if line.is_empty() {
@@ -102,8 +181,12 @@ pub fn load(path: &Path) -> Result<Forest> {
                 );
             }
             let n: usize = n_part.parse()?;
-            current = Some((n, Vec::with_capacity(n.min(MAX_PREALLOC))));
-        } else if let Some((_, ref mut nodes)) = current {
+            current = Some((
+                n,
+                Vec::with_capacity(n.min(MAX_PREALLOC)),
+                vec![Vec::with_capacity(n.min(MAX_PREALLOC)); num_extra],
+            ));
+        } else if let Some((_, ref mut nodes, ref mut extra)) = current {
             let mut it = line.split_whitespace();
             match it.next() {
                 Some("S") => {
@@ -119,6 +202,15 @@ pub fn load(path: &Path) -> Result<Forest> {
                     nodes.push(Node::Leaf { value });
                 }
                 other => bail!("bad node line {other:?}"),
+            }
+            for plane in extra.iter_mut() {
+                let v: f64 = it
+                    .next()
+                    .with_context(|| {
+                        format!("node line missing extra output: {line:?}")
+                    })?
+                    .parse()?;
+                plane.push(v);
             }
         } else {
             bail!("node line before any tree header: {line:?}");
@@ -278,6 +370,92 @@ mod tests {
             .unwrap();
         assert!(load(&path).is_err(), "tree count mismatch accepted");
         std::fs::remove_file(&path).ok();
+    }
+
+    fn toy_joint() -> Forest {
+        let mut rng = Rng::new(17);
+        let x: Vec<Vec<f64>> = (0..3)
+            .map(|_| (0..200).map(|_| rng.range_f64(-1.0, 1.0)).collect())
+            .collect();
+        let y: Vec<f64> = (0..200).map(|i| x[0][i] * 2.0 + x[2][i]).collect();
+        let lw: Vec<f64> =
+            (0..200).map(|i| if x[1][i] > 0.0 { 5.0 } else { 2.0 }).collect();
+        let lh: Vec<f64> =
+            (0..200).map(|i| if x[2][i] > 0.0 { 3.0 } else { 0.0 }).collect();
+        Forest::fit_multi(
+            &x,
+            &y,
+            &[lw, lh],
+            &ForestConfig { num_trees: 4, threads: 1, ..Default::default() },
+        )
+    }
+
+    #[test]
+    fn joint_roundtrip_preserves_every_output() {
+        let f = toy_joint();
+        let path = tmp("joint");
+        save(&f, &path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(
+            body.starts_with("lmtuner-forest v2 trees=4 outputs=3\n"),
+            "{}",
+            body.lines().next().unwrap()
+        );
+        let g = load(&path).unwrap();
+        assert_eq!(g.num_outputs(), 3);
+        let mut rng = Rng::new(9);
+        for _ in 0..50 {
+            let p = [
+                rng.range_f64(-1.0, 1.0),
+                rng.range_f64(-1.0, 1.0),
+                rng.range_f64(-1.0, 1.0),
+            ];
+            assert!((f.predict(&p) - g.predict(&p)).abs() < 1e-12);
+            assert!((f.predict_extra(&p, 0) - g.predict_extra(&p, 0)).abs() < 1e-12);
+            assert!((f.predict_extra(&p, 1) - g.predict_extra(&p, 1)).abs() < 1e-12);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn single_output_forests_still_save_as_v1() {
+        let f = toy_forest();
+        let path = tmp("stillv1");
+        save(&f, &path).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("lmtuner-forest v1 trees=4\n"));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_node_lines_must_carry_the_declared_extras() {
+        let path = tmp("shortline");
+        std::fs::write(
+            &path,
+            "lmtuner-forest v2 trees=1 outputs=3\n\
+             tree 0 nodes=1\nL 0.5 1.0\n",
+        )
+        .unwrap();
+        let err = load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("missing extra"), "{err:#}");
+        // absurd arities are rejected before any per-node allocation
+        std::fs::write(&path, "lmtuner-forest v2 trees=1 outputs=9999\n").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn output_arity_mismatches_are_typed() {
+        let single = toy_forest();
+        let joint = toy_joint();
+        assert!(ensure_output_arity(&single, 1, "test").is_ok());
+        assert!(ensure_output_arity(&joint, 3, "test").is_ok());
+        let err = ensure_output_arity(&single, 3, "eval --model m.txt").unwrap_err();
+        let m = err.downcast_ref::<ArityMismatch>().expect("typed error");
+        assert_eq!(m.model_outputs, 1);
+        assert_eq!(m.expected, 3);
+        assert!(format!("{m}").contains("arity mismatch"), "{m}");
+        assert!(ensure_output_arity(&joint, 1, "test").is_err());
     }
 
     #[test]

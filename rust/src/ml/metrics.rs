@@ -122,6 +122,144 @@ impl AccuracyAccumulator {
     }
 }
 
+/// Workgroup-size recommendations are graded top-k: a hit means the
+/// measured-best shape is among the k shapes nearest the model's
+/// prediction. k = 3 mirrors the paper's practice of trying a small
+/// shortlist of configurations at install time.
+pub const WG_TOP_K: usize = 3;
+
+/// The `k` valid workgroup shapes nearest a predicted (log2 w, log2 h)
+/// point. Candidates are every power-of-two rectangle within the
+/// device-portfolio thread budget (w*h <= 1024, i.e. exponents i+j <= 10),
+/// ranked by squared distance in log2 space with deterministic
+/// (score, (w, h)) tie-breaking.
+pub fn wg_candidates(log2_w: f64, log2_h: f64, k: usize) -> Vec<(u32, u32)> {
+    let mut scored: Vec<(f64, (u32, u32))> = Vec::with_capacity(66);
+    for i in 0..=10u32 {
+        for j in 0..=(10 - i) {
+            let dw = i as f64 - log2_w;
+            let dh = j as f64 - log2_h;
+            scored.push((dw * dw + dh * dh, (1 << i, 1 << j)));
+        }
+    }
+    scored.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    scored.truncate(k);
+    scored.into_iter().map(|(_, wg)| wg).collect()
+}
+
+/// Snap a predicted (log2 w, log2 h) to the single nearest valid shape.
+pub fn snap_wg(log2_w: f64, log2_h: f64) -> (u32, u32) {
+    wg_candidates(log2_w, log2_h, 1)[0]
+}
+
+/// Joint accuracy for schema-v2 (multi-output) models: the local-memory
+/// verdict metrics plus how often the workgroup recommendation lands.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct JointAccuracy {
+    /// The paper's verdict metrics, unchanged.
+    pub verdict: Accuracy,
+    /// Fraction of instances whose measured-best workgroup shape is in
+    /// the model's top-k shortlist.
+    pub wg_hit_rate: f64,
+    /// Fraction where BOTH the verdict is correct AND the workgroup
+    /// shortlist hits — the "full recommendation is right" rate.
+    pub joint: f64,
+    /// The k used for the shortlist ([`WG_TOP_K`] unless overridden).
+    pub top_k: usize,
+    pub n: usize,
+    /// Instances without a usable (speedup, wg-label) pair.
+    pub skipped: usize,
+}
+
+/// Streaming accumulator for [`JointAccuracy`]. Same O(1)-memory,
+/// skip-and-count contract as [`AccuracyAccumulator`]: an instance with
+/// an invalid speedup OR no workgroup label is excluded from every
+/// joint metric (including the verdict component, so `verdict.n == n`).
+#[derive(Clone, Debug)]
+pub struct JointAccumulator {
+    verdict: AccuracyAccumulator,
+    wg_hits: usize,
+    joint_hits: usize,
+    top_k: usize,
+    n: usize,
+    skipped: usize,
+}
+
+impl Default for JointAccumulator {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JointAccumulator {
+    pub fn new() -> Self {
+        JointAccumulator {
+            verdict: AccuracyAccumulator::new(),
+            wg_hits: 0,
+            joint_hits: 0,
+            top_k: WG_TOP_K,
+            n: 0,
+            skipped: 0,
+        }
+    }
+
+    /// Score one instance: the measured speedup, the model's verdict,
+    /// the measured-best workgroup shape (None = unlabeled v1 record),
+    /// and the model's predicted (log2 w, log2 h).
+    pub fn push(
+        &mut self,
+        speedup: f64,
+        use_lmem: bool,
+        label_wg: Option<(u32, u32)>,
+        pred_logs: (f64, f64),
+    ) {
+        let label = match label_wg {
+            Some(wg) if speedup.is_finite() && speedup > 0.0 => wg,
+            _ => {
+                self.skipped += 1;
+                return;
+            }
+        };
+        self.verdict.push(speedup, use_lmem);
+        let hit = wg_candidates(pred_logs.0, pred_logs.1, self.top_k)
+            .contains(&label);
+        let verdict_correct = use_lmem == (speedup > 1.0);
+        if hit {
+            self.wg_hits += 1;
+            if verdict_correct {
+                self.joint_hits += 1;
+            }
+        }
+        self.n += 1;
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn skipped(&self) -> usize {
+        self.skipped
+    }
+
+    pub fn finish(&self) -> JointAccuracy {
+        if self.n == 0 {
+            return JointAccuracy {
+                top_k: self.top_k,
+                skipped: self.skipped,
+                ..JointAccuracy::default()
+            };
+        }
+        JointAccuracy {
+            verdict: self.verdict.finish(),
+            wg_hit_rate: self.wg_hits as f64 / self.n as f64,
+            joint: self.joint_hits as f64 / self.n as f64,
+            top_k: self.top_k,
+            n: self.n,
+            skipped: self.skipped,
+        }
+    }
+}
+
 /// Evaluate decisions against oracle records.
 pub fn evaluate(records: &[&SpeedupRecord], decisions: &[bool]) -> Accuracy {
     assert_eq!(records.len(), decisions.len());
@@ -240,6 +378,50 @@ mod tests {
         // valid inputs are untouched by the guard
         assert_eq!(instance_score(2.0, true), 1.0);
         assert_eq!(instance_score(0.5, true), 0.5);
+    }
+
+    #[test]
+    fn wg_candidates_rank_by_log2_distance_with_stable_ties() {
+        // Exact prediction: the labeled shape ranks first.
+        assert_eq!(snap_wg(5.0, 3.0), (32, 8));
+        // Between two shapes: both appear, smaller (w, h) first on ties.
+        let c = wg_candidates(4.5, 3.0, 2);
+        assert_eq!(c, vec![(16, 8), (32, 8)]);
+        // The thread budget binds: exponents sum to <= 10.
+        for k in 1..=10 {
+            for &(w, h) in &wg_candidates(10.0, 10.0, k) {
+                assert!(w as u64 * h as u64 <= 1024);
+                assert!(w.is_power_of_two() && h.is_power_of_two());
+            }
+        }
+        // Requesting more than all 66 shapes just returns all of them.
+        assert_eq!(wg_candidates(0.0, 0.0, 1000).len(), 66);
+    }
+
+    #[test]
+    fn joint_accumulator_composes_verdict_and_wg_hits() {
+        let mut acc = JointAccumulator::new();
+        // verdict right + wg in top-3 -> joint hit
+        acc.push(2.0, true, Some((32, 8)), (5.0, 3.0));
+        // verdict right, wg far off -> wg miss
+        acc.push(2.0, true, Some((1, 1)), (5.0, 3.0));
+        // verdict wrong, wg exact -> wg hit but no joint hit
+        acc.push(2.0, false, Some((32, 8)), (5.0, 3.0));
+        // unlabeled and invalid rows are skipped, even with a verdict
+        acc.push(2.0, true, None, (5.0, 3.0));
+        acc.push(f64::NAN, true, Some((32, 8)), (5.0, 3.0));
+        let j = acc.finish();
+        assert_eq!(j.n, 3);
+        assert_eq!(j.skipped, 2);
+        assert_eq!(j.verdict.n, 3);
+        assert!((j.verdict.count_based - 2.0 / 3.0).abs() < 1e-12);
+        assert!((j.wg_hit_rate - 2.0 / 3.0).abs() < 1e-12);
+        assert!((j.joint - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(j.top_k, WG_TOP_K);
+
+        let empty = JointAccumulator::new().finish();
+        assert_eq!(empty.n, 0);
+        assert_eq!(empty.joint, 0.0);
     }
 
     #[test]

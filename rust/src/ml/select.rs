@@ -27,7 +27,7 @@ use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
-use crate::sim::exec::SpeedupRecord;
+use crate::sim::exec::{SpeedupRecord, TuneRecord};
 use crate::util::pool::parallel_map;
 use crate::util::prng::Rng;
 
@@ -211,7 +211,7 @@ struct FoldScore {
 /// `cfg.seed`/`cfg.base.seed` at any `cfg.threads` (tested in
 /// `rust/tests/mlcore.rs`).
 pub fn cross_validate(
-    records: &[SpeedupRecord],
+    records: &[TuneRecord],
     grid: &GridSpec,
     cfg: &TuneConfig,
 ) -> Result<TuneOutcome> {
@@ -225,8 +225,11 @@ pub fn cross_validate(
         2 * cfg.folds
     );
     // Fail fast on poisoned rows: one typed error up front beats one
-    // per (config, fold) task.
-    Forest::validate_records(records)?;
+    // per (config, fold) task. CV scores the primary (verdict) target,
+    // so only the base records matter here — joint quality is graded
+    // downstream by `coordinator::train`/`crossdev`.
+    let bases: Vec<&SpeedupRecord> = records.iter().map(|r| &r.base).collect();
+    Forest::validate_records(&bases)?;
 
     // Deterministic balanced fold assignment.
     let n = records.len();
@@ -258,7 +261,7 @@ pub fn cross_validate(
                 .iter()
                 .enumerate()
                 .filter(|(pos, _)| fold_of(*pos) != fi)
-                .map(|(_, &i)| &records[i])
+                .map(|(_, &i)| &records[i].base)
                 .collect();
             let test: Vec<usize> = order
                 .iter()
@@ -289,7 +292,7 @@ pub fn cross_validate(
                 let rows: Vec<&[f64]> = fd
                     .test
                     .iter()
-                    .map(|&i| &records[i].features[..])
+                    .map(|&i| &records[i].base.features[..])
                     .collect();
                 let t1 = std::time::Instant::now();
                 // threads=1: parallelism lives at the grid level.
@@ -298,7 +301,7 @@ pub fn cross_validate(
 
                 let mut acc = AccuracyAccumulator::new();
                 for (&i, p) in fd.test.iter().zip(&preds) {
-                    acc.push_record(&records[i], *p > 0.0);
+                    acc.push_record(&records[i].base, *p > 0.0);
                 }
                 let a = acc.finish();
                 Ok(FoldScore {
@@ -475,7 +478,7 @@ mod tests {
     use crate::kernelmodel::features::NUM_FEATURES;
     use crate::ml::tree::SplitEngine;
 
-    fn synth_records(n: usize, seed: u64) -> Vec<SpeedupRecord> {
+    fn synth_records(n: usize, seed: u64) -> Vec<TuneRecord> {
         let mut rng = Rng::new(seed);
         (0..n)
             .map(|i| {
@@ -485,13 +488,13 @@ mod tests {
                 }
                 let signal = features[0] * 1.5 - features[3] + 0.2 * rng.normal();
                 let speedup = signal.exp2().clamp(0.01, 100.0);
-                SpeedupRecord {
+                TuneRecord::from_v1(SpeedupRecord {
                     name: format!("cv-{i}"),
                     features,
                     speedup,
                     baseline_time: 1.0,
                     optimized_time: 1.0 / speedup,
-                }
+                })
             })
             .collect()
     }
@@ -550,7 +553,7 @@ mod tests {
         )
         .is_err());
         let mut poisoned = synth_records(60, 2);
-        poisoned[10].features[0] = f64::NAN;
+        poisoned[10].base.features[0] = f64::NAN;
         let err = cross_validate(
             &poisoned,
             &grid,

@@ -74,6 +74,15 @@ pub enum Node {
 pub struct Tree {
     /// Node 0 is the root.
     pub nodes: Vec<Node>,
+    /// Extra-output planes (multi-output trees, dataset schema v2).
+    /// `extra[k][i]` is the mean of extra target `k` over the training
+    /// samples reaching node `i` — recorded for *every* node during
+    /// growth, so depth-truncating exporters have subtree means, and
+    /// read at the leaf reached by `predict`'s traversal. The tree
+    /// structure is grown on the primary target only; extra targets
+    /// never influence splits (single-output trees are bit-identical
+    /// whether or not extras exist). Empty for single-output trees.
+    pub extra: Vec<Vec<f64>>,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -106,8 +115,28 @@ impl Default for TreeConfig {
 struct Builder<'a> {
     x: &'a [Vec<f64>], // column-major: x[feature][sample]
     y: &'a [f64],
+    extras: &'a [Vec<f64>],
     cfg: TreeConfig,
     nodes: Vec<Node>,
+    extra: Vec<Vec<f64>>,
+}
+
+/// Record the per-node extra-target means for `node` (see
+/// [`Tree::extra`]). `grow` visits every node index exactly once, so
+/// after growth each plane has exactly one value per node.
+fn record_extras(
+    extras: &[Vec<f64>],
+    extra: &mut [Vec<f64>],
+    node: usize,
+    idx: &[usize],
+) {
+    for (t, plane) in extras.iter().zip(extra.iter_mut()) {
+        let m = idx.iter().map(|&i| t[i]).sum::<f64>() / idx.len() as f64;
+        if plane.len() <= node {
+            plane.resize(node + 1, 0.0);
+        }
+        plane[node] = m;
+    }
 }
 
 impl Tree {
@@ -123,17 +152,39 @@ impl Tree {
         cfg: TreeConfig,
         rng: &mut Rng,
     ) -> Tree {
+        Tree::fit_multi(x, y, &[], indices, cfg, rng)
+    }
+
+    /// Multi-output fit: grow on the primary target `y` exactly as
+    /// [`Tree::fit`] (same splits, same RNG stream), recording per-node
+    /// means of each extra target column (`extras[k][i]` = target k of
+    /// sample i) along the way.
+    pub fn fit_multi(
+        x: &[Vec<f64>],
+        y: &[f64],
+        extras: &[Vec<f64>],
+        indices: &mut [usize],
+        cfg: TreeConfig,
+        rng: &mut Rng,
+    ) -> Tree {
         assert!(!x.is_empty() && !indices.is_empty());
         match cfg.engine {
             SplitEngine::Exact => {
-                let mut b = Builder { x, y, cfg, nodes: Vec::new() };
+                let mut b = Builder {
+                    x,
+                    y,
+                    extras,
+                    cfg,
+                    nodes: Vec::new(),
+                    extra: vec![Vec::new(); extras.len()],
+                };
                 b.nodes.push(Node::Leaf { value: 0.0 }); // placeholder root
                 b.grow(0, indices, 0, rng);
-                Tree { nodes: b.nodes }
+                Tree { nodes: b.nodes, extra: b.extra }
             }
             SplitEngine::Binned => {
                 let bins = BinnedDataset::build(x, cfg.max_bins);
-                Tree::fit_with_bins(&bins, y, indices, cfg, rng)
+                Tree::fit_with_bins_multi(&bins, y, extras, indices, cfg, rng)
             }
         }
     }
@@ -148,31 +199,68 @@ impl Tree {
         cfg: TreeConfig,
         rng: &mut Rng,
     ) -> Tree {
+        Tree::fit_with_bins_multi(bins, y, &[], indices, cfg, rng)
+    }
+
+    /// Multi-output variant of [`Tree::fit_with_bins`]; see
+    /// [`Tree::fit_multi`].
+    pub fn fit_with_bins_multi(
+        bins: &BinnedDataset,
+        y: &[f64],
+        extras: &[Vec<f64>],
+        indices: &mut [usize],
+        cfg: TreeConfig,
+        rng: &mut Rng,
+    ) -> Tree {
         assert!(bins.num_features() > 0 && !indices.is_empty());
         let nb = bins.max_bins_used();
         let mut b = BinnedBuilder {
             bins,
             y,
+            extras,
             cfg,
             nodes: Vec::new(),
+            extra: vec![Vec::new(); extras.len()],
             cnt: vec![0u32; nb],
             sum: vec![0.0f64; nb],
         };
         b.nodes.push(Node::Leaf { value: 0.0 }); // placeholder root
         b.grow(0, indices, 0, rng);
-        Tree { nodes: b.nodes }
+        Tree { nodes: b.nodes, extra: b.extra }
     }
 
     pub fn predict(&self, features: &[f64]) -> f64 {
+        match &self.nodes[self.leaf_index(features)] {
+            Node::Leaf { value } => *value,
+            Node::Split { .. } => unreachable!("leaf_index returned a split"),
+        }
+    }
+
+    /// Index of the leaf `features` routes to (shared by the primary
+    /// prediction and every extra-output read, so all outputs come from
+    /// one traversal-consistent node).
+    pub fn leaf_index(&self, features: &[f64]) -> usize {
         let mut i = 0;
         loop {
             match &self.nodes[i] {
-                Node::Leaf { value } => return *value,
+                Node::Leaf { .. } => return i,
                 Node::Split { feature, threshold, left, right, .. } => {
                     i = if features[*feature] <= *threshold { *left } else { *right };
                 }
             }
         }
+    }
+
+    /// Outputs this tree produces: the primary target plus the extra
+    /// planes.
+    pub fn num_outputs(&self) -> usize {
+        1 + self.extra.len()
+    }
+
+    /// Predict extra output `k` (0-based among the extras): the mean of
+    /// extra target `k` at the leaf `features` routes to.
+    pub fn predict_extra(&self, features: &[f64], k: usize) -> f64 {
+        self.extra[k][self.leaf_index(features)]
     }
 
     pub fn depth(&self) -> usize {
@@ -217,6 +305,14 @@ impl Tree {
         if seen.iter().any(|s| !s) {
             return Err("unreachable nodes".into());
         }
+        for (k, plane) in self.extra.iter().enumerate() {
+            if plane.len() != n {
+                return Err(format!(
+                    "extra plane {k} has {} values for {n} nodes",
+                    plane.len()
+                ));
+            }
+        }
         Ok(())
     }
 }
@@ -224,6 +320,7 @@ impl Tree {
 impl<'a> Builder<'a> {
     fn grow(&mut self, node: usize, idx: &mut [usize], depth: usize, rng: &mut Rng) {
         let mean = idx.iter().map(|&i| self.y[i]).sum::<f64>() / idx.len() as f64;
+        record_extras(self.extras, &mut self.extra, node, idx);
 
         if idx.len() < 2 * self.cfg.min_samples_leaf || depth >= self.cfg.max_depth {
             self.nodes[node] = Node::Leaf { value: mean };
@@ -308,8 +405,10 @@ const SORT_SWEEP_CUTOFF: usize = 128;
 struct BinnedBuilder<'a> {
     bins: &'a BinnedDataset,
     y: &'a [f64],
+    extras: &'a [Vec<f64>],
     cfg: TreeConfig,
     nodes: Vec<Node>,
+    extra: Vec<Vec<f64>>,
     /// Per-bin sample counts, reused across nodes (zeroed per feature).
     cnt: Vec<u32>,
     /// Per-bin target sums, reused across nodes.
@@ -320,6 +419,7 @@ impl<'a> BinnedBuilder<'a> {
     fn grow(&mut self, node: usize, idx: &mut [usize], depth: usize, rng: &mut Rng) {
         let y = self.y;
         let mean = idx.iter().map(|&i| y[i]).sum::<f64>() / idx.len() as f64;
+        record_extras(self.extras, &mut self.extra, node, idx);
 
         if idx.len() < 2 * self.cfg.min_samples_leaf || depth >= self.cfg.max_depth {
             self.nodes[node] = Node::Leaf { value: mean };
@@ -685,5 +785,54 @@ mod tests {
         let bins = crate::ml::binning::BinnedDataset::build(&x, cfg.max_bins);
         let b = Tree::fit_with_bins(&bins, &y, &mut idx_b, cfg, &mut rng_b);
         assert_eq!(a.nodes, b.nodes);
+    }
+
+    #[test]
+    fn multi_output_fit_shares_structure_and_records_leaf_means() {
+        let mut rng = Rng::new(31);
+        let rows: Vec<Vec<f64>> = (0..200)
+            .map(|_| vec![rng.next_f64(), rng.next_f64()])
+            .collect();
+        let y: Vec<f64> = rows.iter().map(|r| r[0] - r[1]).collect();
+        let e0: Vec<f64> = rows.iter().map(|r| 2.0 * r[0]).collect();
+        let e1: Vec<f64> = rows.iter().map(|r| r[1] + 5.0).collect();
+        let x = columns(&rows);
+        for cfg in both_engines(TreeConfig {
+            mtry: 2,
+            min_samples_leaf: 4,
+            ..TreeConfig::default()
+        }) {
+            let mut idx_a: Vec<usize> = (0..200).collect();
+            let mut idx_b: Vec<usize> = (0..200).collect();
+            let single = Tree::fit(&x, &y, &mut idx_a, cfg, &mut Rng::new(9));
+            let multi = Tree::fit_multi(
+                &x,
+                &y,
+                &[e0.clone(), e1.clone()],
+                &mut idx_b,
+                cfg,
+                &mut Rng::new(9),
+            );
+            // extras never influence structure or the primary output
+            assert_eq!(single.nodes, multi.nodes, "{}", cfg.engine);
+            assert_eq!(single.num_outputs(), 1);
+            assert_eq!(multi.num_outputs(), 3);
+            multi.validate().unwrap();
+
+            // every extra read is the mean of that target over the
+            // samples routed to the same leaf
+            for probe in rows.iter().take(20) {
+                let leaf = multi.leaf_index(probe);
+                let members: Vec<usize> = (0..rows.len())
+                    .filter(|&i| multi.leaf_index(&rows[i]) == leaf)
+                    .collect();
+                for (k, t) in [&e0, &e1].iter().enumerate() {
+                    let want = members.iter().map(|&i| t[i]).sum::<f64>()
+                        / members.len() as f64;
+                    let got = multi.predict_extra(probe, k);
+                    assert!((got - want).abs() < 1e-9, "{} k={k}", cfg.engine);
+                }
+            }
+        }
     }
 }

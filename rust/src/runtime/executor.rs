@@ -89,6 +89,50 @@ impl NativeForestExecutor {
     pub fn forest(&self) -> &EncodedForest {
         &self.forest
     }
+
+    /// Outputs per prediction of the encoded forest (1 = verdict only,
+    /// 3 = joint verdict + workgroup shape).
+    pub fn num_outputs(&self) -> usize {
+        self.forest.num_outputs()
+    }
+
+    /// Batched joint prediction: (log2 wg_w, log2 wg_h) per row. `Err`
+    /// for single-output models (the caller should gate on
+    /// [`Self::num_outputs`]) or malformed rows; same chunked
+    /// parallelism policy as `predict`.
+    pub fn predict_wg_logs(&self, rows: &[Vec<f64>]) -> Result<Vec<(f64, f64)>> {
+        if self.forest.num_outputs() < 3 {
+            return Err(anyhow!(
+                "model has {} output(s); workgroup prediction needs a joint \
+                 (schema v2) model",
+                self.forest.num_outputs()
+            ));
+        }
+        let nf = self.forest.contract.num_features;
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != nf {
+                return Err(anyhow!(
+                    "row {i}: feature vector has {} dims, expected {nf}",
+                    r.len()
+                ));
+            }
+        }
+        // Arity was checked above, so per-row `unwrap` cannot fire.
+        if self.threads <= 1 || rows.len() < 2 * self.chunk_rows {
+            return Ok(rows
+                .iter()
+                .map(|r| self.forest.predict_wg_logs(r).unwrap())
+                .collect());
+        }
+        let chunks: Vec<&[Vec<f64>]> = rows.chunks(self.chunk_rows).collect();
+        let nested = parallel_map(&chunks, self.threads, |chunk| {
+            chunk
+                .iter()
+                .map(|r| self.forest.predict_wg_logs(r).unwrap())
+                .collect::<Vec<(f64, f64)>>()
+        });
+        Ok(nested.into_iter().flatten().collect())
+    }
 }
 
 /// Per-device registry of encoded forests: one serving process holds a
@@ -262,6 +306,41 @@ mod tests {
             &again.forest,
             reg.get("m2090").unwrap()
         ));
+    }
+
+    #[test]
+    fn joint_wg_prediction_matches_scalar_and_gates_on_arity() {
+        let mut rng = Rng::new(23);
+        let x: Vec<Vec<f64>> = (0..NUM_FEATURES)
+            .map(|_| (0..250).map(|_| rng.range_f64(-1.0, 1.0)).collect())
+            .collect();
+        let y: Vec<f64> =
+            (0..250).map(|i| if x[1][i] > 0.0 { 1.0 } else { -1.0 }).collect();
+        let lw: Vec<f64> =
+            (0..250).map(|i| if x[0][i] > 0.0 { 5.0 } else { 2.0 }).collect();
+        let lh: Vec<f64> = vec![3.0; 250];
+        let f = Forest::fit_multi(
+            &x,
+            &y,
+            &[lw, lh],
+            &ForestConfig { num_trees: 8, threads: 2, ..Default::default() },
+        );
+        let enc = encode(&f, ExportContract::default());
+        let exec = NativeForestExecutor::with_parallelism(enc.clone(), 4, 16);
+        assert_eq!(exec.num_outputs(), 3);
+        let rows = random_rows(200, 24);
+        let got = exec.predict_wg_logs(&rows).unwrap();
+        assert_eq!(got.len(), rows.len());
+        for (r, g) in rows.iter().zip(&got) {
+            assert_eq!(*g, enc.predict_wg_logs(r).unwrap());
+        }
+        // width check still applies
+        assert!(exec.predict_wg_logs(&[vec![0.0; NUM_FEATURES - 1]]).is_err());
+        // single-output model -> typed error, not a panic
+        let single = NativeForestExecutor::new(toy_encoded(11));
+        assert_eq!(single.num_outputs(), 1);
+        let err = single.predict_wg_logs(&rows[..1]).unwrap_err();
+        assert!(format!("{err}").contains("joint"), "{err}");
     }
 
     #[test]

@@ -13,6 +13,59 @@ use super::timing::{simulate, SimResult, Variant};
 pub const SPEEDUP_MIN: f64 = 0.01;
 pub const SPEEDUP_MAX: f64 = 100.0;
 
+/// Dataset schema version. `V1` is the original single-label layout
+/// (18 features + speedup); `V2` adds the joint argmax-workgroup label
+/// (18 features + speedup + wg_w + wg_h). Persisted as a `# schema=v2`
+/// metadata line; files without the stamp are v1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Schema {
+    V1,
+    V2,
+}
+
+impl Schema {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Schema::V1 => "v1",
+            Schema::V2 => "v2",
+        }
+    }
+
+    /// CSV columns a row of this schema carries.
+    pub fn columns(&self) -> usize {
+        match self {
+            Schema::V1 => NUM_FEATURES + 1,
+            Schema::V2 => NUM_FEATURES + 3,
+        }
+    }
+
+    /// Model outputs a forest trained on this schema produces
+    /// (v1: log2 speedup; v2: + log2 wg_w + log2 wg_h).
+    pub fn outputs(&self) -> usize {
+        match self {
+            Schema::V1 => 1,
+            Schema::V2 => 3,
+        }
+    }
+}
+
+impl std::fmt::Display for Schema {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for Schema {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "v1" => Ok(Schema::V1),
+            "v2" => Ok(Schema::V2),
+            other => Err(format!("unknown dataset schema {other:?} (v1|v2)")),
+        }
+    }
+}
+
 /// One measured kernel instance: the dataset row.
 #[derive(Clone, Debug)]
 pub struct SpeedupRecord {
@@ -69,6 +122,104 @@ impl SpeedupRecord {
             baseline_time: f64::NAN,
             optimized_time: f64::NAN,
         })
+    }
+}
+
+/// The schema-versioned dataset record: a measured instance plus the
+/// joint tuning label. v2 records carry the argmax-workgroup shape of
+/// the kernel the instance came from (derived from the launch sweep at
+/// generation time, `synth::sweep::argmax_wg`); records up-converted
+/// from v1 data carry `None` — the 18-feature vector and speedup stay
+/// intact either way.
+#[derive(Clone, Debug)]
+pub struct TuneRecord {
+    pub base: SpeedupRecord,
+    /// (w, h) of the fastest measured launch for this instance's
+    /// kernel; `None` for records up-converted from single-label data.
+    pub best_wg: Option<(u32, u32)>,
+}
+
+impl TuneRecord {
+    /// Typed up-conversion from a single-label (v1) record: the joint
+    /// label is absent, never fabricated.
+    pub fn from_v1(base: SpeedupRecord) -> Self {
+        TuneRecord { base, best_wg: None }
+    }
+
+    /// Typed down-conversion to the single-label (v1) record; the joint
+    /// label is dropped.
+    pub fn into_v1(self) -> SpeedupRecord {
+        self.base
+    }
+
+    /// The richest schema this record can be written under losslessly.
+    pub fn schema(&self) -> Schema {
+        if self.best_wg.is_some() { Schema::V2 } else { Schema::V1 }
+    }
+
+    /// Regression targets for the workgroup outputs: (log2 w, log2 h).
+    pub fn wg_targets(&self) -> Option<(f64, f64)> {
+        self.best_wg
+            .map(|(w, h)| ((w as f64).log2(), (h as f64).log2()))
+    }
+
+    /// Flatten under `schema`. v1 drops the label; v2 writes an
+    /// unlabeled record as the `0,0` sentinel (round-trips back to
+    /// `None`).
+    pub fn csv_row(&self, schema: Schema) -> Vec<f64> {
+        let mut row = self.base.csv_row();
+        if schema == Schema::V2 {
+            let (w, h) = self.best_wg.unwrap_or((0, 0));
+            row.push(w as f64);
+            row.push(h as f64);
+        }
+        row
+    }
+
+    /// Rebuild from a persisted row of the given schema. The workgroup
+    /// label must be the `0,0` sentinel or a valid launch shape (powers
+    /// of two, <= 1024 workitems); anything else is a typed error, not
+    /// a silently-misparsed label.
+    pub fn from_csv_row(
+        schema: Schema,
+        name: String,
+        row: &[f64],
+    ) -> anyhow::Result<Self> {
+        anyhow::ensure!(
+            row.len() == schema.columns(),
+            "record '{name}': row has {} columns, expected {} for schema {schema}",
+            row.len(),
+            schema.columns()
+        );
+        let base = SpeedupRecord::from_csv_row(name, &row[..NUM_FEATURES + 1])?;
+        let best_wg = match schema {
+            Schema::V1 => None,
+            Schema::V2 => {
+                let (fw, fh) = (row[NUM_FEATURES + 1], row[NUM_FEATURES + 2]);
+                let ok = |x: f64| x >= 0.0 && x.fract() == 0.0 && x <= 1024.0;
+                anyhow::ensure!(
+                    ok(fw) && ok(fh),
+                    "record '{}': workgroup label ({fw}, {fh}) is not a \
+                     whole non-negative shape",
+                    base.name
+                );
+                let (w, h) = (fw as u32, fh as u32);
+                if (w, h) == (0, 0) {
+                    None
+                } else {
+                    anyhow::ensure!(
+                        w.is_power_of_two()
+                            && h.is_power_of_two()
+                            && w as u64 * h as u64 <= 1024,
+                        "record '{}': workgroup label {w}x{h} is not a \
+                         valid power-of-two launch shape",
+                        base.name
+                    );
+                    Some((w, h))
+                }
+            }
+        };
+        Ok(TuneRecord { base, best_wg })
     }
 }
 
@@ -229,5 +380,77 @@ mod tests {
     fn target_is_log2() {
         let r = record(HomePattern::NoReuseRow, (32, 2), 1, 8);
         assert!((r.target() - r.speedup.log2()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn schema_parse_and_columns() {
+        assert_eq!("v1".parse::<Schema>().unwrap(), Schema::V1);
+        assert_eq!("v2".parse::<Schema>().unwrap(), Schema::V2);
+        assert!("v3".parse::<Schema>().is_err());
+        assert_eq!(Schema::V1.columns(), NUM_FEATURES + 1);
+        assert_eq!(Schema::V2.columns(), NUM_FEATURES + 3);
+        assert_eq!(Schema::V1.outputs(), 1);
+        assert_eq!(Schema::V2.outputs(), 3);
+        assert_eq!(Schema::V2.to_string(), "v2");
+    }
+
+    #[test]
+    fn tune_record_roundtrips_both_schemas() {
+        let base = record(HomePattern::NoReuseRow, (32, 2), 1, 8);
+        let rec = TuneRecord { base: base.clone(), best_wg: Some((16, 8)) };
+        assert_eq!(rec.schema(), Schema::V2);
+        assert_eq!(rec.wg_targets(), Some((4.0, 3.0)));
+
+        let row = rec.csv_row(Schema::V2);
+        assert_eq!(row.len(), NUM_FEATURES + 3);
+        let back = TuneRecord::from_csv_row(Schema::V2, "x".into(), &row).unwrap();
+        assert_eq!(back.best_wg, Some((16, 8)));
+        assert_eq!(back.base.features, base.features);
+
+        // v1 row drops the label; reading it back up-converts to None
+        let row1 = rec.csv_row(Schema::V1);
+        assert_eq!(row1.len(), NUM_FEATURES + 1);
+        let back1 = TuneRecord::from_csv_row(Schema::V1, "x".into(), &row1).unwrap();
+        assert_eq!(back1.best_wg, None);
+        assert_eq!(back1.schema(), Schema::V1);
+    }
+
+    #[test]
+    fn up_down_conversion_preserves_the_base_record() {
+        let base = record(HomePattern::NoReuseRow, (32, 2), 1, 8);
+        let up = TuneRecord::from_v1(base.clone());
+        assert_eq!(up.best_wg, None);
+        // unlabeled v2 row carries the 0,0 sentinel and round-trips
+        let row = up.csv_row(Schema::V2);
+        assert_eq!(&row[NUM_FEATURES + 1..], &[0.0, 0.0]);
+        let back = TuneRecord::from_csv_row(Schema::V2, "x".into(), &row).unwrap();
+        assert_eq!(back.best_wg, None);
+        let down = back.into_v1();
+        assert_eq!(down.features, base.features);
+        assert_eq!(down.speedup, base.speedup);
+    }
+
+    #[test]
+    fn invalid_wg_labels_are_typed_errors() {
+        let base = record(HomePattern::NoReuseRow, (32, 2), 1, 8);
+        let rec = TuneRecord::from_v1(base);
+        let mut row = rec.csv_row(Schema::V2);
+        // non-power-of-two shape
+        row[NUM_FEATURES + 1] = 3.0;
+        row[NUM_FEATURES + 2] = 4.0;
+        assert!(TuneRecord::from_csv_row(Schema::V2, "x".into(), &row).is_err());
+        // over-large workgroup
+        row[NUM_FEATURES + 1] = 64.0;
+        row[NUM_FEATURES + 2] = 64.0;
+        assert!(TuneRecord::from_csv_row(Schema::V2, "x".into(), &row).is_err());
+        // fractional label
+        row[NUM_FEATURES + 1] = 1.5;
+        row[NUM_FEATURES + 2] = 2.0;
+        assert!(TuneRecord::from_csv_row(Schema::V2, "x".into(), &row).is_err());
+        // wrong width for the schema
+        assert!(
+            TuneRecord::from_csv_row(Schema::V2, "x".into(), &row[..NUM_FEATURES + 1])
+                .is_err()
+        );
     }
 }

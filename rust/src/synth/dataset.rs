@@ -25,14 +25,14 @@ use anyhow::{Context, Result};
 use crate::gpu::spec::DeviceSpec;
 use crate::kernelmodel::features::{FEATURE_NAMES, NUM_FEATURES};
 use crate::kernelmodel::template::Template;
-use crate::sim::exec::{measure, MeasureConfig, SpeedupRecord};
+use crate::sim::exec::{measure, MeasureConfig, Schema, TuneRecord};
 use crate::sim::timing::{simulate, Variant};
 use crate::util::pool::parallel_map_streamed;
 use crate::util::prng::Rng;
 use crate::util::{csv, stats};
 
 use super::sink::{self, DatasetSummary, MemorySink, RecordSink};
-use super::sweep::LaunchSweep;
+use super::sweep::{argmax_wg, LaunchSweep};
 
 /// Dataset build options.
 #[derive(Clone, Debug)]
@@ -97,25 +97,37 @@ fn template_rngs(seed: u64, n: usize) -> Vec<Rng> {
     (0..n).map(|i| rng.fork(i as u64)).collect()
 }
 
-/// Measure every feasible (template, sampled launch) instance.
+/// Measure every feasible (template, sampled launch) instance and
+/// derive the template's joint argmax-workgroup label from the same
+/// sweep (no second measurement pass): each instance's best achieved
+/// time is min(baseline, optimized), and the label is the workgroup
+/// shape of the fastest measured launch (`sweep::argmax_wg`).
 fn measure_template(
     t: &Template,
     mut trng: Rng,
     sweep: &LaunchSweep,
     dev: &DeviceSpec,
     cfg: &BuildConfig,
-) -> Vec<SpeedupRecord> {
+) -> Vec<TuneRecord> {
     let launches = sweep.sampled_balanced(&mut trng, cfg.configs_per_kernel);
-    let mut recs = Vec::with_capacity(launches.len());
+    let mut measured = Vec::with_capacity(launches.len());
     for launch in &launches {
         let d = t.descriptor(launch, dev);
         // Skip instances whose baseline can't even launch.
         if !simulate(&d, dev, Variant::Baseline).feasible() {
             continue;
         }
-        recs.push(measure(&d, dev, &cfg.measure));
+        measured.push((*launch, measure(&d, dev, &cfg.measure)));
     }
-    recs
+    let timed: Vec<_> = measured
+        .iter()
+        .map(|(l, r)| (*l, r.baseline_time.min(r.optimized_time)))
+        .collect();
+    let best_wg = argmax_wg(&timed);
+    measured
+        .into_iter()
+        .map(|(_, base)| TuneRecord { base, best_wg })
+        .collect()
 }
 
 /// Reference single-threaded build: the canonical record order every
@@ -125,7 +137,7 @@ pub fn build_serial(
     sweep: &LaunchSweep,
     dev: &DeviceSpec,
     cfg: &BuildConfig,
-) -> Vec<SpeedupRecord> {
+) -> Vec<TuneRecord> {
     let rngs = template_rngs(cfg.seed, templates.len());
     let mut out = Vec::new();
     for (t, trng) in templates.iter().zip(rngs) {
@@ -159,7 +171,7 @@ pub fn build_streaming<S: RecordSink>(
             let done = base + chunk.len();
             for recs in chunk {
                 for rec in recs {
-                    summary.observe(&rec);
+                    summary.observe(&rec.base);
                     sink.accept(&rec)?;
                 }
             }
@@ -185,47 +197,85 @@ pub fn build(
     sweep: &LaunchSweep,
     dev: &DeviceSpec,
     cfg: &BuildConfig,
-) -> Vec<SpeedupRecord> {
+) -> Vec<TuneRecord> {
     let mut sink = MemorySink::new();
     build_streaming(templates, sweep, dev, cfg, &mut sink, None)
         .expect("in-memory sink cannot fail");
     sink.records
 }
 
-/// CSV header: the 18 features + the measured speedup.
+/// CSV header: the 18 features + the measured speedup (schema v1).
 pub fn csv_header() -> Vec<&'static str> {
     let mut h: Vec<&'static str> = FEATURE_NAMES.to_vec();
     h.push("speedup");
     h
 }
 
-/// Persist records as CSV, stamped with the simulated device they were
-/// measured on (a `# device=<key>` metadata line ahead of the header).
-pub fn save(records: &[SpeedupRecord], path: &Path, device: &str) -> Result<()> {
-    let mut w = csv::RowWriter::create_with_meta(
-        path,
-        &csv_header(),
-        &[(sink::DEVICE_META_KEY, device)],
-    )?;
+/// CSV header for `schema` (v2 appends the joint workgroup label).
+pub fn csv_header_for(schema: Schema) -> Vec<&'static str> {
+    let mut h = csv_header();
+    if schema == Schema::V2 {
+        h.push("best_wg_w");
+        h.push("best_wg_h");
+    }
+    h
+}
+
+/// What a dataset file is stamped with: the simulated device it was
+/// measured on (`None` for legacy files) and its schema (`V1` for
+/// files written before schema stamping).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct DatasetTag {
+    pub device: Option<String>,
+    pub schema: Schema,
+}
+
+/// Persist records as CSV in the v1 (single-label) layout, stamped with
+/// the simulated device they were measured on. Byte-identical to the
+/// pre-schema-v2 writer for the same records.
+pub fn save(records: &[TuneRecord], path: &Path, device: &str) -> Result<()> {
+    save_schema(records, path, device, Schema::V1)
+}
+
+/// Persist records as CSV under `schema`. v2 files additionally carry a
+/// `# schema=v2` metadata line next to the `# device=` stamp; v1 files
+/// are written exactly as before (no schema line), so old readers keep
+/// working.
+pub fn save_schema(
+    records: &[TuneRecord],
+    path: &Path,
+    device: &str,
+    schema: Schema,
+) -> Result<()> {
+    let header = csv_header_for(schema);
+    let mut meta = vec![(sink::DEVICE_META_KEY, device)];
+    if schema == Schema::V2 {
+        meta.push((sink::SCHEMA_META_KEY, schema.as_str()));
+    }
+    let mut w = csv::RowWriter::create_with_meta(path, &header, &meta)?;
     for r in records {
-        w.write_row(&r.csv_row())?;
+        w.write_row(&r.csv_row(schema))?;
     }
     w.finish()
 }
 
-pub fn load(path: &Path) -> Result<Vec<SpeedupRecord>> {
+pub fn load(path: &Path) -> Result<Vec<TuneRecord>> {
     Ok(load_tagged(path)?.0)
 }
 
-/// Load a dataset plus its stamped device (`None` for files written
-/// before device stamping).
-pub fn load_tagged(path: &Path) -> Result<(Vec<SpeedupRecord>, Option<String>)> {
+/// Load a dataset plus its stamp ([`DatasetTag`]). The schema comes
+/// from the `# schema=` metadata line (absent = v1); the header width
+/// must match the stamped schema, so a v2 file with its metadata
+/// stripped is rejected instead of silently misparsed.
+pub fn load_tagged(path: &Path) -> Result<(Vec<TuneRecord>, DatasetTag)> {
     let mut reader = csv::RowReader::open(path)?;
+    let schema = sink::schema_from_meta(reader.meta())
+        .with_context(|| path.display().to_string())?;
     anyhow::ensure!(
-        reader.header().len() == NUM_FEATURES + 1,
-        "{}: expected {} columns, got {}",
+        reader.header().len() == schema.columns(),
+        "{}: expected {} columns for schema {schema}, got {}",
         path.display(),
-        NUM_FEATURES + 1,
+        schema.columns(),
         reader.header().len()
     );
     let device = reader.meta().get(sink::DEVICE_META_KEY).cloned();
@@ -236,21 +286,21 @@ pub fn load_tagged(path: &Path) -> Result<(Vec<SpeedupRecord>, Option<String>)> 
         // an Err whatever the reader's own invariants — never a
         // copy_from_slice panic.
         out.push(
-            SpeedupRecord::from_csv_row(format!("row{i}"), &row)
+            TuneRecord::from_csv_row(schema, format!("row{i}"), &row)
                 .with_context(|| path.display().to_string())?,
         );
         i += 1;
     }
-    Ok((out, device))
+    Ok((out, DatasetTag { device, schema }))
 }
 
 /// Split records into train/test by random permutation (paper: train on
 /// a random 10%, evaluate on the rest).
 pub fn split<'a>(
-    records: &'a [SpeedupRecord],
+    records: &'a [TuneRecord],
     train_fraction: f64,
     seed: u64,
-) -> (Vec<&'a SpeedupRecord>, Vec<&'a SpeedupRecord>) {
+) -> (Vec<&'a TuneRecord>, Vec<&'a TuneRecord>) {
     let mut idx: Vec<usize> = (0..records.len()).collect();
     let mut rng = Rng::new(seed);
     rng.shuffle(&mut idx);
@@ -262,11 +312,11 @@ pub fn split<'a>(
 }
 
 /// Summary used by reports: count, beneficial fraction, speedup range.
-pub fn summarize(records: &[SpeedupRecord]) -> (usize, f64, f64, f64) {
+pub fn summarize(records: &[TuneRecord]) -> (usize, f64, f64, f64) {
     let n = records.len();
-    let beneficial =
-        records.iter().filter(|r| r.beneficial()).count() as f64 / n.max(1) as f64;
-    let speedups: Vec<f64> = records.iter().map(|r| r.speedup).collect();
+    let beneficial = records.iter().filter(|r| r.base.beneficial()).count() as f64
+        / n.max(1) as f64;
+    let speedups: Vec<f64> = records.iter().map(|r| r.base.speedup).collect();
     let geo = stats::geomean(&speedups);
     let max = speedups.iter().cloned().fold(0.0, f64::max);
     (n, beneficial, geo, max)
@@ -290,7 +340,7 @@ mod tests {
         (templates, sweep, dev, cfg)
     }
 
-    fn small_dataset() -> Vec<SpeedupRecord> {
+    fn small_dataset() -> Vec<TuneRecord> {
         let (templates, sweep, dev, cfg) = small_setup();
         build(&templates, &sweep, &dev, &cfg)
     }
@@ -300,17 +350,33 @@ mod tests {
         let recs = small_dataset();
         assert!(recs.len() > 500, "{} records", recs.len());
         for r in &recs {
-            assert!(r.features.iter().all(|x| x.is_finite()));
-            assert!(r.speedup > 0.0);
+            assert!(r.base.features.iter().all(|x| x.is_finite()));
+            assert!(r.base.speedup > 0.0);
         }
     }
 
     #[test]
     fn dataset_contains_both_classes() {
         let recs = small_dataset();
-        let pos = recs.iter().filter(|r| r.beneficial()).count();
+        let pos = recs.iter().filter(|r| r.base.beneficial()).count();
         assert!(pos > 0, "no beneficial instances");
         assert!(pos < recs.len(), "every instance beneficial");
+    }
+
+    #[test]
+    fn every_record_gets_a_valid_joint_label() {
+        let recs = small_dataset();
+        // Every record carries a label (each template measures at least
+        // one feasible launch) and the label is a valid workgroup shape.
+        let mut distinct = std::collections::HashSet::new();
+        for r in &recs {
+            let wg = r.best_wg.expect("joint label missing");
+            assert!(wg.0.is_power_of_two() && wg.1.is_power_of_two(), "{wg:?}");
+            assert!(wg.0 * wg.1 <= 1024, "{wg:?}");
+            distinct.insert(wg);
+        }
+        // labels are not one degenerate constant across the dataset
+        assert!(distinct.len() > 1, "all templates share one wg label");
     }
 
     #[test]
@@ -323,9 +389,10 @@ mod tests {
             let par = build(&templates, &sweep, &dev, &c);
             assert_eq!(par.len(), serial.len(), "t={threads} c={chunk}");
             for (a, b) in par.iter().zip(&serial) {
-                assert_eq!(a.features, b.features);
-                assert_eq!(a.speedup, b.speedup);
-                assert_eq!(a.name, b.name);
+                assert_eq!(a.base.features, b.base.features);
+                assert_eq!(a.base.speedup, b.base.speedup);
+                assert_eq!(a.base.name, b.base.name);
+                assert_eq!(a.best_wg, b.best_wg);
             }
         }
     }
@@ -370,12 +437,15 @@ mod tests {
         let path = std::env::temp_dir()
             .join(format!("lmtuner-ds-{}.csv", std::process::id()));
         save(&recs, &path, "m2090").unwrap();
-        let (back, device) = load_tagged(&path).unwrap();
-        assert_eq!(device.as_deref(), Some("m2090"));
+        let (back, tag) = load_tagged(&path).unwrap();
+        assert_eq!(tag.device.as_deref(), Some("m2090"));
+        assert_eq!(tag.schema, Schema::V1);
         assert_eq!(back.len(), recs.len());
         for (a, b) in recs.iter().zip(&back) {
-            assert_eq!(a.features, b.features);
-            assert!((a.speedup - b.speedup).abs() < 1e-9);
+            assert_eq!(a.base.features, b.base.features);
+            assert!((a.base.speedup - b.base.speedup).abs() < 1e-9);
+            // v1 persistence drops the joint label by design
+            assert_eq!(b.best_wg, None);
         }
         // plain load still works and untagged legacy files load as None
         assert_eq!(load(&path).unwrap().len(), recs.len());
@@ -383,10 +453,38 @@ mod tests {
         let untagged = std::env::temp_dir()
             .join(format!("lmtuner-ds-untagged-{}.csv", std::process::id()));
         std::fs::write(&untagged, body.replace("# device=m2090\n", "")).unwrap();
-        let (_, device) = load_tagged(&untagged).unwrap();
-        assert_eq!(device, None);
+        let (_, tag) = load_tagged(&untagged).unwrap();
+        assert_eq!(tag.device, None);
+        assert_eq!(tag.schema, Schema::V1);
         std::fs::remove_file(&path).ok();
         std::fs::remove_file(&untagged).ok();
+    }
+
+    #[test]
+    fn v2_save_load_roundtrips_the_joint_label() {
+        let recs = small_dataset();
+        let path = std::env::temp_dir()
+            .join(format!("lmtuner-ds-v2-{}.csv", std::process::id()));
+        save_schema(&recs, &path, "m2090", Schema::V2).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.starts_with("# device=m2090\n# schema=v2\n"));
+        let (back, tag) = load_tagged(&path).unwrap();
+        assert_eq!(tag.device.as_deref(), Some("m2090"));
+        assert_eq!(tag.schema, Schema::V2);
+        assert_eq!(back.len(), recs.len());
+        for (a, b) in recs.iter().zip(&back) {
+            assert_eq!(a.base.features, b.base.features);
+            assert!((a.base.speedup - b.base.speedup).abs() < 1e-9);
+            assert_eq!(a.best_wg, b.best_wg);
+        }
+        // a v2 file with its schema stamp stripped must be rejected
+        // (21-column header under an implied-v1 read), not misparsed
+        let stripped = std::env::temp_dir()
+            .join(format!("lmtuner-ds-v2strip-{}.csv", std::process::id()));
+        std::fs::write(&stripped, body.replace("# schema=v2\n", "")).unwrap();
+        assert!(load(&stripped).is_err());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(&stripped).ok();
     }
 
     #[test]
@@ -457,8 +555,8 @@ mod tests {
         let back = sink::load_sharded(&dir).unwrap();
         assert_eq!(back.len(), reference.len());
         for (a, b) in back.iter().zip(&reference) {
-            assert_eq!(a.features, b.features);
-            assert!((a.speedup - b.speedup).abs() < 1e-9);
+            assert_eq!(a.base.features, b.base.features);
+            assert!((a.base.speedup - b.base.speedup).abs() < 1e-9);
         }
         std::fs::remove_dir_all(&dir).ok();
     }

@@ -1,6 +1,6 @@
 //! Record sinks: where the streaming dataset builder puts its rows.
 //!
-//! `dataset::build_streaming` produces `SpeedupRecord`s in a canonical
+//! `dataset::build_streaming` produces `TuneRecord`s in a canonical
 //! deterministic order and hands each one to a [`RecordSink`]. The sink
 //! decides what "keeping" a record means, which is what makes
 //! paper-scale (millions of instances) runs practical:
@@ -11,8 +11,10 @@
 //!   shards on disk; peak memory is one row. [`load_sharded`] restores
 //!   the exact stream order, [`stream_sharded`] replays it row-by-row
 //!   without materializing anything. Every shard is stamped with the
-//!   simulated device it was measured on (`# device=<key>`); readers
-//!   refuse to mix shards from different devices ([`DeviceMismatch`]).
+//!   simulated device it was measured on (`# device=<key>`) and, for
+//!   schema v2, the dataset schema (`# schema=v2`); readers refuse to
+//!   mix shards from different devices ([`DeviceMismatch`]) or
+//!   different schemas ([`SchemaMismatch`]).
 //! * [`ReservoirSink`] — uniform reservoir sample of K records (with
 //!   their global stream indices), used to draw the training split
 //!   from a stream of unknown length.
@@ -23,22 +25,59 @@
 //! beneficial fraction, geomean/max speedup) incrementally so nothing
 //! needs the full record set.
 
-use std::collections::HashSet;
+use std::collections::{BTreeMap, HashSet};
 use std::fmt;
 use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
-use crate::kernelmodel::features::NUM_FEATURES;
-use crate::sim::exec::SpeedupRecord;
+use crate::sim::exec::{Schema, SpeedupRecord, TuneRecord};
 use crate::util::csv::{RowReader, RowWriter};
 use crate::util::prng::Rng;
 
-use super::dataset::csv_header;
+use super::dataset::csv_header_for;
 
 /// Metadata key under which shard/dataset CSVs carry the simulated
 /// device they were measured on (see `util::csv` `# key=value` lines).
 pub const DEVICE_META_KEY: &str = "device";
+
+/// Metadata key under which shard/dataset CSVs carry their schema
+/// version. Absent means schema v1 (the single-label layout every file
+/// written before schema versioning uses).
+pub const SCHEMA_META_KEY: &str = "schema";
+
+/// Resolve a CSV file's schema from its parsed `# key=value` metadata:
+/// absent = v1 (legacy single-label files), otherwise the stamp must
+/// parse as a known schema.
+pub fn schema_from_meta(meta: &BTreeMap<String, String>) -> Result<Schema> {
+    match meta.get(SCHEMA_META_KEY) {
+        None => Ok(Schema::V1),
+        Some(s) => s.parse::<Schema>().map_err(|e| anyhow::anyhow!(e)),
+    }
+}
+
+/// Typed error: shards written under different dataset schemas were
+/// mixed. A v1 shard's rows have no workgroup label while a v2 shard's
+/// do, so interleaving them would silently corrupt the label plane.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SchemaMismatch {
+    pub expected: Schema,
+    pub found: Schema,
+    /// Where the mismatch was detected (a path or pipeline stage).
+    pub at: String,
+}
+
+impl fmt::Display for SchemaMismatch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "schema mismatch at {}: expected '{}', found '{}'",
+            self.at, self.expected, self.found
+        )
+    }
+}
+
+impl std::error::Error for SchemaMismatch {}
 
 /// Typed error: data measured on different simulated devices was mixed,
 /// or a dataset's stamped device does not match the one requested.
@@ -82,13 +121,14 @@ pub fn ensure_same_device(
     }
 }
 
-/// What a sharded-dataset replay saw: the row count and the device the
+/// What a sharded-dataset replay saw: the row count, the device the
 /// shards were stamped with (`None` for legacy shards written before
-/// device stamping).
+/// device stamping), and their schema (v1 for unstamped files).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ShardStream {
     pub rows: u64,
     pub device: Option<String>,
+    pub schema: Schema,
 }
 
 /// Consumer of the streaming dataset build. `accept` is called once
@@ -97,7 +137,7 @@ pub struct ShardStream {
 /// keep — at paper scale most sinks keep almost nothing (the CSV sink
 /// serializes without owning, the reservoir discards nearly all rows).
 pub trait RecordSink {
-    fn accept(&mut self, rec: &SpeedupRecord) -> Result<()>;
+    fn accept(&mut self, rec: &TuneRecord) -> Result<()>;
     fn finish(&mut self) -> Result<()> {
         Ok(())
     }
@@ -106,7 +146,7 @@ pub trait RecordSink {
 /// Collect every record in memory (the classic behavior).
 #[derive(Default)]
 pub struct MemorySink {
-    pub records: Vec<SpeedupRecord>,
+    pub records: Vec<TuneRecord>,
 }
 
 impl MemorySink {
@@ -116,7 +156,7 @@ impl MemorySink {
 }
 
 impl RecordSink for MemorySink {
-    fn accept(&mut self, rec: &SpeedupRecord) -> Result<()> {
+    fn accept(&mut self, rec: &TuneRecord) -> Result<()> {
         self.records.push(rec.clone());
         Ok(())
     }
@@ -154,17 +194,35 @@ pub fn shard_files(dir: &Path) -> Result<Vec<PathBuf>> {
 pub struct ShardedCsvSink {
     writers: Vec<RowWriter>,
     device: String,
+    schema: Schema,
     next: usize,
     written: u64,
 }
 
 impl ShardedCsvSink {
+    /// Create a v1 (single-label) sharded sink — byte-identical output
+    /// to the pre-schema-versioning writer.
     pub fn create(dir: &Path, shards: usize, device: &str) -> Result<Self> {
+        Self::create_schema(dir, shards, device, Schema::V1)
+    }
+
+    /// Create a sharded sink writing rows under `schema`. v2 shards
+    /// carry a `# schema=v2` metadata line next to the device stamp;
+    /// v1 shards are written exactly as before (no schema line).
+    pub fn create_schema(
+        dir: &Path,
+        shards: usize,
+        device: &str,
+        schema: Schema,
+    ) -> Result<Self> {
         let shards = shards.max(1);
         std::fs::create_dir_all(dir)
             .with_context(|| format!("create {}", dir.display()))?;
-        let header = csv_header();
-        let meta = [(DEVICE_META_KEY, device)];
+        let header = csv_header_for(schema);
+        let mut meta = vec![(DEVICE_META_KEY, device)];
+        if schema == Schema::V2 {
+            meta.push((SCHEMA_META_KEY, schema.as_str()));
+        }
         let writers = (0..shards)
             .map(|i| RowWriter::create_with_meta(&shard_path(dir, i), &header, &meta))
             .collect::<Result<Vec<_>>>()?;
@@ -184,6 +242,7 @@ impl ShardedCsvSink {
         Ok(ShardedCsvSink {
             writers,
             device: device.to_string(),
+            schema,
             next: 0,
             written: 0,
         })
@@ -201,11 +260,16 @@ impl ShardedCsvSink {
     pub fn device(&self) -> &str {
         &self.device
     }
+
+    /// The schema every shard is written under.
+    pub fn schema(&self) -> Schema {
+        self.schema
+    }
 }
 
 impl RecordSink for ShardedCsvSink {
-    fn accept(&mut self, rec: &SpeedupRecord) -> Result<()> {
-        self.writers[self.next].write_row(&rec.csv_row())?;
+    fn accept(&mut self, rec: &TuneRecord) -> Result<()> {
+        self.writers[self.next].write_row(&rec.csv_row(self.schema))?;
         self.next = (self.next + 1) % self.writers.len();
         self.written += 1;
         Ok(())
@@ -219,33 +283,51 @@ impl RecordSink for ShardedCsvSink {
     }
 }
 
-/// Replay a sharded dataset's raw rows (`dataset::csv_header` layout:
-/// features then speedup) in original stream order, one row at a time
-/// (peak memory: one buffered line per shard). The callback gets the
-/// global stream index of each row. Returns the row count and the
-/// shards' stamped device. Errors on ragged shards (an interrupted
-/// writer) instead of silently truncating, and on shards stamped with
-/// different devices (the typed [`DeviceMismatch`]) instead of
-/// interleaving two testbeds' measurements.
+/// Replay a sharded dataset's raw rows (`dataset::csv_header_for`
+/// layout: features, speedup, then for v2 the workgroup label) in
+/// original stream order, one row at a time (peak memory: one buffered
+/// line per shard). The callback gets the global stream index of each
+/// row plus the shards' schema. Returns the row count, the shards'
+/// stamped device, and their schema. Errors on ragged shards (an
+/// interrupted writer) instead of silently truncating, on shards
+/// stamped with different devices (the typed [`DeviceMismatch`])
+/// instead of interleaving two testbeds' measurements, and on shards
+/// written under different schemas (the typed [`SchemaMismatch`])
+/// instead of corrupting the label plane.
 pub fn stream_sharded_rows(
     dir: &Path,
-    mut f: impl FnMut(u64, Vec<f64>) -> Result<()>,
+    mut f: impl FnMut(u64, Schema, Vec<f64>) -> Result<()>,
 ) -> Result<ShardStream> {
     let files = shard_files(dir)?;
-    let mut readers = files
-        .iter()
-        .map(|p| {
-            let r = RowReader::open(p)?;
-            anyhow::ensure!(
-                r.header().len() == NUM_FEATURES + 1,
-                "{}: expected {} columns, got {}",
-                p.display(),
-                NUM_FEATURES + 1,
-                r.header().len()
-            );
-            Ok(r)
-        })
-        .collect::<Result<Vec<_>>>()?;
+    // Shard 0 sets the schema expectation (absent stamp = v1); every
+    // other shard must agree, and every header must have the schema's
+    // column count so a v2 file with a stripped stamp is rejected
+    // instead of misparsed.
+    let mut readers: Vec<RowReader> = Vec::with_capacity(files.len());
+    let mut schema = Schema::V1;
+    for (i, p) in files.iter().enumerate() {
+        let r = RowReader::open(p)?;
+        let found = schema_from_meta(r.meta())
+            .with_context(|| p.display().to_string())?;
+        if i == 0 {
+            schema = found;
+        } else if found != schema {
+            return Err(SchemaMismatch {
+                expected: schema,
+                found,
+                at: p.display().to_string(),
+            }
+            .into());
+        }
+        anyhow::ensure!(
+            r.header().len() == schema.columns(),
+            "{}: expected {} columns for schema {schema}, got {}",
+            p.display(),
+            schema.columns(),
+            r.header().len()
+        );
+        readers.push(r);
+    }
     // All shards must agree on the device they were measured on. The
     // first shard sets the expectation; any deviation (including a mix
     // of stamped and unstamped files) is the typed error.
@@ -272,7 +354,7 @@ pub fn stream_sharded_rows(
         for r in readers.iter_mut() {
             match r.next_row()? {
                 Some(row) => {
-                    f(idx, row)?;
+                    f(idx, schema, row)?;
                     idx += 1;
                 }
                 None => break 'outer,
@@ -291,37 +373,36 @@ pub fn stream_sharded_rows(
             dir.display()
         );
     }
-    Ok(ShardStream { rows: idx, device })
+    Ok(ShardStream { rows: idx, device, schema })
 }
 
-/// Replay a sharded dataset as `SpeedupRecord`s in original stream
-/// order (see [`stream_sharded_rows`]). The callback gets the global
-/// stream index of each record. Returns the row count and stamped
-/// device.
+/// Replay a sharded dataset as `TuneRecord`s in original stream order
+/// (see [`stream_sharded_rows`]). The callback gets the global stream
+/// index of each record. Returns the row count, stamped device, and
+/// schema.
 pub fn stream_sharded(
     dir: &Path,
-    mut f: impl FnMut(u64, SpeedupRecord) -> Result<()>,
+    mut f: impl FnMut(u64, TuneRecord) -> Result<()>,
 ) -> Result<ShardStream> {
-    stream_sharded_rows(dir, |idx, row| {
-        f(idx, SpeedupRecord::from_csv_row(format!("row{idx}"), &row)?)
+    stream_sharded_rows(dir, |idx, schema, row| {
+        f(idx, TuneRecord::from_csv_row(schema, format!("row{idx}"), &row)?)
     })
 }
 
 /// Load a sharded dataset back into memory in original stream order.
-pub fn load_sharded(dir: &Path) -> Result<Vec<SpeedupRecord>> {
+pub fn load_sharded(dir: &Path) -> Result<Vec<TuneRecord>> {
     Ok(load_sharded_tagged(dir)?.0)
 }
 
-/// Load a sharded dataset plus the device it was measured on.
-pub fn load_sharded_tagged(
-    dir: &Path,
-) -> Result<(Vec<SpeedupRecord>, Option<String>)> {
+/// Load a sharded dataset plus its stream stamp (row count, device,
+/// schema).
+pub fn load_sharded_tagged(dir: &Path) -> Result<(Vec<TuneRecord>, ShardStream)> {
     let mut out = Vec::new();
     let stream = stream_sharded(dir, |_, rec| {
         out.push(rec);
         Ok(())
     })?;
-    Ok((out, stream.device))
+    Ok((out, stream))
 }
 
 /// Uniform reservoir sample (algorithm R) of `capacity` records from a
@@ -331,7 +412,7 @@ pub fn load_sharded_tagged(
 pub struct ReservoirSink {
     capacity: usize,
     rng: Rng,
-    records: Vec<SpeedupRecord>,
+    records: Vec<TuneRecord>,
     indices: Vec<u64>,
     seen: u64,
 }
@@ -352,7 +433,7 @@ impl ReservoirSink {
         self.seen
     }
 
-    pub fn records(&self) -> &[SpeedupRecord] {
+    pub fn records(&self) -> &[TuneRecord] {
         &self.records
     }
 
@@ -362,13 +443,13 @@ impl ReservoirSink {
     }
 
     /// Consume the sink, returning (records, their stream indices).
-    pub fn into_sample(self) -> (Vec<SpeedupRecord>, Vec<u64>) {
+    pub fn into_sample(self) -> (Vec<TuneRecord>, Vec<u64>) {
         (self.records, self.indices)
     }
 }
 
 impl RecordSink for ReservoirSink {
-    fn accept(&mut self, rec: &SpeedupRecord) -> Result<()> {
+    fn accept(&mut self, rec: &TuneRecord) -> Result<()> {
         let k = self.seen;
         self.seen += 1;
         if self.records.len() < self.capacity {
@@ -389,7 +470,7 @@ impl RecordSink for ReservoirSink {
 pub struct Tee<'a, A: RecordSink, B: RecordSink>(pub &'a mut A, pub &'a mut B);
 
 impl<A: RecordSink, B: RecordSink> RecordSink for Tee<'_, A, B> {
-    fn accept(&mut self, rec: &SpeedupRecord) -> Result<()> {
+    fn accept(&mut self, rec: &TuneRecord) -> Result<()> {
         self.0.accept(rec)?;
         self.1.accept(rec)
     }
@@ -433,16 +514,20 @@ impl DatasetSummary {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernelmodel::features::NUM_FEATURES;
 
-    fn rec(i: u64) -> SpeedupRecord {
+    fn rec(i: u64) -> TuneRecord {
         let mut features = [0.0; NUM_FEATURES];
         features[0] = i as f64;
-        SpeedupRecord {
-            name: format!("r{i}"),
-            features,
-            speedup: 0.5 + (i % 4) as f64,
-            baseline_time: 1.0,
-            optimized_time: 1.0,
+        TuneRecord {
+            base: SpeedupRecord {
+                name: format!("r{i}"),
+                features,
+                speedup: 0.5 + (i % 4) as f64,
+                baseline_time: 1.0,
+                optimized_time: 1.0,
+            },
+            best_wg: Some((1 << (i % 5), 1 << (i % 3))),
         }
     }
 
@@ -468,11 +553,73 @@ mod tests {
             let back = load_sharded(&dir).unwrap();
             assert_eq!(back.len(), 10);
             for (i, r) in back.iter().enumerate() {
-                assert_eq!(r.features[0], i as f64, "shards={shards}");
-                assert_eq!(r.speedup, rec(i as u64).speedup);
+                assert_eq!(r.base.features[0], i as f64, "shards={shards}");
+                assert_eq!(r.base.speedup, rec(i as u64).base.speedup);
+                // v1 shards drop the joint label by design
+                assert_eq!(r.best_wg, None);
             }
             std::fs::remove_dir_all(&dir).ok();
         }
+    }
+
+    #[test]
+    fn v2_shards_roundtrip_the_joint_label() {
+        let dir = tmpdir("v2rt");
+        let mut sink =
+            ShardedCsvSink::create_schema(&dir, 3, "m2090", Schema::V2).unwrap();
+        assert_eq!(sink.schema(), Schema::V2);
+        for i in 0..10 {
+            sink.accept(&rec(i)).unwrap();
+        }
+        sink.finish().unwrap();
+        let (back, stream) = load_sharded_tagged(&dir).unwrap();
+        assert_eq!(stream.schema, Schema::V2);
+        assert_eq!(stream.device.as_deref(), Some("m2090"));
+        assert_eq!(back.len(), 10);
+        for (i, r) in back.iter().enumerate() {
+            let want = rec(i as u64);
+            assert_eq!(r.base.features[0], i as f64);
+            assert_eq!(r.best_wg, want.best_wg);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mixed_schema_shards_are_a_typed_error() {
+        // A v1 shard next to a v2 shard must never interleave: the v1
+        // rows have no label plane.
+        let dir = tmpdir("mixschema");
+        let mut sink =
+            ShardedCsvSink::create_schema(&dir, 2, "m2090", Schema::V2).unwrap();
+        for i in 0..4 {
+            sink.accept(&rec(i)).unwrap();
+        }
+        sink.finish().unwrap();
+        // Strip shard 1's schema stamp and label columns so it reads as
+        // a (well-formed) v1 shard.
+        let p = shard_path(&dir, 1);
+        let body = std::fs::read_to_string(&p).unwrap();
+        let v1_body: String = body
+            .lines()
+            .map(|l| {
+                if l.starts_with('#') {
+                    l.to_string()
+                } else {
+                    let cols: Vec<&str> = l.split(',').collect();
+                    cols[..cols.len() - 2].join(",")
+                }
+            })
+            .filter(|l| l != "# schema=v2")
+            .map(|l| format!("{l}\n"))
+            .collect();
+        std::fs::write(&p, v1_body).unwrap();
+
+        let err = load_sharded(&dir).unwrap_err();
+        let msg = format!("{err:#}");
+        assert!(msg.contains("schema mismatch"), "{msg}");
+        assert!(msg.contains("v2") && msg.contains("v1"), "{msg}");
+        assert!(err.downcast_ref::<SchemaMismatch>().is_some());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]
@@ -486,17 +633,18 @@ mod tests {
         sink.finish().unwrap();
         let mut seen = Vec::new();
         let stream = stream_sharded(&dir, |idx, r| {
-            assert_eq!(r.features[0], idx as f64);
+            assert_eq!(r.base.features[0], idx as f64);
             seen.push(idx);
             Ok(())
         })
         .unwrap();
         assert_eq!(stream.rows, 7);
         assert_eq!(stream.device.as_deref(), Some("gtx480"));
+        assert_eq!(stream.schema, Schema::V1);
         assert_eq!(seen, (0..7).collect::<Vec<_>>());
-        let (back, dev) = load_sharded_tagged(&dir).unwrap();
+        let (back, stamp) = load_sharded_tagged(&dir).unwrap();
         assert_eq!(back.len(), 7);
-        assert_eq!(dev.as_deref(), Some("gtx480"));
+        assert_eq!(stamp.device.as_deref(), Some("gtx480"));
         std::fs::remove_dir_all(&dir).ok();
     }
 
@@ -538,15 +686,16 @@ mod tests {
             let body = std::fs::read_to_string(&p).unwrap();
             std::fs::write(&p, body.replace("# device=m2090\n", "")).unwrap();
         }
-        let stream = stream_sharded_rows(&dir, |_, _| Ok(())).unwrap();
+        let stream = stream_sharded_rows(&dir, |_, _, _| Ok(())).unwrap();
         assert_eq!(stream.rows, 4);
         assert_eq!(stream.device, None);
+        assert_eq!(stream.schema, Schema::V1);
 
         // restore the stamp on shard 0 only -> mixed -> typed error
         let p = shard_path(&dir, 1);
         let body = std::fs::read_to_string(&p).unwrap();
         std::fs::write(&p, format!("# device=m2090\n{body}")).unwrap();
-        let err = stream_sharded_rows(&dir, |_, _| Ok(())).unwrap_err();
+        let err = stream_sharded_rows(&dir, |_, _, _| Ok(())).unwrap_err();
         assert!(format!("{err:#}").contains("device mismatch"), "{err:#}");
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -584,7 +733,7 @@ mod tests {
             .open(shard_path(&dir, 0))
             .unwrap();
         let row: Vec<String> =
-            rec(9).csv_row().iter().map(|x| x.to_string()).collect();
+            rec(9).csv_row(Schema::V1).iter().map(|x| x.to_string()).collect();
         writeln!(fh, "{}", row.join(",")).unwrap();
         drop(fh);
         let err = load_sharded(&dir).unwrap_err();
@@ -612,7 +761,7 @@ mod tests {
         let back = load_sharded(&dir).unwrap();
         assert_eq!(back.len(), 6);
         for (i, r) in back.iter().enumerate() {
-            assert_eq!(r.features[0], (100 + i) as f64);
+            assert_eq!(r.base.features[0], (100 + i) as f64);
         }
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -638,11 +787,11 @@ mod tests {
         let (rb, ib) = b.into_sample();
         assert_eq!(ia, ib);
         for (x, y) in ra.iter().zip(&rb) {
-            assert_eq!(x.features, y.features);
+            assert_eq!(x.base.features, y.base.features);
         }
         // indices actually identify the kept records
         for (r, &i) in rb.iter().zip(&ib) {
-            assert_eq!(r.features[0], i as f64);
+            assert_eq!(r.base.features[0], i as f64);
         }
     }
 
@@ -695,7 +844,7 @@ mod tests {
 
     #[test]
     fn summary_matches_batch_stats() {
-        let recs: Vec<SpeedupRecord> = (0..50).map(rec).collect();
+        let recs: Vec<SpeedupRecord> = (0..50).map(|i| rec(i).base).collect();
         let mut s = DatasetSummary::default();
         for r in &recs {
             s.observe(r);

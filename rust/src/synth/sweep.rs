@@ -128,6 +128,30 @@ impl LaunchSweep {
     }
 }
 
+/// Joint-label derivation (schema v2): the workgroup shape of the
+/// fastest measured launch. `timed` pairs each launch with its best
+/// achieved time (min over baseline/optimized) — the same sweep the
+/// speedup labels come from, so the joint label costs no second pass.
+/// Non-finite times are skipped; ties break toward the smaller (w, h)
+/// so the label is deterministic whatever order the sweep arrives in.
+pub fn argmax_wg(timed: &[(Launch, f64)]) -> Option<(u32, u32)> {
+    let mut best: Option<((u32, u32), f64)> = None;
+    for (l, t) in timed {
+        if !t.is_finite() {
+            continue;
+        }
+        let wg = (l.wg.w, l.wg.h);
+        let better = match best {
+            None => true,
+            Some((bwg, bt)) => *t < bt || (*t == bt && wg < bwg),
+        };
+        if better {
+            best = Some((wg, *t));
+        }
+    }
+    best.map(|(wg, _)| wg)
+}
+
 /// Check the paper's constraints hold for a launch (used by tests and
 /// property checks).
 pub fn satisfies_paper_constraints(l: &Launch, out_w: u32, out_h: u32) -> bool {
@@ -215,6 +239,31 @@ mod tests {
         let a = sweep.sampled_balanced(&mut Rng::new(1), 48);
         let b = sweep.sampled_balanced(&mut Rng::new(2), 48);
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn argmax_wg_picks_fastest_with_deterministic_ties() {
+        use crate::kernelmodel::launch::{GridGeom, WgGeom};
+        let launch = |w, h| {
+            Launch::new(WgGeom { w, h }, GridGeom { w: 1024, h: 1024 })
+        };
+        // fastest wins
+        let timed = vec![
+            (launch(32, 1), 3.0),
+            (launch(16, 8), 1.0),
+            (launch(8, 8), 2.0),
+        ];
+        assert_eq!(argmax_wg(&timed), Some((16, 8)));
+        // ties break toward the smaller (w, h)
+        let tied = vec![(launch(32, 2), 1.0), (launch(8, 8), 1.0)];
+        assert_eq!(argmax_wg(&tied), Some((8, 8)));
+        let tied_rev: Vec<_> = tied.iter().rev().cloned().collect();
+        assert_eq!(argmax_wg(&tied_rev), Some((8, 8)));
+        // non-finite times are skipped; all-invalid -> None
+        let nan = vec![(launch(4, 4), f64::NAN), (launch(2, 2), 5.0)];
+        assert_eq!(argmax_wg(&nan), Some((2, 2)));
+        assert_eq!(argmax_wg(&[(launch(4, 4), f64::INFINITY)]), None);
+        assert_eq!(argmax_wg(&[]), None);
     }
 
     #[test]

@@ -3,9 +3,16 @@
 //! `cargo bench` targets use `harness = false` and call into this module:
 //! warmup, then timed iterations until both a minimum iteration count and a
 //! minimum wall time are reached; reports mean/p50/p95 per iteration.
+//!
+//! Perf benches additionally collect their results into a [`JsonReport`]
+//! and drop a machine-readable `BENCH_<name>.json` in the working
+//! directory, so CI and EXPERIMENTS.md tooling can diff runs without
+//! scraping stdout.
 
+use std::path::PathBuf;
 use std::time::{Duration, Instant};
 
+use super::json::Json;
 use super::stats::percentile;
 
 #[derive(Clone, Debug)]
@@ -109,6 +116,74 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// Accumulates [`BenchResult`]s for one bench binary and serializes them
+/// as `BENCH_<name>.json` (via [`crate::util::json`]). The `record_*`
+/// variants also print the usual one-line report, so a bench swaps
+/// `report(&r)` for `rep.record(&r)` and loses nothing on stdout.
+pub struct JsonReport {
+    bench: String,
+    entries: Vec<Json>,
+}
+
+impl JsonReport {
+    pub fn new(bench: &str) -> Self {
+        JsonReport { bench: bench.to_string(), entries: Vec::new() }
+    }
+
+    fn entry(r: &BenchResult, throughput: Option<(f64, &str)>) -> Json {
+        let mut e = Json::obj();
+        e.set("name", Json::Str(r.name.clone()))
+            .set("iters", Json::Num(r.iters as f64))
+            .set("mean_s", Json::Num(r.mean.as_secs_f64()))
+            .set("p50_s", Json::Num(r.p50.as_secs_f64()))
+            .set("p95_s", Json::Num(r.p95.as_secs_f64()))
+            .set("min_s", Json::Num(r.min.as_secs_f64()));
+        if let Some((items, unit)) = throughput {
+            e.set("items_per_iter", Json::Num(items))
+                .set("throughput_per_s", Json::Num(r.throughput(items)))
+                .set("unit", Json::Str(unit.to_string()));
+        }
+        e
+    }
+
+    pub fn record(&mut self, r: &BenchResult) {
+        report(r);
+        self.entries.push(Self::entry(r, None));
+    }
+
+    pub fn record_throughput(&mut self, r: &BenchResult, items: f64, unit: &str) {
+        report_throughput(r, items, unit);
+        self.entries.push(Self::entry(r, Some((items, unit))));
+    }
+
+    /// Attach a free-form scalar (a derived ratio, a config knob) to the
+    /// report alongside the timed entries.
+    pub fn note(&mut self, key: &str, value: f64) {
+        let mut e = Json::obj();
+        e.set("name", Json::Str(key.to_string())).set("value", Json::Num(value));
+        self.entries.push(e);
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("bench", Json::Str(self.bench.clone()))
+            .set("results", Json::Arr(self.entries.clone()));
+        j
+    }
+
+    /// Write `BENCH_<name>.json` into `dir`; returns the file path.
+    pub fn write_to(&self, dir: &std::path::Path) -> std::io::Result<PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.bench));
+        std::fs::write(&path, self.to_json().dump_pretty())?;
+        Ok(path)
+    }
+
+    /// Write `BENCH_<name>.json` into the current working directory.
+    pub fn write(&self) -> std::io::Result<PathBuf> {
+        self.write_to(std::path::Path::new("."))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -137,6 +212,38 @@ mod tests {
         };
         let r = b.run("noop", || {});
         assert_eq!(r.iters, 7);
+    }
+
+    #[test]
+    fn json_report_roundtrips_and_writes() {
+        let b = Bencher {
+            warmup_iters: 0,
+            min_iters: 2,
+            min_time: Duration::from_millis(0),
+            max_iters: 4,
+        };
+        let mut rep = JsonReport::new("unit");
+        let r = b.run("noop", || {});
+        rep.record(&r);
+        rep.record_throughput(&r, 100.0, "rows");
+        rep.note("speedup", 2.5);
+        let j = rep.to_json();
+        assert_eq!(j.get("bench").unwrap().as_str(), Some("unit"));
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 3);
+        assert_eq!(results[0].get("name").unwrap().as_str(), Some("noop"));
+        assert!(results[1].get("throughput_per_s").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(results[1].get("unit").unwrap().as_str(), Some("rows"));
+        assert_eq!(results[2].get("value").unwrap().as_f64(), Some(2.5));
+
+        let dir = std::env::temp_dir()
+            .join(format!("lmtuner-bench-json-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = rep.write_to(&dir).unwrap();
+        assert!(path.ends_with("BENCH_unit.json"));
+        let back = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(back, rep.to_json());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -89,8 +89,9 @@ fn sharded_training_stamps_the_device_and_rejects_foreign_shards() {
     assert_eq!(out.device, "gtx680");
 
     // The shards on disk carry the stamp...
-    let (records, device) = sink::load_sharded_tagged(&dir).unwrap();
-    assert_eq!(device.as_deref(), Some("gtx680"));
+    let (records, stream) = sink::load_sharded_tagged(&dir).unwrap();
+    assert_eq!(stream.device.as_deref(), Some("gtx680"));
+    assert_eq!(stream.schema, lmtuner::sim::exec::Schema::V1);
     assert_eq!(records.len() as u64, out.summary.records);
 
     // ...and a foreign shard poisons the whole directory with the typed

@@ -453,7 +453,7 @@ fn extracted_features_drive_the_runtime_executor() {
     let sweep = lmtuner::synth::sweep::LaunchSweep::new(2048, 2048);
     let cfg = lmtuner::synth::dataset::BuildConfig { configs_per_kernel: 2, ..Default::default() };
     let records = lmtuner::synth::dataset::build(&templates, &sweep, &dev, &cfg);
-    let forest = lmtuner::ml::forest::Forest::fit_records(
+    let forest = lmtuner::ml::forest::Forest::fit_tune_records(
         &records,
         &lmtuner::ml::forest::ForestConfig { num_trees: 3, ..Default::default() },
     )

@@ -7,14 +7,14 @@ use lmtuner::kernelmodel::launch::Launch;
 use lmtuner::ml::export::{encode, ExportContract};
 use lmtuner::ml::forest::{Forest, ForestConfig};
 use lmtuner::ml::metrics;
-use lmtuner::sim::exec::{measure, MeasureConfig};
+use lmtuner::sim::exec::{measure, MeasureConfig, SpeedupRecord, TuneRecord};
 use lmtuner::sim::timing::{simulate, Variant};
 use lmtuner::synth::{dataset, generator, sweep::LaunchSweep};
 use lmtuner::util::prng::Rng;
 use lmtuner::util::prop;
 use lmtuner::workloads;
 
-fn small_records() -> Vec<lmtuner::sim::exec::SpeedupRecord> {
+fn small_records() -> Vec<TuneRecord> {
     let dev = DeviceSpec::m2090();
     let mut rng = Rng::new(42);
     let templates = generator::generate_n(&mut rng, 5);
@@ -28,6 +28,8 @@ fn pipeline_learns_the_simulator() {
     let records = small_records();
     assert!(records.len() > 3000);
     let (train, test) = dataset::split(&records, 0.2, 1);
+    let train: Vec<&SpeedupRecord> = train.iter().map(|r| &r.base).collect();
+    let test: Vec<&SpeedupRecord> = test.iter().map(|r| &r.base).collect();
     let forest = Forest::fit_records(&train, &ForestConfig::default()).expect("finite records");
     let acc = metrics::evaluate_model(&test, |x| forest.decide(x));
     assert!(acc.count_based > 0.72, "count {}", acc.count_based);
@@ -38,18 +40,19 @@ fn pipeline_learns_the_simulator() {
 fn encoded_forest_preserves_decisions_end_to_end() {
     let records = small_records();
     let (train, test) = dataset::split(&records, 0.2, 2);
+    let train: Vec<&SpeedupRecord> = train.iter().map(|r| &r.base).collect();
     let forest = Forest::fit_records(&train, &ForestConfig::default()).expect("finite records");
     let enc = encode(&forest, ExportContract::default());
     enc.validate().unwrap();
     let mut agree = 0usize;
     let mut graded = 0usize;
     for r in test.iter().take(2000) {
-        let native = forest.predict(&r.features);
+        let native = forest.predict(&r.base.features);
         if native.abs() < 0.05 {
             continue; // boundary cases may flip under f32 + truncation
         }
         graded += 1;
-        agree += (enc.decide(&r.features) == (native > 0.0)) as usize;
+        agree += (enc.decide(&r.base.features) == (native > 0.0)) as usize;
     }
     assert!(
         agree as f64 / graded as f64 > 0.98,
@@ -61,6 +64,8 @@ fn encoded_forest_preserves_decisions_end_to_end() {
 fn model_roundtrip_through_disk_and_metrics() {
     let records = small_records();
     let (train, test) = dataset::split(&records, 0.2, 3);
+    let train: Vec<&SpeedupRecord> = train.iter().map(|r| &r.base).collect();
+    let test: Vec<&SpeedupRecord> = test.iter().map(|r| &r.base).collect();
     let forest = Forest::fit_records(&train, &ForestConfig {
         num_trees: 8,
         ..Default::default()
@@ -177,6 +182,7 @@ fn prop_batching_decisions_equal_unbatched() {
     // The encoded forest gives identical answers whatever the batch mix.
     let records = small_records();
     let (train, _) = dataset::split(&records, 0.1, 5);
+    let train: Vec<&SpeedupRecord> = train.iter().map(|r| &r.base).collect();
     let forest = Forest::fit_records(&train, &ForestConfig {
         num_trees: 5,
         ..Default::default()
@@ -185,12 +191,12 @@ fn prop_batching_decisions_equal_unbatched() {
     let enc = encode(&forest, ExportContract::default());
     prop::check("batch-invariance", 32, |rng| {
         let i = rng.range(0, records.len() - 1);
-        let single = enc.predict(&records[i].features);
+        let single = enc.predict(&records[i].base.features);
         // same row surrounded by arbitrary others
         let j = rng.range(0, records.len() - 1);
         let batch = [
-            records[j].features.to_vec(),
-            records[i].features.to_vec(),
+            records[j].base.features.to_vec(),
+            records[i].base.features.to_vec(),
         ];
         let again = enc.predict(&batch[1]);
         lmtuner::prop_assert!(single == again, "batch position changed result");
@@ -205,6 +211,7 @@ fn prop_native_executor_invariant_under_batch_mix() {
     use lmtuner::runtime::executor::{BatchExecutor, NativeForestExecutor};
     let records = small_records();
     let (train, _) = dataset::split(&records, 0.1, 7);
+    let train: Vec<&SpeedupRecord> = train.iter().map(|r| &r.base).collect();
     let forest = Forest::fit_records(&train, &ForestConfig {
         num_trees: 5,
         ..Default::default()
@@ -216,7 +223,7 @@ fn prop_native_executor_invariant_under_batch_mix() {
         let n = rng.range(1, 40);
         let rows: Vec<Vec<f64>> = (0..n)
             .map(|_| {
-                records[rng.range(0, records.len() - 1)].features.to_vec()
+                records[rng.range(0, records.len() - 1)].base.features.to_vec()
             })
             .collect();
         let batched = exec.predict(&rows).map_err(|e| e.to_string())?;

@@ -1,0 +1,171 @@
+//! Integration tests for the joint (schema v2) label plane: argmax-wg
+//! determinism under the balanced launch sampler, label sensitivity
+//! across the device portfolio, and v1 -> v2 up-conversion through the
+//! sharded persistence layer.
+
+use lmtuner::gpu::registry;
+use lmtuner::gpu::spec::DeviceSpec;
+use lmtuner::sim::exec::{MeasureConfig, Schema, TuneRecord};
+use lmtuner::synth::sink::{self, RecordSink, ShardedCsvSink};
+use lmtuner::synth::sweep::{argmax_wg, LaunchSweep};
+use lmtuner::synth::{dataset, generator};
+use lmtuner::util::prng::Rng;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("lmtuner-joint-{name}-{}", std::process::id()))
+}
+
+fn build_on(dev: &DeviceSpec, tuples: usize, configs: usize) -> Vec<TuneRecord> {
+    let mut rng = Rng::new(0x10B7);
+    let templates = generator::generate_n(&mut rng, tuples);
+    let sweep = LaunchSweep::new(2048, 2048);
+    let cfg = dataset::BuildConfig {
+        configs_per_kernel: configs,
+        measure: MeasureConfig::deterministic(),
+        ..Default::default()
+    };
+    dataset::build(&templates, &sweep, dev, &cfg)
+}
+
+#[test]
+fn argmax_labels_are_deterministic_under_sampled_balanced() {
+    // The joint label rides on `sampled_balanced`'s launch draw; the
+    // whole path (sampler -> simulate -> argmax) must reproduce exactly,
+    // and the parallel build must agree with the serial reference.
+    let dev = DeviceSpec::m2090();
+    let a = build_on(&dev, 2, 6);
+    let b = build_on(&dev, 2, 6);
+    assert!(a.len() > 1000, "{} records", a.len());
+    assert_eq!(a.len(), b.len());
+    for (x, y) in a.iter().zip(&b) {
+        assert_eq!(x.base.name, y.base.name);
+        assert_eq!(x.best_wg, y.best_wg);
+    }
+    // Every emitted label is a valid pow2 launch shape; v2 is lossless.
+    for r in &a {
+        let (w, h) = r.best_wg.expect("generated records carry the label");
+        assert!(w.is_power_of_two() && h.is_power_of_two());
+        assert!(w as u64 * h as u64 <= 1024, "{w}x{h}");
+        assert_eq!(r.schema(), Schema::V2);
+    }
+
+    // Tie-breaking: argmax_wg must not depend on sweep arrival order.
+    let sweep = LaunchSweep::new(2048, 2048);
+    let launches = sweep.all();
+    let timed: Vec<_> = launches
+        .iter()
+        .enumerate()
+        // Coarse quantization manufactures plenty of exact ties.
+        .map(|(i, l)| (*l, 1.0 + (i % 3) as f64))
+        .collect();
+    let forward = argmax_wg(&timed).expect("finite times");
+    let mut reversed = timed.clone();
+    reversed.reverse();
+    assert_eq!(argmax_wg(&reversed), Some(forward), "order-dependent tie-break");
+    // Non-finite times never win (and an all-NaN sweep has no label).
+    let nan_best: Vec<_> =
+        timed.iter().map(|(l, t)| (*l, if *t == 1.0 { f64::NAN } else { *t })).collect();
+    if let Some(wg) = argmax_wg(&nan_best) {
+        let winner = nan_best
+            .iter()
+            .filter(|(_, t)| t.is_finite())
+            .any(|(l, _)| (l.wg.w, l.wg.h) == wg);
+        assert!(winner, "label came from a NaN-timed launch");
+    }
+    assert_eq!(argmax_wg(&[(launches[0], f64::NAN)]), None);
+}
+
+#[test]
+fn joint_labels_flip_across_the_device_portfolio() {
+    // The same synthetic population, measured on each registered
+    // testbed: if the argmax workgroup never changed with the device,
+    // the joint label would carry no cross-device signal and the v2
+    // schema would be dead weight.
+    let devices = registry::all();
+    assert!(devices.len() >= 4, "portfolio shrank to {}", devices.len());
+    let mut label_sets: Vec<Vec<Option<(u32, u32)>>> = Vec::new();
+    for dev in &devices {
+        let recs = build_on(dev, 1, 4);
+        assert!(!recs.is_empty());
+        label_sets.push(recs.iter().map(|r| r.best_wg).collect());
+    }
+    for s in &label_sets[1..] {
+        assert_eq!(s.len(), label_sets[0].len(), "record streams diverged");
+    }
+    let mut flips = 0usize;
+    for other in &label_sets[1..] {
+        flips += label_sets[0]
+            .iter()
+            .zip(other)
+            .filter(|(a, b)| a != b)
+            .count();
+    }
+    assert!(
+        flips > 0,
+        "argmax workgroup identical across all {} devices — label carries \
+         no device signal",
+        devices.len()
+    );
+}
+
+#[test]
+fn v1_shards_up_convert_and_round_trip_through_v2() {
+    // A pre-joint (v1) shard directory loads as unlabeled TuneRecords,
+    // and re-persisting under v2 writes the 0,0 sentinel that reads
+    // back as None — features and speedups byte-stable throughout.
+    let dev = DeviceSpec::m2090();
+    let records = build_on(&dev, 1, 3);
+
+    // Write v1 shards: the joint label is dropped on disk.
+    let dir_v1 = tmpdir("v1");
+    let mut sink = ShardedCsvSink::create(&dir_v1, 2, dev.key).unwrap();
+    for r in &records {
+        sink.accept(r).unwrap();
+    }
+    sink.finish().unwrap();
+    let (back, stream) = sink::load_sharded_tagged(&dir_v1).unwrap();
+    assert_eq!(stream.schema, Schema::V1);
+    assert_eq!(back.len(), records.len());
+    for (a, b) in back.iter().zip(&records) {
+        assert_eq!(a.best_wg, None, "v1 shards fabricated a label");
+        assert_eq!(a.base.features, b.base.features);
+        assert!((a.base.speedup - b.base.speedup).abs() < 1e-9);
+        assert_eq!(a.schema(), Schema::V1);
+    }
+
+    // Re-persist the up-converted records under v2: unlabeled rows
+    // become the 0,0 sentinel and survive a reload as None.
+    let dir_v2 = tmpdir("v2");
+    let mut sink2 =
+        ShardedCsvSink::create_schema(&dir_v2, 2, dev.key, Schema::V2).unwrap();
+    for r in &back {
+        sink2.accept(r).unwrap();
+    }
+    sink2.finish().unwrap();
+    let shard0 = std::fs::read_to_string(sink::shard_path(&dir_v2, 0)).unwrap();
+    assert!(shard0.contains("# schema=v2"), "v2 shard missing the stamp");
+    let (again, stream2) = sink::load_sharded_tagged(&dir_v2).unwrap();
+    assert_eq!(stream2.schema, Schema::V2);
+    for (a, b) in again.iter().zip(&back) {
+        assert_eq!(a.best_wg, None, "0,0 sentinel misread as a real label");
+        assert_eq!(a.base.features, b.base.features);
+        assert!((a.base.speedup - b.base.speedup).abs() < 1e-9);
+    }
+
+    // The labeled originals round-trip their labels through v2 too.
+    let dir_v2b = tmpdir("v2b");
+    let mut sink3 =
+        ShardedCsvSink::create_schema(&dir_v2b, 3, dev.key, Schema::V2).unwrap();
+    for r in &records {
+        sink3.accept(r).unwrap();
+    }
+    sink3.finish().unwrap();
+    let (labeled, _) = sink::load_sharded_tagged(&dir_v2b).unwrap();
+    for (a, b) in labeled.iter().zip(&records) {
+        assert_eq!(a.best_wg, b.best_wg);
+    }
+
+    for d in [&dir_v1, &dir_v2, &dir_v2b] {
+        std::fs::remove_dir_all(d).ok();
+    }
+}

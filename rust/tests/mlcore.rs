@@ -12,7 +12,7 @@ use lmtuner::ml::forest::{Forest, ForestConfig};
 use lmtuner::ml::metrics;
 use lmtuner::ml::select::{self, GridSpec, TuneConfig};
 use lmtuner::ml::tree::{SplitEngine, Tree, TreeConfig};
-use lmtuner::sim::exec::{MeasureConfig, SpeedupRecord};
+use lmtuner::sim::exec::{MeasureConfig, SpeedupRecord, TuneRecord};
 use lmtuner::synth::{dataset, generator, sweep::LaunchSweep};
 use lmtuner::util::prng::Rng;
 
@@ -24,7 +24,7 @@ fn engine_cfg(base: ForestConfig, engine: SplitEngine) -> ForestConfig {
 
 /// Small crossdev-style synthetic dataset: the same generator ->
 /// sweep -> simulated-measure path `lmtuner crossdev` trains on.
-fn crossdev_synthetic(scale: f64, configs_per_kernel: usize) -> Vec<SpeedupRecord> {
+fn crossdev_synthetic(scale: f64, configs_per_kernel: usize) -> Vec<TuneRecord> {
     let dev = DeviceSpec::m2090();
     let mut rng = Rng::new(0x5EED ^ 0xDA7A);
     let templates = generator::generate(&mut rng, scale);
@@ -118,6 +118,8 @@ fn equivalence_crossdev_synthetic_metrics_within_half_percent() {
     let records = crossdev_synthetic(0.05, 8);
     assert!(records.len() > 2500, "{} records", records.len());
     let (train, test) = dataset::split(&records, 0.1, 3);
+    let train: Vec<&SpeedupRecord> = train.iter().map(|r| &r.base).collect();
+    let test: Vec<&SpeedupRecord> = test.iter().map(|r| &r.base).collect();
 
     let seeds = [0xF0_4E57u64, 0xA11CE, 0xB0B];
     let mut count = [0.0f64; 2];

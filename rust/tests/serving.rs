@@ -136,8 +136,8 @@ fn trained_pipeline_serves_natively_end_to_end() {
     let h = svc.handle();
     let mut sent = 0u64;
     for r in out.records.iter().take(200) {
-        let resp = h.predict(r.features).unwrap();
-        let want = enc.predict(&r.features);
+        let resp = h.predict(r.base.features).unwrap();
+        let want = enc.predict(&r.base.features);
         assert!((resp.score - want).abs() < 1e-9);
         sent += 1;
     }
@@ -308,7 +308,7 @@ fn trained_model_serves_identically_native_and_pjrt() {
         .records
         .iter()
         .take(300)
-        .map(|r| r.features.to_vec())
+        .map(|r| r.base.features.to_vec())
         .collect();
     let pjrt = exec.predict(&rows).unwrap();
     let native = NativeForestExecutor::new(enc.clone());

@@ -3,7 +3,7 @@
 //! bounded-memory behavior of the chunked builder at elevated scale.
 
 use lmtuner::gpu::spec::DeviceSpec;
-use lmtuner::sim::exec::SpeedupRecord;
+use lmtuner::sim::exec::TuneRecord;
 use lmtuner::synth::sink::{
     load_sharded, stream_sharded, MemorySink, RecordSink, ReservoirSink,
     ShardedCsvSink, Tee,
@@ -49,13 +49,14 @@ fn sharded_write_reload_equals_in_memory_build() {
         let back = load_sharded(&dir).unwrap();
         assert_eq!(back.len(), reference.len(), "shards={shards}");
         for (i, (a, b)) in back.iter().zip(&reference).enumerate() {
-            assert_eq!(a.features, b.features, "row {i}, shards={shards}");
+            assert_eq!(a.base.features, b.base.features, "row {i}, shards={shards}");
             assert!(
-                (a.speedup - b.speedup).abs() < 1e-9,
+                (a.base.speedup - b.base.speedup).abs() < 1e-9,
                 "row {i}: {} vs {}",
-                a.speedup,
-                b.speedup
+                a.base.speedup,
+                b.base.speedup
             );
+            assert_eq!(a.best_wg, b.best_wg, "row {i}, shards={shards}");
         }
         std::fs::remove_dir_all(&dir).ok();
     }
@@ -75,8 +76,8 @@ fn reservoir_sample_is_deterministic_and_sized() {
     assert_eq!(recs_a.len(), 200);
     assert_eq!(idx_a, idx_b);
     for (a, b) in recs_a.iter().zip(&recs_b) {
-        assert_eq!(a.features, b.features);
-        assert_eq!(a.speedup, b.speedup);
+        assert_eq!(a.base.features, b.base.features);
+        assert_eq!(a.base.speedup, b.base.speedup);
     }
     // indices are distinct and within the stream
     let total = dataset::build(&templates, &sweep, &dev, &cfg).len() as u64;
@@ -95,7 +96,7 @@ struct CountingSink {
 }
 
 impl RecordSink for CountingSink {
-    fn accept(&mut self, _rec: &SpeedupRecord) -> anyhow::Result<()> {
+    fn accept(&mut self, _rec: &TuneRecord) -> anyhow::Result<()> {
         self.n += 1;
         Ok(())
     }
@@ -155,7 +156,7 @@ fn tee_shards_and_samples_in_one_pass() {
     let mut matched = 0usize;
     let stream = stream_sharded(&dir, |idx, rec| {
         if let Some(pos) = indices.iter().position(|&i| i == idx) {
-            assert_eq!(rec.features, sample[pos].features);
+            assert_eq!(rec.base.features, sample[pos].base.features);
             matched += 1;
         }
         Ok(())
@@ -177,8 +178,9 @@ fn streamed_memory_sink_equals_classic_build() {
     dataset::build_streaming(&templates, &sweep, &dev, &cfg, &mut sink, None).unwrap();
     assert_eq!(sink.records.len(), serial.len());
     for (a, b) in sink.records.iter().zip(&serial) {
-        assert_eq!(a.name, b.name);
-        assert_eq!(a.features, b.features);
-        assert_eq!(a.speedup, b.speedup);
+        assert_eq!(a.base.name, b.base.name);
+        assert_eq!(a.base.features, b.base.features);
+        assert_eq!(a.base.speedup, b.base.speedup);
+        assert_eq!(a.best_wg, b.best_wg);
     }
 }
