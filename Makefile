@@ -2,7 +2,7 @@
 # (no artifacts, no network). `artifacts` requires a python with jax to
 # AOT-lower the Pallas kernels to HLO text for the PJRT backend.
 
-.PHONY: build test fmt-check docs artifacts clean
+.PHONY: build test fmt-check docs artifacts bench-snapshots clean
 
 build:
 	cargo build --release
@@ -25,6 +25,14 @@ docs:
 
 artifacts:
 	cd python/compile && python3 aot.py --out-dir ../../artifacts
+
+# Seconds-scale smoke run of the perf benches; refreshes the committed
+# BENCH_perf_inference.json / BENCH_perf_train.json snapshots at the
+# repo root (same sections and JSON shape as a full run, fewer
+# iterations — see EXPERIMENTS.md §Perf for publishable numbers).
+bench-snapshots:
+	LMTUNER_BENCH_SMOKE=1 cargo bench --bench perf_inference
+	LMTUNER_BENCH_SMOKE=1 cargo bench --bench perf_train
 
 clean:
 	cargo clean

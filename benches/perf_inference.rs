@@ -2,33 +2,56 @@
 //!
 //! Compares:
 //!   native        — rust recursive-tree traversal (training-time path)
-//!   encoded       — rust flat-array traversal, one row at a time
-//!   native-batch  — the BatchExecutor native backend (chunked parallel
-//!                   traversal of the tensor encoding), per batch size
+//!   encoded       — rust flat-tensor traversal, one row at a time
+//!   encoded-exec  — the reference BatchExecutor over the tensor
+//!                   encoding, single thread, per batch size
+//!   flat / flat-q — the compiled SoA hot path (runtime/fastexec),
+//!                   float and quantized-u8 compares, single thread,
+//!                   per batch size — this is what serving runs
+//!   joint         — verdict + workgroup planes: the old 3-pass walk,
+//!                   the single-pass encoded walk, and the flat
+//!                   one-traversal gather
 //!   pjrt:bN       — the AOT Pallas/XLA executable at each batch variant
 //!                   (skipped when artifacts are absent)
 //!
-//! This is the §Perf driver for EXPERIMENTS.md.
+//! This is the §Perf driver for EXPERIMENTS.md. Derived ratios land as
+//! `note` entries in BENCH_perf_inference.json; the headline is
+//! `flat_over_encoded_exec_b4096` (target: >= 10x single-thread).
+//!
+//! Set LMTUNER_BENCH_SMOKE=1 for a seconds-scale smoke run (CI): same
+//! sections, same JSON shape, fewer iterations — the ratios are then
+//! indicative, not publishable.
 
 use std::sync::Arc;
+use std::time::Duration;
 
 use lmtuner::gpu::spec::DeviceSpec;
 use lmtuner::kernelmodel::features::{self, NUM_FEATURES};
 use lmtuner::ml::export;
 use lmtuner::ml::forest::{Forest, ForestConfig};
 use lmtuner::runtime::executor::{BatchExecutor, NativeForestExecutor};
+use lmtuner::runtime::fastexec::{FlatForest, FlatForestExecutor, FlatMode};
 use lmtuner::runtime::forest_exec::ForestExecutor;
 use lmtuner::runtime::pjrt::Engine;
 use lmtuner::util::bench::{black_box, Bencher, JsonReport};
 use lmtuner::util::prng::Rng;
 use lmtuner::workloads;
 
+fn smoke() -> bool {
+    std::env::var("LMTUNER_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
 fn main() -> anyhow::Result<()> {
     let dev = DeviceSpec::m2090();
+    let smoke = smoke();
+    if smoke {
+        println!("smoke mode: reduced iterations, indicative numbers only");
+    }
 
     // Realistic model: train on a quick synthetic set.
     let mut rng = Rng::new(0x1FE2);
-    let templates = lmtuner::synth::generator::generate_n(&mut rng, 8);
+    let templates =
+        lmtuner::synth::generator::generate_n(&mut rng, if smoke { 4 } else { 8 });
     let sweep = lmtuner::synth::sweep::LaunchSweep::new(2048, 2048);
     let recs = lmtuner::synth::dataset::build(
         &templates,
@@ -51,7 +74,16 @@ fn main() -> anyhow::Result<()> {
     let n = rows.len();
     println!("{n} query rows, forest: {}", forest.config_summary);
 
-    let bench = Bencher::default();
+    let bench = if smoke {
+        Bencher {
+            warmup_iters: 1,
+            min_iters: 2,
+            min_time: Duration::from_millis(10),
+            max_iters: 4,
+        }
+    } else {
+        Bencher::default()
+    };
     let batch_sizes = [64usize, 256, 1024, 4096];
     let mut rep = JsonReport::new("perf_inference");
 
@@ -73,25 +105,85 @@ fn main() -> anyhow::Result<()> {
     });
     rep.record_throughput(&r, n as f64, "pred");
 
-    // The native BatchExecutor backend at each batch size — this is the
-    // artifact-free serving hot path, directly comparable to pjrt:bN.
-    let native_exec = NativeForestExecutor::new(enc.clone());
+    // The compiled hot path vs the reference executor, single thread per
+    // batch size — an apples-to-apples core-for-core comparison of the
+    // two serving backends.
+    let flat = Arc::new(FlatForest::compile(&enc)?);
+    println!(
+        "flat forest: {} live trees, {} nodes, quantized tables {}",
+        flat.num_live_trees(),
+        flat.num_nodes(),
+        if flat.quantized_exact() { "exact" } else { "lossy" }
+    );
+    let enc_exec = NativeForestExecutor::with_parallelism(enc.clone(), 1, 1 << 20);
+    let flat_f = FlatForestExecutor::with_parallelism(flat.clone(), 1, 1 << 20)
+        .mode(FlatMode::Float);
+    let flat_q = FlatForestExecutor::with_parallelism(flat.clone(), 1, 1 << 20)
+        .mode(FlatMode::Quantized);
+    let mut ratio_b4096 = (0.0f64, 0.0f64); // (encoded-exec mean, flat-q mean)
     for &bsz in &batch_sizes {
         let chunk: Vec<Vec<f64>> =
             rows.iter().cycle().take(bsz).cloned().collect();
-        let r = bench.run(&format!("native-batch: batch {bsz}"), || {
-            black_box(native_exec.predict(&chunk).unwrap());
+        let re = bench.run(&format!("encoded-exec 1t: batch {bsz}"), || {
+            black_box(enc_exec.predict(&chunk).unwrap());
         });
-        rep.record_throughput(&r, bsz as f64, "pred");
+        rep.record_throughput(&re, bsz as f64, "pred");
+        let rf = bench.run(&format!("flat 1t: batch {bsz}"), || {
+            black_box(flat_f.predict(&chunk).unwrap());
+        });
+        rep.record_throughput(&rf, bsz as f64, "pred");
+        let rq = bench.run(&format!("flat-q 1t: batch {bsz}"), || {
+            black_box(flat_q.predict(&chunk).unwrap());
+        });
+        rep.record_throughput(&rq, bsz as f64, "pred");
+        if bsz == 4096 {
+            ratio_b4096 = (re.mean.as_secs_f64(), rq.mean.as_secs_f64());
+        }
+    }
+    let flat_speedup = ratio_b4096.0 / ratio_b4096.1;
+    println!("  flat-q/encoded-exec speedup at b4096 (1 thread): {flat_speedup:.2}x");
+    rep.note("flat_over_encoded_exec_b4096", flat_speedup);
+
+    // Multithreaded flat: the actual per-shard serving configuration.
+    let threads = std::thread::available_parallelism().map(|t| t.get()).unwrap_or(1);
+    {
+        let chunk: Vec<Vec<f64>> = rows.iter().cycle().take(4096).cloned().collect();
+        let exec = FlatForestExecutor::with_parallelism(flat.clone(), threads, 256);
+        let r = bench.run(&format!("flat {threads}t: batch 4096"), || {
+            black_box(exec.predict(&chunk).unwrap());
+        });
+        rep.record_throughput(&r, chunk.len() as f64, "pred");
     }
 
     // Joint recommendation path: verdict + workgroup planes per row.
-    {
-        let chunk: Vec<Vec<f64>> = rows.iter().cycle().take(1024).cloned().collect();
-        let r = bench.run("native-batch: joint wg, batch 1024", || {
-            black_box(native_exec.predict_wg_logs(&chunk).unwrap());
+    // Three generations of the same answer: the original three full
+    // walks (predict + two predict_extra passes), the single-pass
+    // encoded walk, and the flat one-traversal gather of all K planes.
+    if enc.num_outputs() >= 3 {
+        let chunk: Vec<Vec<f64>> = rows.iter().cycle().take(4096).cloned().collect();
+        let r3 = bench.run("joint 3-pass: batch 4096", || {
+            for row in &chunk {
+                black_box((
+                    enc.predict(row),
+                    enc.predict_extra(row, 0),
+                    enc.predict_extra(row, 1),
+                ));
+            }
         });
-        rep.record_throughput(&r, chunk.len() as f64, "pred");
+        rep.record_throughput(&r3, chunk.len() as f64, "pred");
+        let r1 = bench.run("joint single-pass encoded: batch 4096", || {
+            for row in &chunk {
+                black_box(enc.predict_wg_logs(row));
+            }
+        });
+        rep.record_throughput(&r1, chunk.len() as f64, "pred");
+        let rf = bench.run("joint flat-q one-traversal: batch 4096", || {
+            black_box(flat_q.predict_outputs(&chunk).unwrap());
+        });
+        rep.record_throughput(&rf, chunk.len() as f64, "pred");
+        let joint_speedup = r3.mean.as_secs_f64() / rf.mean.as_secs_f64();
+        println!("  flat-q joint / 3-pass speedup at b4096: {joint_speedup:.2}x");
+        rep.note("flatq_joint_over_3pass_b4096", joint_speedup);
     }
 
     // L1/L2 via PJRT, per batch variant.

@@ -38,17 +38,25 @@ fn main() {
         .map(|n| n.get())
         .unwrap_or(1);
     println!("host threads: {threads}");
+    // LMTUNER_BENCH_SMOKE=1: one iteration over much smaller matrices —
+    // a seconds-scale CI snapshot with the same sections and JSON shape.
+    let smoke =
+        std::env::var("LMTUNER_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false);
+    if smoke {
+        println!("smoke mode: reduced sizes, indicative numbers only");
+    }
     // Few, long iterations: an exact 50k-row fit is seconds, not micros.
     let bench = Bencher {
         warmup_iters: 0,
         min_iters: 1,
-        min_time: Duration::from_millis(50),
-        max_iters: 3,
+        min_time: Duration::from_millis(if smoke { 0 } else { 50 }),
+        max_iters: if smoke { 1 } else { 3 },
     };
     let trees = 4;
     let mut rep = JsonReport::new("perf_train");
 
-    for n in [10_000usize, 50_000] {
+    let sizes: &[usize] = if smoke { &[5_000] } else { &[10_000, 50_000] };
+    for &n in sizes {
         let (x, y) = synth_matrix(n, 0xBEEF ^ n as u64);
         let cfg_for = |engine: SplitEngine| {
             let mut cfg = ForestConfig { num_trees: trees, threads, ..Default::default() };
@@ -76,7 +84,7 @@ fn main() {
 
         // Batch prediction: serial vs fanned across the host.
         let forest = forest.expect("bench ran");
-        let probes: Vec<Vec<f64>> = (0..20_000)
+        let probes: Vec<Vec<f64>> = (0..if smoke { 4_000 } else { 20_000 })
             .map(|i| (0..NUM_FEATURES).map(|f| x[f][i % n]).collect())
             .collect();
         let refs: Vec<&[f64]> = probes.iter().map(|p| p.as_slice()).collect();

@@ -222,7 +222,7 @@ pub fn run_with_progress(
                 &base.forest,
             )?,
         };
-        registry.insert(dev.key, train::encode_default(&forest));
+        registry.insert(dev.key, train::encode_default(&forest))?;
         tests.push(test_split.into_iter().cloned().collect());
     }
 

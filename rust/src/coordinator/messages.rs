@@ -18,6 +18,10 @@ pub struct PredictResponse {
     pub score: f64,
     /// The tuning decision: apply the optimization?
     pub use_local_memory: bool,
+    /// Joint (schema v2) models only: predicted (log2 wg_w, log2 wg_h)
+    /// workgroup shape, from the same traversal as `score`. `None` when
+    /// the backend serves a single-output model.
+    pub wg_logs: Option<(f64, f64)>,
     /// Size of the batch this request was served in.
     pub batch_size: usize,
     /// Queue + inference latency.

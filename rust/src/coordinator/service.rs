@@ -5,10 +5,13 @@
 //! are round-robined across N sharded worker threads, each owning a
 //! [`BatchExecutor`]. A worker drains its queue, batches up to
 //! `max_batch` rows or `max_wait`, and ships the batch to its backend —
-//! the pure-rust native executor by default, or the PJRT artifact path.
-//! Bounded queues give backpressure; a failed batch produces typed
-//! [`PredictError`] replies (never dropped channels); shutdown is an
-//! explicit control message, so live client handles cannot hang it.
+//! the flattened `runtime::fastexec` hot path by default (shards share
+//! one compiled [`FlatForest`]), or the PJRT artifact path. Joint
+//! (schema v2) models fill `PredictResponse::wg_logs` from the same
+//! single traversal as the verdict. Bounded queues give backpressure; a
+//! failed batch produces typed [`PredictError`] replies (never dropped
+//! channels); shutdown is an explicit control message, so live client
+//! handles cannot hang it.
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
@@ -20,7 +23,8 @@ use anyhow::{anyhow, Result};
 
 use crate::kernelmodel::features::NUM_FEATURES;
 use crate::ml::export::EncodedForest;
-use crate::runtime::executor::{BatchExecutor, ForestRegistry, NativeForestExecutor};
+use crate::runtime::executor::{BatchExecutor, ForestRegistry};
+use crate::runtime::fastexec::{FlatForest, FlatForestExecutor};
 use crate::runtime::forest_exec::ForestExecutor;
 use crate::runtime::pjrt::Engine;
 
@@ -156,19 +160,21 @@ pub struct Service {
 }
 
 impl Service {
-    /// Start with the artifact-free native backend: one
-    /// [`NativeForestExecutor`] per shard, no PJRT required.
+    /// Start with the artifact-free default backend: the forest is
+    /// compiled once into the flat hot-path layout and every shard gets
+    /// a [`FlatForestExecutor`] sharing those tables. A corrupt encoding
+    /// fails here, before any worker spawns.
     pub fn start_native(forest: EncodedForest, cfg: ServiceConfig) -> Result<Service> {
         let shards = cfg.workers.max(1);
-        let shared = Arc::new(forest);
+        let flat = Arc::new(FlatForest::compile(&forest)?);
         // Split the host's cores across shards so concurrent batches
         // don't oversubscribe (each shard batches independently).
         let host = std::thread::available_parallelism()
             .map(|n| n.get())
             .unwrap_or(1);
         let per_shard = (host / shards).max(1);
-        let execs: Vec<NativeForestExecutor> = (0..shards)
-            .map(|_| NativeForestExecutor::from_shared(shared.clone()).threads(per_shard))
+        let execs: Vec<FlatForestExecutor> = (0..shards)
+            .map(|_| FlatForestExecutor::from_shared(flat.clone()).threads(per_shard))
             .collect();
         Self::start_sharded(execs, cfg)
     }
@@ -323,9 +329,9 @@ impl RouterHandle {
 }
 
 impl DeviceRouter {
-    /// Start one native-backend [`Service`] per registry entry. Each
-    /// device's shards share that device's forest tables; `cfg.workers`
-    /// applies per device.
+    /// Start one flat-backend [`Service`] per registry entry. Each
+    /// device's shards share that device's compiled tables;
+    /// `cfg.workers` applies per device.
     pub fn start_native(registry: &ForestRegistry, cfg: ServiceConfig) -> Result<DeviceRouter> {
         anyhow::ensure!(!registry.is_empty(), "empty model registry");
         let shards = cfg.workers.max(1);
@@ -338,7 +344,7 @@ impl DeviceRouter {
         let mut services = Vec::with_capacity(registry.len());
         let mut handles = std::collections::BTreeMap::new();
         for device in registry.devices() {
-            let execs: Vec<NativeForestExecutor> = (0..shards)
+            let execs: Vec<FlatForestExecutor> = (0..shards)
                 .map(|_| {
                     registry
                         .executor_for(device)
@@ -443,15 +449,32 @@ fn serve_batch<E: BatchExecutor>(
     batch: &mut Vec<Pending>,
     stats: &mut ServiceStats,
 ) {
+    // Propagate a failure to every waiting client as a typed error
+    // response instead of dropping their reply channels.
+    fn fail_batch(batch: &mut Vec<Pending>, stats: &mut ServiceStats, reason: String) {
+        stats.rejected += batch.len() as u64;
+        for p in batch.drain(..) {
+            let _ = p.reply.send(Err(PredictError {
+                id: p.req.id,
+                reason: reason.clone(),
+            }));
+        }
+    }
+
     let rows: Vec<Vec<f64>> = batch.iter().map(|p| p.req.features.to_vec()).collect();
-    match exec.predict(&rows) {
-        Ok(preds) => {
+    // One traversal fills every output plane: the verdict score and, for
+    // joint (schema v2) models, the workgroup-shape logs.
+    let k = exec.num_outputs().max(1);
+    match exec.predict_outputs(&rows) {
+        Ok(outs) if outs.len() == rows.len() * k => {
             let bsize = batch.len();
-            for (p, score) in batch.drain(..).zip(preds) {
+            for (i, p) in batch.drain(..).enumerate() {
+                let score = outs[i * k];
                 let resp = PredictResponse {
                     id: p.req.id,
                     score,
                     use_local_memory: score > 0.0,
+                    wg_logs: (k >= 3).then(|| (outs[i * k + 1], outs[i * k + 2])),
                     batch_size: bsize,
                     latency: p.enqueued.elapsed(),
                 };
@@ -460,18 +483,17 @@ fn serve_batch<E: BatchExecutor>(
             }
             stats.batches += 1;
         }
-        Err(err) => {
-            // Propagate the failure to every waiting client as a typed
-            // error response instead of dropping their reply channels.
-            let reason = format!("{err:#}");
-            stats.rejected += batch.len() as u64;
-            for p in batch.drain(..) {
-                let _ = p.reply.send(Err(PredictError {
-                    id: p.req.id,
-                    reason: reason.clone(),
-                }));
-            }
-        }
+        Ok(outs) => fail_batch(
+            batch,
+            stats,
+            format!(
+                "backend '{}' returned {} outputs for {} rows x {k} planes",
+                exec.backend(),
+                outs.len(),
+                rows.len()
+            ),
+        ),
+        Err(err) => fail_batch(batch, stats, format!("{err:#}")),
     }
 }
 
@@ -660,8 +682,8 @@ mod tests {
         let enc_a = toy_encoded(21);
         let enc_b = toy_encoded(23);
         let mut reg = ForestRegistry::new();
-        reg.insert("m2090", enc_a.clone());
-        reg.insert("k20", enc_b.clone());
+        reg.insert("m2090", enc_a.clone()).unwrap();
+        reg.insert("k20", enc_b.clone()).unwrap();
         let router = DeviceRouter::start_native(
             &reg,
             ServiceConfig {
@@ -701,7 +723,7 @@ mod tests {
     #[test]
     fn device_router_async_submit_and_shutdown() {
         let mut reg = ForestRegistry::new();
-        reg.insert("gtx480", toy_encoded(29));
+        reg.insert("gtx480", toy_encoded(29)).unwrap();
         let router =
             DeviceRouter::start_native(&reg, ServiceConfig::default()).unwrap();
         let h = router.handle();

@@ -28,7 +28,8 @@ use lmtuner::gpu::registry;
 use lmtuner::gpu::spec::DeviceSpec;
 use lmtuner::kernelmodel::features::{self, FEATURE_NAMES, NUM_FEATURES};
 use lmtuner::kernelmodel::launch::{GridGeom, Launch, WgGeom};
-use lmtuner::runtime::executor::{BatchExecutor, NativeForestExecutor};
+use lmtuner::runtime::executor::BatchExecutor;
+use lmtuner::runtime::fastexec::FlatForestExecutor;
 use lmtuner::ml::{io as model_io, metrics, select};
 use lmtuner::report::{figures, tables};
 use lmtuner::runtime::pjrt::Engine;
@@ -566,7 +567,11 @@ fn cmd_eval(args: &mut Args) -> Result<()> {
             ),
         )?;
         let refs: Vec<&SpeedupRecord> = records.iter().map(|r| &r.base).collect();
-        let acc = metrics::evaluate_model(&refs, |x| forest.decide(x));
+        // Grade through the serving hot path (the flat executor), so
+        // eval measures exactly what `serve`/`analyze` ship.
+        let exec = FlatForestExecutor::new(&train::encode_default(&forest))?;
+        let flat = exec.flat().clone();
+        let acc = metrics::evaluate_model(&refs, |x| flat.decide_row(x));
         println!(
             "{}: count {:.1}%  penalty-weighted {:.1}%  (min {:.2}, n {})",
             p.display(),
@@ -577,11 +582,21 @@ fn cmd_eval(args: &mut Args) -> Result<()> {
         );
         warn_skipped(acc.skipped);
         if tag.schema == Schema::V2 {
+            // One batched traversal yields the verdict and both
+            // workgroup planes for every record.
+            let rows: Vec<Vec<f64>> =
+                records.iter().map(|r| r.base.features.to_vec()).collect();
+            let k = exec.num_outputs();
+            let outs = exec.predict_outputs(&rows)?;
             let mut jacc = metrics::JointAccumulator::new();
-            for r in &records {
-                let x = &r.base.features[..];
-                let wg = forest.predict_wg_logs(x).unwrap_or((0.0, 0.0));
-                jacc.push(r.base.speedup, forest.decide(x), r.best_wg, wg);
+            for (i, r) in records.iter().enumerate() {
+                let score = outs[i * k];
+                let wg = if k >= 3 {
+                    (outs[i * k + 1], outs[i * k + 2])
+                } else {
+                    (0.0, 0.0)
+                };
+                jacc.push(r.base.speedup, score > 0.0, r.best_wg, wg);
             }
             let j = jacc.finish();
             println!(
@@ -699,7 +714,7 @@ fn cmd_analyze(args: &mut Args) -> Result<()> {
     }
     if let Some(model_path) = model {
         let forest = model_io::load(Path::new(&model_path))?;
-        let exec = NativeForestExecutor::new(train::encode_default(&forest));
+        let exec = FlatForestExecutor::new(&train::encode_default(&forest))?;
         let score = exec.predict(&[feats.to_vec()])?[0];
         println!(
             "verdict ({model_path}): log2(speedup) = {score:+.3} ({:.2}x) -> {}",

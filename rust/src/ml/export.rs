@@ -95,7 +95,9 @@ impl EncodedForest {
     }
 
     /// Predicted extra output `k` (0-based among the extras), same
-    /// traversal and padded-tree scale correction as `predict`.
+    /// traversal and padded-tree scale correction as `predict`. This is
+    /// the historical per-plane path; [`Self::predict_outputs`] reads
+    /// every plane from one shared traversal instead.
     pub fn predict_extra(&self, features: &[f64], k: usize) -> f64 {
         let plane = &self.extra[k];
         let mut total = 0.0;
@@ -105,17 +107,45 @@ impl EncodedForest {
         total / self.contract.num_trees as f64
     }
 
+    /// All `num_outputs()` predictions from a single traversal: each
+    /// tree's leaf index is computed once and every output plane is read
+    /// at it. Per-plane sums run in the same tree order as `predict` /
+    /// `predict_extra`, so the results are bit-identical to the
+    /// per-plane walks — just without re-traversing per output.
+    pub fn predict_outputs(&self, features: &[f64]) -> Vec<f64> {
+        let k = self.num_outputs();
+        let mut totals = vec![0.0f64; k];
+        for t in 0..self.contract.num_trees {
+            let li = self.tree_leaf_index(t, features);
+            totals[0] += self.leaf[li] as f64;
+            for (j, plane) in self.extra.iter().enumerate() {
+                totals[1 + j] += plane[li] as f64;
+            }
+        }
+        let trees = self.contract.num_trees as f64;
+        for v in totals.iter_mut() {
+            *v /= trees;
+        }
+        totals
+    }
+
     /// Joint forests: predicted (log2 wg_w, log2 wg_h); `None` when the
-    /// encoding carries no workgroup outputs.
+    /// encoding carries no workgroup outputs. Single traversal shared
+    /// with the verdict plane (see `predict_outputs`).
     pub fn predict_wg_logs(&self, features: &[f64]) -> Option<(f64, f64)> {
         if self.num_outputs() < 3 {
             return None;
         }
-        Some((self.predict_extra(features, 0), self.predict_extra(features, 1)))
+        let out = self.predict_outputs(features);
+        Some((out[1], out[2]))
     }
 
     /// Validity: children in range, leaves self-loop, reachable depth
-    /// bounded by the contract.
+    /// bounded by the contract, feature indices within
+    /// `contract.num_features`, thresholds finite. A corrupt model that
+    /// slips past `ml::io::load` (e.g. a feature index beyond the
+    /// contract) must fail here with a typed message, not panic or
+    /// mispredict at traversal time.
     pub fn validate(&self) -> Result<(), String> {
         let n = self.contract.max_nodes;
         for (k, plane) in self.extra.iter().enumerate() {
@@ -133,6 +163,20 @@ impl EncodedForest {
                 let (l, r) = (self.left[base + i], self.right[base + i]);
                 if l < 0 || r < 0 || l as usize >= n || r as usize >= n {
                     return Err(format!("tree {t} node {i}: child out of range"));
+                }
+                let f = self.feat_idx[base + i];
+                if f < 0 || f as usize >= self.contract.num_features {
+                    return Err(format!(
+                        "tree {t} node {i}: feature index {f} out of range \
+                         (contract has {} features)",
+                        self.contract.num_features
+                    ));
+                }
+                let th = self.thresh[base + i];
+                if !th.is_finite() {
+                    return Err(format!(
+                        "tree {t} node {i}: non-finite threshold {th}"
+                    ));
                 }
             }
             // walk from root: depth of every reachable leaf <= max_depth
@@ -394,6 +438,70 @@ mod tests {
         let senc = encode(&single, ExportContract::default());
         assert_eq!(senc.num_outputs(), 1);
         assert!(senc.predict_wg_logs(&rows[0]).is_none());
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_features_and_non_finite_thresholds() {
+        let (f, _) = toy_forest(5);
+        let contract = ExportContract {
+            num_trees: 5,
+            max_nodes: 8192,
+            max_depth: 64,
+            ..Default::default()
+        };
+        let enc = encode(&f, contract);
+        enc.validate().unwrap();
+
+        // Feature index beyond the contract: previously validated clean
+        // and panicked at predict time (features[fi] out of bounds).
+        let mut bad = enc.clone();
+        let split = (0..bad.left.len())
+            .find(|&i| bad.left[i] as usize != i)
+            .expect("toy forest has at least one split");
+        bad.feat_idx[split] = contract.num_features as i32;
+        let err = bad.validate().unwrap_err();
+        assert!(err.contains("feature index"), "{err}");
+        let mut neg = enc.clone();
+        neg.feat_idx[split] = -1;
+        assert!(neg.validate().unwrap_err().contains("feature index"));
+
+        // Non-finite threshold: NaN compares false everywhere, silently
+        // routing every row right; reject it instead.
+        for bad_thresh in [f32::NAN, f32::INFINITY, f32::NEG_INFINITY] {
+            let mut bad = enc.clone();
+            bad.thresh[split] = bad_thresh;
+            let err = bad.validate().unwrap_err();
+            assert!(err.contains("non-finite threshold"), "{err}");
+        }
+    }
+
+    #[test]
+    fn single_pass_wg_logs_pins_to_the_per_plane_walks() {
+        // The shared-traversal `predict_wg_logs` must reproduce the old
+        // three-pass results (predict + 2x predict_extra) bit-for-bit:
+        // same leaves, same per-plane summation order.
+        let (f, rows) = toy_joint_forest(5);
+        for contract in [
+            ExportContract { num_trees: 8, max_nodes: 8192, max_depth: 64, ..Default::default() },
+            ExportContract { num_trees: 5, max_nodes: 16, max_depth: 3, ..Default::default() },
+        ] {
+            let enc = encode(&f, contract);
+            for r in rows.iter().take(100) {
+                let (w, h) = enc.predict_wg_logs(r).unwrap();
+                assert_eq!(w, enc.predict_extra(r, 0), "plane 0 diverged");
+                assert_eq!(h, enc.predict_extra(r, 1), "plane 1 diverged");
+                let out = enc.predict_outputs(r);
+                assert_eq!(out.len(), 3);
+                assert_eq!(out[0], enc.predict(r), "primary plane diverged");
+                assert_eq!((out[1], out[2]), (w, h));
+            }
+        }
+        // Single-output forests: predict_outputs is just [predict].
+        let (single, srows) = toy_forest(5);
+        let enc = encode(&single, ExportContract::default());
+        for r in srows.iter().take(20) {
+            assert_eq!(enc.predict_outputs(r), vec![enc.predict(r)]);
+        }
     }
 
     #[test]

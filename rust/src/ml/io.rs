@@ -192,6 +192,13 @@ pub fn load(path: &Path) -> Result<Forest> {
                 Some("S") => {
                     let feature: usize = it.next().context("S feature")?.parse()?;
                     let threshold: f64 = it.next().context("S thr")?.parse()?;
+                    // f64::parse happily accepts "NaN"/"inf", but a
+                    // non-finite threshold can never come from training
+                    // and would poison routing (NaN compares false, so
+                    // every row silently goes right).
+                    if !threshold.is_finite() {
+                        bail!("non-finite split threshold {threshold} in {line:?}");
+                    }
                     let left: usize = it.next().context("S left")?.parse()?;
                     let right: usize = it.next().context("S right")?.parse()?;
                     let mean: f64 = it.next().context("S mean")?.parse()?;
@@ -456,6 +463,43 @@ mod tests {
         assert_eq!(m.expected, 3);
         assert!(format!("{m}").contains("arity mismatch"), "{m}");
         assert!(ensure_output_arity(&joint, 1, "test").is_err());
+    }
+
+    #[test]
+    fn hand_corrupted_model_files_cannot_reach_the_executors() {
+        let path = tmp("corrupt");
+        // Non-finite thresholds parse fine as f64 ("NaN"/"inf") but are
+        // rejected at load with a pointed error.
+        for bad in ["NaN", "inf", "-inf"] {
+            std::fs::write(
+                &path,
+                format!(
+                    "lmtuner-forest v1 trees=1\ntree 0 nodes=3\n\
+                     S 0 {bad} 1 2 0.0\nL -1.0\nL 1.0\n"
+                ),
+            )
+            .unwrap();
+            let err = load(&path).unwrap_err();
+            assert!(format!("{err:#}").contains("non-finite"), "{bad}: {err:#}");
+        }
+        // An out-of-range feature index is structurally fine per tree
+        // (the text format does not know the contract width), so it
+        // loads — but the hardened encoded-forest validation rejects it
+        // before any executor is built on top.
+        std::fs::write(
+            &path,
+            "lmtuner-forest v1 trees=1\ntree 0 nodes=3\n\
+             S 99 0.5 1 2 0.0\nL -1.0\nL 1.0\n",
+        )
+        .unwrap();
+        let g = load(&path).unwrap();
+        let enc = crate::ml::export::encode(
+            &g,
+            crate::ml::export::ExportContract::default(),
+        );
+        let err = enc.validate().unwrap_err();
+        assert!(err.contains("feature index"), "{err}");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -1,17 +1,24 @@
 //! Backend-agnostic batched forest inference.
 //!
 //! [`BatchExecutor`] is the contract the prediction service batches
-//! against; it has two implementations:
+//! against; it has three implementations:
 //!
-//!   * [`NativeForestExecutor`] (here) — traverses the tensor-encoded
-//!     forest (`ml::export` layout) in pure rust, with chunked
-//!     parallelism over `util::pool::parallel_map` and row-major batch
-//!     iteration. Always available: no artifacts, no FFI.
+//!   * `runtime::fastexec::FlatForestExecutor` — the default serving
+//!     backend: the forest compiled once into a compacted SoA layout
+//!     with a quantized (u8-compare) fast path. See `runtime::fastexec`
+//!     for the layout and the exactness contract.
+//!   * [`NativeForestExecutor`] (here) — the reference implementation:
+//!     traverses the tensor-encoded forest (`ml::export` layout)
+//!     node-by-node in pure rust, with chunked parallelism over
+//!     `util::pool::parallel_map` and row-major batch iteration.
+//!     Always available: no artifacts, no FFI.
 //!   * `runtime::forest_exec::ForestExecutor` — routes batches to the
 //!     AOT-compiled PJRT executables when artifacts exist.
 //!
-//! Both must agree with `EncodedForest::predict` row-for-row; the
-//! serving tests check the native path to 1e-6 over 10k-row batches.
+//! All must agree with `EncodedForest::predict` row-for-row; the
+//! serving tests check the native path to 1e-6 over 10k-row batches and
+//! the differential suite (`rust/tests/infexec.rs`) pins the flat paths
+//! to the reference.
 
 use std::sync::Arc;
 
@@ -19,6 +26,8 @@ use anyhow::{anyhow, Result};
 
 use crate::ml::export::EncodedForest;
 use crate::util::pool::parallel_map;
+
+use super::fastexec::{FlatForest, FlatForestExecutor};
 
 /// A batched `features -> log2(speedup)` backend the service can drive.
 pub trait BatchExecutor: Send {
@@ -37,6 +46,22 @@ pub trait BatchExecutor: Send {
     /// The auto-tuning decisions for a batch.
     fn decide(&self, rows: &[Vec<f64>]) -> Result<Vec<bool>> {
         Ok(self.predict(rows)?.into_iter().map(|p| p > 0.0).collect())
+    }
+
+    /// Outputs per prediction row (1 = verdict only, 3 = joint verdict
+    /// + workgroup shape). Backends without joint planes keep the
+    /// default.
+    fn num_outputs(&self) -> usize {
+        1
+    }
+
+    /// All `num_outputs()` predictions per row, row-major
+    /// (`rows.len() * num_outputs()` values). The default covers
+    /// single-output backends by delegating to [`Self::predict`];
+    /// joint-capable backends override it so every plane comes from one
+    /// traversal.
+    fn predict_outputs(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+        self.predict(rows)
     }
 }
 
@@ -135,14 +160,20 @@ impl NativeForestExecutor {
     }
 }
 
-/// Per-device registry of encoded forests: one serving process holds a
-/// model per simulated device and builds executors that share the
-/// underlying tensor tables (`Arc`), so routing a batch by device never
-/// copies a forest. Keys are `gpu::registry` device slugs; iteration
-/// order is sorted (BTreeMap), so shard layouts are deterministic.
+/// Per-device registry of models: one serving process holds a model per
+/// simulated device, each stored both tensor-encoded (the reference
+/// layout) and flat-compiled (the hot-path tables), and builds executors
+/// that share them via `Arc`, so routing a batch by device never copies
+/// a forest. Keys are `gpu::registry` device slugs; iteration order is
+/// sorted (BTreeMap), so shard layouts are deterministic.
 #[derive(Default)]
 pub struct ForestRegistry {
-    map: std::collections::BTreeMap<String, Arc<EncodedForest>>,
+    map: std::collections::BTreeMap<String, RegistryEntry>,
+}
+
+struct RegistryEntry {
+    enc: Arc<EncodedForest>,
+    flat: Arc<FlatForest>,
 }
 
 impl ForestRegistry {
@@ -150,21 +181,46 @@ impl ForestRegistry {
         Self::default()
     }
 
-    /// Register (or replace) the model serving `device`.
-    pub fn insert(&mut self, device: impl Into<String>, forest: EncodedForest) {
-        self.map.insert(device.into(), Arc::new(forest));
+    /// Register (or replace) the model serving `device`, compiling the
+    /// flat hot-path tables up front — a corrupt encoding is rejected
+    /// here, at load time, instead of at serve time.
+    pub fn insert(
+        &mut self,
+        device: impl Into<String>,
+        forest: EncodedForest,
+    ) -> Result<()> {
+        let flat = Arc::new(FlatForest::compile(&forest)?);
+        self.map.insert(
+            device.into(),
+            RegistryEntry { enc: Arc::new(forest), flat },
+        );
+        Ok(())
     }
 
     pub fn get(&self, device: &str) -> Option<&Arc<EncodedForest>> {
-        self.map.get(device)
+        self.map.get(device).map(|e| &e.enc)
     }
 
-    /// Build a native executor over `device`'s model, sharing the
-    /// forest tables with every other executor built from this entry.
-    pub fn executor_for(&self, device: &str) -> Option<NativeForestExecutor> {
+    /// The compiled hot-path tables serving `device`.
+    pub fn flat(&self, device: &str) -> Option<&Arc<FlatForest>> {
+        self.map.get(device).map(|e| &e.flat)
+    }
+
+    /// Build the default (flat) executor over `device`'s model, sharing
+    /// the compiled tables with every other executor built from this
+    /// entry.
+    pub fn executor_for(&self, device: &str) -> Option<FlatForestExecutor> {
         self.map
             .get(device)
-            .map(|f| NativeForestExecutor::from_shared(f.clone()))
+            .map(|e| FlatForestExecutor::from_shared(e.flat.clone()))
+    }
+
+    /// The reference (tensor-walking) executor over `device`'s model,
+    /// kept for differential checks against the flat hot path.
+    pub fn reference_executor_for(&self, device: &str) -> Option<NativeForestExecutor> {
+        self.map
+            .get(device)
+            .map(|e| NativeForestExecutor::from_shared(e.enc.clone()))
     }
 
     /// Registered device keys, sorted.
@@ -210,6 +266,36 @@ impl BatchExecutor for NativeForestExecutor {
             chunk
                 .iter()
                 .map(|r| self.forest.predict(r))
+                .collect::<Vec<f64>>()
+        });
+        Ok(nested.into_iter().flatten().collect())
+    }
+
+    fn num_outputs(&self) -> usize {
+        self.forest.num_outputs()
+    }
+
+    fn predict_outputs(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+        let nf = self.forest.contract.num_features;
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != nf {
+                return Err(anyhow!(
+                    "row {i}: feature vector has {} dims, expected {nf}",
+                    r.len()
+                ));
+            }
+        }
+        if self.threads <= 1 || rows.len() < 2 * self.chunk_rows {
+            return Ok(rows
+                .iter()
+                .flat_map(|r| self.forest.predict_outputs(r))
+                .collect());
+        }
+        let chunks: Vec<&[Vec<f64>]> = rows.chunks(self.chunk_rows).collect();
+        let nested = parallel_map(&chunks, self.threads, |chunk| {
+            chunk
+                .iter()
+                .flat_map(|r| self.forest.predict_outputs(r))
                 .collect::<Vec<f64>>()
         });
         Ok(nested.into_iter().flatten().collect())
@@ -281,8 +367,8 @@ mod tests {
         let enc_a = toy_encoded(31);
         let enc_b = toy_encoded(37);
         let mut reg = ForestRegistry::new();
-        reg.insert("m2090", enc_a.clone());
-        reg.insert("k20", enc_b.clone());
+        reg.insert("m2090", enc_a.clone()).unwrap();
+        reg.insert("k20", enc_b.clone()).unwrap();
         assert_eq!(reg.devices(), vec!["k20", "m2090"]); // sorted
         assert_eq!(reg.len(), 2);
 
@@ -300,12 +386,20 @@ mod tests {
         );
         // unknown device -> None, not a panic
         assert!(reg.executor_for("gtx9000").is_none());
-        // executors share one copy of each forest
+        // flat executors share one copy of the compiled tables...
         let again = reg.executor_for("m2090").unwrap();
-        assert!(Arc::ptr_eq(
-            &again.forest,
-            reg.get("m2090").unwrap()
-        ));
+        assert!(Arc::ptr_eq(again.flat(), reg.flat("m2090").unwrap()));
+        // ...and the reference executor shares the encoded tables
+        let refr = reg.reference_executor_for("m2090").unwrap();
+        assert!(Arc::ptr_eq(&refr.forest, reg.get("m2090").unwrap()));
+        // a corrupt encoding is rejected at insert time
+        let mut bad = enc_a.clone();
+        let split = (0..bad.left.len())
+            .find(|&i| bad.left[i] as usize != i % bad.contract.max_nodes)
+            .unwrap();
+        bad.feat_idx[split] = -7;
+        assert!(reg.insert("broken", bad).is_err());
+        assert_eq!(reg.len(), 2);
     }
 
     #[test]

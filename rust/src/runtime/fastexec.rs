@@ -1,0 +1,676 @@
+//! QuickScorer-style flattened forest inference — the serving hot path.
+//!
+//! [`FlatForest`] is compiled once from the tensor-encoded forest
+//! (`ml::export::EncodedForest`) into a cache-friendly SoA layout:
+//!
+//!   * the padded `[T, max_nodes]` self-looping node tables are
+//!     **compacted to live nodes** (reachable from each root), so the
+//!     whole forest sits in a few contiguous arrays of `u16`/`u32`/`f32`
+//!     instead of megabytes of mostly-padding tensors;
+//!   * padded all-zero trees are dropped entirely (they contribute
+//!     exactly 0.0 to every output sum — the `num_trees` divisor keeps
+//!     the padded-tree scale correction intact);
+//!   * all K output planes are stored **leaf-major with stride K**
+//!     (`leaf[node*K + k]`), so one traversal gathers the verdict AND
+//!     the workgroup planes of a joint (schema v2) model;
+//!   * traversal is branchless (`kids[n][go_right as usize]`) and walks
+//!     a fixed per-tree depth — leaves self-loop, so over-walking is
+//!     exact — with trees processed in lockstep groups of four so the
+//!     data-dependent loads of independent walks pipeline;
+//!   * the batch loops iterate rows over contiguous per-row feature
+//!     blocks (each row is converted/binned once into a flat scratch
+//!     buffer), which keeps the prologue autovectorizable and the walk
+//!     loop free of `f64 -> f32` conversions.
+//!
+//! # The quantized path and its exactness contract
+//!
+//! The QuickScorer / histogram-GBM trick: reuse `ml::binning`'s ≤256-cut
+//! machinery to turn every node comparison into a `u8` compare. Per
+//! feature, the distinct (f32) split thresholds of the forest form a cut
+//! table ([`crate::ml::binning::FeatureBins`]); a row is binned once per
+//! feature (`code_of`, NaN → last bin) and each split stores the bin
+//! index of its threshold, so `x_f32 <= thresh` becomes
+//! `code[feat] <= qthresh[node]` (the `FeatureBins` invariant
+//! `code(x) <= b  iff  x <= cuts[b]`).
+//!
+//! * **Bit-equivalent** to the float path whenever every threshold is
+//!   representable in its feature's cut table — i.e. each feature has at
+//!   most 255 distinct thresholds ([`FlatForest::quantized_exact`]).
+//!   Forests trained with the default binned split engine satisfy this
+//!   by construction: their candidate thresholds are drawn from ≤256
+//!   quantile bins per feature. Equivalence covers NaN (right, like the
+//!   reference's `NaN <= t == false`) and ±inf rows.
+//! * **Decision-equivalent otherwise**: a feature with more than 255
+//!   distinct thresholds gets a quantile-reduced table
+//!   (`FeatureBins::from_column` over the threshold set) and each
+//!   threshold snaps to the nearest representable cut at or below it.
+//!   Rows route identically unless a feature value falls between a
+//!   snapped cut and its true threshold; every row still routes
+//!   deterministically to a real leaf and never panics. Because of that
+//!   residual drift, [`FlatMode::Auto`] (the executor default) only
+//!   takes the quantized path when the tables are exact.
+//!
+//! The float path replicates the reference traversal semantics exactly:
+//! features are rounded `f64 -> f32` before the `<=` compare (NaN routes
+//! right), per-plane sums accumulate in tree order as `f64`, and the
+//! final division is by the contract's `num_trees`.
+//!
+//! [`FlatForestExecutor`] wraps the compiled forest behind the
+//! [`BatchExecutor`] trait (chunked `parallel_map` parallelism, typed
+//! errors on malformed batches) and is the default serving backend; the
+//! original [`super::executor::NativeForestExecutor`] remains as the
+//! reference implementation the differential suite
+//! (`rust/tests/infexec.rs`) checks against.
+
+use std::sync::Arc;
+
+use anyhow::{anyhow, Result};
+
+use crate::ml::binning::{FeatureBins, MAX_BINS};
+use crate::ml::export::EncodedForest;
+use crate::util::pool::parallel_map;
+
+use super::executor::BatchExecutor;
+
+/// Cut-table capacity per feature: codes must fit a `u8` with the NaN
+/// bin (`code == cuts.len()`) still representable, so at most 255 cuts.
+const MAX_QUANT_CUTS: usize = 255;
+
+/// Trees walked in lockstep per group (hides node-load latency).
+const TREE_GROUP: usize = 4;
+
+/// Which traversal kernel [`FlatForestExecutor`] runs.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FlatMode {
+    /// Quantized when the cut tables are exact, float otherwise. The
+    /// default: never trades accuracy for speed.
+    Auto,
+    /// Always the f32-compare path (bit-equal to the reference).
+    Float,
+    /// Always the u8-compare path — approximate when
+    /// [`FlatForest::quantized_exact`] is false.
+    Quantized,
+}
+
+/// One tree of the compacted forest: its root node and the fixed walk
+/// depth (max leaf depth; self-looping leaves make over-walking exact).
+#[derive(Clone, Copy, Debug)]
+struct FlatTree {
+    root: u32,
+    depth: u32,
+}
+
+/// The compiled forest: compacted SoA node tables + quantization tables.
+/// Build once with [`FlatForest::compile`], share via `Arc` across
+/// service shards.
+#[derive(Clone, Debug)]
+pub struct FlatForest {
+    num_features: usize,
+    /// Outputs per prediction (1 + extra planes).
+    num_outputs: usize,
+    /// The contract's tree count — the mean's divisor, which may exceed
+    /// `trees.len()` when padded zero trees were dropped.
+    num_trees: usize,
+    trees: Vec<FlatTree>,
+    /// Per-node split feature (leaves: 0, never routing anywhere).
+    feat: Vec<u16>,
+    /// Per-node split threshold, f32 exactly as encoded.
+    thresh: Vec<f32>,
+    /// Per-node `[left, right]`; leaves self-loop.
+    kids: Vec<[u32; 2]>,
+    /// Leaf-major output planes, stride `num_outputs`; split nodes 0.
+    leaf: Vec<f32>,
+    /// Per-feature cut tables for the quantized path.
+    bins: Vec<FeatureBins>,
+    /// Per-node threshold bin index (`x <= thresh  iff  code <= qthresh`
+    /// when the table is exact).
+    qthresh: Vec<u8>,
+    /// True iff every threshold is representable in its cut table.
+    quant_exact: bool,
+}
+
+impl FlatForest {
+    /// Compile the encoded forest. Validates the encoding first, so a
+    /// corrupt model (out-of-range feature index, non-finite threshold,
+    /// malformed children) is a typed error here instead of a panic or
+    /// a misprediction on the hot path.
+    pub fn compile(enc: &EncodedForest) -> Result<FlatForest> {
+        enc.validate().map_err(|e| anyhow!("invalid encoded forest: {e}"))?;
+        let contract = enc.contract;
+        anyhow::ensure!(
+            contract.num_features > 0 && contract.num_features <= u16::MAX as usize,
+            "contract num_features {} not in 1..={}",
+            contract.num_features,
+            u16::MAX
+        );
+        let n = contract.max_nodes;
+        let k = 1 + enc.extra.len();
+
+        let mut flat = FlatForest {
+            num_features: contract.num_features,
+            num_outputs: k,
+            num_trees: contract.num_trees,
+            trees: Vec::new(),
+            feat: Vec::new(),
+            thresh: Vec::new(),
+            kids: Vec::new(),
+            leaf: Vec::new(),
+            bins: Vec::new(),
+            qthresh: Vec::new(),
+            quant_exact: true,
+        };
+
+        // Compact each tree: DFS from the root, keeping only reachable
+        // nodes. `validate` bounded every reachable path by max_depth,
+        // so the walk terminates.
+        let mut slot = vec![u32::MAX; n]; // encoded index -> flat index, per tree
+        for t in 0..contract.num_trees {
+            let base = t * n;
+            // Padded (or genuinely zero) single-leaf trees contribute
+            // exactly 0.0 to every output sum: drop them. The divisor
+            // stays `contract.num_trees`, preserving the scale
+            // correction baked into the remaining leaves.
+            let root_is_leaf =
+                enc.left[base] as usize == 0 && enc.right[base] as usize == 0;
+            if root_is_leaf {
+                let all_zero = enc.leaf[base] == 0.0
+                    && enc.extra.iter().all(|p| p[base] == 0.0);
+                if all_zero {
+                    continue;
+                }
+            }
+            for s in slot.iter_mut() {
+                *s = u32::MAX;
+            }
+            let root = flat.kids.len() as u32;
+            let mut depth = 0u32;
+            // (encoded index, depth); allocate flat slots in DFS order.
+            let mut stack = vec![(0usize, 0u32)];
+            slot[0] = root;
+            flat.push_node(enc, base, 0, k);
+            while let Some((i, d)) = stack.pop() {
+                depth = depth.max(d);
+                let (l, r) = (enc.left[base + i] as usize, enc.right[base + i] as usize);
+                if l == i && r == i {
+                    continue; // leaf (already pushed, self-loops below)
+                }
+                for &c in &[l, r] {
+                    if slot[c] == u32::MAX {
+                        slot[c] = flat.kids.len() as u32;
+                        flat.push_node(enc, base, c, k);
+                        stack.push((c, d + 1));
+                    }
+                }
+                let fi = slot[i] as usize;
+                flat.kids[fi] = [slot[l], slot[r]];
+            }
+            flat.trees.push(FlatTree { root, depth });
+        }
+        anyhow::ensure!(
+            flat.kids.len() <= u32::MAX as usize,
+            "forest too large for u32 node indices"
+        );
+
+        flat.build_quant_tables();
+        Ok(flat)
+    }
+
+    /// Append one node with self-looping children (splits get their real
+    /// children patched in by the caller).
+    fn push_node(&mut self, enc: &EncodedForest, base: usize, i: usize, k: usize) {
+        let id = self.kids.len() as u32;
+        let is_leaf = enc.left[base + i] as usize == i && enc.right[base + i] as usize == i;
+        // Leaves keep feat 0 / thresh 0.0: the fixed-depth walk still
+        // "compares" at them, but both children are the node itself.
+        self.feat.push(if is_leaf { 0 } else { enc.feat_idx[base + i] as u16 });
+        self.thresh.push(if is_leaf { 0.0 } else { enc.thresh[base + i] });
+        self.kids.push([id, id]);
+        self.leaf.push(if is_leaf { enc.leaf[base + i] } else { 0.0 });
+        for plane in &enc.extra {
+            self.leaf.push(if is_leaf { plane[base + i] } else { 0.0 });
+        }
+        debug_assert_eq!(self.leaf.len(), (id as usize + 1) * k);
+    }
+
+    /// Per-feature cut tables from the forest's own thresholds: exact
+    /// (the distinct f32 thresholds, as f64) when they fit 255 cuts,
+    /// quantile-reduced via `ml::binning` otherwise.
+    fn build_quant_tables(&mut self) {
+        let mut per_feat: Vec<Vec<f64>> = vec![Vec::new(); self.num_features];
+        for i in 0..self.kids.len() {
+            if self.kids[i][0] as usize != i {
+                per_feat[self.feat[i] as usize].push(self.thresh[i] as f64);
+            }
+        }
+        self.quant_exact = true;
+        let mut exact_feat = vec![true; self.num_features];
+        self.bins = per_feat
+            .iter()
+            .enumerate()
+            .map(|(f, vals)| {
+                let mut distinct = vals.clone();
+                distinct.sort_unstable_by(f64::total_cmp);
+                distinct.dedup();
+                if distinct.len() <= MAX_QUANT_CUTS {
+                    FeatureBins { cuts: distinct }
+                } else {
+                    self.quant_exact = false;
+                    exact_feat[f] = false;
+                    FeatureBins::from_column(&distinct, MAX_BINS)
+                }
+            })
+            .collect();
+        self.qthresh = (0..self.kids.len())
+            .map(|i| {
+                if self.kids[i][0] as usize == i {
+                    return 0; // leaf: compared but never routes away
+                }
+                let f = self.feat[i] as usize;
+                let t = self.thresh[i] as f64;
+                let cuts = &self.bins[f].cuts;
+                let b = if exact_feat[f] {
+                    // Index of the threshold itself (total_cmp dedup may
+                    // keep -0.0 for a 0.0 threshold; `c < t` is false
+                    // across the ±0.0 pair, so the lookup still lands on
+                    // the equal cut).
+                    cuts.partition_point(|&c| c < t)
+                } else {
+                    // Nearest representable cut at or below t (clamped):
+                    // rows with a feature value between cuts[b] and t
+                    // may route differently — the documented
+                    // decision-drift of the lossy path.
+                    cuts.partition_point(|&c| c <= t).saturating_sub(1)
+                };
+                debug_assert!(b < cuts.len().max(1));
+                b as u8
+            })
+            .collect();
+    }
+
+    pub fn num_features(&self) -> usize {
+        self.num_features
+    }
+
+    /// Outputs per prediction (1 = verdict only, 3 = joint).
+    pub fn num_outputs(&self) -> usize {
+        self.num_outputs
+    }
+
+    /// Live (compacted) node count across all trees.
+    pub fn num_nodes(&self) -> usize {
+        self.kids.len()
+    }
+
+    /// Trees actually walked (padded zero trees are dropped).
+    pub fn num_live_trees(&self) -> usize {
+        self.trees.len()
+    }
+
+    /// True iff the quantized path is bit-equivalent to the float path
+    /// (every threshold representable in its feature's cut table).
+    pub fn quantized_exact(&self) -> bool {
+        self.quant_exact
+    }
+
+    /// Resolve [`FlatMode::Auto`] against the exactness of the tables.
+    pub fn resolve_mode(&self, mode: FlatMode) -> FlatMode {
+        match mode {
+            FlatMode::Auto if self.quant_exact => FlatMode::Quantized,
+            FlatMode::Auto => FlatMode::Float,
+            m => m,
+        }
+    }
+
+    /// Accumulate all K outputs of one row into `out` (float path).
+    /// `xf` is the row pre-rounded to f32 — the reference traversal's
+    /// `features[fi] as f32` done once per row instead of per node.
+    fn row_outputs_float(&self, xf: &[f32], out: &mut [f64]) {
+        out.iter_mut().for_each(|v| *v = 0.0);
+        let mut ti = 0;
+        while ti + TREE_GROUP <= self.trees.len() {
+            let g: [FlatTree; TREE_GROUP] =
+                [self.trees[ti], self.trees[ti + 1], self.trees[ti + 2], self.trees[ti + 3]];
+            let mut n = [
+                g[0].root as usize,
+                g[1].root as usize,
+                g[2].root as usize,
+                g[3].root as usize,
+            ];
+            let d = g.iter().map(|t| t.depth).max().unwrap_or(0);
+            for _ in 0..d {
+                for nj in n.iter_mut() {
+                    let f = self.feat[*nj] as usize;
+                    // NaN: `<=` is false -> right, like the reference.
+                    let go_right = !(xf[f] <= self.thresh[*nj]);
+                    *nj = self.kids[*nj][go_right as usize] as usize;
+                }
+            }
+            for &nj in &n {
+                self.gather(nj, out);
+            }
+            ti += TREE_GROUP;
+        }
+        while ti < self.trees.len() {
+            let t = self.trees[ti];
+            let mut nj = t.root as usize;
+            for _ in 0..t.depth {
+                let f = self.feat[nj] as usize;
+                let go_right = !(xf[f] <= self.thresh[nj]);
+                nj = self.kids[nj][go_right as usize] as usize;
+            }
+            self.gather(nj, out);
+            ti += 1;
+        }
+        let trees = self.num_trees as f64;
+        out.iter_mut().for_each(|v| *v /= trees);
+    }
+
+    /// Accumulate all K outputs of one row into `out` (quantized path).
+    /// `codes` is the row binned once per feature.
+    fn row_outputs_quant(&self, codes: &[u8], out: &mut [f64]) {
+        out.iter_mut().for_each(|v| *v = 0.0);
+        let mut ti = 0;
+        while ti + TREE_GROUP <= self.trees.len() {
+            let g: [FlatTree; TREE_GROUP] =
+                [self.trees[ti], self.trees[ti + 1], self.trees[ti + 2], self.trees[ti + 3]];
+            let mut n = [
+                g[0].root as usize,
+                g[1].root as usize,
+                g[2].root as usize,
+                g[3].root as usize,
+            ];
+            let d = g.iter().map(|t| t.depth).max().unwrap_or(0);
+            for _ in 0..d {
+                for nj in n.iter_mut() {
+                    let f = self.feat[*nj] as usize;
+                    let go_right = codes[f] > self.qthresh[*nj];
+                    *nj = self.kids[*nj][go_right as usize] as usize;
+                }
+            }
+            for &nj in &n {
+                self.gather(nj, out);
+            }
+            ti += TREE_GROUP;
+        }
+        while ti < self.trees.len() {
+            let t = self.trees[ti];
+            let mut nj = t.root as usize;
+            for _ in 0..t.depth {
+                let f = self.feat[nj] as usize;
+                let go_right = codes[f] > self.qthresh[nj];
+                nj = self.kids[nj][go_right as usize] as usize;
+            }
+            self.gather(nj, out);
+            ti += 1;
+        }
+        let trees = self.num_trees as f64;
+        out.iter_mut().for_each(|v| *v /= trees);
+    }
+
+    #[inline]
+    fn gather(&self, node: usize, out: &mut [f64]) {
+        let base = node * self.num_outputs;
+        for (o, v) in out.iter_mut().enumerate() {
+            *v += self.leaf[base + o] as f64;
+        }
+    }
+
+    /// All K outputs for every row, row-major (`rows.len() * K`). Rows
+    /// must already be width-checked (the executor's job); `mode` is
+    /// resolved against the table exactness.
+    pub fn predict_outputs_batch(&self, rows: &[Vec<f64>], mode: FlatMode) -> Vec<f64> {
+        let k = self.num_outputs;
+        let mut out = vec![0.0f64; rows.len() * k];
+        match self.resolve_mode(mode) {
+            FlatMode::Quantized => {
+                let mut codes = vec![0u8; self.num_features];
+                for (row, slot) in rows.iter().zip(out.chunks_mut(k)) {
+                    for (c, (&x, fb)) in
+                        codes.iter_mut().zip(row.iter().zip(&self.bins))
+                    {
+                        *c = fb.code_of((x as f32) as f64);
+                    }
+                    self.row_outputs_quant(&codes, slot);
+                }
+            }
+            _ => {
+                let mut xf = vec![0.0f32; self.num_features];
+                for (row, slot) in rows.iter().zip(out.chunks_mut(k)) {
+                    for (v, &x) in xf.iter_mut().zip(row.iter()) {
+                        *v = x as f32;
+                    }
+                    self.row_outputs_float(&xf, slot);
+                }
+            }
+        }
+        out
+    }
+
+    /// Scalar convenience (eval/analyze): all K outputs of one row in
+    /// Auto mode.
+    pub fn predict_row(&self, row: &[f64]) -> Vec<f64> {
+        self.predict_outputs_batch(&[row.to_vec()], FlatMode::Auto)
+    }
+
+    /// Scalar verdict: predicted log2(speedup) > 0.
+    pub fn decide_row(&self, row: &[f64]) -> bool {
+        self.predict_row(row)[0] > 0.0
+    }
+}
+
+/// The default [`BatchExecutor`] backend: a compiled [`FlatForest`]
+/// behind an `Arc` (service shards share one copy), chunked parallelism
+/// over `util::pool::parallel_map`, typed errors on malformed batches —
+/// the same contract (and error text) as the reference
+/// `NativeForestExecutor`.
+pub struct FlatForestExecutor {
+    flat: Arc<FlatForest>,
+    threads: usize,
+    /// Rows per parallel work item; small batches stay single-threaded.
+    chunk_rows: usize,
+    mode: FlatMode,
+}
+
+impl FlatForestExecutor {
+    /// Compile and wrap, sized to the host. Fails (typed) on a corrupt
+    /// encoding.
+    pub fn new(enc: &EncodedForest) -> Result<Self> {
+        Ok(Self::from_shared(Arc::new(FlatForest::compile(enc)?)))
+    }
+
+    /// Share one compiled forest across several executors (one per
+    /// service shard).
+    pub fn from_shared(flat: Arc<FlatForest>) -> Self {
+        let threads = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        FlatForestExecutor {
+            flat,
+            threads: threads.max(1),
+            chunk_rows: 256,
+            mode: FlatMode::Auto,
+        }
+    }
+
+    pub fn with_parallelism(flat: Arc<FlatForest>, threads: usize, chunk_rows: usize) -> Self {
+        FlatForestExecutor {
+            flat,
+            threads: threads.max(1),
+            chunk_rows: chunk_rows.max(1),
+            mode: FlatMode::Auto,
+        }
+    }
+
+    /// Cap this executor's parallelism (e.g. divide the host's cores
+    /// across service shards).
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Force a traversal kernel (benches/differential tests); the
+    /// default `Auto` never runs an inexact quantized table.
+    pub fn mode(mut self, mode: FlatMode) -> Self {
+        self.mode = mode;
+        self
+    }
+
+    pub fn flat(&self) -> &Arc<FlatForest> {
+        &self.flat
+    }
+
+    fn check_rows(&self, rows: &[Vec<f64>]) -> Result<()> {
+        let nf = self.flat.num_features;
+        for (i, r) in rows.iter().enumerate() {
+            if r.len() != nf {
+                return Err(anyhow!(
+                    "row {i}: feature vector has {} dims, expected {nf}",
+                    r.len()
+                ));
+            }
+        }
+        Ok(())
+    }
+
+    /// All outputs row-major, chunk-parallel. The one traversal per row
+    /// feeds every plane, so joint serving never re-walks the forest.
+    fn outputs(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+        self.check_rows(rows)?;
+        if self.threads <= 1 || rows.len() < 2 * self.chunk_rows {
+            return Ok(self.flat.predict_outputs_batch(rows, self.mode));
+        }
+        let chunks: Vec<&[Vec<f64>]> = rows.chunks(self.chunk_rows).collect();
+        let nested = parallel_map(&chunks, self.threads, |chunk| {
+            self.flat.predict_outputs_batch(chunk, self.mode)
+        });
+        Ok(nested.into_iter().flatten().collect())
+    }
+
+    /// Batched joint prediction: (log2 wg_w, log2 wg_h) per row; typed
+    /// `Err` for single-output models or malformed rows (same contract
+    /// as the reference executor).
+    pub fn predict_wg_logs(&self, rows: &[Vec<f64>]) -> Result<Vec<(f64, f64)>> {
+        if self.flat.num_outputs() < 3 {
+            return Err(anyhow!(
+                "model has {} output(s); workgroup prediction needs a joint \
+                 (schema v2) model",
+                self.flat.num_outputs()
+            ));
+        }
+        let k = self.flat.num_outputs();
+        let out = self.outputs(rows)?;
+        Ok(out.chunks(k).map(|c| (c[1], c[2])).collect())
+    }
+}
+
+impl BatchExecutor for FlatForestExecutor {
+    fn backend(&self) -> &'static str {
+        match self.flat.resolve_mode(self.mode) {
+            FlatMode::Quantized => "flat-q",
+            _ => "flat",
+        }
+    }
+
+    fn max_batch(&self) -> usize {
+        usize::MAX
+    }
+
+    fn predict(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+        let k = self.flat.num_outputs();
+        let out = self.outputs(rows)?;
+        Ok(out.chunks(k).map(|c| c[0]).collect())
+    }
+
+    fn num_outputs(&self) -> usize {
+        self.flat.num_outputs()
+    }
+
+    fn predict_outputs(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+        self.outputs(rows)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernelmodel::features::NUM_FEATURES;
+    use crate::ml::export::{encode, ExportContract};
+    use crate::ml::forest::{Forest, ForestConfig};
+    use crate::util::prng::Rng;
+
+    fn toy_encoded(seed: u64, trees: usize, contract: ExportContract) -> EncodedForest {
+        let mut rng = Rng::new(seed);
+        let x: Vec<Vec<f64>> = (0..NUM_FEATURES)
+            .map(|_| (0..300).map(|_| rng.range_f64(-1.0, 1.0)).collect())
+            .collect();
+        let y: Vec<f64> =
+            (0..300).map(|i| if x[1][i] + x[4][i] > 0.0 { 1.0 } else { -1.0 }).collect();
+        let f = Forest::fit(
+            &x,
+            &y,
+            &ForestConfig { num_trees: trees, threads: 2, ..Default::default() },
+        );
+        encode(&f, contract)
+    }
+
+    #[test]
+    fn compaction_drops_padding_and_matches_reference() {
+        // 5 real trees under a 20-tree contract: 15 padded zero trees
+        // must be dropped, the rest compacted to live nodes only.
+        let enc = toy_encoded(3, 5, ExportContract::default());
+        let flat = FlatForest::compile(&enc).unwrap();
+        assert_eq!(flat.num_live_trees(), 5);
+        assert!(flat.num_nodes() < enc.contract.max_nodes); // vs 20*8192 slots
+        assert_eq!(flat.num_outputs(), 1);
+        let mut rng = Rng::new(4);
+        for _ in 0..200 {
+            let row: Vec<f64> =
+                (0..NUM_FEATURES).map(|_| rng.range_f64(-2.0, 2.0)).collect();
+            let out = flat.predict_outputs_batch(&[row.clone()], FlatMode::Float);
+            assert_eq!(out[0], enc.predict(&row), "float path diverged");
+        }
+    }
+
+    #[test]
+    fn quantized_tables_are_exact_for_binned_forests_and_bit_equal() {
+        // Default ForestConfig trains with the binned engine: thresholds
+        // come from <=256 cuts per feature, so the tables must be exact
+        // and the quantized path bit-equal to the float path.
+        let enc = toy_encoded(7, 8, ExportContract::default());
+        let flat = FlatForest::compile(&enc).unwrap();
+        assert!(flat.quantized_exact());
+        assert_eq!(flat.resolve_mode(FlatMode::Auto), FlatMode::Quantized);
+        let mut rng = Rng::new(8);
+        let rows: Vec<Vec<f64>> = (0..500)
+            .map(|_| (0..NUM_FEATURES).map(|_| rng.range_f64(-3.0, 3.0)).collect())
+            .collect();
+        let fl = flat.predict_outputs_batch(&rows, FlatMode::Float);
+        let qu = flat.predict_outputs_batch(&rows, FlatMode::Quantized);
+        assert_eq!(fl, qu, "exact quantized path must be bit-equal");
+    }
+
+    #[test]
+    fn compile_rejects_corrupt_encodings() {
+        let mut enc = toy_encoded(9, 4, ExportContract::default());
+        let split = (0..enc.left.len())
+            .find(|&i| enc.left[i] as usize != i % enc.contract.max_nodes)
+            .unwrap();
+        enc.feat_idx[split] = NUM_FEATURES as i32 + 3;
+        let err = FlatForestExecutor::new(&enc).err().expect("must reject");
+        assert!(format!("{err}").contains("feature index"), "{err}");
+    }
+
+    #[test]
+    fn executor_error_parity_and_backend_names() {
+        let enc = toy_encoded(11, 4, ExportContract::default());
+        let exec = FlatForestExecutor::new(&enc).unwrap();
+        assert_eq!(exec.backend(), "flat-q"); // exact tables -> quantized
+        assert_eq!(exec.mode(FlatMode::Float).backend(), "flat");
+        let exec = FlatForestExecutor::new(&enc).unwrap();
+        assert!(exec.predict(&[]).unwrap().is_empty());
+        let err = exec.predict(&[vec![0.0; NUM_FEATURES - 1]]).unwrap_err();
+        assert!(format!("{err}").contains("expected"), "{err}");
+        let err = exec.predict_wg_logs(&[vec![0.0; NUM_FEATURES]]).unwrap_err();
+        assert!(format!("{err}").contains("joint"), "{err}");
+    }
+}

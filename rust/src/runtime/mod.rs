@@ -1,8 +1,12 @@
 //! Inference runtime: the backend-agnostic [`executor::BatchExecutor`]
-//! contract with its pure-rust implementation, plus the PJRT path that
-//! loads the AOT HLO-text artifacts (L2 jax graphs wrapping the L1
-//! Pallas kernels) and executes them from the rust hot path.
+//! contract with its pure-rust implementations — the flattened
+//! QuickScorer-style hot path ([`fastexec`], the default serving
+//! backend) and the tensor-walking reference ([`executor`]) — plus the
+//! PJRT path that loads the AOT HLO-text artifacts (L2 jax graphs
+//! wrapping the L1 Pallas kernels) and executes them from the rust hot
+//! path.
 pub mod executor;
+pub mod fastexec;
 pub mod forest_exec;
 pub mod pjrt;
 pub mod stencil_exec;

@@ -1,0 +1,351 @@
+//! Differential test layer for the flattened inference hot path
+//! (`runtime::fastexec`).
+//!
+//! The flat executor is the default serving backend, so every claim it
+//! makes is pinned here against the tensor-walking reference
+//! (`EncodedForest::predict` / `NativeForestExecutor`):
+//!
+//!   * float path: bit-equal to the reference over randomized forests
+//!     (varied tree counts, truncating and padded contracts, 1- and
+//!     3-output planes, duplicated thresholds from the binned trainer);
+//!   * quantized path: bit-equal when the cut tables are exact (the
+//!     default-trained case), decision-equivalent row-for-row on
+//!     10k-row batches at every thread count;
+//!   * NaN/±inf feature rows route deterministically exactly like the
+//!     reference (`NaN <= t` is false → right) and never panic;
+//!   * malformed batches produce the same typed errors as the
+//!     reference executor, message-for-message;
+//!   * lossy cut tables (>255 distinct thresholds on a feature) are
+//!     detected, `Auto` mode falls back to float, and the forced
+//!     quantized path stays deterministic with high decision agreement.
+
+use std::sync::Arc;
+
+use lmtuner::kernelmodel::features::NUM_FEATURES;
+use lmtuner::ml::export::{encode, EncodedForest, ExportContract};
+use lmtuner::ml::forest::{Forest, ForestConfig};
+use lmtuner::ml::tree::{Node, Tree};
+use lmtuner::prop_assert;
+use lmtuner::runtime::executor::{BatchExecutor, NativeForestExecutor};
+use lmtuner::runtime::fastexec::{FlatForest, FlatForestExecutor, FlatMode};
+use lmtuner::util::prng::Rng;
+use lmtuner::util::prop;
+
+/// Random column-major training data over the full feature width.
+fn training_data(rng: &mut Rng, n: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
+    let x: Vec<Vec<f64>> = (0..NUM_FEATURES)
+        .map(|_| (0..n).map(|_| rng.range_f64(-2.0, 2.0)).collect())
+        .collect();
+    let y: Vec<f64> = (0..n)
+        .map(|i| if x[1][i] + 0.5 * x[4][i] > 0.0 { 1.0 } else { -1.0 })
+        .collect();
+    (x, y)
+}
+
+fn fit_single(rng: &mut Rng, trees: usize) -> Forest {
+    let (x, y) = training_data(rng, 300);
+    Forest::fit(
+        &x,
+        &y,
+        &ForestConfig { num_trees: trees, threads: 2, seed: rng.below(1 << 20), ..Default::default() },
+    )
+}
+
+fn fit_joint(rng: &mut Rng, trees: usize) -> Forest {
+    let (x, y) = training_data(rng, 300);
+    let lw: Vec<f64> = (0..300).map(|i| if x[0][i] > 0.0 { 5.0 } else { 2.0 }).collect();
+    let lh: Vec<f64> = (0..300).map(|i| if x[2][i] > 0.0 { 3.0 } else { 1.0 }).collect();
+    Forest::fit_multi(
+        &x,
+        &y,
+        &[lw, lh],
+        &ForestConfig { num_trees: trees, threads: 2, seed: rng.below(1 << 20), ..Default::default() },
+    )
+}
+
+fn random_rows(n: usize, seed: u64) -> Vec<Vec<f64>> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| (0..NUM_FEATURES).map(|_| rng.range_f64(-4.0, 4.0)).collect())
+        .collect()
+}
+
+/// Reference outputs, row-major, via the (fixed) single-pass encoded walk.
+fn reference_outputs(enc: &EncodedForest, rows: &[Vec<f64>]) -> Vec<f64> {
+    rows.iter().flat_map(|r| enc.predict_outputs(r)).collect()
+}
+
+#[test]
+fn float_path_is_bit_equal_to_the_reference_over_randomized_forests() {
+    // Varied forests x varied contracts: padded (more contract slots
+    // than trees — exercises zero-tree dropping and the scale
+    // correction), and truncating (tiny node/depth budget — exercises
+    // subtree-mean leaves). Binned training reuses thresholds across
+    // trees, so duplicated thresholds are covered by construction.
+    prop::check("flat-float == encoded reference", 10, |rng| {
+        let trees = 1 + rng.below(6) as usize;
+        let joint = rng.below(2) == 1;
+        let forest =
+            if joint { fit_joint(rng, trees) } else { fit_single(rng, trees) };
+        let contract = if rng.below(2) == 1 {
+            // padded: contract wants more trees than the forest has
+            ExportContract {
+                num_trees: trees + 1 + rng.below(8) as usize,
+                max_nodes: 8192,
+                max_depth: 64,
+                ..Default::default()
+            }
+        } else {
+            // truncating: tiny budgets force subtree-mean leaves
+            ExportContract {
+                num_trees: trees,
+                max_nodes: 16,
+                max_depth: 3 + rng.below(3) as usize,
+                ..Default::default()
+            }
+        };
+        let enc = encode(&forest, contract);
+        let flat = FlatForest::compile(&enc)
+            .map_err(|e| format!("compile failed: {e}"))?;
+        prop_assert!(
+            flat.num_outputs() == enc.num_outputs(),
+            "outputs {} vs {}",
+            flat.num_outputs(),
+            enc.num_outputs()
+        );
+        let rows = random_rows(64, 0xF10A7 + rng.below(1 << 30));
+        let got = flat.predict_outputs_batch(&rows, FlatMode::Float);
+        let want = reference_outputs(&enc, &rows);
+        prop_assert!(got.len() == want.len(), "{} vs {}", got.len(), want.len());
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            prop_assert!(
+                g.to_bits() == w.to_bits(),
+                "output {i}: flat {g:?} vs reference {w:?} \
+                 (trees={trees} joint={joint} contract={contract:?})"
+            );
+        }
+        // Joint executors agree with the reference executor's batched
+        // wg path too (same traversal, same (w, h) pairs).
+        if joint {
+            let fx = FlatForestExecutor::new(&enc)
+                .map_err(|e| format!("{e}"))?
+                .mode(FlatMode::Float);
+            let nx = NativeForestExecutor::new(enc.clone());
+            let a = fx.predict_wg_logs(&rows).map_err(|e| format!("{e}"))?;
+            let b = nx.predict_wg_logs(&rows).map_err(|e| format!("{e}"))?;
+            prop_assert!(a == b, "wg logs diverged");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quantized_is_exact_and_decision_equivalent_on_10k_rows_at_every_thread_count() {
+    let mut rng = Rng::new(0x10AD);
+    for (joint, seed) in [(false, 0xAAu64), (true, 0xBBu64)] {
+        let forest = if joint { fit_joint(&mut rng, 8) } else { fit_single(&mut rng, 8) };
+        let enc = encode(&forest, ExportContract::default());
+        let flat = Arc::new(FlatForest::compile(&enc).unwrap());
+        // Default (binned) training draws thresholds from <=256 cuts per
+        // feature, so the quantized tables must be exact.
+        assert!(flat.quantized_exact(), "binned forest must quantize exactly");
+        let rows = random_rows(10_000, seed);
+        let want = reference_outputs(&enc, &rows);
+        let k = enc.num_outputs();
+        for threads in [1usize, 2, 4, 8] {
+            for mode in [FlatMode::Float, FlatMode::Quantized, FlatMode::Auto] {
+                let exec =
+                    FlatForestExecutor::with_parallelism(flat.clone(), threads, 128)
+                        .mode(mode);
+                let got = exec.predict_outputs(&rows).unwrap();
+                assert_eq!(got.len(), rows.len() * k);
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert!(
+                        g.to_bits() == w.to_bits(),
+                        "joint={joint} threads={threads} mode={mode:?} \
+                         output {i}: {g:?} vs {w:?}"
+                    );
+                }
+                // Decision equivalence is implied by bit-equality, but
+                // assert it through the trait path `decide` uses.
+                let decisions = exec.decide(&rows[..256]).unwrap();
+                for (i, d) in decisions.iter().enumerate() {
+                    assert_eq!(*d, enc.decide(&rows[i]), "row {i} decision");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn nan_and_inf_rows_route_like_the_reference_and_never_panic() {
+    let mut rng = Rng::new(0xF00D);
+    for joint in [false, true] {
+        let forest = if joint { fit_joint(&mut rng, 6) } else { fit_single(&mut rng, 6) };
+        let enc = encode(&forest, ExportContract::default());
+        let flat = Arc::new(FlatForest::compile(&enc).unwrap());
+        assert!(flat.quantized_exact());
+        // Rows seeded with NaN / +inf / -inf in random positions, plus
+        // all-NaN and all-inf rows.
+        let mut rows = random_rows(500, 0x11F + joint as u64);
+        for (i, row) in rows.iter_mut().enumerate() {
+            let f = i % NUM_FEATURES;
+            row[f] = match i % 3 {
+                0 => f64::NAN,
+                1 => f64::INFINITY,
+                _ => f64::NEG_INFINITY,
+            };
+        }
+        rows.push(vec![f64::NAN; NUM_FEATURES]);
+        rows.push(vec![f64::INFINITY; NUM_FEATURES]);
+        rows.push(vec![f64::NEG_INFINITY; NUM_FEATURES]);
+        let want = reference_outputs(&enc, &rows);
+        for mode in [FlatMode::Float, FlatMode::Quantized] {
+            for threads in [1usize, 4] {
+                let exec =
+                    FlatForestExecutor::with_parallelism(flat.clone(), threads, 64)
+                        .mode(mode);
+                let got = exec.predict_outputs(&rows).unwrap();
+                for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+                    assert!(
+                        g.to_bits() == w.to_bits(),
+                        "joint={joint} mode={mode:?} threads={threads} \
+                         output {i}: {g:?} vs reference {w:?}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn typed_error_parity_with_the_reference_executor() {
+    let mut rng = Rng::new(0xE44);
+    let enc = encode(&fit_single(&mut rng, 5), ExportContract::default());
+    let flat = FlatForestExecutor::new(&enc).unwrap();
+    let native = NativeForestExecutor::new(enc.clone());
+
+    // Empty batches succeed with empty results on both.
+    assert!(flat.predict(&[]).unwrap().is_empty());
+    assert!(native.predict(&[]).unwrap().is_empty());
+    assert!(flat.predict_outputs(&[]).unwrap().is_empty());
+
+    // Short/long rows: identical message, including the row index.
+    for bad_width in [0usize, NUM_FEATURES - 1, NUM_FEATURES + 3] {
+        let rows = vec![vec![0.0; NUM_FEATURES], vec![0.5; bad_width]];
+        let ef = flat.predict(&rows).unwrap_err();
+        let en = native.predict(&rows).unwrap_err();
+        assert_eq!(format!("{ef}"), format!("{en}"), "width {bad_width}");
+        assert!(format!("{ef}").contains("row 1"), "{ef}");
+    }
+
+    // Workgroup prediction on a single-output model: identical typed
+    // error on both executors.
+    let rows = random_rows(4, 0x77);
+    let ef = flat.predict_wg_logs(&rows).unwrap_err();
+    let en = native.predict_wg_logs(&rows).unwrap_err();
+    assert_eq!(format!("{ef}"), format!("{en}"));
+    assert!(format!("{ef}").contains("joint"), "{ef}");
+
+    // Arity agreement through the trait.
+    assert_eq!(flat.num_outputs(), native.num_outputs());
+
+    // A joint model agrees on arity and on the wg error-free path.
+    let jenc = encode(&fit_joint(&mut rng, 5), ExportContract::default());
+    let jf = FlatForestExecutor::new(&jenc).unwrap();
+    let jn = NativeForestExecutor::new(jenc.clone());
+    assert_eq!(jf.num_outputs(), 3);
+    assert_eq!(jf.num_outputs(), jn.num_outputs());
+    assert_eq!(
+        jf.predict_wg_logs(&rows).unwrap(),
+        jn.predict_wg_logs(&rows).unwrap()
+    );
+}
+
+/// A balanced depth-`d` tree splitting only on feature 0 with all-distinct
+/// dyadic thresholds: depth 9 yields 511 distinct thresholds on one
+/// feature — past the 255-cut table capacity, forcing the lossy path.
+fn dense_threshold_tree(depth: usize, rng: &mut Rng) -> Tree {
+    fn build(lo: f64, hi: f64, d: usize, nodes: &mut Vec<Node>, rng: &mut Rng) -> usize {
+        let idx = nodes.len();
+        if d == 0 {
+            nodes.push(Node::Leaf { value: if rng.below(2) == 1 { 1.0 } else { -1.0 } });
+            return idx;
+        }
+        let mid = 0.5 * (lo + hi);
+        nodes.push(Node::Split { feature: 0, threshold: mid, left: 0, right: 0, mean: 0.0 });
+        let l = build(lo, mid, d - 1, nodes, rng);
+        let r = build(mid, hi, d - 1, nodes, rng);
+        if let Node::Split { left, right, .. } = &mut nodes[idx] {
+            *left = l;
+            *right = r;
+        }
+        idx
+    }
+    let mut nodes = Vec::new();
+    build(0.0, 1.0, depth, &mut nodes, rng);
+    let t = Tree { nodes, extra: Vec::new() };
+    t.validate().expect("hand-built tree must be structurally valid");
+    t
+}
+
+#[test]
+fn lossy_quantization_is_detected_deterministic_and_auto_falls_back_to_float() {
+    let mut rng = Rng::new(0x10557);
+    let forest = Forest {
+        trees: vec![dense_threshold_tree(9, &mut rng)],
+        config_summary: "hand-built dense-threshold tree".to_string(),
+    };
+    let contract = ExportContract {
+        num_trees: 1,
+        max_nodes: 2048,
+        max_depth: 16,
+        ..Default::default()
+    };
+    let enc = encode(&forest, contract);
+    assert_eq!(enc.truncated, 0, "the dense tree must fit the contract");
+    let flat = Arc::new(FlatForest::compile(&enc).unwrap());
+    assert!(
+        !flat.quantized_exact(),
+        "511 distinct thresholds cannot fit a 255-cut table"
+    );
+    // Auto never runs an inexact table: it resolves to the float path,
+    // which stays bit-equal to the reference.
+    assert_eq!(flat.resolve_mode(FlatMode::Auto), FlatMode::Float);
+    let auto_exec = FlatForestExecutor::from_shared(flat.clone());
+    assert_eq!(auto_exec.backend(), "flat");
+    let mut rows = random_rows(2000, 0xD1CE);
+    for row in rows.iter_mut() {
+        row[0] = (row[0] + 4.0) / 8.0; // into the tree's (0, 1) domain
+    }
+    rows.push(vec![f64::NAN; NUM_FEATURES]);
+    rows.push(vec![f64::INFINITY; NUM_FEATURES]);
+    let want: Vec<f64> = rows.iter().map(|r| enc.predict(r)).collect();
+    let auto_got = auto_exec.predict(&rows).unwrap();
+    for (g, w) in auto_got.iter().zip(&want) {
+        assert_eq!(g.to_bits(), w.to_bits(), "auto(float) diverged");
+    }
+    // Forced quantized: approximate, but never panics, routes every row
+    // to a real leaf, is deterministic run-to-run, and agrees with the
+    // reference on the vast majority of decisions (the drift window is
+    // the gap between a snapped cut and its true threshold).
+    let q = FlatForestExecutor::from_shared(flat.clone()).mode(FlatMode::Quantized);
+    assert_eq!(q.backend(), "flat-q");
+    let q1 = q.predict(&rows).unwrap();
+    let q2 = q.predict(&rows).unwrap();
+    assert_eq!(q1, q2, "lossy quantized path must be deterministic");
+    let leaf_values = [1.0, -1.0, 0.0]; // 0.0 never predicted, ±1 leaves
+    for g in &q1 {
+        assert!(
+            leaf_values.iter().any(|v| (g - v).abs() < 1e-12),
+            "quantized output {g} is not a real leaf value"
+        );
+    }
+    let agree = q1
+        .iter()
+        .zip(&want)
+        .filter(|(g, w)| (**g > 0.0) == (**w > 0.0))
+        .count();
+    let rate = agree as f64 / want.len() as f64;
+    assert!(rate >= 0.9, "decision agreement {rate:.3} below 0.9");
+}

@@ -14,7 +14,9 @@ use lmtuner::gpu::spec::DeviceSpec;
 use lmtuner::kernelmodel::features::NUM_FEATURES;
 use lmtuner::ml::export::{encode, EncodedForest, ExportContract};
 use lmtuner::ml::forest::{Forest, ForestConfig};
+use lmtuner::ml::io as model_io;
 use lmtuner::runtime::executor::{BatchExecutor, NativeForestExecutor};
+use lmtuner::runtime::fastexec::FlatForestExecutor;
 use lmtuner::runtime::forest_exec::ForestExecutor;
 use lmtuner::runtime::pjrt::Engine;
 use lmtuner::util::prng::Rng;
@@ -275,6 +277,166 @@ fn batch_failure_is_a_typed_error_and_service_recovers() {
     let stats = svc.shutdown();
     assert_eq!(stats.served, 1);
     assert_eq!(stats.rejected, 1);
+}
+
+/// A joint (schema-v2) forest over random data: verdict plane plus
+/// log2(wg_w) / log2(wg_h) extra planes.
+fn toy_joint_forest(seed: u64, trees: usize) -> Forest {
+    let mut rng = Rng::new(seed);
+    let n = 400;
+    let x: Vec<Vec<f64>> = (0..NUM_FEATURES)
+        .map(|_| (0..n).map(|_| rng.range_f64(-2.0, 2.0)).collect())
+        .collect();
+    let y: Vec<f64> = (0..n)
+        .map(|i| if x[0][i] + x[3][i] > 0.0 { 1.0 } else { -1.0 })
+        .collect();
+    let lw: Vec<f64> = (0..n).map(|i| if x[1][i] > 0.0 { 5.0 } else { 3.0 }).collect();
+    let lh: Vec<f64> = (0..n).map(|i| if x[2][i] > 0.0 { 2.0 } else { 0.0 }).collect();
+    Forest::fit_multi(
+        &x,
+        &y,
+        &[lw, lh],
+        &ForestConfig { num_trees: trees, threads: 2, ..Default::default() },
+    )
+}
+
+#[test]
+fn sharded_service_roundtrips_a_joint_model_through_the_flat_backend() {
+    // Schema-v2 model -> disk -> load -> encode -> sharded service on
+    // the flat backend: every response must carry the verdict AND the
+    // workgroup suggestion from the same traversal, bit-equal to the
+    // encoded reference.
+    let forest = toy_joint_forest(0x2F1A7, 10);
+    let tmp = std::env::temp_dir().join(format!("lmtuner-joint-{}.model", std::process::id()));
+    model_io::save(&forest, &tmp).unwrap();
+    let loaded = model_io::load(&tmp).unwrap();
+    std::fs::remove_file(&tmp).ok();
+    let enc = encode(&loaded, ExportContract::default());
+    assert_eq!(enc.num_outputs(), 3, "joint model must encode 3 planes");
+
+    let svc = Service::start_native(
+        enc.clone(),
+        ServiceConfig {
+            max_batch: 32,
+            max_wait: Duration::from_micros(100),
+            workers: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let h = svc.handle();
+    let mut rng = Rng::new(0x77AB);
+    for _ in 0..200 {
+        let mut feats = [0.0; NUM_FEATURES];
+        for f in feats.iter_mut() {
+            *f = rng.range_f64(-3.0, 3.0);
+        }
+        let resp = h.predict(feats).unwrap();
+        let want = enc.predict(&feats);
+        assert!((resp.score - want).abs() < 1e-9, "{} vs {want}", resp.score);
+        assert_eq!(resp.use_local_memory, want > 0.0);
+        let (gw, gh) = resp.wg_logs.expect("joint model must serve wg suggestions");
+        let (ww, wh) = enc.predict_wg_logs(&feats).unwrap();
+        assert_eq!(gw.to_bits(), ww.to_bits(), "wg width plane diverged");
+        assert_eq!(gh.to_bits(), wh.to_bits(), "wg height plane diverged");
+    }
+    let stats = svc.shutdown();
+    assert_eq!(stats.served, 200);
+
+    // A single-output model serves wg_logs: None — the field is absent,
+    // not fabricated.
+    let enc1 = toy_encoded(0x51461E, 6);
+    let svc1 = Service::start_native(enc1, ServiceConfig::default()).unwrap();
+    let resp = svc1.handle().predict([0.5; NUM_FEATURES]).unwrap();
+    assert!(resp.wg_logs.is_none(), "single-output model fabricated wg_logs");
+    svc1.shutdown();
+}
+
+/// A shard wrapper: either a real flat executor or a permanently dead
+/// one, for the fail-over test below.
+enum ShardExec {
+    Good(FlatForestExecutor),
+    Dead,
+}
+
+impl BatchExecutor for ShardExec {
+    fn backend(&self) -> &'static str {
+        match self {
+            ShardExec::Good(e) => e.backend(),
+            ShardExec::Dead => "dead",
+        }
+    }
+    fn max_batch(&self) -> usize {
+        64
+    }
+    fn predict(&self, rows: &[Vec<f64>]) -> anyhow::Result<Vec<f64>> {
+        match self {
+            ShardExec::Good(e) => e.predict(rows),
+            ShardExec::Dead => anyhow::bail!("injected dead shard"),
+        }
+    }
+    fn num_outputs(&self) -> usize {
+        match self {
+            ShardExec::Good(e) => BatchExecutor::num_outputs(e),
+            ShardExec::Dead => 1,
+        }
+    }
+    fn predict_outputs(&self, rows: &[Vec<f64>]) -> anyhow::Result<Vec<f64>> {
+        match self {
+            ShardExec::Good(e) => BatchExecutor::predict_outputs(e, rows),
+            ShardExec::Dead => anyhow::bail!("injected dead shard"),
+        }
+    }
+}
+
+#[test]
+fn dead_shard_fails_its_requests_typed_while_the_live_shard_keeps_serving() {
+    // Two shards, one permanently dead: requests round-robin across
+    // them, so dead-shard requests must come back as typed errors while
+    // live-shard requests keep serving correct scores — and the stats
+    // must account for both sides exactly.
+    let enc = toy_encoded(0xDEAD5, 8);
+    let good = FlatForestExecutor::new(&enc).unwrap();
+    let svc = Service::start_sharded(
+        vec![ShardExec::Dead, ShardExec::Good(good)],
+        ServiceConfig {
+            max_batch: 4,
+            max_wait: Duration::from_micros(50),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let h = svc.handle();
+    let mut ok = 0u64;
+    let mut failed = 0u64;
+    let mut rng = Rng::new(0xC0FFEE);
+    for _ in 0..40 {
+        let mut feats = [0.0; NUM_FEATURES];
+        for f in feats.iter_mut() {
+            *f = rng.range_f64(-2.0, 2.0);
+        }
+        // Blocking predict: each call lands on the next shard in the
+        // round-robin, so both shards are exercised deterministically.
+        match h.predict(feats) {
+            Ok(resp) => {
+                ok += 1;
+                let want = enc.predict(&feats);
+                assert!((resp.score - want).abs() < 1e-9);
+            }
+            Err(err) => {
+                failed += 1;
+                assert!(
+                    format!("{err:#}").contains("injected dead shard"),
+                    "want the injected typed error, got: {err:#}"
+                );
+            }
+        }
+    }
+    assert!(ok > 0, "live shard served nothing");
+    assert!(failed > 0, "dead shard never surfaced its error");
+    let stats = svc.shutdown();
+    assert_eq!(stats.served, ok);
+    assert_eq!(stats.rejected, failed);
 }
 
 #[test]
