@@ -27,12 +27,14 @@ artifacts:
 	cd python/compile && python3 aot.py --out-dir ../../artifacts
 
 # Seconds-scale smoke run of the perf benches; refreshes the committed
-# BENCH_perf_inference.json / BENCH_perf_train.json snapshots at the
-# repo root (same sections and JSON shape as a full run, fewer
-# iterations — see EXPERIMENTS.md §Perf for publishable numbers).
+# BENCH_perf_inference.json / BENCH_perf_train.json /
+# BENCH_perf_dataset.json snapshots at the repo root (same sections and
+# JSON shape as a full run, fewer iterations — see EXPERIMENTS.md §Perf
+# for publishable numbers).
 bench-snapshots:
 	LMTUNER_BENCH_SMOKE=1 cargo bench --bench perf_inference
 	LMTUNER_BENCH_SMOKE=1 cargo bench --bench perf_train
+	LMTUNER_BENCH_SMOKE=1 cargo bench --bench perf_dataset
 
 clean:
 	cargo clean

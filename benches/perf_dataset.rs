@@ -1,22 +1,76 @@
 //! Dataset-pipeline throughput (rows/sec): the serial reference build
-//! vs the streamed chunk-parallel build, and the per-sink overhead of
-//! streaming to sharded CSV or a reservoir sample. The parallel/serial
-//! ratio is the headline number: it is what makes paper-scale
-//! (`--scale 1.0`, millions of instances) phase-1 runs practical.
+//! vs the streamed chunk-parallel build, the per-sink overhead of
+//! streaming to sharded CSV or a reservoir sample, and the on-disk
+//! format shootout — line-oriented CSV vs the binary columnar shard
+//! format (`synth::binfmt`) — over a fabricated paper-scale row block.
+//!
+//! Results land in `BENCH_perf_dataset.json`; the headline notes are
+//! `parallel_over_serial` and `bin_over_csv_write_read` (target: >= 5x
+//! at >= 100k rows — the CSV encode/parse cost is what the binary
+//! format exists to delete).
+//!
+//! Set LMTUNER_BENCH_SMOKE=1 for a seconds-scale smoke run (CI): same
+//! sections, same JSON shape, fewer rows/iterations — the ratios are
+//! then indicative, not publishable.
+
+use std::time::Duration;
 
 use lmtuner::gpu::spec::DeviceSpec;
-use lmtuner::synth::sink::{MemorySink, ReservoirSink, ShardedCsvSink};
+use lmtuner::kernelmodel::features::NUM_FEATURES;
+use lmtuner::sim::exec::{Schema, TuneRecord};
+use lmtuner::synth::binfmt::ShardFormat;
+use lmtuner::synth::sink::{
+    self, MemorySink, RecordSink, ReservoirSink, ShardedCsvSink, ShardedSink,
+};
 use lmtuner::synth::{dataset, generator, sweep::LaunchSweep};
-use lmtuner::util::bench::{black_box, report_throughput, Bencher};
+use lmtuner::util::bench::{black_box, Bencher, JsonReport};
 use lmtuner::util::prng::Rng;
+
+fn smoke() -> bool {
+    std::env::var("LMTUNER_BENCH_SMOKE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Fabricate a deterministic row block shaped like a real v1 dataset:
+/// 18 features + speedup, no simulation cost, so the format shootout
+/// times I/O and (de)serialization only.
+fn fabricate(rows: usize) -> Vec<TuneRecord> {
+    let mut rng = Rng::new(0xB14C);
+    (0..rows)
+        .map(|i| {
+            let mut row = vec![0.0; Schema::V1.columns()];
+            for cell in row.iter_mut().take(NUM_FEATURES) {
+                *cell = (rng.next_u64() % 100_000) as f64 / 64.0;
+            }
+            row[NUM_FEATURES] = 0.25 + (rng.next_u64() % 512) as f64 / 128.0;
+            TuneRecord::from_csv_row(Schema::V1, format!("r{i}"), &row).unwrap()
+        })
+        .collect()
+}
 
 fn main() {
     let dev = DeviceSpec::m2090();
     let sweep = LaunchSweep::new(2048, 2048);
+    let smoke = smoke();
+    if smoke {
+        println!("smoke mode: reduced rows/iterations, indicative numbers only");
+    }
     let threads = std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(1);
     println!("host threads: {threads}");
+    let mut rep = JsonReport::new("perf_dataset");
+    let profile = || {
+        if smoke {
+            Bencher {
+                warmup_iters: 0,
+                min_iters: 1,
+                min_time: Duration::ZERO,
+                max_iters: 2,
+            }
+        } else {
+            Bencher::coarse()
+        }
+    };
 
     // The per-template launch-sampling hot path: `sampled_balanced` runs
     // once per template (11200x at paper scale). It used to clone and
@@ -25,22 +79,23 @@ fn main() {
     // partial Fisher-Yates), so calls/sec here is the direct measure of
     // that win.
     {
-        let bench = Bencher::coarse();
-        const CALLS_PER_ITER: usize = 1000;
+        let bench = profile();
+        let calls_per_iter: usize = if smoke { 100 } else { 1000 };
         for k in [24usize, 48, 200] {
             let mut rng = Rng::new(0x5A3E);
             let r = bench.run(
                 &format!("sampled_balanced k={k} (sweep len {})", sweep.len()),
                 || {
-                    for _ in 0..CALLS_PER_ITER {
+                    for _ in 0..calls_per_iter {
                         black_box(sweep.sampled_balanced(&mut rng, k));
                     }
                 },
             );
-            report_throughput(&r, CALLS_PER_ITER as f64, "calls");
+            rep.record_throughput(&r, calls_per_iter as f64, "calls");
         }
     }
 
+    let mut par_over_serial = 0.0;
     for tuples in [2usize, 8] {
         let mut rng = Rng::new(0xBE4C4);
         let templates = generator::generate_n(&mut rng, tuples);
@@ -49,7 +104,7 @@ fn main() {
             ..Default::default()
         };
         let serial_cfg = dataset::BuildConfig { threads: 1, ..cfg.clone() };
-        let bench = Bencher::coarse();
+        let bench = profile();
 
         // Serial reference (the old `dataset::build` shape: one thread,
         // one Vec).
@@ -62,7 +117,7 @@ fn main() {
                 black_box(recs);
             },
         );
-        report_throughput(&r_serial, rows as f64, "rows");
+        rep.record_throughput(&r_serial, rows as f64, "rows");
 
         // Streamed chunk-parallel build into memory.
         let r_mem = bench.run(
@@ -74,7 +129,7 @@ fn main() {
                 black_box(sink.records);
             },
         );
-        report_throughput(&r_mem, rows as f64, "rows");
+        rep.record_throughput(&r_mem, rows as f64, "rows");
 
         // Streamed to round-robin CSV shards on disk.
         let dir = std::env::temp_dir()
@@ -85,7 +140,7 @@ fn main() {
                 .unwrap();
             black_box(sink.written());
         });
-        report_throughput(&r_csv, rows as f64, "rows");
+        rep.record_throughput(&r_csv, rows as f64, "rows");
         std::fs::remove_dir_all(&dir).ok();
 
         // Streamed through a training-split reservoir.
@@ -95,13 +150,60 @@ fn main() {
                 .unwrap();
             black_box(sink.records().len());
         });
-        report_throughput(&r_res, rows as f64, "rows");
+        rep.record_throughput(&r_res, rows as f64, "rows");
 
+        par_over_serial = r_serial.mean.as_secs_f64() / r_mem.mean.as_secs_f64();
         println!(
-            "  parallel/serial speedup: {:.2}x over {} rows ({} threads)\n",
-            r_serial.mean.as_secs_f64() / r_mem.mean.as_secs_f64(),
-            rows,
-            threads
+            "  parallel/serial speedup: {par_over_serial:.2}x over {rows} rows \
+             ({threads} threads)\n"
         );
     }
+    rep.note("parallel_over_serial", par_over_serial);
+
+    // Format shootout: write + read a fabricated >= 100k-row block
+    // through both shard formats. The generator is out of the loop, so
+    // this isolates exactly what `generate --format bin` changes.
+    {
+        let rows = if smoke { 20_000 } else { 150_000 };
+        let recs = fabricate(rows);
+        let bench = profile();
+        let dir = std::env::temp_dir()
+            .join(format!("lmtuner-perf-fmt-{}", std::process::id()));
+        let mut means = Vec::new();
+        for format in [ShardFormat::Csv, ShardFormat::Bin] {
+            let r_w = bench.run(&format!("{format} write ({rows} rows, 4 shards)"), || {
+                let mut s =
+                    ShardedSink::create(&dir, 4, dev.key, Schema::V1, format)
+                        .unwrap();
+                for rec in &recs {
+                    s.accept(rec).unwrap();
+                }
+                s.finish().unwrap();
+                black_box(s.written());
+            });
+            rep.record_throughput(&r_w, rows as f64, "rows");
+            let r_r = bench.run(&format!("{format} read ({rows} rows, 4 shards)"), || {
+                let mut n = 0u64;
+                sink::stream_sharded_rows(&dir, |_, _, row| {
+                    n += 1;
+                    black_box(&row);
+                    Ok(())
+                })
+                .unwrap();
+                assert_eq!(n, rows as u64);
+            });
+            rep.record_throughput(&r_r, rows as f64, "rows");
+            means.push(r_w.mean.as_secs_f64() + r_r.mean.as_secs_f64());
+            std::fs::remove_dir_all(&dir).ok();
+        }
+        let ratio = means[0] / means[1];
+        println!(
+            "  binary over CSV (write+read): {ratio:.2}x over {rows} rows\n"
+        );
+        rep.note("bin_over_csv_write_read", ratio);
+        rep.note("format_shootout_rows", rows as f64);
+    }
+
+    let path = rep.write().expect("write BENCH_perf_dataset.json");
+    println!("json report: {}", path.display());
 }

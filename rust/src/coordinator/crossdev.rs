@@ -21,7 +21,7 @@
 //! saw. `lmtuner crossdev` writes the count-based matrix to CSV for
 //! EXPERIMENTS.md.
 
-use std::path::Path;
+use std::path::{Path, PathBuf};
 
 use anyhow::{Context, Result};
 
@@ -30,10 +30,23 @@ use crate::kernelmodel::features::NUM_FEATURES;
 use crate::ml::metrics::{Accuracy, AccuracyAccumulator, JointAccumulator};
 use crate::runtime::executor::{BatchExecutor, ForestRegistry};
 use crate::sim::exec::{Schema, SpeedupRecord, TuneRecord};
+use crate::synth::binfmt::ShardFormat;
+use crate::synth::sink::{MemorySink, RecordSink, ShardedSink};
 use crate::synth::{dataset, generator, sweep::LaunchSweep};
 use crate::util::prng::Rng;
 
 use super::train::{self, TrainConfig};
+
+/// Optional raw-dataset dump alongside the accuracy matrix: every
+/// device's measured stream is sharded under `dir/<device-key>/` in the
+/// requested format, so one crossdev run doubles as a multi-device
+/// dataset-generation pass.
+#[derive(Clone, Debug)]
+pub struct DumpSpec {
+    pub dir: PathBuf,
+    pub format: ShardFormat,
+    pub shards: usize,
+}
 
 /// Configuration of one cross-device run.
 #[derive(Clone, Debug)]
@@ -42,6 +55,8 @@ pub struct CrossDevConfig {
     pub base: TrainConfig,
     /// The portfolio: one model and one testbed per entry (>= 2).
     pub devices: Vec<DeviceSpec>,
+    /// Also persist each device's dataset as disk shards.
+    pub dump: Option<DumpSpec>,
 }
 
 /// The train-on-A/test-on-B result grid. Row index = the device the
@@ -194,15 +209,75 @@ pub fn run_with_progress(
     let sweep = LaunchSweep::new(2048, 2048);
     let build = train::build_config(base);
 
-    // Phase 1 per device: identical template population (same seed),
-    // measured on that device, split identically, one forest each.
+    // Each device's stream lands in memory for the fit, optionally
+    // teeing to disk shards when a dump was requested.
+    enum GenSink {
+        Plain(MemorySink),
+        Dumped(MemorySink, ShardedSink),
+    }
+    impl RecordSink for GenSink {
+        fn accept(&mut self, rec: &TuneRecord) -> Result<()> {
+            match self {
+                GenSink::Plain(m) => m.accept(rec),
+                GenSink::Dumped(m, s) => {
+                    m.accept(rec)?;
+                    s.accept(rec)
+                }
+            }
+        }
+        fn finish(&mut self) -> Result<()> {
+            match self {
+                GenSink::Plain(m) => m.finish(),
+                GenSink::Dumped(m, s) => {
+                    m.finish()?;
+                    s.finish()
+                }
+            }
+        }
+    }
+
+    // Phase 1: one generation pass measures every template on every
+    // device in the portfolio (the per-device streams are bit-identical
+    // to per-device builds — see `dataset::build_multi_device`), then
+    // each device's records split identically and fit one forest each.
+    progress(&format!(
+        "building datasets for {} devices in one pass",
+        cfg.devices.len()
+    ));
+    let mut rng = Rng::new(base.seed);
+    let templates = generator::generate(&mut rng, base.scale);
+    let mut sinks: Vec<GenSink> = Vec::with_capacity(cfg.devices.len());
+    for dev in &cfg.devices {
+        sinks.push(match &cfg.dump {
+            None => GenSink::Plain(MemorySink::new()),
+            Some(spec) => GenSink::Dumped(
+                MemorySink::new(),
+                ShardedSink::create(
+                    &spec.dir.join(dev.key),
+                    spec.shards,
+                    dev.key,
+                    base.schema,
+                    spec.format,
+                )?,
+            ),
+        });
+    }
+    dataset::build_multi_device(
+        &templates,
+        &sweep,
+        &cfg.devices,
+        &build,
+        &mut sinks,
+        None,
+    )?;
+
     let mut registry = ForestRegistry::new();
     let mut tests: Vec<Vec<TuneRecord>> = Vec::with_capacity(cfg.devices.len());
-    for dev in &cfg.devices {
-        progress(&format!("building dataset + model for {}", dev.key));
-        let mut rng = Rng::new(base.seed);
-        let templates = generator::generate(&mut rng, base.scale);
-        let records = dataset::build(&templates, &sweep, dev, &build);
+    for (dev, sink) in cfg.devices.iter().zip(sinks) {
+        progress(&format!("fitting the {} model", dev.key));
+        let records = match sink {
+            GenSink::Plain(m) | GenSink::Dumped(m, _) => m.records,
+        };
         anyhow::ensure!(
             !records.is_empty(),
             "{}: empty dataset at scale {}",
@@ -297,6 +372,7 @@ mod tests {
                 ..Default::default()
             },
             devices,
+            dump: None,
         }
     }
 
@@ -381,6 +457,41 @@ mod tests {
             (0..2).any(|i| jm[i][i] > 0.0),
             "joint diagonal all zero: {jm:?}"
         );
+    }
+
+    #[test]
+    fn dump_writes_per_device_shards_in_one_pass() {
+        use crate::synth::sink;
+        let dir = std::env::temp_dir()
+            .join(format!("lmtuner-crossdev-dump-{}", std::process::id()));
+        let mut cfg = small_cfg(vec![DeviceSpec::m2090(), DeviceSpec::k20()]);
+        cfg.dump = Some(DumpSpec {
+            dir: dir.clone(),
+            format: ShardFormat::Bin,
+            shards: 2,
+        });
+        let m = run(&cfg).unwrap();
+        assert_eq!(m.devices, vec!["m2090", "k20"]);
+        for key in ["m2090", "k20"] {
+            let (recs, stream) = sink::load_sharded_tagged(&dir.join(key)).unwrap();
+            assert_eq!(stream.device.as_deref(), Some(key));
+            assert_eq!(stream.format, ShardFormat::Bin);
+            assert!(!recs.is_empty(), "{key}: empty dump");
+            // the dump is the stream the model fitted on: same records
+            // the single-device reference build measures on this device
+            let dev = if key == "m2090" {
+                DeviceSpec::m2090()
+            } else {
+                DeviceSpec::k20()
+            };
+            let reference = train::build_records(&dev, &cfg.base);
+            assert_eq!(recs.len(), reference.len());
+            assert_eq!(
+                recs[0].base.features.map(|x| x as f32),
+                reference[0].base.features.map(|x| x as f32)
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -29,10 +29,12 @@ use crate::ml::metrics::{
 };
 use crate::ml::{export, io};
 use crate::sim::exec::{MeasureConfig, Schema, SpeedupRecord, TuneRecord};
+use crate::synth::binfmt::ShardFormat;
 use crate::synth::dataset::BuildProgress;
+use crate::synth::pipeline::{PipelineSpec, StageCounters, StagedSink};
 use crate::util::pool::parallel_map;
 use crate::synth::sink::{
-    self, DatasetSummary, MemorySink, ReservoirSink, ShardedCsvSink, Tee,
+    self, DatasetSummary, MemorySink, ReservoirSink, ShardedSink, Tee,
 };
 use crate::synth::{dataset, generator, sweep::LaunchSweep};
 use crate::util::prng::Rng;
@@ -80,14 +82,22 @@ impl Default for TrainConfig {
 #[derive(Clone, Debug)]
 pub struct ShardedTrainConfig {
     pub base: TrainConfig,
-    /// Directory receiving `shard-NNN.csv` files.
+    /// Directory receiving `shard-NNNNN.{csv,bin}` files.
     pub out_dir: PathBuf,
-    /// Number of CSV shards.
+    /// Number of shards.
     pub shards: usize,
     /// Reservoir capacity for the training split. Plays the role of
     /// `train_fraction` when the stream length is unknown: the forest
     /// fits on a uniform sample of this size, everything else is test.
     pub train_capacity: usize,
+    /// On-disk shard format. Defaults to CSV: the text format preserves
+    /// f64 speedups exactly, while the binary format quantizes columns
+    /// to f32 (fine for training, but callers opt in explicitly).
+    pub format: ShardFormat,
+    /// Per-record stages (validate / dedup) between the generator and
+    /// the shards + reservoir. Records a stage drops are neither
+    /// persisted nor eligible for the training sample.
+    pub stages: PipelineSpec,
 }
 
 impl ShardedTrainConfig {
@@ -97,6 +107,8 @@ impl ShardedTrainConfig {
             out_dir,
             shards: 8,
             train_capacity: 50_000,
+            format: ShardFormat::Csv,
+            stages: PipelineSpec::default(),
         }
     }
 }
@@ -126,6 +138,10 @@ pub struct TrainOutcome {
     /// Joint verdict × workgroup metrics over the held-out split
     /// (schema v2 runs only).
     pub joint: Option<JointAccuracy>,
+    /// Per-stage seen/kept/dropped tallies when the sharded pipeline ran
+    /// with validate/dedup stages (empty otherwise, and always empty for
+    /// the in-memory pipeline).
+    pub stage_counters: Vec<StageCounters>,
 }
 
 /// Fit the forest on a training split, with the optional OOB pass.
@@ -249,6 +265,7 @@ pub fn run_with_progress(
         fit_seconds,
         oob,
         joint,
+        stage_counters: Vec::new(),
     }
 }
 
@@ -268,16 +285,29 @@ pub fn run_sharded(
     let sweep = LaunchSweep::new(2048, 2048);
     let build = build_config(base);
 
-    // Pass 1: simulate once, streaming every record to the CSV shards
-    // while the reservoir uniformly samples the training split. Every
-    // shard is stamped with the device it was measured on.
-    let mut shards =
-        ShardedCsvSink::create_schema(&cfg.out_dir, cfg.shards, dev.key, base.schema)?;
+    // Pass 1: simulate once, streaming every record through the
+    // configured stages (validate / dedup, usually none) into the disk
+    // shards while the reservoir uniformly samples the training split.
+    // Every shard is stamped with the device it was measured on; records
+    // a stage drops reach neither the shards nor the reservoir.
+    let mut shards = ShardedSink::create(
+        &cfg.out_dir,
+        cfg.shards,
+        dev.key,
+        base.schema,
+        cfg.format,
+    )?;
     let mut reservoir =
         ReservoirSink::new(cfg.train_capacity, base.seed ^ 0x7EA1_5A3D);
-    let mut tee = Tee(&mut shards, &mut reservoir);
-    let summary =
-        dataset::build_streaming(&templates, &sweep, dev, &build, &mut tee, progress)?;
+    let (summary, stage_counters) = {
+        let tee = Tee(&mut shards, &mut reservoir);
+        let mut staged = StagedSink::new(tee, cfg.stages.build(base.schema));
+        let summary = dataset::build_streaming(
+            &templates, &sweep, dev, &build, &mut staged, progress,
+        )?;
+        (summary, staged.counters())
+    };
+    let written = shards.written();
     let gen_seconds = t0.elapsed().as_secs_f64();
 
     let (train_records, train_indices) = reservoir.into_sample();
@@ -319,13 +349,16 @@ pub fn run_sharded(
         Ok(())
     })?;
     grade_rows(&mut acc, &mut joint_acc, &forest, &batch, threads);
+    // Compare against what the shards actually accepted, not the raw
+    // generated count: validate/dedup stages legitimately drop records
+    // before they reach disk.
     anyhow::ensure!(
-        replay.rows == summary.records,
-        "{}: shards replay {} records but the build streamed {} — \
+        replay.rows == written,
+        "{}: shards replay {} records but the sink accepted {} — \
          stale files in the output directory?",
         cfg.out_dir.display(),
         replay.rows,
-        summary.records
+        written
     );
     // The shards we just wrote must replay as the device we simulated;
     // anything else means foreign files crept into the directory.
@@ -340,7 +373,7 @@ pub fn run_sharded(
          {}-record stream, leaving nothing to evaluate; lower \
          train_capacity below the stream size or raise scale",
         cfg.train_capacity,
-        summary.records
+        written
     );
 
     let per_benchmark = evaluate_real(dev, &forest, &base.measure);
@@ -357,6 +390,7 @@ pub fn run_sharded(
         fit_seconds,
         oob,
         joint: joint_acc.map(|j| j.finish()),
+        stage_counters,
     })
 }
 
@@ -568,6 +602,43 @@ mod tests {
             assert_eq!(a.base.features, b.base.features);
             assert!((a.base.speedup - b.base.speedup).abs() < 1e-9);
         }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn sharded_pipeline_runs_on_binary_shards_with_stages() {
+        let dev = DeviceSpec::m2090();
+        let dir = std::env::temp_dir()
+            .join(format!("lmtuner-train-bin-{}", std::process::id()));
+        let cfg = ShardedTrainConfig {
+            shards: 3,
+            train_capacity: 200,
+            format: ShardFormat::Bin,
+            stages: PipelineSpec { validate: true, dedup: true },
+            ..ShardedTrainConfig::new(
+                TrainConfig {
+                    scale: 0.02,
+                    configs_per_kernel: 4,
+                    ..Default::default()
+                },
+                dir.clone(),
+            )
+        };
+        let out = run_sharded(&dev, &cfg, None).unwrap();
+        assert!(out.records.is_empty());
+        assert_eq!(out.train_size, 200);
+        // stage counters came back in pipeline order and agree with the
+        // persisted stream: kept records = shards on disk.
+        assert_eq!(out.stage_counters.len(), 2);
+        assert_eq!(out.stage_counters[0].name, "validate");
+        assert_eq!(out.stage_counters[1].name, "dedup");
+        assert_eq!(out.stage_counters[0].seen, out.summary.records);
+        let kept = out.stage_counters[1].seen - out.stage_counters[1].dropped;
+        let stream = sink::stream_sharded_rows(&dir, |_, _, _| Ok(())).unwrap();
+        assert_eq!(stream.format, ShardFormat::Bin);
+        assert_eq!(stream.rows, kept);
+        // every kept row was either sampled for training or graded
+        assert_eq!(out.synth_accuracy.n as u64 + out.train_size as u64, kept);
         std::fs::remove_dir_all(&dir).ok();
     }
 

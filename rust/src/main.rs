@@ -34,7 +34,10 @@ use lmtuner::ml::{io as model_io, metrics, select};
 use lmtuner::report::{figures, tables};
 use lmtuner::runtime::pjrt::Engine;
 use lmtuner::sim::exec::{MeasureConfig, Schema, SpeedupRecord};
+use lmtuner::synth::binfmt::ShardFormat;
 use lmtuner::synth::dataset;
+use lmtuner::synth::pipeline::{PipelineSpec, StageCounters, StagedSink};
+use lmtuner::synth::sink::{self as shard_sink, ShardedSink};
 use lmtuner::util::cli::Args;
 use lmtuner::util::prng::Rng;
 
@@ -46,21 +49,30 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "lmtuner <generate|train|tune|crossdev|eval|analyze|predict|serve|reproduce|info> [options]\n\
+    "lmtuner <generate|train|tune|crossdev|eval|shards|analyze|predict|serve|reproduce|info> [options]\n\
      \n\
      generate  --out data/synth.csv [--device m2090] [--scale 0.2]\n\
                [--configs 24] [--seed N] [--schema v1|v2]\n\
-               [--shards N --out-dir data/shards]  (streamed, sharded CSV)\n\
-               (--schema v2 adds the measured-best workgroup label per\n\
-                instance; shards/files are stamped `# schema=v2`)\n\
+               [--shards N --out-dir data/shards] [--format csv|bin]\n\
+               [--dedup] [--validate] [--devices m2090,k20,...]\n\
+               (--shards streams shards to --out-dir; --format defaults\n\
+                to the binary columnar format there, csv for --out;\n\
+                --dedup/--validate insert pipeline stages; --devices\n\
+                measures every device in ONE pass, sharding each stream\n\
+                to --out-dir/<key>/; --schema v2 adds the measured-best\n\
+                workgroup label per instance)\n\
      train     --model models/rf.txt [--device m2090] [--data data/synth.csv]\n\
                [--scale 0.2] [--configs 24] [--trees 20] [--mtry 4]\n\
                [--min-leaf 1] [--engine binned|exact] [--train-frac 0.1]\n\
                [--forest-config models/forest-config.txt] [--oob]\n\
                [--schema v1|v2]\n\
                [--shards N --out-dir data/shards --train-cap 50000]\n\
+               [--format csv|bin] [--dedup] [--validate]\n\
                (--shards streams the dataset to disk: bounded memory at\n\
                 any --scale; the forest fits on a reservoir sample;\n\
+                --format bin writes binary columnar shards (default csv:\n\
+                exact f64 speedups); --dedup/--validate filter the\n\
+                stream before it reaches disk + reservoir;\n\
                 --forest-config loads a `lmtuner tune` winner, explicit\n\
                 flags still override it; --schema v2 trains the joint\n\
                 verdict x workgroup-size forest and reports the joint\n\
@@ -74,12 +86,19 @@ fn usage() -> &'static str {
      crossdev  [--devices m2090,gtx480,gtx680,k20] [--out data/crossdev.csv]\n\
                [--scale 0.05] [--configs 8] [--train-frac 0.1] [--seed N]\n\
                [--forest-config models/forest-config.txt] [--schema v1|v2]\n\
+               [--dump-dir DIR [--dump-shards N] [--format csv|bin]]\n\
                (train-on-A/test-on-B accuracy matrix over the portfolio;\n\
-                --schema v2 additionally grades the joint verdict x\n\
-                workgroup metric per cell)\n\
+                --dump-dir also shards every device's dataset under\n\
+                DIR/<key>/ in the one generation pass; --schema v2\n\
+                additionally grades the joint verdict x workgroup\n\
+                metric per cell)\n\
      eval      --model models/rf.txt [--data data/synth.csv] [--real]\n\
-               [--device KEY]  (must match the dataset's stamped device;\n\
-                the model's output arity must match the dataset schema)\n\
+               [--device KEY]  (--data takes a CSV file, a binary shard,\n\
+                or a shard directory in either format; the stamped device\n\
+                must match --device, the model's output arity the schema)\n\
+     shards    <dir>  (inspect a shard directory: per-shard format,\n\
+                device, schema, rows, checksum; nonzero exit on corrupt\n\
+                or incoherent shards)\n\
      analyze   <kernel.cl> --array NAME [--kernel NAME] [--device m2090]\n\
                [--wg 16x16] [--grid 512x512] [--set w=512,radius=2,...]\n\
                [--model models/rf.txt]\n\
@@ -113,6 +132,7 @@ fn run() -> Result<()> {
         Some("tune") => cmd_tune(&mut args),
         Some("crossdev") => cmd_crossdev(&mut args),
         Some("eval") => cmd_eval(&mut args),
+        Some("shards") => cmd_shards(&mut args),
         Some("analyze") => cmd_analyze(&mut args),
         Some("predict") => cmd_predict(&mut args),
         Some("serve") => cmd_serve(&mut args),
@@ -189,6 +209,28 @@ fn train_config(args: &mut Args) -> Result<TrainConfig> {
     Ok(cfg)
 }
 
+/// `--format csv|bin` with a per-command default.
+fn format_arg(args: &mut Args, default: ShardFormat) -> Result<ShardFormat> {
+    match args.opt_str("format") {
+        Some(s) => s.parse().map_err(anyhow::Error::msg),
+        None => Ok(default),
+    }
+}
+
+/// `--dedup` / `--validate` select the per-record pipeline stages.
+fn pipeline_args(args: &mut Args) -> PipelineSpec {
+    PipelineSpec {
+        validate: args.flag("validate"),
+        dedup: args.flag("dedup"),
+    }
+}
+
+fn print_stage_counters(counters: &[StageCounters]) {
+    for c in counters {
+        println!("stage {c}");
+    }
+}
+
 /// Progress callback printing build throughput to stderr at most every
 /// two seconds (and on the final chunk).
 fn progress_printer() -> impl FnMut(&lmtuner::synth::dataset::BuildProgress) {
@@ -210,6 +252,7 @@ fn progress_printer() -> impl FnMut(&lmtuner::synth::dataset::BuildProgress) {
 }
 
 fn cmd_generate(args: &mut Args) -> Result<()> {
+    let devices_arg = args.str_or("devices", "");
     let dev = &device_arg(args)?;
     let out_explicit = args.opt_str("out");
     let out = PathBuf::from(out_explicit.as_deref().unwrap_or("data/synth.csv"));
@@ -217,6 +260,14 @@ fn cmd_generate(args: &mut Args) -> Result<()> {
     let out_dir_explicit = args.opt_str("out-dir");
     let out_dir =
         PathBuf::from(out_dir_explicit.as_deref().unwrap_or("data/shards"));
+    // Sharded generation defaults to the binary columnar format — at
+    // paper scale the CSV encode/parse cost dominates the pass.
+    let format_explicit = args.opt_str("format");
+    let format = match format_explicit.as_deref() {
+        Some(s) => s.parse().map_err(anyhow::Error::msg)?,
+        None => ShardFormat::Bin,
+    };
+    let stages = pipeline_args(args);
     let cfg = train_config(args)?;
     args.finish().map_err(anyhow::Error::msg)?;
     if shards.is_some() && out_explicit.is_some() {
@@ -229,40 +280,103 @@ fn cmd_generate(args: &mut Args) -> Result<()> {
     if shards.is_none() && out_dir_explicit.is_some() {
         bail!("--out-dir requires --shards N (single-file output uses --out)");
     }
+    if shards.is_none() && format_explicit.is_some() {
+        bail!("--format requires --shards N (single-file --out is always CSV)");
+    }
+    if !devices_arg.is_empty() && shards.is_none() {
+        bail!("--devices requires --shards N (one shard dir per device)");
+    }
 
-    println!("device: {} ({}); schema: {}", dev.name, dev.key, cfg.schema);
     let mut rng = Rng::new(cfg.seed);
     let templates = lmtuner::synth::generator::generate(&mut rng, cfg.scale);
     let sweep = lmtuner::synth::sweep::LaunchSweep::new(2048, 2048);
     let build = train::build_config(&cfg);
     let mut progress = progress_printer();
+
+    if !devices_arg.is_empty() {
+        // Multi-device: measure every template on every device in one
+        // pass, each stream staged + sharded under out_dir/<key>/.
+        let devices = devices_arg
+            .split(',')
+            .map(registry::get)
+            .collect::<Result<Vec<_>>>()?;
+        let shards = shards.unwrap();
+        println!(
+            "devices: [{}]; schema: {}; format: {format}",
+            devices.iter().map(|d| d.key).collect::<Vec<_>>().join(", "),
+            cfg.schema
+        );
+        let mut sinks: Vec<StagedSink<ShardedSink>> = Vec::new();
+        for d in &devices {
+            sinks.push(StagedSink::new(
+                ShardedSink::create(
+                    &out_dir.join(d.key),
+                    shards,
+                    d.key,
+                    cfg.schema,
+                    format,
+                )?,
+                stages.build(cfg.schema),
+            ));
+        }
+        let summaries = dataset::build_multi_device(
+            &templates,
+            &sweep,
+            &devices,
+            &build,
+            &mut sinks,
+            Some(&mut progress),
+        )?;
+        for ((d, sink), summary) in devices.iter().zip(&sinks).zip(&summaries) {
+            println!(
+                "{}: wrote {} instances to {} ({} shards); beneficial \
+                 {:.1}%, geomean {:.2}x",
+                d.key,
+                sink.inner().written(),
+                out_dir.join(d.key).display(),
+                shards,
+                100.0 * summary.beneficial_fraction(),
+                summary.geomean_speedup()
+            );
+            print_stage_counters(&sink.counters());
+        }
+        return Ok(());
+    }
+
+    println!("device: {} ({}); schema: {}", dev.name, dev.key, cfg.schema);
     let summary = if let Some(shards) = shards {
         // Streamed, sharded build: bounded memory at any scale.
-        let mut sink = lmtuner::synth::sink::ShardedCsvSink::create_schema(
-            &out_dir, shards, dev.key, cfg.schema,
-        )?;
+        let sink =
+            ShardedSink::create(&out_dir, shards, dev.key, cfg.schema, format)?;
+        let mut staged = StagedSink::new(sink, stages.build(cfg.schema));
         let summary = dataset::build_streaming(
-            &templates, &sweep, dev, &build, &mut sink, Some(&mut progress),
+            &templates, &sweep, dev, &build, &mut staged, Some(&mut progress),
         )?;
+        let sink = staged.inner();
         println!(
-            "wrote {} instances to {} ({} shards, device {}, schema {})",
+            "wrote {} instances to {} ({} shards, format {}, device {}, schema {})",
             sink.written(),
             out_dir.display(),
             sink.shards(),
+            sink.format(),
             sink.device(),
             sink.schema()
         );
+        print_stage_counters(&staged.counters());
         summary
     } else {
-        let mut sink = lmtuner::synth::sink::MemorySink::new();
+        let sink = lmtuner::synth::sink::MemorySink::new();
+        let mut staged = StagedSink::new(sink, stages.build(cfg.schema));
         let summary = dataset::build_streaming(
-            &templates, &sweep, dev, &build, &mut sink, Some(&mut progress),
+            &templates, &sweep, dev, &build, &mut staged, Some(&mut progress),
         )?;
         if let Some(dir) = out.parent() {
             std::fs::create_dir_all(dir)?;
         }
-        dataset::save_schema(&sink.records, &out, dev.key, cfg.schema)?;
-        println!("wrote {} instances to {}", sink.records.len(), out.display());
+        let records = &staged.inner().records;
+        dataset::save_schema(records, &out, dev.key, cfg.schema)?;
+        println!("wrote {} instances to {}", records.len(), out.display());
+        print_stage_counters(&staged.counters());
         summary
     };
     println!(
@@ -286,12 +400,20 @@ fn cmd_train(args: &mut Args) -> Result<()> {
     let train_cap: usize =
         args.get_or("train-cap", 50_000).map_err(anyhow::Error::msg)?;
     let train_frac_given = args.opt_str("train-frac").is_some();
+    let format_explicit = args.opt_str("format").is_some();
+    // CSV default: the text shards carry exact f64 speedups; --format
+    // bin opts into the f32-quantized columnar format.
+    let format = format_arg(args, ShardFormat::Csv)?;
+    let stages = pipeline_args(args);
     let cfg = train_config(args)?;
     args.finish().map_err(anyhow::Error::msg)?;
     if shards.is_none() && (out_dir_explicit.is_some() || train_cap_explicit) {
         // These options select the streaming pipeline; consuming them
         // silently would run the in-memory path the user asked to avoid.
         bail!("--out-dir/--train-cap require --shards N (streamed mode)");
+    }
+    if shards.is_none() && (format_explicit || !stages.is_empty()) {
+        bail!("--format/--dedup/--validate require --shards N (streamed mode)");
     }
     if shards.is_some() {
         if train_frac_given {
@@ -331,18 +453,22 @@ fn cmd_train(args: &mut Args) -> Result<()> {
         let scfg = train::ShardedTrainConfig {
             shards,
             train_capacity: train_cap,
+            format,
+            stages,
             ..train::ShardedTrainConfig::new(cfg, out_dir.clone())
         };
         println!(
-            "streaming dataset to {} ({} shards, train reservoir {})",
+            "streaming dataset to {} ({} shards, format {}, train reservoir {})",
             scfg.out_dir.display(),
             scfg.shards,
+            scfg.format,
             scfg.train_capacity
         );
         train::run_sharded(dev, &scfg, Some(&mut progress))?
     } else {
         train::run_with_progress(dev, &cfg, Some(&mut progress))
     };
+    print_stage_counters(&out.stage_counters);
     println!(
         "dataset: {} instances in {:.1}s; trained on {} in {:.1}s (max depth {}, max nodes {})",
         out.summary.records,
@@ -491,7 +617,20 @@ fn cmd_crossdev(args: &mut Args) -> Result<()> {
     if let Some(s) = args.opt_str("schema") {
         base.schema = s.parse().map_err(anyhow::Error::msg)?;
     }
+    let dump_dir = args.opt_str("dump-dir").map(PathBuf::from);
+    let dump_shards: usize =
+        args.get_or("dump-shards", 4).map_err(anyhow::Error::msg)?;
+    let dump_format_explicit = args.opt_str("format").is_some();
+    let dump_format = format_arg(args, ShardFormat::Bin)?;
     args.finish().map_err(anyhow::Error::msg)?;
+    if dump_dir.is_none() && dump_format_explicit {
+        bail!("--format requires --dump-dir DIR (it sets the dump shard format)");
+    }
+    let dump = dump_dir.map(|dir| crossdev::DumpSpec {
+        dir,
+        format: dump_format,
+        shards: dump_shards,
+    });
 
     let devices = if devices_arg.is_empty() {
         registry::all()
@@ -507,9 +646,17 @@ fn cmd_crossdev(args: &mut Args) -> Result<()> {
         base.scale,
         base.configs_per_kernel
     );
+    if let Some(spec) = &dump {
+        println!(
+            "dumping each device's dataset to {}/<key>/ ({} shards, format {})",
+            spec.dir.display(),
+            spec.shards,
+            spec.format
+        );
+    }
     let t0 = std::time::Instant::now();
     let matrix = crossdev::run_with_progress(
-        &crossdev::CrossDevConfig { base, devices },
+        &crossdev::CrossDevConfig { base, devices, dump },
         |stage| eprintln!("  {stage}"),
     )?;
     print!("{}", matrix.render());
@@ -534,22 +681,28 @@ fn cmd_eval(args: &mut Args) -> Result<()> {
 
     let forest = model_io::load(&model_path)?;
     if let Some(p) = data {
-        let (records, tag) = dataset::load_tagged(&p)?;
+        // --data accepts a CSV file, a single binary shard, or a shard
+        // directory in either format.
+        let (records, tag, format) = dataset::load_any(&p)?;
         // Refuse to grade a dataset measured on a different device than
         // the one explicitly requested — the labels would not match the
         // testbed the caller thinks they are evaluating.
         if let (Some(_), Some(found)) = (&device_explicit, &tag.device) {
-            lmtuner::synth::sink::ensure_same_device(
+            shard_sink::ensure_same_device(
                 dev.key,
                 found,
                 p.display().to_string(),
             )?;
         }
         match &tag.device {
-            Some(d) => println!("dataset device: {d}; schema: {}", tag.schema),
+            Some(d) => println!(
+                "dataset device: {d}; schema: {}; format: {format}",
+                tag.schema
+            ),
             None => {
                 println!(
-                    "dataset device: <unstamped legacy file>; schema: {}",
+                    "dataset device: <unstamped legacy file>; schema: {}; \
+                     format: {format}",
                     tag.schema
                 )
             }
@@ -623,6 +776,75 @@ fn cmd_eval(args: &mut Args) -> Result<()> {
         }
         warn_skipped(per.iter().map(|(_, a)| a.skipped).sum());
     }
+    Ok(())
+}
+
+/// Inspect a shard directory: one line per shard (format, device,
+/// schema, rows, checksum), then stream totals. Any corrupt shard or
+/// cross-shard incoherence (mixed formats/devices/schemas, gaps) is an
+/// error, so the nonzero exit makes this a cheap integrity probe.
+fn cmd_shards(args: &mut Args) -> Result<()> {
+    let dir = args
+        .positional()
+        .get(1)
+        .cloned()
+        .context("usage: lmtuner shards <dir>")?;
+    args.finish().map_err(anyhow::Error::msg)?;
+    let dir = PathBuf::from(dir);
+
+    let listing = shard_sink::shard_listing(&dir)?;
+    let mut total_rows = 0u64;
+    let mut first: Option<shard_sink::ShardInfo> = None;
+    for (idx, _, path) in &listing {
+        let info = shard_sink::inspect_shard(path)?;
+        println!(
+            "shard {idx:>5}  {}  rows {:>10}  device {:<10}  schema {}  checksum {}",
+            info.format,
+            info.rows,
+            info.device.as_deref().unwrap_or("<unstamped>"),
+            info.schema,
+            match info.checksum {
+                Some(c) => format!("{c:016x}"),
+                None => "-".into(),
+            }
+        );
+        total_rows += info.rows;
+        if let Some(f) = &first {
+            if info.format != f.format {
+                return Err(shard_sink::FormatMismatch {
+                    expected: f.format,
+                    found: info.format,
+                    at: path.display().to_string(),
+                }
+                .into());
+            }
+            if info.schema != f.schema {
+                return Err(shard_sink::SchemaMismatch {
+                    expected: f.schema,
+                    found: info.schema,
+                    at: path.display().to_string(),
+                }
+                .into());
+            }
+            shard_sink::ensure_same_device(
+                f.device.as_deref().unwrap_or("<unstamped>"),
+                info.device.as_deref().unwrap_or("<unstamped>"),
+                path.display().to_string(),
+            )?;
+        } else {
+            first = Some(info);
+        }
+    }
+    let f = first.expect("shard_listing never returns an empty listing");
+    println!(
+        "{}: {} shard(s), {} rows, format {}, device {}, schema {}",
+        dir.display(),
+        listing.len(),
+        total_rows,
+        f.format,
+        f.device.as_deref().unwrap_or("<unstamped>"),
+        f.schema
+    );
     Ok(())
 }
 

@@ -1,0 +1,811 @@
+//! Binary columnar shard format (`shard-NNNNN.bin`): the paper-scale
+//! dataset plane.
+//!
+//! CSV moves every record through number formatting and parsing; at the
+//! ~6.5M-instance scale that is the bottleneck of shard generation and
+//! of the two-pass sharded training replay, and the text encoding
+//! bloats disk ~4x. This module is the compact alternative behind the
+//! same [`super::sink::RecordSink`] contract:
+//!
+//! * fixed-width little-endian `f32` column planes, written in blocks
+//!   of [`BLOCK_ROWS`] rows so a shard streams in bounded memory both
+//!   ways (no full-shard column buffer);
+//! * a versioned header carrying the device key, the dataset
+//!   [`Schema`], the row count, and an FNV-1a checksum over every data
+//!   byte — truncation and bit rot surface as the typed
+//!   [`CorruptShard`] error, never a panic or silently-wrong floats;
+//! * plain `std::io` buffered reads/writes, no new dependencies.
+//!
+//! Layout (all integers little-endian):
+//!
+//! ```text
+//! magic    [u8; 4]  = b"LMTB"
+//! version  u16      = 1
+//! schema   u8       (1 = v1, 2 = v2)
+//! dev_len  u8
+//! device   [u8; dev_len]  (UTF-8 device key)
+//! columns  u16      (= schema.columns(); rejects a mislabeled header)
+//! rows     u64      (patched on finish)
+//! checksum u64      (FNV-1a 64 over all bytes after the header;
+//!                    patched on finish)
+//! blocks*  each: rows_in_block u32 (1..=BLOCK_ROWS), then one f32
+//!          plane per column (column-major within the block)
+//! ```
+//!
+//! The row layout is exactly the CSV column order
+//! (`dataset::csv_header_for`): 18 features, speedup, and for v2 the
+//! workgroup label with its `(0, 0)` unlabeled sentinel. Values are
+//! quantized f64 -> f32 on write (features and labels in this dataset
+//! are f32-exact; measured speedups lose ~1e-7 relative precision,
+//! documented in DESIGN.md §2g). A zero-row shard is a header with
+//! `rows = 0` and no blocks — the legitimate trailing shard of a
+//! round-robin layout with fewer records than shards.
+
+use std::fmt;
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::sim::exec::{Schema, TuneRecord};
+
+use super::sink::{self, RecordSink};
+
+/// File magic of a binary shard; CSV shards start with `#` or a header
+/// letter, so the first four bytes discriminate the two formats.
+pub const MAGIC: [u8; 4] = *b"LMTB";
+
+/// On-disk format version this build writes and reads.
+pub const FORMAT_VERSION: u16 = 1;
+
+/// Rows per block: the streaming granularity of writer and reader.
+/// Peak transcoding memory is one block (`BLOCK_ROWS x columns` f64s
+/// plus its f32 byte image) per open shard.
+pub const BLOCK_ROWS: usize = 4096;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+fn fnv1a(hash: u64, bytes: &[u8]) -> u64 {
+    let mut h = hash;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// On-disk shard encoding: line-oriented CSV with `# key=value` meta
+/// lines, or the binary columnar layout of this module.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ShardFormat {
+    Csv,
+    Bin,
+}
+
+impl ShardFormat {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ShardFormat::Csv => "csv",
+            ShardFormat::Bin => "bin",
+        }
+    }
+
+    /// File extension of shards in this format.
+    pub fn ext(&self) -> &'static str {
+        self.as_str()
+    }
+}
+
+impl fmt::Display for ShardFormat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+impl std::str::FromStr for ShardFormat {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, String> {
+        match s {
+            "csv" => Ok(ShardFormat::Csv),
+            "bin" => Ok(ShardFormat::Bin),
+            other => Err(format!("unknown shard format {other:?} (csv|bin)")),
+        }
+    }
+}
+
+/// Typed error: a binary shard is structurally unsound — truncated
+/// mid-block, a mangled header, a row count that disagrees with the
+/// stream, or a checksum mismatch. Readers surface this instead of
+/// panicking or returning silently-wrong data.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CorruptShard {
+    pub path: String,
+    pub detail: String,
+}
+
+impl CorruptShard {
+    fn new(path: &Path, detail: impl Into<String>) -> Self {
+        CorruptShard { path: path.display().to_string(), detail: detail.into() }
+    }
+}
+
+impl fmt::Display for CorruptShard {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "corrupt binary shard {}: {}", self.path, self.detail)
+    }
+}
+
+impl std::error::Error for CorruptShard {}
+
+/// Sniff a shard file's format from its first four bytes (magic bytes
+/// = binary, anything else = CSV; `RowReader` then produces its own
+/// errors for files that are neither). An empty file is an error.
+pub fn detect_format(path: &Path) -> Result<ShardFormat> {
+    let mut f = File::open(path)
+        .with_context(|| format!("open {}", path.display()))?;
+    let mut head = [0u8; 4];
+    let mut filled = 0usize;
+    while filled < head.len() {
+        match f.read(&mut head[filled..]) {
+            Ok(0) => break,
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => {
+                return Err(e).with_context(|| format!("read {}", path.display()))
+            }
+        }
+    }
+    anyhow::ensure!(filled > 0, "{}: empty file", path.display());
+    if filled == head.len() && head == MAGIC {
+        Ok(ShardFormat::Bin)
+    } else {
+        Ok(ShardFormat::Csv)
+    }
+}
+
+fn schema_code(schema: Schema) -> u8 {
+    match schema {
+        Schema::V1 => 1,
+        Schema::V2 => 2,
+    }
+}
+
+fn schema_from_code(code: u8) -> Option<Schema> {
+    match code {
+        1 => Some(Schema::V1),
+        2 => Some(Schema::V2),
+        _ => None,
+    }
+}
+
+/// Incremental binary shard writer: header on creation (row count and
+/// checksum as placeholders), rows staged into one block at a time,
+/// both header fields patched in place on [`finish`](Self::finish).
+pub struct BinShardWriter {
+    w: BufWriter<File>,
+    path: PathBuf,
+    schema: Schema,
+    columns: usize,
+    /// Row-major staging area for the current block.
+    block: Vec<f64>,
+    rows: u64,
+    hash: u64,
+    /// Byte offset of the `rows` header field (checksum follows it).
+    patch_at: u64,
+    finished: bool,
+}
+
+impl BinShardWriter {
+    pub fn create(path: &Path, device: &str, schema: Schema) -> Result<Self> {
+        let dev = device.as_bytes();
+        anyhow::ensure!(
+            !dev.is_empty() && dev.len() <= u8::MAX as usize,
+            "{}: device key '{device}' must be 1..=255 bytes",
+            path.display()
+        );
+        let f = File::create(path)
+            .with_context(|| format!("create {}", path.display()))?;
+        let mut w = BufWriter::new(f);
+        let columns = schema.columns();
+        w.write_all(&MAGIC)?;
+        w.write_all(&FORMAT_VERSION.to_le_bytes())?;
+        w.write_all(&[schema_code(schema), dev.len() as u8])?;
+        w.write_all(dev)?;
+        w.write_all(&(columns as u16).to_le_bytes())?;
+        let patch_at = (4 + 2 + 2 + dev.len()) as u64 + 2;
+        w.write_all(&0u64.to_le_bytes())?; // rows, patched on finish
+        w.write_all(&0u64.to_le_bytes())?; // checksum, patched on finish
+        Ok(BinShardWriter {
+            w,
+            path: path.to_path_buf(),
+            schema,
+            columns,
+            block: Vec::with_capacity(BLOCK_ROWS * columns),
+            rows: 0,
+            hash: FNV_OFFSET,
+            patch_at,
+            finished: false,
+        })
+    }
+
+    pub fn schema(&self) -> Schema {
+        self.schema
+    }
+
+    /// Rows written so far.
+    pub fn rows(&self) -> u64 {
+        self.rows
+    }
+
+    /// Stage one row (CSV column order). Width-checked like
+    /// `RowWriter::write_row`; values are quantized to f32.
+    pub fn write_row(&mut self, row: &[f64]) -> Result<()> {
+        anyhow::ensure!(
+            row.len() == self.columns,
+            "{}: row width {} != schema {} width {}",
+            self.path.display(),
+            row.len(),
+            self.schema,
+            self.columns
+        );
+        self.block.extend_from_slice(row);
+        self.rows += 1;
+        if self.block.len() == BLOCK_ROWS * self.columns {
+            self.flush_block()?;
+        }
+        Ok(())
+    }
+
+    /// Encode the staged rows as one block: u32 row count, then one f32
+    /// plane per column.
+    fn flush_block(&mut self) -> Result<()> {
+        let rows = self.block.len() / self.columns;
+        if rows == 0 {
+            return Ok(());
+        }
+        let mut bytes = Vec::with_capacity(4 + rows * self.columns * 4);
+        bytes.extend_from_slice(&(rows as u32).to_le_bytes());
+        for c in 0..self.columns {
+            for r in 0..rows {
+                let v = self.block[r * self.columns + c] as f32;
+                bytes.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        self.hash = fnv1a(self.hash, &bytes);
+        self.w
+            .write_all(&bytes)
+            .with_context(|| format!("write {}", self.path.display()))?;
+        self.block.clear();
+        Ok(())
+    }
+
+    /// Flush the trailing block and patch the header's row count and
+    /// checksum in place.
+    pub fn finish(&mut self) -> Result<()> {
+        if self.finished {
+            return Ok(());
+        }
+        self.flush_block()?;
+        self.w
+            .flush()
+            .with_context(|| format!("flush {}", self.path.display()))?;
+        // The buffer is empty after flush, so seeking the inner file and
+        // writing the two trailer fields directly is sound.
+        let f = self.w.get_mut();
+        f.seek(SeekFrom::Start(self.patch_at))
+            .with_context(|| format!("seek {}", self.path.display()))?;
+        f.write_all(&self.rows.to_le_bytes())?;
+        f.write_all(&self.hash.to_le_bytes())?;
+        self.finished = true;
+        Ok(())
+    }
+}
+
+/// Streaming binary shard reader: header validated on open, rows
+/// decoded block by block; the declared row count and checksum are
+/// verified when the stream ends, so a truncated or bit-rotted shard is
+/// a [`CorruptShard`] error before its last row is trusted.
+pub struct BinShardReader {
+    r: BufReader<File>,
+    path: PathBuf,
+    device: String,
+    schema: Schema,
+    columns: usize,
+    rows_declared: u64,
+    checksum_declared: u64,
+    hash: u64,
+    rows_read: u64,
+    /// Decoded rows of the current block, row-major.
+    block: Vec<f64>,
+    pos: usize,
+    done: bool,
+}
+
+impl BinShardReader {
+    pub fn open(path: &Path) -> Result<Self> {
+        let f = File::open(path)
+            .with_context(|| format!("open {}", path.display()))?;
+        let mut r = BufReader::new(f);
+        let corrupt = |detail: String| CorruptShard::new(path, detail);
+        let mut read_exact = |buf: &mut [u8], what: &str| -> Result<()> {
+            r.read_exact(buf).map_err(|e| {
+                if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                    anyhow::Error::new(CorruptShard::new(
+                        path,
+                        format!("truncated header ({what})"),
+                    ))
+                } else {
+                    anyhow::Error::new(e).context(format!("read {}", path.display()))
+                }
+            })
+        };
+        let mut magic = [0u8; 4];
+        read_exact(&mut magic, "magic")?;
+        if magic != MAGIC {
+            return Err(corrupt(format!("bad magic {magic:02x?}")).into());
+        }
+        let mut u16buf = [0u8; 2];
+        read_exact(&mut u16buf, "version")?;
+        let version = u16::from_le_bytes(u16buf);
+        if version != FORMAT_VERSION {
+            return Err(corrupt(format!(
+                "format version {version} (this build reads {FORMAT_VERSION})"
+            ))
+            .into());
+        }
+        let mut pair = [0u8; 2];
+        read_exact(&mut pair, "schema/device length")?;
+        let schema = schema_from_code(pair[0])
+            .ok_or_else(|| corrupt(format!("unknown schema code {}", pair[0])))?;
+        let dev_len = pair[1] as usize;
+        if dev_len == 0 {
+            return Err(corrupt("empty device key".to_string()).into());
+        }
+        let mut dev = vec![0u8; dev_len];
+        read_exact(&mut dev, "device key")?;
+        let device = String::from_utf8(dev)
+            .map_err(|_| corrupt("device key is not UTF-8".to_string()))?;
+        read_exact(&mut u16buf, "column count")?;
+        let columns = u16::from_le_bytes(u16buf) as usize;
+        if columns != schema.columns() {
+            return Err(corrupt(format!(
+                "{columns} columns but schema {schema} has {}",
+                schema.columns()
+            ))
+            .into());
+        }
+        let mut u64buf = [0u8; 8];
+        read_exact(&mut u64buf, "row count")?;
+        let rows_declared = u64::from_le_bytes(u64buf);
+        read_exact(&mut u64buf, "checksum")?;
+        let checksum_declared = u64::from_le_bytes(u64buf);
+        Ok(BinShardReader {
+            r,
+            path: path.to_path_buf(),
+            device,
+            schema,
+            columns,
+            rows_declared,
+            checksum_declared,
+            hash: FNV_OFFSET,
+            rows_read: 0,
+            block: Vec::new(),
+            pos: 0,
+            done: false,
+        })
+    }
+
+    /// The device key stamped into the header.
+    pub fn device(&self) -> &str {
+        &self.device
+    }
+
+    pub fn schema(&self) -> Schema {
+        self.schema
+    }
+
+    pub fn columns(&self) -> usize {
+        self.columns
+    }
+
+    /// Row count declared by the header (verified against the stream at
+    /// EOF).
+    pub fn declared_rows(&self) -> u64 {
+        self.rows_declared
+    }
+
+    /// Checksum declared by the header (verified at EOF).
+    pub fn declared_checksum(&self) -> u64 {
+        self.checksum_declared
+    }
+
+    /// Next row in stream order (CSV column order, f32-quantized
+    /// values), or `None` after the last row of a verified stream.
+    pub fn next_row(&mut self) -> Result<Option<Vec<f64>>> {
+        loop {
+            if self.pos < self.block.len() {
+                let row = self.block[self.pos..self.pos + self.columns].to_vec();
+                self.pos += self.columns;
+                self.rows_read += 1;
+                return Ok(Some(row));
+            }
+            if self.done {
+                return Ok(None);
+            }
+            if !self.read_block()? {
+                self.done = true;
+                self.verify_trailer()?;
+                return Ok(None);
+            }
+        }
+    }
+
+    /// Decode the next block into `self.block`; `false` at clean EOF.
+    fn read_block(&mut self) -> Result<bool> {
+        let mut len = [0u8; 4];
+        let mut filled = 0usize;
+        while filled < len.len() {
+            match self.r.read(&mut len[filled..]) {
+                Ok(0) if filled == 0 => return Ok(false),
+                Ok(0) => {
+                    return Err(CorruptShard::new(
+                        &self.path,
+                        "truncated block header",
+                    )
+                    .into())
+                }
+                Ok(n) => filled += n,
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    return Err(anyhow::Error::new(e)
+                        .context(format!("read {}", self.path.display())))
+                }
+            }
+        }
+        let rows = u32::from_le_bytes(len) as usize;
+        if rows == 0 || rows > BLOCK_ROWS {
+            return Err(CorruptShard::new(
+                &self.path,
+                format!("block of {rows} rows (valid: 1..={BLOCK_ROWS})"),
+            )
+            .into());
+        }
+        let mut planes = vec![0u8; rows * self.columns * 4];
+        self.r.read_exact(&mut planes).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                anyhow::Error::new(CorruptShard::new(
+                    &self.path,
+                    format!("truncated block ({rows} rows declared)"),
+                ))
+            } else {
+                anyhow::Error::new(e).context(format!("read {}", self.path.display()))
+            }
+        })?;
+        self.hash = fnv1a(self.hash, &len);
+        self.hash = fnv1a(self.hash, &planes);
+        self.block.clear();
+        self.block.resize(rows * self.columns, 0.0);
+        for c in 0..self.columns {
+            let plane = &planes[c * rows * 4..(c + 1) * rows * 4];
+            for (r, chunk) in plane.chunks_exact(4).enumerate() {
+                let v = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+                self.block[r * self.columns + c] = v as f64;
+            }
+        }
+        self.pos = 0;
+        Ok(true)
+    }
+
+    /// At EOF: the stream must contain exactly the declared row count
+    /// and hash to the declared checksum.
+    fn verify_trailer(&self) -> Result<()> {
+        if self.rows_read != self.rows_declared {
+            return Err(CorruptShard::new(
+                &self.path,
+                format!(
+                    "header declares {} rows but the stream has {}",
+                    self.rows_declared, self.rows_read
+                ),
+            )
+            .into());
+        }
+        if self.hash != self.checksum_declared {
+            return Err(CorruptShard::new(
+                &self.path,
+                format!(
+                    "checksum mismatch (header {:#018x}, stream {:#018x})",
+                    self.checksum_declared, self.hash
+                ),
+            )
+            .into());
+        }
+        Ok(())
+    }
+}
+
+/// Write records round-robin across `shards` binary files in `dir` —
+/// the binary twin of `sink::ShardedCsvSink`, same stream-order
+/// contract (record `k` lands in shard `k % shards`), same device and
+/// schema stamping (in the header instead of `#` meta lines).
+pub struct ShardedBinSink {
+    writers: Vec<BinShardWriter>,
+    device: String,
+    schema: Schema,
+    next: usize,
+    written: u64,
+}
+
+impl ShardedBinSink {
+    pub fn create(
+        dir: &Path,
+        shards: usize,
+        device: &str,
+        schema: Schema,
+    ) -> Result<Self> {
+        let shards = shards.max(1);
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("create {}", dir.display()))?;
+        let writers = (0..shards)
+            .map(|i| {
+                BinShardWriter::create(
+                    &sink::shard_path_for(dir, i, ShardFormat::Bin),
+                    device,
+                    schema,
+                )
+            })
+            .collect::<Result<Vec<_>>>()?;
+        // Any other shard file in the directory — higher-numbered,
+        // differently padded, or the other format — would corrupt the
+        // round-robin enumeration of a later reader.
+        sink::remove_stale_shards(dir, shards, ShardFormat::Bin)?;
+        Ok(ShardedBinSink {
+            writers,
+            device: device.to_string(),
+            schema,
+            next: 0,
+            written: 0,
+        })
+    }
+
+    pub fn shards(&self) -> usize {
+        self.writers.len()
+    }
+
+    pub fn written(&self) -> u64 {
+        self.written
+    }
+
+    /// The device key stamped into every shard header.
+    pub fn device(&self) -> &str {
+        &self.device
+    }
+
+    /// The schema every shard is written under.
+    pub fn schema(&self) -> Schema {
+        self.schema
+    }
+}
+
+impl RecordSink for ShardedBinSink {
+    fn accept(&mut self, rec: &TuneRecord) -> Result<()> {
+        self.writers[self.next].write_row(&rec.csv_row(self.schema))?;
+        self.next = (self.next + 1) % self.writers.len();
+        self.written += 1;
+        Ok(())
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        for w in self.writers.iter_mut() {
+            w.finish()?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernelmodel::features::NUM_FEATURES;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir()
+            .join(format!("lmtuner-binfmt-{name}-{}", std::process::id()))
+    }
+
+    fn row(i: u64, schema: Schema) -> Vec<f64> {
+        let mut r = vec![0.0; schema.columns()];
+        r[0] = i as f64;
+        r[NUM_FEATURES] = 0.5 + (i % 4) as f64; // f32-exact speedup
+        if schema == Schema::V2 {
+            r[NUM_FEATURES + 1] = (1u32 << (i % 5)) as f64;
+            r[NUM_FEATURES + 2] = (1u32 << (i % 3)) as f64;
+        }
+        r
+    }
+
+    fn write_shard(path: &Path, schema: Schema, n: u64) {
+        let mut w = BinShardWriter::create(path, "m2090", schema).unwrap();
+        for i in 0..n {
+            w.write_row(&row(i, schema)).unwrap();
+        }
+        w.finish().unwrap();
+    }
+
+    #[test]
+    fn roundtrip_both_schemas_and_block_boundaries() {
+        for schema in [Schema::V1, Schema::V2] {
+            // 0 rows, under one block, exactly one block, and spilling
+            // into a second block.
+            for n in [0u64, 7, BLOCK_ROWS as u64, BLOCK_ROWS as u64 + 3] {
+                let p = tmp(&format!("rt-{schema}-{n}"));
+                write_shard(&p, schema, n);
+                let mut r = BinShardReader::open(&p).unwrap();
+                assert_eq!(r.device(), "m2090");
+                assert_eq!(r.schema(), schema);
+                assert_eq!(r.declared_rows(), n);
+                let mut i = 0u64;
+                while let Some(got) = r.next_row().unwrap() {
+                    assert_eq!(got, row(i, schema), "row {i} of {n} ({schema})");
+                    i += 1;
+                }
+                assert_eq!(i, n);
+                // after EOF, next_row stays None
+                assert!(r.next_row().unwrap().is_none());
+                std::fs::remove_file(&p).ok();
+            }
+        }
+    }
+
+    #[test]
+    fn detect_format_discriminates() {
+        let p = tmp("detect-bin");
+        write_shard(&p, Schema::V1, 3);
+        assert_eq!(detect_format(&p).unwrap(), ShardFormat::Bin);
+        let c = tmp("detect-csv");
+        std::fs::write(&c, "# device=m2090\na,b\n1,2\n").unwrap();
+        assert_eq!(detect_format(&c).unwrap(), ShardFormat::Csv);
+        let short = tmp("detect-short");
+        std::fs::write(&short, "ab").unwrap();
+        assert_eq!(detect_format(&short).unwrap(), ShardFormat::Csv);
+        let empty = tmp("detect-empty");
+        std::fs::write(&empty, "").unwrap();
+        assert!(detect_format(&empty).is_err());
+        for p in [p, c, short, empty] {
+            std::fs::remove_file(&p).ok();
+        }
+    }
+
+    #[test]
+    fn truncated_shard_is_a_typed_error() {
+        let p = tmp("trunc");
+        write_shard(&p, Schema::V2, 100);
+        let body = std::fs::read(&p).unwrap();
+        // cut mid-block
+        std::fs::write(&p, &body[..body.len() - 37]).unwrap();
+        let mut r = BinShardReader::open(&p).unwrap();
+        let err = loop {
+            match r.next_row() {
+                Ok(Some(_)) => continue,
+                Ok(None) => panic!("truncated shard read to EOF cleanly"),
+                Err(e) => break e,
+            }
+        };
+        assert!(err.downcast_ref::<CorruptShard>().is_some(), "{err:#}");
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn corrupt_checksum_is_a_typed_error() {
+        let p = tmp("cksum");
+        write_shard(&p, Schema::V1, 50);
+        let mut body = std::fs::read(&p).unwrap();
+        // flip one bit in the last data byte (past the header)
+        let last = body.len() - 1;
+        body[last] ^= 0x40;
+        std::fs::write(&p, &body).unwrap();
+        let mut r = BinShardReader::open(&p).unwrap();
+        let err = loop {
+            match r.next_row() {
+                Ok(Some(_)) => continue,
+                Ok(None) => panic!("corrupt shard verified clean"),
+                Err(e) => break e,
+            }
+        };
+        assert!(err.downcast_ref::<CorruptShard>().is_some(), "{err:#}");
+        assert!(format!("{err:#}").contains("checksum"), "{err:#}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn header_row_count_mismatch_is_detected() {
+        let p = tmp("rowcount");
+        write_shard(&p, Schema::V1, 10);
+        let mut body = std::fs::read(&p).unwrap();
+        // header rows field sits after magic+version+schema+len+dev+cols
+        let patch = 4 + 2 + 2 + "m2090".len() + 2;
+        body[patch..patch + 8].copy_from_slice(&11u64.to_le_bytes());
+        std::fs::write(&p, &body).unwrap();
+        let mut r = BinShardReader::open(&p).unwrap();
+        let err = loop {
+            match r.next_row() {
+                Ok(Some(_)) => continue,
+                Ok(None) => panic!("row-count mismatch verified clean"),
+                Err(e) => break e,
+            }
+        };
+        assert!(format!("{err:#}").contains("11 rows"), "{err:#}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn bad_headers_are_typed_errors() {
+        // wrong magic
+        let p = tmp("hdr-magic");
+        std::fs::write(&p, b"NOPE\x01\x00").unwrap();
+        // detect_format routes this to CSV; opening as bin is still typed
+        let err = BinShardReader::open(&p).unwrap_err();
+        assert!(err.downcast_ref::<CorruptShard>().is_some(), "{err:#}");
+        // truncated header
+        let t = tmp("hdr-short");
+        std::fs::write(&t, b"LMTB\x01").unwrap();
+        let err = BinShardReader::open(&t).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated header"), "{err:#}");
+        // unknown version
+        let v = tmp("hdr-version");
+        let mut body = Vec::new();
+        body.extend_from_slice(&MAGIC);
+        body.extend_from_slice(&9u16.to_le_bytes());
+        body.extend_from_slice(&[1, 1, b'x', 19, 0]);
+        body.extend_from_slice(&[0u8; 16]);
+        std::fs::write(&v, &body).unwrap();
+        let err = BinShardReader::open(&v).unwrap_err();
+        assert!(format!("{err:#}").contains("version"), "{err:#}");
+        for p in [p, t, v] {
+            std::fs::remove_file(&p).ok();
+        }
+    }
+
+    #[test]
+    fn column_count_must_match_schema() {
+        let p = tmp("hdr-cols");
+        write_shard(&p, Schema::V1, 1);
+        let mut body = std::fs::read(&p).unwrap();
+        let cols_at = 4 + 2 + 2 + "m2090".len();
+        body[cols_at..cols_at + 2].copy_from_slice(&21u16.to_le_bytes());
+        std::fs::write(&p, &body).unwrap();
+        let err = BinShardReader::open(&p).unwrap_err();
+        assert!(err.downcast_ref::<CorruptShard>().is_some(), "{err:#}");
+        assert!(format!("{err:#}").contains("columns"), "{err:#}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn writer_rejects_wrong_width_rows() {
+        let p = tmp("width");
+        let mut w = BinShardWriter::create(&p, "m2090", Schema::V1).unwrap();
+        assert!(w.write_row(&[1.0, 2.0]).is_err());
+        assert!(w.write_row(&row(0, Schema::V1)).is_ok());
+        w.finish().unwrap();
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn finish_is_idempotent() {
+        let p = tmp("idem");
+        let mut w = BinShardWriter::create(&p, "m2090", Schema::V1).unwrap();
+        for i in 0..5 {
+            w.write_row(&row(i, Schema::V1)).unwrap();
+        }
+        w.finish().unwrap();
+        w.finish().unwrap();
+        let mut r = BinShardReader::open(&p).unwrap();
+        let mut n = 0;
+        while r.next_row().unwrap().is_some() {
+            n += 1;
+        }
+        assert_eq!(n, 5);
+        std::fs::remove_file(&p).ok();
+    }
+}

@@ -31,6 +31,7 @@ use crate::util::pool::parallel_map_streamed;
 use crate::util::prng::Rng;
 use crate::util::{csv, stats};
 
+use super::binfmt::{self, ShardFormat};
 use super::sink::{self, DatasetSummary, MemorySink, RecordSink};
 use super::sweep::{argmax_wg, LaunchSweep};
 
@@ -190,6 +191,75 @@ pub fn build_streaming<S: RecordSink>(
     Ok(summary)
 }
 
+/// One-pass multi-device build: measure every template on each of
+/// `devices`, fanning each device's records to its own sink in the
+/// same canonical order a single-device [`build_streaming`] for that
+/// device would produce (each device gets a clone of the template's
+/// forked RNG, so the per-device streams are bit-identical to
+/// single-device builds at any thread count or chunking). One
+/// generation pass replaces N — the cross-device portfolio no longer
+/// regenerates identical templates per device — and peak memory stays
+/// ~two chunks of records per device regardless of dataset size.
+/// Returns one [`DatasetSummary`] per device, in `devices` order.
+/// `progress.records` counts records across all devices.
+pub fn build_multi_device<S: RecordSink>(
+    templates: &[Template],
+    sweep: &LaunchSweep,
+    devices: &[DeviceSpec],
+    cfg: &BuildConfig,
+    sinks: &mut [S],
+    mut progress: Option<&mut dyn FnMut(&BuildProgress)>,
+) -> Result<Vec<DatasetSummary>> {
+    anyhow::ensure!(!devices.is_empty(), "build_multi_device: no devices");
+    anyhow::ensure!(
+        devices.len() == sinks.len(),
+        "build_multi_device: {} devices but {} sinks",
+        devices.len(),
+        sinks.len()
+    );
+    let t0 = Instant::now();
+    let rngs = template_rngs(cfg.seed, templates.len());
+    let jobs: Vec<(usize, Rng)> = rngs.into_iter().enumerate().collect();
+    let mut summaries = vec![DatasetSummary::default(); devices.len()];
+    parallel_map_streamed(
+        &jobs,
+        cfg.threads,
+        cfg.chunk(),
+        |(i, trng)| {
+            devices
+                .iter()
+                .map(|dev| {
+                    measure_template(&templates[*i], trng.clone(), sweep, dev, cfg)
+                })
+                .collect::<Vec<_>>()
+        },
+        |base, chunk| -> Result<()> {
+            let done = base + chunk.len();
+            for per_dev in chunk {
+                for (d, recs) in per_dev.into_iter().enumerate() {
+                    for rec in recs {
+                        summaries[d].observe(&rec.base);
+                        sinks[d].accept(&rec)?;
+                    }
+                }
+            }
+            if let Some(p) = progress.as_deref_mut() {
+                p(&BuildProgress {
+                    templates_done: done,
+                    templates_total: templates.len(),
+                    records: summaries.iter().map(|s| s.records).sum(),
+                    elapsed_seconds: t0.elapsed().as_secs_f64(),
+                });
+            }
+            Ok(())
+        },
+    )?;
+    for s in sinks.iter_mut() {
+        s.finish()?;
+    }
+    Ok(summaries)
+}
+
 /// Build speedup records for every (template, sampled launch) instance
 /// in memory (streaming build into a `MemorySink`).
 pub fn build(
@@ -292,6 +362,39 @@ pub fn load_tagged(path: &Path) -> Result<(Vec<TuneRecord>, DatasetTag)> {
         i += 1;
     }
     Ok((out, DatasetTag { device, schema }))
+}
+
+/// Load a dataset from wherever it lives — a sharded directory (CSV or
+/// binary, auto-detected), a CSV file, or a single binary shard file —
+/// plus its tag and on-disk format. The `eval` CLI goes through this,
+/// so any artifact `generate` can produce is evaluable.
+pub fn load_any(path: &Path) -> Result<(Vec<TuneRecord>, DatasetTag, ShardFormat)> {
+    if path.is_dir() {
+        let (recs, stream) = sink::load_sharded_tagged(path)?;
+        let tag = DatasetTag { device: stream.device, schema: stream.schema };
+        return Ok((recs, tag, stream.format));
+    }
+    match binfmt::detect_format(path)? {
+        ShardFormat::Csv => {
+            let (recs, tag) = load_tagged(path)?;
+            Ok((recs, tag, ShardFormat::Csv))
+        }
+        ShardFormat::Bin => {
+            let mut r = binfmt::BinShardReader::open(path)?;
+            let schema = r.schema();
+            let device = Some(r.device().to_string());
+            let mut out = Vec::new();
+            let mut i = 0usize;
+            while let Some(row) = r.next_row()? {
+                out.push(
+                    TuneRecord::from_csv_row(schema, format!("row{i}"), &row)
+                        .with_context(|| path.display().to_string())?,
+                );
+                i += 1;
+            }
+            Ok((out, DatasetTag { device, schema }, ShardFormat::Bin))
+        }
+    }
 }
 
 /// Split records into train/test by random permutation (paper: train on
@@ -539,7 +642,115 @@ mod tests {
         let b = small_dataset();
         assert_eq!(a.len(), b.len());
         for (x, y) in a.iter().zip(&b) {
-            assert_eq!(x.speedup, y.speedup);
+            assert_eq!(x.base.speedup, y.base.speedup);
+        }
+    }
+
+    #[test]
+    fn multi_device_build_matches_per_device_builds() {
+        let (templates, sweep, _, cfg) = small_setup();
+        let devices = [DeviceSpec::m2090(), DeviceSpec::gtx480()];
+        for threads in [1usize, 3] {
+            let c = BuildConfig { threads, ..cfg.clone() };
+            let mut sinks = vec![MemorySink::new(), MemorySink::new()];
+            let summaries = build_multi_device(
+                &templates,
+                &sweep,
+                &devices,
+                &c,
+                &mut sinks,
+                None,
+            )
+            .unwrap();
+            assert_eq!(summaries.len(), 2);
+            for (dev, (sink, summary)) in
+                devices.iter().zip(sinks.iter().zip(&summaries))
+            {
+                let reference = build(&templates, &sweep, dev, &c);
+                assert_eq!(
+                    sink.records.len(),
+                    reference.len(),
+                    "{} t={threads}",
+                    dev.key
+                );
+                assert_eq!(summary.records as usize, reference.len());
+                for (a, b) in sink.records.iter().zip(&reference) {
+                    assert_eq!(a.base.features, b.base.features);
+                    assert_eq!(a.base.speedup, b.base.speedup);
+                    assert_eq!(a.best_wg, b.best_wg);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_device_requires_matching_sinks() {
+        let (templates, sweep, dev, cfg) = small_setup();
+        let devices = [dev];
+        let mut sinks: Vec<MemorySink> = vec![];
+        assert!(build_multi_device(
+            &templates,
+            &sweep,
+            &devices,
+            &cfg,
+            &mut sinks,
+            None
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn load_any_handles_file_and_both_shard_formats() {
+        let recs: Vec<TuneRecord> = small_dataset().into_iter().take(20).collect();
+        let pid = std::process::id();
+
+        // plain CSV file
+        let f = std::env::temp_dir().join(format!("lmtuner-any-{pid}.csv"));
+        save_schema(&recs, &f, "m2090", Schema::V2).unwrap();
+        let (back, tag, format) = load_any(&f).unwrap();
+        assert_eq!(format, ShardFormat::Csv);
+        assert_eq!(tag.schema, Schema::V2);
+        assert_eq!(back.len(), recs.len());
+        std::fs::remove_file(&f).ok();
+
+        for shard_format in [ShardFormat::Csv, ShardFormat::Bin] {
+            let dir = std::env::temp_dir()
+                .join(format!("lmtuner-any-{shard_format}-{pid}"));
+            let mut s = sink::ShardedSink::create(
+                &dir,
+                3,
+                "m2090",
+                Schema::V2,
+                shard_format,
+            )
+            .unwrap();
+            for r in &recs {
+                s.accept(r).unwrap();
+            }
+            s.finish().unwrap();
+            let (back, tag, format) = load_any(&dir).unwrap();
+            assert_eq!(format, shard_format);
+            assert_eq!(tag.device.as_deref(), Some("m2090"));
+            assert_eq!(back.len(), recs.len());
+            for (a, b) in back.iter().zip(&recs) {
+                // binary storage quantizes to f32; CSV is exact here
+                assert!(
+                    (a.base.speedup - b.base.speedup).abs() < 1e-4,
+                    "{} vs {}",
+                    a.base.speedup,
+                    b.base.speedup
+                );
+                assert_eq!(a.best_wg, b.best_wg);
+            }
+            // a single binary shard file also loads directly
+            if shard_format == ShardFormat::Bin {
+                let one = sink::shard_path_for(&dir, 0, ShardFormat::Bin);
+                let (part, tag, format) = load_any(&one).unwrap();
+                assert_eq!(format, ShardFormat::Bin);
+                assert_eq!(tag.device.as_deref(), Some("m2090"));
+                assert_eq!(part.len(), (recs.len() + 2) / 3);
+            }
+            std::fs::remove_dir_all(&dir).ok();
         }
     }
 

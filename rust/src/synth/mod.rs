@@ -5,12 +5,19 @@
 //! record order: [`dataset::build_serial`] (the reference) and
 //! [`dataset::build_streaming`], which fans template work across the
 //! thread pool in chunks and streams every record to a
-//! [`sink::RecordSink`] — in-memory, sharded-CSV-on-disk, or a
-//! reservoir sample — so paper-scale datasets never have to fit in
-//! memory. See `EXPERIMENTS.md` at the repository root for how the
-//! generated population relates to the paper's reported counts.
+//! [`sink::RecordSink`] — in-memory, sharded-on-disk (line-oriented CSV
+//! or the binary columnar format of [`binfmt`]), or a reservoir
+//! sample — so paper-scale datasets never have to fit in memory.
+//! [`pipeline`] provides composable per-record stages (validate, dedup,
+//! transform) that slot between the generator and any sink, and
+//! [`dataset::build_multi_device`] measures every template on several
+//! devices in one generation pass. See `EXPERIMENTS.md` at the
+//! repository root for how the generated population relates to the
+//! paper's reported counts.
+pub mod binfmt;
 pub mod dataset;
 pub mod generator;
+pub mod pipeline;
 pub mod sampler;
 pub mod sink;
 pub mod sweep;

@@ -1,0 +1,503 @@
+//! Composable record-stream stages between generator and sink.
+//!
+//! The streaming dataset builder produces `TuneRecord`s and hands them
+//! to a [`super::sink::RecordSink`]; a [`Stage`] sits in between and
+//! decides, record by record, whether to keep, drop, or rewrite. Stages
+//! compose into a [`StagedSink`] — itself a `RecordSink`, so any
+//! existing consumer (`dataset::build_streaming`,
+//! `coordinator::train::run_sharded`, a `Tee` fan-out) threads a
+//! pipeline in without changing its own shape.
+//!
+//! Built-in stages:
+//!
+//! * [`Validate`] — drop structurally unsound records (non-finite
+//!   features, non-positive or non-finite speedup, and under schema v2
+//!   a missing or invalid workgroup label), with a typed per-reason
+//!   reject count.
+//! * [`Dedup`] — drop records whose quantized (f32) feature vector has
+//!   been seen before. The fingerprint is over the 18 features only,
+//!   not the measured speedup: two measurements of the same instance
+//!   differ by timing noise, and that noise should not defeat
+//!   deduplication. Quantizing to f32 first makes a record and its
+//!   binary-shard round-trip (see `super::binfmt`) dedup identically.
+//! * [`Transform`] — rewrite each record with a named closure.
+//!
+//! Every stage's traffic is tallied (seen/kept/dropped/replaced plus
+//! the stage's own reject reasons) and surfaced as [`StageCounters`]
+//! for progress output and `TrainOutcome`.
+
+use std::collections::HashSet;
+use std::fmt;
+
+use anyhow::Result;
+
+use crate::sim::exec::{Schema, TuneRecord};
+
+use super::sink::RecordSink;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// What a stage decided about one record.
+pub enum StageOut {
+    /// Pass the record through unchanged.
+    Keep(TuneRecord),
+    /// Remove the record from the stream.
+    Drop,
+    /// Pass a rewritten record through.
+    Replace(TuneRecord),
+}
+
+/// One record-stream filter/transformer. Stages run serially on the
+/// consume side of the streaming build, in the order they were
+/// composed, each seeing only what the previous stage let through.
+pub trait Stage {
+    /// Stable stage name for counters and progress output.
+    fn name(&self) -> &str;
+    fn process(&mut self, rec: TuneRecord) -> StageOut;
+    /// Per-reason drop counts for stages that reject records for more
+    /// than one reason (label, count). Labels are stable identifiers.
+    fn rejects(&self) -> Vec<(&'static str, u64)> {
+        Vec::new()
+    }
+}
+
+/// Drop records whose quantized feature vector was already seen.
+#[derive(Default)]
+pub struct Dedup {
+    seen: HashSet<u64>,
+    dropped: u64,
+}
+
+impl Dedup {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// FNV-1a over the f32 bit patterns of the 18 features (speedup and
+    /// label excluded — see the module docs).
+    pub fn fingerprint(rec: &TuneRecord) -> u64 {
+        let mut h = FNV_OFFSET;
+        for &f in rec.base.features.iter() {
+            for b in (f as f32).to_bits().to_le_bytes() {
+                h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+            }
+        }
+        h
+    }
+}
+
+impl Stage for Dedup {
+    fn name(&self) -> &str {
+        "dedup"
+    }
+
+    fn process(&mut self, rec: TuneRecord) -> StageOut {
+        if self.seen.insert(Self::fingerprint(&rec)) {
+            StageOut::Keep(rec)
+        } else {
+            self.dropped += 1;
+            StageOut::Drop
+        }
+    }
+
+    fn rejects(&self) -> Vec<(&'static str, u64)> {
+        vec![("duplicate", self.dropped)]
+    }
+}
+
+/// Drop structurally unsound records with typed reject counts:
+/// `non_finite` (a NaN/inf feature), `bad_speedup` (non-finite or
+/// non-positive), and under schema v2 `missing_label` (no workgroup
+/// label, or one that is not a power-of-two shape of <= 1024
+/// workitems). v1 has no label plane, so `missing_label` never fires
+/// there.
+pub struct Validate {
+    schema: Schema,
+    non_finite: u64,
+    bad_speedup: u64,
+    missing_label: u64,
+}
+
+impl Validate {
+    pub fn new(schema: Schema) -> Self {
+        Validate { schema, non_finite: 0, bad_speedup: 0, missing_label: 0 }
+    }
+}
+
+impl Stage for Validate {
+    fn name(&self) -> &str {
+        "validate"
+    }
+
+    fn process(&mut self, rec: TuneRecord) -> StageOut {
+        if rec.base.features.iter().any(|x| !x.is_finite()) {
+            self.non_finite += 1;
+            return StageOut::Drop;
+        }
+        if !rec.base.speedup.is_finite() || rec.base.speedup <= 0.0 {
+            self.bad_speedup += 1;
+            return StageOut::Drop;
+        }
+        if self.schema == Schema::V2 {
+            match rec.best_wg {
+                Some((w, h))
+                    if w.is_power_of_two()
+                        && h.is_power_of_two()
+                        && w as u64 * h as u64 <= 1024 => {}
+                _ => {
+                    self.missing_label += 1;
+                    return StageOut::Drop;
+                }
+            }
+        }
+        StageOut::Keep(rec)
+    }
+
+    fn rejects(&self) -> Vec<(&'static str, u64)> {
+        vec![
+            ("non_finite", self.non_finite),
+            ("bad_speedup", self.bad_speedup),
+            ("missing_label", self.missing_label),
+        ]
+    }
+}
+
+/// Rewrite every record with a named closure.
+pub struct Transform<F: FnMut(TuneRecord) -> TuneRecord> {
+    name: &'static str,
+    f: F,
+}
+
+impl<F: FnMut(TuneRecord) -> TuneRecord> Transform<F> {
+    pub fn new(name: &'static str, f: F) -> Self {
+        Transform { name, f }
+    }
+}
+
+impl<F: FnMut(TuneRecord) -> TuneRecord> Stage for Transform<F> {
+    fn name(&self) -> &str {
+        self.name
+    }
+
+    fn process(&mut self, rec: TuneRecord) -> StageOut {
+        StageOut::Replace((self.f)(rec))
+    }
+}
+
+/// Traffic through one stage of a [`StagedSink`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StageCounters {
+    pub name: String,
+    /// Records that reached this stage.
+    pub seen: u64,
+    pub kept: u64,
+    pub dropped: u64,
+    pub replaced: u64,
+    /// The stage's own per-reason drop counts.
+    pub rejects: Vec<(&'static str, u64)>,
+}
+
+impl fmt::Display for StageCounters {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}: seen {}, kept {}, dropped {}",
+            self.name,
+            self.seen,
+            self.kept + self.replaced,
+            self.dropped
+        )?;
+        let nonzero: Vec<String> = self
+            .rejects
+            .iter()
+            .filter(|(_, n)| *n > 0)
+            .map(|(k, n)| format!("{k} {n}"))
+            .collect();
+        if !nonzero.is_empty() {
+            write!(f, " ({})", nonzero.join(", "))?;
+        }
+        Ok(())
+    }
+}
+
+#[derive(Clone, Copy, Default)]
+struct Tally {
+    seen: u64,
+    kept: u64,
+    dropped: u64,
+    replaced: u64,
+}
+
+/// A `RecordSink` adapter running every record through a stage chain
+/// before the inner sink sees it. With no stages it forwards without
+/// cloning, so wrapping is free for the plain path.
+pub struct StagedSink<S: RecordSink> {
+    inner: S,
+    stages: Vec<Box<dyn Stage>>,
+    tallies: Vec<Tally>,
+}
+
+impl<S: RecordSink> StagedSink<S> {
+    pub fn new(inner: S, stages: Vec<Box<dyn Stage>>) -> Self {
+        let tallies = vec![Tally::default(); stages.len()];
+        StagedSink { inner, stages, tallies }
+    }
+
+    pub fn inner(&self) -> &S {
+        &self.inner
+    }
+
+    pub fn inner_mut(&mut self) -> &mut S {
+        &mut self.inner
+    }
+
+    pub fn into_inner(self) -> S {
+        self.inner
+    }
+
+    /// Per-stage traffic counters, in stage order.
+    pub fn counters(&self) -> Vec<StageCounters> {
+        self.stages
+            .iter()
+            .zip(&self.tallies)
+            .map(|(stage, t)| StageCounters {
+                name: stage.name().to_string(),
+                seen: t.seen,
+                kept: t.kept,
+                dropped: t.dropped,
+                replaced: t.replaced,
+                rejects: stage.rejects(),
+            })
+            .collect()
+    }
+}
+
+impl<S: RecordSink> RecordSink for StagedSink<S> {
+    fn accept(&mut self, rec: &TuneRecord) -> Result<()> {
+        if self.stages.is_empty() {
+            return self.inner.accept(rec);
+        }
+        let mut cur = rec.clone();
+        for (stage, tally) in self.stages.iter_mut().zip(self.tallies.iter_mut()) {
+            tally.seen += 1;
+            match stage.process(cur) {
+                StageOut::Keep(r) => {
+                    tally.kept += 1;
+                    cur = r;
+                }
+                StageOut::Replace(r) => {
+                    tally.replaced += 1;
+                    cur = r;
+                }
+                StageOut::Drop => {
+                    tally.dropped += 1;
+                    return Ok(());
+                }
+            }
+        }
+        self.inner.accept(&cur)
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        self.inner.finish()
+    }
+}
+
+/// Which built-in stages a run wants — the flag-level view
+/// (`--validate` / `--dedup`) shared by the CLI and
+/// `ShardedTrainConfig`. Validation runs before deduplication so a
+/// malformed record never claims a fingerprint.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PipelineSpec {
+    pub validate: bool,
+    pub dedup: bool,
+}
+
+impl PipelineSpec {
+    pub fn is_empty(&self) -> bool {
+        !self.validate && !self.dedup
+    }
+
+    /// Materialize the stage chain for a dataset of the given schema.
+    pub fn build(&self, schema: Schema) -> Vec<Box<dyn Stage>> {
+        let mut stages: Vec<Box<dyn Stage>> = Vec::new();
+        if self.validate {
+            stages.push(Box::new(Validate::new(schema)));
+        }
+        if self.dedup {
+            stages.push(Box::new(Dedup::new()));
+        }
+        stages
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernelmodel::features::NUM_FEATURES;
+    use crate::sim::exec::SpeedupRecord;
+    use crate::synth::sink::MemorySink;
+
+    fn rec(i: u64) -> TuneRecord {
+        let mut features = [0.0; NUM_FEATURES];
+        features[0] = i as f64;
+        TuneRecord {
+            base: SpeedupRecord {
+                name: format!("r{i}"),
+                features,
+                speedup: 0.5 + (i % 4) as f64,
+                baseline_time: 1.0,
+                optimized_time: 1.0,
+            },
+            best_wg: Some((1 << (i % 5), 1 << (i % 3))),
+        }
+    }
+
+    #[test]
+    fn dedup_drops_repeats_and_counts_them() {
+        let mut sink = StagedSink::new(
+            MemorySink::new(),
+            vec![Box::new(Dedup::new()) as Box<dyn Stage>],
+        );
+        for i in 0..10 {
+            sink.accept(&rec(i)).unwrap();
+            sink.accept(&rec(i)).unwrap(); // exact duplicate
+        }
+        sink.finish().unwrap();
+        assert_eq!(sink.inner().records.len(), 10);
+        let c = &sink.counters()[0];
+        assert_eq!(c.name, "dedup");
+        assert_eq!(c.seen, 20);
+        assert_eq!(c.kept, 10);
+        assert_eq!(c.dropped, 10);
+        assert_eq!(c.rejects, vec![("duplicate", 10)]);
+    }
+
+    #[test]
+    fn dedup_ignores_speedup_but_not_features() {
+        let mut d = Dedup::new();
+        let a = rec(1);
+        let mut b = rec(1);
+        b.base.speedup = 99.0; // same instance, noisier measurement
+        assert!(matches!(d.process(a), StageOut::Keep(_)));
+        assert!(matches!(d.process(b), StageOut::Drop));
+        let mut c = rec(1);
+        c.base.features[3] = 7.0;
+        assert!(matches!(d.process(c), StageOut::Keep(_)));
+    }
+
+    #[test]
+    fn dedup_fingerprint_survives_f32_quantization() {
+        let mut a = rec(2);
+        a.base.features[1] = 0.1; // not f32-exact
+        let mut b = a.clone();
+        b.base.features[1] = 0.1f32 as f64; // its f32 round-trip
+        assert_eq!(Dedup::fingerprint(&a), Dedup::fingerprint(&b));
+    }
+
+    #[test]
+    fn validate_rejects_with_typed_counts() {
+        let mut v = Validate::new(Schema::V2);
+        assert!(matches!(v.process(rec(0)), StageOut::Keep(_)));
+        let mut nan = rec(1);
+        nan.base.features[5] = f64::NAN;
+        assert!(matches!(v.process(nan), StageOut::Drop));
+        let mut inf = rec(2);
+        inf.base.speedup = f64::INFINITY;
+        assert!(matches!(v.process(inf), StageOut::Drop));
+        let mut neg = rec(3);
+        neg.base.speedup = 0.0;
+        assert!(matches!(v.process(neg), StageOut::Drop));
+        let mut unlabeled = rec(4);
+        unlabeled.best_wg = None;
+        assert!(matches!(v.process(unlabeled), StageOut::Drop));
+        let mut huge = rec(5);
+        huge.best_wg = Some((64, 64)); // 4096 workitems
+        assert!(matches!(v.process(huge), StageOut::Drop));
+        assert_eq!(
+            v.rejects(),
+            vec![("non_finite", 1), ("bad_speedup", 2), ("missing_label", 2)]
+        );
+    }
+
+    #[test]
+    fn validate_v1_ignores_the_label_plane() {
+        let mut v = Validate::new(Schema::V1);
+        let mut unlabeled = rec(0);
+        unlabeled.best_wg = None;
+        assert!(matches!(v.process(unlabeled), StageOut::Keep(_)));
+        assert_eq!(v.rejects()[2], ("missing_label", 0));
+    }
+
+    #[test]
+    fn transform_replaces_and_is_counted() {
+        let double = Transform::new("double-speedup", |mut r: TuneRecord| {
+            r.base.speedup *= 2.0;
+            r
+        });
+        let mut sink =
+            StagedSink::new(MemorySink::new(), vec![Box::new(double) as Box<dyn Stage>]);
+        for i in 0..5 {
+            sink.accept(&rec(i)).unwrap();
+        }
+        assert_eq!(sink.inner().records.len(), 5);
+        for (i, r) in sink.inner().records.iter().enumerate() {
+            assert_eq!(r.base.speedup, rec(i as u64).base.speedup * 2.0);
+        }
+        let c = &sink.counters()[0];
+        assert_eq!(c.name, "double-speedup");
+        assert_eq!(c.replaced, 5);
+        assert_eq!(c.kept, 0);
+        assert_eq!(c.to_string(), "double-speedup: seen 5, kept 5, dropped 0");
+    }
+
+    #[test]
+    fn stages_chain_in_order_and_later_stages_see_filtered_stream() {
+        // validate drops the NaN record before dedup ever sees it
+        let spec = PipelineSpec { validate: true, dedup: true };
+        let mut sink = StagedSink::new(MemorySink::new(), spec.build(Schema::V2));
+        let mut nan = rec(0);
+        nan.base.features[0] = f64::NAN;
+        sink.accept(&nan).unwrap();
+        sink.accept(&rec(1)).unwrap();
+        sink.accept(&rec(1)).unwrap();
+        let c = sink.counters();
+        assert_eq!(c[0].name, "validate");
+        assert_eq!(c[1].name, "dedup");
+        assert_eq!(c[0].seen, 3);
+        assert_eq!(c[0].dropped, 1);
+        assert_eq!(c[1].seen, 2, "dedup must not see the invalid record");
+        assert_eq!(c[1].dropped, 1);
+        assert_eq!(sink.inner().records.len(), 1);
+    }
+
+    #[test]
+    fn empty_pipeline_is_passthrough() {
+        let spec = PipelineSpec::default();
+        assert!(spec.is_empty());
+        let mut sink = StagedSink::new(MemorySink::new(), spec.build(Schema::V1));
+        for i in 0..4 {
+            sink.accept(&rec(i)).unwrap();
+        }
+        assert!(sink.counters().is_empty());
+        assert_eq!(sink.into_inner().records.len(), 4);
+    }
+
+    #[test]
+    fn counters_display_lists_nonzero_rejects() {
+        let mut v = Validate::new(Schema::V2);
+        let mut nan = rec(0);
+        nan.base.features[0] = f64::NAN;
+        let _ = v.process(nan);
+        let _ = v.process(rec(1));
+        let mut sink = StagedSink::new(
+            MemorySink::new(),
+            vec![Box::new(Dedup::new()) as Box<dyn Stage>],
+        );
+        sink.accept(&rec(0)).unwrap();
+        sink.accept(&rec(0)).unwrap();
+        let shown = sink.counters()[0].to_string();
+        assert_eq!(shown, "dedup: seen 2, kept 1, dropped 1 (duplicate 1)");
+    }
+}

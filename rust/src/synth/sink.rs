@@ -7,14 +7,20 @@
 //!
 //! * [`MemorySink`] — collect everything in a `Vec` (the old
 //!   `dataset::build` behavior; fine at toy scale).
-//! * [`ShardedCsvSink`] — append records round-robin across N CSV
-//!   shards on disk; peak memory is one row. [`load_sharded`] restores
-//!   the exact stream order, [`stream_sharded`] replays it row-by-row
-//!   without materializing anything. Every shard is stamped with the
-//!   simulated device it was measured on (`# device=<key>`) and, for
-//!   schema v2, the dataset schema (`# schema=v2`); readers refuse to
-//!   mix shards from different devices ([`DeviceMismatch`]) or
-//!   different schemas ([`SchemaMismatch`]).
+//! * [`ShardedCsvSink`] / [`super::binfmt::ShardedBinSink`] — append
+//!   records round-robin across N shards on disk (line-oriented CSV or
+//!   the binary columnar format of `super::binfmt`); peak memory is
+//!   one row. [`ShardedSink`] is the format-parametric handle over
+//!   both. [`load_sharded`] restores the exact stream order,
+//!   [`stream_sharded`] replays it row-by-row without materializing
+//!   anything; both sniff each shard's format from its leading bytes
+//!   (`LMTB` magic = binary, anything else = CSV), so CSV dirs written
+//!   by older builds load unchanged. Every shard is stamped with the
+//!   simulated device it was measured on (`# device=<key>` meta line,
+//!   or the binary header) and its schema; readers refuse to mix
+//!   shards from different devices ([`DeviceMismatch`]), different
+//!   schemas ([`SchemaMismatch`]), or different formats
+//!   ([`FormatMismatch`]).
 //! * [`ReservoirSink`] — uniform reservoir sample of K records (with
 //!   their global stream indices), used to draw the training split
 //!   from a stream of unknown length.
@@ -23,9 +29,12 @@
 //!
 //! [`DatasetSummary`] accumulates the report statistics (count,
 //! beneficial fraction, geomean/max speedup) incrementally so nothing
-//! needs the full record set.
+//! needs the full record set. [`inspect_shard`] reads one shard's
+//! self-description (format, device, schema, row count, checksum) for
+//! the `lmtuner shards` inspector.
 
 use std::collections::{BTreeMap, HashSet};
+use std::ffi::OsString;
 use std::fmt;
 use std::path::{Path, PathBuf};
 
@@ -35,6 +44,7 @@ use crate::sim::exec::{Schema, SpeedupRecord, TuneRecord};
 use crate::util::csv::{RowReader, RowWriter};
 use crate::util::prng::Rng;
 
+use super::binfmt::{self, BinShardReader, ShardFormat};
 use super::dataset::csv_header_for;
 
 /// Metadata key under which shard/dataset CSVs carry the simulated
@@ -103,6 +113,30 @@ impl fmt::Display for DeviceMismatch {
 
 impl std::error::Error for DeviceMismatch {}
 
+/// Typed error: shards of different on-disk formats were mixed in one
+/// directory. A coherent round-robin layout is written by one run in
+/// one format; a CSV shard next to a binary shard means two runs'
+/// leftovers, so interleaving them would corrupt stream order.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FormatMismatch {
+    pub expected: ShardFormat,
+    pub found: ShardFormat,
+    /// Where the mismatch was detected (a path).
+    pub at: String,
+}
+
+impl fmt::Display for FormatMismatch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "shard format mismatch at {}: expected '{}', found '{}'",
+            self.at, self.expected, self.found
+        )
+    }
+}
+
+impl std::error::Error for FormatMismatch {}
+
 /// Enforce that `found` names the `expected` device; the `Err` is the
 /// typed [`DeviceMismatch`] (convertible into `anyhow::Error` with `?`).
 pub fn ensure_same_device(
@@ -123,12 +157,14 @@ pub fn ensure_same_device(
 
 /// What a sharded-dataset replay saw: the row count, the device the
 /// shards were stamped with (`None` for legacy shards written before
-/// device stamping), and their schema (v1 for unstamped files).
+/// device stamping), their schema (v1 for unstamped files), and their
+/// on-disk format.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ShardStream {
     pub rows: u64,
     pub device: Option<String>,
     pub schema: Schema,
+    pub format: ShardFormat,
 }
 
 /// Consumer of the streaming dataset build. `accept` is called once
@@ -162,27 +198,123 @@ impl RecordSink for MemorySink {
     }
 }
 
-/// Path of shard `i` under `dir`.
+/// Path of CSV shard `i` under `dir` (back-compat alias for
+/// [`shard_path_for`] with [`ShardFormat::Csv`]).
 pub fn shard_path(dir: &Path, i: usize) -> PathBuf {
-    dir.join(format!("shard-{i:03}.csv"))
+    shard_path_for(dir, i, ShardFormat::Csv)
 }
 
-/// List the shard files under `dir` in index order.
-pub fn shard_files(dir: &Path) -> Result<Vec<PathBuf>> {
-    let mut out = Vec::new();
-    loop {
-        let p = shard_path(dir, out.len());
-        if !p.is_file() {
-            break;
+/// Canonical path of shard `i` under `dir` in the given format. The
+/// index is zero-padded to five digits so up to 100k shards list in
+/// order even lexically; [`shard_files`] nevertheless sorts the parsed
+/// indices numerically, so differently padded legacy names (`shard-000`)
+/// keep their stream position too.
+pub fn shard_path_for(dir: &Path, i: usize, format: ShardFormat) -> PathBuf {
+    dir.join(format!("shard-{i:05}.{}", format.ext()))
+}
+
+/// Parse a shard file name (`shard-<digits>.<csv|bin>`, any pad width)
+/// into its stream index and format; `None` for anything else.
+pub fn parse_shard_name(name: &str) -> Option<(u64, ShardFormat)> {
+    let rest = name.strip_prefix("shard-")?;
+    let (digits, ext) = rest.split_once('.')?;
+    if digits.is_empty()
+        || digits.len() > 10
+        || !digits.bytes().all(|b| b.is_ascii_digit())
+    {
+        return None;
+    }
+    let format = match ext {
+        "csv" => ShardFormat::Csv,
+        "bin" => ShardFormat::Bin,
+        _ => return None,
+    };
+    Some((digits.parse().ok()?, format))
+}
+
+/// Enumerate the shard files under `dir` with their parsed indices,
+/// sorted numerically. The indices must form a contiguous `0..n` run
+/// with no duplicates — a gap or a doubled index (e.g. `shard-003.csv`
+/// next to `shard-00003.bin` from an earlier run) cannot reconstruct
+/// stream order, so it is an error rather than a silent misorder.
+pub fn shard_listing(dir: &Path) -> Result<Vec<(u64, ShardFormat, PathBuf)>> {
+    let mut entries: Vec<(u64, ShardFormat, PathBuf)> = Vec::new();
+    let rd = std::fs::read_dir(dir)
+        .with_context(|| format!("read {}", dir.display()))?;
+    for entry in rd {
+        let entry = entry.with_context(|| format!("read {}", dir.display()))?;
+        let name = entry.file_name();
+        let Some(name) = name.to_str() else { continue };
+        if let Some((idx, format)) = parse_shard_name(name) {
+            entries.push((idx, format, entry.path()));
         }
-        out.push(p);
     }
     anyhow::ensure!(
-        !out.is_empty(),
-        "{}: no shard-NNN.csv files",
+        !entries.is_empty(),
+        "{}: no shard-NNNNN.csv/.bin files",
         dir.display()
     );
-    Ok(out)
+    entries.sort_by(|a, b| a.0.cmp(&b.0).then_with(|| a.2.cmp(&b.2)));
+    for (want, e) in entries.iter().enumerate() {
+        if e.0 == want as u64 {
+            continue;
+        }
+        if want > 0 && entries[want - 1].0 == e.0 {
+            anyhow::bail!(
+                "{}: shard index {} appears more than once ({} and {}) — \
+                 stale files from an earlier run?",
+                dir.display(),
+                e.0,
+                entries[want - 1].2.display(),
+                e.2.display()
+            );
+        }
+        anyhow::bail!(
+            "{}: shard indices are not contiguous (expected shard {want}, \
+             found {})",
+            dir.display(),
+            e.2.display()
+        );
+    }
+    Ok(entries)
+}
+
+/// List the shard files under `dir` in stream (numeric index) order.
+pub fn shard_files(dir: &Path) -> Result<Vec<PathBuf>> {
+    Ok(shard_listing(dir)?.into_iter().map(|(_, _, p)| p).collect())
+}
+
+/// Remove every shard file in `dir` that is not one of the `keep`
+/// canonical paths of the given format. Sharded sinks call this after
+/// creating their own files so leftovers from a previous run — a
+/// larger shard count, a different pad width, or the other format —
+/// never interleave into a later reader's stream.
+pub fn remove_stale_shards(
+    dir: &Path,
+    keep: usize,
+    format: ShardFormat,
+) -> Result<()> {
+    let keep_names: HashSet<OsString> = (0..keep)
+        .filter_map(|i| {
+            shard_path_for(dir, i, format)
+                .file_name()
+                .map(|n| n.to_os_string())
+        })
+        .collect();
+    let rd = std::fs::read_dir(dir)
+        .with_context(|| format!("read {}", dir.display()))?;
+    for entry in rd {
+        let entry = entry.with_context(|| format!("read {}", dir.display()))?;
+        let name = entry.file_name();
+        let is_shard =
+            name.to_str().map(|n| parse_shard_name(n).is_some()).unwrap_or(false);
+        if is_shard && !keep_names.contains(&name) {
+            let p = entry.path();
+            std::fs::remove_file(&p)
+                .with_context(|| format!("remove stale {}", p.display()))?;
+        }
+    }
+    Ok(())
 }
 
 /// Write records round-robin across `shards` CSV files in `dir`: the
@@ -226,19 +358,11 @@ impl ShardedCsvSink {
         let writers = (0..shards)
             .map(|i| RowWriter::create_with_meta(&shard_path(dir, i), &header, &meta))
             .collect::<Result<Vec<_>>>()?;
-        // Remove stale higher-numbered shards from a previous run with
-        // a larger shard count — readers enumerate shard-NNN.csv
-        // contiguously and would otherwise interleave old rows.
-        let mut i = shards;
-        loop {
-            let stale = shard_path(dir, i);
-            if !stale.is_file() {
-                break;
-            }
-            std::fs::remove_file(&stale)
-                .with_context(|| format!("remove stale {}", stale.display()))?;
-            i += 1;
-        }
+        // Remove any other shard file left by a previous run — a larger
+        // shard count, an old pad width, or the binary format — since
+        // readers enumerate the directory and would otherwise reject or
+        // interleave the stale files.
+        remove_stale_shards(dir, shards, ShardFormat::Csv)?;
         Ok(ShardedCsvSink {
             writers,
             device: device.to_string(),
@@ -283,6 +407,153 @@ impl RecordSink for ShardedCsvSink {
     }
 }
 
+/// Format-parametric sharded sink: the one handle `train`/`generate`
+/// thread through when the shard format is a runtime flag. Same
+/// round-robin stream-order contract in both arms.
+pub enum ShardedSink {
+    Csv(ShardedCsvSink),
+    Bin(binfmt::ShardedBinSink),
+}
+
+impl ShardedSink {
+    pub fn create(
+        dir: &Path,
+        shards: usize,
+        device: &str,
+        schema: Schema,
+        format: ShardFormat,
+    ) -> Result<Self> {
+        Ok(match format {
+            ShardFormat::Csv => ShardedSink::Csv(ShardedCsvSink::create_schema(
+                dir, shards, device, schema,
+            )?),
+            ShardFormat::Bin => ShardedSink::Bin(binfmt::ShardedBinSink::create(
+                dir, shards, device, schema,
+            )?),
+        })
+    }
+
+    pub fn format(&self) -> ShardFormat {
+        match self {
+            ShardedSink::Csv(_) => ShardFormat::Csv,
+            ShardedSink::Bin(_) => ShardFormat::Bin,
+        }
+    }
+
+    pub fn shards(&self) -> usize {
+        match self {
+            ShardedSink::Csv(s) => s.shards(),
+            ShardedSink::Bin(s) => s.shards(),
+        }
+    }
+
+    pub fn written(&self) -> u64 {
+        match self {
+            ShardedSink::Csv(s) => s.written(),
+            ShardedSink::Bin(s) => s.written(),
+        }
+    }
+
+    pub fn device(&self) -> &str {
+        match self {
+            ShardedSink::Csv(s) => s.device(),
+            ShardedSink::Bin(s) => s.device(),
+        }
+    }
+
+    pub fn schema(&self) -> Schema {
+        match self {
+            ShardedSink::Csv(s) => s.schema(),
+            ShardedSink::Bin(s) => s.schema(),
+        }
+    }
+}
+
+impl RecordSink for ShardedSink {
+    fn accept(&mut self, rec: &TuneRecord) -> Result<()> {
+        match self {
+            ShardedSink::Csv(s) => s.accept(rec),
+            ShardedSink::Bin(s) => s.accept(rec),
+        }
+    }
+
+    fn finish(&mut self) -> Result<()> {
+        match self {
+            ShardedSink::Csv(s) => s.finish(),
+            ShardedSink::Bin(s) => s.finish(),
+        }
+    }
+}
+
+/// One shard's self-description, as read (and for binary shards,
+/// verified) from the file itself — what `lmtuner shards` prints.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ShardInfo {
+    pub path: PathBuf,
+    pub format: ShardFormat,
+    /// `None` for legacy CSV shards written before device stamping.
+    pub device: Option<String>,
+    pub schema: Schema,
+    pub rows: u64,
+    /// Binary shards carry a verified FNV-1a checksum; CSV shards none.
+    pub checksum: Option<u64>,
+}
+
+/// Read one shard end to end and report its self-description. For a
+/// binary shard this verifies the declared row count and checksum
+/// against the stream (a corrupt file is the typed
+/// [`binfmt::CorruptShard`] error); for CSV it counts and parses every
+/// row.
+pub fn inspect_shard(path: &Path) -> Result<ShardInfo> {
+    match binfmt::detect_format(path)? {
+        ShardFormat::Csv => {
+            let mut r = RowReader::open(path)?;
+            let schema = schema_from_meta(r.meta())
+                .with_context(|| path.display().to_string())?;
+            anyhow::ensure!(
+                r.header().len() == schema.columns(),
+                "{}: expected {} columns for schema {schema}, got {}",
+                path.display(),
+                schema.columns(),
+                r.header().len()
+            );
+            let device = r.meta().get(DEVICE_META_KEY).cloned();
+            let mut rows = 0u64;
+            while r.next_row()?.is_some() {
+                rows += 1;
+            }
+            Ok(ShardInfo {
+                path: path.to_path_buf(),
+                format: ShardFormat::Csv,
+                device,
+                schema,
+                rows,
+                checksum: None,
+            })
+        }
+        ShardFormat::Bin => {
+            let mut r = BinShardReader::open(path)?;
+            let device = Some(r.device().to_string());
+            let schema = r.schema();
+            let checksum = r.declared_checksum();
+            // Reading to EOF verifies the declared row count and
+            // checksum against the stream.
+            let mut rows = 0u64;
+            while r.next_row()?.is_some() {
+                rows += 1;
+            }
+            Ok(ShardInfo {
+                path: path.to_path_buf(),
+                format: ShardFormat::Bin,
+                device,
+                schema,
+                rows,
+                checksum: Some(checksum),
+            })
+        }
+    }
+}
+
 /// Replay a sharded dataset's raw rows (`dataset::csv_header_for`
 /// layout: features, speedup, then for v2 the workgroup label) in
 /// original stream order, one row at a time (peak memory: one buffered
@@ -299,52 +570,90 @@ pub fn stream_sharded_rows(
     mut f: impl FnMut(u64, Schema, Vec<f64>) -> Result<()>,
 ) -> Result<ShardStream> {
     let files = shard_files(dir)?;
-    // Shard 0 sets the schema expectation (absent stamp = v1); every
-    // other shard must agree, and every header must have the schema's
-    // column count so a v2 file with a stripped stamp is rejected
-    // instead of misparsed.
-    let mut readers: Vec<RowReader> = Vec::with_capacity(files.len());
+    // Each shard's format is sniffed from its leading bytes (the
+    // `LMTB` magic = binary, anything else = CSV), so the extension
+    // never decides how bytes are parsed. Shard 0 sets the format,
+    // schema (absent CSV stamp = v1), and device expectations; every
+    // other shard must agree — the typed [`FormatMismatch`],
+    // [`SchemaMismatch`], and [`DeviceMismatch`] errors instead of an
+    // interleaved mixture. Every CSV header must also have the
+    // schema's column count so a v2 file with a stripped stamp is
+    // rejected instead of misparsed (binary headers carry the check
+    // internally).
+    enum ShardReader {
+        Csv(RowReader),
+        Bin(BinShardReader),
+    }
+    impl ShardReader {
+        fn next_row(&mut self) -> Result<Option<Vec<f64>>> {
+            match self {
+                ShardReader::Csv(r) => r.next_row(),
+                ShardReader::Bin(r) => r.next_row(),
+            }
+        }
+    }
+    let mut readers: Vec<ShardReader> = Vec::with_capacity(files.len());
+    let mut format = ShardFormat::Csv;
     let mut schema = Schema::V1;
+    let mut device: Option<String> = None;
     for (i, p) in files.iter().enumerate() {
-        let r = RowReader::open(p)?;
-        let found = schema_from_meta(r.meta())
-            .with_context(|| p.display().to_string())?;
+        let found_format = binfmt::detect_format(p)?;
         if i == 0 {
-            schema = found;
-        } else if found != schema {
-            return Err(SchemaMismatch {
-                expected: schema,
-                found,
+            format = found_format;
+        } else if found_format != format {
+            return Err(FormatMismatch {
+                expected: format,
+                found: found_format,
                 at: p.display().to_string(),
             }
             .into());
         }
-        anyhow::ensure!(
-            r.header().len() == schema.columns(),
-            "{}: expected {} columns for schema {schema}, got {}",
-            p.display(),
-            schema.columns(),
-            r.header().len()
-        );
-        readers.push(r);
-    }
-    // All shards must agree on the device they were measured on. The
-    // first shard sets the expectation; any deviation (including a mix
-    // of stamped and unstamped files) is the typed error.
-    let device = readers[0].meta().get(DEVICE_META_KEY).cloned();
-    for (p, r) in files.iter().zip(&readers).skip(1) {
-        let found = r.meta().get(DEVICE_META_KEY).cloned();
-        if found != device {
+        let (reader, found_schema, found_device) = match found_format {
+            ShardFormat::Csv => {
+                let r = RowReader::open(p)?;
+                let s = schema_from_meta(r.meta())
+                    .with_context(|| p.display().to_string())?;
+                anyhow::ensure!(
+                    r.header().len() == s.columns(),
+                    "{}: expected {} columns for schema {s}, got {}",
+                    p.display(),
+                    s.columns(),
+                    r.header().len()
+                );
+                let d = r.meta().get(DEVICE_META_KEY).cloned();
+                (ShardReader::Csv(r), s, d)
+            }
+            ShardFormat::Bin => {
+                let r = BinShardReader::open(p)?;
+                let s = r.schema();
+                let d = Some(r.device().to_string());
+                (ShardReader::Bin(r), s, d)
+            }
+        };
+        if i == 0 {
+            schema = found_schema;
+        } else if found_schema != schema {
+            return Err(SchemaMismatch {
+                expected: schema,
+                found: found_schema,
+                at: p.display().to_string(),
+            }
+            .into());
+        }
+        if i == 0 {
+            device = found_device;
+        } else if found_device != device {
             let fmt_dev = |d: &Option<String>| {
                 d.clone().unwrap_or_else(|| "<unstamped>".to_string())
             };
             return Err(DeviceMismatch {
                 expected: fmt_dev(&device),
-                found: fmt_dev(&found),
+                found: fmt_dev(&found_device),
                 at: p.display().to_string(),
             }
             .into());
         }
+        readers.push(reader);
     }
     let mut idx = 0u64;
     // Round-robin pop: shard k%n holds record k, so one rotation over
@@ -373,7 +682,7 @@ pub fn stream_sharded_rows(
             dir.display()
         );
     }
-    Ok(ShardStream { rows: idx, device, schema })
+    Ok(ShardStream { rows: idx, device, schema, format })
 }
 
 /// Replay a sharded dataset as `TuneRecord`s in original stream order
@@ -840,6 +1149,219 @@ mod tests {
         assert_eq!(m.records.len(), 20);
         assert_eq!(r.records().len(), 4);
         assert_eq!(r.seen(), 20);
+    }
+
+    #[test]
+    fn parse_shard_name_accepts_any_pad_and_both_formats() {
+        assert_eq!(parse_shard_name("shard-000.csv"), Some((0, ShardFormat::Csv)));
+        assert_eq!(
+            parse_shard_name("shard-00042.bin"),
+            Some((42, ShardFormat::Bin))
+        );
+        assert_eq!(
+            parse_shard_name("shard-1199.csv"),
+            Some((1199, ShardFormat::Csv))
+        );
+        assert_eq!(parse_shard_name("shard-.csv"), None);
+        assert_eq!(parse_shard_name("shard-12.txt"), None);
+        assert_eq!(parse_shard_name("shard-1x2.csv"), None);
+        assert_eq!(parse_shard_name("notashard-1.csv"), None);
+        assert_eq!(parse_shard_name("shard-00000000000.csv"), None); // >10 digits
+    }
+
+    #[test]
+    fn shard_files_sorts_numerically_over_1200_shards() {
+        // A 1200-shard dir: lexical order of 3-digit legacy names would
+        // interleave shard-1000 before shard-200 and scramble stream
+        // order. The listing must come back in numeric index order.
+        let dir = tmpdir("numsort");
+        for i in 0..1200usize {
+            // legacy 3-digit pad, the worst case for lexical sorting
+            std::fs::write(dir.join(format!("shard-{i:03}.csv")), "").unwrap();
+        }
+        // plus a non-shard file that must be ignored
+        std::fs::write(dir.join("notes.txt"), "x").unwrap();
+        let files = shard_files(&dir).unwrap();
+        assert_eq!(files.len(), 1200);
+        for (i, p) in files.iter().enumerate() {
+            let name = p.file_name().unwrap().to_str().unwrap();
+            assert_eq!(
+                parse_shard_name(name).unwrap().0,
+                i as u64,
+                "position {i} got {name}"
+            );
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn duplicate_and_gapped_shard_indices_are_errors() {
+        let dir = tmpdir("dupidx");
+        // same index under two pad widths
+        std::fs::write(dir.join("shard-003.csv"), "").unwrap();
+        std::fs::write(dir.join("shard-00003.csv"), "").unwrap();
+        for i in 0..3 {
+            std::fs::write(dir.join(format!("shard-{i:05}.csv")), "").unwrap();
+        }
+        let err = shard_files(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("more than once"), "{err:#}");
+        std::fs::remove_file(dir.join("shard-003.csv")).unwrap();
+        std::fs::remove_file(dir.join("shard-00003.csv")).unwrap();
+        // now a gap: 0,1,2 then 5
+        std::fs::write(dir.join("shard-00005.csv"), "").unwrap();
+        let err = shard_files(&dir).unwrap_err();
+        assert!(format!("{err:#}").contains("not contiguous"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn mixed_format_shards_are_a_typed_error() {
+        let dir = tmpdir("mixfmt");
+        let mut sink =
+            ShardedCsvSink::create_schema(&dir, 2, "m2090", Schema::V2).unwrap();
+        for i in 0..4 {
+            sink.accept(&rec(i)).unwrap();
+        }
+        sink.finish().unwrap();
+        // Replace shard 1 with a binary shard holding the same records.
+        std::fs::remove_file(shard_path(&dir, 1)).unwrap();
+        let mut w = binfmt::BinShardWriter::create(
+            &shard_path_for(&dir, 1, ShardFormat::Bin),
+            "m2090",
+            Schema::V2,
+        )
+        .unwrap();
+        w.write_row(&rec(1).csv_row(Schema::V2)).unwrap();
+        w.write_row(&rec(3).csv_row(Schema::V2)).unwrap();
+        w.finish().unwrap();
+        let err = load_sharded(&dir).unwrap_err();
+        let m = err.downcast_ref::<FormatMismatch>().expect("typed error");
+        assert_eq!(m.expected, ShardFormat::Csv);
+        assert_eq!(m.found, ShardFormat::Bin);
+        assert!(format!("{err:#}").contains("format mismatch"), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn format_detection_trusts_bytes_not_extensions() {
+        // A binary shard renamed .csv must still be read as binary —
+        // and then rejected for mixing with a real CSV shard.
+        let dir = tmpdir("sniff");
+        let mut sink = ShardedCsvSink::create(&dir, 2, "m2090").unwrap();
+        for i in 0..4 {
+            sink.accept(&rec(i)).unwrap();
+        }
+        sink.finish().unwrap();
+        let mut w = binfmt::BinShardWriter::create(
+            &dir.join("shard-tmp.binwrite"),
+            "m2090",
+            Schema::V1,
+        )
+        .unwrap();
+        w.write_row(&rec(1).csv_row(Schema::V1)).unwrap();
+        w.finish().unwrap();
+        std::fs::rename(dir.join("shard-tmp.binwrite"), shard_path(&dir, 1))
+            .unwrap();
+        let err = load_sharded(&dir).unwrap_err();
+        assert!(err.downcast_ref::<FormatMismatch>().is_some(), "{err:#}");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn recreating_with_other_format_removes_stale_files() {
+        let dir = tmpdir("stalefmt");
+        let mut csv = ShardedCsvSink::create_schema(&dir, 3, "m2090", Schema::V2)
+            .unwrap();
+        for i in 0..6 {
+            csv.accept(&rec(i)).unwrap();
+        }
+        csv.finish().unwrap();
+        // plus an old-pad leftover that parse-based cleanup must catch
+        std::fs::write(dir.join("shard-007.csv"), "").unwrap();
+
+        let mut bin = ShardedSink::create(
+            &dir,
+            2,
+            "m2090",
+            Schema::V2,
+            ShardFormat::Bin,
+        )
+        .unwrap();
+        assert_eq!(bin.format(), ShardFormat::Bin);
+        for i in 100..105 {
+            bin.accept(&rec(i)).unwrap();
+        }
+        bin.finish().unwrap();
+        assert_eq!(bin.written(), 5);
+
+        let (back, stream) = load_sharded_tagged(&dir).unwrap();
+        assert_eq!(stream.format, ShardFormat::Bin);
+        assert_eq!(stream.schema, Schema::V2);
+        assert_eq!(stream.device.as_deref(), Some("m2090"));
+        assert_eq!(back.len(), 5);
+        for (i, r) in back.iter().enumerate() {
+            assert_eq!(r.base.features[0], (100 + i) as f64);
+            assert_eq!(r.best_wg, rec((100 + i) as u64).best_wg);
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn inspect_shard_reports_both_formats() {
+        let dir = tmpdir("inspect");
+        let mut sink = ShardedSink::create(
+            &dir,
+            2,
+            "gtx480",
+            Schema::V2,
+            ShardFormat::Bin,
+        )
+        .unwrap();
+        for i in 0..5 {
+            sink.accept(&rec(i)).unwrap();
+        }
+        sink.finish().unwrap();
+        let info = inspect_shard(&shard_path_for(&dir, 0, ShardFormat::Bin))
+            .unwrap();
+        assert_eq!(info.format, ShardFormat::Bin);
+        assert_eq!(info.device.as_deref(), Some("gtx480"));
+        assert_eq!(info.schema, Schema::V2);
+        assert_eq!(info.rows, 3); // records 0, 2, 4
+        assert!(info.checksum.is_some());
+
+        let mut csv = ShardedCsvSink::create(&dir, 1, "gtx480").unwrap();
+        for i in 0..4 {
+            csv.accept(&rec(i)).unwrap();
+        }
+        csv.finish().unwrap();
+        let info = inspect_shard(&shard_path(&dir, 0)).unwrap();
+        assert_eq!(info.format, ShardFormat::Csv);
+        assert_eq!(info.rows, 4);
+        assert_eq!(info.checksum, None);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn zero_row_trailing_shards_load_in_both_formats() {
+        // 2 records over 4 shards: shards 2 and 3 are header-only. The
+        // replay and `ReservoirSink` paths both see exactly 2 records.
+        for format in [ShardFormat::Csv, ShardFormat::Bin] {
+            let dir = tmpdir(&format!("zerorow-{format}"));
+            let mut sink =
+                ShardedSink::create(&dir, 4, "m2090", Schema::V2, format).unwrap();
+            for i in 0..2 {
+                sink.accept(&rec(i)).unwrap();
+            }
+            sink.finish().unwrap();
+            let (back, stream) = load_sharded_tagged(&dir).unwrap();
+            assert_eq!(stream.rows, 2, "{format}");
+            assert_eq!(stream.format, format);
+            assert_eq!(back.len(), 2);
+            for (i, r) in back.iter().enumerate() {
+                assert_eq!(r.base.features[0], i as f64);
+            }
+            std::fs::remove_dir_all(&dir).ok();
+        }
     }
 
     #[test]

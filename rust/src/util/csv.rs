@@ -21,6 +21,34 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+/// Render one `# key=value` metadata line (no trailing newline).
+/// Keys must be non-empty and free of '=' and newlines; values must be
+/// free of newlines. This is the single canonical encoder — every layer
+/// that stamps metadata onto a text file goes through it.
+pub fn format_meta_line(key: &str, value: &str) -> Result<String> {
+    if key.is_empty() || key.contains('=') || key.contains('\n') || value.contains('\n') {
+        bail!("invalid metadata entry '{key}={value}'");
+    }
+    Ok(format!("# {key}={value}"))
+}
+
+/// Parse one leading file line as metadata. Returns `None` when the
+/// line is not a comment (i.e. the header has started), `Some(Ok)` for
+/// a well-formed `# key=value` line, and `Some(Err)` for a comment that
+/// does not parse as metadata. Shared by [`RowReader`] and the shard
+/// inspector so both agree on what counts as metadata.
+pub fn parse_meta_line(line: &str) -> Option<Result<(String, String)>> {
+    let body = line.strip_prefix('#')?;
+    Some(match body.trim().split_once('=') {
+        Some((k, v)) if !k.trim().is_empty() => {
+            Ok((k.trim().to_string(), v.trim().to_string()))
+        }
+        _ => Err(anyhow::anyhow!(
+            "malformed metadata line '{line}' (expected '# key=value')"
+        )),
+    })
+}
+
 /// Append one f64 to `line` using the compact dataset format (integers
 /// without a trailing `.0`, everything else via the shortest roundtrip
 /// float formatting).
@@ -59,10 +87,9 @@ impl RowWriter {
             .with_context(|| format!("create {}", path.display()))?;
         let mut w = BufWriter::new(f);
         for (k, v) in meta {
-            if k.is_empty() || k.contains('=') || k.contains('\n') || v.contains('\n') {
-                bail!("{}: invalid metadata entry '{k}={v}'", path.display());
-            }
-            writeln!(w, "# {k}={v}")?;
+            let line = format_meta_line(k, v)
+                .with_context(|| format!("{}", path.display()))?;
+            writeln!(w, "{line}")?;
         }
         writeln!(w, "{}", header.join(","))?;
         Ok(RowWriter {
@@ -134,20 +161,14 @@ impl RowReader {
                 None => bail!("{}: empty file", path.display()),
             };
             lineno += 1;
-            if let Some(body) = line.strip_prefix('#') {
-                match body.trim().split_once('=') {
-                    Some((k, v)) if !k.trim().is_empty() => {
-                        meta.insert(k.trim().to_string(), v.trim().to_string());
-                    }
-                    _ => bail!(
-                        "{}:{}: malformed metadata line '{line}' \
-                         (expected '# key=value')",
-                        path.display(),
-                        lineno
-                    ),
+            match parse_meta_line(&line) {
+                Some(parsed) => {
+                    let (k, v) = parsed.with_context(|| {
+                        format!("{}:{}", path.display(), lineno)
+                    })?;
+                    meta.insert(k, v);
                 }
-            } else {
-                break line;
+                None => break line,
             }
         };
         let header: Vec<String> =
@@ -340,6 +361,21 @@ mod tests {
             RowWriter::create_with_meta(&path2, &["a"], &[("k=v", "x")]).is_err()
         );
         std::fs::remove_file(&path2).ok();
+    }
+
+    #[test]
+    fn meta_line_helpers_are_the_shared_codec() {
+        let line = format_meta_line("device", "m2090").unwrap();
+        assert_eq!(line, "# device=m2090");
+        let (k, v) = parse_meta_line(&line).unwrap().unwrap();
+        assert_eq!((k.as_str(), v.as_str()), ("device", "m2090"));
+
+        assert!(format_meta_line("", "x").is_err());
+        assert!(format_meta_line("k=v", "x").is_err());
+        assert!(format_meta_line("k", "a\nb").is_err());
+
+        assert!(parse_meta_line("a,b,c").is_none());
+        assert!(parse_meta_line("# deviceonly").unwrap().is_err());
     }
 
     #[test]

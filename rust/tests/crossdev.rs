@@ -46,7 +46,12 @@ fn crossdev_matrix_covers_the_registered_portfolio() {
     let devices = registry::all();
     let n = devices.len();
     assert!(n >= 4);
-    let m = crossdev::run(&CrossDevConfig { base: tiny(), devices }).unwrap();
+    let m = crossdev::run(&CrossDevConfig {
+        base: tiny(),
+        devices,
+        dump: None,
+    })
+    .unwrap();
     assert_eq!(m.n(), n);
     assert_eq!(m.devices, registry::keys());
     for row in &m.count_based {

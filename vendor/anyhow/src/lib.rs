@@ -3,9 +3,12 @@
 //! The build environment has no network access to crates.io, so the crate
 //! graph must be self-contained. This shim implements exactly the surface
 //! lmtuner uses — `Error`, `Result`, `Context`, `anyhow!`, `bail!`,
-//! `ensure!` — with the same semantics for that subset: context wrapping,
-//! source-chain capture on conversion, `{}` printing the outermost
-//! message and `{:#}` the whole chain.
+//! `ensure!`, `Error::new`, `downcast_ref` — with the same semantics for
+//! that subset: context wrapping, source-chain capture on conversion,
+//! `{}` printing the outermost message and `{:#}` the whole chain, and
+//! typed recovery of the root error for errors built from a
+//! `std::error::Error` value (the typed-error pattern `DeviceMismatch`
+//! / `SchemaMismatch` / `ArityMismatch` / `CorruptShard` rely on).
 
 use std::convert::Infallible;
 use std::fmt::{self, Debug, Display};
@@ -13,23 +16,49 @@ use std::fmt::{self, Debug, Display};
 /// `Result<T, anyhow::Error>` with the error type defaulted.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
 
-/// A dynamic error: an outermost message plus its chain of causes.
+/// A dynamic error: an outermost message plus its chain of causes, and —
+/// when built from a typed `std::error::Error` value — that root error
+/// itself, recoverable via [`Error::downcast_ref`].
 pub struct Error {
     /// `chain[0]` is the outermost message; each following entry is the
     /// cause of the one before it.
     chain: Vec<String>,
+    /// The typed root error this value was converted from, if any.
+    /// Context wrapping keeps it; `Error::msg` has none.
+    typed: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
 }
 
 impl Error {
-    /// Build an error from any displayable message.
+    /// Build an error from any displayable message. The message is
+    /// stringified, so there is no typed root to downcast to.
     pub fn msg<M: Display>(message: M) -> Error {
-        Error { chain: vec![message.to_string()] }
+        Error { chain: vec![message.to_string()], typed: None }
+    }
+
+    /// Build an error from a typed `std::error::Error` value, keeping it
+    /// recoverable via [`Error::downcast_ref`] (same as `From`).
+    pub fn new<E>(error: E) -> Error
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        Error::from(error)
     }
 
     /// Wrap this error with an outer context message.
     pub fn context<C: Display>(mut self, context: C) -> Error {
         self.chain.insert(0, context.to_string());
         self
+    }
+
+    /// The typed root error, if this value was built from one (via `?`,
+    /// `From`, or [`Error::new`]) and it is a `T`. Context layers do not
+    /// hide it. Errors built from bare messages have no typed root.
+    pub fn downcast_ref<T>(&self) -> Option<&T>
+    where
+        T: std::error::Error + 'static,
+    {
+        let typed = self.typed.as_deref()?;
+        (typed as &(dyn std::error::Error + 'static)).downcast_ref::<T>()
     }
 
     /// The messages from outermost to innermost.
@@ -78,7 +107,7 @@ where
             chain.push(s.to_string());
             source = s.source();
         }
-        Error { chain }
+        Error { chain, typed: Some(Box::new(e)) }
     }
 }
 
@@ -209,5 +238,21 @@ mod tests {
             Ok(())
         }
         assert!(run().is_err());
+    }
+
+    #[test]
+    fn downcast_ref_recovers_the_typed_root() {
+        let e: Error = io_err().into();
+        let io = e.downcast_ref::<std::io::Error>().expect("typed root");
+        assert_eq!(io.kind(), std::io::ErrorKind::NotFound);
+        assert!(e.downcast_ref::<std::fmt::Error>().is_none());
+        // context layers keep the typed root reachable
+        let wrapped = e.context("while probing");
+        assert!(wrapped.downcast_ref::<std::io::Error>().is_some());
+        // Error::new is the explicit form of From
+        let e2 = Error::new(io_err());
+        assert!(e2.downcast_ref::<std::io::Error>().is_some());
+        // message-built errors have no typed root
+        assert!(Error::msg("plain").downcast_ref::<std::io::Error>().is_none());
     }
 }
