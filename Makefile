@@ -2,7 +2,7 @@
 # (no artifacts, no network). `artifacts` requires a python with jax to
 # AOT-lower the Pallas kernels to HLO text for the PJRT backend.
 
-.PHONY: build test fmt-check docs artifacts bench-snapshots clean
+.PHONY: build test fmt-check clippy docs artifacts bench-snapshots clean
 
 build:
 	cargo build --release
@@ -10,14 +10,15 @@ build:
 test:
 	cargo test -q
 
-# Same format gate CI runs (scoped to the frontend subsystem until the
-# pre-existing tree is rustfmt-clean).
+# Same format gate CI runs: the whole tree, vendor/ excluded as
+# third-party.
 fmt-check:
-	rustfmt --edition 2021 --check \
-	    rust/src/frontend/lexer.rs rust/src/frontend/ast.rs \
-	    rust/src/frontend/parser.rs rust/src/frontend/access.rs \
-	    rust/src/frontend/extract.rs rust/src/frontend/mod.rs \
-	    rust/tests/frontend.rs benches/perf_frontend.rs
+	rustfmt --edition 2021 --check $$(git ls-files '*.rs' ':!:vendor/*')
+
+# Same clippy gate CI runs; the allowed style envelope lives in
+# Cargo.toml [lints.clippy].
+clippy:
+	cargo clippy --all-targets -p lmtuner -- -D warnings
 
 # Same gate CI runs: doc rot fails the build.
 docs:

@@ -7,7 +7,7 @@
 //! configurations must be extraction-bound, not parser-bound.
 
 use lmtuner::frontend::extract::extract_descriptor;
-use lmtuner::frontend::{parse_program, AnalyzeOptions, Bindings};
+use lmtuner::frontend::{lint_program, parse_program, AnalyzeOptions, Bindings, SemaOptions};
 use lmtuner::gpu::spec::DeviceSpec;
 use lmtuner::util::bench::{black_box, report_throughput, Bencher};
 use lmtuner::workloads;
@@ -93,6 +93,40 @@ fn main() {
     let r = b.run("frontend: extract-only (pre-parsed)", || {
         for (prog, opts) in &parsed {
             black_box(extract_descriptor(prog, opts, &dev).expect("fixture extracts"));
+        }
+    });
+    report_throughput(&r, n, "kernels");
+
+    // The sema gate `analyze` now runs before every extraction, and the
+    // full `lint` path (sema + one certificate per accessed array).
+    let sema: Vec<(_, SemaOptions)> = parsed
+        .iter()
+        .map(|(prog, opts)| {
+            (
+                prog,
+                SemaOptions {
+                    kernel: None,
+                    launch: opts.launch,
+                    bindings: opts.bindings.clone(),
+                    certificates: false,
+                },
+            )
+        })
+        .collect();
+    let r = b.run("frontend: lint (sema gate, pre-parsed)", || {
+        for (prog, opts) in &sema {
+            black_box(lint_program(prog, opts, &dev).expect("fixture lints"));
+        }
+    });
+    report_throughput(&r, n, "kernels");
+
+    let certified: Vec<(_, SemaOptions)> = sema
+        .iter()
+        .map(|(prog, opts)| (*prog, SemaOptions { certificates: true, ..opts.clone() }))
+        .collect();
+    let r = b.run("frontend: lint+certify (pre-parsed)", || {
+        for (prog, opts) in &certified {
+            black_box(lint_program(prog, opts, &dev).expect("fixture lints"));
         }
     });
     report_throughput(&r, n, "kernels");

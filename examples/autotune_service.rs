@@ -79,7 +79,10 @@ fn main() -> anyhow::Result<()> {
         }
     }
     let total = oracle.len() * REPEATS;
-    println!("[4/4] replaying {total} requests ({} unique instances x {REPEATS}) ...", oracle.len());
+    println!(
+        "[4/4] replaying {total} requests ({} unique instances x {REPEATS}) ...",
+        oracle.len()
+    );
 
     let t0 = Instant::now();
     let (tx, rx) = std::sync::mpsc::channel();

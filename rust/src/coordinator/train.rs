@@ -24,19 +24,15 @@ use anyhow::Result;
 use crate::gpu::spec::DeviceSpec;
 use crate::kernelmodel::features::NUM_FEATURES;
 use crate::ml::forest::{Forest, ForestConfig, OobEstimate};
-use crate::ml::metrics::{
-    self, Accuracy, AccuracyAccumulator, JointAccumulator, JointAccuracy,
-};
+use crate::ml::metrics::{self, Accuracy, AccuracyAccumulator, JointAccumulator, JointAccuracy};
 use crate::ml::{export, io};
 use crate::sim::exec::{MeasureConfig, Schema, SpeedupRecord, TuneRecord};
 use crate::synth::binfmt::ShardFormat;
 use crate::synth::dataset::BuildProgress;
 use crate::synth::pipeline::{PipelineSpec, StageCounters, StagedSink};
-use crate::util::pool::parallel_map;
-use crate::synth::sink::{
-    self, DatasetSummary, MemorySink, ReservoirSink, ShardedSink, Tee,
-};
+use crate::synth::sink::{self, DatasetSummary, MemorySink, ReservoirSink, ShardedSink, Tee};
 use crate::synth::{dataset, generator, sweep::LaunchSweep};
+use crate::util::pool::parallel_map;
 use crate::util::prng::Rng;
 use crate::workloads;
 

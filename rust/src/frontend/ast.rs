@@ -134,6 +134,21 @@ pub enum Stmt {
     Return { pos: Pos },
 }
 
+impl Stmt {
+    /// Source anchor of the statement (diagnostics point here when no
+    /// finer-grained expression position applies).
+    pub fn pos(&self) -> Pos {
+        match self {
+            Stmt::Decl { pos, .. }
+            | Stmt::Assign { pos, .. }
+            | Stmt::For { pos, .. }
+            | Stmt::If { pos, .. }
+            | Stmt::Call { pos, .. }
+            | Stmt::Return { pos } => *pos,
+        }
+    }
+}
+
 /// OpenCL address-space qualifier of a kernel parameter.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum AddrSpace {

@@ -1,0 +1,328 @@
+//! Typed, span-carrying diagnostics for the semantic-analysis pass.
+//!
+//! Every finding of [`super::sema`] flows through the [`Diagnostics`]
+//! sink as a [`Diagnostic`]: a stable rule ID ([`Rule`]), a severity
+//! level ([`Severity`]), the `line:col` anchor of the offending code,
+//! the kernel (and, where it applies, the array) it concerns, and a
+//! human-readable message. The sink renders either as text lines (the
+//! default `lmtuner lint` output) or as machine-readable JSON via
+//! [`crate::util::json`] (`lmtuner lint --json`).
+//!
+//! Severity contract (DESIGN.md §2h):
+//!
+//! * `Deny` — the kernel is wrong or outside the analyzable subset in a
+//!   way that invalidates downstream results; `lint` exits 2 and
+//!   `analyze` refuses with exit code 3.
+//! * `Warn` — a performance hazard the staging transform does not fix
+//!   by itself (bank-conflicted lane stride, uncoalesced access inside
+//!   a loop, over-budget staged region); promoted to the deny set by
+//!   `lint --deny warn`.
+//! * `Note` — informational findings (staging certificates, one-off
+//!   uncoalesced accesses that staging itself is the fix for).
+//!
+//! Rule IDs are stable across releases: tests and CI grep for them, and
+//! JSON consumers key on them. Never renumber; retire IDs instead.
+
+use std::fmt;
+
+use super::lexer::Pos;
+use crate::util::json::Json;
+
+/// Diagnostic severity, ordered `Note < Warn < Deny`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Note,
+    Warn,
+    Deny,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Note => "note",
+            Severity::Warn => "warn",
+            Severity::Deny => "deny",
+        }
+    }
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The rule inventory (DESIGN.md §2h). IDs are stable; severity is the
+/// rule's default (the emitter may demote, never promote).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Rule {
+    /// `barrier()` reachable under work-item-divergent control flow.
+    BarrierDivergence,
+    /// Affine bounds: tap/constant column offsets reach past the row
+    /// stride, so the flattened index wraps into a different row.
+    OutOfBounds,
+    /// The staged region for an array exceeds the device's per-workgroup
+    /// local-memory budget.
+    RegionBudget,
+    /// Warp lane stride is a multiple of the 32 shared-memory banks and
+    /// the extractor's +1-column pad would not apply.
+    BankConflict,
+    /// Uncoalesced x-lane access (more than one DRAM transaction per warp).
+    Uncoalesced,
+    /// Staging-safety certificate result for one array.
+    Stageability,
+}
+
+impl Rule {
+    pub const ALL: [Rule; 6] = [
+        Rule::BarrierDivergence,
+        Rule::OutOfBounds,
+        Rule::RegionBudget,
+        Rule::BankConflict,
+        Rule::Uncoalesced,
+        Rule::Stageability,
+    ];
+
+    /// Stable machine-readable identifier.
+    pub fn id(self) -> &'static str {
+        match self {
+            Rule::BarrierDivergence => "LM001",
+            Rule::OutOfBounds => "LM002",
+            Rule::RegionBudget => "LM003",
+            Rule::BankConflict => "LM004",
+            Rule::Uncoalesced => "LM005",
+            Rule::Stageability => "LM006",
+        }
+    }
+
+    /// Default severity of the rule.
+    pub fn severity(self) -> Severity {
+        match self {
+            Rule::BarrierDivergence | Rule::OutOfBounds => Severity::Deny,
+            Rule::RegionBudget | Rule::BankConflict | Rule::Uncoalesced => Severity::Warn,
+            Rule::Stageability => Severity::Note,
+        }
+    }
+}
+
+/// One finding: rule, severity, source anchor, owning kernel, the array
+/// it concerns (when array-specific), and the rendered message.
+#[derive(Clone, Debug)]
+pub struct Diagnostic {
+    pub rule: Rule,
+    pub severity: Severity,
+    pub pos: Pos,
+    pub kernel: String,
+    pub array: Option<String>,
+    pub message: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{}: {}[{}]: {}",
+            self.pos,
+            self.severity,
+            self.rule.id(),
+            self.message
+        )
+    }
+}
+
+impl Diagnostic {
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("rule", Json::Str(self.rule.id().to_string()))
+            .set("severity", Json::Str(self.severity.as_str().to_string()))
+            .set("line", Json::Num(self.pos.line as f64))
+            .set("col", Json::Num(self.pos.col as f64))
+            .set("kernel", Json::Str(self.kernel.clone()))
+            .set(
+                "array",
+                match &self.array {
+                    Some(a) => Json::Str(a.clone()),
+                    None => Json::Null,
+                },
+            )
+            .set("message", Json::Str(self.message.clone()));
+        j
+    }
+}
+
+/// The reusable diagnostics sink: collects findings, counts by severity,
+/// sorts by source position, renders JSON.
+#[derive(Debug, Default)]
+pub struct Diagnostics {
+    diags: Vec<Diagnostic>,
+}
+
+impl Diagnostics {
+    pub fn new() -> Diagnostics {
+        Diagnostics::default()
+    }
+
+    /// Report a finding at the rule's default severity.
+    pub fn report(
+        &mut self,
+        rule: Rule,
+        pos: Pos,
+        kernel: &str,
+        array: Option<&str>,
+        message: String,
+    ) {
+        self.report_as(rule, rule.severity(), pos, kernel, array, message);
+    }
+
+    /// Report a finding at an explicit severity, which must not exceed
+    /// the rule's default (emitters may demote, never promote).
+    pub fn report_as(
+        &mut self,
+        rule: Rule,
+        severity: Severity,
+        pos: Pos,
+        kernel: &str,
+        array: Option<&str>,
+        message: String,
+    ) {
+        debug_assert!(severity <= rule.severity(), "{}: severity promotion", rule.id());
+        self.diags.push(Diagnostic {
+            rule,
+            severity,
+            pos,
+            kernel: kernel.to_string(),
+            array: array.map(str::to_string),
+            message,
+        });
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, Diagnostic> {
+        self.diags.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.diags.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.diags.is_empty()
+    }
+
+    pub fn count(&self, sev: Severity) -> usize {
+        self.diags.iter().filter(|d| d.severity == sev).count()
+    }
+
+    pub fn deny_count(&self) -> usize {
+        self.count(Severity::Deny)
+    }
+
+    pub fn warn_count(&self) -> usize {
+        self.count(Severity::Warn)
+    }
+
+    pub fn note_count(&self) -> usize {
+        self.count(Severity::Note)
+    }
+
+    /// Highest severity present, if any.
+    pub fn worst(&self) -> Option<Severity> {
+        self.diags.iter().map(|d| d.severity).max()
+    }
+
+    /// Order findings for presentation: by source position, then by
+    /// descending severity, then by rule ID — deterministic output for
+    /// the golden suite and CI greps.
+    pub fn sort(&mut self) {
+        self.diags.sort_by(|a, b| {
+            (a.pos.line, a.pos.col)
+                .cmp(&(b.pos.line, b.pos.col))
+                .then(b.severity.cmp(&a.severity))
+                .then(a.rule.cmp(&b.rule))
+        });
+    }
+
+    /// Machine-readable rendering: a severity summary plus one object
+    /// per diagnostic, parseable back by [`Json::parse`].
+    pub fn to_json(&self) -> Json {
+        let mut summary = Json::obj();
+        summary
+            .set("deny", Json::Num(self.deny_count() as f64))
+            .set("warn", Json::Num(self.warn_count() as f64))
+            .set("note", Json::Num(self.note_count() as f64));
+        let mut j = Json::obj();
+        j.set("summary", summary)
+            .set("diagnostics", Json::Arr(self.diags.iter().map(Diagnostic::to_json).collect()));
+        j
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn severity_orders_note_warn_deny() {
+        assert!(Severity::Note < Severity::Warn);
+        assert!(Severity::Warn < Severity::Deny);
+        assert_eq!(Severity::Deny.as_str(), "deny");
+    }
+
+    #[test]
+    fn rule_ids_are_stable_and_unique() {
+        let ids: Vec<&str> = Rule::ALL.iter().map(|r| r.id()).collect();
+        assert_eq!(ids, ["LM001", "LM002", "LM003", "LM004", "LM005", "LM006"]);
+        assert_eq!(Rule::BarrierDivergence.severity(), Severity::Deny);
+        assert_eq!(Rule::BankConflict.severity(), Severity::Warn);
+        assert_eq!(Rule::Stageability.severity(), Severity::Note);
+    }
+
+    #[test]
+    fn sink_counts_sorts_and_renders() {
+        let mut d = Diagnostics::new();
+        let at = |line, col| Pos { line, col };
+        d.report(Rule::Uncoalesced, at(9, 5), "k", Some("a"), "slow".into());
+        d.report(Rule::BarrierDivergence, at(3, 1), "k", None, "div".into());
+        d.sort();
+        assert_eq!(d.len(), 2);
+        assert_eq!(d.deny_count(), 1);
+        assert_eq!(d.warn_count(), 1);
+        assert_eq!(d.worst(), Some(Severity::Deny));
+        assert_eq!(d.iter().next().unwrap().rule, Rule::BarrierDivergence);
+        let line = d.iter().next().unwrap().to_string();
+        assert!(line.starts_with("3:1: deny[LM001]:"), "{line}");
+    }
+
+    #[test]
+    fn json_round_trips() {
+        let mut d = Diagnostics::new();
+        d.report(
+            Rule::OutOfBounds,
+            Pos { line: 7, col: 13 },
+            "conv",
+            Some("input"),
+            "column tap offsets 0..599 reach past the row".into(),
+        );
+        let j = d.to_json();
+        let back = Json::parse(&j.dump()).unwrap();
+        assert_eq!(back, j);
+        let diag = &back.get("diagnostics").unwrap().as_arr().unwrap()[0];
+        assert_eq!(diag.get("rule").unwrap().as_str(), Some("LM002"));
+        assert_eq!(diag.get("line").unwrap().as_usize(), Some(7));
+        assert_eq!(back.get("summary").unwrap().get("deny").unwrap().as_usize(), Some(1));
+    }
+
+    #[test]
+    fn note_demotion_is_allowed() {
+        let mut d = Diagnostics::new();
+        d.report_as(
+            Rule::Uncoalesced,
+            Severity::Note,
+            Pos { line: 1, col: 1 },
+            "k",
+            Some("out"),
+            "one-off uncoalesced store".into(),
+        );
+        assert_eq!(d.note_count(), 1);
+        assert_eq!(d.warn_count(), 0);
+    }
+}

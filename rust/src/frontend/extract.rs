@@ -214,19 +214,22 @@ enum Role {
     Other,
 }
 
+/// A fully-resolved counted loop: shared with the sema pass
+/// ([`super::sema`]), which reuses the extractor's symbolic binding
+/// machinery for its interval checks.
 #[derive(Clone, Debug)]
-struct LoopCtx {
-    start: i64,
-    step: i64,
-    trip: u64,
+pub(crate) struct LoopCtx {
+    pub(crate) start: i64,
+    pub(crate) step: i64,
+    pub(crate) trip: u64,
     /// Nesting depth at creation (outermost = 0).
-    depth: usize,
+    pub(crate) depth: usize,
 }
 
 impl LoopCtx {
     /// Smallest / largest value the loop variable takes (i128: the
     /// product cannot wrap even for absurd user-chosen steps).
-    fn value_range(&self) -> (i128, i128) {
+    pub(crate) fn value_range(&self) -> (i128, i128) {
         let start = self.start as i128;
         let last = start + (self.trip as i128 - 1) * self.step as i128;
         (start.min(last), start.max(last))
@@ -683,29 +686,21 @@ impl<'a> Walker<'a> {
         if step_v == 0 {
             return err(pos, ExtractErrorKind::UnsupportedLoop { what: "zero step".into() });
         }
-        let up = step_v > 0;
-        // i128 so user-chosen extremes cannot wrap in release builds.
-        let s = step_v as i128;
-        let diff = bound_v as i128 - start as i128;
-        let trip: i128 = match (cond_op, up) {
-            (BinOp::Lt, true) => (diff + s - 1).div_euclid(s),
-            (BinOp::Le, true) => diff.div_euclid(s) + 1,
-            (BinOp::Gt, false) => (diff + s + 1).div_euclid(s),
-            (BinOp::Ge, false) => diff.div_euclid(s) + 1,
-            _ => {
+        let trip = match trip_count(start, bound_v, step_v, cond_op) {
+            Some(t) => t,
+            None => {
                 return err(
                     pos,
                     ExtractErrorKind::UnsupportedLoop {
                         what: format!(
                             "step direction `{}` never reaches the `{}` bound",
-                            if up { "+" } else { "-" },
+                            if step_v > 0 { "+" } else { "-" },
                             cond_op.as_str()
                         ),
                     },
                 )
             }
         };
-        let trip = trip.max(0).min(u64::MAX as i128) as u64;
         if trip == 0 {
             return Ok(()); // body never executes
         }
@@ -760,8 +755,28 @@ impl<'a> Walker<'a> {
     }
 }
 
+/// Trip count of `for (v = start; v <cond_op> bound; v += step)`:
+/// `None` when the step direction never reaches the bound. `step` must
+/// be nonzero. i128 arithmetic so user-chosen extremes cannot wrap in
+/// release builds. Shared with the sema pass, which tolerates loops the
+/// extractor rejects.
+pub(crate) fn trip_count(start: i64, bound: i64, step: i64, cond_op: BinOp) -> Option<u64> {
+    debug_assert!(step != 0);
+    let up = step > 0;
+    let s = step as i128;
+    let diff = bound as i128 - start as i128;
+    let trip: i128 = match (cond_op, up) {
+        (BinOp::Lt, true) => (diff + s - 1).div_euclid(s),
+        (BinOp::Le, true) => diff.div_euclid(s) + 1,
+        (BinOp::Gt, false) => (diff + s + 1).div_euclid(s),
+        (BinOp::Ge, false) => diff.div_euclid(s) + 1,
+        _ => return None,
+    };
+    Some(trip.max(0).min(u64::MAX as i128) as u64)
+}
+
 /// Names assigned (not declared) anywhere in `body`, recursively.
-fn assigned_scalars(body: &[Stmt], out: &mut BTreeSet<String>) {
+pub(crate) fn assigned_scalars(body: &[Stmt], out: &mut BTreeSet<String>) {
     for s in body {
         match s {
             Stmt::Assign { target: Expr::Var(name, _), .. } => {
@@ -804,6 +819,19 @@ fn select_kernel<'p>(prog: &'p Program, opts: &AnalyzeOptions) -> EResult<&'p Ke
     }
 }
 
+/// Descriptor plus the target array's static access-site counts — what
+/// the staging certifier ([`super::sema::certify`]) needs on top of the
+/// descriptor itself: a region that is both read and written between
+/// barriers cannot be staged safely.
+#[derive(Clone, Debug)]
+pub struct TargetProfile {
+    pub descriptor: KernelDescriptor,
+    /// Static load sites on the target array (not dynamic counts).
+    pub target_loads: u32,
+    /// Static store sites on the target array.
+    pub target_stores: u32,
+}
+
 /// Analyze `prog` and synthesize the kernel descriptor for the given
 /// target array, launch and device.
 pub fn extract_descriptor(
@@ -811,6 +839,15 @@ pub fn extract_descriptor(
     opts: &AnalyzeOptions,
     dev: &DeviceSpec,
 ) -> EResult<KernelDescriptor> {
+    extract_profile(prog, opts, dev).map(|p| p.descriptor)
+}
+
+/// [`extract_descriptor`] plus the target's load/store site counts.
+pub fn extract_profile(
+    prog: &Program,
+    opts: &AnalyzeOptions,
+    dev: &DeviceSpec,
+) -> EResult<TargetProfile> {
     let kernel = select_kernel(prog, opts)?;
     let launch = opts.launch;
     if !launch.valid() {
@@ -922,10 +959,13 @@ pub fn extract_descriptor(
     }
 
     let roles = classify_loops(&walker.loops, &target_sites, &launch);
-    synthesize(kernel, dev, &launch, &walker, &globals, &target_sites, &roles)
+    let target_loads = target_sites.iter().filter(|g| !g.site.is_store).count() as u32;
+    let target_stores = target_sites.iter().filter(|g| g.site.is_store).count() as u32;
+    let descriptor = synthesize(kernel, dev, &launch, &walker, &globals, &target_sites, &roles)?;
+    Ok(TargetProfile { descriptor, target_loads, target_stores })
 }
 
-fn is_int_type(ty: &str) -> bool {
+pub(crate) fn is_int_type(ty: &str) -> bool {
     matches!(ty, "int" | "uint" | "long" | "ulong" | "short" | "size_t" | "char")
 }
 

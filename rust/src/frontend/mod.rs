@@ -8,7 +8,13 @@
 //! [`extract`]), and synthesizes the descriptor + canonical feature
 //! vector for a given launch configuration and device — which is what
 //! `lmtuner analyze <kernel.cl>` runs end-to-end into the trained
-//! forest.
+//! forest. On top of the same AST, the semantic-analysis pass
+//! ([`sema`], diagnostics sink in [`diag`]) powers `lmtuner lint`:
+//! barrier-divergence and affine-bounds checks, coalescing/bank-conflict
+//! lints, and the staging-safety certificate ([`sema::certify`]) the
+//! future source-to-source transform depends on. `analyze` refuses to
+//! proceed past Deny-level diagnostics (exit-code table in DESIGN.md
+//! §2h).
 //!
 //! The supported subset and every modeling rule (loop classification,
 //! coalescing, computation accounting, the register heuristic) are
@@ -45,18 +51,22 @@
 
 pub mod access;
 pub mod ast;
+pub mod diag;
 pub mod extract;
 pub mod lexer;
 pub mod parser;
+pub mod sema;
 
 use std::fmt;
 
 use crate::gpu::spec::DeviceSpec;
 use crate::kernelmodel::descriptor::KernelDescriptor;
 
-pub use extract::{AnalyzeOptions, Bindings, ExtractError, ExtractErrorKind};
+pub use diag::{Diagnostic, Diagnostics, Rule, Severity};
+pub use extract::{AnalyzeOptions, Bindings, ExtractError, ExtractErrorKind, TargetProfile};
 pub use lexer::{LexError, Pos};
 pub use parser::ParseError;
+pub use sema::{certify, lint_program, LintReport, SemaOptions, StagingCertificate};
 
 /// Any frontend failure: lexing, parsing, or analysis. All variants are
 /// positioned (line:column) and none are produced by panicking.

@@ -1,0 +1,1106 @@
+//! Semantic analysis over the parsed AST: the `lmtuner lint` engine and
+//! the staging-safety certifier the future source-to-source transform
+//! depends on (ROADMAP item 3).
+//!
+//! One symbolic walk per kernel drives every rule. The walk reuses the
+//! extractor's binding machinery (affine forms over work-item intrinsics
+//! and counted loops, [`super::extract::trip_count`],
+//! [`super::extract::LoopCtx`]) but runs on a *divergence lattice*
+//! instead of the extractor's hard-error value domain:
+//!
+//! ```text
+//!   Aff(affine)  — known affine form; lane-variant iff it has a
+//!                  gid/lid term
+//!   Uniform      — value unknown, but identical across the work-items
+//!                  of a group (scalar arguments, loads at uniform
+//!                  indices, loop counters with uniform bounds)
+//!   Variant      — may differ between work-items (lane-variant)
+//! ```
+//!
+//! Where the extractor refuses (unbound `--set`, non-affine index), the
+//! linter degrades: the value drops to `Uniform`/`Variant` and the
+//! affine-interval checks for the affected access are skipped — barrier
+//! divergence is still checked, because kernel arguments are uniform by
+//! definition. Rules (IDs and severities in [`super::diag::Rule`],
+//! contract in DESIGN.md §2h):
+//!
+//! * **LM001 barrier divergence (Deny)** — `barrier()` reachable under a
+//!   lane-variant branch, inside a loop whose bounds are lane-variant,
+//!   or after a lane-variant guarded `return`.
+//! * **LM002 affine bounds (Deny)** — the tap/constant column offsets of
+//!   a 2D access reach a full row stride, so the flattened index wraps
+//!   into a different row; no host-side apron allocation can make that
+//!   access mean what it says. (Sub-stride apron reads at the grid
+//!   border are the host's documented responsibility, exactly the
+//!   paper's staging-region assumption.)
+//! * **LM003 region budget (Warn)** — the staged region for an array
+//!   exceeds [`crate::gpu::spec::DeviceSpec::lmem_budget_per_wg`];
+//!   reported through the staging certificate.
+//! * **LM004 bank conflict (Warn)** — the x-lane element stride of a
+//!   column coordinate is a nonzero multiple of the 32 banks while the
+//!   row does not depend on x: were the array staged as-is, all warp
+//!   lanes would hit one bank, and the extractor's +1-column pad (which
+//!   only fires for transposed accesses) would not apply.
+//! * **LM005 uncoalesced access (Warn in a loop, Note otherwise)** —
+//!   more than one DRAM transaction per warp access. One-off accesses
+//!   demote to Note: a transpose-shaped epilogue store is precisely what
+//!   the staging transform exists to fix, not a defect of the input.
+//!   Suppressed where LM004 already fired on the same access.
+//! * **LM006 staging certificate (Note)** — `stageable: yes/no` plus
+//!   reasons per accessed `__global` array (see [`certify`]).
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fmt;
+
+use super::access::{split_row_col, tx_per_access, Affine, Var};
+use super::ast::{AddrSpace, AssignOp, BinOp, Expr, ForStep, Kernel, Program, Stmt};
+use super::diag::{Diagnostics, Rule, Severity};
+use super::extract::{
+    self, assigned_scalars, is_int_type, trip_count, AnalyzeOptions, Bindings, ExtractError,
+    ExtractErrorKind, LoopCtx, MAX_TRIP,
+};
+use super::lexer::Pos;
+use crate::gpu::spec::DeviceSpec;
+use crate::kernelmodel::launch::Launch;
+use crate::util::json::Json;
+
+/// Shared-memory banks on every Fermi/Kepler part in the registry.
+const BANKS: i64 = 32;
+
+/// What to lint: which kernel(s), the launch geometry, scalar bindings,
+/// and whether to attempt a staging certificate per accessed array.
+#[derive(Clone, Debug)]
+pub struct SemaOptions {
+    /// Kernel name; `None` lints every kernel in the file.
+    pub kernel: Option<String>,
+    pub launch: Launch,
+    pub bindings: Bindings,
+    /// Certify each accessed `__global` array (the `lint` path). The
+    /// `analyze` gate runs with this off and certifies its target
+    /// separately.
+    pub certificates: bool,
+}
+
+/// Why an array failed the staging-safety certificate.
+#[derive(Clone, Debug)]
+pub enum CertReason {
+    /// The extractor's affine analysis failed (non-affine index, unbound
+    /// scalar, unsupported construct ...): the full positioned message.
+    Analysis(String),
+    /// The array has both load and store sites: staging the region with
+    /// no barrier between the aliasing accesses is unsafe.
+    MixedReadWrite { loads: u32, stores: u32 },
+    /// The staged region does not fit the device budget.
+    OverBudget { need: u64, budget: u64 },
+}
+
+impl fmt::Display for CertReason {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CertReason::Analysis(msg) => write!(f, "{msg}"),
+            CertReason::MixedReadWrite { loads, stores } => write!(
+                f,
+                "{loads} load and {stores} store site(s) alias the staged region \
+                 between barriers"
+            ),
+            CertReason::OverBudget { need, budget } => {
+                write!(f, "staged region needs {need} B but the device budget is {budget} B")
+            }
+        }
+    }
+}
+
+/// The staging-safety certificate for one (kernel, array) pair: the
+/// conditions the source-to-source `__local` transform needs, proven or
+/// refuted with reasons.
+#[derive(Clone, Debug)]
+pub struct StagingCertificate {
+    pub kernel: String,
+    pub array: String,
+    pub stageable: bool,
+    /// Empty iff `stageable`.
+    pub reasons: Vec<CertReason>,
+    /// Staged-region footprint; `None` when affine analysis failed.
+    pub region_bytes: Option<u64>,
+    /// The device's per-workgroup local-memory budget the region was
+    /// checked against.
+    pub budget_bytes: u64,
+}
+
+impl StagingCertificate {
+    /// One-line human rendering (`analyze` prints this beside the forest
+    /// verdict).
+    pub fn summary(&self) -> String {
+        if self.stageable {
+            format!(
+                "stageable: yes (region {} B within the {} B budget)",
+                self.region_bytes.unwrap_or(0),
+                self.budget_bytes
+            )
+        } else {
+            let reasons: Vec<String> = self.reasons.iter().map(|r| r.to_string()).collect();
+            format!("stageable: no ({})", reasons.join("; "))
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("kernel", Json::Str(self.kernel.clone()))
+            .set("array", Json::Str(self.array.clone()))
+            .set("stageable", Json::Bool(self.stageable))
+            .set(
+                "region_bytes",
+                match self.region_bytes {
+                    Some(b) => Json::Num(b as f64),
+                    None => Json::Null,
+                },
+            )
+            .set("budget_bytes", Json::Num(self.budget_bytes as f64))
+            .set(
+                "reasons",
+                Json::Arr(self.reasons.iter().map(|r| Json::Str(r.to_string())).collect()),
+            );
+        j
+    }
+}
+
+/// Prove (or refute, with reasons) that staging `opts.target` is legal:
+/// affine indices only, no aliasing writes to the staged region between
+/// barriers, region within the device's local-memory budget.
+pub fn certify(prog: &Program, opts: &AnalyzeOptions, dev: &DeviceSpec) -> StagingCertificate {
+    let budget = dev.lmem_budget_per_wg() as u64;
+    match extract::extract_profile(prog, opts, dev) {
+        Err(e) => StagingCertificate {
+            kernel: opts.kernel.clone().unwrap_or_default(),
+            array: opts.target.clone(),
+            stageable: false,
+            reasons: vec![CertReason::Analysis(e.to_string())],
+            region_bytes: None,
+            budget_bytes: budget,
+        },
+        Ok(p) => {
+            let mut reasons = Vec::new();
+            if p.target_loads > 0 && p.target_stores > 0 {
+                reasons.push(CertReason::MixedReadWrite {
+                    loads: p.target_loads,
+                    stores: p.target_stores,
+                });
+            }
+            let need = p.descriptor.region_bytes();
+            if need > budget {
+                reasons.push(CertReason::OverBudget { need, budget });
+            }
+            StagingCertificate {
+                kernel: p.descriptor.name.clone(),
+                array: opts.target.clone(),
+                stageable: reasons.is_empty(),
+                reasons,
+                region_bytes: Some(need),
+                budget_bytes: budget,
+            }
+        }
+    }
+}
+
+/// Everything one lint run produced: the diagnostics stream (which
+/// includes LM006 certificate notes) plus the structured certificates.
+#[derive(Debug)]
+pub struct LintReport {
+    pub diags: Diagnostics,
+    pub certificates: Vec<StagingCertificate>,
+}
+
+impl LintReport {
+    /// The `lint --json` document: file, severity summary, diagnostics,
+    /// and structured certificates — round-trips through [`Json::parse`].
+    pub fn to_json(&self, file: &str) -> Json {
+        let mut j = self.diags.to_json();
+        j.set("file", Json::Str(file.to_string())).set(
+            "certificates",
+            Json::Arr(self.certificates.iter().map(StagingCertificate::to_json).collect()),
+        );
+        j
+    }
+}
+
+/// Lint every selected kernel in `prog`. The only hard errors are the
+/// selection ones the extractor would also raise (no kernels, unknown
+/// `--kernel`); everything about the kernel *bodies* comes back as
+/// diagnostics, never as an `Err`.
+pub fn lint_program(
+    prog: &Program,
+    opts: &SemaOptions,
+    dev: &DeviceSpec,
+) -> Result<LintReport, ExtractError> {
+    if prog.kernels.is_empty() {
+        return Err(ExtractError { pos: Pos::start(), kind: ExtractErrorKind::NoKernels });
+    }
+    let kernels: Vec<&Kernel> = match &opts.kernel {
+        Some(want) => {
+            let k = prog.kernels.iter().find(|k| &k.name == want).ok_or(ExtractError {
+                pos: Pos::start(),
+                kind: ExtractErrorKind::UnknownKernel {
+                    name: want.clone(),
+                    available: prog.kernels.iter().map(|k| k.name.clone()).collect(),
+                },
+            })?;
+            vec![k]
+        }
+        None => prog.kernels.iter().collect(),
+    };
+    let mut diags = Diagnostics::new();
+    let mut certificates = Vec::new();
+    for k in kernels {
+        check_kernel(prog, k, opts, dev, &mut diags, &mut certificates);
+    }
+    diags.sort();
+    Ok(LintReport { diags, certificates })
+}
+
+// ---------------------------------------------------------------------
+// The divergence-lattice walk.
+
+/// Abstract value: affine, uniform-but-unknown, or lane-variant.
+#[derive(Clone, Debug)]
+enum SVal {
+    Aff(Affine),
+    Uniform,
+    Variant,
+}
+
+impl SVal {
+    /// May this value differ between work-items of one group?
+    fn is_variant(&self) -> bool {
+        match self {
+            SVal::Aff(a) => a.depends_on_wi(),
+            SVal::Uniform => false,
+            SVal::Variant => true,
+        }
+    }
+
+    fn as_const(&self) -> Option<i64> {
+        match self {
+            SVal::Aff(a) => a.as_const(),
+            _ => None,
+        }
+    }
+
+    /// Lattice join of two non-affine values.
+    fn join(a: &SVal, b: &SVal) -> SVal {
+        if a.is_variant() || b.is_variant() {
+            SVal::Variant
+        } else {
+            SVal::Uniform
+        }
+    }
+}
+
+/// One recorded array access; `index: None` when the subscript did not
+/// reduce to an affine form (interval checks are skipped for it).
+struct SiteRec {
+    array: String,
+    space: AddrSpace,
+    index: Option<Affine>,
+    in_loop: bool,
+    is_store: bool,
+    pos: Pos,
+}
+
+struct Checker<'a> {
+    kernel: String,
+    env: BTreeMap<String, SVal>,
+    arrays: BTreeMap<String, AddrSpace>,
+    launch: Launch,
+    /// Resolved contexts for counted loops; `Var::Loop(i)` indexes this.
+    /// `None`: the loop exists but its range is unknown.
+    loops: Vec<Option<LoopCtx>>,
+    loop_depth: usize,
+    /// Positions of the lane-variant branches/loops currently open.
+    div_stack: Vec<Pos>,
+    /// A lane-variant guarded `return` has been passed: every later
+    /// barrier is divergent regardless of local control flow.
+    divergent_exit: bool,
+    sites: Vec<SiteRec>,
+    diags: &'a mut Diagnostics,
+}
+
+fn check_kernel(
+    prog: &Program,
+    k: &Kernel,
+    opts: &SemaOptions,
+    dev: &DeviceSpec,
+    diags: &mut Diagnostics,
+    certificates: &mut Vec<StagingCertificate>,
+) {
+    let mut c = Checker {
+        kernel: k.name.clone(),
+        env: BTreeMap::new(),
+        arrays: BTreeMap::new(),
+        launch: opts.launch,
+        loops: Vec::new(),
+        loop_depth: 0,
+        div_stack: Vec::new(),
+        divergent_exit: false,
+        sites: Vec::new(),
+        diags,
+    };
+    let mut array_pos: BTreeMap<String, Pos> = BTreeMap::new();
+    for p in &k.params {
+        if p.is_ptr {
+            c.arrays.insert(p.name.clone(), p.space);
+            array_pos.insert(p.name.clone(), p.pos);
+        } else {
+            // Scalar kernel arguments are uniform across the NDRange by
+            // definition — bound ones additionally carry their value.
+            let v = match opts.bindings.get(&p.name) {
+                Some(v) if is_int_type(&p.ty) => SVal::Aff(Affine::constant(v)),
+                _ => SVal::Uniform,
+            };
+            c.env.insert(p.name.clone(), v);
+        }
+    }
+    c.walk(&k.body);
+
+    // Per-site interval / coalescing / bank rules.
+    let sites = std::mem::take(&mut c.sites);
+    for s in &sites {
+        c.check_site(s, dev);
+    }
+
+    // Staging certificates for every accessed __global array.
+    if opts.certificates {
+        let accessed: BTreeSet<&String> = sites
+            .iter()
+            .filter(|s| s.space == AddrSpace::Global)
+            .map(|s| &s.array)
+            .collect();
+        for name in accessed {
+            let aopts = AnalyzeOptions {
+                target: name.clone(),
+                kernel: Some(k.name.clone()),
+                launch: opts.launch,
+                bindings: opts.bindings.clone(),
+            };
+            let cert = certify(prog, &aopts, dev);
+            let pos = array_pos.get(name).copied().unwrap_or(k.pos);
+            for r in &cert.reasons {
+                if let CertReason::OverBudget { need, budget } = r {
+                    c.diags.report(
+                        Rule::RegionBudget,
+                        pos,
+                        &k.name,
+                        Some(name),
+                        format!(
+                            "staging `{name}` needs a {need} B region; the {} \
+                             local-memory budget is {budget} B",
+                            dev.key
+                        ),
+                    );
+                }
+            }
+            c.diags.report(
+                Rule::Stageability,
+                pos,
+                &k.name,
+                Some(name),
+                format!("staging certificate for `{name}`: {}", cert.summary()),
+            );
+            certificates.push(cert);
+        }
+    }
+}
+
+impl<'a> Checker<'a> {
+    fn walk(&mut self, body: &[Stmt]) {
+        for s in body {
+            self.walk_stmt(s);
+        }
+    }
+
+    fn walk_stmt(&mut self, s: &Stmt) {
+        match s {
+            Stmt::Decl { name, init, .. } => {
+                let v = match init {
+                    Some(e) => self.eval(e),
+                    None => SVal::Uniform,
+                };
+                self.env.insert(name.clone(), v);
+            }
+            Stmt::Assign { target, op, value, .. } => {
+                let rhs = self.eval(value);
+                match target {
+                    Expr::Index { base, index, pos } => {
+                        if let Expr::Var(array, _) = base.as_ref() {
+                            let array = array.clone();
+                            self.record_access(&array, index, true, *pos);
+                        } else {
+                            // Nested subscript targets are outside the
+                            // subset; still walk for contained accesses.
+                            self.eval(base);
+                            self.eval(index);
+                        }
+                    }
+                    Expr::Var(name, _) => {
+                        let old = self.env.get(name).cloned().unwrap_or(SVal::Uniform);
+                        let new = match op {
+                            AssignOp::Set => rhs,
+                            AssignOp::Add => self.combine(BinOp::Add, old, rhs),
+                            AssignOp::Sub => self.combine(BinOp::Sub, old, rhs),
+                            AssignOp::Mul => self.combine(BinOp::Mul, old, rhs),
+                            AssignOp::Div => self.combine(BinOp::Div, old, rhs),
+                        };
+                        self.env.insert(name.clone(), new);
+                    }
+                    other => {
+                        self.eval(other);
+                    }
+                }
+            }
+            Stmt::For { var, init, cond_op, bound, step, body, pos, .. } => {
+                self.walk_for(var, init, *cond_op, bound, step, body, *pos);
+            }
+            Stmt::If { cond, then_body, else_body, pos } => {
+                let divergent = self.eval(cond).is_variant();
+                let mut assigned = BTreeSet::new();
+                assigned_scalars(then_body, &mut assigned);
+                assigned_scalars(else_body, &mut assigned);
+                let saved = self.env.clone();
+                if divergent {
+                    self.div_stack.push(*pos);
+                }
+                self.walk(then_body);
+                self.env = saved.clone();
+                self.walk(else_body);
+                self.env = saved;
+                if divergent {
+                    self.div_stack.pop();
+                    if contains_return(then_body) || contains_return(else_body) {
+                        self.divergent_exit = true;
+                    }
+                }
+                // Values written under the branch: lane-variant when the
+                // branch is, otherwise unknown-but-uniform (all lanes
+                // took the same path).
+                let merged = if divergent { SVal::Variant } else { SVal::Uniform };
+                for n in &assigned {
+                    if self.env.contains_key(n) {
+                        self.env.insert(n.clone(), merged.clone());
+                    }
+                }
+            }
+            Stmt::Call { name, args, pos } => {
+                if is_barrier(name) {
+                    self.check_barrier(*pos);
+                }
+                for a in args {
+                    self.eval(a);
+                }
+            }
+            Stmt::Return { .. } => {}
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn walk_for(
+        &mut self,
+        var: &str,
+        init: &Expr,
+        cond_op: BinOp,
+        bound: &Expr,
+        step: &ForStep,
+        body: &[Stmt],
+        pos: Pos,
+    ) {
+        let vi = self.eval(init);
+        let vb = self.eval(bound);
+        let (step_variant, step_const) = match step {
+            ForStep::Inc => (false, Some(1)),
+            ForStep::Dec => (false, Some(-1)),
+            ForStep::Add(e) => {
+                let v = self.eval(e);
+                (v.is_variant(), v.as_const())
+            }
+            ForStep::Sub(e) => {
+                let v = self.eval(e);
+                (v.is_variant(), v.as_const().and_then(i64::checked_neg))
+            }
+        };
+        // A loop whose trip count depends on a lane-variant form makes
+        // its whole body divergent.
+        let divergent = vi.is_variant() || vb.is_variant() || step_variant;
+        let ctx = match (vi.as_const(), vb.as_const(), step_const) {
+            (Some(start), Some(b), Some(s)) if s != 0 => trip_count(start, b, s, cond_op)
+                .filter(|&t| t > 0 && t <= MAX_TRIP)
+                .map(|trip| LoopCtx { start, step: s, trip, depth: self.loop_depth }),
+            _ => None,
+        };
+        let mut assigned = BTreeSet::new();
+        assigned_scalars(body, &mut assigned);
+        let saved = self.env.clone();
+        // Accumulators are conservatively lane-variant inside and after
+        // the loop (they usually fold lane-variant loads).
+        self.mark(&assigned, SVal::Variant);
+        let id = self.loops.len() as u32;
+        let known = ctx.is_some();
+        self.loops.push(ctx);
+        let var_val = if known {
+            SVal::Aff(Affine::var(Var::Loop(id)))
+        } else if divergent {
+            SVal::Variant
+        } else {
+            SVal::Uniform
+        };
+        self.env.insert(var.to_string(), var_val);
+        if divergent {
+            self.div_stack.push(pos);
+        }
+        self.loop_depth += 1;
+        self.walk(body);
+        self.loop_depth -= 1;
+        if divergent {
+            self.div_stack.pop();
+        }
+        self.env = saved;
+        self.mark(&assigned, SVal::Variant);
+    }
+
+    fn mark(&mut self, names: &BTreeSet<String>, v: SVal) {
+        for n in names {
+            if self.env.contains_key(n) {
+                self.env.insert(n.clone(), v.clone());
+            }
+        }
+    }
+
+    fn check_barrier(&mut self, pos: Pos) {
+        if let Some(&branch) = self.div_stack.last() {
+            self.diags.report(
+                Rule::BarrierDivergence,
+                pos,
+                &self.kernel.clone(),
+                None,
+                format!(
+                    "barrier() under work-item-divergent control flow (lane-variant \
+                     branch or loop at {branch}): work-items of one group may not \
+                     all reach it"
+                ),
+            );
+        } else if self.divergent_exit {
+            self.diags.report(
+                Rule::BarrierDivergence,
+                pos,
+                &self.kernel.clone(),
+                None,
+                "barrier() after a work-item-divergent early return: exited \
+                 work-items never reach it"
+                    .to_string(),
+            );
+        }
+    }
+
+    fn eval(&mut self, e: &Expr) -> SVal {
+        match e {
+            Expr::Int(v, _) => SVal::Aff(Affine::constant(*v)),
+            Expr::Float(..) => SVal::Uniform,
+            Expr::Var(name, _) => self.env.get(name).cloned().unwrap_or(SVal::Uniform),
+            Expr::Call { name, args, pos } => self.eval_call(name, args, *pos),
+            Expr::Index { base, index, pos } => {
+                if let Expr::Var(array, _) = base.as_ref() {
+                    let array = array.clone();
+                    self.record_access(&array, index, false, *pos)
+                } else {
+                    self.eval(base);
+                    self.eval(index);
+                    SVal::Variant
+                }
+            }
+            Expr::Unary { op, expr, .. } => {
+                let v = self.eval(expr);
+                if *op == '-' {
+                    if let SVal::Aff(a) = &v {
+                        if let Ok(n) = a.neg() {
+                            return SVal::Aff(n);
+                        }
+                    }
+                }
+                if v.is_variant() {
+                    SVal::Variant
+                } else {
+                    SVal::Uniform
+                }
+            }
+            Expr::Bin { op, lhs, rhs, .. } => {
+                let l = self.eval(lhs);
+                let r = self.eval(rhs);
+                self.combine(*op, l, r)
+            }
+        }
+    }
+
+    /// Binary combination on the lattice: affine algebra where possible,
+    /// variance join everywhere else (including comparisons — a compare
+    /// of a lane-variant value is a lane-variant condition).
+    fn combine(&mut self, op: BinOp, l: SVal, r: SVal) -> SVal {
+        if op.is_arith() {
+            if let (SVal::Aff(a), SVal::Aff(b)) = (&l, &r) {
+                let out = match op {
+                    BinOp::Add => a.add(b).ok(),
+                    BinOp::Sub => a.sub(b).ok(),
+                    BinOp::Mul => match (b.as_const(), a.as_const()) {
+                        (Some(k), _) => a.scale(k).ok(),
+                        (None, Some(k)) => b.scale(k).ok(),
+                        _ => None,
+                    },
+                    BinOp::Div => match (a.as_const(), b.as_const()) {
+                        (Some(x), Some(k)) if k != 0 => x.checked_div(k).map(Affine::constant),
+                        (None, Some(k)) if k != 0 => a.div_exact(k),
+                        _ => None,
+                    },
+                    BinOp::Rem => match (a.as_const(), b.as_const()) {
+                        (Some(x), Some(k)) if k != 0 => x.checked_rem(k).map(Affine::constant),
+                        _ => None,
+                    },
+                    _ => None,
+                };
+                if let Some(a) = out {
+                    return SVal::Aff(a);
+                }
+            }
+        }
+        SVal::join(&l, &r)
+    }
+
+    fn eval_call(&mut self, name: &str, args: &[Expr], pos: Pos) -> SVal {
+        if is_barrier(name) {
+            self.check_barrier(pos);
+            for a in args {
+                self.eval(a);
+            }
+            return SVal::Uniform;
+        }
+        let dim = || -> Option<u8> {
+            if args.len() != 1 {
+                return None;
+            }
+            // Peeking the literal avoids recording accesses twice; dims
+            // are always literal 0/1 in the supported subset.
+            match &args[0] {
+                Expr::Int(0, _) => Some(0),
+                Expr::Int(1, _) => Some(1),
+                _ => None,
+            }
+        };
+        match name {
+            "get_global_id" | "get_local_id" | "get_group_id" => match dim() {
+                Some(d) => {
+                    let v = match name {
+                        "get_global_id" => Var::Gid(d),
+                        "get_local_id" => Var::Lid(d),
+                        _ => Var::Group(d),
+                    };
+                    SVal::Aff(Affine::var(v))
+                }
+                // Unsupported dimension: ids are lane-variant, group ids
+                // are not.
+                None => {
+                    for a in args {
+                        self.eval(a);
+                    }
+                    if name == "get_group_id" {
+                        SVal::Uniform
+                    } else {
+                        SVal::Variant
+                    }
+                }
+            },
+            "get_local_size" | "get_global_size" | "get_num_groups" => match dim() {
+                Some(d) => {
+                    let l = self.launch;
+                    let v = match (name, d) {
+                        ("get_local_size", 0) => l.wg.w,
+                        ("get_local_size", _) => l.wg.h,
+                        ("get_global_size", 0) => l.grid.w,
+                        ("get_global_size", _) => l.grid.h,
+                        (_, 0) => l.groups_x(),
+                        (_, _) => l.groups_y(),
+                    };
+                    SVal::Aff(Affine::constant(v as i64))
+                }
+                None => {
+                    for a in args {
+                        self.eval(a);
+                    }
+                    SVal::Uniform
+                }
+            },
+            _ => {
+                // Math builtins: walk the arguments (they may contain
+                // accesses and barriers), variance joins over them.
+                let mut v = SVal::Uniform;
+                for a in args {
+                    let av = self.eval(a);
+                    v = SVal::join(&v, &av);
+                }
+                v
+            }
+        }
+    }
+
+    /// Record an array access; the value of a load is lane-variant iff
+    /// its index is (same index ⇒ same loaded value on every lane).
+    fn record_access(&mut self, array: &str, index: &Expr, is_store: bool, pos: Pos) -> SVal {
+        let space = match self.arrays.get(array) {
+            Some(s) => *s,
+            None => {
+                // Subscripting a scalar/unknown name: malformed, but the
+                // extractor owns that error path; keep walking.
+                self.eval(index);
+                return SVal::Variant;
+            }
+        };
+        let iv = self.eval(index);
+        let lane = iv.is_variant();
+        let aff = match iv {
+            SVal::Aff(a) => Some(a),
+            _ => None,
+        };
+        self.sites.push(SiteRec {
+            array: array.to_string(),
+            space,
+            index: aff,
+            in_loop: self.loop_depth > 0,
+            is_store,
+            pos,
+        });
+        if lane {
+            SVal::Variant
+        } else {
+            SVal::Uniform
+        }
+    }
+
+    // -----------------------------------------------------------------
+    // Post-walk per-site rules.
+
+    fn check_site(&mut self, s: &SiteRec, dev: &DeviceSpec) {
+        let kernel = self.kernel.clone();
+        let aff = match &s.index {
+            Some(a) => a,
+            None => return, // non-affine: the extractor's error path owns it
+        };
+        match s.space {
+            AddrSpace::Local => {
+                // Direct 32-bank model on the flat local index.
+                let cx = aff.wi_coeff(0);
+                if cx != 0 && cx % BANKS == 0 {
+                    self.diags.report(
+                        Rule::BankConflict,
+                        s.pos,
+                        &kernel,
+                        Some(&s.array),
+                        format!(
+                            "`{}`: x-lane stride {cx} elements is a multiple of the \
+                             {BANKS} shared-memory banks — all lanes hit one bank",
+                            s.array
+                        ),
+                    );
+                }
+                return;
+            }
+            AddrSpace::Constant => return, // constant cache: no DRAM rules
+            AddrSpace::Global | AddrSpace::Private => {}
+        }
+        let rc = match split_row_col(aff) {
+            Ok(rc) => rc,
+            Err(_) => return, // mixed stride: extractor's error path owns it
+        };
+
+        // LM002 — column offsets (constants + counted non-home loops)
+        // must stay under one row stride; a full-stride offset wraps the
+        // flattened index into a different row.
+        if rc.stride > 0 {
+            if let Some((lo, hi)) = self.col_offset_interval(&rc.col) {
+                let stride = rc.stride as i128;
+                if hi >= stride || lo <= -stride {
+                    self.diags.report(
+                        Rule::OutOfBounds,
+                        s.pos,
+                        &kernel,
+                        Some(&s.array),
+                        format!(
+                            "`{}`: column offsets span {lo}..{hi} but the row stride \
+                             is {} — the access wraps into a different row (no host \
+                             apron can cover a full-stride offset)",
+                            s.array, rc.stride
+                        ),
+                    );
+                }
+            }
+        }
+
+        // LM004 — predicted shared-memory bank conflict of the staged
+        // tile: column walk with an x-lane stride that is a multiple of
+        // the 32 banks. Transposed accesses (row depends on x) are
+        // excluded: the extractor's +1-column pad already covers them.
+        let cx = rc.col.wi_coeff(0);
+        let bank_conflict = rc.row.wi_coeff(0) == 0 && cx != 0 && cx % BANKS == 0;
+        if bank_conflict {
+            self.diags.report(
+                Rule::BankConflict,
+                s.pos,
+                &kernel,
+                Some(&s.array),
+                format!(
+                    "`{}`: column walk with x-lane stride {cx} elements — a \
+                     multiple of the {BANKS} banks, so a staged tile would \
+                     serialize every warp access (the +1-column pad only \
+                     applies to transposed accesses)",
+                    s.array
+                ),
+            );
+        }
+
+        // LM005 — uncoalesced x-lane access. Suppressed when LM004
+        // already diagnosed the same access (the bank conflict is the
+        // more specific finding); demoted to Note outside loops.
+        if !bank_conflict {
+            let seg = (dev.transaction_bytes / 4).max(1);
+            let tx = tx_per_access(&rc, &self.launch, dev.warp_size, seg);
+            if tx > 1.0 {
+                let (sev, tail) = if s.in_loop {
+                    (Severity::Warn, "inside a loop")
+                } else {
+                    (Severity::Note, "a one-off access; staging is the usual fix")
+                };
+                self.diags.report_as(
+                    Rule::Uncoalesced,
+                    sev,
+                    s.pos,
+                    &kernel,
+                    Some(&s.array),
+                    format!(
+                        "`{}`: {} at ~{tx:.0} DRAM transactions per warp ({tail})",
+                        s.array,
+                        if s.is_store { "uncoalesced store" } else { "uncoalesced load" }
+                    ),
+                );
+            }
+        }
+    }
+
+    /// Interval of a column coordinate's non-home terms: the constant
+    /// plus every counted-loop term over its range. Work-item and group
+    /// terms are the home position (excluded); an unknown loop range
+    /// makes the interval unknown (`None`).
+    fn col_offset_interval(&self, col: &Affine) -> Option<(i128, i128)> {
+        let mut lo = col.c as i128;
+        let mut hi = col.c as i128;
+        for (v, c) in &col.terms {
+            match v {
+                Var::Gid(_) | Var::Lid(_) | Var::Group(_) => {}
+                Var::Loop(i) => {
+                    let ctx = self.loops.get(*i as usize)?.as_ref()?;
+                    let (mn, mx) = ctx.value_range();
+                    let d0 = (*c as i128) * mn;
+                    let d1 = (*c as i128) * mx;
+                    lo += d0.min(d1);
+                    hi += d0.max(d1);
+                }
+            }
+        }
+        Some((lo, hi))
+    }
+}
+
+fn is_barrier(name: &str) -> bool {
+    matches!(name, "barrier" | "work_group_barrier")
+}
+
+fn contains_return(body: &[Stmt]) -> bool {
+    body.iter().any(|s| match s {
+        Stmt::Return { .. } => true,
+        Stmt::If { then_body, else_body, .. } => {
+            contains_return(then_body) || contains_return(else_body)
+        }
+        Stmt::For { body, .. } => contains_return(body),
+        _ => false,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::frontend::parse_program;
+    use crate::kernelmodel::launch::{GridGeom, WgGeom};
+
+    fn lint(src: &str) -> LintReport {
+        let prog = parse_program(src).expect("test kernel parses");
+        let opts = SemaOptions {
+            kernel: None,
+            launch: Launch::new(WgGeom { w: 16, h: 16 }, GridGeom { w: 512, h: 512 }),
+            bindings: Bindings::new().set("width", 512),
+            certificates: false,
+        };
+        lint_program(&prog, &opts, &DeviceSpec::m2090()).expect("lint runs")
+    }
+
+    fn rules(r: &LintReport) -> Vec<(&'static str, Severity)> {
+        r.diags.iter().map(|d| (d.rule.id(), d.severity)).collect()
+    }
+
+    #[test]
+    fn uniform_barrier_is_clean() {
+        let r = lint(
+            "__kernel void k(__global float* a, int width) {
+                 int x = get_global_id(0);
+                 if (width > 64) { barrier(1); }
+                 a[x] = 0.0f;
+             }",
+        );
+        assert!(r.diags.is_empty(), "{:?}", rules(&r));
+    }
+
+    #[test]
+    fn lane_variant_branch_barrier_denies() {
+        let r = lint(
+            "__kernel void k(__global float* a) {
+                 int x = get_global_id(0);
+                 if (x < 4) { barrier(1); }
+                 a[x] = 0.0f;
+             }",
+        );
+        assert_eq!(rules(&r), [("LM001", Severity::Deny)]);
+    }
+
+    #[test]
+    fn lane_variant_loop_bound_barrier_denies() {
+        let r = lint(
+            "__kernel void k(__global float* a) {
+                 int x = get_global_id(0);
+                 for (int i = 0; i < x; i++) { barrier(1); }
+                 a[x] = 0.0f;
+             }",
+        );
+        assert_eq!(rules(&r), [("LM001", Severity::Deny)]);
+    }
+
+    #[test]
+    fn divergent_early_return_then_barrier_denies() {
+        let r = lint(
+            "__kernel void k(__global float* a, int width) {
+                 int x = get_global_id(0);
+                 if (x >= width) { return; }
+                 barrier(1);
+                 a[x] = 0.0f;
+             }",
+        );
+        assert_eq!(rules(&r), [("LM001", Severity::Deny)]);
+    }
+
+    #[test]
+    fn assigned_under_divergent_branch_is_lane_variant() {
+        let r = lint(
+            "__kernel void k(__global float* a, int width) {
+                 int x = get_global_id(0);
+                 int t = 0;
+                 if (x < 4) { t = 1; }
+                 if (t > 0) { barrier(1); }
+                 a[x] = 0.0f;
+             }",
+        );
+        assert_eq!(rules(&r), [("LM001", Severity::Deny)]);
+    }
+
+    #[test]
+    fn full_stride_column_tap_denies() {
+        let r = lint(
+            "__kernel void k(__global const float* in, __global float* out, int width) {
+                 int gx = get_global_id(0);
+                 int gy = get_global_id(1);
+                 float s = 0.0f;
+                 for (int t = 0; t < 600; t++) { s += in[gy * width + gx + t]; }
+                 out[gy * width + gx] = s;
+             }",
+        );
+        assert_eq!(rules(&r), [("LM002", Severity::Deny)]);
+    }
+
+    #[test]
+    fn bank_conflicted_column_walk_warns_once() {
+        let r = lint(
+            "__kernel void k(__global const float* in, __global float* out, int width) {
+                 int gx = get_global_id(0);
+                 int gy = get_global_id(1);
+                 out[gy * width + gx * 32] = in[gy * width + gx];
+             }",
+        );
+        // LM004 fires; LM005 is suppressed on the same access.
+        assert_eq!(rules(&r), [("LM004", Severity::Warn)]);
+    }
+
+    #[test]
+    fn uncoalesced_in_loop_warns_one_off_notes() {
+        let r = lint(
+            "__kernel void k(__global const float* in, __global float* out, int width) {
+                 int x = get_global_id(0);
+                 int y = get_global_id(1);
+                 float s = 0.0f;
+                 for (int t = 0; t < 16; t++) { s += in[x * width + y + t]; }
+                 out[x * width + y] = s;
+             }",
+        );
+        assert_eq!(
+            rules(&r),
+            [("LM005", Severity::Warn), ("LM005", Severity::Note)]
+        );
+    }
+
+    #[test]
+    fn unbound_scalars_degrade_gracefully() {
+        // No bindings for `n`: interval checks are skipped, divergence
+        // still runs, nothing denies.
+        let r = lint(
+            "__kernel void k(__global const float* in, __global float* out, int n, int width) {
+                 int x = get_global_id(0);
+                 float s = 0.0f;
+                 for (int t = 0; t < n; t++) { s += in[t * width + x]; }
+                 out[x] = s;
+             }",
+        );
+        assert!(r.diags.is_empty(), "{:?}", rules(&r));
+    }
+
+    #[test]
+    fn unknown_kernel_name_errors() {
+        let prog = parse_program("__kernel void k(__global float* a) { a[0] = 0.0f; }").unwrap();
+        let opts = SemaOptions {
+            kernel: Some("missing".into()),
+            launch: Launch::new(WgGeom { w: 16, h: 16 }, GridGeom { w: 512, h: 512 }),
+            bindings: Bindings::new(),
+            certificates: false,
+        };
+        assert!(lint_program(&prog, &opts, &DeviceSpec::m2090()).is_err());
+    }
+
+    #[test]
+    fn certificate_mixed_read_write_refuses() {
+        let prog = parse_program(
+            "__kernel void k(__global float* a, int width) {
+                 int x = get_global_id(0);
+                 int y = get_global_id(1);
+                 a[y * width + x] = a[y * width + x] * 2.0f;
+             }",
+        )
+        .unwrap();
+        let opts = AnalyzeOptions {
+            target: "a".into(),
+            kernel: None,
+            launch: Launch::new(WgGeom { w: 16, h: 16 }, GridGeom { w: 512, h: 512 }),
+            bindings: Bindings::new().set("width", 512),
+        };
+        let cert = certify(&prog, &opts, &DeviceSpec::m2090());
+        assert!(!cert.stageable);
+        assert!(matches!(cert.reasons[0], CertReason::MixedReadWrite { loads: 1, stores: 1 }));
+        assert!(cert.summary().starts_with("stageable: no"));
+    }
+}

@@ -164,6 +164,14 @@ impl DeviceSpec {
     pub fn warps_for_threads(&self, threads: u32) -> u32 {
         threads.div_ceil(self.warp_size)
     }
+
+    /// Local-memory budget one workgroup's staged region must fit: the
+    /// per-SM shared memory, capped at the 48 KB per-block limit of
+    /// every CC 2.x/3.x part. The staging-safety certificate
+    /// (`frontend::sema::certify`) checks regions against this.
+    pub fn lmem_budget_per_wg(&self) -> u32 {
+        self.shared_mem_per_sm.min(48 * 1024)
+    }
 }
 
 #[cfg(test)]
@@ -224,6 +232,19 @@ mod tests {
         for d in [DeviceSpec::gtx680(), DeviceSpec::k20()] {
             let delta = d.tx_departure_cycles();
             assert!((1.0..25.0).contains(&delta), "{}: delta {delta}", d.key);
+        }
+    }
+
+    #[test]
+    fn lmem_budget_is_48k_on_every_registered_device() {
+        for d in [
+            DeviceSpec::m2090(),
+            DeviceSpec::gtx480(),
+            DeviceSpec::gtx680(),
+            DeviceSpec::k20(),
+        ] {
+            assert_eq!(d.lmem_budget_per_wg(), 48 * 1024, "{}", d.key);
+            assert!(d.lmem_budget_per_wg() <= d.shared_mem_per_sm);
         }
     }
 

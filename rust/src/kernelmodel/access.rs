@@ -25,8 +25,9 @@
 //! work unit touches the (wu_x, wu_y) cell): zero reuse, fully scattered,
 //! but a *small* stageable region — the matrix-transpose shape.
 
-use super::launch::Launch;
 use std::fmt;
+
+use super::launch::Launch;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum HomePattern {

@@ -7,6 +7,7 @@
 //!   crossdev   train-on-A/test-on-B accuracy matrix over the portfolio
 //!   eval       evaluate a saved model on a dataset / the real benchmarks
 //!   analyze    extract descriptor + 18 features from an OpenCL C kernel
+//!   lint       semantic checks + staging certificates (exit 2 on deny)
 //!   predict    one-off decision for a feature vector
 //!   serve      start the batched PJRT prediction service (demo load)
 //!   reproduce  regenerate paper figures/tables: fig1, fig6, table1-3
@@ -23,15 +24,15 @@ use anyhow::{bail, Context, Result};
 use lmtuner::coordinator::crossdev;
 use lmtuner::coordinator::service::{Service, ServiceConfig};
 use lmtuner::coordinator::train::{self, TrainConfig};
-use lmtuner::frontend::{self, AnalyzeOptions, Bindings};
+use lmtuner::frontend::{self, AnalyzeOptions, Bindings, SemaOptions, Severity};
 use lmtuner::gpu::registry;
 use lmtuner::gpu::spec::DeviceSpec;
 use lmtuner::kernelmodel::features::{self, FEATURE_NAMES, NUM_FEATURES};
 use lmtuner::kernelmodel::launch::{GridGeom, Launch, WgGeom};
-use lmtuner::runtime::executor::BatchExecutor;
-use lmtuner::runtime::fastexec::FlatForestExecutor;
 use lmtuner::ml::{io as model_io, metrics, select};
 use lmtuner::report::{figures, tables};
+use lmtuner::runtime::executor::BatchExecutor;
+use lmtuner::runtime::fastexec::FlatForestExecutor;
 use lmtuner::runtime::pjrt::Engine;
 use lmtuner::sim::exec::{MeasureConfig, Schema, SpeedupRecord};
 use lmtuner::synth::binfmt::ShardFormat;
@@ -48,8 +49,25 @@ fn main() {
     }
 }
 
+/// Exit codes beyond the generic failure (1), so scripts and CI can tell
+/// a broken invocation from a kernel that failed a check (DESIGN.md §2h):
+/// `lint` found deny-set diagnostics.
+const EXIT_LINT_FINDINGS: i32 = 2;
+/// `analyze` refused to synthesize features past Deny diagnostics.
+const EXIT_ANALYZE_REFUSED: i32 = 3;
+
+/// Exit with an explicit code, flushing both streams first: they are
+/// block-buffered when piped (as in CI), and `std::process::exit` skips
+/// the normal end-of-main flush.
+fn exit_with(code: i32) -> ! {
+    use std::io::Write;
+    let _ = std::io::stdout().flush();
+    let _ = std::io::stderr().flush();
+    std::process::exit(code);
+}
+
 fn usage() -> &'static str {
-    "lmtuner <generate|train|tune|crossdev|eval|shards|analyze|predict|serve|reproduce|info> [options]\n\
+    "lmtuner <generate|train|tune|crossdev|eval|shards|analyze|lint|predict|serve|reproduce|info> [options]\n\
      \n\
      generate  --out data/synth.csv [--device m2090] [--scale 0.2]\n\
                [--configs 24] [--seed N] [--schema v1|v2]\n\
@@ -105,7 +123,17 @@ fn usage() -> &'static str {
                (parse OpenCL C, extract the descriptor + 18 features for\n\
                 the given launch; --set binds scalar kernel arguments;\n\
                 --model additionally prints the use-local-memory verdict,\n\
-                plus a suggested workgroup size for joint v2 models)\n\
+                plus a suggested workgroup size for joint v2 models;\n\
+                refuses with exit 3 on deny-level lint diagnostics)\n\
+     lint      <kernel.cl> [--json] [--deny warn] [--kernel NAME]\n\
+               [--device m2090] [--wg 16x16] [--grid 512x512]\n\
+               [--set w=512,...]\n\
+               (semantic analysis over the kernel AST: barrier-divergence\n\
+                and affine-bounds checks (deny), bank-conflict and\n\
+                uncoalesced-access lints (warn), plus a staging-safety\n\
+                certificate per __global array; exits 2 when the deny\n\
+                set is non-empty — --deny warn promotes warnings into it;\n\
+                --json emits the machine-readable report)\n\
      predict   --model models/rf.txt --features f1,...,f18 [--artifacts DIR]\n\
      serve     --model models/rf.txt [--device m2090]\n\
                [--backend auto|native|pjrt] [--artifacts artifacts]\n\
@@ -134,6 +162,7 @@ fn run() -> Result<()> {
         Some("eval") => cmd_eval(&mut args),
         Some("shards") => cmd_shards(&mut args),
         Some("analyze") => cmd_analyze(&mut args),
+        Some("lint") => cmd_lint(&mut args),
         Some("predict") => cmd_predict(&mut args),
         Some("serve") => cmd_serve(&mut args),
         Some("reproduce") => cmd_reproduce(&mut args),
@@ -159,7 +188,10 @@ fn warn_skipped(skipped: usize) {
 
 /// Apply `--forest-config` (a `lmtuner tune` winner) and the explicit
 /// forest flags to `cfg.forest`, explicit flags winning.
-fn apply_forest_args(args: &mut Args, forest: &mut lmtuner::ml::forest::ForestConfig) -> Result<()> {
+fn apply_forest_args(
+    args: &mut Args,
+    forest: &mut lmtuner::ml::forest::ForestConfig,
+) -> Result<()> {
     if let Some(path) = args.opt_str("forest-config") {
         let loaded = select::load_forest_config(Path::new(&path))?;
         forest.num_trees = loaded.num_trees;
@@ -866,36 +898,79 @@ fn parse_geom(s: &str, flag: &str) -> Result<(u32, u32)> {
     Ok((parse(w)?, parse(h)?))
 }
 
-fn cmd_analyze(args: &mut Args) -> Result<()> {
-    let dev = &device_arg(args)?;
-    let file = args
-        .positional()
-        .get(1)
-        .cloned()
-        .context("usage: lmtuner analyze <kernel.cl> --array NAME [options]")?;
-    let target = args
-        .opt_str("array")
-        .context("--array <name> is required (the array considered for staging)")?;
+/// One parsed kernel source plus the launch/bindings context `analyze`
+/// and `lint` share: a single positional → parse → bind path, so both
+/// subcommands exit through the same typed errors (missing file, bad
+/// `--wg`/`--grid` geometry, malformed `--set`, positioned parse
+/// errors).
+struct KernelSource {
+    file: String,
+    kernel: Option<String>,
+    launch: Launch,
+    bindings: Bindings,
+    prog: lmtuner::frontend::ast::Program,
+}
+
+fn load_kernel_source(args: &mut Args, usage: &str) -> Result<KernelSource> {
+    let file = args.positional().get(1).cloned().context(usage.to_string())?;
     let kernel = args.opt_str("kernel");
     let (wg_w, wg_h) = parse_geom(&args.str_or("wg", "16x16"), "--wg")?;
     let (grid_w, grid_h) = parse_geom(&args.str_or("grid", "512x512"), "--grid")?;
     let set = args.str_or("set", "");
-    let model = args.opt_str("model");
-    args.finish().map_err(anyhow::Error::msg)?;
-
     let bindings = Bindings::parse(&set).map_err(|e| anyhow::anyhow!("--set {e}"))?;
     let src = std::fs::read_to_string(&file).with_context(|| format!("reading {file}"))?;
     let launch = Launch::new(
         WgGeom { w: wg_w, h: wg_h },
         GridGeom { w: grid_w, h: grid_h },
     );
-    let opts = AnalyzeOptions { target: target.clone(), kernel, launch, bindings };
-    let d = frontend::analyze(&src, &opts, dev)?;
+    let prog = frontend::parse_program(&src)?;
+    Ok(KernelSource { file, kernel, launch, bindings, prog })
+}
 
-    println!("kernel: {} ({file})", d.name);
+fn cmd_analyze(args: &mut Args) -> Result<()> {
+    let dev = &device_arg(args)?;
+    let target = args
+        .opt_str("array")
+        .context("--array <name> is required (the array considered for staging)")?;
+    let model = args.opt_str("model");
+    let ks = load_kernel_source(args, "usage: lmtuner analyze <kernel.cl> --array NAME [options]")?;
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    // Deny gate: barrier divergence or out-of-bounds accesses invalidate
+    // everything synthesized downstream; refuse with a distinct exit
+    // code (warnings are surfaced but do not block).
+    let sopts = SemaOptions {
+        kernel: ks.kernel.clone(),
+        launch: ks.launch,
+        bindings: ks.bindings.clone(),
+        certificates: false,
+    };
+    let report = frontend::lint_program(&ks.prog, &sopts, dev)?;
+    for d in report.diags.iter().filter(|d| d.severity >= Severity::Warn) {
+        eprintln!("{}:{d}", ks.file);
+    }
+    if report.diags.deny_count() > 0 {
+        eprintln!(
+            "error: {}: {} deny-level diagnostic(s) — inspect with `lmtuner lint {}`",
+            ks.file,
+            report.diags.deny_count(),
+            ks.file
+        );
+        exit_with(EXIT_ANALYZE_REFUSED);
+    }
+
+    let opts = AnalyzeOptions {
+        target: target.clone(),
+        kernel: ks.kernel.clone(),
+        launch: ks.launch,
+        bindings: ks.bindings.clone(),
+    };
+    let d = frontend::extract::extract_descriptor(&ks.prog, &opts, dev)?;
+
+    println!("kernel: {} ({})", d.name, ks.file);
     println!(
         "target array: {target}; device: {} ({}); wg {}x{}; grid {}x{}",
-        dev.name, dev.key, wg_w, wg_h, grid_w, grid_h
+        dev.name, dev.key, ks.launch.wg.w, ks.launch.wg.h, ks.launch.grid.w, ks.launch.grid.h
     );
     println!("descriptor:");
     println!(
@@ -929,6 +1004,8 @@ fn cmd_analyze(args: &mut Args) -> Result<()> {
         dev.key,
         if d.lmem_feasible(dev) { "yes" } else { "no (region exceeds shared memory)" }
     );
+    let cert = frontend::certify(&ks.prog, &opts, dev);
+    println!("  staging certificate: {}", cert.summary());
     let feats = features::extract(&d);
     println!("features:");
     for (name, v) in FEATURE_NAMES.iter().zip(feats.iter()) {
@@ -957,6 +1034,47 @@ fn cmd_analyze(args: &mut Args) -> Result<()> {
                  {lw:.2}/{lh:.2}; next best {alts})"
             );
         }
+    }
+    Ok(())
+}
+
+fn cmd_lint(args: &mut Args) -> Result<()> {
+    let dev = &device_arg(args)?;
+    let json = args.flag("json");
+    let deny_warn = match args.opt_str("deny") {
+        None => false,
+        Some(s) if s == "warn" => true,
+        Some(s) => bail!("--deny {s}: only `warn` can be promoted to the deny set"),
+    };
+    let ks =
+        load_kernel_source(args, "usage: lmtuner lint <kernel.cl> [--json] [--deny warn]")?;
+    args.finish().map_err(anyhow::Error::msg)?;
+
+    let sopts = SemaOptions {
+        kernel: ks.kernel.clone(),
+        launch: ks.launch,
+        bindings: ks.bindings.clone(),
+        certificates: true,
+    };
+    let report = frontend::lint_program(&ks.prog, &sopts, dev)?;
+    if json {
+        println!("{}", report.to_json(&ks.file).dump_pretty());
+    } else {
+        for d in report.diags.iter() {
+            println!("{}:{d}", ks.file);
+        }
+        println!(
+            "{}: {} deny, {} warn, {} note",
+            ks.file,
+            report.diags.deny_count(),
+            report.diags.warn_count(),
+            report.diags.note_count()
+        );
+    }
+    let failing =
+        report.diags.deny_count() + if deny_warn { report.diags.warn_count() } else { 0 };
+    if failing > 0 {
+        exit_with(EXIT_LINT_FINDINGS);
     }
     Ok(())
 }

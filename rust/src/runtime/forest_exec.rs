@@ -150,6 +150,7 @@ mod tests {
     use crate::ml::export::{encode, ExportContract};
     use crate::ml::forest::{Forest, ForestConfig};
     use crate::util::prng::Rng;
+
     use std::path::PathBuf;
 
     fn artifacts_dir() -> PathBuf {

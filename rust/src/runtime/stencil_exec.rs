@@ -92,6 +92,7 @@ impl<'e> StencilExecutor<'e> {
 mod tests {
     use super::*;
     use crate::util::prng::Rng;
+
     use std::path::PathBuf;
 
     fn artifacts_dir() -> PathBuf {

@@ -197,6 +197,7 @@ where
 #[cfg(test)]
 mod tests {
     use super::*;
+
     use std::sync::atomic::AtomicU64;
 
     #[test]

@@ -11,9 +11,7 @@ use lmtuner::sim::exec::{MeasureConfig, Schema, TuneRecord};
 use lmtuner::synth::binfmt::{BinShardWriter, CorruptShard, ShardFormat};
 use lmtuner::synth::dataset::{self, BuildConfig};
 use lmtuner::synth::pipeline::{PipelineSpec, StagedSink};
-use lmtuner::synth::sink::{
-    self, FormatMismatch, MemorySink, RecordSink, ShardedSink,
-};
+use lmtuner::synth::sink::{self, FormatMismatch, MemorySink, RecordSink, ShardedSink};
 use lmtuner::synth::{generator, sweep::LaunchSweep};
 use lmtuner::util::prng::Rng;
 

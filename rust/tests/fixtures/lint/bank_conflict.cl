@@ -1,0 +1,17 @@
+/*
+ * Seeded defect: a column walk whose x-lane stride is 32 elements —
+ * a multiple of the 32 shared-memory banks. Staging this array as-is
+ * would serialize every warp access, and the extractor's +1-column pad
+ * does not apply (the row does not depend on the x lane).
+ *
+ * Expected: LM004 (warn) on the out[] store, nothing else (the
+ * uncoalesced-access lint LM005 is suppressed where LM004 fires).
+ *   lmtuner lint bank_conflict.cl --set width=512 --wg 16x16 --grid 512x512
+ */
+__kernel void bank_conflict(__global const float* in,
+                            __global float* out,
+                            int width) {
+    int gx = get_global_id(0);
+    int gy = get_global_id(1);
+    out[gy * width + gx * 32] = in[gy * width + gx];
+}

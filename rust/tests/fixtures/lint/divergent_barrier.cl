@@ -1,0 +1,19 @@
+/*
+ * Seeded defect: barrier() under work-item-divergent control flow.
+ * Only the first four x-lanes of each workgroup reach the barrier, so
+ * the rest of the group hangs (or worse) on real hardware.
+ *
+ * Expected: LM001 (deny) on the barrier line, nothing else.
+ *   lmtuner lint divergent_barrier.cl --set width=512 --wg 16x16 --grid 512x512
+ */
+__kernel void divergent_barrier(__global const float* in,
+                                __global float* out,
+                                int width) {
+    int gx = get_global_id(0);
+    int gy = get_global_id(1);
+    float v = in[gy * width + gx];
+    if (get_local_id(0) < 4) {
+        barrier(1);
+    }
+    out[gy * width + gx] = v;
+}

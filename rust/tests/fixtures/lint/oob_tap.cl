@@ -1,0 +1,20 @@
+/*
+ * Seeded defect: a 600-tap horizontal stencil walk on a 512-wide image.
+ * The tap offsets span 0..599 — past a full row stride — so the
+ * flattened index wraps into the next row; no host-side apron
+ * allocation can make this access mean what it says.
+ *
+ * Expected: LM002 (deny) on the in[] load, nothing else.
+ *   lmtuner lint oob_tap.cl --set width=512 --wg 16x16 --grid 512x512
+ */
+__kernel void oob_tap(__global const float* in,
+                      __global float* out,
+                      int width) {
+    int gx = get_global_id(0);
+    int gy = get_global_id(1);
+    float sum = 0.0f;
+    for (int k = 0; k < 600; k++) {
+        sum += in[gy * width + gx + k];
+    }
+    out[gy * width + gx] = sum;
+}

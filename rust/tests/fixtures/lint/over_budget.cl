@@ -1,0 +1,20 @@
+/*
+ * Seeded defect: the whole 4096-row column of `b` is reused by every
+ * work item, so the staged region is 4096 x 16 x 4 B = 256 KB — far
+ * over the 48 KB per-workgroup local-memory budget of every device in
+ * the registry.
+ *
+ * Expected: LM003 (warn, via the staging certificate) for `b`,
+ * nothing else in the deny/warn sets.
+ *   lmtuner lint over_budget.cl --set size=512 --wg 16x16 --grid 512x512
+ */
+__kernel void over_budget(__global const float* b,
+                          __global float* out,
+                          int size) {
+    int gx = get_global_id(0);
+    float sum = 0.0f;
+    for (int k = 0; k < 4096; k++) {
+        sum += b[k * size + gx];
+    }
+    out[gx] = sum;
+}

@@ -44,23 +44,26 @@ fn training_data(rng: &mut Rng, n: usize) -> (Vec<Vec<f64>>, Vec<f64>) {
 
 fn fit_single(rng: &mut Rng, trees: usize) -> Forest {
     let (x, y) = training_data(rng, 300);
-    Forest::fit(
-        &x,
-        &y,
-        &ForestConfig { num_trees: trees, threads: 2, seed: rng.below(1 << 20), ..Default::default() },
-    )
+    let cfg = ForestConfig {
+        num_trees: trees,
+        threads: 2,
+        seed: rng.below(1 << 20),
+        ..Default::default()
+    };
+    Forest::fit(&x, &y, &cfg)
 }
 
 fn fit_joint(rng: &mut Rng, trees: usize) -> Forest {
     let (x, y) = training_data(rng, 300);
     let lw: Vec<f64> = (0..300).map(|i| if x[0][i] > 0.0 { 5.0 } else { 2.0 }).collect();
     let lh: Vec<f64> = (0..300).map(|i| if x[2][i] > 0.0 { 3.0 } else { 1.0 }).collect();
-    Forest::fit_multi(
-        &x,
-        &y,
-        &[lw, lh],
-        &ForestConfig { num_trees: trees, threads: 2, seed: rng.below(1 << 20), ..Default::default() },
-    )
+    let cfg = ForestConfig {
+        num_trees: trees,
+        threads: 2,
+        seed: rng.below(1 << 20),
+        ..Default::default()
+    };
+    Forest::fit_multi(&x, &y, &[lw, lh], &cfg)
 }
 
 fn random_rows(n: usize, seed: u64) -> Vec<Vec<f64>> {

@@ -1,0 +1,333 @@
+//! Golden lint suite: the four frontend fixtures must lint clean (no
+//! deny- or warn-level findings) under their documented bindings, each
+//! seeded-defect variant under `fixtures/lint/` must fire exactly its
+//! rule ID, diagnostics must anchor to the fixture line that carries the
+//! defect, the `--json` document must round-trip through `util::json`,
+//! and the staging certificate must say `stageable: yes` for every
+//! Table 3 configuration the extractor reconciles (the sweep constants
+//! mirror `tests/frontend.rs`).
+
+use lmtuner::frontend::sema::CertReason;
+use lmtuner::frontend::{
+    self, parse_program, AnalyzeOptions, Bindings, LintReport, SemaOptions, Severity,
+};
+use lmtuner::gpu::spec::DeviceSpec;
+use lmtuner::kernelmodel::launch::Launch;
+use lmtuner::util::json::Json;
+use lmtuner::workloads;
+
+fn fixture(name: &str) -> String {
+    let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures")
+        .join(name);
+    std::fs::read_to_string(&p).unwrap_or_else(|e| panic!("{}: {e}", p.display()))
+}
+
+fn lint_src(src: &str, launch: Launch, bindings: Bindings) -> LintReport {
+    let prog = parse_program(src).expect("fixture parses");
+    let opts = SemaOptions { kernel: None, launch, bindings, certificates: true };
+    frontend::lint_program(&prog, &opts, &DeviceSpec::m2090()).expect("lint runs")
+}
+
+fn lint_fixture(name: &str, launch: Launch, bindings: Bindings) -> LintReport {
+    lint_src(&fixture(name), launch, bindings)
+}
+
+/// The golden fixtures with the bindings their doc headers document,
+/// plus the target array the descriptor suite reconciles.
+fn goldens() -> Vec<(&'static str, Launch, Bindings, &'static str)> {
+    let conv = Bindings::new().set("width", 512).set("rows_per_thread", 1).set("radius", 2);
+    vec![
+        (
+            "convolution_row.cl",
+            workloads::launch_over((16, 16), (512, 512)),
+            conv.clone(),
+            "input",
+        ),
+        (
+            "convolution_col.cl",
+            workloads::launch_over((16, 16), (512, 512)),
+            conv,
+            "input",
+        ),
+        (
+            "matrixmul.cl",
+            workloads::launch_over((16, 8), (512, 512)),
+            Bindings::new().set("size", 512).set("tile_k", 8),
+            "b",
+        ),
+        (
+            "transpose.cl",
+            workloads::launch_over((16, 16), (1024, 1024)),
+            Bindings::new().set("width", 1024).set("height", 1024),
+            "output",
+        ),
+    ]
+}
+
+/// Rule IDs of every deny- or warn-level finding, in report order.
+fn failing_ids(r: &LintReport) -> Vec<&'static str> {
+    r.diags
+        .iter()
+        .filter(|d| d.severity >= Severity::Warn)
+        .map(|d| d.rule.id())
+        .collect()
+}
+
+#[test]
+fn golden_fixtures_lint_clean_with_bindings() {
+    for (name, launch, bindings, target) in goldens() {
+        let r = lint_fixture(name, launch, bindings);
+        assert_eq!(r.diags.deny_count(), 0, "{name}: {:?}", failing_ids(&r));
+        assert_eq!(r.diags.warn_count(), 0, "{name}: {:?}", failing_ids(&r));
+        // The reconciled target array must carry a positive certificate.
+        let cert = r
+            .certificates
+            .iter()
+            .find(|c| c.array == target)
+            .unwrap_or_else(|| panic!("{name}: no certificate for `{target}`"));
+        assert!(cert.stageable, "{name}: {}", cert.summary());
+        assert!(cert.reasons.is_empty(), "{name}");
+    }
+}
+
+#[test]
+fn golden_fixtures_lint_clean_without_bindings() {
+    // No --set bindings: the affine interval checks degrade to skipped
+    // (values drop to Uniform/Variant) but nothing may deny or warn.
+    for (name, launch, _, _) in goldens() {
+        let r = lint_fixture(name, launch, Bindings::new());
+        assert_eq!(failing_ids(&r), Vec::<&str>::new(), "{name}");
+    }
+}
+
+#[test]
+fn seeded_defects_fire_exactly_their_rule() {
+    let cases = [
+        ("lint/divergent_barrier.cl", Bindings::new().set("width", 512), "LM001"),
+        ("lint/oob_tap.cl", Bindings::new().set("width", 512), "LM002"),
+        ("lint/over_budget.cl", Bindings::new().set("size", 512), "LM003"),
+        ("lint/bank_conflict.cl", Bindings::new().set("width", 512), "LM004"),
+    ];
+    let launch = workloads::launch_over((16, 16), (512, 512));
+    for (name, bindings, want) in cases {
+        let r = lint_fixture(name, launch, bindings);
+        let ids = failing_ids(&r);
+        assert!(!ids.is_empty(), "{name}: expected {want}, found nothing");
+        assert!(
+            ids.iter().all(|id| *id == want),
+            "{name}: expected only {want}, got {ids:?}"
+        );
+    }
+}
+
+#[test]
+fn diagnostics_anchor_to_the_defect_line() {
+    // The regression the spans satellite guards: a defect on fixture
+    // line N must be reported at line N (computed from the source, so
+    // editing a fixture comment cannot silently invalidate the test).
+    let launch = workloads::launch_over((16, 16), (512, 512));
+    let cases = [
+        ("lint/divergent_barrier.cl", "barrier(1)", "LM001"),
+        ("lint/oob_tap.cl", "in[gy * width + gx + k]", "LM002"),
+        ("lint/bank_conflict.cl", "out[gy * width + gx * 32]", "LM004"),
+    ];
+    for (name, needle, rule) in cases {
+        let src = fixture(name);
+        let want_line = src
+            .lines()
+            .position(|l| l.contains(needle))
+            .unwrap_or_else(|| panic!("{name}: no line contains `{needle}`"))
+            + 1;
+        let r = lint_src(&src, launch, Bindings::new().set("width", 512).set("size", 512));
+        let d = r
+            .diags
+            .iter()
+            .find(|d| d.rule.id() == rule)
+            .unwrap_or_else(|| panic!("{name}: {rule} did not fire"));
+        assert_eq!(d.pos.line as usize, want_line, "{name}: {d}");
+    }
+}
+
+#[test]
+fn lint_json_round_trips_through_util_json() {
+    let launch = workloads::launch_over((16, 16), (512, 512));
+    let r = lint_fixture("lint/oob_tap.cl", launch, Bindings::new().set("width", 512));
+    let doc = r.to_json("lint/oob_tap.cl");
+    let back = Json::parse(&doc.dump_pretty()).expect("lint JSON parses back");
+    assert_eq!(back, doc, "round trip must be lossless");
+
+    assert_eq!(back.get("file").and_then(|f| f.as_str()), Some("lint/oob_tap.cl"));
+    let summary = back.get("summary").expect("summary object");
+    assert_eq!(summary.get("deny").and_then(Json::as_usize), Some(r.diags.deny_count()));
+    assert_eq!(summary.get("warn").and_then(Json::as_usize), Some(r.diags.warn_count()));
+    assert_eq!(summary.get("note").and_then(Json::as_usize), Some(r.diags.note_count()));
+
+    let diags = back.get("diagnostics").and_then(Json::as_arr).expect("diagnostics array");
+    assert_eq!(diags.len(), r.diags.len());
+    assert!(
+        diags.iter().any(|d| d.get("rule").and_then(|x| x.as_str()) == Some("LM002")),
+        "{}",
+        doc.dump_pretty()
+    );
+    let certs = back.get("certificates").and_then(Json::as_arr).expect("certificates array");
+    assert_eq!(certs.len(), r.certificates.len());
+    assert!(certs
+        .iter()
+        .all(|c| c.get("stageable").is_some() && c.get("array").is_some()));
+}
+
+#[test]
+fn transpose_store_is_a_note_not_a_warning() {
+    // The transpose epilogue store is exactly what the staging transform
+    // exists to fix: LM005 must demote to Note on the one-off access.
+    let r = lint_fixture(
+        "transpose.cl",
+        workloads::launch_over((16, 16), (1024, 1024)),
+        Bindings::new().set("width", 1024).set("height", 1024),
+    );
+    let lm005: Vec<_> = r.diags.iter().filter(|d| d.rule.id() == "LM005").collect();
+    assert!(!lm005.is_empty(), "transpose store should surface as LM005");
+    assert!(
+        lm005.iter().all(|d| d.severity == Severity::Note),
+        "{:?}",
+        lm005.iter().map(|d| d.to_string()).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn bank_conflict_suppresses_uncoalesced_on_the_same_access() {
+    let r = lint_fixture(
+        "lint/bank_conflict.cl",
+        workloads::launch_over((16, 16), (512, 512)),
+        Bindings::new().set("width", 512),
+    );
+    let lm004 = r.diags.iter().filter(|d| d.rule.id() == "LM004").count();
+    let lm005 = r.diags.iter().filter(|d| d.rule.id() == "LM005").count();
+    assert_eq!(lm004, 1, "exactly one bank-conflict finding");
+    assert_eq!(lm005, 0, "LM005 must be suppressed where LM004 fired");
+}
+
+#[test]
+fn over_budget_lint_pairs_warning_with_certificate() {
+    let r = lint_fixture(
+        "lint/over_budget.cl",
+        workloads::launch_over((16, 16), (512, 512)),
+        Bindings::new().set("size", 512),
+    );
+    let lm003: Vec<_> = r.diags.iter().filter(|d| d.rule.id() == "LM003").collect();
+    assert_eq!(lm003.len(), 1, "{:?}", failing_ids(&r));
+    assert_eq!(lm003[0].array.as_deref(), Some("b"));
+
+    let cert = r.certificates.iter().find(|c| c.array == "b").expect("certificate for b");
+    assert!(!cert.stageable);
+    assert!(
+        cert.reasons.iter().any(|x| matches!(x, CertReason::OverBudget { .. })),
+        "{}",
+        cert.summary()
+    );
+    assert!(cert.region_bytes.unwrap() > cert.budget_bytes, "{}", cert.summary());
+    assert!(cert.summary().starts_with("stageable: no"), "{}", cert.summary());
+
+    // The output array stays stageable: the defect is b's alone.
+    let out = r.certificates.iter().find(|c| c.array == "out").expect("certificate for out");
+    assert!(out.stageable, "{}", out.summary());
+}
+
+// ---------------------------------------------------------------------
+// Staging certificates across the full Table 3 sweep (the acceptance
+// bar: every configuration the extractor reconciles must certify).
+// Sweep constants mirror tests/frontend.rs; totals fail loudly on drift.
+
+const CONV_RADII: [u32; 5] = [1, 2, 3, 4, 6];
+const CONV_WGS: [(u32, u32); 5] = [(16, 4), (16, 16), (32, 4), (32, 8), (64, 4)];
+const CONV_SIZES: [u32; 4] = [256, 512, 1024, 2048];
+const CONV_RPT: [u32; 3] = [1, 2, 4];
+const MM_SIZES: [u32; 2] = [512, 1024];
+const MM_TILE_K: [u32; 3] = [4, 8, 16];
+const MM_WGS: [(u32, u32); 11] = [
+    (16, 4),
+    (16, 8),
+    (16, 16),
+    (32, 2),
+    (32, 4),
+    (32, 8),
+    (32, 16),
+    (8, 8),
+    (8, 16),
+    (64, 2),
+    (64, 4),
+];
+const TR_WGS: [(u32, u32); 7] =
+    [(8, 8), (16, 8), (16, 16), (32, 8), (32, 16), (32, 32), (64, 4)];
+const TR_SIZES: [u32; 3] = [512, 1024, 2048];
+
+fn cert_opts(target: &str, launch: Launch, bindings: Bindings) -> AnalyzeOptions {
+    AnalyzeOptions { target: target.into(), kernel: None, launch, bindings }
+}
+
+#[test]
+fn every_table3_config_certifies_stageable() {
+    let dev = DeviceSpec::m2090();
+    let mut checked = 0usize;
+    for pass in ["row", "col"] {
+        let prog = parse_program(&fixture(&format!("convolution_{pass}.cl"))).unwrap();
+        for &r in &CONV_RADII {
+            for &wg in &CONV_WGS {
+                for &size in &CONV_SIZES {
+                    for &rpt in &CONV_RPT {
+                        let launch = workloads::launch_over(wg, (size, size / rpt));
+                        let b = Bindings::new()
+                            .set("width", size as i64)
+                            .set("rows_per_thread", rpt as i64)
+                            .set("radius", r as i64);
+                        let cert = frontend::certify(&prog, &cert_opts("input", launch, b), &dev);
+                        assert!(
+                            cert.stageable && cert.reasons.is_empty(),
+                            "convolution_{pass} r{r} wg{}x{} {size} rpt{rpt}: {}",
+                            wg.0,
+                            wg.1,
+                            cert.summary()
+                        );
+                        checked += 1;
+                    }
+                }
+            }
+        }
+    }
+    let prog = parse_program(&fixture("matrixmul.cl")).unwrap();
+    for &size in &MM_SIZES {
+        for &tk in &MM_TILE_K {
+            for &wg in &MM_WGS {
+                let launch = workloads::launch_over(wg, (size, size));
+                let b = Bindings::new().set("size", size as i64).set("tile_k", tk as i64);
+                let cert = frontend::certify(&prog, &cert_opts("b", launch, b), &dev);
+                assert!(
+                    cert.stageable && cert.reasons.is_empty(),
+                    "matrixMul {size} k{tk} wg{}x{}: {}",
+                    wg.0,
+                    wg.1,
+                    cert.summary()
+                );
+                checked += 1;
+            }
+        }
+    }
+    let prog = parse_program(&fixture("transpose.cl")).unwrap();
+    for &size in &TR_SIZES {
+        for &wg in &TR_WGS {
+            let launch = workloads::launch_over(wg, (size, size));
+            let b = Bindings::new().set("width", size as i64).set("height", size as i64);
+            let cert = frontend::certify(&prog, &cert_opts("output", launch, b), &dev);
+            assert!(
+                cert.stageable && cert.reasons.is_empty(),
+                "transpose {size} wg{}x{}: {}",
+                wg.0,
+                wg.1,
+                cert.summary()
+            );
+            checked += 1;
+        }
+    }
+    assert_eq!(checked, 687, "must cover every Table 3 instance");
+}

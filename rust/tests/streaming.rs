@@ -5,8 +5,7 @@
 use lmtuner::gpu::spec::DeviceSpec;
 use lmtuner::sim::exec::TuneRecord;
 use lmtuner::synth::sink::{
-    load_sharded, stream_sharded, MemorySink, RecordSink, ReservoirSink,
-    ShardedCsvSink, Tee,
+    load_sharded, stream_sharded, MemorySink, RecordSink, ReservoirSink, ShardedCsvSink, Tee,
 };
 use lmtuner::synth::{dataset, generator, sweep::LaunchSweep};
 use lmtuner::util::prng::Rng;
