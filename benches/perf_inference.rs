@@ -29,6 +29,7 @@ use lmtuner::gpu::spec::DeviceSpec;
 use lmtuner::kernelmodel::features::{self, NUM_FEATURES};
 use lmtuner::ml::export;
 use lmtuner::ml::forest::{Forest, ForestConfig};
+use lmtuner::obs::metrics::{ExecTelemetry, MetricsRegistry};
 use lmtuner::runtime::executor::{BatchExecutor, NativeForestExecutor};
 use lmtuner::runtime::fastexec::{FlatForest, FlatForestExecutor, FlatMode};
 use lmtuner::runtime::forest_exec::ForestExecutor;
@@ -153,6 +154,50 @@ fn main() -> anyhow::Result<()> {
             black_box(exec.predict(&chunk).unwrap());
         });
         rep.record_throughput(&r, chunk.len() as f64, "pred");
+    }
+
+    // Telemetry overhead on the serving hot path: the same flat-q b4096
+    // run with an ExecTelemetry sink attached. The instrumented path
+    // pays one Instant read and one mutex lock per batch — never per
+    // row — so it must stay within 3% of the uninstrumented executor.
+    {
+        let chunk: Vec<Vec<f64>> =
+            rows.iter().cycle().take(4096).cloned().collect();
+        let plain = FlatForestExecutor::with_parallelism(flat.clone(), 1, 1 << 20)
+            .mode(FlatMode::Quantized);
+        let sink = Arc::new(ExecTelemetry::new());
+        let instrumented =
+            FlatForestExecutor::with_parallelism(flat.clone(), 1, 1 << 20)
+                .mode(FlatMode::Quantized)
+                .with_telemetry(Arc::clone(&sink));
+        let rp = bench.run("flat-q 1t uninstrumented: batch 4096", || {
+            black_box(plain.predict(&chunk).unwrap());
+        });
+        rep.record_throughput(&rp, chunk.len() as f64, "pred");
+        let ri = bench.run("flat-q 1t telemetry: batch 4096", || {
+            black_box(instrumented.predict(&chunk).unwrap());
+        });
+        rep.record_throughput(&ri, chunk.len() as f64, "pred");
+        let overhead = ri.mean.as_secs_f64() / rp.mean.as_secs_f64() - 1.0;
+        println!(
+            "  telemetry overhead at b4096 (1 thread): {:+.2}% \
+             ({} batches, {:.0} rows/s recorded)",
+            100.0 * overhead,
+            sink.batches(),
+            sink.rows_per_second()
+        );
+        rep.note("telemetry_overhead_frac_b4096", overhead);
+        // The recorded registry rides along in the same report — live
+        // telemetry and bench snapshots share one JSON format.
+        let mut reg = MetricsRegistry::new();
+        sink.export("bench.flat_q", &mut reg);
+        rep.set_section("metrics", reg.to_json());
+        if !smoke {
+            assert!(
+                overhead <= 0.03,
+                "telemetry overhead {overhead:.4} above the 3% budget"
+            );
+        }
     }
 
     // Joint recommendation path: verdict + workgroup planes per row.

@@ -15,7 +15,7 @@
 
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -23,6 +23,7 @@ use anyhow::{anyhow, Result};
 
 use crate::kernelmodel::features::NUM_FEATURES;
 use crate::ml::export::EncodedForest;
+use crate::obs::metrics::{Histogram, MetricsRegistry};
 use crate::runtime::executor::{BatchExecutor, ForestRegistry};
 use crate::runtime::fastexec::{FlatForest, FlatForestExecutor};
 use crate::runtime::forest_exec::ForestExecutor;
@@ -55,20 +56,66 @@ impl Default for ServiceConfig {
     }
 }
 
-/// Aggregate serving metrics (summed over shards at shutdown).
+/// Serving metrics for one worker shard (or, after [`ServiceStats::absorb`],
+/// a sum over shards). The histograms use the `obs` log2 buckets, so
+/// absorbing is exact and merge-order independent: the merged
+/// p50/p90/p99 read the same whether computed per shard or after the
+/// fold.
 #[derive(Clone, Debug, Default)]
 pub struct ServiceStats {
     pub served: u64,
     pub batches: u64,
     /// Requests answered with a typed error (failed batches).
     pub rejected: u64,
+    /// Per-request wait from enqueue to batch formation, seconds.
+    pub queue_wait: Histogram,
+    /// Per-batch backend execution time, seconds.
+    pub exec_time: Histogram,
+    /// Batch-size distribution (rows per backend call).
+    pub batch_rows: Histogram,
 }
 
 impl ServiceStats {
-    fn absorb(&mut self, other: ServiceStats) {
+    /// Fold another shard's stats in (counter sums + exact histogram
+    /// merges).
+    pub fn absorb(&mut self, other: &ServiceStats) {
         self.served += other.served;
         self.batches += other.batches;
         self.rejected += other.rejected;
+        self.queue_wait.merge(&other.queue_wait);
+        self.exec_time.merge(&other.exec_time);
+        self.batch_rows.merge(&other.batch_rows);
+    }
+
+    /// Export under `prefix` (e.g. `serve` or `serve.worker0`):
+    /// counters `.served`/`.batches`/`.rejected`, histograms
+    /// `.queue_wait_s`/`.exec_s`/`.batch_rows`.
+    pub fn export(&self, prefix: &str, reg: &mut MetricsRegistry) {
+        reg.add(&format!("{prefix}.served"), self.served);
+        reg.add(&format!("{prefix}.batches"), self.batches);
+        reg.add(&format!("{prefix}.rejected"), self.rejected);
+        reg.merge_histogram(&format!("{prefix}.queue_wait_s"), &self.queue_wait);
+        reg.merge_histogram(&format!("{prefix}.exec_s"), &self.exec_time);
+        reg.merge_histogram(&format!("{prefix}.batch_rows"), &self.batch_rows);
+    }
+
+    /// One-line human summary (the serve snapshot printer and the
+    /// per-worker shutdown breakdown both use this).
+    pub fn summary_line(&self) -> String {
+        let us = |h: &Histogram, p: f64| h.percentile(p) * 1e6;
+        format!(
+            "served {} rejected {} batches {} | exec p50/p90/p99 \
+             {:.0}/{:.0}/{:.0}us | queue-wait p50/p90/p99 {:.0}/{:.0}/{:.0}us",
+            self.served,
+            self.rejected,
+            self.batches,
+            us(&self.exec_time, 50.0),
+            us(&self.exec_time, 90.0),
+            us(&self.exec_time, 99.0),
+            us(&self.queue_wait, 50.0),
+            us(&self.queue_wait, 90.0),
+            us(&self.queue_wait, 99.0),
+        )
     }
 }
 
@@ -152,11 +199,39 @@ impl ServiceHandle {
     }
 }
 
+/// Read-only view of a service's live per-shard stats (see
+/// [`Service::stats_observer`]). Slightly stale by design — each
+/// worker republishes after completing a batch.
+#[derive(Clone)]
+pub struct StatsObserver {
+    live: Arc<Vec<Mutex<ServiceStats>>>,
+}
+
+impl StatsObserver {
+    /// Point-in-time copy of every shard's stats, in shard order.
+    pub fn per_worker(&self) -> Vec<ServiceStats> {
+        self.live.iter().map(|slot| slot.lock().unwrap().clone()).collect()
+    }
+
+    /// Merged live stats across shards.
+    pub fn total(&self) -> ServiceStats {
+        let mut total = ServiceStats::default();
+        for s in self.per_worker() {
+            total.absorb(&s);
+        }
+        total
+    }
+}
+
 /// The running service. `shutdown()` (or drop) stops every shard via the
 /// explicit control message and joins them.
 pub struct Service {
     handle: ServiceHandle,
     workers: Vec<JoinHandle<ServiceStats>>,
+    /// Per-shard live stats: each worker republishes its counters after
+    /// every batch, so observers (the serve snapshot printer) read
+    /// consistent point-in-time copies without touching worker state.
+    live: Arc<Vec<Mutex<ServiceStats>>>,
 }
 
 impl Service {
@@ -201,15 +276,18 @@ impl Service {
         cfg: ServiceConfig,
     ) -> Result<Service> {
         anyhow::ensure!(!execs.is_empty(), "need at least one executor");
+        let live: Arc<Vec<Mutex<ServiceStats>>> =
+            Arc::new((0..execs.len()).map(|_| Mutex::new(ServiceStats::default())).collect());
         let mut shards = Vec::with_capacity(execs.len());
         let mut workers = Vec::with_capacity(execs.len());
         for (i, exec) in execs.into_iter().enumerate() {
             let (tx, rx) = sync_channel::<WorkerMsg>(cfg.queue_depth.max(1));
             let worker_cfg = cfg.clone();
+            let live = Arc::clone(&live);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("lmtuner-batcher-{i}"))
-                    .spawn(move || worker_loop(exec, worker_cfg, rx))?,
+                    .spawn(move || worker_loop(exec, worker_cfg, rx, &live[i]))?,
             );
             shards.push(tx);
         }
@@ -220,6 +298,7 @@ impl Service {
                 stopped: Arc::new(AtomicBool::new(false)),
             },
             workers,
+            live,
         })
     }
 
@@ -231,6 +310,25 @@ impl Service {
         self.handle.shards.len()
     }
 
+    /// Point-in-time copy of every shard's live stats, in shard order.
+    /// Slightly stale by design (each worker republishes after a batch
+    /// completes), but internally consistent per shard.
+    pub fn per_worker_snapshot(&self) -> Vec<ServiceStats> {
+        self.stats_observer().per_worker()
+    }
+
+    /// Merged live stats across shards (the serve snapshot printer).
+    pub fn stats_snapshot(&self) -> ServiceStats {
+        self.stats_observer().total()
+    }
+
+    /// Detached read-only view of the live stats: cloneable and
+    /// `Send`, so a background snapshot printer can poll while the
+    /// `Service` value stays with the thread that will shut it down.
+    pub fn stats_observer(&self) -> StatsObserver {
+        StatsObserver { live: Arc::clone(&self.live) }
+    }
+
     /// Stop every shard and collect summed stats. Safe to call while
     /// clients still hold handles: shutdown is a control message, not a
     /// channel disconnect, so it cannot hang on live clones. Handles are
@@ -239,15 +337,25 @@ impl Service {
     /// stopped". A submit racing the flag itself may instead observe a
     /// closed reply channel, which the blocking `predict` reports as
     /// "service stopped before replying".
-    pub fn shutdown(mut self) -> ServiceStats {
+    pub fn shutdown(self) -> ServiceStats {
+        self.shutdown_per_worker().0
+    }
+
+    /// [`Service::shutdown`], but keeping the per-shard breakdown (in
+    /// shard order) next to the merged total — a dead or slow shard is
+    /// visible as an outlier row instead of vanishing into the sum.
+    pub fn shutdown_per_worker(mut self) -> (ServiceStats, Vec<ServiceStats>) {
         self.initiate_shutdown();
+        let per_worker: Vec<ServiceStats> = self
+            .workers
+            .drain(..)
+            .map(|w| w.join().unwrap_or_default())
+            .collect();
         let mut total = ServiceStats::default();
-        for w in self.workers.drain(..) {
-            if let Ok(stats) = w.join() {
-                total.absorb(stats);
-            }
+        for s in &per_worker {
+            total.absorb(s);
         }
-        total
+        (total, per_worker)
     }
 
     fn initiate_shutdown(&self) {
@@ -384,6 +492,7 @@ fn worker_loop<E: BatchExecutor>(
     exec: E,
     cfg: ServiceConfig,
     rx: Receiver<WorkerMsg>,
+    live: &Mutex<ServiceStats>,
 ) -> ServiceStats {
     let max_batch = cfg.max_batch.min(exec.max_batch()).max(1);
     let mut stats = ServiceStats::default();
@@ -420,6 +529,7 @@ fn worker_loop<E: BatchExecutor>(
         }
         if !batch.is_empty() {
             serve_batch(&exec, &mut batch, &mut stats);
+            *live.lock().unwrap() = stats.clone();
         }
         if shutting_down {
             // Serve whatever is already queued (handles were flagged
@@ -439,6 +549,7 @@ fn worker_loop<E: BatchExecutor>(
                 }
                 serve_batch(&exec, &mut batch, &mut stats);
             }
+            *live.lock().unwrap() = stats.clone();
             return stats;
         }
     }
@@ -461,11 +572,24 @@ fn serve_batch<E: BatchExecutor>(
         }
     }
 
+    // Batch formation is complete: everything each request waited for
+    // beyond this point is execution, so queue-wait is sampled here.
+    let formed = Instant::now();
+    for p in batch.iter() {
+        stats
+            .queue_wait
+            .observe_duration(formed.saturating_duration_since(p.enqueued));
+    }
+    stats.batch_rows.observe(batch.len() as f64);
+
     let rows: Vec<Vec<f64>> = batch.iter().map(|p| p.req.features.to_vec()).collect();
     // One traversal fills every output plane: the verdict score and, for
     // joint (schema v2) models, the workgroup-shape logs.
     let k = exec.num_outputs().max(1);
-    match exec.predict_outputs(&rows) {
+    let exec_started = Instant::now();
+    let outcome = exec.predict_outputs(&rows);
+    stats.exec_time.observe_duration(exec_started.elapsed());
+    match outcome {
         Ok(outs) if outs.len() == rows.len() * k => {
             let bsize = batch.len();
             for (i, p) in batch.drain(..).enumerate() {
@@ -566,6 +690,19 @@ mod tests {
         assert_eq!(stats.served, 200);
         assert_eq!(stats.rejected, 0);
         assert!(stats.batches <= 200);
+        // Telemetry: one queue-wait sample per request, one execution /
+        // batch-size sample per batch, ordered percentiles.
+        assert_eq!(stats.queue_wait.count(), 200);
+        assert_eq!(stats.exec_time.count(), stats.batches);
+        assert_eq!(stats.batch_rows.count(), stats.batches);
+        assert!(stats.exec_time.percentile(50.0) > 0.0);
+        assert!(
+            stats.exec_time.percentile(99.0) >= stats.exec_time.percentile(50.0)
+        );
+        assert!(stats.batch_rows.max() <= 64.0);
+        let line = stats.summary_line();
+        assert!(line.contains("served 200"), "{line}");
+        assert!(line.contains("queue-wait p50/p90/p99"), "{line}");
     }
 
     #[test]
@@ -675,6 +812,115 @@ mod tests {
         let stats = svc.shutdown();
         assert_eq!(stats.served, 0);
         assert_eq!(stats.rejected, 21);
+        // Failed batches still record queue-wait and execution time.
+        assert_eq!(stats.queue_wait.count(), 21);
+        assert!(stats.exec_time.count() >= 1);
+    }
+
+    #[test]
+    fn per_worker_breakdown_surfaces_uneven_load() {
+        // Shard 0 is "dead" (every batch fails); shard 1 is healthy.
+        // The merged blob hides this; the per-worker breakdown must not.
+        struct MaybeFailing {
+            fail: bool,
+        }
+        impl BatchExecutor for MaybeFailing {
+            fn backend(&self) -> &'static str {
+                "maybe"
+            }
+            fn max_batch(&self) -> usize {
+                8
+            }
+            fn predict(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+                if self.fail {
+                    anyhow::bail!("dead shard")
+                }
+                Ok(rows.iter().map(|r| r[0]).collect())
+            }
+        }
+        let svc = Service::start_sharded(
+            vec![MaybeFailing { fail: true }, MaybeFailing { fail: false }],
+            ServiceConfig {
+                max_batch: 8,
+                max_wait: Duration::from_micros(50),
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let h = svc.handle();
+        let (tx, rx) = std::sync::mpsc::channel();
+        for i in 0..100u64 {
+            h.submit(i, [0.5; NUM_FEATURES], tx.clone()).unwrap();
+        }
+        drop(tx);
+        let (mut ok, mut failed) = (0u64, 0u64);
+        while let Ok(reply) = rx.recv() {
+            match reply {
+                Ok(_) => ok += 1,
+                Err(_) => failed += 1,
+            }
+        }
+        assert_eq!(ok + failed, 100);
+        assert!(ok > 0 && failed > 0, "round-robin must hit both shards");
+
+        let (total, per_worker) = svc.shutdown_per_worker();
+        assert_eq!(per_worker.len(), 2);
+        assert_eq!(per_worker[0].served, 0, "dead shard must serve nothing");
+        assert!(per_worker[0].rejected > 0);
+        assert!(per_worker[1].served > 0);
+        assert_eq!(per_worker[1].rejected, 0);
+        // The merged blob is exactly the fold of the breakdown.
+        assert_eq!(total.served, per_worker[0].served + per_worker[1].served);
+        assert_eq!(total.rejected, per_worker[0].rejected + per_worker[1].rejected);
+        assert_eq!(
+            total.queue_wait.count(),
+            per_worker[0].queue_wait.count() + per_worker[1].queue_wait.count()
+        );
+        assert_eq!(total.queue_wait.count(), 100);
+        assert!(per_worker[1].exec_time.count() >= 1);
+    }
+
+    #[test]
+    fn live_snapshot_converges_to_final_stats() {
+        let enc = toy_encoded(17);
+        let svc = Service::start_native(
+            enc,
+            ServiceConfig {
+                max_batch: 16,
+                max_wait: Duration::from_micros(100),
+                workers: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let h = svc.handle();
+        let (tx, rx) = std::sync::mpsc::channel();
+        let mut rng = Rng::new(31);
+        for i in 0..200u64 {
+            h.submit(i, random_features(&mut rng), tx.clone()).unwrap();
+        }
+        drop(tx);
+        let mut seen = 0;
+        while let Ok(reply) = rx.recv() {
+            reply.unwrap();
+            seen += 1;
+        }
+        assert_eq!(seen, 200);
+        // Workers republish after each batch; the last publish can
+        // trail the final reply briefly.
+        let deadline = Instant::now() + Duration::from_secs(5);
+        loop {
+            let snap = svc.stats_snapshot();
+            if snap.served == 200 {
+                assert_eq!(snap.queue_wait.count(), 200);
+                assert_eq!(svc.per_worker_snapshot().len(), 2);
+                break;
+            }
+            assert!(Instant::now() < deadline, "live snapshot never converged");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let stats = svc.shutdown();
+        assert_eq!(stats.served, 200);
     }
 
     #[test]

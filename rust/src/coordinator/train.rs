@@ -26,6 +26,7 @@ use crate::kernelmodel::features::NUM_FEATURES;
 use crate::ml::forest::{Forest, ForestConfig, OobEstimate};
 use crate::ml::metrics::{self, Accuracy, AccuracyAccumulator, JointAccumulator, JointAccuracy};
 use crate::ml::{export, io};
+use crate::obs::metrics::MetricsRegistry;
 use crate::sim::exec::{MeasureConfig, Schema, SpeedupRecord, TuneRecord};
 use crate::synth::binfmt::ShardFormat;
 use crate::synth::dataset::BuildProgress;
@@ -109,6 +110,54 @@ impl ShardedTrainConfig {
     }
 }
 
+/// Wall time and throughput of one pipeline phase. The pipelines report
+/// generate / fit / grade separately — a single folded rows/sec figure
+/// hides which phase regressed (and grading time used to go entirely
+/// unreported in the sharded pipeline).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PhaseStat {
+    pub name: &'static str,
+    pub seconds: f64,
+    /// Work items this phase processed (records generated, rows fitted
+    /// on, rows graded).
+    pub items: u64,
+}
+
+impl PhaseStat {
+    pub fn per_second(&self) -> f64 {
+        if self.seconds > 0.0 {
+            self.items as f64 / self.seconds
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Export phase stats into a registry: gauge `train.<phase>_s`, counter
+/// `train.<phase>_items`, gauge `train.<phase>_per_s` per phase.
+fn export_phases(phases: &[PhaseStat], reg: &mut MetricsRegistry) {
+    for p in phases {
+        reg.set_gauge(&format!("train.{}_s", p.name), p.seconds);
+        reg.add(&format!("train.{}_items", p.name), p.items);
+        reg.set_gauge(&format!("train.{}_per_s", p.name), p.per_second());
+    }
+}
+
+/// Export stage counters (validate / dedup) into a registry. Counters
+/// add on re-export, so multi-device runs can fold every sink's stages
+/// into one registry.
+pub fn export_stages(stages: &[StageCounters], reg: &mut MetricsRegistry) {
+    for s in stages {
+        reg.add(&format!("stage.{}.seen", s.name), s.seen);
+        reg.add(&format!("stage.{}.kept", s.name), s.kept);
+        reg.add(&format!("stage.{}.dropped", s.name), s.dropped);
+        reg.add(&format!("stage.{}.replaced", s.name), s.replaced);
+        for (reason, n) in &s.rejects {
+            reg.add(&format!("stage.{}.reject.{reason}", s.name), *n);
+        }
+    }
+}
+
 pub struct TrainOutcome {
     pub forest: Forest,
     /// Key of the simulated device the dataset was measured on; stamped
@@ -138,6 +187,12 @@ pub struct TrainOutcome {
     /// with validate/dedup stages (empty otherwise, and always empty for
     /// the in-memory pipeline).
     pub stage_counters: Vec<StageCounters>,
+    /// Per-phase wall time + throughput, in pipeline order:
+    /// generate, fit, grade.
+    pub phases: Vec<PhaseStat>,
+    /// The same phase/stage/summary telemetry as a mergeable registry —
+    /// what `lmtuner train --metrics-out` writes.
+    pub metrics: MetricsRegistry,
 }
 
 /// Fit the forest on a training split, with the optional OOB pass.
@@ -224,19 +279,26 @@ pub fn run_with_progress(
     let sweep = LaunchSweep::new(2048, 2048);
     let build = build_config(cfg);
     let mut mem = MemorySink::new();
-    let summary =
+    let summary = {
+        let _span = crate::span!("train.generate");
         dataset::build_streaming(&templates, &sweep, dev, &build, &mut mem, progress)
-            .expect("in-memory sink cannot fail");
+            .expect("in-memory sink cannot fail")
+    };
     let records = mem.records;
     let gen_seconds = t0.elapsed().as_secs_f64();
 
     let (train, test) = dataset::split(&records, cfg.train_fraction, cfg.seed);
     let train_size = train.len();
     let t1 = Instant::now();
-    let (forest, oob) = fit_split(&train, &cfg.forest, cfg.compute_oob, cfg.schema)
-        .expect("cannot fit on the generated dataset (empty or non-finite)");
+    let (forest, oob) = {
+        let _span = crate::span!("train.fit");
+        fit_split(&train, &cfg.forest, cfg.compute_oob, cfg.schema)
+            .expect("cannot fit on the generated dataset (empty or non-finite)")
+    };
     let fit_seconds = t1.elapsed().as_secs_f64();
 
+    let t2 = Instant::now();
+    let _grade_span = crate::span!("train.grade");
     let test_bases: Vec<&SpeedupRecord> = test.iter().map(|r| &r.base).collect();
     let synth_accuracy = metrics::evaluate_model(&test_bases, |x| forest.decide(x));
     drop(test_bases);
@@ -244,9 +306,22 @@ pub fn run_with_progress(
         Schema::V1 => None,
         Schema::V2 => Some(joint_eval(&forest, test.iter().copied())),
     };
+    let graded = test.len() as u64;
     drop(train);
     drop(test);
     let per_benchmark = evaluate_real(dev, &forest, &cfg.measure);
+    drop(_grade_span);
+    let grade_seconds = t2.elapsed().as_secs_f64();
+
+    let phases = vec![
+        PhaseStat { name: "generate", seconds: gen_seconds, items: summary.records },
+        PhaseStat { name: "fit", seconds: fit_seconds, items: train_size as u64 },
+        PhaseStat { name: "grade", seconds: grade_seconds, items: graded },
+    ];
+    let mut reg = MetricsRegistry::new();
+    export_phases(&phases, &mut reg);
+    reg.add("train.records", summary.records);
+    reg.add("train.train_size", train_size as u64);
 
     TrainOutcome {
         forest,
@@ -262,6 +337,8 @@ pub fn run_with_progress(
         oob,
         joint,
         stage_counters: Vec::new(),
+        phases,
+        metrics: reg,
     }
 }
 
@@ -296,6 +373,7 @@ pub fn run_sharded(
     let mut reservoir =
         ReservoirSink::new(cfg.train_capacity, base.seed ^ 0x7EA1_5A3D);
     let (summary, stage_counters) = {
+        let _span = crate::span!("train.generate");
         let tee = Tee(&mut shards, &mut reservoir);
         let mut staged = StagedSink::new(tee, cfg.stages.build(base.schema));
         let summary = dataset::build_streaming(
@@ -309,15 +387,22 @@ pub fn run_sharded(
     let (train_records, train_indices) = reservoir.into_sample();
     let train_size = train_records.len();
     let t1 = Instant::now();
-    let (forest, oob) =
-        fit_split(&train_records, &base.forest, base.compute_oob, base.schema)?;
+    let (forest, oob) = {
+        let _span = crate::span!("train.fit");
+        fit_split(&train_records, &base.forest, base.compute_oob, base.schema)?
+    };
     let fit_seconds = t1.elapsed().as_secs_f64();
     drop(train_records);
 
     // Pass 2: stream the shards back and grade every held-out row.
     // Rows are graded in parallel batches — a serial decide() here
     // would cap the whole pipeline at single-thread speed at paper
-    // scale, after the build pass was parallelized.
+    // scale, after the build pass was parallelized. This pass is timed
+    // as its own "grade" phase: folding it into the generate figure (or
+    // not reporting it at all, as before) hides a slow eval pass behind
+    // a healthy-looking build throughput.
+    let t2 = Instant::now();
+    let grade_span = crate::span!("train.grade");
     const EVAL_BATCH: usize = 8192;
     let train_set: HashSet<u64> = train_indices.into_iter().collect();
     let mut acc = AccuracyAccumulator::new();
@@ -373,6 +458,21 @@ pub fn run_sharded(
     );
 
     let per_benchmark = evaluate_real(dev, &forest, &base.measure);
+    drop(grade_span);
+    let grade_seconds = t2.elapsed().as_secs_f64();
+
+    let phases = vec![
+        PhaseStat { name: "generate", seconds: gen_seconds, items: summary.records },
+        PhaseStat { name: "fit", seconds: fit_seconds, items: train_size as u64 },
+        PhaseStat { name: "grade", seconds: grade_seconds, items: acc.n() as u64 },
+    ];
+    let mut reg = MetricsRegistry::new();
+    export_phases(&phases, &mut reg);
+    export_stages(&stage_counters, &mut reg);
+    reg.add("train.records", summary.records);
+    reg.add("train.train_size", train_size as u64);
+    reg.add("train.shard_rows", written);
+
     Ok(TrainOutcome {
         forest,
         device: dev.key.to_string(),
@@ -387,6 +487,8 @@ pub fn run_sharded(
         oob,
         joint: joint_acc.map(|j| j.finish()),
         stage_counters,
+        phases,
+        metrics: reg,
     })
 }
 
@@ -495,6 +597,13 @@ mod tests {
             "count {}", out.synth_accuracy.count_based);
         assert!(out.synth_accuracy.penalty_weighted > 0.8);
         assert_eq!(out.per_benchmark.len(), 8);
+        // the in-memory pipeline reports split phase timings too
+        assert_eq!(
+            out.phases.iter().map(|p| p.name).collect::<Vec<_>>(),
+            vec!["generate", "fit", "grade"]
+        );
+        assert_eq!(out.phases[0].items, out.summary.records);
+        assert!(out.metrics.gauge("train.generate_s").is_some());
     }
 
     #[test]
@@ -566,6 +675,23 @@ mod tests {
         // the shards reload to exactly the stream the summary counted
         let back = sink::load_sharded(&dir).unwrap();
         assert_eq!(back.len() as u64, out.summary.records);
+        // Regression (phase-timing split): generate, fit, and grade
+        // report their own elapsed/throughput — grading is no longer
+        // invisible behind the build figure.
+        assert_eq!(
+            out.phases.iter().map(|p| p.name).collect::<Vec<_>>(),
+            vec!["generate", "fit", "grade"]
+        );
+        assert_eq!(out.phases[0].items, out.summary.records);
+        assert_eq!(out.phases[1].items, out.train_size as u64);
+        assert_eq!(out.phases[2].items, out.synth_accuracy.n as u64);
+        assert!(out.phases.iter().all(|p| p.seconds > 0.0), "{:?}", out.phases);
+        assert_eq!(out.phases[0].seconds, out.gen_seconds);
+        assert!(out.phases[2].per_second() > 0.0);
+        // the registry carries the same figures for --metrics-out
+        assert_eq!(out.metrics.counter("train.records"), out.summary.records);
+        assert_eq!(out.metrics.counter("train.grade_items"), out.synth_accuracy.n as u64);
+        assert!(out.metrics.gauge("train.grade_s").unwrap() > 0.0);
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -120,6 +120,7 @@ impl From<ExtractError> for FrontendError {
 
 /// Parse a translation unit.
 pub fn parse_program(src: &str) -> Result<ast::Program, FrontendError> {
+    let _span = crate::span!("frontend.parse");
     Ok(parser::parse(src)?)
 }
 
@@ -131,6 +132,11 @@ pub fn analyze(
     opts: &AnalyzeOptions,
     dev: &DeviceSpec,
 ) -> Result<KernelDescriptor, FrontendError> {
-    let prog = parser::parse(src)?;
+    let _span = crate::span!("frontend.analyze");
+    let prog = {
+        let _parse = crate::span!("frontend.parse");
+        parser::parse(src)?
+    };
+    let _extract = crate::span!("frontend.extract");
     Ok(extract::extract_descriptor(&prog, opts, dev)?)
 }

@@ -68,6 +68,7 @@ pub mod frontend;
 pub mod gpu;
 pub mod kernelmodel;
 pub mod ml;
+pub mod obs;
 pub mod report;
 pub mod runtime;
 pub mod sim;

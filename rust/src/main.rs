@@ -30,6 +30,7 @@ use lmtuner::gpu::spec::DeviceSpec;
 use lmtuner::kernelmodel::features::{self, FEATURE_NAMES, NUM_FEATURES};
 use lmtuner::kernelmodel::launch::{GridGeom, Launch, WgGeom};
 use lmtuner::ml::{io as model_io, metrics, select};
+use lmtuner::obs::metrics::MetricsRegistry;
 use lmtuner::report::{figures, tables};
 use lmtuner::runtime::executor::BatchExecutor;
 use lmtuner::runtime::fastexec::FlatForestExecutor;
@@ -140,7 +141,12 @@ fn usage() -> &'static str {
                [--requests N] [--batch 4096] [--wait-us 200] [--workers 1]\n\
      reproduce --figure fig1|fig6|table1|table2|table3|all [--scale 0.2]\n\
                [--device m2090]\n\
-     info      [--artifacts artifacts]  (lists the device portfolio)"
+     info      [--artifacts artifacts]  (lists the device portfolio)\n\
+     \n\
+     generate/train/crossdev/serve/analyze also take --metrics-out FILE\n\
+     (telemetry counters, gauges, and latency histograms as JSON) and\n\
+     --trace-out FILE (line-delimited span events; also prints the\n\
+     wall-time attribution tree on exit)"
 }
 
 /// Resolve `--device` against the registry (default: the paper's M2090).
@@ -148,6 +154,56 @@ fn device_arg(args: &mut Args) -> Result<DeviceSpec> {
     match args.opt_str("device") {
         Some(key) => registry::get(&key),
         None => Ok(registry::default_device()),
+    }
+}
+
+/// `--metrics-out FILE` / `--trace-out FILE`, shared by the telemetry-
+/// wired subcommands (generate/train/crossdev/serve/analyze).
+struct Telemetry {
+    metrics_out: Option<PathBuf>,
+    tracing: bool,
+}
+
+/// Parse the telemetry flags BEFORE the command does real work:
+/// `--trace-out` enables the global tracer, so every span recorded
+/// downstream streams into the JSONL sink.
+fn telemetry_args(args: &mut Args) -> Result<Telemetry> {
+    let metrics_out = args.opt_str("metrics-out").map(PathBuf::from);
+    let tracing = match args.opt_str("trace-out") {
+        Some(path) => {
+            let path = PathBuf::from(path);
+            if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+                std::fs::create_dir_all(dir)?;
+            }
+            lmtuner::obs::trace::global()
+                .set_sink(&path)
+                .with_context(|| format!("opening --trace-out {}", path.display()))?;
+            println!("tracing span events to {}", path.display());
+            true
+        }
+        None => false,
+    };
+    Ok(Telemetry { metrics_out, tracing })
+}
+
+impl Telemetry {
+    /// Write `metrics.json` (when asked), flush the trace sink, and
+    /// print the wall-time attribution tree (when tracing).
+    fn finish(&self, reg: &MetricsRegistry) -> Result<()> {
+        if let Some(path) = &self.metrics_out {
+            if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+                std::fs::create_dir_all(dir)?;
+            }
+            reg.write(path)
+                .with_context(|| format!("writing --metrics-out {}", path.display()))?;
+            println!("metrics written to {}", path.display());
+        }
+        if self.tracing {
+            let tr = lmtuner::obs::trace::global();
+            tr.flush()?;
+            print!("{}", tr.render_tree());
+        }
+        Ok(())
     }
 }
 
@@ -301,6 +357,7 @@ fn cmd_generate(args: &mut Args) -> Result<()> {
     };
     let stages = pipeline_args(args);
     let cfg = train_config(args)?;
+    let tel = telemetry_args(args)?;
     args.finish().map_err(anyhow::Error::msg)?;
     if shards.is_some() && out_explicit.is_some() {
         bail!(
@@ -319,6 +376,7 @@ fn cmd_generate(args: &mut Args) -> Result<()> {
         bail!("--devices requires --shards N (one shard dir per device)");
     }
 
+    let t0 = std::time::Instant::now();
     let mut rng = Rng::new(cfg.seed);
     let templates = lmtuner::synth::generator::generate(&mut rng, cfg.scale);
     let sweep = lmtuner::synth::sweep::LaunchSweep::new(2048, 2048);
@@ -359,6 +417,7 @@ fn cmd_generate(args: &mut Args) -> Result<()> {
             &mut sinks,
             Some(&mut progress),
         )?;
+        let mut reg = MetricsRegistry::new();
         for ((d, sink), summary) in devices.iter().zip(&sinks).zip(&summaries) {
             println!(
                 "{}: wrote {} instances to {} ({} shards); beneficial \
@@ -371,12 +430,17 @@ fn cmd_generate(args: &mut Args) -> Result<()> {
                 summary.geomean_speedup()
             );
             print_stage_counters(&sink.counters());
+            reg.add("generate.records", summary.records);
+            reg.add(&format!("generate.{}.records", d.key), summary.records);
+            train::export_stages(&sink.counters(), &mut reg);
         }
+        reg.set_gauge("generate.elapsed_s", t0.elapsed().as_secs_f64());
+        tel.finish(&reg)?;
         return Ok(());
     }
 
     println!("device: {} ({}); schema: {}", dev.name, dev.key, cfg.schema);
-    let summary = if let Some(shards) = shards {
+    let (summary, counters) = if let Some(shards) = shards {
         // Streamed, sharded build: bounded memory at any scale.
         let sink =
             ShardedSink::create(&out_dir, shards, dev.key, cfg.schema, format)?;
@@ -395,7 +459,7 @@ fn cmd_generate(args: &mut Args) -> Result<()> {
             sink.schema()
         );
         print_stage_counters(&staged.counters());
-        summary
+        (summary, staged.counters())
     } else {
         let sink = lmtuner::synth::sink::MemorySink::new();
         let mut staged = StagedSink::new(sink, stages.build(cfg.schema));
@@ -409,7 +473,7 @@ fn cmd_generate(args: &mut Args) -> Result<()> {
         dataset::save_schema(records, &out, dev.key, cfg.schema)?;
         println!("wrote {} instances to {}", records.len(), out.display());
         print_stage_counters(&staged.counters());
-        summary
+        (summary, staged.counters())
     };
     println!(
         "beneficial {:.1}%, geomean {:.2}x, max {:.1}x",
@@ -417,6 +481,13 @@ fn cmd_generate(args: &mut Args) -> Result<()> {
         summary.geomean_speedup(),
         summary.max_speedup
     );
+    let mut reg = MetricsRegistry::new();
+    reg.add("generate.records", summary.records);
+    reg.set_gauge("generate.elapsed_s", t0.elapsed().as_secs_f64());
+    reg.set_gauge("generate.beneficial_frac", summary.beneficial_fraction());
+    reg.set_gauge("generate.geomean_speedup", summary.geomean_speedup());
+    train::export_stages(&counters, &mut reg);
+    tel.finish(&reg)?;
     Ok(())
 }
 
@@ -438,6 +509,7 @@ fn cmd_train(args: &mut Args) -> Result<()> {
     let format = format_arg(args, ShardFormat::Csv)?;
     let stages = pipeline_args(args);
     let cfg = train_config(args)?;
+    let tel = telemetry_args(args)?;
     args.finish().map_err(anyhow::Error::msg)?;
     if shards.is_none() && (out_dir_explicit.is_some() || train_cap_explicit) {
         // These options select the streaming pipeline; consuming them
@@ -510,6 +582,17 @@ fn cmd_train(args: &mut Args) -> Result<()> {
         out.forest.max_depth(),
         out.forest.max_nodes(),
     );
+    // Per-phase breakdown: generate, fit, and grade each report their
+    // own elapsed + throughput instead of one folded rows/sec figure.
+    for p in &out.phases {
+        println!(
+            "phase {:<8} {:>9} items in {:>6.1}s ({:.0}/s)",
+            p.name,
+            p.items,
+            p.seconds,
+            p.per_second()
+        );
+    }
     if let Some(oob) = &out.oob {
         println!(
             "oob: mse {:.4}  decision accuracy {:.1}%  ({}/{} samples covered)",
@@ -549,6 +632,7 @@ fn cmd_train(args: &mut Args) -> Result<()> {
         }
     }
     println!("model saved to {}", model_path.display());
+    tel.finish(&out.metrics)?;
     Ok(())
 }
 
@@ -654,6 +738,7 @@ fn cmd_crossdev(args: &mut Args) -> Result<()> {
         args.get_or("dump-shards", 4).map_err(anyhow::Error::msg)?;
     let dump_format_explicit = args.opt_str("format").is_some();
     let dump_format = format_arg(args, ShardFormat::Bin)?;
+    let tel = telemetry_args(args)?;
     args.finish().map_err(anyhow::Error::msg)?;
     if dump_dir.is_none() && dump_format_explicit {
         bail!("--format requires --dump-dir DIR (it sets the dump shard format)");
@@ -700,6 +785,16 @@ fn cmd_crossdev(args: &mut Args) -> Result<()> {
         matrix.test_rows,
         t0.elapsed().as_secs_f64()
     );
+    let mut reg = MetricsRegistry::new();
+    reg.add("crossdev.devices", matrix.n() as u64);
+    reg.add("crossdev.cells", (matrix.n() * matrix.n()) as u64);
+    reg.add(
+        "crossdev.test_rows",
+        matrix.test_rows.iter().map(|&r| r as u64).sum(),
+    );
+    reg.set_gauge("crossdev.elapsed_s", t0.elapsed().as_secs_f64());
+    reg.set_gauge("crossdev.diagonal_mean", matrix.diagonal_mean());
+    tel.finish(&reg)?;
     Ok(())
 }
 
@@ -933,7 +1028,11 @@ fn cmd_analyze(args: &mut Args) -> Result<()> {
         .opt_str("array")
         .context("--array <name> is required (the array considered for staging)")?;
     let model = args.opt_str("model");
+    // Before the parse: --trace-out must capture the frontend spans.
+    let tel = telemetry_args(args)?;
+    let t_parse = std::time::Instant::now();
     let ks = load_kernel_source(args, "usage: lmtuner analyze <kernel.cl> --array NAME [options]")?;
+    let parse_s = t_parse.elapsed().as_secs_f64();
     args.finish().map_err(anyhow::Error::msg)?;
 
     // Deny gate: barrier divergence or out-of-bounds accesses invalidate
@@ -945,7 +1044,14 @@ fn cmd_analyze(args: &mut Args) -> Result<()> {
         bindings: ks.bindings.clone(),
         certificates: false,
     };
+    let t_lint = std::time::Instant::now();
     let report = frontend::lint_program(&ks.prog, &sopts, dev)?;
+    let mut reg = MetricsRegistry::new();
+    reg.set_gauge("frontend.parse_s", parse_s);
+    reg.set_gauge("frontend.lint_s", t_lint.elapsed().as_secs_f64());
+    reg.add("analyze.diags.deny", report.diags.deny_count() as u64);
+    reg.add("analyze.diags.warn", report.diags.warn_count() as u64);
+    reg.add("analyze.diags.note", report.diags.note_count() as u64);
     for d in report.diags.iter().filter(|d| d.severity >= Severity::Warn) {
         eprintln!("{}:{d}", ks.file);
     }
@@ -956,6 +1062,10 @@ fn cmd_analyze(args: &mut Args) -> Result<()> {
             report.diags.deny_count(),
             ks.file
         );
+        // The refused path still emits its telemetry — the parse/lint
+        // timings and diag counters are exactly what a CI consumer
+        // wants from a rejected kernel.
+        tel.finish(&reg)?;
         exit_with(EXIT_ANALYZE_REFUSED);
     }
 
@@ -965,7 +1075,9 @@ fn cmd_analyze(args: &mut Args) -> Result<()> {
         launch: ks.launch,
         bindings: ks.bindings.clone(),
     };
+    let t_extract = std::time::Instant::now();
     let d = frontend::extract::extract_descriptor(&ks.prog, &opts, dev)?;
+    reg.set_gauge("frontend.extract_s", t_extract.elapsed().as_secs_f64());
 
     println!("kernel: {} ({})", d.name, ks.file);
     println!(
@@ -1035,6 +1147,7 @@ fn cmd_analyze(args: &mut Args) -> Result<()> {
             );
         }
     }
+    tel.finish(&reg)?;
     Ok(())
 }
 
@@ -1132,6 +1245,7 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     let batch: usize = args.get_or("batch", 4096).map_err(anyhow::Error::msg)?;
     let wait_us: u64 = args.get_or("wait-us", 200).map_err(anyhow::Error::msg)?;
     let workers: usize = args.get_or("workers", 1).map_err(anyhow::Error::msg)?;
+    let tel = telemetry_args(args)?;
     args.finish().map_err(anyhow::Error::msg)?;
 
     let forest = model_io::load(&model_path)?;
@@ -1174,6 +1288,26 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     println!("serving via the {served_by} backend ({workers} worker shard(s))");
     let h = svc.handle();
 
+    // Periodic one-line snapshot while the load runs: merged live
+    // worker stats roughly every two seconds, polled off a detached
+    // observer so the Service value stays here for shutdown. The
+    // 100ms stop-poll keeps shutdown prompt.
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let printer = {
+        let observer = svc.stats_observer();
+        let stop = Arc::clone(&stop);
+        std::thread::spawn(move || {
+            let mut last = std::time::Instant::now();
+            while !stop.load(std::sync::atomic::Ordering::Relaxed) {
+                std::thread::sleep(std::time::Duration::from_millis(100));
+                if last.elapsed().as_secs_f64() >= 2.0 {
+                    last = std::time::Instant::now();
+                    eprintln!("  [serve] {}", observer.total().summary_line());
+                }
+            }
+        })
+    };
+
     // Demo load: replay the real-benchmark instance stream for the
     // selected device.
     let mut stream: Vec<[f64; NUM_FEATURES]> = Vec::new();
@@ -1209,7 +1343,9 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
     }
     let elapsed = t0.elapsed();
     drop(h);
-    let stats = svc.shutdown();
+    stop.store(true, std::sync::atomic::Ordering::Relaxed);
+    let _ = printer.join();
+    let (stats, per_worker) = svc.shutdown_per_worker();
     println!(
         "served {}/{} requests in {:.2}s  ({:.0} req/s, {} batches, {} failed)",
         stats.served,
@@ -1230,6 +1366,24 @@ fn cmd_serve(args: &mut Args) -> Result<()> {
             100.0 * yes as f64 / lat_us.len() as f64
         );
     }
+    // Per-worker breakdown from the merged histograms: a dead or slow
+    // shard shows up as an outlier row instead of vanishing into the
+    // total.
+    for (i, w) in per_worker.iter().enumerate() {
+        println!("worker {i}: {}", w.summary_line());
+    }
+    println!("merged:   {}", stats.summary_line());
+
+    let mut reg = MetricsRegistry::new();
+    stats.export("serve", &mut reg);
+    for (i, w) in per_worker.iter().enumerate() {
+        w.export(&format!("serve.worker{i}"), &mut reg);
+    }
+    reg.add("serve.requests", requests as u64);
+    reg.add("serve.failed", failed as u64);
+    reg.set_gauge("serve.elapsed_s", elapsed.as_secs_f64());
+    reg.set_gauge("serve.req_per_s", stats.served as f64 / elapsed.as_secs_f64());
+    tel.finish(&reg)?;
     Ok(())
 }
 

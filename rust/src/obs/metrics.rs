@@ -1,0 +1,554 @@
+//! Thread-sharded metrics registry: counters, gauges, log2 histograms.
+//!
+//! The concurrency model is deliberately the same as
+//! `synth::pipeline::StageCounters`: a [`MetricsRegistry`] is a plain
+//! value with no interior locking. Each worker thread owns its own
+//! shard, records into it lock-free, and hands it back (by return
+//! value, exactly like `worker_loop` returns `ServiceStats`); the
+//! owner folds the shards together with [`MetricsRegistry::merge`].
+//! Because [`Histogram`] buckets sit on *fixed* power-of-two
+//! boundaries, a merge is a bucket-wise integer sum — exact,
+//! associative, and commutative — so any merge order over any thread
+//! count produces bit-identical percentiles (`rust/tests/telemetry.rs`
+//! proves this for 1/2/4-way shardings).
+//!
+//! Export goes through `util::json`: [`MetricsRegistry::to_json`]
+//! produces the `metrics.json` schema documented in DESIGN.md §2i, and
+//! [`MetricsRegistry::from_json`] round-trips it losslessly. Bench
+//! binaries attach the same JSON under a `"metrics"` section of
+//! `util::bench::JsonReport` (via `JsonReport::set_section`), so live
+//! telemetry and offline `BENCH_*.json` snapshots share one format.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::json::Json;
+
+/// Number of histogram buckets. Bucket `i` (for `1 <= i < 63`) covers
+/// values in `[2^(i-31), 2^(i-30))`; bucket 0 is the underflow bucket
+/// (everything `< 2^-30`, including zero and negatives) and bucket 63
+/// collects everything `>= 2^32`. The span 2^-30..2^32 covers
+/// nanosecond-scale latencies in seconds on one end and row counts /
+/// rows-per-second figures on the other.
+pub const NUM_BUCKETS: usize = 64;
+
+/// Exponent of the lower edge of bucket 1 (`2^MIN_EXP`).
+pub const MIN_EXP: i32 = -30;
+
+/// `floor(log2(v))` for positive finite `v`, computed from the IEEE-754
+/// exponent bits so bucket boundaries are exact: `2^k` always lands in
+/// the bucket whose lower edge is `2^k`, and the largest float below it
+/// lands one bucket down. Subnormals report below [`MIN_EXP`] and clamp
+/// into the underflow bucket.
+fn floor_log2(v: f64) -> i32 {
+    debug_assert!(v > 0.0);
+    let biased = ((v.to_bits() >> 52) & 0x7ff) as i32;
+    if biased == 0 {
+        // Subnormal: < 2^-1022, far below any bucket edge.
+        i32::MIN / 2
+    } else {
+        biased - 1023
+    }
+}
+
+fn bucket_index(v: f64) -> usize {
+    // NaN (and any non-finite) routes to the underflow bucket with
+    // zero/negative values, so bucket sums always equal the count.
+    if !v.is_finite() || v <= 0.0 {
+        return 0;
+    }
+    (floor_log2(v) - MIN_EXP + 1).clamp(0, NUM_BUCKETS as i32 - 1) as usize
+}
+
+/// Lower edge of bucket `i` (`-inf` for the underflow bucket).
+pub fn bucket_lo(i: usize) -> f64 {
+    if i == 0 {
+        f64::NEG_INFINITY
+    } else {
+        (2.0f64).powi(i as i32 - 1 + MIN_EXP)
+    }
+}
+
+/// Upper edge (exclusive) of bucket `i` (`+inf` for the last bucket).
+pub fn bucket_hi(i: usize) -> f64 {
+    if i == NUM_BUCKETS - 1 {
+        f64::INFINITY
+    } else {
+        (2.0f64).powi(i as i32 + MIN_EXP)
+    }
+}
+
+/// A log2-bucketed histogram with exact, order-independent merges.
+///
+/// Buckets double in width, so a quantile estimate is at most 2x the
+/// exact sample quantile (and never below it) for values inside the
+/// bucket range — `rust/tests/telemetry.rs` asserts that bound against
+/// `util::stats::percentile` on randomized samples. `count`, `sum`,
+/// `min`, and `max` are exact.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Histogram {
+    counts: [u64; NUM_BUCKETS],
+    count: u64,
+    sum: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram {
+            counts: [0; NUM_BUCKETS],
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn observe(&mut self, v: f64) {
+        self.counts[bucket_index(v)] += 1;
+        self.count += 1;
+        self.sum += v;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
+    }
+
+    pub fn observe_duration(&mut self, d: Duration) {
+        self.observe(d.as_secs_f64());
+    }
+
+    /// Bucket-wise sum: exact, associative, commutative.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    pub fn min(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// Non-empty buckets as `(index, count)` pairs (sparse export).
+    pub fn nonzero_buckets(&self) -> Vec<(usize, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(i, &c)| (i, c))
+            .collect()
+    }
+
+    /// Quantile estimate for `p` in percent (0..=100): the upper edge
+    /// of the bucket holding the `ceil(p/100 * count)`-th smallest
+    /// sample, clamped to the exact observed `[min, max]`. Derived
+    /// purely from bucket counts + min/max, so merged histograms agree
+    /// bit-for-bit regardless of merge order. Returns 0 when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let rank = rank.min(self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                return bucket_hi(i).clamp(self.min, self.max);
+            }
+        }
+        self.max()
+    }
+
+    /// JSON shape (DESIGN.md §2i): exact scalars plus sparse buckets
+    /// keyed by index, with the upper edge (`le`) denormalized for
+    /// readers that don't know the bucket table.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("count", Json::Num(self.count as f64))
+            .set("sum", Json::Num(self.sum))
+            .set("min", Json::Num(self.min()))
+            .set("max", Json::Num(self.max()))
+            .set("p50", Json::Num(self.percentile(50.0)))
+            .set("p90", Json::Num(self.percentile(90.0)))
+            .set("p99", Json::Num(self.percentile(99.0)));
+        let buckets = self
+            .nonzero_buckets()
+            .into_iter()
+            .map(|(i, c)| {
+                let mut b = Json::obj();
+                let hi = bucket_hi(i);
+                b.set("bucket", Json::Num(i as f64)).set(
+                    "le",
+                    if hi.is_finite() { Json::Num(hi) } else { Json::Str("inf".into()) },
+                );
+                b.set("n", Json::Num(c as f64));
+                b
+            })
+            .collect();
+        j.set("buckets", Json::Arr(buckets));
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<Histogram, String> {
+        let num = |key: &str| {
+            j.get(key)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("histogram: missing numeric '{key}'"))
+        };
+        let mut h = Histogram::new();
+        h.count = num("count")? as u64;
+        h.sum = num("sum")?;
+        if h.count > 0 {
+            h.min = num("min")?;
+            h.max = num("max")?;
+        }
+        let buckets = j
+            .get("buckets")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| "histogram: missing 'buckets'".to_string())?;
+        for b in buckets {
+            let i = b
+                .get("bucket")
+                .and_then(Json::as_usize)
+                .ok_or_else(|| "histogram bucket: missing 'bucket'".to_string())?;
+            if i >= NUM_BUCKETS {
+                return Err(format!("histogram bucket index {i} out of range"));
+            }
+            let n = b
+                .get("n")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| "histogram bucket: missing 'n'".to_string())?;
+            h.counts[i] = n as u64;
+        }
+        let total: u64 = h.counts.iter().sum();
+        if total != h.count {
+            return Err(format!(
+                "histogram: bucket counts sum to {total}, expected {}",
+                h.count
+            ));
+        }
+        Ok(h)
+    }
+}
+
+/// Named counters (monotonic `u64`), gauges (`f64`, merge keeps the
+/// max), and [`Histogram`]s. One per thread; merge at join.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add to a counter (creating it at zero).
+    pub fn add(&mut self, name: &str, n: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += n;
+    }
+
+    /// Set a gauge. Gauges merge by `max` (the only order-independent
+    /// fold without a timestamp) — use them for peaks and phase
+    /// durations, not last-writer state.
+    pub fn set_gauge(&mut self, name: &str, v: f64) {
+        let g = self.gauges.entry(name.to_string()).or_insert(f64::NEG_INFINITY);
+        *g = g.max(v);
+    }
+
+    /// Record one sample into a named histogram.
+    pub fn observe(&mut self, name: &str, v: f64) {
+        self.histograms.entry(name.to_string()).or_default().observe(v);
+    }
+
+    /// Merge a whole pre-built histogram under `name` (e.g. a worker's
+    /// `ServiceStats` histogram re-exported into the registry).
+    pub fn merge_histogram(&mut self, name: &str, h: &Histogram) {
+        self.histograms.entry(name.to_string()).or_default().merge(h);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn histogram(&self, name: &str) -> Option<&Histogram> {
+        self.histograms.get(name)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.counters.is_empty() && self.gauges.is_empty() && self.histograms.is_empty()
+    }
+
+    /// Fold another shard in: counters add, gauges max, histograms
+    /// bucket-sum. Associative and commutative, like everything above.
+    pub fn merge(&mut self, other: &MetricsRegistry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            let g = self.gauges.entry(k.clone()).or_insert(f64::NEG_INFINITY);
+            *g = g.max(*v);
+        }
+        for (k, h) in &other.histograms {
+            self.histograms.entry(k.clone()).or_default().merge(h);
+        }
+    }
+
+    /// The `metrics.json` schema (DESIGN.md §2i): three top-level maps.
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (k, v) in &self.counters {
+            counters.set(k, Json::Num(*v as f64));
+        }
+        let mut gauges = Json::obj();
+        for (k, v) in &self.gauges {
+            gauges.set(k, Json::Num(*v));
+        }
+        let mut hists = Json::obj();
+        for (k, h) in &self.histograms {
+            hists.set(k, h.to_json());
+        }
+        let mut j = Json::obj();
+        j.set("counters", counters)
+            .set("gauges", gauges)
+            .set("histograms", hists);
+        j
+    }
+
+    pub fn from_json(j: &Json) -> Result<MetricsRegistry, String> {
+        let section = |key: &str| match j.get(key) {
+            Some(Json::Obj(m)) => Ok(m),
+            _ => Err(format!("metrics: missing object '{key}'")),
+        };
+        let mut reg = MetricsRegistry::new();
+        for (k, v) in section("counters")? {
+            let n = v.as_f64().ok_or_else(|| format!("counter '{k}' not numeric"))?;
+            if n < 0.0 {
+                return Err(format!("counter '{k}' is negative"));
+            }
+            reg.counters.insert(k.clone(), n as u64);
+        }
+        for (k, v) in section("gauges")? {
+            let n = v.as_f64().ok_or_else(|| format!("gauge '{k}' not numeric"))?;
+            reg.gauges.insert(k.clone(), n);
+        }
+        for (k, v) in section("histograms")? {
+            reg.histograms
+                .insert(k.clone(), Histogram::from_json(v).map_err(|e| format!("{k}: {e}"))?);
+        }
+        Ok(reg)
+    }
+
+    /// Write `metrics.json` (pretty-printed) for `--metrics-out`.
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json().dump_pretty())
+    }
+}
+
+/// Shared, lock-light telemetry sink for batch executors.
+///
+/// Executors take predictions through `&self`, so per-executor counters
+/// need interior mutability; this keeps the hot path to three relaxed
+/// atomic adds plus one short mutex hold *per batch* (never per row) —
+/// the `perf_inference` "telemetry overhead" section holds it to <= 3%
+/// on the flat hot path. Attach with
+/// `FlatForestExecutor::with_telemetry` / `NativeForestExecutor::
+/// with_telemetry`; untouched executors pay one `Option` check.
+#[derive(Debug, Default)]
+pub struct ExecTelemetry {
+    rows: AtomicU64,
+    batches: AtomicU64,
+    busy_ns: AtomicU64,
+    hist: Mutex<ExecHists>,
+}
+
+#[derive(Debug, Default)]
+struct ExecHists {
+    batch_rows: Histogram,
+    batch_time: Histogram,
+}
+
+impl ExecTelemetry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record_batch(&self, rows: usize, elapsed: Duration) {
+        self.rows.fetch_add(rows as u64, Ordering::Relaxed);
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.busy_ns.fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+        let mut h = self.hist.lock().unwrap();
+        h.batch_rows.observe(rows as f64);
+        h.batch_time.observe(elapsed.as_secs_f64());
+    }
+
+    pub fn rows(&self) -> u64 {
+        self.rows.load(Ordering::Relaxed)
+    }
+
+    pub fn batches(&self) -> u64 {
+        self.batches.load(Ordering::Relaxed)
+    }
+
+    pub fn busy_seconds(&self) -> f64 {
+        self.busy_ns.load(Ordering::Relaxed) as f64 / 1e9
+    }
+
+    /// Rows served per second of executor busy time.
+    pub fn rows_per_second(&self) -> f64 {
+        let busy = self.busy_seconds();
+        if busy > 0.0 {
+            self.rows() as f64 / busy
+        } else {
+            0.0
+        }
+    }
+
+    /// Export under `prefix` (e.g. `exec`): counters `<prefix>.rows` /
+    /// `.batches`, gauge `.rows_per_s`, histograms `.batch_rows` /
+    /// `.batch_time_s`.
+    pub fn export(&self, prefix: &str, reg: &mut MetricsRegistry) {
+        reg.add(&format!("{prefix}.rows"), self.rows());
+        reg.add(&format!("{prefix}.batches"), self.batches());
+        reg.set_gauge(&format!("{prefix}.rows_per_s"), self.rows_per_second());
+        let h = self.hist.lock().unwrap();
+        reg.merge_histogram(&format!("{prefix}.batch_rows"), &h.batch_rows);
+        reg.merge_histogram(&format!("{prefix}.batch_time_s"), &h.batch_time);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges_are_powers_of_two() {
+        assert_eq!(bucket_index(1.0), 31);
+        assert_eq!(bucket_lo(31), 1.0);
+        assert_eq!(bucket_hi(31), 2.0);
+        // The largest float below 1.0 sits one bucket down.
+        let below = f64::from_bits(1.0f64.to_bits() - 1);
+        assert_eq!(bucket_index(below), 30);
+        // Underflow, overflow, and junk all land in real buckets.
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(-3.0), 0);
+        assert_eq!(bucket_index(f64::NAN), 0);
+        assert_eq!(bucket_index(1e300), NUM_BUCKETS - 1);
+    }
+
+    #[test]
+    fn histogram_scalars_exact() {
+        let mut h = Histogram::new();
+        for v in [0.5, 1.0, 2.0, 4.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 7.5);
+        assert_eq!(h.min(), 0.5);
+        assert_eq!(h.max(), 4.0);
+        assert_eq!(h.mean(), 1.875);
+        let total: u64 = h.nonzero_buckets().iter().map(|&(_, c)| c).sum();
+        assert_eq!(total, h.count());
+    }
+
+    #[test]
+    fn merge_matches_single_stream() {
+        let vals: Vec<f64> = (1..=100).map(|i| i as f64 * 0.37).collect();
+        let mut whole = Histogram::new();
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for (i, &v) in vals.iter().enumerate() {
+            whole.observe(v);
+            if i % 2 == 0 {
+                a.observe(v);
+            } else {
+                b.observe(v);
+            }
+        }
+        let mut merged = Histogram::new();
+        merged.merge(&b);
+        merged.merge(&a);
+        assert_eq!(merged, whole);
+    }
+
+    #[test]
+    fn registry_merge_and_lookup() {
+        let mut a = MetricsRegistry::new();
+        a.add("served", 3);
+        a.set_gauge("peak", 5.0);
+        a.observe("lat", 0.01);
+        let mut b = MetricsRegistry::new();
+        b.add("served", 4);
+        b.set_gauge("peak", 2.0);
+        b.observe("lat", 0.02);
+        a.merge(&b);
+        assert_eq!(a.counter("served"), 7);
+        assert_eq!(a.gauge("peak"), Some(5.0));
+        assert_eq!(a.histogram("lat").unwrap().count(), 2);
+    }
+
+    #[test]
+    fn exec_telemetry_exports() {
+        let t = ExecTelemetry::new();
+        t.record_batch(100, Duration::from_millis(10));
+        t.record_batch(300, Duration::from_millis(30));
+        assert_eq!(t.rows(), 400);
+        assert_eq!(t.batches(), 2);
+        assert!((t.rows_per_second() - 10_000.0).abs() / 10_000.0 < 0.05);
+        let mut reg = MetricsRegistry::new();
+        t.export("exec", &mut reg);
+        assert_eq!(reg.counter("exec.rows"), 400);
+        assert_eq!(reg.histogram("exec.batch_rows").unwrap().count(), 2);
+    }
+}

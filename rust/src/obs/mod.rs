@@ -1,0 +1,39 @@
+//! Unified telemetry plane: metrics registry, span tracing, latency
+//! histograms.
+//!
+//! The serving north star ("as fast as the hardware allows", ROADMAP)
+//! is measurement-driven, and until now the stack's only visibility
+//! was ad-hoc: `ServiceStats` counted served/rejected with no
+//! latencies, `StageCounters` covered only the synth pipeline, and
+//! benches produced offline `BENCH_*.json` snapshots. This subsystem
+//! is the live counterpart, built on the same zero-new-dependency
+//! substrates (`util::json` for export, `std::sync` for sharing):
+//!
+//! * [`metrics`] — a [`metrics::MetricsRegistry`] of named counters,
+//!   gauges, and log2-bucketed [`metrics::Histogram`]s. Registries are
+//!   **thread-sharded**: each worker owns one (no locks on the hot
+//!   path) and the owner merges them at join time, exactly like
+//!   `synth::pipeline::StageCounters`. Histogram merges are bucket-wise
+//!   sums over *fixed* boundaries, so merging is exact, associative,
+//!   and commutative — p50/p90/p99/max read the same regardless of
+//!   worker count or merge order.
+//! * [`trace`] — RAII span timers ([`crate::span!`]) that aggregate
+//!   into a hierarchical wall-time attribution tree and optionally
+//!   stream a line-delimited JSON event log (`--trace-out trace.jsonl`)
+//!   with monotonic timestamps, thread ids, and span parentage. Time
+//!   comes from an injectable [`trace::Clock`], so tests pin spans to a
+//!   [`trace::ManualClock`] and assert exact durations.
+//!
+//! Consumers: `coordinator::service` workers record per-batch
+//! queue-wait/execution histograms into `ServiceStats`; the executors
+//! record rows/sec and batch-size distributions via
+//! [`metrics::ExecTelemetry`]; `coordinator::train` reports per-phase
+//! (generate/fit/grade) timings; the frontend records
+//! parse/extract/lint spans; and the CLI exposes it all through
+//! `--metrics-out` / `--trace-out` (schema in DESIGN.md §2i).
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{ExecTelemetry, Histogram, MetricsRegistry};
+pub use trace::{Clock, ManualClock, MonotonicClock, Span, SpanEvent, Tracer};

@@ -1,0 +1,489 @@
+//! RAII span timers with a hierarchical wall-time attribution tree.
+//!
+//! A [`Tracer`] hands out [`Span`] guards: creating one opens a timed
+//! region, dropping it closes the region and folds the elapsed time
+//! into an aggregation keyed by the span's *path* (parent names joined
+//! with `/`, e.g. `train/train.generate/dataset.build`). The aggregate
+//! is bounded by the number of distinct paths, so tracing a serve run
+//! for hours costs O(paths), not O(events); individual events are only
+//! materialized when (a) a line-delimited JSON sink is attached
+//! ([`Tracer::set_sink`], the CLI's `--trace-out trace.jsonl`) — events
+//! stream straight to the file — or (b) a test opts into
+//! [`Tracer::retain_events`].
+//!
+//! Time comes from an injectable [`Clock`]. Production code uses
+//! [`MonotonicClock`] (an `Instant` anchor, so timestamps are monotonic
+//! durations since tracer construction); tests inject [`ManualClock`]
+//! and advance it explicitly, making span trees byte-deterministic
+//! (`rust/tests/telemetry.rs`).
+//!
+//! The process-wide tracer ([`global`]) starts disabled: a [`crate::span!`]
+//! against a disabled tracer is one relaxed atomic load and no
+//! allocation, which is what lets library code (frontend parse/extract,
+//! dataset build, train phases) stay instrumented unconditionally.
+//! Parentage is tracked per thread: spans nest within the thread that
+//! opened them, and cross-thread work shows up as separate roots tagged
+//! with the worker's thread id.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::io::Write as _;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+/// Monotonic time source. `now()` is a duration since an arbitrary
+/// per-clock epoch; only differences and ordering are meaningful.
+pub trait Clock: Send + Sync {
+    fn now(&self) -> Duration;
+}
+
+/// Wall clock: durations since construction, via `Instant`.
+pub struct MonotonicClock {
+    epoch: Instant,
+}
+
+impl MonotonicClock {
+    pub fn new() -> Self {
+        MonotonicClock { epoch: Instant::now() }
+    }
+}
+
+impl Default for MonotonicClock {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Clock for MonotonicClock {
+    fn now(&self) -> Duration {
+        self.epoch.elapsed()
+    }
+}
+
+/// Test clock: advances only when told to, so span durations in tests
+/// are exact constants.
+#[derive(Default)]
+pub struct ManualClock {
+    nanos: AtomicU64,
+}
+
+impl ManualClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn advance(&self, d: Duration) {
+        self.nanos.fetch_add(d.as_nanos() as u64, Ordering::SeqCst);
+    }
+}
+
+impl Clock for ManualClock {
+    fn now(&self) -> Duration {
+        Duration::from_nanos(self.nanos.load(Ordering::SeqCst))
+    }
+}
+
+/// One closed span, as retained by [`Tracer::retain_events`] and as
+/// serialized (one JSON object per line) into the `--trace-out` sink.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SpanEvent {
+    pub id: u64,
+    pub parent: Option<u64>,
+    pub name: String,
+    /// Full `/`-joined path from the root span on this thread.
+    pub path: String,
+    /// Process-local thread index (not the OS tid): stable within a
+    /// run, first-use ordered.
+    pub thread: u64,
+    pub start: Duration,
+    pub end: Duration,
+}
+
+impl SpanEvent {
+    pub fn elapsed(&self) -> Duration {
+        self.end.saturating_sub(self.start)
+    }
+
+    /// The `trace.jsonl` line schema (DESIGN.md §2i).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("id", Json::Num(self.id as f64))
+            .set(
+                "parent",
+                match self.parent {
+                    Some(p) => Json::Num(p as f64),
+                    None => Json::Null,
+                },
+            )
+            .set("name", Json::Str(self.name.clone()))
+            .set("path", Json::Str(self.path.clone()))
+            .set("thread", Json::Num(self.thread as f64))
+            .set("start_ns", Json::Num(self.start.as_nanos() as f64))
+            .set("end_ns", Json::Num(self.end.as_nanos() as f64));
+        j
+    }
+}
+
+/// Aggregated totals for one span path.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct PathStat {
+    pub count: u64,
+    pub total: Duration,
+}
+
+struct TracerInner {
+    /// Globally unique tracer id — keys the per-thread span stacks so
+    /// independent tracers (tests) never see each other's parents.
+    tid: u64,
+    enabled: AtomicBool,
+    clock: Box<dyn Clock>,
+    next_span: AtomicU64,
+    agg: Mutex<BTreeMap<String, PathStat>>,
+    events: Mutex<Vec<SpanEvent>>,
+    retain: AtomicBool,
+    sink: Mutex<Option<std::io::BufWriter<std::fs::File>>>,
+}
+
+/// Span-timer factory; cheap to clone (shared state behind an `Arc`).
+#[derive(Clone)]
+pub struct Tracer {
+    inner: Arc<TracerInner>,
+}
+
+static NEXT_TRACER: AtomicU64 = AtomicU64::new(1);
+static NEXT_THREAD: AtomicU64 = AtomicU64::new(0);
+
+thread_local! {
+    /// `(tracer id, span id, path)` for every open span on this thread.
+    static STACK: RefCell<Vec<(u64, u64, String)>> = const { RefCell::new(Vec::new()) };
+    static THREAD_IX: RefCell<Option<u64>> = const { RefCell::new(None) };
+}
+
+fn thread_index() -> u64 {
+    THREAD_IX.with(|ix| {
+        let mut ix = ix.borrow_mut();
+        *ix.get_or_insert_with(|| NEXT_THREAD.fetch_add(1, Ordering::Relaxed))
+    })
+}
+
+impl Tracer {
+    fn build(clock: Box<dyn Clock>, enabled: bool) -> Tracer {
+        Tracer {
+            inner: Arc::new(TracerInner {
+                tid: NEXT_TRACER.fetch_add(1, Ordering::Relaxed),
+                enabled: AtomicBool::new(enabled),
+                clock,
+                next_span: AtomicU64::new(1),
+                agg: Mutex::new(BTreeMap::new()),
+                events: Mutex::new(Vec::new()),
+                retain: AtomicBool::new(false),
+                sink: Mutex::new(None),
+            }),
+        }
+    }
+
+    /// An enabled tracer on the wall clock.
+    pub fn new() -> Tracer {
+        Self::build(Box::new(MonotonicClock::new()), true)
+    }
+
+    /// An enabled tracer on an injected clock (tests).
+    pub fn with_clock(clock: Box<dyn Clock>) -> Tracer {
+        Self::build(clock, true)
+    }
+
+    /// A disabled tracer (what [`global`] starts as): spans are no-ops
+    /// until [`Tracer::enable`].
+    pub fn disabled() -> Tracer {
+        Self::build(Box::new(MonotonicClock::new()), false)
+    }
+
+    pub fn enable(&self) {
+        self.inner.enabled.store(true, Ordering::Release);
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.inner.enabled.load(Ordering::Acquire)
+    }
+
+    /// Keep closed spans in memory (unbounded — tests only).
+    pub fn retain_events(&self) {
+        self.inner.retain.store(true, Ordering::Release);
+    }
+
+    /// Stream every closed span as one JSON line into `path`
+    /// (`--trace-out`). Implies [`Tracer::enable`].
+    pub fn set_sink(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let f = std::fs::File::create(path)?;
+        *self.inner.sink.lock().unwrap() = Some(std::io::BufWriter::new(f));
+        self.enable();
+        Ok(())
+    }
+
+    /// Open a span. Prefer the [`crate::span!`] macro, which routes to
+    /// the global tracer by default.
+    pub fn span(&self, name: &str) -> Span {
+        if !self.is_enabled() {
+            return Span { active: None };
+        }
+        let id = self.inner.next_span.fetch_add(1, Ordering::Relaxed);
+        let tid = self.inner.tid;
+        let (parent, path) = STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            let parent = s.iter().rev().find(|&&(t, _, _)| t == tid);
+            let (parent_id, path) = match parent {
+                Some((_, pid, ppath)) => (Some(*pid), format!("{ppath}/{name}")),
+                None => (None, name.to_string()),
+            };
+            s.push((tid, id, path.clone()));
+            (parent_id, path)
+        });
+        Span {
+            active: Some(SpanActive {
+                tracer: Arc::clone(&self.inner),
+                id,
+                parent,
+                name: name.to_string(),
+                path,
+                thread: thread_index(),
+                start: self.inner.clock.now(),
+            }),
+        }
+    }
+
+    /// Aggregated `(path, stat)` rows, path-sorted.
+    pub fn attribution(&self) -> Vec<(String, PathStat)> {
+        self.inner
+            .agg
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.clone()))
+            .collect()
+    }
+
+    /// Closed spans, in close order ([`Tracer::retain_events`] only).
+    pub fn events(&self) -> Vec<SpanEvent> {
+        self.inner.events.lock().unwrap().clone()
+    }
+
+    /// Flush the JSONL sink (if any). Dropped spans flush lazily via
+    /// the `BufWriter`; call this before reading the file.
+    pub fn flush(&self) -> std::io::Result<()> {
+        if let Some(w) = self.inner.sink.lock().unwrap().as_mut() {
+            w.flush()?;
+        }
+        Ok(())
+    }
+
+    /// Render the attribution tree: one line per path, indented by
+    /// depth, with total seconds, call count, and share of the combined
+    /// sibling total at that level. Children group under parents
+    /// structurally (not by string sort), so names may contain any
+    /// separator-free text.
+    pub fn render_tree(&self) -> String {
+        let agg = self.inner.agg.lock().unwrap();
+        let mut out = String::new();
+        render_level(&agg, "", 0, &mut out);
+        out
+    }
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+fn render_level(agg: &BTreeMap<String, PathStat>, prefix: &str, depth: usize, out: &mut String) {
+    // Direct children of `prefix`: paths `prefix/child` with no
+    // further `/`. Collected (not streamed) so ordering is structural.
+    let mut children: Vec<(&str, &PathStat)> = agg
+        .iter()
+        .filter_map(|(path, stat)| {
+            let rest = if prefix.is_empty() {
+                path.as_str()
+            } else {
+                path.strip_prefix(prefix)?.strip_prefix('/')?
+            };
+            (!rest.is_empty() && !rest.contains('/')).then_some((rest, stat))
+        })
+        .collect();
+    children.sort_by(|a, b| b.1.total.cmp(&a.1.total));
+    let parent_total: f64 = children.iter().map(|(_, s)| s.total.as_secs_f64()).sum();
+    for (name, stat) in children {
+        let secs = stat.total.as_secs_f64();
+        let share = if parent_total > 0.0 { 100.0 * secs / parent_total } else { 0.0 };
+        let _ = writeln!(
+            out,
+            "{:indent$}{name:<32} {secs:>10.6}s  x{:<6} {share:>5.1}%",
+            "",
+            stat.count,
+            indent = depth * 2
+        );
+        let child_prefix =
+            if prefix.is_empty() { name.to_string() } else { format!("{prefix}/{name}") };
+        render_level(agg, &child_prefix, depth + 1, out);
+    }
+}
+
+struct SpanActive {
+    tracer: Arc<TracerInner>,
+    id: u64,
+    parent: Option<u64>,
+    name: String,
+    path: String,
+    thread: u64,
+    start: Duration,
+}
+
+/// RAII guard for one timed region; closing happens on drop.
+pub struct Span {
+    active: Option<SpanActive>,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let Some(a) = self.active.take() else { return };
+        let end = a.tracer.clock.now();
+        // Unwind our stack entry. RAII drops are LIFO, but a guard can
+        // be moved and dropped out of order — remove by id, not pop.
+        STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            if let Some(ix) =
+                s.iter().rposition(|&(t, id, _)| t == a.tracer.tid && id == a.id)
+            {
+                s.remove(ix);
+            }
+        });
+        {
+            let mut agg = a.tracer.agg.lock().unwrap();
+            let stat = agg.entry(a.path.clone()).or_default();
+            stat.count += 1;
+            stat.total += end.saturating_sub(a.start);
+        }
+        let ev = SpanEvent {
+            id: a.id,
+            parent: a.parent,
+            name: a.name,
+            path: a.path,
+            thread: a.thread,
+            start: a.start,
+            end,
+        };
+        if let Some(w) = a.tracer.sink.lock().unwrap().as_mut() {
+            let _ = writeln!(w, "{}", ev.to_json().dump());
+        }
+        if a.tracer.retain.load(Ordering::Acquire) {
+            a.tracer.events.lock().unwrap().push(ev);
+        }
+    }
+}
+
+static GLOBAL: OnceLock<Tracer> = OnceLock::new();
+
+/// The process-wide tracer. Starts disabled (spans are free); the CLI
+/// enables it when `--trace-out` is passed.
+pub fn global() -> &'static Tracer {
+    GLOBAL.get_or_init(Tracer::disabled)
+}
+
+/// Open a span: `span!("name")` on the [`crate::obs::trace::global`]
+/// tracer, or `span!(tracer, "name")` on an explicit one. Bind the
+/// result (`let _span = span!(...)`) — an unbound guard drops
+/// immediately and times nothing.
+#[macro_export]
+macro_rules! span {
+    ($name:expr) => {
+        $crate::obs::trace::global().span($name)
+    };
+    ($tracer:expr, $name:expr) => {
+        $tracer.span($name)
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::disabled();
+        t.retain_events();
+        {
+            let _s = t.span("noop");
+        }
+        assert!(t.events().is_empty());
+        assert!(t.attribution().is_empty());
+    }
+
+    #[test]
+    fn manual_clock_gives_exact_spans() {
+        let clock = Arc::new(ManualClock::new());
+        let c2 = Arc::clone(&clock);
+        struct Shared(Arc<ManualClock>);
+        impl Clock for Shared {
+            fn now(&self) -> Duration {
+                self.0.now()
+            }
+        }
+        let t = Tracer::with_clock(Box::new(Shared(c2)));
+        t.retain_events();
+        {
+            let _outer = t.span("outer");
+            clock.advance(Duration::from_millis(10));
+            {
+                let _inner = t.span("inner");
+                clock.advance(Duration::from_millis(5));
+            }
+            clock.advance(Duration::from_millis(1));
+        }
+        let evs = t.events();
+        assert_eq!(evs.len(), 2);
+        // Inner closes first.
+        assert_eq!(evs[0].name, "inner");
+        assert_eq!(evs[0].path, "outer/inner");
+        assert_eq!(evs[0].elapsed(), Duration::from_millis(5));
+        assert_eq!(evs[0].parent, Some(evs[1].id));
+        assert_eq!(evs[1].name, "outer");
+        assert_eq!(evs[1].elapsed(), Duration::from_millis(16));
+        assert_eq!(evs[1].parent, None);
+        let att = t.attribution();
+        assert_eq!(att.len(), 2);
+        assert_eq!(att[0].0, "outer");
+        assert_eq!(att[0].1.total, Duration::from_millis(16));
+        assert_eq!(att[1].0, "outer/inner");
+        assert_eq!(att[1].1.count, 1);
+    }
+
+    #[test]
+    fn independent_tracers_do_not_nest() {
+        let a = Tracer::new();
+        let b = Tracer::new();
+        a.retain_events();
+        b.retain_events();
+        let _sa = a.span("a-root");
+        {
+            let _sb = b.span("b-root");
+        }
+        let evs = b.events();
+        assert_eq!(evs[0].parent, None, "span from tracer a must not parent b's");
+        assert_eq!(evs[0].path, "b-root");
+    }
+
+    #[test]
+    fn render_tree_indents_children() {
+        let t = Tracer::new();
+        {
+            let _p = t.span("parent");
+            let _c = t.span("child");
+        }
+        let tree = t.render_tree();
+        assert!(tree.contains("parent"), "{tree}");
+        assert!(tree.contains("  child"), "{tree}");
+    }
+}

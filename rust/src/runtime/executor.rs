@@ -21,10 +21,12 @@
 //! to the reference.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
 use crate::ml::export::EncodedForest;
+use crate::obs::metrics::ExecTelemetry;
 use crate::util::pool::parallel_map;
 
 use super::fastexec::{FlatForest, FlatForestExecutor};
@@ -72,6 +74,9 @@ pub struct NativeForestExecutor {
     threads: usize,
     /// Rows per parallel work item; small batches stay single-threaded.
     chunk_rows: usize,
+    /// Optional shared sink for rows/sec + batch-size distributions;
+    /// `None` (the default) costs one branch per batch.
+    telemetry: Option<Arc<ExecTelemetry>>,
 }
 
 impl NativeForestExecutor {
@@ -89,6 +94,7 @@ impl NativeForestExecutor {
             forest,
             threads: threads.max(1),
             chunk_rows: 64,
+            telemetry: None,
         }
     }
 
@@ -101,6 +107,7 @@ impl NativeForestExecutor {
             forest: Arc::new(forest),
             threads: threads.max(1),
             chunk_rows: chunk_rows.max(1),
+            telemetry: None,
         }
     }
 
@@ -108,6 +115,14 @@ impl NativeForestExecutor {
     /// across service shards so concurrent batches don't oversubscribe).
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
+        self
+    }
+
+    /// Record every successful batch (rows, wall time) into `sink`;
+    /// share one sink across shards to see the whole backend's rows/sec
+    /// and batch-size distribution.
+    pub fn with_telemetry(mut self, sink: Arc<ExecTelemetry>) -> Self {
+        self.telemetry = Some(sink);
         self
     }
 
@@ -237,16 +252,8 @@ impl ForestRegistry {
     }
 }
 
-impl BatchExecutor for NativeForestExecutor {
-    fn backend(&self) -> &'static str {
-        "native"
-    }
-
-    fn max_batch(&self) -> usize {
-        usize::MAX
-    }
-
-    fn predict(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+impl NativeForestExecutor {
+    fn check_rows(&self, rows: &[Vec<f64>]) -> Result<()> {
         let nf = self.forest.contract.num_features;
         for (i, r) in rows.iter().enumerate() {
             if r.len() != nf {
@@ -256,6 +263,11 @@ impl BatchExecutor for NativeForestExecutor {
                 ));
             }
         }
+        Ok(())
+    }
+
+    fn predict_verdicts(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+        self.check_rows(rows)?;
         // Small batches: the scoped-thread fan-out costs more than the
         // traversal itself.
         if self.threads <= 1 || rows.len() < 2 * self.chunk_rows {
@@ -271,20 +283,8 @@ impl BatchExecutor for NativeForestExecutor {
         Ok(nested.into_iter().flatten().collect())
     }
 
-    fn num_outputs(&self) -> usize {
-        self.forest.num_outputs()
-    }
-
-    fn predict_outputs(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
-        let nf = self.forest.contract.num_features;
-        for (i, r) in rows.iter().enumerate() {
-            if r.len() != nf {
-                return Err(anyhow!(
-                    "row {i}: feature vector has {} dims, expected {nf}",
-                    r.len()
-                ));
-            }
-        }
+    fn predict_planes(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+        self.check_rows(rows)?;
         if self.threads <= 1 || rows.len() < 2 * self.chunk_rows {
             return Ok(rows
                 .iter()
@@ -299,6 +299,42 @@ impl BatchExecutor for NativeForestExecutor {
                 .collect::<Vec<f64>>()
         });
         Ok(nested.into_iter().flatten().collect())
+    }
+
+    fn observe<T>(&self, rows: usize, f: impl FnOnce() -> Result<T>) -> Result<T> {
+        match &self.telemetry {
+            None => f(),
+            Some(sink) => {
+                let started = Instant::now();
+                let out = f();
+                if out.is_ok() {
+                    sink.record_batch(rows, started.elapsed());
+                }
+                out
+            }
+        }
+    }
+}
+
+impl BatchExecutor for NativeForestExecutor {
+    fn backend(&self) -> &'static str {
+        "native"
+    }
+
+    fn max_batch(&self) -> usize {
+        usize::MAX
+    }
+
+    fn predict(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+        self.observe(rows.len(), || self.predict_verdicts(rows))
+    }
+
+    fn num_outputs(&self) -> usize {
+        self.forest.num_outputs()
+    }
+
+    fn predict_outputs(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+        self.observe(rows.len(), || self.predict_planes(rows))
     }
 }
 
@@ -435,6 +471,19 @@ mod tests {
         assert_eq!(single.num_outputs(), 1);
         let err = single.predict_wg_logs(&rows[..1]).unwrap_err();
         assert!(format!("{err}").contains("joint"), "{err}");
+    }
+
+    #[test]
+    fn telemetry_records_successful_batches_only() {
+        let enc = toy_encoded(19);
+        let sink = Arc::new(ExecTelemetry::new());
+        let exec = NativeForestExecutor::new(enc).with_telemetry(sink.clone());
+        exec.predict(&random_rows(32, 20)).unwrap();
+        exec.predict_outputs(&random_rows(16, 21)).unwrap();
+        assert!(exec.predict(&[vec![0.0; NUM_FEATURES - 1]]).is_err());
+        assert_eq!(sink.rows(), 48, "failed batch must not count rows");
+        assert_eq!(sink.batches(), 2);
+        assert!(sink.rows_per_second() > 0.0);
     }
 
     #[test]

@@ -469,6 +469,10 @@ pub struct FlatForestExecutor {
     /// Rows per parallel work item; small batches stay single-threaded.
     chunk_rows: usize,
     mode: FlatMode,
+    /// Optional shared sink for rows/sec + batch-size distributions;
+    /// `None` (the default) costs one branch per batch, which is what
+    /// keeps the `perf_inference` telemetry-overhead section <= 3%.
+    telemetry: Option<Arc<crate::obs::metrics::ExecTelemetry>>,
 }
 
 impl FlatForestExecutor {
@@ -489,6 +493,7 @@ impl FlatForestExecutor {
             threads: threads.max(1),
             chunk_rows: 256,
             mode: FlatMode::Auto,
+            telemetry: None,
         }
     }
 
@@ -498,7 +503,16 @@ impl FlatForestExecutor {
             threads: threads.max(1),
             chunk_rows: chunk_rows.max(1),
             mode: FlatMode::Auto,
+            telemetry: None,
         }
+    }
+
+    /// Record every successful batch (rows, wall time) into `sink`;
+    /// share one sink across shards to see the whole backend's rows/sec
+    /// and batch-size distribution.
+    pub fn with_telemetry(mut self, sink: Arc<crate::obs::metrics::ExecTelemetry>) -> Self {
+        self.telemetry = Some(sink);
+        self
     }
 
     /// Cap this executor's parallelism (e.g. divide the host's cores
@@ -534,7 +548,18 @@ impl FlatForestExecutor {
 
     /// All outputs row-major, chunk-parallel. The one traversal per row
     /// feeds every plane, so joint serving never re-walks the forest.
+    /// Every public prediction entry point funnels through here, so this
+    /// is also where the optional telemetry sink observes batches.
     fn outputs(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
+        let started = self.telemetry.as_ref().map(|_| std::time::Instant::now());
+        let out = self.outputs_inner(rows);
+        if let (Some(sink), Some(t0), Ok(_)) = (&self.telemetry, started, &out) {
+            sink.record_batch(rows.len(), t0.elapsed());
+        }
+        out
+    }
+
+    fn outputs_inner(&self, rows: &[Vec<f64>]) -> Result<Vec<f64>> {
         self.check_rows(rows)?;
         if self.threads <= 1 || rows.len() < 2 * self.chunk_rows {
             return Ok(self.flat.predict_outputs_batch(rows, self.mode));

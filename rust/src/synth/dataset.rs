@@ -159,6 +159,7 @@ pub fn build_streaming<S: RecordSink>(
     sink: &mut S,
     mut progress: Option<&mut dyn FnMut(&BuildProgress)>,
 ) -> Result<DatasetSummary> {
+    let _span = crate::span!("dataset.build");
     let t0 = Instant::now();
     let rngs = template_rngs(cfg.seed, templates.len());
     let jobs: Vec<(usize, Rng)> = rngs.into_iter().enumerate().collect();
@@ -217,6 +218,7 @@ pub fn build_multi_device<S: RecordSink>(
         devices.len(),
         sinks.len()
     );
+    let _span = crate::span!("dataset.build_multi_device");
     let t0 = Instant::now();
     let rngs = template_rngs(cfg.seed, templates.len());
     let jobs: Vec<(usize, Rng)> = rngs.into_iter().enumerate().collect();

@@ -123,11 +123,12 @@ pub fn black_box<T>(x: T) -> T {
 pub struct JsonReport {
     bench: String,
     entries: Vec<Json>,
+    sections: Vec<(String, Json)>,
 }
 
 impl JsonReport {
     pub fn new(bench: &str) -> Self {
-        JsonReport { bench: bench.to_string(), entries: Vec::new() }
+        JsonReport { bench: bench.to_string(), entries: Vec::new(), sections: Vec::new() }
     }
 
     fn entry(r: &BenchResult, throughput: Option<(f64, &str)>) -> Json {
@@ -164,10 +165,25 @@ impl JsonReport {
         self.entries.push(e);
     }
 
+    /// Attach a whole JSON document under a top-level key — e.g. a
+    /// `crate::obs::metrics::MetricsRegistry::to_json()` dump under
+    /// `"metrics"`, so live telemetry and bench snapshots share one
+    /// file format. Re-setting a key replaces it.
+    pub fn set_section(&mut self, key: &str, value: Json) {
+        if let Some(slot) = self.sections.iter_mut().find(|(k, _)| k == key) {
+            slot.1 = value;
+        } else {
+            self.sections.push((key.to_string(), value));
+        }
+    }
+
     pub fn to_json(&self) -> Json {
         let mut j = Json::obj();
         j.set("bench", Json::Str(self.bench.clone()))
             .set("results", Json::Arr(self.entries.clone()));
+        for (k, v) in &self.sections {
+            j.set(k, v.clone());
+        }
         j
     }
 

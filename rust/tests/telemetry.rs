@@ -1,0 +1,255 @@
+//! Telemetry-plane integration suite (DESIGN.md §2i).
+//!
+//! Exercises the contracts the rest of the system leans on: exact
+//! power-of-two histogram bucket boundaries, order-independent merges
+//! across worker thread counts, the bounded-error percentile estimate
+//! against exact quantiles, deterministic span trees under an injected
+//! clock, and the `metrics.json` round trip through `util::json`.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use lmtuner::obs::metrics::{bucket_hi, bucket_lo, Histogram, MetricsRegistry, MIN_EXP, NUM_BUCKETS};
+use lmtuner::obs::trace::{Clock, ManualClock, Tracer};
+use lmtuner::util::json::Json;
+use lmtuner::util::prng::Rng;
+use lmtuner::util::stats;
+
+/// The single nonzero bucket index of a one-observation histogram.
+fn sole_bucket(v: f64) -> usize {
+    let mut h = Histogram::new();
+    h.observe(v);
+    let nz = h.nonzero_buckets();
+    assert_eq!(nz.len(), 1, "one observation lands in one bucket");
+    assert_eq!(nz[0].1, 1);
+    nz[0].0
+}
+
+#[test]
+fn bucket_boundaries_are_exact_at_powers_of_two() {
+    // A power of two is the inclusive lower edge of its bucket: 2^k and
+    // the next representable float below it land in adjacent buckets.
+    for k in -20..=20i32 {
+        let v = (2f64).powi(k);
+        let below = f64::from_bits(v.to_bits() - 1);
+        let i = sole_bucket(v);
+        let j = sole_bucket(below);
+        assert_eq!(i, j + 1, "2^{k} must open a new bucket");
+        assert_eq!(bucket_lo(i), v, "2^{k} is its bucket's lower edge");
+        assert_eq!(bucket_hi(i), 2.0 * v);
+        assert_eq!(bucket_hi(j), v, "the bucket below closes exactly at 2^{k}");
+    }
+    // Edges of the bucket array: non-positive and non-finite values
+    // route to bucket 0 (so bucket sums always equal the count), huge
+    // finite values saturate the last bucket.
+    assert_eq!(sole_bucket(0.0), 0);
+    assert_eq!(sole_bucket(-3.5), 0);
+    assert_eq!(sole_bucket(f64::NAN), 0);
+    assert_eq!(sole_bucket(f64::INFINITY), 0);
+    assert_eq!(sole_bucket(1e300), NUM_BUCKETS - 1);
+    assert_eq!(sole_bucket((2f64).powi(MIN_EXP - 7)), 0);
+    assert!(bucket_lo(0).is_infinite() && bucket_lo(0) < 0.0);
+    assert!(bucket_hi(NUM_BUCKETS - 1).is_infinite());
+}
+
+/// Deterministic log-uniform latency-like samples spanning ~9 octaves.
+fn samples(seed: u64, n: usize) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    (0..n).map(|_| (2f64).powf(rng.range_f64(-13.0, -4.0))).collect()
+}
+
+/// One worker's registry over its shard of the sample stream.
+fn shard_registry(shard: &[f64], worker: usize) -> MetricsRegistry {
+    let mut reg = MetricsRegistry::new();
+    for &v in shard {
+        reg.add("telemetry.observed", 1);
+        reg.observe("telemetry.latency_s", v);
+    }
+    reg.set_gauge("telemetry.peak", shard.iter().cloned().fold(0.0, f64::max));
+    reg.add(&format!("telemetry.worker{worker}.observed"), shard.len() as u64);
+    reg
+}
+
+#[test]
+fn merges_are_associative_and_commutative_across_thread_counts() {
+    let xs = samples(0xC0FFEE, 4096);
+    let mut merged: Vec<MetricsRegistry> = Vec::new();
+    for threads in [1usize, 2, 4] {
+        // Real worker threads, each folding its own shard — the same
+        // ownership pattern the service workers use.
+        let chunk = xs.len().div_ceil(threads);
+        let shards: Vec<MetricsRegistry> = std::thread::scope(|s| {
+            let handles: Vec<_> = xs
+                .chunks(chunk)
+                .map(|c| s.spawn(move || shard_registry(c, 0)))
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        // Forward fold, reverse fold, and a right-associated fold must
+        // agree bit-for-bit: bucket counts are u64 sums and gauges are
+        // maxes, so order cannot matter.
+        let mut fwd = MetricsRegistry::new();
+        for r in &shards {
+            fwd.merge(r);
+        }
+        let mut rev = MetricsRegistry::new();
+        for r in shards.iter().rev() {
+            rev.merge(r);
+        }
+        let mut right = shards.last().cloned().unwrap();
+        for r in shards.iter().rev().skip(1) {
+            let mut acc = r.clone();
+            acc.merge(&right);
+            right = acc;
+        }
+        assert_eq!(fwd, rev, "{threads} threads: forward == reverse");
+        assert_eq!(fwd, right, "{threads} threads: fold order is irrelevant");
+        merged.push(fwd);
+    }
+    // ... and sharding itself must not change the result.
+    assert_eq!(merged[0], merged[1], "1-thread == 2-thread totals");
+    assert_eq!(merged[0], merged[2], "1-thread == 4-thread totals");
+    let h = merged[0].histogram("telemetry.latency_s").unwrap();
+    assert_eq!(h.count(), xs.len() as u64);
+}
+
+#[test]
+fn percentile_estimate_stays_within_one_octave_of_exact() {
+    for seed in [1u64, 7, 42, 0xBEEF] {
+        let xs = samples(seed, 1000);
+        let mut h = Histogram::new();
+        for &v in &xs {
+            h.observe(v);
+        }
+        let mut sorted = xs.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [10.0, 50.0, 90.0, 99.0] {
+            let est = h.percentile(p);
+            // The estimate is the upper edge of the bucket holding the
+            // rank-th smallest sample (clamped to the observed range):
+            // never below the exact quantile, never more than 2x it.
+            let rank = ((p / 100.0 * xs.len() as f64).ceil() as usize).max(1);
+            let exact = sorted[rank - 1];
+            assert!(
+                est >= exact && est <= 2.0 * exact,
+                "seed {seed} p{p}: est {est} outside [{exact}, {}]",
+                2.0 * exact
+            );
+            // Cross-check against the interpolating oracle: it is >= the
+            // order statistic, so the one-octave ceiling transfers.
+            assert!(est <= 2.0 * stats::percentile(&xs, p));
+        }
+        assert!(h.percentile(50.0) <= h.percentile(90.0));
+        assert!(h.percentile(90.0) <= h.percentile(99.0));
+        assert!(h.percentile(100.0) <= h.max());
+    }
+}
+
+/// `ManualClock` handle the test keeps while the tracer owns the
+/// `Box<dyn Clock>` — both sides see the same atomic nanos.
+#[derive(Clone)]
+struct SharedClock(Arc<ManualClock>);
+
+impl Clock for SharedClock {
+    fn now(&self) -> Duration {
+        self.0.now()
+    }
+}
+
+fn scripted_trace() -> Tracer {
+    let clock = Arc::new(ManualClock::new());
+    let tracer = Tracer::with_clock(Box::new(SharedClock(Arc::clone(&clock))));
+    tracer.retain_events();
+    {
+        let _outer = tracer.span("train");
+        clock.advance(Duration::from_millis(3));
+        {
+            let _inner = tracer.span("fit");
+            clock.advance(Duration::from_millis(10));
+        }
+        {
+            let _inner = tracer.span("grade");
+            clock.advance(Duration::from_millis(4));
+        }
+        clock.advance(Duration::from_millis(1));
+    }
+    tracer
+}
+
+#[test]
+fn span_tree_is_deterministic_under_an_injected_clock() {
+    let a = scripted_trace();
+    let b = scripted_trace();
+
+    let events = a.events();
+    assert_eq!(events.len(), 3);
+    // Children close before the parent, so they retire first.
+    let fit = &events[0];
+    let grade = &events[1];
+    let outer = &events[2];
+    assert_eq!((fit.name.as_str(), fit.path.as_str()), ("fit", "train/fit"));
+    assert_eq!(grade.path, "train/grade");
+    assert_eq!(outer.parent, None);
+    assert_eq!(fit.parent, Some(outer.id));
+    assert_eq!(grade.parent, Some(outer.id));
+    // Exact wall-time attribution off the manual clock.
+    assert_eq!(fit.elapsed(), Duration::from_millis(10));
+    assert_eq!(grade.elapsed(), Duration::from_millis(4));
+    assert_eq!(outer.elapsed(), Duration::from_millis(18));
+
+    // Two identical schedules produce identical trees and renders.
+    let attr = |t: &Tracer| {
+        t.attribution()
+            .into_iter()
+            .map(|(path, s)| (path, s.count, s.total))
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(attr(&a), attr(&b));
+    assert_eq!(a.render_tree(), b.render_tree());
+    let tree = a.render_tree();
+    assert!(tree.contains("train"), "{tree}");
+    assert!(tree.contains("fit") && tree.contains("grade"), "{tree}");
+}
+
+#[test]
+fn metrics_json_round_trips_through_util_json() {
+    let mut reg = MetricsRegistry::new();
+    reg.add("pipeline.records", 12_345);
+    reg.add("stage.dedup.dropped", 17);
+    reg.set_gauge("train.fit_s", 1.25);
+    reg.set_gauge("serve.req_per_s", 98_765.4321);
+    for &v in &samples(99, 500) {
+        reg.observe("serve.exec_s", v);
+    }
+    reg.observe("serve.batch_rows", 4096.0);
+
+    let text = reg.to_json().dump();
+    let parsed = Json::parse(&text).expect("registry JSON parses back");
+    let back = MetricsRegistry::from_json(&parsed).expect("registry decodes");
+    assert_eq!(back, reg, "dump -> parse -> decode is the identity");
+
+    // Percentiles survive the trip (they derive from the buckets).
+    let h = reg.histogram("serve.exec_s").unwrap();
+    let hb = back.histogram("serve.exec_s").unwrap();
+    for p in [50.0, 90.0, 99.0] {
+        assert_eq!(h.percentile(p), hb.percentile(p));
+    }
+
+    // A tampered payload (bucket counts no longer sum to the total)
+    // is rejected rather than decoded into an inconsistent histogram.
+    let tampered = text.replacen("\"count\":500", "\"count\":499", 1);
+    assert_ne!(tampered, text, "tamper target must exist in the dump");
+    let parsed = Json::parse(&tampered).unwrap();
+    assert!(MetricsRegistry::from_json(&parsed).is_err());
+
+    // Writing through the same path `--metrics-out` uses.
+    let dir = std::env::temp_dir().join(format!("lmtuner-metrics-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("metrics.json");
+    reg.write(&path).unwrap();
+    let from_disk =
+        MetricsRegistry::from_json(&Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap())
+            .unwrap();
+    assert_eq!(from_disk, reg);
+    std::fs::remove_dir_all(&dir).ok();
+}
